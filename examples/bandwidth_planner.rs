@@ -1,0 +1,59 @@
+//! Bandwidth planner: given a model size, worker count, sync interval
+//! and compression, print projected wall-clock and utilization across
+//! link speeds — the Fig 16 / Fig 20 machinery as a user-facing tool.
+//!
+//!   cargo run --release --example bandwidth_planner -- \
+//!       --params 3.1e9 --workers 16 --sync-interval 30 \
+//!       --compression-bits 4 --step-secs 2.85 --steps 30000
+
+use muloco::netsim::{CommPattern, SystemProfile, GBIT};
+use muloco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["dp"])?;
+    let params: f64 = args.get_parse("params", 3.1e9)?;
+    let workers: usize = args.get_parse("workers", 16)?;
+    let h: u64 = args.get_parse("sync-interval", 30)?;
+    let bits: u32 = args.get_parse("compression-bits", 32)?;
+    let step_secs: f64 = args.get_parse("step-secs", 2.85)?;
+    let opt_secs: f64 = args.get_parse("opt-secs", 0.03)?;
+    let steps: u64 = args.get_parse("steps", 30_000)?;
+    let dp = args.flag("dp");
+    args.finish()?;
+
+    let param_bytes = 4.0 * params;
+    let profile = SystemProfile {
+        compute_secs_per_step: step_secs,
+        optimizer_secs_per_step: opt_secs,
+        param_bytes,
+        wire_bytes_per_sync: param_bytes * bits as f64 / 32.0,
+        workers,
+        pattern: if dp {
+            CommPattern::EveryStep
+        } else {
+            CommPattern::EveryH { h }
+        },
+    };
+
+    println!(
+        "plan: {params:.2e} params, K={workers}, {} sync, {bits}-bit wire, \
+         {step_secs:.2}s compute/step, {steps} steps",
+        if dp { "per-step (DP)".to_string() } else { format!("every H={h}") }
+    );
+    println!("\n{:>12} {:>14} {:>12}", "bandwidth", "train hours", "utilization");
+    for bw_gbit in [1.0, 10.0, 100.0, 400.0, 1600.0, 6400.0, 12800.0] {
+        let bw = bw_gbit * GBIT;
+        println!(
+            "{:>9} Gb {:>14.1} {:>11.1}%",
+            bw_gbit,
+            profile.training_hours(steps, bw),
+            100.0 * profile.utilization(bw)
+        );
+    }
+    println!(
+        "\nbandwidth for 99% utilization: {:.2} Gbit/s",
+        profile.bandwidth_for_utilization(0.99) / GBIT
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Memory-leak regression check for the PJRT runtime path.
+//!
+//! The xla crate's `execute::<Literal>` leaks its C-side input buffer
+//! conversions (~input bytes per call); the Session therefore uses
+//! `buffer_from_host_buffer` + `execute_b` with rust-owned buffers.
+//! This example hammers fwd_grad/apply_muon and prints VmRSS — flat
+//! RSS means the fix holds (EXPERIMENTS.md §Perf iteration 2).
+
+fn main() -> anyhow::Result<()> {
+    let sess = muloco::runtime::Session::load(std::path::Path::new("artifacts/nano"))?;
+    let params = sess.init_params(0)?;
+    let cfg = &sess.manifest.config;
+    let tokens: Vec<i32> = (0..cfg.microbatch * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+    let rss = || {
+        let s = std::fs::read_to_string("/proc/self/status").unwrap();
+        s.lines().find(|l| l.starts_with("VmRSS")).unwrap().to_string()
+    };
+    println!("start {}", rss());
+    for i in 0..1000 {
+        let _ = sess.fwd_grad(&params, &tokens)?;
+        if i % 250 == 249 { println!("fwd {} {}", i+1, rss()); }
+    }
+    let state = sess.zero_muon_state();
+    let (_, grads) = sess.fwd_grad(&params, &tokens)?;
+    for i in 0..500 {
+        let _ = sess.apply_muon(&params, &state, &grads, 1.0, 0.01, 0.0)?;
+        if i % 125 == 124 { println!("muon {} {}", i+1, rss()); }
+    }
+    let astate = sess.zero_adamw_state();
+    for i in 0..300 {
+        let _ = sess.apply_adamw(&params, &astate, &grads, 1.0, 0.01, 0.0)?;
+        if i % 100 == 99 { println!("adamw {} {}", i+1, rss()); }
+    }
+    for i in 0..600 {
+        let _ = sess.eval_step(&params, &tokens)?;
+        if i % 200 == 199 { println!("eval {} {}", i+1, rss()); }
+    }
+    for i in 0..300 {
+        let _ = sess.init_params(i as u32)?;
+        if i % 100 == 99 { println!("init {} {}", i+1, rss()); }
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load the AOT artifacts, train MuLoCo with K=4 workers
+//! for a few outer rounds on the synthetic corpus, and print the loss
+//! table.  Run with:
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use muloco::coordinator::{train, Method, TrainConfig};
+use muloco::runtime::Session;
+
+fn main() -> anyhow::Result<()> {
+    let sess = Session::load(std::path::Path::new("artifacts/nano"))?;
+    println!(
+        "loaded {} ({} params) on {}",
+        sess.manifest.config.name,
+        sess.manifest.config.param_count,
+        sess.platform()
+    );
+
+    let mut cfg = TrainConfig::new("nano", Method::Muloco).tuned_outer(4);
+    cfg.total_steps = 60;
+    cfg.global_batch = 32;
+    cfg.sync_interval = 15;
+    cfg.eval_every = 15;
+
+    println!(
+        "training MuLoCo: K={} workers, H={} local steps, {} total steps",
+        cfg.workers, cfg.sync_interval, cfg.total_steps
+    );
+    let result = train(&sess, &cfg)?;
+    println!("\n step | eval loss | eval acc");
+    for ((step, loss), (_, acc)) in
+        result.eval_curve.iter().zip(&result.acc_curve)
+    {
+        println!(" {step:>4} | {loss:>9.4} | {acc:.3}");
+    }
+    println!(
+        "\nsmoothed final loss (App-F estimator): {:.4}",
+        result.smoothed_final
+    );
+    println!(
+        "communicated {:.2} MB per worker over {} tokens",
+        result.comm.bytes_per_worker as f64 / 1e6,
+        result.tokens
+    );
+    Ok(())
+}

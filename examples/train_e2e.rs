@@ -1,0 +1,74 @@
+//! End-to-end driver: trains the `e2e` transformer (the largest
+//! practical config on this host; the paper's full pipeline at
+//! miniature scale) for a few hundred steps with MuLoCo K=4 and logs
+//! the full loss curve against DiLoCo and both DP baselines.
+//!
+//! This is the EXPERIMENTS.md §E2E run:
+//!
+//!   make artifacts && cargo run --release --example train_e2e -- [--model e2e] [--steps N]
+//!
+//! Pass `--model nano --steps 60` for a quick check; defaults exercise
+//! the real workload.
+
+use muloco::coordinator::{train, Method, TrainConfig};
+use muloco::metrics::RunLogger;
+use muloco::runtime::Session;
+use muloco::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let model = args.get_or("model", "e2e");
+    let steps: u64 = args.get_parse("steps", 300)?;
+    let batch: usize = args.get_parse("batch", 32)?;
+    args.finish()?;
+
+    let sess = Session::load(&std::path::Path::new("artifacts").join(&model))?;
+    let m = &sess.manifest.config;
+    println!(
+        "e2e driver: {} — {} params, {} layers, d={}, vocab={}, seq={}",
+        m.name, m.param_count, m.n_layers, m.d_model, m.vocab, m.seq_len
+    );
+
+    let logger = RunLogger::new("e2e")?;
+    let mut headline = Vec::new();
+    for (label, method, k) in [
+        ("muloco-k4", Method::Muloco, 4usize),
+        ("diloco-k4", Method::Diloco, 4),
+        ("dp-muon", Method::DpMuon, 1),
+        ("dp-adamw", Method::DpAdamw, 1),
+    ] {
+        let mut cfg = TrainConfig::new(&model, method);
+        if method.is_local_update() {
+            cfg = cfg.tuned_outer(k);
+        }
+        cfg.total_steps = steps;
+        cfg.global_batch = batch;
+        cfg.sync_interval = 15;
+        cfg.eval_every = 15;
+        cfg.eval_batches = 4;
+        cfg.warmup_steps = steps / 10;
+        println!("\n=== {label}: K={} H={} B={} steps={}",
+                 cfg.workers, cfg.sync_interval, cfg.global_batch, steps);
+        let t0 = std::time::Instant::now();
+        let r = train(&sess, &cfg)?;
+        for (step, loss) in &r.eval_curve {
+            println!("  step {step:>5}: eval loss {loss:.4}");
+        }
+        println!(
+            "  -> final smoothed {:.4} | acc {:.3} | {:.1}s wall | {:.1} MB/worker comm",
+            r.smoothed_final, r.final_acc,
+            t0.elapsed().as_secs_f64(),
+            r.comm.bytes_per_worker as f64 / 1e6
+        );
+        logger.log(label, &r)?;
+        headline.push((label, r.smoothed_final));
+    }
+
+    println!("\n=== summary (smoothed final eval loss) ===");
+    for (label, loss) in &headline {
+        println!("  {label:<10} {loss:.4}");
+    }
+    println!("curves in results/e2e/runs/*.csv");
+    Ok(())
+}

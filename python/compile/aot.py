@@ -1,0 +1,165 @@
+"""AOT pipeline: lower the L2/L1 step functions to HLO text artifacts.
+
+Emits HLO *text* (NOT `.serialize()`): jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Per model config this writes to artifacts/<config>/:
+  init.hlo.txt         (seed u32[])                  -> (params...,)
+  fwd_grad.hlo.txt     (params..., tokens i32[b,T])  -> (loss, grads...)
+  apply_adamw.hlo.txt  (params..., m..., v..., grads..., t, lr, wd)
+                                                     -> (params', m', v')
+  apply_muon.hlo.txt   (params..., mom..., am..., av..., grads..., t, lr, wd)
+                                                     -> (params', mom', am', av')
+  eval_step.hlo.txt    (params..., tokens)           -> (loss, acc)
+  manifest.json        tensor layout + dims + flops the rust side needs
+
+Python runs ONLY here (build time).  The rust binary is self-contained
+once artifacts exist; `make artifacts` is a no-op when inputs are
+unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS
+from .model import param_specs, init_params, loss_and_grad, eval_metrics
+from .optim import (apply_adamw, apply_muon, adamw_state_specs,
+                    muon_state_specs, muon_param_routing)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(shapes, dtype=jnp.float32):
+    return [jax.ShapeDtypeStruct(s, dtype) for s in shapes]
+
+
+def export_config(cfg, out_root):
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    specs = param_specs(cfg)
+    p_shapes = [s.shape for s in specs]
+    np_ = len(specs)
+    tok_spec = jax.ShapeDtypeStruct((cfg.microbatch, cfg.seq_len), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    a_state = adamw_state_specs(cfg)
+    mu_state = muon_state_specs(cfg)
+    hidden, adamw_idx = muon_param_routing(cfg)
+    n_hidden, n_adamw = len(hidden), len(adamw_idx)
+
+    def write(name, fn, arg_specs):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}/{name}: {len(text) / 1e6:.2f} MB HLO text")
+        return os.path.basename(path)
+
+    files = {}
+
+    # 1. init(seed) -> params
+    def init_fn(seed):
+        return tuple(init_params(cfg, seed))
+    files["init"] = write(
+        "init", init_fn, [jax.ShapeDtypeStruct((), jnp.uint32)])
+
+    # 2. fwd_grad(params..., tokens) -> (loss, grads...)
+    def fwd_grad_fn(*args):
+        params, tokens = list(args[:np_]), args[np_]
+        loss, grads = loss_and_grad(cfg, params, tokens)
+        return (loss, *grads)
+    files["fwd_grad"] = write(
+        "fwd_grad", fwd_grad_fn, _specs(p_shapes) + [tok_spec])
+
+    # 3. apply_adamw(params..., m..., v..., grads..., t, lr, wd)
+    def adamw_fn(*args):
+        o = 0
+        params = list(args[o:o + np_]); o += np_
+        m = list(args[o:o + np_]); o += np_
+        v = list(args[o:o + np_]); o += np_
+        grads = list(args[o:o + np_]); o += np_
+        t, lr, wd = args[o], args[o + 1], args[o + 2]
+        p2, m2, v2 = apply_adamw(cfg, params, m, v, grads, t, lr, wd)
+        return (*p2, *m2, *v2)
+    files["apply_adamw"] = write(
+        "apply_adamw", adamw_fn,
+        _specs(p_shapes) * 4 + [scalar, scalar, scalar])
+
+    # 4. apply_muon(params..., mom..., am..., av..., grads..., t, lr, wd)
+    mom_shapes = [specs[i].shape for i in hidden]
+    aw_shapes = [specs[i].shape for i in adamw_idx]
+
+    def muon_fn(*args):
+        o = 0
+        params = list(args[o:o + np_]); o += np_
+        mom = list(args[o:o + n_hidden]); o += n_hidden
+        am = list(args[o:o + n_adamw]); o += n_adamw
+        av = list(args[o:o + n_adamw]); o += n_adamw
+        grads = list(args[o:o + np_]); o += np_
+        t, lr, wd = args[o], args[o + 1], args[o + 2]
+        p2, mom2, m2, v2 = apply_muon(cfg, params, mom, am, av, grads,
+                                      t, lr, wd)
+        return (*p2, *mom2, *m2, *v2)
+    files["apply_muon"] = write(
+        "apply_muon", muon_fn,
+        _specs(p_shapes) + _specs(mom_shapes) + _specs(aw_shapes) * 2
+        + _specs(p_shapes) + [scalar, scalar, scalar])
+
+    # 5. eval_step(params..., tokens) -> (loss, acc)
+    def eval_fn(*args):
+        params, tokens = list(args[:np_]), args[np_]
+        return eval_metrics(cfg, params, tokens)
+    files["eval_step"] = write(
+        "eval_step", eval_fn, _specs(p_shapes) + [tok_spec])
+
+    manifest = {
+        "config": cfg.to_dict(),
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "size": s.size,
+             "kind": s.kind, "partition": s.partition}
+            for s in specs
+        ],
+        "adamw_state": [
+            {"name": n, "shape": list(sh)} for n, sh in a_state],
+        "muon_state": [
+            {"name": n, "shape": list(sh)} for n, sh in mu_state],
+        "muon_hidden_indices": hidden,
+        "muon_adamw_indices": adamw_idx,
+        "executables": files,
+        "scalar_inputs": ["t", "lr", "wd"],
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {cfg.name}: manifest written "
+          f"({manifest['config']['param_count']} params)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="nano",
+                    help="config name, comma list, or 'all'")
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    names = (list(CONFIGS) if args.config == "all"
+             else args.config.split(","))
+    for name in names:
+        print(f"exporting {name} ...")
+        export_config(CONFIGS[name], args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model scale ladder for the MuLoCo reproduction.
+
+The paper (Table 1) trains Gemma3-style transformers from 150M to 15.2B
+parameters at 20 tokens-per-parameter.  This environment is a single-core
+CPU host, so we reproduce the *ladder structure* (six scales, fixed
+depth/width ratios, 20-TPP budgets configurable at the launcher) at a
+miniature scale.  Dims follow the paper's ratios: ffn ~ 2.75 * d_model,
+head_dim fixed, QK-norm + pre/post RMSNorm + SwiGLU, untied head.
+
+Every config here is AOT-lowered by aot.py into its own artifact
+directory; the rust coordinator picks configs by name.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    paper_scale: str  # which paper row this rung mirrors
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    microbatch: int  # per-executable batch (global batch = n_micro * this)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = (
+            4 * d * d  # wq, wk, wv, wo
+            + 3 * d * f  # wg, wu, wd
+            + 4 * d  # four RMSNorm scales
+            + 2 * self.head_dim  # qk-norm scales
+        )
+        return v * d + self.n_layers * per_layer + d + d * v
+
+    def flops_per_token(self) -> float:
+        """~6N fwd+bwd plus the attention quadratic term."""
+        n_matmul = self.param_count() - 2 * self.vocab * self.d_model
+        attn = 12 * self.n_layers * self.d_model * self.seq_len
+        return 6.0 * (n_matmul + self.vocab * self.d_model * 2) + attn
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["param_count"] = self.param_count()
+        d["flops_per_token"] = self.flops_per_token()
+        return d
+
+
+def _ffn(d: int) -> int:
+    # paper ratio d_ff ~ 2.75 * d_model, rounded to a multiple of 8
+    return int(round(2.75 * d / 8)) * 8
+
+
+# The six-rung ladder mirroring Table 1 (150M..15B), scaled to CPU budget.
+# head_dim = 16 throughout (paper: 128).
+CONFIGS = {
+    "nano": ModelConfig("nano", "150M", 2, 32, 2, _ffn(32), 256, 64, 4),
+    "micro": ModelConfig("micro", "416M", 3, 48, 3, _ffn(48), 256, 64, 4),
+    "tiny": ModelConfig("tiny", "914M", 4, 64, 4, _ffn(64), 256, 64, 4),
+    "small": ModelConfig("small", "1.76B", 5, 96, 6, _ffn(96), 256, 64, 4),
+    "med": ModelConfig("med", "3.07B", 6, 128, 8, _ffn(128), 256, 64, 4),
+    "big": ModelConfig("big", "15.2B", 8, 192, 12, _ffn(192), 512, 64, 4),
+    # end-to-end example config (largest practical on this host)
+    "e2e": ModelConfig("e2e", "e2e-demo", 6, 256, 16, _ffn(256), 2048, 128, 4),
+}
+
+# The five extensively-swept rungs (the paper sweeps 150M..3.1B and holds
+# out 15B); `big` plays the 15B "extrapolate, don't sweep" role.
+LADDER = ["nano", "micro", "tiny", "small", "med"]
+HOLDOUT = "big"

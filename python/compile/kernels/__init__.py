@@ -1,0 +1,3 @@
+"""L1 Pallas kernels for the MuLoCo reproduction (interpret=True on CPU)."""
+from .newton_schulz import newton_schulz, matmul_nt, poly_matmul, residual_matmul  # noqa: F401
+from .fused_adamw import fused_adamw  # noqa: F401

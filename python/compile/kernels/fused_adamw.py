@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: fused AdamW moment + parameter update.
+
+DiLoCo's inner optimizer (and the AdamW half of MuLoCo, which handles
+embeddings/norms/head) is a bandwidth-bound elementwise pass over four
+equally-shaped arrays (theta, m, v, g).  The fusion does the whole update
+in a single sweep so each array streams through VMEM exactly once:
+
+    m' = b1*m + (1-b1)*g
+    v' = b2*v + (1-b2)*g*g
+    theta' = theta - lr * ( (m'*bc1) / (sqrt(v'*bc2) + eps) + wd*theta )
+
+Bias corrections bc1 = 1/(1-b1^t), bc2 = 1/(1-b2^t) are computed by the
+caller (they are scalars shared by every element) and ride in through a
+small scalar operand.  On a real TPU this is a VPU kernel with (8, 128)
+lanes; under interpret-mode we tile the flattened array in 1-D blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# On a real TPU this would be a (8,128)-lane VPU tile loop; under
+# interpret-mode each grid point costs a dynamic-update-slice over the
+# whole output, so the CPU default is one monolithic block (grid = 1).
+# Pass `block` explicitly to exercise the tiled path (python/tests does).
+BLOCK = None
+# paper §5: beta1 = 0.9, beta2 = 0.99 for all AdamW (inner) experiments
+ADAMW_BETA1 = 0.9
+ADAMW_BETA2 = 0.99
+ADAMW_EPS = 1e-8
+
+
+def _adamw_kernel(p_ref, m_ref, v_ref, g_ref, sc_ref, po_ref, mo_ref, vo_ref,
+                  *, b1, b2, eps):
+    lr = sc_ref[0]
+    wd = sc_ref[1]
+    bc1 = sc_ref[2]
+    bc2 = sc_ref[3]
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    update = (m * bc1) / (jnp.sqrt(v * bc2) + eps)
+    p = p_ref[...]
+    po_ref[...] = p - lr * (update + wd * p)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def fused_adamw(p, m, v, g, t, lr, wd,
+                *, b1=ADAMW_BETA1, b2=ADAMW_BETA2, eps=ADAMW_EPS,
+                block=None, interpret=True):
+    """Apply one fused AdamW update to a flat f32 array.
+
+    p, m, v, g: rank-1 arrays of the same length.  t (step, 1-indexed),
+    lr, wd: traced scalars.  Returns (p', m', v').
+    """
+    n0 = p.shape[0]
+    block = block or BLOCK or n0
+    pad = (-n0) % block
+    if pad:
+        p, m, v, g = (jnp.pad(x, (0, pad)) for x in (p, m, v, g))
+    n = p.shape[0]
+    bc1 = 1.0 / (1.0 - b1 ** t)
+    bc2 = 1.0 / (1.0 - b2 ** t)
+    scalars = jnp.stack([lr, wd, bc1, bc2]).astype(jnp.float32)
+    grid = (n // block,)
+    blockspec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps),
+        grid=grid,
+        in_specs=[blockspec, blockspec, blockspec, blockspec,
+                  pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=[blockspec, blockspec, blockspec],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        interpret=interpret,
+    )(p, m, v, g, scalars)
+    if pad:
+        out = [x[:n0] for x in out]
+    return tuple(out)

@@ -1,0 +1,228 @@
+"""L1 Pallas kernels: Muon's Newton-Schulz orthogonalization hot-spot.
+
+The paper's inner optimizer (Muon, Jordan et al. 2024) orthogonalizes the
+momentum matrix with five iterations of the quintic Newton-Schulz map
+
+    X <- a*X + (b*A + c*A@A) @ X,     A = X @ X^T
+
+with (a, b, c) = (3.4445, -4.7750, 2.0315).  The matmul chain is the
+compute hot-spot of the optimizer step, so it lives here as Pallas
+kernels.
+
+HARDWARE ADAPTATION (see DESIGN.md §3/§7.1): reference GPU Muon kernels
+tile for SM shared memory and tensor-core WMMA.  On TPU the same insight
+maps to: (i) MXU-shaped tiles staged through VMEM via BlockSpec, (ii)
+fp32 accumulation in the output ref across the K grid dimension, and
+(iii) fusing the polynomial epilogue (b*A + c*A@A, and the a*X residual)
+into the matmul's final K-step so each operand streams HBM->VMEM once.
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO the rust runtime can
+run.  Real-TPU efficiency is estimated analytically in DESIGN.md §7.1.
+
+All kernels are batched over a leading dimension so that same-shaped
+hidden matrices across transformer layers are orthogonalized in one
+pallas_call (this is what keeps the AOT-lowered HLO small).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Quintic coefficients from Jordan et al. (2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+_EPS = 1e-7
+
+# Tile sizes.  On a real TPU these would be (128, 128, 256) to match the
+# MXU systolic array.  Under interpret-mode on CPU, every grid point
+# lowers to a dynamic-update-slice over the *whole* output buffer, so a
+# fine grid causes O(grid * |out|) memmove traffic (measured: 40 s per
+# optimizer step at d=128 with 32-tiles -> 5 ms with monolithic blocks;
+# see EXPERIMENTS.md §Perf).  The CPU default is therefore "one block =
+# the whole (padded) operand", grid = (1,1,1,1); pass bm/bn/bk explicitly
+# to exercise the TPU-shaped tiling (python/tests does).
+BLOCK_M = None  # None = monolithic (full-dim) block
+BLOCK_N = None
+BLOCK_K = None
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _mm_nt_kernel(x_ref, y_ref, o_ref, *, nk):
+    """o[b,i,j] += x[b,i,k] @ y[b,j,k]^T with fp32 accumulation."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _poly_mm_kernel(a_ik_ref, a_kj_ref, a_ij_ref, o_ref, *, nk, beta, gamma):
+    """Fused polynomial epilogue: o = beta*A + gamma*(A @ A).
+
+    The A_ij tile rides along with the same (i, j) index map as the
+    output, so the epilogue costs no extra HBM pass.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ik_ref[...],
+        a_kj_ref[...],
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = gamma * o_ref[...] + beta * a_ij_ref[...]
+
+
+def _residual_mm_kernel(p_ik_ref, x_kj_ref, x_ij_ref, o_ref, *, nk, alpha):
+    """Fused residual epilogue: o = alpha*X + P @ X."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        p_ik_ref[...],
+        x_kj_ref[...],
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] + alpha * x_ij_ref[...]
+
+
+def _grid_specs(nb, m, n, k, bm, bn, bk):
+    # batch rides inside the block (a single interpret-mode grid point
+    # per (i,j,k) tile); grid covers the matmul tiling only
+    del nb
+    return (m // bm, n // bn, k // bk)
+
+
+def matmul_nt(x, y, *, bm=None, bn=None, bk=None, interpret=True):
+    """Batched X @ Y^T via the Pallas kernel. x: (B,M,K), y: (B,N,K)."""
+    nb, m0, k0 = x.shape
+    n0 = y.shape[1]
+    bm = bm or BLOCK_M or m0
+    bn = bn or BLOCK_N or n0
+    bk = bk or BLOCK_K or k0
+    x = _pad_to(_pad_to(x, bm, 1), bk, 2)
+    y = _pad_to(_pad_to(y, bn, 1), bk, 2)
+    _, m, k = x.shape
+    n = y.shape[1]
+    nk = k // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_nt_kernel, nk=nk),
+        grid=_grid_specs(nb, m, n, k, bm, bn, bk),
+        in_specs=[
+            pl.BlockSpec((nb, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((nb, bn, bk), lambda i, j, kk: (0, j, kk)),
+        ],
+        out_specs=pl.BlockSpec((nb, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+    return out[:, :m0, :n0]
+
+
+def poly_matmul(a, *, beta, gamma, bm=None, bn=None, bk=None, interpret=True):
+    """Batched beta*A + gamma*(A @ A) for square A: (B,M,M)."""
+    nb, m0, _ = a.shape
+    bm = bm or BLOCK_M or m0
+    bn = bn or BLOCK_N or m0
+    bk = bk or BLOCK_K or m0
+    assert bm == bn == bk, "poly_matmul tiles a square matrix uniformly"
+    a = _pad_to(_pad_to(a, bm, 1), bm, 2)
+    _, m, _ = a.shape
+    nk = m // bk
+    out = pl.pallas_call(
+        functools.partial(_poly_mm_kernel, nk=nk, beta=beta, gamma=gamma),
+        grid=_grid_specs(nb, m, m, m, bm, bn, bk),
+        in_specs=[
+            pl.BlockSpec((nb, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((nb, bk, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((nb, bm, bn), lambda i, j, kk: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((nb, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, m), jnp.float32),
+        interpret=interpret,
+    )(a, a, a)
+    return out[:, :m0, :m0]
+
+
+def residual_matmul(p, x, *, alpha, bm=None, bn=None, bk=None, interpret=True):
+    """Batched alpha*X + P @ X. p: (B,M,M), x: (B,M,N)."""
+    nb, m0, n0 = x.shape
+    bm = bm or BLOCK_M or m0
+    bn = bn or BLOCK_N or n0
+    bk = bk or BLOCK_K or m0
+    # the fused residual needs the X_ij tile to share the output's index
+    # map, which requires the row tiling of P and X to agree
+    assert bm == bk, "residual_matmul requires bm == bk"
+    p = _pad_to(_pad_to(p, bm, 1), bk, 2)
+    x = _pad_to(_pad_to(x, bk, 1), bn, 2)
+    _, m, k = p.shape
+    n = x.shape[2]
+    x_out = x
+    nk = k // bk
+    out = pl.pallas_call(
+        functools.partial(_residual_mm_kernel, nk=nk, alpha=alpha),
+        grid=_grid_specs(nb, m, n, k, bm, bn, bk),
+        in_specs=[
+            pl.BlockSpec((nb, bm, bk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((nb, bk, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((nb, bm, bn), lambda i, j, kk: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((nb, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), jnp.float32),
+        interpret=interpret,
+    )(p, x_out, x_out)
+    return out[:, :m0, :n0]
+
+
+def newton_schulz(g, steps=NS_STEPS, coeffs=NS_COEFFS, *, interpret=True):
+    """Orthogonalize a batch of matrices g: (B, M, N) via Newton-Schulz.
+
+    Returns an approximation of U V^T where g = U S V^T.  Matches the
+    pure-jnp oracle in ref.py to ~1e-4.  Internally works on the
+    transpose when M > N so the Gram matrix A = X X^T is the smaller of
+    the two possible squares (same trick as the reference CUDA kernels).
+    """
+    a, b, c = coeffs
+    nb, m, n = g.shape
+    transpose = m > n
+    x = jnp.swapaxes(g, 1, 2) if transpose else g
+    x = x / (jnp.linalg.norm(x, axis=(1, 2), keepdims=True) + _EPS)
+
+    def body(_, x):
+        gram = matmul_nt(x, x, interpret=interpret)
+        poly = poly_matmul(gram, beta=b, gamma=c, interpret=interpret)
+        return residual_matmul(poly, x, alpha=a, interpret=interpret)
+
+    x = jax.lax.fori_loop(0, steps, body, x)
+    return jnp.swapaxes(x, 1, 2) if transpose else x

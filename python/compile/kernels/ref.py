@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references that python/tests checks the Pallas
+kernels against (assert_allclose under hypothesis shape/dtype sweeps).
+They intentionally use the most direct jnp formulation.
+"""
+
+import jax.numpy as jnp
+
+from .newton_schulz import NS_COEFFS, NS_STEPS, _EPS
+from .fused_adamw import ADAMW_BETA1, ADAMW_BETA2, ADAMW_EPS
+
+
+def matmul_nt_ref(x, y):
+    """Batched X @ Y^T. x: (B,M,K), y: (B,N,K)."""
+    return jnp.einsum("bmk,bnk->bmn", x, y)
+
+
+def poly_matmul_ref(a, beta, gamma):
+    return beta * a + gamma * jnp.einsum("bij,bjk->bik", a, a)
+
+
+def residual_matmul_ref(p, x, alpha):
+    return alpha * x + jnp.einsum("bij,bjk->bik", p, x)
+
+
+def newton_schulz_ref(g, steps=NS_STEPS, coeffs=NS_COEFFS):
+    """Reference quintic Newton-Schulz orthogonalization. g: (B,M,N)."""
+    a, b, c = coeffs
+    transpose = g.shape[1] > g.shape[2]
+    x = jnp.swapaxes(g, 1, 2) if transpose else g
+    x = x / (jnp.linalg.norm(x, axis=(1, 2), keepdims=True) + _EPS)
+    for _ in range(steps):
+        gram = jnp.einsum("bmk,bnk->bmn", x, x)
+        poly = b * gram + c * jnp.einsum("bij,bjk->bik", gram, gram)
+        x = a * x + jnp.einsum("bij,bjk->bik", poly, x)
+    return jnp.swapaxes(x, 1, 2) if transpose else x
+
+
+def adamw_ref(p, m, v, g, t, lr, wd,
+              b1=ADAMW_BETA1, b2=ADAMW_BETA2, eps=ADAMW_EPS):
+    """Reference fused-AdamW update on flat arrays."""
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1 ** t)
+    vhat = v / (1.0 - b2 ** t)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v

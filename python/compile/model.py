@@ -1,0 +1,170 @@
+"""L2 JAX model: Gemma3-style decoder-only transformer.
+
+Mirrors the paper's architecture (§5, Table 1): SwiGLU FFN, QK-norm,
+RoPE, RMSNorm both *before and after* the attention/FFN blocks (the
+"additional RMS normalization layers before residual connections"), and
+an untied output head.
+
+Parameters are carried as a flat list whose order is defined by
+`param_specs(cfg)`; the same order is what aot.py writes into
+manifest.json and what the rust runtime marshals.  Kinds route the
+optimizer: "hidden" tensors get Muon in MuLoCo, everything else
+(embed/head/norm) gets AdamW, exactly as in the paper.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    kind: str  # "embed" | "head" | "norm" | "hidden"
+    partition: int  # streaming-DiLoCo partition id (layer thirds)
+
+    @property
+    def size(self):
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def param_specs(cfg: ModelConfig):
+    """The canonical flat parameter layout (order matters everywhere)."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    specs = [ParamSpec("embed", (cfg.vocab, d), "embed", 0)]
+    for i in range(cfg.n_layers):
+        # partition layers into thirds for streaming DiLoCo (Douillard
+        # et al. 2025); embed joins the first, head the last partition.
+        part = min(2, 3 * i // max(1, cfg.n_layers))
+        p = f"l{i}."
+        specs += [
+            ParamSpec(p + "norm_att_in", (d,), "norm", part),
+            ParamSpec(p + "wq", (d, d), "hidden", part),
+            ParamSpec(p + "wk", (d, d), "hidden", part),
+            ParamSpec(p + "wv", (d, d), "hidden", part),
+            ParamSpec(p + "qnorm", (hd,), "norm", part),
+            ParamSpec(p + "knorm", (hd,), "norm", part),
+            ParamSpec(p + "wo", (d, d), "hidden", part),
+            ParamSpec(p + "norm_att_out", (d,), "norm", part),
+            ParamSpec(p + "norm_ffn_in", (d,), "norm", part),
+            ParamSpec(p + "wg", (d, f), "hidden", part),
+            ParamSpec(p + "wu", (d, f), "hidden", part),
+            ParamSpec(p + "wd", (f, d), "hidden", part),
+            ParamSpec(p + "norm_ffn_out", (d,), "norm", part),
+        ]
+    specs += [
+        ParamSpec("norm_f", (d,), "norm", 2),
+        ParamSpec("head", (d, cfg.vocab), "head", 2),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize the flat parameter list from a (traced) uint32 seed."""
+    key = jax.random.PRNGKey(seed)
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    params = []
+    for spec, k in zip(specs, keys):
+        if spec.kind == "norm":
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        elif spec.kind == "embed":
+            params.append(0.02 * jax.random.normal(k, spec.shape, jnp.float32))
+        else:
+            fan_in = spec.shape[0]
+            std = fan_in ** -0.5
+            # residual-output projections get the 1/sqrt(2L) shrink
+            if spec.name.endswith(("wo", "wd")):
+                std /= (2.0 * cfg.n_layers) ** 0.5
+            params.append(std * jax.random.normal(k, spec.shape, jnp.float32))
+    return params
+
+
+def _unflatten(cfg: ModelConfig, flat):
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return dict(zip((s.name for s in specs), flat))
+
+
+def _rmsnorm(x, scale, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _rope(x, theta):
+    """x: (B, T, H, hd) -> rotated; standard half-split RoPE."""
+    b, t, h, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freqs  # (T, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def forward(cfg: ModelConfig, flat_params, tokens):
+    """tokens: (B, T) int32 -> logits (B, T, vocab)."""
+    p = _unflatten(cfg, flat_params)
+    eps = cfg.norm_eps
+    b, t = tokens.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = p["embed"][tokens] * (cfg.d_model ** 0.5)
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    for i in range(cfg.n_layers):
+        l = f"l{i}."
+        # attention block: pre-norm, QK-norm, RoPE, causal SDPA, post-norm
+        xin = _rmsnorm(x, p[l + "norm_att_in"], eps)
+        q = (xin @ p[l + "wq"]).reshape(b, t, h, hd)
+        k = (xin @ p[l + "wk"]).reshape(b, t, h, hd)
+        v = (xin @ p[l + "wv"]).reshape(b, t, h, hd)
+        q = _rmsnorm(q, p[l + "qnorm"], eps)
+        k = _rmsnorm(k, p[l + "knorm"], eps)
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, cfg.d_model)
+        out = out @ p[l + "wo"]
+        x = x + _rmsnorm(out, p[l + "norm_att_out"], eps)
+        # SwiGLU block with pre+post norm
+        xin = _rmsnorm(x, p[l + "norm_ffn_in"], eps)
+        gate = jax.nn.silu(xin @ p[l + "wg"])
+        up = xin @ p[l + "wu"]
+        out = (gate * up) @ p[l + "wd"]
+        x = x + _rmsnorm(out, p[l + "norm_ffn_out"], eps)
+    x = _rmsnorm(x, p["norm_f"], eps)
+    return x @ p["head"]
+
+
+def loss_fn(cfg: ModelConfig, flat_params, tokens):
+    """Mean next-token cross-entropy over (B, T-1) positions."""
+    logits = forward(cfg, flat_params, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_and_grad(cfg: ModelConfig, flat_params, tokens):
+    return jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens))(flat_params)
+
+
+def eval_metrics(cfg: ModelConfig, flat_params, tokens):
+    """Returns (mean CE loss, next-token top-1 accuracy)."""
+    logits = forward(cfg, flat_params, tokens)[:, :-1]
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+    return loss, acc

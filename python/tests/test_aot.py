@@ -1,0 +1,70 @@
+"""AOT export tests: manifest consistency + HLO text properties."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import CONFIGS
+from compile import aot
+from compile.model import param_specs
+from compile.optim import adamw_state_specs, muon_state_specs
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.export_config(CONFIGS["nano"], str(out))
+    return os.path.join(str(out), "nano")
+
+
+def test_all_files_written(exported):
+    names = ["init", "fwd_grad", "apply_adamw", "apply_muon", "eval_step"]
+    for n in names:
+        path = os.path.join(exported, f"{n}.hlo.txt")
+        assert os.path.exists(path), n
+        text = open(path).read()
+        assert text.startswith("HloModule"), n
+        assert "ENTRY" in text, n
+
+
+def test_manifest_matches_specs(exported):
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    cfg = CONFIGS["nano"]
+    specs = param_specs(cfg)
+    assert len(man["params"]) == len(specs)
+    for ms, s in zip(man["params"], specs):
+        assert ms["name"] == s.name
+        assert tuple(ms["shape"]) == tuple(s.shape)
+        assert ms["size"] == s.size
+        assert ms["kind"] == s.kind
+    assert len(man["adamw_state"]) == len(adamw_state_specs(cfg))
+    assert len(man["muon_state"]) == len(muon_state_specs(cfg))
+    assert man["config"]["param_count"] == cfg.param_count()
+    assert man["scalar_inputs"] == ["t", "lr", "wd"]
+
+
+def test_manifest_routing_indices(exported):
+    man = json.load(open(os.path.join(exported, "manifest.json")))
+    n = len(man["params"])
+    both = sorted(man["muon_hidden_indices"] + man["muon_adamw_indices"])
+    assert both == list(range(n))
+    for i in man["muon_hidden_indices"]:
+        assert man["params"][i]["kind"] == "hidden"
+
+
+def test_hlo_no_serialized_proto(exported):
+    """Interchange must be HLO text (xla_extension 0.5.1 gotcha)."""
+    for f in os.listdir(exported):
+        if f.endswith(".hlo.txt"):
+            head = open(os.path.join(exported, f)).read(200)
+            assert head.startswith("HloModule"), f
+
+
+def test_parameter_counts_in_hlo(exported):
+    """fwd_grad must declare n_params + 1 (tokens) entry parameters."""
+    cfg = CONFIGS["nano"]
+    n = len(param_specs(cfg))
+    text = open(os.path.join(exported, "fwd_grad.hlo.txt")).read()
+    entry = text.split("ENTRY")[1]
+    assert entry.count("parameter(") == n + 1

@@ -1,0 +1,150 @@
+"""L2 model tests: shapes, invariances, and learning signal."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import CONFIGS, ModelConfig
+from compile import model as M
+
+CFG = CONFIGS["nano"]
+
+
+def _tokens(rng, cfg, b=None):
+    b = b or cfg.microbatch
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(b, cfg.seq_len)).astype(np.int32))
+
+
+def test_param_specs_cover_param_count():
+    for name in ("nano", "micro", "tiny"):
+        cfg = CONFIGS[name]
+        total = sum(s.size for s in M.param_specs(cfg))
+        assert total == cfg.param_count(), name
+
+
+def test_param_specs_partitions_are_balanced_thirds():
+    cfg = CONFIGS["tiny"]
+    parts = {0: 0, 1: 0, 2: 0}
+    for s in M.param_specs(cfg):
+        parts[s.partition] += s.size
+    total = sum(parts.values())
+    for p, sz in parts.items():
+        assert sz > 0.1 * total, (p, sz, total)
+
+
+def test_init_deterministic_in_seed():
+    p1 = M.init_params(CFG, jnp.uint32(7))
+    p2 = M.init_params(CFG, jnp.uint32(7))
+    p3 = M.init_params(CFG, jnp.uint32(8))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    assert any(float(jnp.abs(a - b).max()) > 0
+               for a, b in zip(p1, p3) if a.ndim == 2)
+
+
+def test_forward_shapes_and_finite():
+    rng = np.random.default_rng(0)
+    params = M.init_params(CFG, jnp.uint32(0))
+    toks = _tokens(rng, CFG)
+    logits = M.forward(CFG, params, toks)
+    assert logits.shape == (CFG.microbatch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    """Fresh model's CE should be close to log(vocab)."""
+    rng = np.random.default_rng(1)
+    params = M.init_params(CFG, jnp.uint32(1))
+    loss = float(M.loss_fn(CFG, params, _tokens(rng, CFG)))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0, loss
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(2)
+    params = M.init_params(CFG, jnp.uint32(2))
+    toks = _tokens(rng, CFG, b=1)
+    logits1 = M.forward(CFG, params, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % CFG.vocab)
+    logits2 = M.forward(CFG, params, toks2)
+    np.testing.assert_allclose(logits1[0, :-1], logits2[0, :-1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grads_cover_all_params_and_are_finite():
+    rng = np.random.default_rng(3)
+    params = M.init_params(CFG, jnp.uint32(3))
+    loss, grads = M.loss_and_grad(CFG, params, _tokens(rng, CFG))
+    assert len(grads) == len(params)
+    for spec, g in zip(M.param_specs(CFG), grads):
+        assert g.shape == tuple(spec.shape)
+        assert bool(jnp.all(jnp.isfinite(g))), spec.name
+        assert float(jnp.abs(g).max()) > 0, spec.name
+
+
+def test_sgd_reduces_loss():
+    """A few plain-SGD steps on one batch must reduce its loss."""
+    rng = np.random.default_rng(4)
+    params = M.init_params(CFG, jnp.uint32(4))
+    toks = _tokens(rng, CFG)
+    l0, _ = M.loss_and_grad(CFG, params, toks)
+    for _ in range(5):
+        _, grads = M.loss_and_grad(CFG, params, toks)
+        params = [p - 0.5 * g for p, g in zip(params, grads)]
+    l1, _ = M.loss_and_grad(CFG, params, toks)
+    assert float(l1) < float(l0)
+
+
+def test_eval_metrics_consistent_with_loss():
+    rng = np.random.default_rng(5)
+    params = M.init_params(CFG, jnp.uint32(5))
+    toks = _tokens(rng, CFG)
+    loss, acc = M.eval_metrics(CFG, params, toks)
+    np.testing.assert_allclose(float(loss), float(M.loss_fn(CFG, params, toks)),
+                               rtol=1e-6)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_rmsnorm_scale_invariance():
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(4, 8)),
+                    jnp.float32)
+    y1 = M._rmsnorm(x, jnp.ones(8), 1e-6)
+    y2 = M._rmsnorm(3.0 * x, jnp.ones(8), 1e-6)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_preserves_norm():
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(1, 16, 2, 16)),
+                    jnp.float32)
+    y = M._rope(x, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_relative_position():
+    """RoPE inner products depend only on relative offsets."""
+    hd = 16
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(hd,)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(hd,)), jnp.float32)
+    t = 12
+    qb = jnp.broadcast_to(q, (1, t, 1, hd))
+    kb = jnp.broadcast_to(k, (1, t, 1, hd))
+    qr, kr = M._rope(qb, 10000.0), M._rope(kb, 10000.0)
+    dots = jnp.einsum("thd,uhd->tu", qr[0].transpose(0, 1, 2), kr[0])
+    # same relative offset -> same dot product, along diagonals
+    d1 = float(dots[3, 5]); d2 = float(dots[7, 9])
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["nano", "micro"])
+def test_all_ladder_configs_forward(name):
+    cfg = CONFIGS[name]
+    rng = np.random.default_rng(9)
+    params = M.init_params(cfg, jnp.uint32(0))
+    toks = _tokens(rng, cfg, b=2)
+    loss = M.loss_fn(cfg, params, toks)
+    assert bool(jnp.isfinite(loss))

@@ -1,0 +1,148 @@
+"""Inner-optimizer tests: AdamW + Muon apply-steps (L2 over L1)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.configs import CONFIGS
+from compile import model as M
+from compile import optim as O
+from compile.kernels import ref
+
+CFG = CONFIGS["nano"]
+
+
+def _setup(seed=0):
+    rng = np.random.default_rng(seed)
+    params = M.init_params(CFG, jnp.uint32(seed))
+    grads = [jnp.asarray(rng.normal(scale=1e-2, size=p.shape)
+                         .astype(np.float32)) for p in params]
+    return rng, params, grads
+
+
+def _zeros_like(params):
+    return [jnp.zeros_like(p) for p in params]
+
+
+def test_adamw_matches_per_tensor_reference():
+    _, params, grads = _setup(0)
+    m, v = _zeros_like(params), _zeros_like(params)
+    t, lr, wd = jnp.float32(1), jnp.float32(1e-2), jnp.float32(0.1)
+    p2, m2, v2 = O.apply_adamw(CFG, params, m, v, grads, t, lr, wd)
+    for spec, p, g, pp, mm, vv in zip(M.param_specs(CFG), params, grads,
+                                      p2, m2, v2):
+        wd_eff = 0.1 if len(spec.shape) == 2 else 0.0
+        pe, me, ve = ref.adamw_ref(p.reshape(-1), jnp.zeros(p.size),
+                                   jnp.zeros(p.size), g.reshape(-1),
+                                   1.0, 1e-2, wd_eff)
+        np.testing.assert_allclose(pp.reshape(-1), pe, rtol=2e-5, atol=1e-7,
+                                   err_msg=spec.name)
+        np.testing.assert_allclose(mm.reshape(-1), me, rtol=2e-5, atol=1e-8)
+        np.testing.assert_allclose(vv.reshape(-1), ve, rtol=2e-5, atol=1e-9)
+
+
+def test_adamw_no_decay_on_norms():
+    """Norm scales must not be pulled toward zero by weight decay."""
+    _, params, _ = _setup(1)
+    grads = _zeros_like(params)  # zero grads isolate the decay term
+    m, v = _zeros_like(params), _zeros_like(params)
+    p2, _, _ = O.apply_adamw(CFG, params, m, v, grads, jnp.float32(1),
+                             jnp.float32(1e-2), jnp.float32(0.5))
+    for spec, p, pp in zip(M.param_specs(CFG), params, p2):
+        if spec.kind == "norm":
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(pp))
+        elif len(spec.shape) == 2:
+            assert float(jnp.abs(pp - p).max()) > 0, spec.name
+
+
+def test_muon_routing_matches_manifest():
+    hidden, adamw = O.muon_param_routing(CFG)
+    specs = M.param_specs(CFG)
+    assert sorted(hidden + adamw) == list(range(len(specs)))
+    for i in hidden:
+        assert specs[i].kind == "hidden" and len(specs[i].shape) == 2
+    for i in adamw:
+        assert specs[i].kind != "hidden"
+
+
+def test_muon_step_is_orthonormal_scaled():
+    """With zero momentum and wd=0, the Muon delta on a hidden matrix is
+    lr * sqrt(n/m) * NS(g): its singular values should be ~lr*sqrt(n/m)."""
+    _, params, grads = _setup(2)
+    hidden, adamw = O.muon_param_routing(CFG)
+    mom = [jnp.zeros(params[i].shape) for i in hidden]
+    am = [jnp.zeros(params[i].shape) for i in adamw]
+    av = [jnp.zeros(params[i].shape) for i in adamw]
+    lr = 1e-2
+    p2, mom2, _, _ = O.apply_muon(CFG, params, mom, am, av, grads,
+                                  jnp.float32(1), jnp.float32(lr),
+                                  jnp.float32(0.0))
+    i = hidden[0]
+    rows, cols = params[i].shape
+    delta = np.asarray(params[i] - p2[i])
+    s = np.linalg.svd(delta, compute_uv=False)
+    expect = lr * (cols / rows) ** 0.5
+    assert 0.5 * expect < s.mean() < 1.5 * expect, (s.mean(), expect)
+    # momentum accumulator picked up the gradient
+    np.testing.assert_allclose(np.asarray(mom2[0]),
+                               np.asarray(grads[i]), rtol=1e-6)
+
+
+def test_muon_adamw_branch_matches_adamw():
+    """Non-hidden params must evolve exactly like plain AdamW."""
+    _, params, grads = _setup(3)
+    hidden, adamw = O.muon_param_routing(CFG)
+    mom = [jnp.zeros(params[i].shape) for i in hidden]
+    am = [jnp.zeros(params[i].shape) for i in adamw]
+    av = [jnp.zeros(params[i].shape) for i in adamw]
+    t, lr, wd = jnp.float32(1), jnp.float32(1e-2), jnp.float32(0.1)
+    p_mu, _, _, _ = O.apply_muon(CFG, params, mom, am, av, grads, t, lr, wd)
+    m, v = _zeros_like(params), _zeros_like(params)
+    p_aw, _, _ = O.apply_adamw(CFG, params, m, v, grads, t, lr, wd)
+    for i in adamw:
+        np.testing.assert_allclose(np.asarray(p_mu[i]), np.asarray(p_aw[i]),
+                                   rtol=1e-5, atol=1e-8)
+
+
+def test_muon_momentum_accumulation():
+    """m_t = beta*m_{t-1} + g_t (paper formulation, no dampening)."""
+    _, params, grads = _setup(4)
+    hidden, adamw = O.muon_param_routing(CFG)
+    mom = [jnp.asarray(np.random.default_rng(5).normal(
+        size=params[i].shape).astype(np.float32)) for i in hidden]
+    am = [jnp.zeros(params[i].shape) for i in adamw]
+    av = [jnp.zeros(params[i].shape) for i in adamw]
+    _, mom2, _, _ = O.apply_muon(CFG, params, mom, am, av, grads,
+                                 jnp.float32(1), jnp.float32(1e-2),
+                                 jnp.float32(0.0))
+    for j, i in enumerate(hidden):
+        want = O.MUON_BETA * mom[j] + grads[i]
+        np.testing.assert_allclose(np.asarray(mom2[j]), np.asarray(want),
+                                   rtol=1e-6)
+
+
+def test_muon_reduces_loss():
+    rng = np.random.default_rng(6)
+    params = M.init_params(CFG, jnp.uint32(6))
+    toks = jnp.asarray(rng.integers(
+        0, CFG.vocab, size=(CFG.microbatch, CFG.seq_len)).astype(np.int32))
+    hidden, adamw = O.muon_param_routing(CFG)
+    mom = [jnp.zeros(params[i].shape) for i in hidden]
+    am = [jnp.zeros(params[i].shape) for i in adamw]
+    av = [jnp.zeros(params[i].shape) for i in adamw]
+    l0 = float(M.loss_fn(CFG, params, toks))
+    for t in range(1, 6):
+        _, grads = M.loss_and_grad(CFG, params, toks)
+        params, mom, am, av = O.apply_muon(
+            CFG, params, mom, am, av, grads,
+            jnp.float32(t), jnp.float32(0.05), jnp.float32(0.0))
+    l1 = float(M.loss_fn(CFG, params, toks))
+    assert l1 < l0, (l0, l1)
+
+
+def test_state_spec_shapes():
+    specs = M.param_specs(CFG)
+    a = O.adamw_state_specs(CFG)
+    assert len(a) == 2 * len(specs)
+    mu = O.muon_state_specs(CFG)
+    hidden, adamw = O.muon_param_routing(CFG)
+    assert len(mu) == len(hidden) + 2 * len(adamw)

@@ -1,0 +1,185 @@
+//! Benchmark harness (criterion is unavailable offline; this is a
+//! self-contained timing harness with warmup + repeated trials that
+//! `cargo bench` runs).  Two groups:
+//!
+//! * L3 hot-path microbenches: quantizers, top-k, error feedback,
+//!   collectives, outer step, SVD, dot/cosine — the components on the
+//!   coordinator's synchronization path.
+//! * end-to-end PJRT benches (one per paper-table workload) when
+//!   artifacts are present: fwd_grad / apply_muon / apply_adamw per
+//!   config, plus a full MuLoCo round — the Table 9 generator's
+//!   underlying measurements.
+
+use std::time::Instant;
+
+use muloco::analysis::svd;
+use muloco::analysis::Mat;
+use muloco::collectives::{quantized_reduce_mean, ring_allreduce_mean,
+                          sparse_allgather_mean};
+use muloco::compress::{Compressor, ErrorFeedback, QuantMode, Quantizer, TopK};
+use muloco::coordinator::{train, Method, NesterovOuter, TrainConfig};
+use muloco::runtime::Session;
+use muloco::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, bytes_per_iter: usize, mut f: F) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut iters = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        f();
+        iters += 1;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let gbs = bytes_per_iter as f64 / per / 1e9;
+    if bytes_per_iter > 0 {
+        println!("{name:<44} {:>12.1} us/iter {:>8.2} GB/s", per * 1e6, gbs);
+    } else {
+        println!("{name:<44} {:>12.1} us/iter", per * 1e6);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== L3 hot-path microbenches ==");
+    let mut rng = Rng::new(0);
+    let n = 1 << 20; // 1M f32 = one decent tensor shard
+    let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+    for (label, q) in [
+        ("quantize q8-linear (1M f32)", Quantizer::new(8, QuantMode::Linear, false)),
+        ("quantize q4-linear (1M f32)", Quantizer::new(4, QuantMode::Linear, false)),
+        ("quantize q4-linear-rowwise (1024x1024)", Quantizer::new(4, QuantMode::Linear, true)),
+        ("quantize q4-statistical (1M f32)", Quantizer::new(4, QuantMode::Statistical, false)),
+    ] {
+        let mut buf = base.clone();
+        bench(label, 4 * n, || {
+            buf.copy_from_slice(&base);
+            q.compress(&mut buf, 1024, 1024);
+        });
+    }
+
+    {
+        let t = TopK::new(0.01);
+        let mut buf = base.clone();
+        bench("top-k 1% (1M f32)", 4 * n, || {
+            buf.copy_from_slice(&base);
+            t.compress(&mut buf, 1, n);
+        });
+    }
+
+    {
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let mut ef = ErrorFeedback::new(1, 0.9);
+        let mut buf = base.clone();
+        bench("error feedback + q4 (1M f32)", 4 * n, || {
+            buf.copy_from_slice(&base);
+            ef.compress_with_feedback(0, &mut buf, 1, n, &q);
+        });
+    }
+
+    {
+        let k = 8;
+        let shard = n / 8;
+        let bufs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..shard).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let mut work = bufs.clone();
+        bench("ring all-reduce K=8 (128K f32 each)", 4 * n, || {
+            work.clone_from(&bufs);
+            ring_allreduce_mean(&mut work);
+        });
+        bench("quantized reduce (a2a+ag) K=8 q4", 4 * n, || {
+            work.clone_from(&bufs);
+            quantized_reduce_mean(&mut work, &q, 1, shard);
+        });
+        let t = TopK::new(0.05);
+        bench("sparse all-gather K=8 top-5%", 4 * n, || {
+            work.clone_from(&bufs);
+            sparse_allgather_mean(&mut work, &t, 1, shard);
+        });
+    }
+
+    {
+        let mut outer = NesterovOuter::new(0.7, 0.9, &[n]);
+        let mut theta = base.clone();
+        let psi: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-3).collect();
+        bench("outer Nesterov step (1M f32)", 12 * n, || {
+            outer.step_tensor(0, &mut theta, &psi);
+        });
+    }
+
+    {
+        let m = Mat {
+            rows: 64,
+            cols: 64,
+            data: (0..64 * 64).map(|_| rng.normal()).collect(),
+        };
+        bench("one-sided Jacobi SVD 64x64", 0, || {
+            let _ = svd(&m);
+        });
+    }
+
+    {
+        let a = base.clone();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        bench("dot product (1M f32)", 8 * n, || {
+            std::hint::black_box(muloco::util::dot(&a, &b));
+        });
+    }
+
+    // === end-to-end PJRT benches (paper Table 9 measurements) ========
+    let dir = std::path::PathBuf::from("artifacts/nano");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts missing — skipping PJRT end-to-end benches; \
+                  run `make artifacts`)");
+        return Ok(());
+    }
+    println!("\n== end-to-end PJRT benches (nano) ==");
+    let sess = Session::load(&dir)?;
+    let cfg_m = &sess.manifest.config;
+    let params = sess.init_params(0)?;
+    let tokens: Vec<i32> = (0..cfg_m.microbatch * cfg_m.seq_len)
+        .map(|i| (i * 31 % cfg_m.vocab) as i32)
+        .collect();
+    let (_, grads) = sess.fwd_grad(&params, &tokens)?;
+    bench("fwd_grad (microbatch 4x64)", 0, || {
+        let _ = sess.fwd_grad(&params, &tokens).unwrap();
+    });
+    let mu_state = sess.zero_muon_state();
+    bench("apply_muon (41.8K params)", 0, || {
+        let _ = sess.apply_muon(&params, &mu_state, &grads, 1.0, 0.05, 0.0)
+            .unwrap();
+    });
+    let aw_state = sess.zero_adamw_state();
+    bench("apply_adamw (41.8K params)", 0, || {
+        let _ = sess.apply_adamw(&params, &aw_state, &grads, 1.0, 0.05, 0.0)
+            .unwrap();
+    });
+    bench("eval_step (microbatch 4x64)", 0, || {
+        let _ = sess.eval_step(&params, &tokens).unwrap();
+    });
+
+    // one full outer round per method — the Table 9 end-to-end row
+    println!("\n== full training rounds (K=4, H=5, B=16) ==");
+    for method in [Method::Diloco, Method::Muloco] {
+        let mut cfg = TrainConfig::new("nano", method).tuned_outer(4);
+        cfg.total_steps = 5;
+        cfg.sync_interval = 5;
+        cfg.eval_every = 5;
+        cfg.eval_batches = 1;
+        cfg.global_batch = 16;
+        let t0 = Instant::now();
+        let r = train(&sess, &cfg)?;
+        let per_step = t0.elapsed().as_secs_f64() / 5.0;
+        println!(
+            "{:<10} {:>10.1} ms/global-step  ({:.0} tokens/s, {} B comm/worker)",
+            method.name(), per_step * 1e3,
+            (cfg.global_batch * 64) as f64 / per_step,
+            r.comm.bytes_per_worker
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Pseudogradient alignment & interference analysis (§4.2-4.3).
+//!
+//! Implements the quantities behind Figures 2-5/21 and the theory of
+//! Proposition 4.2:
+//! * cosine similarity between vectorized tensors (Fig 2/4),
+//! * the top-S interference gap G_S (Definition 4.1, Fig 3b),
+//! * Frobenius-norm traces of inner steps (Fig 5),
+//! * a numerical check of the nuclear-norm identity (Prop 4.2).
+
+use super::svd::{svd, Mat, Svd};
+use crate::util::{cosine, dot, norm};
+
+/// Definition 4.1: mean top-S spectral mass of the A_i minus the top-S
+/// spectral mass of their average.  >= 0 up to numerical noise; 0 means
+/// perfectly aligned dominant subspaces.
+pub fn interference_gap(mats: &[Mat], top_s: usize) -> f64 {
+    assert!(!mats.is_empty());
+    let (rows, cols) = (mats[0].rows, mats[0].cols);
+    let mut mean = Mat::zeros(rows, cols);
+    for m in mats {
+        assert_eq!((m.rows, m.cols), (rows, cols));
+        for (acc, x) in mean.data.iter_mut().zip(&m.data) {
+            *acc += x / mats.len() as f64;
+        }
+    }
+    let top = |m: &Mat| -> f64 { svd(m).s.iter().take(top_s).sum() };
+    let mean_mass: f64 =
+        mats.iter().map(|m| top(m)).sum::<f64>() / mats.len() as f64;
+    mean_mass - top(&mean)
+}
+
+/// Fraction-based convenience: S = ceil(frac * min(m, n)) (paper: 5%).
+pub fn interference_gap_frac(mats: &[Mat], frac: f64) -> f64 {
+    let r = mats[0].rows.min(mats[0].cols);
+    let s = ((frac * r as f64).ceil() as usize).clamp(1, r);
+    interference_gap(mats, s)
+}
+
+/// Cosine similarity between two flat f32 tensors (Fig 2/4 primitive).
+pub fn tensor_cosine(a: &[f32], b: &[f32]) -> f64 {
+    cosine(a, b)
+}
+
+/// Frobenius norm of a flat tensor (Fig 5 primitive).
+pub fn frob(a: &[f32]) -> f64 {
+    norm(a)
+}
+
+/// Summary stats over per-tensor cosines (the Fig 2 box plots).
+#[derive(Clone, Debug)]
+pub struct CosineStats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+pub fn cosine_stats(cosines: &[f64]) -> CosineStats {
+    let mean = crate::util::mean(cosines);
+    CosineStats {
+        mean,
+        min: cosines.iter().copied().fold(f64::INFINITY, f64::min),
+        max: cosines.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        std: crate::util::std_dev(cosines),
+    }
+}
+
+/// Proposition 4.2 verification: for Psi = (1/K) sum_k sum_h a_h psi_hk,
+/// check  ||Psi||_* = (sqrt(r)/K) sum rho * a_h * ||psi||_F  where rho is
+/// the cosine between psi and the polar factor Psi* = U V^T.
+/// Returns (lhs, rhs) so tests/experiments can assert closeness.
+pub fn nuclear_norm_identity(
+    steps: &[Vec<Mat>], // steps[k][h]
+    alphas: &[f64],     // per-h step sizes
+) -> (f64, f64) {
+    let k = steps.len();
+    let (rows, cols) = (steps[0][0].rows, steps[0][0].cols);
+    let r = rows.min(cols) as f64;
+    let mut psi = Mat::zeros(rows, cols);
+    for worker in steps {
+        for (h, m) in worker.iter().enumerate() {
+            for (acc, x) in psi.data.iter_mut().zip(&m.data) {
+                *acc += alphas[h] * x / k as f64;
+            }
+        }
+    }
+    let sv: Svd = svd(&psi);
+    let lhs: f64 = sv.s.iter().sum();
+    let polar = sv.polar_factor();
+    let polar_f32: Vec<f32> = polar.data.iter().map(|&x| x as f32).collect();
+    let mut rhs = 0.0;
+    for worker in steps {
+        for (h, m) in worker.iter().enumerate() {
+            let m_f32: Vec<f32> = m.data.iter().map(|&x| x as f32).collect();
+            let rho = {
+                let na = norm(&m_f32);
+                let nb = norm(&polar_f32);
+                if na == 0.0 || nb == 0.0 {
+                    0.0
+                } else {
+                    dot(&m_f32, &polar_f32) / (na * nb)
+                }
+            };
+            rhs += rho * alphas[h] * norm(&m_f32);
+        }
+    }
+    rhs *= r.sqrt() / k as f64;
+    (lhs, rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut r = Rng::new(seed);
+        Mat { rows, cols, data: (0..rows * cols).map(|_| r.normal()).collect() }
+    }
+
+    #[test]
+    fn identical_matrices_have_zero_gap() {
+        let a = random_mat(10, 8, 0);
+        let gap = interference_gap(&[a.clone(), a.clone(), a], 3);
+        assert!(gap.abs() < 1e-9, "{gap}");
+    }
+
+    #[test]
+    fn random_matrices_have_positive_gap() {
+        let mats: Vec<Mat> = (0..8).map(|i| random_mat(16, 16, i)).collect();
+        let gap = interference_gap(&mats, 2);
+        assert!(gap > 0.1, "{gap}");
+    }
+
+    #[test]
+    fn gap_grows_with_worker_count_for_random() {
+        // random (misaligned) updates: averaging K matrices shrinks the
+        // mean's spectrum like 1/sqrt(K) -> gap grows (the DiLoCo story)
+        let g = |k: u64| {
+            let mats: Vec<Mat> =
+                (0..k).map(|i| random_mat(20, 20, 100 + i)).collect();
+            interference_gap(&mats, 1)
+        };
+        assert!(g(16) > g(2), "{} vs {}", g(16), g(2));
+    }
+
+    #[test]
+    fn aligned_orthogonal_updates_have_small_gap() {
+        // same polar direction, different magnitudes (the Muon story)
+        let base = svd(&random_mat(12, 12, 7)).polar_factor();
+        let mats: Vec<Mat> = (1..=6)
+            .map(|i| {
+                let mut m = base.clone();
+                for x in m.data.iter_mut() {
+                    *x *= 1.0 + 0.01 * i as f64;
+                }
+                m
+            })
+            .collect();
+        let gap = interference_gap_frac(&mats, 0.25);
+        let rand_gap = interference_gap_frac(
+            &(0..6).map(|i| random_mat(12, 12, 50 + i)).collect::<Vec<_>>(),
+            0.25,
+        );
+        assert!(gap < 0.05 * rand_gap, "{gap} vs {rand_gap}");
+    }
+
+    #[test]
+    fn nuclear_identity_holds_random() {
+        let steps: Vec<Vec<Mat>> = (0..3)
+            .map(|k| (0..4).map(|h| random_mat(9, 7, 10 * k + h)).collect())
+            .collect();
+        let alphas = vec![0.1, 0.2, 0.15, 0.05];
+        let (lhs, rhs) = nuclear_norm_identity(&steps, &alphas);
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn nuclear_identity_orthonormal_case() {
+        // Corollary 4.3: orthonormal steps make ||psi||_F = sqrt(r), so
+        // ||Psi||_* = (r/K) sum rho a_h
+        let steps: Vec<Vec<Mat>> = (0..2)
+            .map(|k| {
+                (0..3)
+                    .map(|h| svd(&random_mat(8, 8, 7 * k + h)).polar_factor())
+                    .collect()
+            })
+            .collect();
+        let alphas = vec![0.3, 0.3, 0.3];
+        let (lhs, rhs) = nuclear_norm_identity(&steps, &alphas);
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn cosine_stats_summary() {
+        let s = cosine_stats(&[0.2, 0.4, 0.6]);
+        assert!((s.mean - 0.4).abs() < 1e-12);
+        assert_eq!(s.min, 0.2);
+        assert_eq!(s.max, 0.6);
+        assert!(s.std > 0.1);
+    }
+}

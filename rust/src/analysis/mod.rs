@@ -1,0 +1,8 @@
+//! Pseudogradient spectral/alignment analysis (paper §4.2-4.3).
+
+pub mod align;
+pub mod svd;
+
+pub use align::{cosine_stats, frob, interference_gap, interference_gap_frac,
+                nuclear_norm_identity, tensor_cosine, CosineStats};
+pub use svd::{nuclear_norm, singular_values, svd, Mat, Svd};

@@ -1,0 +1,304 @@
+//! Dense SVD substrate: one-sided Jacobi (Hestenes) rotation method.
+//!
+//! Needed by the pseudogradient spectral analysis (Figs 3/21, Def 4.1,
+//! Prop 4.2).  One-sided Jacobi is simple, numerically robust, and
+//! plenty fast for the <=256x256 matrices this reproduction handles.
+//! Returns full (U, S, V^T) so the orthogonal polar factor U V^T of
+//! Proposition 4.2 can be formed exactly.
+
+/// Column-major-free, row-major m x n matrix view helpers.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.at(i, j));
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// Result of `svd`: a = u * diag(s) * vt, with s descending.
+pub struct Svd {
+    pub u: Mat,  // m x r
+    pub s: Vec<f64>, // r
+    pub vt: Mat, // r x n
+}
+
+impl Svd {
+    /// The orthogonal polar factor Psi* = U V^T (Prop 4.2).
+    pub fn polar_factor(&self) -> Mat {
+        self.u.matmul(&self.vt)
+    }
+}
+
+/// One-sided Jacobi SVD of an m x n matrix (any aspect ratio).
+pub fn svd(a: &Mat) -> Svd {
+    // work on the tall orientation so columns are the rotated objects
+    let transposed = a.rows < a.cols;
+    let work = if transposed { a.transpose() } else { a.clone() };
+    let (m, n) = (work.rows, work.cols);
+    // column-major copy for cache-friendly column rotations
+    let mut w: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| work.at(i, j)).collect())
+        .collect();
+    let mut v = Mat::eye(n);
+
+    let eps = 1e-12;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    app += w[p][i] * w[p][i];
+                    aqq += w[q][i] * w[q][i];
+                    apq += w[p][i] * w[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation annihilating the (p,q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[p][i];
+                    let wq = w[q][i];
+                    w[p][i] = c * wp - s * wq;
+                    w[q][i] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    v.set(i, p, c * vp - s * vq);
+                    v.set(i, q, s * vp + c * vq);
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // singular values = column norms; U = normalized columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| w[j].iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a_, &b_| norms[b_].partial_cmp(&norms[a_]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Mat::zeros(n, n);
+    for (rank, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s.push(nj);
+        for i in 0..m {
+            u.set(i, rank, if nj > 1e-300 { w[j][i] / nj } else { 0.0 });
+        }
+        for i in 0..n {
+            vt.set(rank, i, v.at(i, j));
+        }
+    }
+
+    if transposed {
+        // a = (work)^T = (U S V^T)^T = V S U^T
+        let vt_t = vt.transpose(); // n x n -> columns are V rows... careful:
+        // new_u = V (n_a x r), new_vt = U^T (r x m_a_cols)
+        Svd { u: vt_t, s, vt: u.transpose() }
+    } else {
+        Svd { u, s, vt }
+    }
+}
+
+/// Singular values only (descending).
+pub fn singular_values(rows: usize, cols: usize, data: &[f32]) -> Vec<f64> {
+    svd(&Mat::from_f32(rows, cols, data)).s
+}
+
+/// Nuclear norm (sum of singular values).
+pub fn nuclear_norm(rows: usize, cols: usize, data: &[f32]) -> f64 {
+    singular_values(rows, cols, data).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut r = Rng::new(seed);
+        let data: Vec<f64> = (0..rows * cols).map(|_| r.normal()).collect();
+        Mat { rows, cols, data }
+    }
+
+    fn reconstruct(sv: &Svd) -> Mat {
+        let r = sv.s.len();
+        let mut us = Mat::zeros(sv.u.rows, r);
+        for i in 0..sv.u.rows {
+            for j in 0..r {
+                us.set(i, j, sv.u.at(i, j) * sv.s[j]);
+            }
+        }
+        us.matmul(&sv.vt)
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn reconstructs_square() {
+        let a = random_mat(12, 12, 0);
+        let sv = svd(&a);
+        assert_close(&reconstruct(&sv), &a, 1e-8);
+    }
+
+    #[test]
+    fn reconstructs_tall_and_wide() {
+        for (m, n, seed) in [(20, 7, 1), (7, 20, 2)] {
+            let a = random_mat(m, n, seed);
+            let sv = svd(&a);
+            assert_eq!(sv.s.len(), m.min(n).max(sv.s.len().min(m.min(n))));
+            assert_close(&reconstruct(&sv), &a, 1e-8);
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let a = random_mat(16, 9, 3);
+        let s = svd(&a).s;
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn matches_known_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, -5.0);
+        a.set(2, 2, 1.0);
+        let s = svd(&a).s;
+        assert!((s[0] - 5.0).abs() < 1e-10);
+        assert!((s[1] - 3.0).abs() < 1e-10);
+        assert!((s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn orthogonal_factors() {
+        let a = random_mat(10, 6, 4);
+        let sv = svd(&a);
+        let utu = sv.u.transpose().matmul(&sv.u);
+        let vvt = sv.vt.matmul(&sv.vt.transpose());
+        assert_close(&utu, &Mat::eye(6), 1e-9);
+        assert_close(&vvt, &Mat::eye(6), 1e-9);
+    }
+
+    #[test]
+    fn polar_factor_has_unit_singular_values() {
+        let a = random_mat(8, 8, 5);
+        let p = svd(&a).polar_factor();
+        let s = svd(&p).s;
+        for x in s {
+            assert!((x - 1.0).abs() < 1e-9, "{x}");
+        }
+    }
+
+    #[test]
+    fn nuclear_norm_of_orthogonal_is_rank() {
+        let a = random_mat(9, 9, 6);
+        let p = svd(&a).polar_factor();
+        let data: Vec<f32> = p.data.iter().map(|&x| x as f32).collect();
+        let nn = nuclear_norm(9, 9, &data);
+        assert!((nn - 9.0).abs() < 1e-4, "{nn}");
+    }
+
+    #[test]
+    fn frobenius_equals_l2_of_singvals() {
+        let a = random_mat(11, 5, 7);
+        let s = svd(&a).s;
+        let fro2: f64 = s.iter().map(|x| x * x).sum();
+        assert!((fro2.sqrt() - a.frob_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        let mut a = Mat::zeros(6, 4);
+        for i in 0..6 {
+            for j in 0..4 {
+                a.set(i, j, (i + 1) as f64 * (j + 1) as f64);
+            }
+        }
+        let s = svd(&a).s;
+        assert!(s[0] > 1.0);
+        for &x in &s[1..] {
+            assert!(x < 1e-9, "{x}");
+        }
+    }
+}

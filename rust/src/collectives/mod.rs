@@ -1,0 +1,313 @@
+//! Simulated communication collectives (paper §2 "Collectives for
+//! compressed communication").
+//!
+//! Workers are in-process buffers, so these collectives are *bit-exact
+//! simulations* of the dataflow — what matters for reproducing the
+//! paper's compression results is WHERE lossy steps happen:
+//!
+//! * `ring_allreduce_mean` — dense fp32 baseline; bandwidth-optimal
+//!   volume 2(K-1)/K * n per worker.
+//! * `quantized_reduce_mean` — the paper's all-to-all reduce-scatter +
+//!   ring all-gather with exactly TWO quantizations: each worker
+//!   quantizes its shard contribution before the all-to-all (#1); the
+//!   shard owner dequantizes all K pieces, reduces in fp32, and
+//!   requantizes before the all-gather (#2).  Net value semantics:
+//!   result = Q( mean_k Q(delta_k) ), identical on all workers, with
+//!   no per-hop error compounding (that's the point vs a ring).
+//! * `sparse_allgather_mean` — top-k path: one sparsification per
+//!   worker, then an all-gather (bandwidth grows with K) and an exact
+//!   fp32 mean.
+//!
+//! Every collective returns honest per-worker byte counts for netsim.
+
+use crate::compress::Compressor;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// bytes sent by each worker (symmetric collectives)
+    pub bytes_per_worker: usize,
+    /// sum over workers
+    pub total_bytes: usize,
+}
+
+impl CommStats {
+    fn symmetric(per_worker: usize, k: usize) -> CommStats {
+        CommStats { bytes_per_worker: per_worker, total_bytes: per_worker * k }
+    }
+
+    pub fn add(&mut self, other: CommStats) {
+        self.bytes_per_worker += other.bytes_per_worker;
+        self.total_bytes += other.total_bytes;
+    }
+}
+
+fn check_uniform(buffers: &[Vec<f32>]) -> usize {
+    let n = buffers.first().map(|b| b.len()).expect("no workers");
+    for b in buffers {
+        assert_eq!(b.len(), n, "ragged worker buffers");
+    }
+    n
+}
+
+/// Dense fp32 ring all-reduce (mean).  All buffers end equal to the
+/// element-wise mean.
+pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) -> CommStats {
+    let k = buffers.len();
+    let n = check_uniform(buffers);
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&mean);
+    }
+    // ring volume: reduce-scatter + all-gather, each (K-1)/K * 4n bytes
+    let per_worker = if k > 1 { 2 * (k - 1) * 4 * n / k } else { 0 };
+    CommStats::symmetric(per_worker, k)
+}
+
+/// All-to-all reduce-scatter + ring all-gather with two quantizations.
+/// `rows`/`cols` describe the tensor's 2-D view for row-wise modes.
+pub fn quantized_reduce_mean(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> CommStats {
+    let k = buffers.len();
+    let n = check_uniform(buffers);
+    // quantization #1: every worker compresses its contribution
+    let mut wire = 0usize;
+    for b in buffers.iter_mut() {
+        wire = compressor.compress(b, rows, cols);
+    }
+    // all-to-all reduce-scatter: shard owners reduce in fp32.
+    // in-process this is just the exact mean of the quantized values.
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    // quantization #2: requantize the reduced shard before all-gather
+    let _ = compressor.compress(&mut mean, rows, cols);
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&mean);
+    }
+    // volume: all-to-all sends (K-1)/K of the compressed tensor, the
+    // all-gather moves the same compressed volume back
+    let per_worker = if k > 1 { 2 * (k - 1) * wire / k } else { 0 };
+    CommStats::symmetric(per_worker, k)
+}
+
+/// Top-k path: sparsify once per worker, all-gather, exact fp32 mean.
+pub fn sparse_allgather_mean(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> CommStats {
+    let k = buffers.len();
+    let n = check_uniform(buffers);
+    let mut wire = 0usize;
+    for b in buffers.iter_mut() {
+        wire = compressor.compress(b, rows, cols);
+    }
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&mean);
+    }
+    // all-gather: every worker ships its compressed tensor to K-1 peers
+    let per_worker = if k > 1 { (k - 1) * wire } else { 0 };
+    CommStats::symmetric(per_worker, k)
+}
+
+/// A ring reduce with per-hop dequantize-reduce-quantize, provided to
+/// DEMONSTRATE the error-compounding the paper's all-to-all design
+/// avoids (used by tests and the compression_lab example, not by the
+/// coordinator).
+pub fn ring_quantized_reduce_compounding(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> CommStats {
+    let k = buffers.len();
+    let _n = check_uniform(buffers);
+    // simulate a ring pass: acc starts at worker 0, each hop adds the
+    // next worker's (quantized) contribution and requantizes
+    let mut acc = buffers[0].clone();
+    #[allow(unused_assignments)]
+    let mut wire = compressor.compress(&mut acc, rows, cols);
+    for b in buffers.iter().skip(1) {
+        let mut contrib = b.clone();
+        wire = compressor.compress(&mut contrib, rows, cols);
+        for (a, c) in acc.iter_mut().zip(&contrib) {
+            *a += c;
+        }
+        // the hop that compounds error:
+        wire = compressor.compress(&mut acc, rows, cols);
+    }
+    let inv = 1.0 / k as f32;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+    let _ = compressor.compress(&mut acc, rows, cols);
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+    let per_worker = if k > 1 { 2 * (k - 1) * wire / k } else { 0 };
+    CommStats::symmetric(per_worker, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QuantMode, Quantizer, TopK};
+    use crate::util::rng::Rng;
+
+    fn worker_buffers(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect()
+    }
+
+    fn exact_mean(buffers: &[Vec<f32>]) -> Vec<f32> {
+        let n = buffers[0].len();
+        let mut mean = vec![0.0f32; n];
+        for b in buffers {
+            for (m, x) in mean.iter_mut().zip(b) {
+                *m += x / buffers.len() as f32;
+            }
+        }
+        mean
+    }
+
+    #[test]
+    fn allreduce_computes_exact_mean() {
+        let mut bufs = worker_buffers(4, 100, 0);
+        let want = exact_mean(&bufs);
+        let stats = ring_allreduce_mean(&mut bufs);
+        for b in &bufs {
+            for (x, w) in b.iter().zip(&want) {
+                assert!((x - w).abs() < 1e-6);
+            }
+        }
+        assert_eq!(stats.bytes_per_worker, 2 * 3 * 400 / 4);
+    }
+
+    #[test]
+    fn workers_agree_after_quantized_reduce() {
+        let mut bufs = worker_buffers(8, 256, 1);
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        quantized_reduce_mean(&mut bufs, &q, 1, 256);
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+    }
+
+    #[test]
+    fn quantized_reduce_has_exactly_two_quant_errors() {
+        // 8-bit quantization: error must stay ~2 quantization steps,
+        // NOT grow with K (that's the all-to-all advantage)
+        for k in [2usize, 8, 16] {
+            let mut bufs = worker_buffers(k, 512, 2);
+            let want = exact_mean(&bufs);
+            let q = Quantizer::new(8, QuantMode::Linear, false);
+            quantized_reduce_mean(&mut bufs, &q, 1, 512);
+            let max_err = bufs[0]
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // ~range/255 per quantization, two of them
+            assert!(max_err < 0.12, "K={k}: {max_err}");
+        }
+    }
+
+    #[test]
+    fn ring_compounds_error_worse_than_all_to_all() {
+        let k = 16;
+        let base = worker_buffers(k, 1024, 3);
+        let want = exact_mean(&base);
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let mse = |bufs: &[Vec<f32>]| -> f64 {
+            bufs[0]
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let mut a2a = base.clone();
+        quantized_reduce_mean(&mut a2a, &q, 1, 1024);
+        let mut ring = base.clone();
+        ring_quantized_reduce_compounding(&mut ring, &q, 1, 1024);
+        assert!(mse(&a2a) < mse(&ring), "{} vs {}", mse(&a2a), mse(&ring));
+    }
+
+    #[test]
+    fn sparse_allgather_means_sparsified() {
+        let mut bufs = worker_buffers(4, 100, 4);
+        let t = TopK::new(0.1);
+        // expected: mean of individually-sparsified buffers
+        let mut expect = bufs.clone();
+        for b in expect.iter_mut() {
+            t.compress(b, 1, 100);
+        }
+        let want = exact_mean(&expect);
+        sparse_allgather_mean(&mut bufs, &t, 1, 100);
+        for (x, w) in bufs[0].iter().zip(&want) {
+            assert!((x - w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn topk_bandwidth_grows_with_k_quant_does_not() {
+        let n = 10_000;
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let t = TopK::new(0.05);
+        let stats = |k: usize, which: u8| -> usize {
+            let mut bufs = worker_buffers(k, n, 5);
+            match which {
+                0 => quantized_reduce_mean(&mut bufs, &q, 1, n).bytes_per_worker,
+                _ => sparse_allgather_mean(&mut bufs, &t, 1, n).bytes_per_worker,
+            }
+        };
+        // quant volume saturates at 2*wire; topk grows ~linearly in K
+        let q4 = stats(4, 0) as f64;
+        let q16 = stats(16, 0) as f64;
+        assert!(q16 / q4 < 1.5);
+        let t4 = stats(4, 1) as f64;
+        let t16 = stats(16, 1) as f64;
+        assert!(t16 / t4 > 3.0);
+    }
+
+    #[test]
+    fn single_worker_no_bytes() {
+        let mut bufs = worker_buffers(1, 64, 6);
+        let orig = bufs[0].clone();
+        let s = ring_allreduce_mean(&mut bufs);
+        assert_eq!(s.bytes_per_worker, 0);
+        assert_eq!(bufs[0], orig);
+    }
+}

@@ -1,0 +1,133 @@
+//! Error feedback (Algorithm 2, lines 13-17; Karimireddy et al. 2019).
+//!
+//! Per-worker, per-tensor residual accumulators:
+//!     E <- beta*E + Delta
+//!     send C(E)
+//!     E <- E - C(E)
+//! so only what was *not* communicated persists.  One `ErrorFeedback`
+//! instance per worker; the coordinator routes tensor index -> slot.
+
+use super::Compressor;
+
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    /// residual decay beta (Algorithm 2; 1.0 = classic EF)
+    pub beta: f32,
+    /// residual accumulators, one per tensor slot (lazy-initialized)
+    residuals: Vec<Option<Vec<f32>>>,
+}
+
+impl ErrorFeedback {
+    pub fn new(n_tensors: usize, beta: f32) -> ErrorFeedback {
+        ErrorFeedback { beta, residuals: vec![None; n_tensors] }
+    }
+
+    /// Fold `delta` through the EF accumulator and compressor.
+    /// On return `delta` holds the compressed (to-be-communicated)
+    /// value C(E); the residual keeps E - C(E).  Returns wire bytes.
+    pub fn compress_with_feedback(
+        &mut self,
+        slot: usize,
+        delta: &mut [f32],
+        rows: usize,
+        cols: usize,
+        compressor: &dyn Compressor,
+    ) -> usize {
+        let res = self.residuals[slot]
+            .get_or_insert_with(|| vec![0.0; delta.len()]);
+        assert_eq!(res.len(), delta.len(), "tensor slot shape changed");
+        // E <- beta*E + Delta  (computed into delta's buffer)
+        for (d, e) in delta.iter_mut().zip(res.iter_mut()) {
+            *e = self.beta * *e + *d;
+            *d = *e;
+        }
+        let bytes = compressor.compress(delta, rows, cols);
+        // E <- E - C(E)
+        for (d, e) in delta.iter().zip(res.iter_mut()) {
+            *e -= *d;
+        }
+        bytes
+    }
+
+    /// L2 norm of a slot's residual (diagnostics / tests).
+    pub fn residual_norm(&self, slot: usize) -> f64 {
+        match &self.residuals[slot] {
+            Some(r) => crate::util::norm(r),
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{NoCompression, TopK};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lossless_compressor_leaves_no_residual() {
+        let mut ef = ErrorFeedback::new(1, 1.0);
+        let mut x = vec![1.0f32, -2.0, 3.0];
+        ef.compress_with_feedback(0, &mut x, 1, 3, &NoCompression);
+        assert_eq!(x, vec![1.0, -2.0, 3.0]);
+        assert_eq!(ef.residual_norm(0), 0.0);
+    }
+
+    #[test]
+    fn residual_carries_dropped_mass() {
+        let mut ef = ErrorFeedback::new(1, 1.0);
+        let mut x = vec![10.0f32, 0.1, 0.2, 0.3];
+        ef.compress_with_feedback(0, &mut x, 1, 4, &TopK::new(0.25));
+        // only the 10.0 survives; the small entries persist in E
+        assert_eq!(x, vec![10.0, 0.0, 0.0, 0.0]);
+        let expected = (0.1f64 * 0.1 + 0.2 * 0.2 + 0.3 * 0.3).sqrt();
+        assert!((ef.residual_norm(0) - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dropped_mass_is_eventually_sent() {
+        // a constant small signal below the top-k threshold accumulates
+        // until EF pushes it through
+        let mut ef = ErrorFeedback::new(1, 1.0);
+        let mut total_sent = vec![0.0f64; 4];
+        for _ in 0..60 {
+            // sub-threshold signals at distinct rates; top-1 normally
+            // only ever sends the 1.0
+            let mut x = vec![1.0f32, 0.30, 0.35, 0.40];
+            ef.compress_with_feedback(0, &mut x, 1, 4, &TopK::new(0.25));
+            for (t, v) in total_sent.iter_mut().zip(&x) {
+                *t += *v as f64;
+            }
+        }
+        // without EF the small coordinates would send exactly 0; with
+        // EF their accumulated residuals get through periodically
+        for &sent in &total_sent[1..] {
+            assert!(sent > 1.0, "{total_sent:?}");
+        }
+    }
+
+    #[test]
+    fn beta_decays_residual() {
+        let mut ef = ErrorFeedback::new(1, 0.5);
+        // feed a one-off spike that never gets sent (keep=1 takes x[0])
+        let mut x = vec![100.0f32, 1.0];
+        ef.compress_with_feedback(0, &mut x, 1, 2, &TopK::new(0.5));
+        let r1 = ef.residual_norm(0);
+        for _ in 0..5 {
+            let mut x = vec![100.0f32, 0.0];
+            ef.compress_with_feedback(0, &mut x, 1, 2, &TopK::new(0.5));
+        }
+        // the 1.0 residual decays by beta each round until sent or tiny
+        assert!(ef.residual_norm(0) < r1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_change_is_rejected() {
+        let mut ef = ErrorFeedback::new(1, 1.0);
+        let mut a = vec![1.0f32; 4];
+        ef.compress_with_feedback(0, &mut a, 1, 4, &NoCompression);
+        let mut b = vec![1.0f32; 5];
+        ef.compress_with_feedback(0, &mut b, 1, 5, &NoCompression);
+    }
+}

@@ -1,0 +1,123 @@
+//! Pseudogradient compression: quantization, top-k, error feedback.
+//!
+//! Implements the compressors of the paper's §2/§6.3: linear and
+//! statistical quantization (global and row-wise) at 2/4/8 bits, and
+//! top-k magnitude sparsification, plus the error-feedback accumulator
+//! (Karimireddy et al. 2019) of Algorithm 2.
+//!
+//! Compressors work on the *decompressed value* semantics the simulated
+//! collectives need (quantize-then-dequantize in place) and separately
+//! report the exact wire size a real implementation would move, so the
+//! netsim layer can charge honest byte counts (including top-k's index
+//! overhead, which the paper calls out).
+
+pub mod error_feedback;
+pub mod quantize;
+pub mod topk;
+
+pub use error_feedback::ErrorFeedback;
+pub use quantize::{QuantMode, Quantizer};
+pub use topk::TopK;
+
+/// A lossy map applied to one tensor before communication.
+pub trait Compressor {
+    /// Replace `x` with its quantize/dequantize (or sparsify) image.
+    /// `rows`/`cols` give the tensor's 2-D view (rows=1 for vectors).
+    /// Returns the wire bytes a real send of the compressed form costs.
+    fn compress(&self, x: &mut [f32], rows: usize, cols: usize) -> usize;
+
+    /// Wire bytes for a tensor of `n` elements without running the
+    /// compressor (for analytic bandwidth models).
+    fn wire_bytes(&self, n: usize, rows: usize) -> usize;
+
+    fn name(&self) -> String;
+}
+
+/// The identity compressor (FP32 baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoCompression;
+
+impl Compressor for NoCompression {
+    fn compress(&self, _x: &mut [f32], _rows: usize, _cols: usize) -> usize {
+        self.wire_bytes(_x.len(), _rows)
+    }
+
+    fn wire_bytes(&self, n: usize, _rows: usize) -> usize {
+        4 * n
+    }
+
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+}
+
+/// Configuration enum used by the coordinator / CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Compression {
+    None,
+    Quant { bits: u32, mode: QuantMode, rowwise: bool },
+    TopK { frac: f64 },
+}
+
+impl Compression {
+    pub fn build(&self) -> Box<dyn Compressor + Send + Sync> {
+        match self {
+            Compression::None => Box::new(NoCompression),
+            Compression::Quant { bits, mode, rowwise } => {
+                Box::new(Quantizer::new(*bits, *mode, *rowwise))
+            }
+            Compression::TopK { frac } => Box::new(TopK::new(*frac)),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Compression> {
+        // forms: none | q<bits>-<linear|stat>[-rw] | topk<frac>
+        let s = s.trim();
+        if s == "none" || s == "fp32" {
+            return Ok(Compression::None);
+        }
+        if let Some(rest) = s.strip_prefix("topk") {
+            return Ok(Compression::TopK { frac: rest.parse()? });
+        }
+        if let Some(rest) = s.strip_prefix('q') {
+            let parts: Vec<&str> = rest.split('-').collect();
+            let bits: u32 = parts[0].parse()?;
+            let mode = match parts.get(1).copied().unwrap_or("linear") {
+                "linear" => QuantMode::Linear,
+                "stat" | "statistical" => QuantMode::Statistical,
+                other => anyhow::bail!("unknown quant mode {other:?}"),
+            };
+            let rowwise = parts.get(2) == Some(&"rw");
+            return Ok(Compression::Quant { bits, mode, rowwise });
+        }
+        anyhow::bail!("cannot parse compression spec {s:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert_eq!(
+            Compression::parse("q4-stat-rw").unwrap(),
+            Compression::Quant { bits: 4, mode: QuantMode::Statistical, rowwise: true }
+        );
+        assert_eq!(
+            Compression::parse("topk0.05").unwrap(),
+            Compression::TopK { frac: 0.05 }
+        );
+        assert!(Compression::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn identity_compressor_is_lossless() {
+        let mut x = vec![1.0f32, -2.5, 3.25];
+        let orig = x.clone();
+        let bytes = NoCompression.compress(&mut x, 1, 3);
+        assert_eq!(x, orig);
+        assert_eq!(bytes, 12);
+    }
+}

@@ -1,0 +1,254 @@
+//! Linear and statistical quantization, global or row-wise (§2, §6.3).
+//!
+//! * Linear: 2^bits levels uniformly spaced over [min, max] of the
+//!   quantization group (whole tensor, or each row).
+//! * Statistical: levels placed at the empirical quantiles of the
+//!   group, "assigning higher resolution to more frequently occurring
+//!   values" — implemented as mid-quantile codebook + nearest-level
+//!   encoding via binary search over the sorted codebook.
+//!
+//! Wire cost: n*bits/8 payload + per-group metadata (min/max for
+//! linear; the 2^bits-entry codebook for statistical).  Row-wise
+//! quantization pays metadata per row but (as the paper notes) gains
+//! parallelism and avoids cross-row statistics — we reproduce its
+//! accuracy behaviour here and its bandwidth in netsim.
+
+use super::Compressor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    Linear,
+    Statistical,
+}
+
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub mode: QuantMode,
+    pub rowwise: bool,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, mode: QuantMode, rowwise: bool) -> Quantizer {
+        assert!((1..=16).contains(&bits), "bits must be in 1..=16");
+        Quantizer { bits, mode, rowwise }
+    }
+
+    fn levels(&self) -> usize {
+        1usize << self.bits
+    }
+
+    fn quantize_group(&self, x: &mut [f32]) {
+        if x.is_empty() {
+            return;
+        }
+        match self.mode {
+            QuantMode::Linear => self.quantize_linear(x),
+            QuantMode::Statistical => self.quantize_statistical(x),
+        }
+    }
+
+    fn quantize_linear(&self, x: &mut [f32]) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in x.iter() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() || lo == hi {
+            // constant (or degenerate) group: single level reproduces it
+            return;
+        }
+        let levels = self.levels() as f32;
+        let scale = (hi - lo) / (levels - 1.0);
+        for v in x.iter_mut() {
+            let q = ((*v - lo) / scale).round().clamp(0.0, levels - 1.0);
+            *v = lo + q * scale;
+        }
+    }
+
+    fn quantize_statistical(&self, x: &mut [f32]) {
+        let levels = self.levels().min(x.len());
+        let mut sorted: Vec<f32> = x.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // mid-quantile codebook: level j at quantile (j + 0.5) / levels
+        let mut codebook: Vec<f32> = (0..levels)
+            .map(|j| {
+                let q = (j as f64 + 0.5) / levels as f64;
+                sorted[((q * sorted.len() as f64) as usize)
+                    .min(sorted.len() - 1)]
+            })
+            .collect();
+        codebook.dedup();
+        for v in x.iter_mut() {
+            *v = nearest(&codebook, *v);
+        }
+    }
+
+    fn metadata_bytes_per_group(&self) -> usize {
+        match self.mode {
+            QuantMode::Linear => 8, // f32 min + f32 max
+            QuantMode::Statistical => 4 * self.levels(), // codebook
+        }
+    }
+}
+
+/// Nearest value in a sorted codebook (binary search + neighbour check).
+fn nearest(codebook: &[f32], v: f32) -> f32 {
+    match codebook.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+        Ok(i) => codebook[i],
+        Err(i) => {
+            if i == 0 {
+                codebook[0]
+            } else if i >= codebook.len() {
+                codebook[codebook.len() - 1]
+            } else {
+                let lo = codebook[i - 1];
+                let hi = codebook[i];
+                if (v - lo).abs() <= (hi - v).abs() {
+                    lo
+                } else {
+                    hi
+                }
+            }
+        }
+    }
+}
+
+impl Compressor for Quantizer {
+    fn compress(&self, x: &mut [f32], rows: usize, cols: usize) -> usize {
+        if self.rowwise && rows > 1 {
+            debug_assert_eq!(rows * cols, x.len());
+            for r in 0..rows {
+                self.quantize_group(&mut x[r * cols..(r + 1) * cols]);
+            }
+        } else {
+            self.quantize_group(x);
+        }
+        self.wire_bytes(x.len(), rows)
+    }
+
+    fn wire_bytes(&self, n: usize, rows: usize) -> usize {
+        let groups = if self.rowwise { rows.max(1) } else { 1 };
+        n * self.bits as usize / 8 + groups * self.metadata_bytes_per_group()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "q{}-{}{}",
+            self.bits,
+            match self.mode {
+                QuantMode::Linear => "linear",
+                QuantMode::Statistical => "stat",
+            },
+            if self.rowwise { "-rw" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn linear_8bit_is_nearly_lossless() {
+        let mut x = gaussian(4096, 0);
+        let orig = x.clone();
+        Quantizer::new(8, QuantMode::Linear, false).compress(&mut x, 1, 4096);
+        let err: f32 = x.iter().zip(&orig).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        let range = orig.iter().fold(0.0f32, |m, v| m.max(v.abs())) * 2.0;
+        assert!(err <= range / 255.0 * 0.51 + 1e-6, "{err}");
+    }
+
+    #[test]
+    fn values_land_on_grid() {
+        let mut x = gaussian(512, 1);
+        Quantizer::new(2, QuantMode::Linear, false).compress(&mut x, 1, 512);
+        let mut distinct = x.clone();
+        distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        distinct.dedup();
+        assert!(distinct.len() <= 4, "{}", distinct.len());
+    }
+
+    #[test]
+    fn statistical_beats_linear_at_2bit_on_heavy_tails() {
+        // heavy-tailed data is where the paper sees statistical win
+        let mut r = Rng::new(2);
+        let orig: Vec<f32> = (0..8192)
+            .map(|_| {
+                let g = r.normal_f32();
+                g * g * g // cube for heavy tails
+            })
+            .collect();
+        let mse = |q: &Quantizer| {
+            let mut x = orig.clone();
+            let n = x.len();
+            q.compress(&mut x, 1, n);
+            x.iter().zip(&orig).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        let lin = mse(&Quantizer::new(2, QuantMode::Linear, false));
+        let stat = mse(&Quantizer::new(2, QuantMode::Statistical, false));
+        assert!(stat < lin, "stat {stat} vs lin {lin}");
+    }
+
+    #[test]
+    fn rowwise_respects_row_boundaries() {
+        // two rows with very different scales: row-wise must adapt
+        let rows = 2;
+        let cols = 256;
+        let mut x: Vec<f32> = Vec::new();
+        let mut r = Rng::new(3);
+        for _ in 0..cols {
+            x.push(r.normal_f32() * 1e-3);
+        }
+        for _ in 0..cols {
+            x.push(r.normal_f32() * 1e3);
+        }
+        let orig = x.clone();
+        Quantizer::new(4, QuantMode::Linear, true).compress(&mut x, rows, cols);
+        let err_small: f64 = x[..cols].iter().zip(&orig[..cols])
+            .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let mut xg = orig.clone();
+        Quantizer::new(4, QuantMode::Linear, false).compress(&mut xg, rows, cols);
+        let err_small_global: f64 = xg[..cols].iter().zip(&orig[..cols])
+            .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(err_small < err_small_global * 1e-3,
+                "{err_small} vs {err_small_global}");
+    }
+
+    #[test]
+    fn constant_tensor_roundtrips() {
+        let mut x = vec![0.75f32; 100];
+        Quantizer::new(2, QuantMode::Linear, false).compress(&mut x, 1, 100);
+        assert!(x.iter().all(|&v| v == 0.75));
+        let mut y = vec![0.75f32; 100];
+        Quantizer::new(2, QuantMode::Statistical, false).compress(&mut y, 1, 100);
+        assert!(y.iter().all(|&v| v == 0.75));
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        assert_eq!(q.wire_bytes(1000, 10), 500 + 8);
+        let qr = Quantizer::new(4, QuantMode::Linear, true);
+        assert_eq!(qr.wire_bytes(1000, 10), 500 + 80);
+        let qs = Quantizer::new(2, QuantMode::Statistical, false);
+        assert_eq!(qs.wire_bytes(1000, 1), 250 + 16);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut x = gaussian(1024, 4);
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        q.compress(&mut x, 1, 1024);
+        let once = x.clone();
+        q.compress(&mut x, 1, 1024);
+        assert_eq!(x, once);
+    }
+}

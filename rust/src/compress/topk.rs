@@ -1,0 +1,122 @@
+//! Top-k magnitude sparsification (§2, §6.3).
+//!
+//! Keeps the k% largest-magnitude entries; zeros the rest.  The wire
+//! format must also carry the sparsity pattern, so the true compression
+//! ratio is worse than the sparsity fraction (4 value bytes + 4 index
+//! bytes per survivor) — the overhead the paper uses to argue 2-bit
+//! quantization beats 5-10% top-k.
+
+use super::Compressor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    /// fraction of entries kept, in (0, 1]
+    pub frac: f64,
+}
+
+impl TopK {
+    pub fn new(frac: f64) -> TopK {
+        assert!(frac > 0.0 && frac <= 1.0, "frac must be in (0,1]");
+        TopK { frac }
+    }
+
+    fn keep_count(&self, n: usize) -> usize {
+        ((n as f64 * self.frac).round() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, x: &mut [f32], _rows: usize, _cols: usize) -> usize {
+        let n = x.len();
+        let k = self.keep_count(n);
+        if k == n {
+            return self.wire_bytes(n, 1);
+        }
+        // threshold via select_nth on |x| (O(n) average)
+        let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        let idx = n - k;
+        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        let thresh = mags[idx];
+        // keep strictly-above first, then fill ties deterministically
+        let mut kept = 0usize;
+        for v in x.iter() {
+            if v.abs() > thresh {
+                kept += 1;
+            }
+        }
+        let mut ties_left = k.saturating_sub(kept);
+        for v in x.iter_mut() {
+            let a = v.abs();
+            if a > thresh {
+                continue;
+            }
+            if a == thresh && ties_left > 0 {
+                ties_left -= 1;
+                continue;
+            }
+            *v = 0.0;
+        }
+        self.wire_bytes(n, 1)
+    }
+
+    fn wire_bytes(&self, n: usize, _rows: usize) -> usize {
+        // value + index per kept entry (the paper's sparsity-pattern cost)
+        8 * self.keep_count(n)
+    }
+
+    fn name(&self) -> String {
+        format!("topk{}", self.frac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exactly_k() {
+        let mut r = Rng::new(0);
+        let mut x: Vec<f32> = (0..1000).map(|_| r.normal_f32()).collect();
+        TopK::new(0.1).compress(&mut x, 1, 1000);
+        let nnz = x.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nnz, 100);
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let mut x = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        TopK::new(0.5).compress(&mut x, 1, 6);
+        assert_eq!(x, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn full_fraction_is_identity() {
+        let mut x = vec![1.0f32, -2.0, 0.0, 3.0];
+        let orig = x.clone();
+        TopK::new(1.0).compress(&mut x, 1, 4);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn handles_ties() {
+        let mut x = vec![1.0f32; 10];
+        TopK::new(0.3).compress(&mut x, 1, 10);
+        assert_eq!(x.iter().filter(|v| **v != 0.0).count(), 3);
+    }
+
+    #[test]
+    fn wire_bytes_include_indices() {
+        let t = TopK::new(0.01);
+        // 1% of 10_000 = 100 kept * 8 bytes
+        assert_eq!(t.wire_bytes(10_000, 1), 800);
+    }
+
+    #[test]
+    fn tiny_tensor_keeps_at_least_one() {
+        let mut x = vec![0.5f32, -0.1];
+        TopK::new(0.01).compress(&mut x, 1, 2);
+        assert_eq!(x.iter().filter(|v| **v != 0.0).count(), 1);
+        assert_eq!(x[0], 0.5);
+    }
+}

@@ -1,0 +1,269 @@
+//! Training configuration: the knobs of Algorithms 1 & 2.
+
+use crate::compress::Compression;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// data-parallel AdamW baseline (no outer optimizer)
+    DpAdamw,
+    /// data-parallel Muon baseline
+    DpMuon,
+    /// DiLoCo: AdamW inner + Nesterov outer
+    Diloco,
+    /// MuLoCo: Muon inner + Nesterov outer (the paper's contribution)
+    Muloco,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dp-adamw" | "adamw" => Method::DpAdamw,
+            "dp-muon" | "muon" => Method::DpMuon,
+            "diloco" => Method::Diloco,
+            "muloco" => Method::Muloco,
+            other => anyhow::bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::DpAdamw => "DP-AdamW",
+            Method::DpMuon => "DP-Muon",
+            Method::Diloco => "DiLoCo",
+            Method::Muloco => "MuLoCo",
+        }
+    }
+
+    pub fn is_local_update(&self) -> bool {
+        matches!(self, Method::Diloco | Method::Muloco)
+    }
+
+    pub fn uses_muon(&self) -> bool {
+        matches!(self, Method::DpMuon | Method::Muloco)
+    }
+
+    /// Paper Fig 9: parameter-copy memory complexity.  AdamW keeps
+    /// theta+g+m+v (4x); Muon keeps theta+g+mom (3x) on hidden params.
+    pub fn memory_copies(&self) -> usize {
+        if self.uses_muon() {
+            3
+        } else {
+            4
+        }
+    }
+}
+
+/// Default peak LR per (scale, inner optimizer), from mini-sweeps on
+/// this testbed.  Mirrors the paper's Table 12 pattern: AdamW's optimal
+/// LR falls steeply with scale while Muon's decays much more slowly.
+pub fn default_lr(model: &str, method: Method) -> f64 {
+    let (adamw_mult, muon_mult) = match model {
+        "nano" => (1.0, 1.0),
+        "micro" => (0.7, 0.85),
+        "tiny" => (0.5, 0.7),
+        "small" => (0.35, 0.6),
+        "med" => (0.25, 0.5),
+        "big" => (0.18, 0.45),
+        _ => (0.25, 0.5), // e2e and custom configs
+    };
+    if method.uses_muon() {
+        1.0e-1 * muon_mult
+    } else {
+        3.0e-2 * adamw_mult
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifact config name (nano..big, e2e)
+    pub model: String,
+    pub method: Method,
+    /// number of DiLoCo workers K (1 for DP baselines)
+    pub workers: usize,
+    /// synchronization interval H (ignored by DP baselines)
+    pub sync_interval: u64,
+    /// total inner optimization steps (global steps)
+    pub total_steps: u64,
+    /// global batch in sequences; each worker gets batch/workers
+    pub global_batch: usize,
+    /// peak inner learning rate
+    pub lr: f64,
+    /// decoupled weight decay lambda
+    pub weight_decay: f64,
+    /// linear warmup steps
+    pub warmup_steps: u64,
+    /// cosine decay floor as a fraction of peak (paper: 0.1)
+    pub lr_floor_frac: f64,
+    /// outer (Nesterov) learning rate
+    pub outer_lr: f64,
+    /// outer Nesterov momentum
+    pub outer_momentum: f64,
+    /// pseudogradient compression
+    pub compression: Compression,
+    /// error feedback on/off + beta (Algorithm 2)
+    pub error_feedback: bool,
+    pub ef_beta: f32,
+    /// streaming partitions J (1 = classic DiLoCo; 3 = paper's setting)
+    pub streaming_partitions: usize,
+    /// evaluate every this many steps (also the smoother boundary)
+    pub eval_every: u64,
+    /// number of eval microbatches per evaluation
+    pub eval_batches: usize,
+    /// data / init seed
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Sensible defaults mirroring the paper's 416M base setting,
+    /// scaled to this testbed (H=30, K=8, cosine to 0.1x).
+    pub fn new(model: &str, method: Method) -> TrainConfig {
+        TrainConfig {
+            model: model.to_string(),
+            method,
+            workers: if method.is_local_update() { 8 } else { 1 },
+            sync_interval: 30,
+            total_steps: 240,
+            global_batch: 32,
+            lr: default_lr(model, method),
+            weight_decay: 0.1,
+            warmup_steps: 24,
+            lr_floor_frac: 0.1,
+            outer_lr: match method {
+                Method::Muloco => 0.7,
+                _ => 0.6,
+            },
+            outer_momentum: match method {
+                Method::Muloco => 0.6,
+                _ => 0.8,
+            },
+            compression: Compression::None,
+            error_feedback: false,
+            ef_beta: 0.9,
+            streaming_partitions: 1,
+            eval_every: 30,
+            eval_batches: 8,
+            seed: 17,
+        }
+    }
+
+    /// Outer-LR/momentum defaults as a function of K (the Fig 22
+    /// sweep's optima: eta_out and mu rise with worker count).
+    pub fn tuned_outer(mut self, k: usize) -> TrainConfig {
+        self.workers = k;
+        let (eta, mu) = match (self.method, k) {
+            (Method::Muloco, 1) => (0.7, 0.6),
+            (Method::Muloco, 2) => (0.9, 0.7),
+            (Method::Muloco, 4) => (0.9, 0.8),
+            (Method::Muloco, 8) => (0.9, 0.8),
+            (Method::Muloco, _) => (1.0, 0.9),
+            (_, 1) => (0.6, 0.8),
+            (_, 2) => (0.9, 0.8),
+            (_, 4) => (0.9, 0.8),
+            (_, 8) => (0.9, 0.9),
+            (_, _) => (1.0, 0.9),
+        };
+        self.outer_lr = eta;
+        self.outer_momentum = mu;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.workers == 0 {
+            anyhow::bail!("workers must be >= 1");
+        }
+        if self.method.is_local_update() && self.sync_interval == 0 {
+            anyhow::bail!("sync_interval must be >= 1");
+        }
+        if !self.method.is_local_update() && self.workers != 1 {
+            anyhow::bail!(
+                "DP baselines model the all-reduce as a single logical \
+                 worker; set workers=1 (got {})",
+                self.workers
+            );
+        }
+        if self.global_batch % self.workers != 0 {
+            anyhow::bail!("global_batch must divide by workers");
+        }
+        if self.streaming_partitions > 1
+            && self.sync_interval % self.streaming_partitions as u64 != 0
+        {
+            anyhow::bail!("streaming partitions J must divide H");
+        }
+        Ok(())
+    }
+
+    /// Cosine schedule with linear warmup, decaying to lr_floor_frac*lr
+    /// (paper: decay to 0.1x of max).
+    pub fn lr_at(&self, step: u64) -> f64 {
+        if step < self.warmup_steps {
+            return self.lr * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let t = t.clamp(0.0, 1.0);
+        let floor = self.lr * self.lr_floor_frac;
+        floor + 0.5 * (self.lr - floor) * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("muloco").unwrap(), Method::Muloco);
+        assert_eq!(Method::parse("DP-AdamW").unwrap(), Method::DpAdamw);
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn memory_copies_match_fig9() {
+        assert_eq!(Method::Diloco.memory_copies(), 4);
+        assert_eq!(Method::Muloco.memory_copies(), 3);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let mut c = TrainConfig::new("nano", Method::Muloco);
+        c.total_steps = 100;
+        c.warmup_steps = 10;
+        c.lr = 1.0;
+        assert!(c.lr_at(0) <= 0.2);
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-9);
+        assert!(c.lr_at(50) < 1.0);
+        let final_lr = c.lr_at(100);
+        assert!((final_lr - 0.1).abs() < 1e-6, "{final_lr}");
+        // monotone decay after warmup
+        let mut prev = c.lr_at(10);
+        for s in 11..=100 {
+            let lr = c.lr_at(s);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = TrainConfig::new("nano", Method::Muloco);
+        assert!(c.validate().is_ok());
+        c.global_batch = 31;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::new("nano", Method::DpAdamw);
+        c.workers = 4;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::new("nano", Method::Diloco);
+        c.streaming_partitions = 4; // does not divide H=30
+        assert!(c.validate().is_err());
+        c.streaming_partitions = 3;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn tuned_outer_rises_with_k() {
+        let c1 = TrainConfig::new("nano", Method::Muloco).tuned_outer(1);
+        let c16 = TrainConfig::new("nano", Method::Muloco).tuned_outer(16);
+        assert!(c16.outer_lr > c1.outer_lr);
+        assert!(c16.outer_momentum > c1.outer_momentum);
+    }
+}

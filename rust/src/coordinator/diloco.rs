@@ -1,0 +1,319 @@
+//! The DiLoCo / MuLoCo training loop (Algorithms 1 & 2).
+//!
+//! K logical workers each own a full parameter replica and inner
+//! optimizer state; every H steps the coordinator assembles the
+//! pseudogradient Psi = mean_k(theta_global - theta_k), optionally
+//! compresses it (with error feedback) through the simulated
+//! collective, applies the outer Nesterov step, and re-broadcasts the
+//! new global parameters.  DP baselines are the same loop with K = 1
+//! and no outer optimizer.
+//!
+//! Streaming DiLoCo (J > 1): parameter partitions are synchronized in
+//! a staggered schedule — partition j at steps where
+//! step mod H == (j+1) * H/J mod H — dividing peak bandwidth by J.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::config::{Method, TrainConfig};
+use super::outer::NesterovOuter;
+use crate::collectives::{quantized_reduce_mean, ring_allreduce_mean,
+                         sparse_allgather_mean, CommStats};
+use crate::compress::{Compression, ErrorFeedback};
+use crate::data::Corpus;
+use crate::evalloss::Smoother;
+use crate::runtime::{ExecStats, Session, Tensors};
+
+/// Everything a run produces (curves, counters, headline stats).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// (step, eval loss) at evaluation boundaries
+    pub eval_curve: Vec<(u64, f64)>,
+    /// (step, eval next-token accuracy)
+    pub acc_curve: Vec<(u64, f64)>,
+    /// (step, mean train loss across workers)
+    pub train_curve: Vec<(u64, f64)>,
+    /// time-weighted-EMA smoothed final eval loss (Appendix F)
+    pub smoothed_final: f64,
+    /// raw final eval loss (for the Fig 24 comparison)
+    pub raw_final: f64,
+    /// final eval accuracy
+    pub final_acc: f64,
+    /// communication accounting over the whole run
+    pub comm: CommStats,
+    /// runtime execution stats (per-executable wall time)
+    pub exec: ExecStats,
+    pub wall_secs: f64,
+    /// tokens consumed
+    pub tokens: u64,
+    /// the final global parameters (for downstream task evaluation)
+    pub final_params: Option<Tensors>,
+}
+
+/// Per-worker replica state.
+struct Worker {
+    params: Tensors,
+    opt_state: Tensors,
+}
+
+/// Gradient accumulation over `batch_seqs` sequences from `shard`.
+/// Returns (mean loss, mean grads).
+pub fn accumulate_grads(
+    sess: &Session,
+    params: &Tensors,
+    shard: &mut crate::data::Shard<'_>,
+    batch_seqs: usize,
+) -> Result<(f64, Tensors)> {
+    let cfg = &sess.manifest.config;
+    let micro = cfg.microbatch;
+    assert!(batch_seqs % micro == 0,
+            "batch ({batch_seqs}) must be a multiple of microbatch ({micro})");
+    let n_micro = batch_seqs / micro;
+    let mut total_loss = 0.0f64;
+    let mut acc: Option<Tensors> = None;
+    for _ in 0..n_micro {
+        let tokens = shard.next_batch(micro, cfg.seq_len);
+        let (loss, grads) = sess.fwd_grad(params, &tokens)?;
+        total_loss += loss as f64;
+        match acc.as_mut() {
+            None => acc = Some(grads),
+            Some(a) => {
+                for (at, gt) in a.iter_mut().zip(&grads) {
+                    for (x, y) in at.iter_mut().zip(gt) {
+                        *x += y;
+                    }
+                }
+            }
+        }
+    }
+    let mut grads = acc.expect("n_micro >= 1");
+    let inv = 1.0 / n_micro as f32;
+    for g in grads.iter_mut() {
+        for x in g.iter_mut() {
+            *x *= inv;
+        }
+    }
+    Ok((total_loss / n_micro as f64, grads))
+}
+
+fn apply_inner(
+    sess: &Session,
+    method: Method,
+    worker: &mut Worker,
+    grads: &Tensors,
+    t: f32,
+    lr: f32,
+    wd: f32,
+) -> Result<()> {
+    let (p, s) = if method.uses_muon() {
+        sess.apply_muon(&worker.params, &worker.opt_state, grads, t, lr, wd)?
+    } else {
+        sess.apply_adamw(&worker.params, &worker.opt_state, grads, t, lr, wd)?
+    };
+    worker.params = p;
+    worker.opt_state = s;
+    Ok(())
+}
+
+fn zero_state(sess: &Session, method: Method) -> Tensors {
+    if method.uses_muon() {
+        sess.zero_muon_state()
+    } else {
+        sess.zero_adamw_state()
+    }
+}
+
+/// Evaluate `params` on `batches` pre-generated eval microbatches.
+pub fn evaluate(sess: &Session, params: &Tensors, batches: &[Vec<i32>])
+                -> Result<(f64, f64)> {
+    let mut loss = 0.0;
+    let mut acc = 0.0;
+    for b in batches {
+        let (l, a) = sess.eval_step(params, b)?;
+        loss += l as f64;
+        acc += a as f64;
+    }
+    Ok((loss / batches.len() as f64, acc / batches.len() as f64))
+}
+
+/// Streaming schedule: which partitions sync at this step?
+/// With J partitions and interval H, partition j (0-based) syncs at
+/// steps where step mod H == ((j+1) * H/J) mod H.
+fn partitions_due(step: u64, h: u64, j_parts: usize) -> Vec<usize> {
+    if j_parts <= 1 {
+        return if step % h == 0 { vec![0] } else { vec![] };
+    }
+    let stride = h / j_parts as u64;
+    (0..j_parts)
+        .filter(|j| step % h == ((*j as u64 + 1) * stride) % h)
+        .collect()
+}
+
+/// Run one full training job.  This is the production entry point used
+/// by the CLI, the experiments and the examples.
+pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
+    cfg.validate()?;
+    let t_start = Instant::now();
+    sess.reset_stats();
+    let man = &sess.manifest;
+    let model = &man.config;
+    let corpus = Corpus::new(model.vocab, cfg.seed);
+
+    // fixed eval batches from the held-out stream (comparable across runs)
+    let mut eval_shard = corpus.eval_shard();
+    let eval_batches: Vec<Vec<i32>> = (0..cfg.eval_batches)
+        .map(|_| eval_shard.next_batch(model.microbatch, model.seq_len))
+        .collect();
+
+    // global replica + K workers
+    let mut theta = sess.init_params(cfg.seed as u32)?;
+    let k = cfg.workers;
+    let mut workers: Vec<Worker> = (0..k)
+        .map(|_| Worker { params: theta.clone(), opt_state: zero_state(sess, cfg.method) })
+        .collect();
+    let mut shards: Vec<_> = (0..k as u64).map(|w| corpus.shard(w)).collect();
+
+    // outer optimizer over per-tensor flat shapes
+    let shapes: Vec<usize> = man.params.iter().map(|p| p.size).collect();
+    let mut outer = NesterovOuter::new(cfg.outer_lr, cfg.outer_momentum, &shapes);
+
+    // streaming partition -> tensor indices
+    let j_parts = cfg.streaming_partitions.max(1);
+    let partition_tensors: Vec<Vec<usize>> = if j_parts == 1 {
+        vec![(0..man.params.len()).collect()]
+    } else {
+        // map the manifest's 3-way layer partition onto J groups
+        (0..j_parts)
+            .map(|j| {
+                man.params
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.partition * j_parts / man.n_partitions() == j)
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .collect()
+    };
+
+    let compressor = cfg.compression.build();
+    let mut efs: Vec<ErrorFeedback> = (0..k)
+        .map(|_| ErrorFeedback::new(man.params.len(), cfg.ef_beta))
+        .collect();
+
+    let per_worker_batch = cfg.global_batch / k;
+    let mut comm = CommStats::default();
+    let mut train_curve = Vec::new();
+    let mut eval_curve = Vec::new();
+    let mut acc_curve = Vec::new();
+    let mut tokens = 0u64;
+
+    for step in 1..=cfg.total_steps {
+        let lr = cfg.lr_at(step - 1) as f32;
+        let wd = cfg.weight_decay as f32;
+        let mut step_loss = 0.0;
+        for (w, shard) in workers.iter_mut().zip(shards.iter_mut()) {
+            let (loss, grads) =
+                accumulate_grads(sess, &w.params, shard, per_worker_batch)?;
+            step_loss += loss / k as f64;
+            apply_inner(sess, cfg.method, w, &grads, step as f32, lr, wd)?;
+            tokens += (per_worker_batch * model.seq_len) as u64;
+        }
+        train_curve.push((step, step_loss));
+
+        // --- synchronization (Algorithm 1 lines 11-13 / Algorithm 2) ---
+        if cfg.method.is_local_update() {
+            for part in partitions_due(step, cfg.sync_interval, j_parts) {
+                for &ti in &partition_tensors[part] {
+                    let spec = &man.params[ti];
+                    let (rows, cols) = match spec.shape.len() {
+                        2 => (spec.shape[0], spec.shape[1]),
+                        _ => (1, spec.size),
+                    };
+                    // per-worker deltas for this tensor
+                    let mut deltas: Vec<Vec<f32>> = workers
+                        .iter()
+                        .map(|w| {
+                            theta[ti]
+                                .iter()
+                                .zip(&w.params[ti])
+                                .map(|(g, l)| g - l)
+                                .collect()
+                        })
+                        .collect();
+                    // compression (+EF) per Algorithm 2 lines 13-19
+                    if cfg.error_feedback && cfg.compression != Compression::None {
+                        for (wk, d) in deltas.iter_mut().enumerate() {
+                            efs[wk].compress_with_feedback(
+                                ti, d, rows, cols, compressor.as_ref());
+                        }
+                    }
+                    // collective: value semantics + byte accounting
+                    let stats = match (&cfg.compression, cfg.error_feedback) {
+                        (Compression::None, _) => ring_allreduce_mean(&mut deltas),
+                        (Compression::TopK { .. }, true) => {
+                            // already sparsified through EF; exact
+                            // all-gather mean, but charge top-k wire bytes
+                            let mut s = sparse_allgather_mean(
+                                &mut deltas, &crate::compress::NoCompression,
+                                rows, cols);
+                            let wire = compressor.wire_bytes(spec.size, rows);
+                            s.bytes_per_worker = (k - 1) * wire;
+                            s.total_bytes = k * s.bytes_per_worker;
+                            s
+                        }
+                        (Compression::TopK { .. }, false) =>
+                            sparse_allgather_mean(
+                                &mut deltas, compressor.as_ref(), rows, cols),
+                        // with EF the contributions are already quantized
+                        // (#1); quantization is idempotent on its own
+                        // grid, so the collective's first hop is a no-op
+                        // and the reduction requantize is hop #2.
+                        (Compression::Quant { .. }, _) =>
+                            quantized_reduce_mean(
+                                &mut deltas, compressor.as_ref(), rows, cols),
+                    };
+                    comm.add(stats);
+                    // outer update with Psi = the reduced delta
+                    let psi = &deltas[0];
+                    outer.step_tensor(ti, &mut theta[ti], psi);
+                    // broadcast: workers resume from the new global params
+                    for w in workers.iter_mut() {
+                        w.params[ti].copy_from_slice(&theta[ti]);
+                    }
+                }
+            }
+        }
+
+        if step % cfg.eval_every == 0 || step == cfg.total_steps {
+            if !cfg.method.is_local_update() {
+                // DP: the worker IS the global model.  Clone only at
+                // eval boundaries — a per-step full-parameter copy was
+                // measurable on large configs (EXPERIMENTS.md §Perf).
+                theta = workers[0].params.clone();
+            }
+            let (l, a) = evaluate(sess, &theta, &eval_batches)?;
+            eval_curve.push((step, l));
+            acc_curve.push((step, a));
+        }
+    }
+
+    let smoother = Smoother::new(0.2, cfg.eval_every);
+    let smoothed_final = smoother.final_loss(&eval_curve);
+    let raw_final = eval_curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN);
+    let final_acc = acc_curve.last().map(|(_, a)| *a).unwrap_or(f64::NAN);
+
+    Ok(RunResult {
+        eval_curve,
+        acc_curve,
+        train_curve,
+        smoothed_final,
+        raw_final,
+        final_acc,
+        comm,
+        exec: sess.stats(),
+        wall_secs: t_start.elapsed().as_secs_f64(),
+        tokens,
+        final_params: Some(theta),
+    })
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: the paper's system contribution (Algorithms 1 & 2).
+
+pub mod config;
+pub mod diloco;
+pub mod outer;
+pub mod probe;
+
+pub use config::{Method, TrainConfig};
+pub use diloco::{accumulate_grads, evaluate, train, RunResult};
+pub use outer::NesterovOuter;
+pub use probe::{branch_capture, dp_warmstart, BranchCapture, Checkpoint};

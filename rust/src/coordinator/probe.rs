@@ -1,0 +1,161 @@
+//! Pseudogradient capture for the §4.2/§6.1 analysis experiments
+//! (Figures 2, 3, 4, 5, 21).
+//!
+//! Protocol (paper §6.1): train a DP baseline to a checkpoint, then
+//! resume with K workers (inheriting optimizer state) for H steps,
+//! saving every per-step inner-optimizer update psi and the final
+//! per-worker weight differences Delta_k for the hidden matrices.
+
+use anyhow::Result;
+
+use super::config::Method;
+use super::diloco::accumulate_grads;
+use crate::data::Corpus;
+use crate::runtime::{Session, Tensors};
+
+/// A DP-trained checkpoint to branch from.
+pub struct Checkpoint {
+    pub theta: Tensors,
+    pub opt_state: Tensors,
+    pub steps: u64,
+}
+
+/// Train a DP baseline (K=1) for `steps` to create the branch point.
+pub fn dp_warmstart(
+    sess: &Session,
+    method: Method,
+    steps: u64,
+    batch_seqs: usize,
+    lr: f32,
+    wd: f32,
+    seed: u64,
+) -> Result<Checkpoint> {
+    let corpus = Corpus::new(sess.manifest.config.vocab, seed);
+    let mut shard = corpus.shard(0);
+    let mut theta = sess.init_params(seed as u32)?;
+    let mut state = if method.uses_muon() {
+        sess.zero_muon_state()
+    } else {
+        sess.zero_adamw_state()
+    };
+    for t in 1..=steps {
+        let (_, grads) = accumulate_grads(sess, &theta, &mut shard, batch_seqs)?;
+        let out = if method.uses_muon() {
+            sess.apply_muon(&theta, &state, &grads, t as f32, lr, wd)?
+        } else {
+            sess.apply_adamw(&theta, &state, &grads, t as f32, lr, wd)?
+        };
+        theta = out.0;
+        state = out.1;
+    }
+    Ok(Checkpoint { theta, opt_state: state, steps })
+}
+
+/// Everything captured from one K-worker branch of H local steps.
+pub struct BranchCapture {
+    /// indices (into the manifest param list) of the captured tensors
+    pub hidden_idx: Vec<usize>,
+    /// [worker][tensor] final weight difference Delta_k = theta0 - theta_k
+    pub worker_delta: Vec<Vec<Vec<f32>>>,
+    /// [worker][step][tensor] per-step optimizer update psi (pre - post)
+    pub step_updates: Vec<Vec<Vec<Vec<f32>>>>,
+    /// [tensor] pseudogradient Psi = mean_k Delta_k
+    pub pseudograd: Vec<Vec<f32>>,
+}
+
+/// Branch `k` workers from a checkpoint for `h` steps, capturing the
+/// hidden-matrix updates.  The global batch is fixed (`batch_seqs`
+/// total, split across workers) so runs are FLOP-matched across K.
+#[allow(clippy::too_many_arguments)]
+pub fn branch_capture(
+    sess: &Session,
+    method: Method,
+    ckpt: &Checkpoint,
+    k: usize,
+    h: u64,
+    batch_seqs: usize,
+    lr: f32,
+    wd: f32,
+    seed: u64,
+) -> Result<BranchCapture> {
+    let man = &sess.manifest;
+    let hidden_idx = man.muon_hidden_indices.clone();
+    let corpus = Corpus::new(man.config.vocab, seed);
+    let per_worker = batch_seqs / k;
+    assert!(per_worker >= man.config.microbatch,
+            "batch too small for {k} workers");
+
+    let mut worker_delta = Vec::with_capacity(k);
+    let mut step_updates = Vec::with_capacity(k);
+    for w in 0..k {
+        let mut shard = corpus.shard(w as u64);
+        let mut theta = ckpt.theta.clone();
+        let mut state = ckpt.opt_state.clone();
+        let mut this_worker_steps = Vec::with_capacity(h as usize);
+        for t in 1..=h {
+            let (_, grads) =
+                accumulate_grads(sess, &theta, &mut shard, per_worker)?;
+            let out = if method.uses_muon() {
+                sess.apply_muon(&theta, &state, &grads,
+                                (ckpt.steps + t) as f32, lr, wd)?
+            } else {
+                sess.apply_adamw(&theta, &state, &grads,
+                                 (ckpt.steps + t) as f32, lr, wd)?
+            };
+            // psi_t = theta_{t-1} - theta_t on the hidden matrices
+            let psi: Vec<Vec<f32>> = hidden_idx
+                .iter()
+                .map(|&i| {
+                    theta[i]
+                        .iter()
+                        .zip(&out.0[i])
+                        .map(|(a, b)| a - b)
+                        .collect()
+                })
+                .collect();
+            this_worker_steps.push(psi);
+            theta = out.0;
+            state = out.1;
+        }
+        let delta: Vec<Vec<f32>> = hidden_idx
+            .iter()
+            .map(|&i| {
+                ckpt.theta[i]
+                    .iter()
+                    .zip(&theta[i])
+                    .map(|(a, b)| a - b)
+                    .collect()
+            })
+            .collect();
+        worker_delta.push(delta);
+        step_updates.push(this_worker_steps);
+    }
+
+    // Psi = mean_k Delta_k per tensor
+    let n_t = hidden_idx.len();
+    let mut pseudograd = Vec::with_capacity(n_t);
+    for ti in 0..n_t {
+        let len = worker_delta[0][ti].len();
+        let mut psi = vec![0.0f32; len];
+        for wd_ in &worker_delta {
+            for (p, x) in psi.iter_mut().zip(&wd_[ti]) {
+                *p += x / k as f32;
+            }
+        }
+        pseudograd.push(psi);
+    }
+
+    Ok(BranchCapture { hidden_idx, worker_delta, step_updates, pseudograd })
+}
+
+impl BranchCapture {
+    /// Tensor shape lookup for SVD-based analyses.
+    pub fn tensor_shape(&self, sess: &Session, t: usize) -> (usize, usize) {
+        let spec = &sess.manifest.params[self.hidden_idx[t]];
+        (spec.shape[0], spec.shape[1])
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.hidden_idx.len()
+    }
+}

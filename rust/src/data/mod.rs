@@ -1,0 +1,221 @@
+//! Synthetic pre-training corpus: a Zipfian hidden-Markov source.
+//!
+//! Stand-in for the paper's Nemotron-CC corpus (see DESIGN.md §2): a
+//! stationary, learnable token stream with a non-trivial entropy floor —
+//! exactly the properties the scaling-law fits (joint irreducible loss)
+//! and eval-loss comparisons rely on.
+//!
+//! Generative process: an S-state Markov chain with sticky transitions;
+//! each state emits tokens from its own Zipf(s) distribution over a
+//! state-specific permutation of the vocabulary.  A model must infer the
+//! latent state from context to predict well, so loss improves smoothly
+//! with capacity and data, while the emission entropy bounds it below.
+//!
+//! Sharding follows the paper's setup: worker k draws from an
+//! independent stream `D_k` (deterministic fork of the corpus seed);
+//! held-out evaluation uses a reserved stream that training never sees.
+
+pub mod tasks;
+
+use crate::util::rng::{zipf_cdf, Rng};
+
+/// Reserved stream tags (never collide with worker ids).
+const EVAL_TAG: u64 = u64::MAX;
+const TASK_TAG: u64 = u64::MAX - 1;
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub n_states: usize,
+    seed: u64,
+    /// per-state transition CDFs (S x S)
+    trans_cdf: Vec<Vec<f64>>,
+    /// per-state emission CDFs over the permuted vocab (S x V)
+    emit_cdf: Vec<Vec<f64>>,
+    /// per-state vocab permutation (S x V)
+    perm: Vec<Vec<u32>>,
+}
+
+impl Corpus {
+    /// `zipf_s` controls per-state emission entropy (higher = peakier =
+    /// lower floor); `self_bias` is the probability mass on staying in
+    /// the current state (stickier = easier latent-state inference).
+    pub fn new(vocab: usize, seed: u64) -> Corpus {
+        Corpus::with_params(vocab, seed, 8, 1.2, 0.85)
+    }
+
+    pub fn with_params(
+        vocab: usize,
+        seed: u64,
+        n_states: usize,
+        zipf_s: f64,
+        self_bias: f64,
+    ) -> Corpus {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let base_emit = zipf_cdf(vocab, zipf_s);
+        let mut perm = Vec::with_capacity(n_states);
+        let mut emit_cdf = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            let mut p: Vec<u32> = (0..vocab as u32).collect();
+            rng.shuffle(&mut p);
+            perm.push(p);
+            emit_cdf.push(base_emit.clone());
+        }
+        let mut trans_cdf = Vec::with_capacity(n_states);
+        for s in 0..n_states {
+            let mut probs = vec![0.0f64; n_states];
+            for (t, item) in probs.iter_mut().enumerate() {
+                *item = if t == s {
+                    self_bias
+                } else {
+                    (1.0 - self_bias) / (n_states - 1) as f64
+                        * (0.5 + rng.uniform())
+                };
+            }
+            let total: f64 = probs.iter().sum();
+            let mut acc = 0.0;
+            let cdf = probs
+                .iter()
+                .map(|p| {
+                    acc += p / total;
+                    acc
+                })
+                .collect();
+            trans_cdf.push(cdf);
+        }
+        Corpus { vocab, n_states, seed, trans_cdf, emit_cdf, perm }
+    }
+
+    /// An independent sampling stream for worker `k` (the shard `D_k`).
+    pub fn shard(&self, worker: u64) -> Shard<'_> {
+        let mut root = Rng::new(self.seed);
+        let mut rng = root.fork(worker.wrapping_add(1));
+        let state = rng.below(self.n_states);
+        Shard { corpus: self, rng, state }
+    }
+
+    /// The held-out evaluation stream (disjoint from all worker shards).
+    pub fn eval_shard(&self) -> Shard<'_> {
+        self.shard(EVAL_TAG)
+    }
+
+    /// Stream reserved for synthetic downstream tasks (tab3).
+    pub fn task_shard(&self) -> Shard<'_> {
+        self.shard(TASK_TAG)
+    }
+
+    /// Monte-Carlo estimate of the per-token entropy floor in nats
+    /// (conditional entropy of the emission given the latent state —
+    /// the loss an oracle that tracks the state perfectly would reach).
+    pub fn entropy_floor(&self) -> f64 {
+        // emissions share the Zipf shape, so compute it once
+        let cdf = &self.emit_cdf[0];
+        let total = *cdf.last().unwrap();
+        let mut h = 0.0;
+        let mut prev = 0.0;
+        for &c in cdf {
+            let p = (c - prev) / total;
+            if p > 0.0 {
+                h -= p * p.ln();
+            }
+            prev = c;
+        }
+        h
+    }
+}
+
+/// A deterministic sampling stream over a corpus.
+pub struct Shard<'a> {
+    corpus: &'a Corpus,
+    rng: Rng,
+    state: usize,
+}
+
+impl<'a> Shard<'a> {
+    /// Sample `b` sequences of `t` tokens as a flat row-major batch.
+    pub fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            // each sequence starts from the stream's rolling state,
+            // mimicking contiguous document sampling
+            for _ in 0..t {
+                let tok = self.next_token();
+                out.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn next_token(&mut self) -> i32 {
+        let c = self.corpus;
+        self.state = self.rng.categorical(&c.trans_cdf[self.state]);
+        let rank = self.rng.categorical(&c.emit_cdf[self.state]);
+        c.perm[self.state][rank] as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_shard() {
+        let c = Corpus::new(256, 7);
+        let a = c.shard(3).next_batch(2, 32);
+        let b = c.shard(3).next_batch(2, 32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shards_are_distinct() {
+        let c = Corpus::new(256, 7);
+        let a = c.shard(0).next_batch(1, 64);
+        let b = c.shard(1).next_batch(1, 64);
+        assert_ne!(a, b);
+        let e = c.eval_shard().next_batch(1, 64);
+        assert_ne!(a, e);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = Corpus::new(100, 1);
+        for tok in c.shard(0).next_batch(4, 128) {
+            assert!((0..100).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn zipfian_marginals() {
+        // the most frequent token should dominate a uniform share
+        let c = Corpus::new(64, 2);
+        let toks = c.shard(0).next_batch(16, 256);
+        let mut counts = vec![0usize; 64];
+        for t in &toks {
+            counts[*t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(counts[0] > 2 * toks.len() / 64);
+    }
+
+    #[test]
+    fn entropy_floor_sane() {
+        let c = Corpus::new(256, 3);
+        let h = c.entropy_floor();
+        // strictly between 0 and log(vocab)
+        assert!(h > 0.5 && h < (256f64).ln(), "{h}");
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // neighbouring tokens should be statistically dependent:
+        // P(same-state pair) makes repeated tokens far more likely than
+        // under an i.i.d. shuffle
+        let c = Corpus::with_params(64, 5, 4, 1.5, 0.9);
+        let toks = c.shard(0).next_batch(1, 4096);
+        let bigram_same = toks.windows(2).filter(|w| w[0] == w[1]).count();
+        let mut shuffled = toks.clone();
+        Rng::new(1).shuffle(&mut shuffled);
+        let shuf_same = shuffled.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(bigram_same > shuf_same, "{bigram_same} vs {shuf_same}");
+    }
+}

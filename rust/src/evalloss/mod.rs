@@ -1,0 +1,140 @@
+//! Robust evaluation-loss estimate (Appendix F, Eqs 10-11; Fig 24).
+//!
+//! Raw final validation losses are noisy (the last eval batch may be
+//! unusually easy/hard), so every comparison, HP selection and
+//! scaling-law fit in the paper — and in this reproduction — uses a
+//! *time-weighted EMA* of the validation trajectory, filtered to
+//! synchronization boundaries:
+//!
+//!   s_1 = l_1,   s_j = a_j * l_j + (1 - a_j) * s_{j-1}
+//!   a_j = 1 - exp(-alpha * dt_j / H)
+//!
+//! with base smoothing alpha = 0.2 (effective window ~5-6 sync rounds
+//! at the nominal spacing dt = H).
+
+/// One validation measurement: (training step, loss).
+pub type LossPoint = (u64, f64);
+
+#[derive(Clone, Copy, Debug)]
+pub struct Smoother {
+    /// base smoothing parameter (paper: 0.2)
+    pub alpha: f64,
+    /// synchronization interval H used for boundary filtering
+    pub h: u64,
+}
+
+impl Default for Smoother {
+    fn default() -> Self {
+        Smoother { alpha: 0.2, h: 30 }
+    }
+}
+
+impl Smoother {
+    pub fn new(alpha: f64, h: u64) -> Smoother {
+        Smoother { alpha, h }
+    }
+
+    /// Keep only measurements at sync boundaries (step % H == 0).
+    pub fn filter_to_boundaries(&self, traj: &[LossPoint]) -> Vec<LossPoint> {
+        traj.iter()
+            .copied()
+            .filter(|(t, _)| *t % self.h == 0)
+            .collect()
+    }
+
+    /// The full smoothed trajectory over boundary-filtered points.
+    pub fn smooth(&self, traj: &[LossPoint]) -> Vec<LossPoint> {
+        let pts = self.filter_to_boundaries(traj);
+        let mut out = Vec::with_capacity(pts.len());
+        let mut s = f64::NAN;
+        let mut prev_t = 0u64;
+        for (i, (t, l)) in pts.iter().enumerate() {
+            if i == 0 {
+                s = *l;
+            } else {
+                let dt = (t - prev_t) as f64;
+                let a = 1.0 - (-self.alpha * dt / self.h as f64).exp();
+                s = a * l + (1.0 - a) * s;
+            }
+            prev_t = *t;
+            out.push((*t, s));
+        }
+        out
+    }
+
+    /// The smoothed final loss L-hat — the headline statistic.
+    pub fn final_loss(&self, traj: &[LossPoint]) -> f64 {
+        self.smooth(traj).last().map(|(_, s)| *s).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn constant_trajectory_is_identity() {
+        let s = Smoother::default();
+        let traj: Vec<LossPoint> = (0..10).map(|i| (i * 30, 2.5)).collect();
+        assert!((s.final_loss(&traj) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nominal_spacing_coefficient_matches_paper() {
+        // at dt = H and alpha = 0.2 the paper reports a~0.181
+        let a = 1.0 - (-0.2f64).exp();
+        assert!((a - 0.181).abs() < 5e-3, "{a}");
+    }
+
+    #[test]
+    fn filters_non_boundary_points() {
+        let s = Smoother::new(0.2, 30);
+        let traj = vec![(0, 3.0), (15, 999.0), (30, 2.0), (45, 999.0), (60, 1.0)];
+        let f = s.filter_to_boundaries(&traj);
+        assert_eq!(f, vec![(0, 3.0), (30, 2.0), (60, 1.0)]);
+    }
+
+    #[test]
+    fn smoothing_rejects_last_point_noise() {
+        // a noisy final eval must not dominate L-hat (the Fig 24 story)
+        let mut rng = Rng::new(0);
+        let mut traj: Vec<LossPoint> = (0..40)
+            .map(|i| (i * 30, 2.0 + 0.01 * rng.normal()))
+            .collect();
+        let clean = Smoother::default().final_loss(&traj);
+        traj.last_mut().unwrap().1 = 2.8; // outlier final batch
+        let noisy_raw = traj.last().unwrap().1;
+        let noisy_smoothed = Smoother::default().final_loss(&traj);
+        assert!((noisy_smoothed - clean).abs() < 0.2 * (noisy_raw - clean).abs());
+    }
+
+    #[test]
+    fn irregular_spacing_weighted_correctly() {
+        // a gap of 2H should weight the new point as two H-steps would
+        let s = Smoother::new(0.2, 30);
+        let a1 = 1.0 - (-0.2f64 * 2.0).exp();
+        let traj = vec![(0, 1.0), (60, 2.0)];
+        let got = s.final_loss(&traj);
+        let want = a1 * 2.0 + (1.0 - a1) * 1.0;
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let s = Smoother::default();
+        assert!(s.final_loss(&[]).is_nan());
+        assert_eq!(s.final_loss(&[(0, 4.2)]), 4.2);
+    }
+
+    #[test]
+    fn tracks_decreasing_trend() {
+        let s = Smoother::default();
+        let traj: Vec<LossPoint> =
+            (0..100).map(|i| (i * 30, 5.0 - 0.03 * i as f64)).collect();
+        let fin = s.final_loss(&traj);
+        let raw = traj.last().unwrap().1;
+        // lags slightly behind but close to the trend
+        assert!(fin > raw && fin < raw + 0.6, "{fin} vs {raw}");
+    }
+}

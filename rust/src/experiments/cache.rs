@@ -1,0 +1,156 @@
+//! Disk cache for training runs: `experiment all` is incremental and
+//! experiments share underlying runs.
+//!
+//! Key = a canonical string of the full TrainConfig; value = the run's
+//! summary + curves, serialized with the in-house JSON substrate.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::compress::Compression;
+use crate::coordinator::{train, RunResult, TrainConfig};
+use crate::runtime::Session;
+use crate::util::json::Json;
+
+/// The persisted slice of a RunResult.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub smoothed_final: f64,
+    pub raw_final: f64,
+    pub final_acc: f64,
+    pub tokens: u64,
+    pub bytes_per_worker: u64,
+    pub eval_curve: Vec<(u64, f64)>,
+    pub train_curve: Vec<(u64, f64)>,
+    pub wall_secs: f64,
+}
+
+impl RunSummary {
+    fn from_result(r: &RunResult) -> RunSummary {
+        RunSummary {
+            smoothed_final: r.smoothed_final,
+            raw_final: r.raw_final,
+            final_acc: r.final_acc,
+            tokens: r.tokens,
+            bytes_per_worker: r.comm.bytes_per_worker as u64,
+            eval_curve: r.eval_curve.clone(),
+            train_curve: r.train_curve.clone(),
+            wall_secs: r.wall_secs,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let curve = |c: &[(u64, f64)]| {
+            Json::Arr(c.iter()
+                .map(|(s, l)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*l)]))
+                .collect())
+        };
+        let mut m = BTreeMap::new();
+        m.insert("smoothed_final".into(), Json::Num(self.smoothed_final));
+        m.insert("raw_final".into(), Json::Num(self.raw_final));
+        m.insert("final_acc".into(), Json::Num(self.final_acc));
+        m.insert("tokens".into(), Json::Num(self.tokens as f64));
+        m.insert("bytes_per_worker".into(), Json::Num(self.bytes_per_worker as f64));
+        m.insert("eval_curve".into(), curve(&self.eval_curve));
+        m.insert("train_curve".into(), curve(&self.train_curve));
+        m.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<RunSummary> {
+        let curve = |key: &str| -> Result<Vec<(u64, f64)>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr()?;
+                    Ok((p[0].as_f64()? as u64, p[1].as_f64()?))
+                })
+                .collect()
+        };
+        Ok(RunSummary {
+            smoothed_final: v.get("smoothed_final")?.as_f64()?,
+            raw_final: v.get("raw_final")?.as_f64()?,
+            final_acc: v.get("final_acc")?.as_f64()?,
+            tokens: v.get("tokens")?.as_f64()? as u64,
+            bytes_per_worker: v.get("bytes_per_worker")?.as_f64()? as u64,
+            eval_curve: curve("eval_curve")?,
+            train_curve: curve("train_curve")?,
+            wall_secs: v.get("wall_secs")?.as_f64()?,
+        })
+    }
+}
+
+/// Canonical cache key for a config (every field that affects the math).
+pub fn config_key(cfg: &TrainConfig) -> String {
+    let comp = match &cfg.compression {
+        Compression::None => "none".to_string(),
+        Compression::Quant { bits, mode, rowwise } => format!(
+            "q{bits}-{:?}-{rowwise}", mode),
+        Compression::TopK { frac } => format!("topk{frac}"),
+    };
+    format!(
+        "{}|{:?}|K{}|H{}|S{}|B{}|lr{}|wd{}|wu{}|fl{}|olr{}|om{}|{}|ef{}-{}|J{}|ev{}x{}|s{}",
+        cfg.model, cfg.method, cfg.workers, cfg.sync_interval,
+        cfg.total_steps, cfg.global_batch, cfg.lr, cfg.weight_decay,
+        cfg.warmup_steps, cfg.lr_floor_frac, cfg.outer_lr,
+        cfg.outer_momentum, comp, cfg.error_feedback, cfg.ef_beta,
+        cfg.streaming_partitions, cfg.eval_every, cfg.eval_batches, cfg.seed
+    )
+}
+
+pub struct RunCache {
+    dir: PathBuf,
+}
+
+impl RunCache {
+    pub fn new(dir: &str) -> Result<RunCache> {
+        fs::create_dir_all(dir)?;
+        Ok(RunCache { dir: PathBuf::from(dir) })
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        // FNV-1a over the key keeps filenames short and stable
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.dir.join(format!("{h:016x}.json"))
+    }
+
+    pub fn get(&self, cfg: &TrainConfig) -> Option<RunSummary> {
+        let key = config_key(cfg);
+        let path = self.path_for(&key);
+        let text = fs::read_to_string(path).ok()?;
+        let v = Json::parse(&text).ok()?;
+        if v.get("key").ok()?.as_str().ok()? != key {
+            return None; // hash collision — treat as miss
+        }
+        RunSummary::from_json(v.get("run").ok()?).ok()
+    }
+
+    pub fn put(&self, cfg: &TrainConfig, run: &RunSummary) -> Result<()> {
+        let key = config_key(cfg);
+        let mut m = BTreeMap::new();
+        m.insert("key".into(), Json::Str(key.clone()));
+        m.insert("run".into(), run.to_json());
+        fs::write(self.path_for(&key), Json::Obj(m).to_string())?;
+        Ok(())
+    }
+
+    /// Train (or fetch) a run.
+    pub fn run(&self, sess: &Session, cfg: &TrainConfig) -> Result<RunSummary> {
+        if let Some(hit) = self.get(cfg) {
+            return Ok(hit);
+        }
+        eprintln!("[cache] training {}", config_key(cfg));
+        let result = train(sess, cfg)?;
+        let summary = RunSummary::from_result(&result);
+        self.put(cfg, &summary)?;
+        Ok(summary)
+    }
+}

@@ -1,0 +1,238 @@
+//! Critical batch size & iso-loss efficiency (Figs 1b/12/13/18).
+//!
+//! FLOP-matched batch sweeps: at each batch size B the step count is
+//! rescaled so total tokens are constant, then B_opt / B_crit follow
+//! the paper's 1% tolerance rule.
+
+use anyhow::Result;
+
+use super::{Ctx, Preset};
+use crate::coordinator::{Method, TrainConfig};
+use crate::scaling::{critical_batch_1pct, fit_pure, iso_loss_efficiency,
+                     PowerLaw};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_f, Table};
+
+fn sweep_methods(ctx: &Ctx) -> Vec<(Method, usize)> {
+    match ctx.preset {
+        Preset::Fast => vec![
+            (Method::DpAdamw, 1), (Method::DpMuon, 1),
+            (Method::Diloco, 1), (Method::Muloco, 1),
+        ],
+        Preset::Full => vec![
+            (Method::DpAdamw, 1), (Method::DpMuon, 1),
+            (Method::Diloco, 1), (Method::Muloco, 1),
+            (Method::Diloco, 8), (Method::Muloco, 8),
+        ],
+    }
+}
+
+fn batches(ctx: &Ctx, k: usize) -> Vec<usize> {
+    let all: Vec<usize> = match ctx.preset {
+        Preset::Fast => vec![16, 32, 64, 128],
+        Preset::Full => vec![8, 16, 32, 64, 128, 256],
+    };
+    // each worker needs at least one microbatch (4 sequences)
+    all.into_iter().filter(|b| b / k >= 4).collect()
+}
+
+/// FLOP-matched sweep on `model` with a fixed token budget.
+/// Returns (B, final loss) points per method.
+pub fn batch_sweep(ctx: &Ctx, model: &str, token_budget: f64)
+                   -> Result<Vec<((Method, usize), Vec<(f64, f64)>)>> {
+    let sess = ctx.session(model)?;
+    let seq = sess.manifest.config.seq_len;
+    let mut out = Vec::new();
+    for (method, k) in sweep_methods(ctx) {
+        let mut pts = Vec::new();
+        for b in batches(ctx, k) {
+            let steps = (token_budget / (b * seq) as f64).ceil() as u64;
+            let mut cfg = TrainConfig::new(model, method);
+            cfg.total_steps = steps.max(20);
+            cfg.global_batch = b;
+            cfg.sync_interval = 15.min(cfg.total_steps);
+            cfg.eval_every = cfg.sync_interval;
+            cfg.eval_batches = 4;
+            cfg.warmup_steps = cfg.total_steps / 10;
+            if method.is_local_update() {
+                cfg = cfg.tuned_outer(k);
+            }
+            // sqrt LR scaling from the B=32 reference (the paper
+            // re-tunes per B; this is the standard heuristic stand-in)
+            cfg.lr *= ((b as f64) / 32.0).sqrt();
+            let run = ctx.cache.run(&sess, &cfg)?;
+            pts.push((b as f64, run.smoothed_final));
+        }
+        out.push(((method, k), pts));
+    }
+    Ok(out)
+}
+
+fn base_token_budget(ctx: &Ctx, model: &str) -> Result<f64> {
+    let sess = ctx.session(model)?;
+    let m = &sess.manifest.config;
+    let tpp = match ctx.preset {
+        Preset::Fast => 6.0,
+        Preset::Full => 20.0,
+    };
+    Ok(tpp * m.param_count as f64)
+}
+
+/// Fig 12: loss vs batch size per method; B_opt and B_crit markers.
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let model = ctx.base_model();
+    let budget = base_token_budget(ctx, model)?;
+    let sweeps = batch_sweep(ctx, model, budget)?;
+    let mut t = Table::new(
+        "Fig 12 — final eval loss vs global batch (FLOP-matched)",
+        &["method", "K", "losses per B", "B_opt", "B_crit"],
+    );
+    for ((method, k), pts) in &sweeps {
+        let (b_opt, _, b_crit) = critical_batch_1pct(pts);
+        let losses = pts.iter()
+            .map(|(b, l)| format!("B{}:{:.3}", *b as u64, l))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(vec![
+            method.name().into(), k.to_string(), losses,
+            (b_opt as u64).to_string(), (b_crit as u64).to_string(),
+        ]);
+    }
+    t.emit("fig12")
+}
+
+/// Fig 1b: the iso-FLOP Pareto view — loss vs FLOPs/batch (a proxy for
+/// sequential training time), with B_opt/B_crit called out.
+pub fn fig1b(ctx: &Ctx) -> Result<()> {
+    let model = ctx.base_model();
+    let budget = base_token_budget(ctx, model)?;
+    let sweeps = batch_sweep(ctx, model, budget)?;
+    let mut t = Table::new(
+        "Fig 1b — FLOP-matched performance/time Pareto (higher B = fewer sequential steps)",
+        &["method", "K", "best loss", "loss at B_crit", "B_crit",
+          "seq steps at B_crit"],
+    );
+    let sess = ctx.session(model)?;
+    let seq = sess.manifest.config.seq_len;
+    let mut best: Option<(String, f64, f64)> = None;
+    for ((method, k), pts) in &sweeps {
+        let (_, l_opt, b_crit) = critical_batch_1pct(pts);
+        let l_at_crit = pts.iter()
+            .find(|(b, _)| *b == b_crit)
+            .map(|(_, l)| *l)
+            .unwrap_or(f64::NAN);
+        let steps = budget / (b_crit * seq as f64);
+        t.row(vec![
+            method.name().into(), k.to_string(),
+            fmt_f(l_opt, 4), fmt_f(l_at_crit, 4),
+            (b_crit as u64).to_string(), format!("{steps:.0}"),
+        ]);
+        let label = format!("{} K={}", method.name(), k);
+        let better = match &best {
+            None => true,
+            Some((_, bl, bs)) => l_at_crit <= *bl * 1.002 && steps < *bs,
+        };
+        if better {
+            best = Some((label, l_at_crit, steps));
+        }
+    }
+    if let Some((label, l, s)) = best {
+        println!("Pareto pick: {label} (loss {l:.4} at {s:.0} sequential steps)\n");
+    }
+    t.emit("fig1b")
+}
+
+/// Fig 13 / Fig 18: CBS power laws B_crit(D) = a D^alpha and the
+/// iso-loss training-time efficiency vs DP AdamW (Eq 6 decomposition).
+pub fn fig13(ctx: &Ctx) -> Result<()> {
+    // CBS at two (fast) or three (full) data scales
+    let scales: Vec<&str> = match ctx.preset {
+        Preset::Fast => vec!["nano", "micro"],
+        Preset::Full => vec!["nano", "micro", "tiny"],
+    };
+    let mut cbs_points: Vec<((Method, usize), Vec<(f64, f64)>)> = sweep_methods(ctx)
+        .into_iter()
+        .filter(|(_, k)| *k == 1)
+        .map(|mk| (mk, Vec::new()))
+        .collect();
+    for model in &scales {
+        let budget = base_token_budget(ctx, model)?;
+        let sweeps = batch_sweep(ctx, model, budget)?;
+        for ((method, k), pts) in sweeps {
+            if k != 1 {
+                continue;
+            }
+            let (_, _, b_crit) = critical_batch_1pct(&pts);
+            if let Some(slot) = cbs_points.iter_mut()
+                .find(|((m, kk), _)| *m == method && *kk == k)
+            {
+                slot.1.push((budget, b_crit));
+            }
+        }
+    }
+
+    let mut rng = Rng::new(23);
+    let mut t = Table::new(
+        "Fig 13 right — CBS power laws B_crit(D) = a * D^alpha",
+        &["method", "a", "alpha", "B_crit at 10x data (extrapolated)"],
+    );
+    let mut laws: Vec<((Method, usize), PowerLaw)> = Vec::new();
+    for ((method, k), pts) in &cbs_points {
+        let xs: Vec<f64> = pts.iter().map(|(d, _)| *d).collect();
+        let ys: Vec<f64> = pts.iter().map(|(_, b)| *b).collect();
+        let (law, _) = fit_pure(&xs, &ys, 4, &mut rng);
+        let d10 = xs.last().unwrap() * 10.0;
+        t.row(vec![
+            method.name().into(),
+            format!("{:.3e}", law.a), fmt_f(law.alpha, 3),
+            format!("{:.0}", law.eval(d10)),
+        ]);
+        laws.push(((*method, *k), law));
+    }
+    t.emit("fig13")?;
+
+    // iso-loss efficiency: invert the ladder loss laws (fig10 machinery)
+    let grid = super::fig_scaling::ladder_grid(ctx)?;
+    let loss_law = |m: Method, rng: &mut Rng| -> PowerLaw {
+        let xs: Vec<f64> = grid.iter()
+            .filter(|g| g.1 == m && g.2 == 1).map(|g| g.3).collect();
+        let ys: Vec<f64> = grid.iter()
+            .filter(|g| g.1 == m && g.2 == 1).map(|g| g.5).collect();
+        crate::scaling::fit_free_offset(&xs, &ys, 3, rng).0
+    };
+    let base_loss = loss_law(Method::DpAdamw, &mut rng);
+    let base_cbs = laws.iter()
+        .find(|((m, _), _)| *m == Method::DpAdamw).unwrap().1;
+    let target_l = {
+        // a loss every K=1 method reaches within the observed range
+        let max_floor = [Method::DpAdamw, Method::DpMuon, Method::Diloco,
+                         Method::Muloco].iter()
+            .map(|m| loss_law(*m, &mut rng).c)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let min_obs = grid.iter().filter(|g| g.2 == 1).map(|g| g.5)
+            .fold(f64::INFINITY, f64::min);
+        (min_obs * 0.995).max(max_floor + 0.05)
+    };
+    let mut t2 = Table::new(
+        &format!("Fig 13 left / Fig 18 — iso-loss efficiency vs DP-AdamW at L = {target_l:.3}"),
+        &["method", "T_AdamW/T_opt", "compute savings", "parallelism advantage"],
+    );
+    for (method, _) in sweep_methods(ctx) {
+        if method == Method::DpAdamw {
+            continue;
+        }
+        let ol = loss_law(method, &mut rng);
+        let ocbs = laws.iter()
+            .find(|((m, _), _)| *m == method).map(|(_, l)| *l).unwrap();
+        match iso_loss_efficiency(&base_loss, &base_cbs, &ol, &ocbs, target_l) {
+            Some((total, comp, par)) => t2.row(vec![
+                method.name().into(),
+                fmt_f(total, 2), fmt_f(comp, 2), fmt_f(par, 2),
+            ]),
+            None => t2.row(vec![
+                method.name().into(), "n/a".into(), "n/a".into(), "n/a".into(),
+            ]),
+        }
+    }
+    t2.emit("fig13-iso")
+}

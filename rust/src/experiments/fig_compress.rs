@@ -1,0 +1,127 @@
+//! Pseudogradient compression (Figs 7/8/15, Tables 4/5) and streaming
+//! (Fig 8 right).
+
+use anyhow::Result;
+
+use super::fig_workers::base_cfg;
+use super::{Ctx, Preset};
+use crate::compress::{Compression, QuantMode};
+use crate::coordinator::Method;
+use crate::util::table::{fmt_f, Table};
+
+fn comp_steps(ctx: &Ctx) -> u64 {
+    match ctx.preset {
+        Preset::Fast => 60,
+        Preset::Full => 300,
+    }
+}
+
+fn run_compressed(
+    ctx: &Ctx,
+    method: Method,
+    compression: Compression,
+    ef: bool,
+) -> Result<f64> {
+    let sess = ctx.session(ctx.base_model())?;
+    let mut cfg = base_cfg(ctx, method).tuned_outer(8);
+    cfg.total_steps = comp_steps(ctx);
+    cfg.warmup_steps = cfg.total_steps / 10;
+    cfg.compression = compression;
+    cfg.error_feedback = ef;
+    Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
+}
+
+/// Fig 7 / Fig 15 / Table 5: quantized pseudogradient communication.
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 7/15 + Table 5 — quantization (final eval loss, K=8)",
+        &["compressor", "bits", "DiLoCo", "DiLoCo+EF", "MuLoCo", "MuLoCo+EF"],
+    );
+    // fp32 baselines
+    let dl0 = run_compressed(ctx, Method::Diloco, Compression::None, false)?;
+    let ml0 = run_compressed(ctx, Method::Muloco, Compression::None, false)?;
+    t.row(vec!["fp32".into(), "-".into(), fmt_f(dl0, 4), "-".into(),
+               fmt_f(ml0, 4), "-".into()]);
+
+    let rowwise_modes: &[bool] = match ctx.preset {
+        Preset::Fast => &[false],
+        Preset::Full => &[false, true],
+    };
+    for &rowwise in rowwise_modes {
+        for mode in [QuantMode::Linear, QuantMode::Statistical] {
+            for bits in [8u32, 4, 2] {
+                let comp = Compression::Quant { bits, mode, rowwise };
+                let name = format!(
+                    "{}{}",
+                    match mode {
+                        QuantMode::Linear => "linear",
+                        QuantMode::Statistical => "statistical",
+                    },
+                    if rowwise { " (rw)" } else { "" }
+                );
+                let dl = run_compressed(ctx, Method::Diloco, comp.clone(), false)?;
+                let dle = run_compressed(ctx, Method::Diloco, comp.clone(), true)?;
+                let ml = run_compressed(ctx, Method::Muloco, comp.clone(), false)?;
+                let mle = run_compressed(ctx, Method::Muloco, comp, true)?;
+                t.row(vec![
+                    name, bits.to_string(),
+                    fmt_f(dl, 4), fmt_f(dle, 4), fmt_f(ml, 4), fmt_f(mle, 4),
+                ]);
+            }
+        }
+    }
+    t.emit("fig7")
+}
+
+/// Fig 8 (left) / Table 4: top-k sparsification with/without EF.
+pub fn fig8a(ctx: &Ctx) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 8 left + Table 4 — top-k sparsification (final eval loss, K=8)",
+        &["top-k", "DiLoCo", "DiLoCo+EF", "MuLoCo", "MuLoCo+EF"],
+    );
+    let dl0 = run_compressed(ctx, Method::Diloco, Compression::None, false)?;
+    let ml0 = run_compressed(ctx, Method::Muloco, Compression::None, false)?;
+    t.row(vec!["fp32".into(), fmt_f(dl0, 4), "-".into(),
+               fmt_f(ml0, 4), "-".into()]);
+    let fracs: &[f64] = match ctx.preset {
+        Preset::Fast => &[0.01, 0.05, 0.25],
+        Preset::Full => &[0.005, 0.01, 0.025, 0.05, 0.10, 0.25, 0.50],
+    };
+    for &frac in fracs {
+        let comp = Compression::TopK { frac };
+        let dl = run_compressed(ctx, Method::Diloco, comp.clone(), false)?;
+        let dle = run_compressed(ctx, Method::Diloco, comp.clone(), true)?;
+        let ml = run_compressed(ctx, Method::Muloco, comp.clone(), false)?;
+        let mle = run_compressed(ctx, Method::Muloco, comp, true)?;
+        t.row(vec![
+            format!("{:.1}%", frac * 100.0),
+            fmt_f(dl, 4), fmt_f(dle, 4), fmt_f(ml, 4), fmt_f(mle, 4),
+        ]);
+    }
+    t.emit("fig8a")
+}
+
+/// Fig 8 (right): streaming (partitioned) synchronization, J=3.
+pub fn fig8b(ctx: &Ctx) -> Result<()> {
+    let sess = ctx.session(ctx.base_model())?;
+    let mut t = Table::new(
+        "Fig 8 right — streaming DiLoCo/MuLoCo (J=3 partitions, K=8)",
+        &["method", "non-streaming", "streaming", "delta"],
+    );
+    for method in [Method::Diloco, Method::Muloco] {
+        let run = |j: usize| -> Result<f64> {
+            let mut cfg = base_cfg(ctx, method).tuned_outer(8);
+            cfg.streaming_partitions = j;
+            Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
+        };
+        let plain = run(1)?;
+        let streamed = run(3)?;
+        t.row(vec![
+            method.name().into(),
+            fmt_f(plain, 4),
+            fmt_f(streamed, 4),
+            fmt_f(streamed - plain, 4),
+        ]);
+    }
+    t.emit("fig8b")
+}

@@ -1,0 +1,125 @@
+//! Hyperparameter studies: outer-optimizer sweep (Fig 22, Tables
+//! 12-14) and HP power-law extrapolation (Fig 23, Table 15).
+
+use anyhow::Result;
+
+use super::fig_workers::base_cfg;
+use super::{Ctx, Preset};
+use crate::coordinator::Method;
+use crate::scaling::fit_pure;
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_f, Table};
+
+/// Fig 22: sweep (eta_out, mu) for DiLoCo/MuLoCo at K in {1, 8}.
+/// The paper's finding: MuLoCo prefers LOWER outer momentum at low K.
+pub fn fig22(ctx: &Ctx) -> Result<()> {
+    let sess = ctx.session(ctx.base_model())?;
+    let (etas, mus, steps): (Vec<f64>, Vec<f64>, u64) = match ctx.preset {
+        Preset::Fast => (vec![0.6, 0.8, 1.0], vec![0.4, 0.6, 0.8], 45),
+        Preset::Full => (vec![0.4, 0.6, 0.8, 1.0],
+                         vec![0.3, 0.5, 0.7, 0.9], 180),
+    };
+    let mut t = Table::new(
+        "Fig 22 — outer HP sweep: best (eta_out, mu) per method/K",
+        &["method", "K", "best eta_out", "best mu", "best loss",
+          "loss at mu=0.8"],
+    );
+    for method in [Method::Diloco, Method::Muloco] {
+        for k in [1usize, 8] {
+            let mut best = (f64::NAN, f64::NAN, f64::INFINITY);
+            let mut at_mu08 = f64::NAN;
+            for &eta in &etas {
+                for &mu in &mus {
+                    let mut cfg = base_cfg(ctx, method);
+                    cfg.workers = k;
+                    cfg.total_steps = steps;
+                    cfg.warmup_steps = steps / 10;
+                    cfg.sync_interval = 15;
+                    cfg.eval_every = 15;
+                    cfg.outer_lr = eta;
+                    cfg.outer_momentum = mu;
+                    let loss = ctx.cache.run(&sess, &cfg)?.smoothed_final;
+                    if loss < best.2 {
+                        best = (eta, mu, loss);
+                    }
+                    if (mu - 0.8).abs() < 1e-9 && (eta - best.0).abs() < 0.21 {
+                        at_mu08 = loss;
+                    }
+                }
+            }
+            t.row(vec![
+                method.name().into(), k.to_string(),
+                fmt_f(best.0, 1), fmt_f(best.1, 1), fmt_f(best.2, 4),
+                fmt_f(at_mu08, 4),
+            ]);
+        }
+    }
+    t.emit("fig22")
+}
+
+/// Fig 23 / Table 15: fit power laws to per-scale optimal LR and batch
+/// size, extrapolate to the largest (unswept) scale.
+pub fn fig23(ctx: &Ctx) -> Result<()> {
+    // mini LR sweep per scale per method: {0.5x, 1x, 2x} of default
+    let scales: Vec<&str> = match ctx.preset {
+        Preset::Fast => vec!["nano", "micro"],
+        Preset::Full => vec!["nano", "micro", "tiny", "small"],
+    };
+    let target = match ctx.preset {
+        Preset::Fast => "tiny",
+        Preset::Full => "med",
+    };
+    let methods = [Method::DpAdamw, Method::DpMuon, Method::Diloco,
+                   Method::Muloco];
+    let mut rng = Rng::new(31);
+    let mut t = Table::new(
+        "Fig 23 / Table 15 — eta_in(N) = a*N^alpha fits + extrapolation",
+        &["method", "a", "alpha", "extrapolated lr @ target",
+          "default lr @ target"],
+    );
+    for method in methods {
+        let mut ns = Vec::new();
+        let mut best_lrs = Vec::new();
+        for model in &scales {
+            let sess = ctx.session(model)?;
+            let n_params = sess.manifest.config.param_count as f64;
+            let default_lr = base_cfg(ctx, method).lr;
+            let mut best = (f64::NAN, f64::INFINITY);
+            for mult in [0.5, 1.0, 2.0] {
+                let mut cfg = base_cfg(ctx, method);
+                cfg.model = model.to_string();
+                cfg.lr = default_lr * mult;
+                cfg.total_steps = match ctx.preset {
+                    Preset::Fast => 45,
+                    Preset::Full => 180,
+                };
+                cfg.warmup_steps = cfg.total_steps / 10;
+                cfg.sync_interval = 15;
+                cfg.eval_every = 15;
+                cfg.global_batch = 32;
+                if method.is_local_update() {
+                    cfg = cfg.tuned_outer(4);
+                }
+                let loss = ctx.cache.run(&sess, &cfg)?.smoothed_final;
+                if loss < best.1 {
+                    best = (cfg.lr, loss);
+                }
+            }
+            ns.push(n_params);
+            best_lrs.push(best.0);
+        }
+        let (law, _) = fit_pure(&ns, &best_lrs, 4, &mut rng);
+        let target_n = ctx.session(target)?.manifest.config.param_count as f64;
+        t.row(vec![
+            method.name().into(),
+            format!("{:.3e}", law.a), fmt_f(law.alpha, 3),
+            format!("{:.4e}", law.eval(target_n)),
+            format!("{:.4e}", base_cfg(ctx, method).lr),
+        ]);
+    }
+    println!(
+        "(paper shape: AdamW-based optimal LR falls steeply with scale; \
+         Muon-based LR stays comparatively flat)\n"
+    );
+    t.emit("fig23")
+}

@@ -1,0 +1,263 @@
+//! Compute scaling laws (Fig 10, Tables 2/6), relative performance vs
+//! scale (Fig 11, Table 7), and the L_irr sensitivity sweep (Fig 17).
+
+use anyhow::Result;
+
+use super::{Ctx, Preset, RunSummary};
+use crate::coordinator::{Method, TrainConfig};
+use crate::scaling::{fit_fixed_offset, fit_joint_irreducible, fit_pure,
+                     fit_free_offset, mean_abs_log_residual};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_f, fmt_pct, fmt_sci, Table};
+
+/// tokens-per-parameter budget for the ladder runs
+fn tpp(ctx: &Ctx) -> f64 {
+    match ctx.preset {
+        Preset::Fast => 3.0,
+        Preset::Full => 20.0,
+    }
+}
+
+pub fn ladder_batch(ctx: &Ctx) -> usize {
+    match ctx.preset {
+        Preset::Fast => 32,
+        Preset::Full => 64, // must hold K=16 workers at microbatch 4
+    }
+}
+
+pub fn ladder_ks(ctx: &Ctx) -> Vec<usize> {
+    match ctx.preset {
+        Preset::Fast => vec![1, 8],
+        Preset::Full => vec![1, 2, 4, 8, 16],
+    }
+}
+
+/// The 6..12 method/K combos of the scaling study.
+pub fn combos(ctx: &Ctx) -> Vec<(Method, usize)> {
+    let mut v = vec![(Method::DpAdamw, 1), (Method::DpMuon, 1)];
+    for k in ladder_ks(ctx) {
+        v.push((Method::Diloco, k));
+        v.push((Method::Muloco, k));
+    }
+    v
+}
+
+pub fn combo_label(method: Method, k: usize) -> String {
+    if method.is_local_update() {
+        format!("{} K={}", method.name(), k)
+    } else {
+        method.name().to_string()
+    }
+}
+
+/// One ladder run (cached): `model` at its chinchilla-style budget.
+pub fn ladder_run(ctx: &Ctx, model: &str, method: Method, k: usize)
+                  -> Result<(RunSummary, f64, f64)> {
+    let sess = ctx.session(model)?;
+    let m = &sess.manifest.config;
+    let tokens = tpp(ctx) * m.param_count as f64;
+    let tok_per_step = (ladder_batch(ctx) * m.seq_len) as f64;
+    let steps = (tokens / tok_per_step).ceil() as u64;
+    let mut cfg = TrainConfig::new(model, method);
+    cfg.total_steps = steps.max(30);
+    cfg.global_batch = ladder_batch(ctx);
+    cfg.sync_interval = 15;
+    cfg.eval_every = 15;
+    cfg.eval_batches = 4;
+    cfg.warmup_steps = cfg.total_steps / 10;
+    if method.is_local_update() {
+        cfg = cfg.tuned_outer(k);
+    }
+    let run = ctx.cache.run(&sess, &cfg)?;
+    let d = cfg.total_steps as f64 * tok_per_step;
+    let c = 6.0 * m.param_count as f64 * d; // C = 6 N D
+    Ok((run, c, d))
+}
+
+/// Collect the full (scale x combo) loss grid from cache.
+pub fn ladder_grid(ctx: &Ctx)
+                   -> Result<Vec<(String, Method, usize, f64, f64, f64)>> {
+    // (model, method, k, compute, tokens, loss)
+    let mut out = Vec::new();
+    for model in ctx.ladder() {
+        for (method, k) in combos(ctx) {
+            let (run, c, d) = ladder_run(ctx, model, method, k)?;
+            out.push((model.to_string(), method, k, c, d, run.smoothed_final));
+        }
+    }
+    Ok(out)
+}
+
+/// Fig 10 + Tables 2/6: power-law fits with three functional forms.
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    let grid = ladder_grid(ctx)?;
+    let ladder = ctx.ladder();
+    let holdout_model = *ladder.last().unwrap();
+
+    // --- Table 2 analogue: functional-form comparison with the largest
+    // trained scale held out -----------------------------------------
+    let mut t2 = Table::new(
+        "Table 2 — functional forms (fit on smaller scales, eval on largest)",
+        &["form", "train residual", "holdout residual"],
+    );
+    let mut rng = Rng::new(7);
+    {
+        // only DP curves have enough dynamic range for the holdout demo
+        let mut rows: Vec<(String, f64, f64)> = Vec::new();
+        let curves: Vec<(Vec<f64>, Vec<f64>)> = combos(ctx).iter()
+            .map(|(m, k)| {
+                let xs: Vec<f64> = grid.iter()
+                    .filter(|g| g.1 == *m && g.2 == *k && g.0 != holdout_model)
+                    .map(|g| g.3).collect();
+                let ys: Vec<f64> = grid.iter()
+                    .filter(|g| g.1 == *m && g.2 == *k && g.0 != holdout_model)
+                    .map(|g| g.5).collect();
+                (xs, ys)
+            })
+            .collect();
+        let hold: Vec<(f64, f64)> = combos(ctx).iter()
+            .map(|(m, k)| {
+                let g = grid.iter()
+                    .find(|g| g.1 == *m && g.2 == *k && g.0 == holdout_model)
+                    .unwrap();
+                (g.3, g.5)
+            })
+            .collect();
+
+        // form (i) pure, (ii) free offset, (iii) joint L_irr
+        let eval_forms: Vec<(&str, Vec<crate::scaling::PowerLaw>)> = vec![
+            ("L = a*C^alpha",
+             curves.iter().map(|(xs, ys)| fit_pure(xs, ys, 4, &mut rng).0).collect()),
+            ("L = a*C^alpha + c",
+             curves.iter().map(|(xs, ys)| fit_free_offset(xs, ys, 3, &mut rng).0).collect()),
+            ("L = a*C^alpha + L_irr",
+             fit_joint_irreducible(&curves, 4, &mut rng).0),
+        ];
+        for (name, laws) in eval_forms {
+            let mut train_r = 0.0;
+            let mut hold_r = 0.0;
+            for (law, ((xs, ys), (hx, hy))) in
+                laws.iter().zip(curves.iter().zip(&hold))
+            {
+                train_r += mean_abs_log_residual(law, xs, ys);
+                hold_r += (law.eval(*hx).ln() - hy.ln()).abs();
+            }
+            rows.push((name.to_string(),
+                       train_r / laws.len() as f64,
+                       hold_r / laws.len() as f64));
+        }
+        for (name, tr, hr) in rows {
+            t2.row(vec![name, fmt_f(tr, 4), fmt_f(hr, 4)]);
+        }
+    }
+    t2.emit("fig10-tab2")?;
+
+    // --- Table 6 / Fig 10: final joint-L_irr fit on ALL scales --------
+    let curves: Vec<(Vec<f64>, Vec<f64>)> = combos(ctx).iter()
+        .map(|(m, k)| {
+            let xs: Vec<f64> = grid.iter()
+                .filter(|g| g.1 == *m && g.2 == *k).map(|g| g.3).collect();
+            let ys: Vec<f64> = grid.iter()
+                .filter(|g| g.1 == *m && g.2 == *k).map(|g| g.5).collect();
+            (xs, ys)
+        })
+        .collect();
+    let (laws, l_irr, _) = fit_joint_irreducible(&curves, 6, &mut rng);
+    let mut t6 = Table::new(
+        &format!("Table 6 / Fig 10 — L(C) = a*C^alpha + L_irr (joint L_irr = {l_irr:.3})"),
+        &["method", "K", "a", "alpha", "train residual"],
+    );
+    for (((method, k), law), (xs, ys)) in
+        combos(ctx).iter().zip(&laws).zip(&curves)
+    {
+        t6.row(vec![
+            method.name().into(), k.to_string(),
+            fmt_sci(law.a), fmt_f(law.alpha, 4),
+            fmt_f(mean_abs_log_residual(law, xs, ys), 4),
+        ]);
+    }
+    // the paper's headline: Muon-based alphas are more negative
+    let alpha_of = |m: Method, k: usize| {
+        combos(ctx).iter().position(|(mm, kk)| *mm == m && *kk == k)
+            .map(|i| laws[i].alpha)
+    };
+    if let (Some(am), Some(aa)) = (alpha_of(Method::Muloco, 1),
+                                   alpha_of(Method::Diloco, 1)) {
+        println!("MuLoCo K=1 alpha = {am:.4} vs DiLoCo K=1 alpha = {aa:.4} \
+                  (paper: Muon-based methods scale better / more negative)\n");
+    }
+    t6.emit("fig10")
+}
+
+/// Fig 11 / Table 7: % loss increase over the DP baseline per scale/K.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    let grid = ladder_grid(ctx)?;
+    let mut t = Table::new(
+        "Fig 11 / Table 7 — % change vs DP baseline across scales",
+        &["model", "K", "DiLoCo", "vs DP-AdamW", "MuLoCo", "vs DP-Muon"],
+    );
+    for model in ctx.ladder() {
+        let base = |m: Method| {
+            grid.iter().find(|g| g.0 == model && g.1 == m).map(|g| g.5).unwrap()
+        };
+        let dp_a = base(Method::DpAdamw);
+        let dp_m = base(Method::DpMuon);
+        for k in ladder_ks(ctx) {
+            let get = |m: Method| {
+                grid.iter()
+                    .find(|g| g.0 == model && g.1 == m && g.2 == k)
+                    .map(|g| g.5)
+                    .unwrap()
+            };
+            let dl = get(Method::Diloco);
+            let ml = get(Method::Muloco);
+            t.row(vec![
+                model.to_string(), k.to_string(),
+                fmt_f(dl, 4), fmt_pct(dl / dp_a - 1.0),
+                fmt_f(ml, 4), fmt_pct(ml / dp_m - 1.0),
+            ]);
+        }
+    }
+    t.emit("fig11")
+}
+
+/// Fig 17: scaling exponent ratio alpha_method/alpha_DP as a function
+/// of the ASSUMED irreducible loss.
+pub fn fig17(ctx: &Ctx) -> Result<()> {
+    let grid = ladder_grid(ctx)?;
+    let mut rng = Rng::new(11);
+    let min_loss = grid.iter().map(|g| g.5).fold(f64::INFINITY, f64::min);
+    // sweep L_irr from 0 to just below the smallest observed loss
+    let lirrs: Vec<f64> = (0..6).map(|i| min_loss * i as f64 / 6.0).collect();
+    let mut t = Table::new(
+        "Fig 17 — alpha(method) / alpha(DP) vs assumed L_irr",
+        &["L_irr", "DiLoCo K=8 / DP-AdamW", "MuLoCo K=8 / DP-Muon",
+          "DiLoCo K=1 / DP-AdamW", "MuLoCo K=1 / DP-Muon"],
+    );
+    let curve = |m: Method, k: usize| -> (Vec<f64>, Vec<f64>) {
+        let xs: Vec<f64> = grid.iter()
+            .filter(|g| g.1 == m && g.2 == k).map(|g| g.3).collect();
+        let ys: Vec<f64> = grid.iter()
+            .filter(|g| g.1 == m && g.2 == k).map(|g| g.5).collect();
+        (xs, ys)
+    };
+    for l_irr in lirrs {
+        let alpha = |m: Method, k: usize, rng: &mut Rng| {
+            let (xs, ys) = curve(m, k);
+            if ys.iter().any(|y| *y <= l_irr) {
+                return f64::NAN;
+            }
+            fit_fixed_offset(&xs, &ys, l_irr, 3, rng).0.alpha
+        };
+        let a_dp_a = alpha(Method::DpAdamw, 1, &mut rng);
+        let a_dp_m = alpha(Method::DpMuon, 1, &mut rng);
+        t.row(vec![
+            fmt_f(l_irr, 3),
+            fmt_f(alpha(Method::Diloco, 8, &mut rng) / a_dp_a, 4),
+            fmt_f(alpha(Method::Muloco, 8, &mut rng) / a_dp_m, 4),
+            fmt_f(alpha(Method::Diloco, 1, &mut rng) / a_dp_a, 4),
+            fmt_f(alpha(Method::Muloco, 1, &mut rng) / a_dp_m, 4),
+        ]);
+    }
+    t.emit("fig17")
+}

@@ -1,0 +1,185 @@
+//! System metrics & idealized wall-clock (Figs 9/14/16/20, Tables 9/10).
+
+use anyhow::Result;
+
+use super::fig_workers::base_cfg;
+use super::Ctx;
+use crate::coordinator::{train, Method};
+use crate::netsim::{CommPattern, SystemProfile, GBIT};
+use crate::util::table::{fmt_f, fmt_pct, Table};
+
+/// Measured per-step timings for one method (short instrumented run).
+struct Measured {
+    compute_per_step: f64,
+    optimizer_per_step: f64,
+    loss: f64,
+}
+
+fn measure(ctx: &Ctx, method: Method) -> Result<Measured> {
+    let sess = ctx.session(ctx.base_model())?;
+    let mut cfg = base_cfg(ctx, method);
+    cfg.total_steps = 30;
+    cfg.warmup_steps = 3;
+    if method.is_local_update() {
+        cfg = cfg.tuned_outer(4);
+        cfg.workers = 4;
+    }
+    let r = train(&sess, &cfg)?;
+    let steps = cfg.total_steps as f64;
+    Ok(Measured {
+        compute_per_step: r.exec.fwd_grad_secs / steps,
+        optimizer_per_step: r.exec.apply_secs / steps,
+        loss: r.smoothed_final,
+    })
+}
+
+/// Fig 9 / Table 9: end-to-end step time, throughput, optimizer
+/// overhead and memory complexity for DiLoCo vs MuLoCo.
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    let sess = ctx.session(ctx.base_model())?;
+    let m = &sess.manifest.config;
+    let dl = measure(ctx, Method::Diloco)?;
+    let ml = measure(ctx, Method::Muloco)?;
+    let tokens_per_step = (ctx.base_batch() * m.seq_len) as f64;
+    let step = |x: &Measured| x.compute_per_step + x.optimizer_per_step;
+    let thr = |x: &Measured| tokens_per_step / step(x);
+    let flops = |x: &Measured| {
+        m.flops_per_token * tokens_per_step / step(x) / 1e9
+    };
+    let mut t = Table::new(
+        "Fig 9 / Table 9 — system metrics (K=4, measured on this host)",
+        &["metric", "DiLoCo", "MuLoCo", "delta %"],
+    );
+    let pct = |a: f64, b: f64| fmt_pct(b / a - 1.0);
+    t.row(vec!["end-to-end step (s)".into(),
+               fmt_f(step(&dl), 4), fmt_f(step(&ml), 4),
+               pct(step(&dl), step(&ml))]);
+    t.row(vec!["optimizer step (s)".into(),
+               fmt_f(dl.optimizer_per_step, 4), fmt_f(ml.optimizer_per_step, 4),
+               pct(dl.optimizer_per_step, ml.optimizer_per_step)]);
+    t.row(vec!["throughput (tokens/s)".into(),
+               fmt_f(thr(&dl), 0), fmt_f(thr(&ml), 0),
+               pct(thr(&dl), thr(&ml))]);
+    t.row(vec!["GFLOPS (model)".into(),
+               fmt_f(flops(&dl), 2), fmt_f(flops(&ml), 2),
+               pct(flops(&dl), flops(&ml))]);
+    t.row(vec!["final eval loss".into(),
+               fmt_f(dl.loss, 4), fmt_f(ml.loss, 4),
+               pct(dl.loss, ml.loss)]);
+    t.row(vec!["memory (param copies)".into(),
+               Method::Diloco.memory_copies().to_string(),
+               Method::Muloco.memory_copies().to_string(),
+               "-25%".into()]);
+    t.emit("fig9")
+}
+
+fn profile(ctx: &Ctx, measured: &Measured, method: Method, k: usize,
+           h: u64, compressed_frac: f64) -> Result<SystemProfile> {
+    let sess = ctx.session(ctx.base_model())?;
+    let bytes = sess.manifest.param_bytes() as f64;
+    Ok(SystemProfile {
+        compute_secs_per_step: measured.compute_per_step,
+        optimizer_secs_per_step: measured.optimizer_per_step,
+        param_bytes: bytes,
+        wire_bytes_per_sync: bytes * compressed_frac,
+        workers: k,
+        pattern: if method.is_local_update() {
+            CommPattern::EveryH { h }
+        } else {
+            CommPattern::EveryStep
+        },
+    })
+}
+
+/// Fig 16: compute utilization as a function of network bandwidth.
+pub fn fig16(ctx: &Ctx) -> Result<()> {
+    let dl = measure(ctx, Method::Diloco)?;
+    let variants: Vec<(&str, Method, f64)> = vec![
+        ("DP fp32", Method::DpAdamw, 1.0),
+        ("DiLoCo fp32", Method::Diloco, 1.0),
+        ("DiLoCo 4-bit", Method::Diloco, 0.125),
+        ("MuLoCo 4-bit", Method::Muloco, 0.125),
+    ];
+    let h = 15;
+    let bws: Vec<f64> = vec![0.01, 0.1, 1.0, 10.0, 100.0, 1000.0];
+    let mut headers = vec!["config".to_string()];
+    headers.extend(bws.iter().map(|b| format!("{b} Gbit/s")));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig 16 — compute utilization vs bandwidth (K=8)",
+                           &hdr_refs);
+    let mut table99 = Table::new(
+        "Fig 16 inset — bandwidth needed for 99% utilization",
+        &["config", "Gbit/s"],
+    );
+    for (name, method, frac) in variants {
+        let p = profile(ctx, &dl, method, 8, h, frac)?;
+        let mut row = vec![name.to_string()];
+        for bw in &bws {
+            row.push(format!("{:.1}%", 100.0 * p.utilization(bw * GBIT)));
+        }
+        t.row(row);
+        table99.row(vec![
+            name.to_string(),
+            format!("{:.3}", p.bandwidth_for_utilization(0.99) / GBIT),
+        ]);
+    }
+    println!("{}", table99.render());
+    table99.emit("fig16-99")?;
+    t.emit("fig16")
+}
+
+/// Fig 14 / Fig 20 / Table 10: idealized wall-clock training time under
+/// bandwidth constraints.  The miniature testbed's parameter volume is
+/// too small for communication to ever bind (verified by fig16's
+/// measured-profile sweep), so this generator follows the paper's own
+/// methodology end-to-end at the paper's 15B constants: step time
+/// 0.98 s (their Table 9), token budget 304.6B, and the per-method
+/// batch sizes of their Table 15 — reproducing Table 10's crossover
+/// analytically.
+pub fn fig14(ctx: &Ctx) -> Result<()> {
+    let _ = ctx; // analytic: no runs needed
+    let param_bytes = 4.0 * 15.23e9;
+    let tokens = 304.6e9;
+    let step = 0.9832; // paper Table 9 (Muon), s/step with cluster ~ B
+    let opt = 0.01 * step;
+    // (name, K for comm, batch tokens, sync pattern)
+    let configs: Vec<(&str, usize, f64, CommPattern)> = vec![
+        ("DP AdamW (B=2.1M)", 8, 2.1e6, CommPattern::EveryStep),
+        ("DP Muon (B=4.2M)", 8, 4.2e6, CommPattern::EveryStep),
+        ("K=1 DiLoCo (B=1M)", 1, 1.0e6, CommPattern::EveryH { h: 30 }),
+        ("K=1 MuLoCo (B=16.8M)", 1, 16.8e6, CommPattern::EveryH { h: 30 }),
+        ("K=16 DiLoCo (B=4.2M)", 16, 4.2e6, CommPattern::EveryH { h: 30 }),
+        ("K=16 MuLoCo (B=8.4M)", 16, 8.4e6, CommPattern::EveryH { h: 30 }),
+    ];
+    let bws = [10.0, 100.0, 400.0, 1600.0, 3200.0, 6400.0];
+    let mut headers = vec!["method".to_string()];
+    headers.extend(bws.iter().map(|b| format!("{b} Gbit/s (h)")));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table 10 / Figs 14+20 — idealized wall-clock hours (paper-scale projection)",
+        &hdr_refs,
+    );
+    for (name, k, batch, pattern) in configs {
+        let steps = (tokens / batch).ceil() as u64;
+        // DP baselines sync per step; K=1 local methods still exchange
+        // their pseudogradient with the parameter server pool, modeled
+        // as a K=2 ring per the paper's accounting
+        let p = SystemProfile {
+            compute_secs_per_step: step,
+            optimizer_secs_per_step: opt,
+            param_bytes,
+            wire_bytes_per_sync: param_bytes,
+            workers: k.max(2),
+            pattern,
+        };
+        let mut row = vec![name.to_string()];
+        for bw in &bws {
+            row.push(format!("{:.1}", p.training_hours(steps, bw * GBIT)));
+        }
+        t.row(row);
+    }
+    println!(
+        "(shape to check vs paper Table 10: K=16 MuLoCo fastest at 10 Gbit/s; \n          K=1 MuLoCo (largest batch, fewest sequential steps) fastest at high bandwidth)\n"
+    );
+    t.emit("fig14")
+}

@@ -1,0 +1,110 @@
+//! Worker scaling (Figs 1a/6a) and sync-interval sweep (Fig 6b).
+
+use anyhow::Result;
+
+use super::{Ctx, Preset};
+use crate::coordinator::{Method, TrainConfig};
+use crate::util::table::{fmt_f, fmt_pct, Table};
+
+/// Base config for the single-scale communication-efficiency section.
+pub fn base_cfg(ctx: &Ctx, method: Method) -> TrainConfig {
+    let mut cfg = TrainConfig::new(ctx.base_model(), method);
+    cfg.total_steps = ctx.base_steps();
+    cfg.global_batch = ctx.base_batch();
+    cfg.sync_interval = match ctx.preset {
+        Preset::Fast => 15,
+        Preset::Full => 30,
+    };
+    cfg.eval_every = cfg.sync_interval;
+    cfg.warmup_steps = cfg.total_steps / 10;
+    cfg
+}
+
+pub fn k_values(ctx: &Ctx) -> Vec<usize> {
+    match ctx.preset {
+        Preset::Fast => vec![1, 2, 4, 8, 16],
+        Preset::Full => vec![1, 2, 4, 8, 16],
+    }
+}
+
+/// DP baseline (K=1 logical) with matched budget.
+pub fn dp_run(ctx: &Ctx, method: Method) -> Result<super::RunSummary> {
+    let sess = ctx.session(ctx.base_model())?;
+    let cfg = base_cfg(ctx, method);
+    ctx.cache.run(&sess, &cfg)
+}
+
+pub fn local_run(ctx: &Ctx, method: Method, k: usize)
+                 -> Result<super::RunSummary> {
+    let sess = ctx.session(ctx.base_model())?;
+    let cfg = base_cfg(ctx, method).tuned_outer(k);
+    ctx.cache.run(&sess, &cfg)
+}
+
+/// Fig 1a / Fig 6a: % increase in final smoothed eval loss over the
+/// respective DP baseline as K grows.
+pub fn fig1a(ctx: &Ctx) -> Result<()> {
+    let dp_adamw = dp_run(ctx, Method::DpAdamw)?.smoothed_final;
+    let dp_muon = dp_run(ctx, Method::DpMuon)?.smoothed_final;
+
+    let mut t = Table::new(
+        "Fig 1a/6a — worker scaling (final smoothed eval loss; % vs DP)",
+        &["K", "DiLoCo", "% vs DP-AdamW", "MuLoCo", "% vs DP-Muon",
+          "MuLoCo wins abs", "MuLoCo wins rel"],
+    );
+    for k in k_values(ctx) {
+        let dl = local_run(ctx, Method::Diloco, k)?.smoothed_final;
+        let ml = local_run(ctx, Method::Muloco, k)?.smoothed_final;
+        let rel_dl = dl / dp_adamw - 1.0;
+        let rel_ml = ml / dp_muon - 1.0;
+        t.row(vec![
+            k.to_string(),
+            fmt_f(dl, 4),
+            fmt_pct(rel_dl),
+            fmt_f(ml, 4),
+            fmt_pct(rel_ml),
+            (ml < dl).to_string(),
+            (rel_ml < rel_dl).to_string(),
+        ]);
+    }
+    let mut base = Table::new("DP baselines", &["method", "loss"]);
+    base.row(vec!["DP-AdamW".into(), fmt_f(dp_adamw, 4)]);
+    base.row(vec!["DP-Muon".into(), fmt_f(dp_muon, 4)]);
+    println!("{}", base.render());
+    t.emit("fig1a")
+}
+
+/// Fig 6b: relative loss vs DP as the sync interval H is doubled.
+pub fn fig6b(ctx: &Ctx) -> Result<()> {
+    let sess = ctx.session(ctx.base_model())?;
+    let dp_adamw = dp_run(ctx, Method::DpAdamw)?.smoothed_final;
+    let dp_muon = dp_run(ctx, Method::DpMuon)?.smoothed_final;
+
+    let hs: Vec<u64> = match ctx.preset {
+        Preset::Fast => vec![5, 15, 45],
+        Preset::Full => vec![15, 30, 60, 120, 240],
+    };
+    let k = 8;
+    let mut t = Table::new(
+        "Fig 6b — sync interval sweep at K=8 (% vs DP baseline)",
+        &["H", "DiLoCo", "% vs DP-AdamW", "MuLoCo", "% vs DP-Muon"],
+    );
+    for h in hs {
+        let run = |method: Method| -> Result<f64> {
+            let mut cfg = base_cfg(ctx, method).tuned_outer(k);
+            cfg.sync_interval = h;
+            cfg.eval_every = h.min(cfg.total_steps);
+            Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
+        };
+        let dl = run(Method::Diloco)?;
+        let ml = run(Method::Muloco)?;
+        t.row(vec![
+            h.to_string(),
+            fmt_f(dl, 4),
+            fmt_pct(dl / dp_adamw - 1.0),
+            fmt_f(ml, 4),
+            fmt_pct(ml / dp_muon - 1.0),
+        ]);
+    }
+    t.emit("fig6b")
+}

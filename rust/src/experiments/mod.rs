@@ -1,0 +1,182 @@
+//! Experiment harness: one generator per paper table/figure.
+//!
+//! `muloco experiment <id>` regenerates the corresponding artifact into
+//! `results/<id>/` (rendered table on stdout + CSV).  See DESIGN.md §5
+//! for the full paper-artifact -> generator index.
+//!
+//! Training runs are cached on disk (`results/cache/`) keyed by the
+//! full run configuration, so `experiment all` is incremental and
+//! experiments can share underlying runs (e.g. fig1a and fig11 reuse
+//! the same K-sweep).
+
+mod cache;
+mod fig_analysis;
+mod fig_cbs;
+mod fig_compress;
+mod fig_eval;
+mod fig_hp;
+mod fig_scaling;
+mod fig_wallclock;
+mod fig_workers;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Session;
+
+pub use cache::{RunCache, RunSummary};
+
+/// Execution context shared by all experiments.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub preset: Preset,
+    sessions: RefCell<BTreeMap<String, Rc<Session>>>,
+    pub cache: RunCache,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// small models, short budgets — minutes per experiment
+    Fast,
+    /// larger models, longer budgets — hours for the full suite
+    Full,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &Path, preset: &str) -> Result<Ctx> {
+        let preset = match preset {
+            "fast" => Preset::Fast,
+            "full" => Preset::Full,
+            other => bail!("unknown preset {other:?} (fast|full)"),
+        };
+        Ok(Ctx {
+            artifacts: artifacts.to_path_buf(),
+            preset,
+            sessions: RefCell::new(BTreeMap::new()),
+            cache: RunCache::new("results/cache")?,
+        })
+    }
+
+    /// Compiled sessions are expensive (XLA LLVM jit); cache per config.
+    pub fn session(&self, model: &str) -> Result<Rc<Session>> {
+        if let Some(s) = self.sessions.borrow().get(model) {
+            return Ok(s.clone());
+        }
+        eprintln!("[ctx] loading + compiling artifacts for {model} ...");
+        let s = Rc::new(Session::load(&self.artifacts.join(model))?);
+        self.sessions.borrow_mut().insert(model.to_string(), s.clone());
+        Ok(s)
+    }
+
+    /// The base model for single-scale experiments (paper: 416M).
+    pub fn base_model(&self) -> &'static str {
+        match self.preset {
+            Preset::Fast => "nano",
+            Preset::Full => "tiny",
+        }
+    }
+
+    /// The scale ladder for scaling-law experiments (paper: 150M-3.1B,
+    /// with `big` as the unswept holdout playing 15B).
+    pub fn ladder(&self) -> Vec<&'static str> {
+        match self.preset {
+            Preset::Fast => vec!["nano", "micro", "tiny"],
+            Preset::Full => vec!["nano", "micro", "tiny", "small", "med"],
+        }
+    }
+
+    pub fn holdout(&self) -> &'static str {
+        match self.preset {
+            Preset::Fast => "small",
+            Preset::Full => "big",
+        }
+    }
+
+    /// Steps budget for the base single-scale experiments.
+    pub fn base_steps(&self) -> u64 {
+        match self.preset {
+            Preset::Fast => 90,
+            Preset::Full => 480,
+        }
+    }
+
+    /// Global batch (sequences) for base experiments; must hold 16
+    /// workers at microbatch 4.
+    pub fn base_batch(&self) -> usize {
+        64
+    }
+}
+
+type ExpFn = fn(&Ctx) -> Result<()>;
+
+/// (id, description, generator) — the DESIGN.md §5 index, executable.
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("fig1a", "worker scaling: % loss vs DP baseline, K=1..16 (Figs 1a/6a)", fig_workers::fig1a),
+        ("fig6b", "sync-interval sweep H (Fig 6b)", fig_workers::fig6b),
+        ("fig2", "pseudogradient cosine sim to K=1 (Fig 2)", fig_analysis::fig2),
+        ("fig3", "spectra + top-S interference gap vs K (Fig 3)", fig_analysis::fig3),
+        ("fig4", "step/worker alignment to pseudogradient (Fig 4)", fig_analysis::fig4),
+        ("fig5", "inner-step Frobenius norms (Fig 5)", fig_analysis::fig5),
+        ("fig21", "per-worker alignment variability (Fig 21)", fig_analysis::fig21),
+        ("prop42", "nuclear-norm identity check (Prop 4.2)", fig_analysis::prop42),
+        ("fig7", "quantization: linear/stat x bits x EF (Fig 7/15, Tab 5)", fig_compress::fig7),
+        ("fig8a", "top-k sparsification x EF (Fig 8 left, Tab 4)", fig_compress::fig8a),
+        ("fig8b", "streaming partitioned sync (Fig 8 right)", fig_compress::fig8b),
+        ("fig9", "system metrics + memory complexity (Fig 9, Tab 9)", fig_wallclock::fig9),
+        ("fig16", "compute utilization vs bandwidth (Fig 16)", fig_wallclock::fig16),
+        ("fig14", "idealized wall-clock at low/high bandwidth (Figs 14/20, Tab 10)", fig_wallclock::fig14),
+        ("fig10", "compute scaling laws + functional forms (Fig 10, Tabs 2/6)", fig_scaling::fig10),
+        ("fig11", "% over DP vs scale per K (Fig 11, Tab 7)", fig_scaling::fig11),
+        ("fig17", "scaling exponent vs assumed L_irr (Fig 17)", fig_scaling::fig17),
+        ("fig12", "loss vs batch size; B_opt/B_crit per method (Fig 12)", fig_cbs::fig12),
+        ("fig1b", "iso-FLOP Pareto: loss vs batch (Fig 1b)", fig_cbs::fig1b),
+        ("fig13", "CBS power laws + iso-loss efficiency (Figs 13/18)", fig_cbs::fig13),
+        ("fig22", "outer HP sweep (Fig 22, Tabs 12-14)", fig_hp::fig22),
+        ("fig23", "HP power-law extrapolation to holdout scale (Fig 23, Tab 15)", fig_hp::fig23),
+        ("fig24", "raw vs smoothed eval loss (Fig 24, App F)", fig_eval::fig24),
+        ("tab3", "final eval + synthetic zero-shot suite (Tabs 3/8)", fig_eval::tab3),
+    ]
+}
+
+pub fn registry_names() -> Vec<(&'static str, &'static str)> {
+    registry().iter().map(|(id, d, _)| (*id, *d)).collect()
+}
+
+pub fn run(id: &str, preset: &str, artifacts: &Path) -> Result<()> {
+    let ctx = Ctx::new(artifacts, preset)?;
+    let reg = registry();
+    if id == "all" {
+        let total = reg.len();
+        let mut failures = Vec::new();
+        for (i, (name, desc, f)) in reg.iter().enumerate() {
+            eprintln!("=== [{}/{}] {name}: {desc}", i + 1, total);
+            let t0 = std::time::Instant::now();
+            match f(&ctx) {
+                Ok(()) => eprintln!("=== {name} done in {:.1}s",
+                                    t0.elapsed().as_secs_f64()),
+                Err(e) => {
+                    eprintln!("=== {name} FAILED: {e:#}");
+                    failures.push(*name);
+                }
+            }
+        }
+        if !failures.is_empty() {
+            anyhow::bail!("experiments failed: {failures:?}");
+        }
+        return Ok(());
+    }
+    match reg.iter().find(|(name, _, _)| *name == id) {
+        Some((_, _, f)) => f(&ctx),
+        None => bail!("unknown experiment {id:?}; see `muloco list`"),
+    }
+}
+
+/// Exposed for the cache-key property tests.
+pub fn cache_key_for_tests(cfg: &crate::coordinator::TrainConfig) -> String {
+    cache::config_key(cfg)
+}

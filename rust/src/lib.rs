@@ -1,0 +1,27 @@
+//! # MuLoCo-RS
+//!
+//! A three-layer (rust + JAX + Pallas) reproduction of *"MuLoCo: Muon is
+//! a Practical Inner Optimizer for DiLoCo"* (Thérien et al., 2025).
+//!
+//! * Layer 1 (Pallas) and Layer 2 (JAX) live in `python/compile/` and run
+//!   only at build time (`make artifacts`), producing HLO-text artifacts.
+//! * Layer 3 (this crate) is the distributed-training coordinator: DiLoCo
+//!   / MuLoCo outer loop, pseudogradient compression, simulated
+//!   collectives, network wall-clock model, pseudogradient spectral
+//!   analysis and the scaling-law toolkit.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod collectives;
+pub mod compress;
+pub mod data;
+pub mod evalloss;
+pub mod experiments;
+pub mod metrics;
+pub mod netsim;
+pub mod runtime;
+pub mod scaling;
+pub mod util;

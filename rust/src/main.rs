@@ -1,0 +1,154 @@
+//! `muloco` — CLI launcher for the MuLoCo reproduction.
+//!
+//! Subcommands:
+//!   train       run one training job (method/model/K/H/compression...)
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!   info        print a config's manifest summary
+//!   list        list available experiments
+//!
+//! Examples:
+//!   muloco train --model nano --method muloco --workers 8 --steps 240
+//!   muloco experiment fig1a --preset fast
+//!   muloco experiment all
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use muloco::compress::Compression;
+use muloco::coordinator::{train, Method, TrainConfig};
+use muloco::experiments;
+use muloco::metrics::RunLogger;
+use muloco::runtime::Session;
+use muloco::util::cli::Args;
+
+const BOOL_FLAGS: &[&str] = &["ef", "quiet"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, BOOL_FLAGS)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        "info" => cmd_info(&args),
+        "list" => {
+            for (id, desc) in experiments::registry_names() {
+                println!("{id:10}  {desc}");
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "nano");
+    let method = Method::parse(&args.get_or("method", "muloco"))?;
+    let mut cfg = TrainConfig::new(&model, method);
+    let workers = args.get_parse("workers", cfg.workers)?;
+    cfg = cfg.tuned_outer(workers);
+    cfg.sync_interval = args.get_parse("sync-interval", cfg.sync_interval)?;
+    cfg.total_steps = args.get_parse("steps", cfg.total_steps)?;
+    cfg.global_batch = args.get_parse("batch", cfg.global_batch)?;
+    cfg.lr = args.get_parse("lr", cfg.lr)?;
+    cfg.weight_decay = args.get_parse("wd", cfg.weight_decay)?;
+    cfg.warmup_steps = args.get_parse("warmup", cfg.warmup_steps)?;
+    cfg.outer_lr = args.get_parse("outer-lr", cfg.outer_lr)?;
+    cfg.outer_momentum = args.get_parse("outer-momentum", cfg.outer_momentum)?;
+    cfg.streaming_partitions =
+        args.get_parse("streaming", cfg.streaming_partitions)?;
+    cfg.eval_every = args.get_parse("eval-every", cfg.eval_every)?;
+    cfg.eval_batches = args.get_parse("eval-batches", cfg.eval_batches)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    if let Some(spec) = args.get("compression") {
+        cfg.compression = Compression::parse(spec)?;
+    }
+    cfg.error_feedback = args.flag("ef");
+    let quiet = args.flag("quiet");
+    let group = args.get_or("log-group", "train");
+    let label = args.get_or(
+        "label",
+        &format!("{}-{}-K{}", model, method.name(), cfg.workers),
+    );
+    args.finish()?;
+
+    let sess = Session::load(&artifacts_dir(args).join(&model))?;
+    if !quiet {
+        println!(
+            "{} on {} ({} params): K={} H={} B={} steps={} lr={} compression={:?}",
+            method.name(), model, sess.manifest.config.param_count,
+            cfg.workers, cfg.sync_interval, cfg.global_batch,
+            cfg.total_steps, cfg.lr, cfg.compression
+        );
+    }
+    let result = train(&sess, &cfg)?;
+    if !quiet {
+        for (step, loss) in &result.eval_curve {
+            println!("  step {step:>6}  eval loss {loss:.4}");
+        }
+    }
+    println!(
+        "final: smoothed={:.4} raw={:.4} acc={:.3} tokens={} \
+         comm/worker={}B wall={:.1}s",
+        result.smoothed_final, result.raw_final, result.final_acc,
+        result.tokens, result.comm.bytes_per_worker, result.wall_secs
+    );
+    RunLogger::new(&group)?.log(&label, &result)?;
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let preset = args.get_or("preset", "fast");
+    let artifacts = artifacts_dir(args);
+    args.finish()?;
+    experiments::run(&id, &preset, &artifacts)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "nano");
+    let artifacts = artifacts_dir(args);
+    args.finish()?;
+    let man = muloco::runtime::Manifest::load(&artifacts.join(&model))?;
+    let c = &man.config;
+    println!("config {} (paper scale {})", c.name, c.paper_scale);
+    println!("  layers={} d_model={} heads={} d_ff={} vocab={} seq={}",
+             c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab, c.seq_len);
+    println!("  params={} flops/token={:.0}", c.param_count, c.flops_per_token);
+    println!("  tensors={} hidden={} partitions={}",
+             man.params.len(), man.muon_hidden_indices.len(), man.n_partitions());
+    Ok(())
+}
+
+const HELP: &str = "\
+muloco — MuLoCo/DiLoCo distributed-training reproduction
+
+USAGE:
+  muloco train [--model M] [--method muloco|diloco|dp-muon|dp-adamw]
+               [--workers K] [--sync-interval H] [--steps N] [--batch B]
+               [--lr F] [--wd F] [--outer-lr F] [--outer-momentum F]
+               [--compression none|q<bits>-<linear|stat>[-rw]|topk<frac>]
+               [--ef] [--streaming J] [--seed S] [--label L]
+  muloco experiment <id|all> [--preset fast|full]
+  muloco info --model M
+  muloco list
+";

@@ -1,0 +1,98 @@
+//! Run logging: persist training curves + run summaries under results/.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::RunResult;
+
+/// Writes one run's curves to `results/<group>/runs/<label>.csv` and a
+/// summary line into `results/<group>/summary.csv` (append).
+pub struct RunLogger {
+    dir: PathBuf,
+}
+
+impl RunLogger {
+    pub fn new(group: &str) -> Result<RunLogger> {
+        let dir = Path::new("results").join(group);
+        fs::create_dir_all(dir.join("runs"))?;
+        Ok(RunLogger { dir })
+    }
+
+    pub fn log(&self, label: &str, r: &RunResult) -> Result<()> {
+        let mut csv = String::from("step,train_loss,eval_loss,eval_acc\n");
+        let mut eval_iter = r.eval_curve.iter().peekable();
+        let mut acc_iter = r.acc_curve.iter().peekable();
+        for (step, tl) in &r.train_curve {
+            let (el, ac) = match eval_iter.peek() {
+                Some((es, el)) if es == step => {
+                    let el = *el;
+                    eval_iter.next();
+                    let ac = acc_iter.next().map(|(_, a)| *a).unwrap_or(f64::NAN);
+                    (format!("{el}"), format!("{ac}"))
+                }
+                _ => (String::new(), String::new()),
+            };
+            csv.push_str(&format!("{step},{tl},{el},{ac}\n"));
+        }
+        fs::write(self.dir.join("runs").join(format!("{label}.csv")), csv)?;
+
+        let summary_path = self.dir.join("summary.csv");
+        let mut summary = if summary_path.exists() {
+            fs::read_to_string(&summary_path)?
+        } else {
+            String::from(
+                "label,smoothed_final,raw_final,final_acc,tokens,\
+                 bytes_per_worker,wall_secs\n")
+        };
+        summary.push_str(&format!(
+            "{label},{:.6},{:.6},{:.4},{},{},{:.2}\n",
+            r.smoothed_final, r.raw_final, r.final_acc, r.tokens,
+            r.comm.bytes_per_worker, r.wall_secs
+        ));
+        fs::write(summary_path, summary)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CommStats;
+    use crate::runtime::ExecStats;
+
+    fn fake_result() -> RunResult {
+        RunResult {
+            eval_curve: vec![(30, 3.0), (60, 2.5)],
+            acc_curve: vec![(30, 0.2), (60, 0.3)],
+            train_curve: (1..=60).map(|s| (s, 4.0 - 0.01 * s as f64)).collect(),
+            smoothed_final: 2.6,
+            raw_final: 2.5,
+            final_acc: 0.3,
+            comm: CommStats::default(),
+            exec: ExecStats::default(),
+            wall_secs: 1.0,
+            tokens: 1000,
+            final_params: None,
+        }
+    }
+
+    #[test]
+    fn writes_curves_and_summary() {
+        let tmp = std::env::temp_dir().join(format!("muloco-test-{}", std::process::id()));
+        let old = std::env::current_dir().unwrap();
+        fs::create_dir_all(&tmp).unwrap();
+        std::env::set_current_dir(&tmp).unwrap();
+        let logger = RunLogger::new("unit").unwrap();
+        logger.log("demo", &fake_result()).unwrap();
+        logger.log("demo2", &fake_result()).unwrap();
+        let run = fs::read_to_string("results/unit/runs/demo.csv").unwrap();
+        assert!(run.lines().count() == 61);
+        assert!(run.contains("30,"));
+        let summary = fs::read_to_string("results/unit/summary.csv").unwrap();
+        assert_eq!(summary.lines().count(), 3);
+        std::env::set_current_dir(old).unwrap();
+        fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,183 @@
+//! Idealized wall-clock / bandwidth model (Tables 9-10, Figs 14/16/20).
+//!
+//! The paper estimates training time by combining (i) network
+//! communication time, (ii) optimizer step time and (iii) fw/bw compute
+//! time, assuming the cluster is scaled proportionally to the batch
+//! size (so per-step compute time is batch-independent).  We reproduce
+//! that methodology exactly, parameterizing the compute/optimizer terms
+//! with timings measured on this host's PJRT runs (`ExecStats`).
+//!
+//! Communication volumes:
+//! * DP (AdamW/Muon): ring all-reduce of gradients every step —
+//!   per-worker volume 2*(K-1)/K * bytes.
+//! * DiLoCo/MuLoCo: pseudogradient exchange every H steps.  Uncompressed
+//!   uses a ring all-reduce; compressed uses the paper's all-to-all
+//!   reduce-scatter + ring all-gather (same aggregate volume, two
+//!   quantization hops — see `collectives`).
+//! * Streaming partitions divide *peak* bandwidth by J but keep the
+//!   total volume unchanged.
+
+/// Gigabit (decimal) per second in bytes/sec.
+pub const GBIT: f64 = 1e9 / 8.0;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CommPattern {
+    /// all-reduce every step (data-parallel baseline)
+    EveryStep,
+    /// pseudogradient exchange every H steps
+    EveryH { h: u64 },
+}
+
+/// Everything the analytic model needs about one training setup.
+#[derive(Clone, Debug)]
+pub struct SystemProfile {
+    /// measured fw/bw time for one optimizer step's worth of compute
+    /// at the reference batch (cluster-scaling makes this B-invariant)
+    pub compute_secs_per_step: f64,
+    /// measured optimizer apply time per step
+    pub optimizer_secs_per_step: f64,
+    /// parameter bytes (fp32)
+    pub param_bytes: f64,
+    /// bytes actually put on the wire per sync per worker
+    /// (compressed pseudogradient, or gradient bytes for DP)
+    pub wire_bytes_per_sync: f64,
+    pub workers: usize,
+    pub pattern: CommPattern,
+}
+
+impl SystemProfile {
+    /// Ring all-reduce per-worker volume for n bytes across K workers.
+    pub fn ring_allreduce_bytes(n: f64, k: usize) -> f64 {
+        if k <= 1 {
+            0.0
+        } else {
+            2.0 * (k as f64 - 1.0) / k as f64 * n
+        }
+    }
+
+    /// Communication seconds per *training step* at `bw` bytes/sec.
+    pub fn comm_secs_per_step(&self, bw: f64) -> f64 {
+        if self.workers <= 1 && matches!(self.pattern, CommPattern::EveryStep) {
+            return 0.0;
+        }
+        let per_sync =
+            Self::ring_allreduce_bytes(self.wire_bytes_per_sync, self.workers.max(2));
+        match self.pattern {
+            CommPattern::EveryStep => per_sync / bw,
+            CommPattern::EveryH { h } => per_sync / bw / h as f64,
+        }
+    }
+
+    /// Total seconds per training step.
+    pub fn step_secs(&self, bw: f64) -> f64 {
+        self.compute_secs_per_step
+            + self.optimizer_secs_per_step
+            + self.comm_secs_per_step(bw)
+    }
+
+    /// Wall-clock hours for `steps` sequential steps.
+    pub fn training_hours(&self, steps: u64, bw: f64) -> f64 {
+        self.step_secs(bw) * steps as f64 / 3600.0
+    }
+
+    /// Fraction of time doing useful compute (Fig 16).
+    pub fn utilization(&self, bw: f64) -> f64 {
+        let c = self.compute_secs_per_step + self.optimizer_secs_per_step;
+        c / (c + self.comm_secs_per_step(bw))
+    }
+
+    /// Smallest bandwidth achieving `target` utilization (bisection).
+    pub fn bandwidth_for_utilization(&self, target: f64) -> f64 {
+        let mut lo = 1e3f64;
+        let mut hi = 1e15;
+        for _ in 0..200 {
+            let mid = (lo * hi).sqrt();
+            if self.utilization(mid) >= target {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dp(k: usize) -> SystemProfile {
+        SystemProfile {
+            compute_secs_per_step: 1.0,
+            optimizer_secs_per_step: 0.01,
+            param_bytes: 4e9,
+            wire_bytes_per_sync: 4e9,
+            workers: k,
+            pattern: CommPattern::EveryStep,
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_volume() {
+        assert_eq!(SystemProfile::ring_allreduce_bytes(100.0, 1), 0.0);
+        assert!((SystemProfile::ring_allreduce_bytes(100.0, 2) - 100.0).abs() < 1e-9);
+        assert!((SystemProfile::ring_allreduce_bytes(100.0, 4) - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diloco_amortizes_by_h() {
+        let mut p = dp(8);
+        p.pattern = CommPattern::EveryH { h: 30 };
+        let dp_t = dp(8).comm_secs_per_step(10.0 * GBIT);
+        let dl_t = p.comm_secs_per_step(10.0 * GBIT);
+        assert!((dp_t / dl_t - 30.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn low_bandwidth_dominated_by_comm() {
+        let p = dp(8);
+        let u_low = p.utilization(1.0 * GBIT);
+        let u_high = p.utilization(100_000.0 * GBIT);
+        assert!(u_low < 0.1, "{u_low}");
+        assert!(u_high > 0.99, "{u_high}");
+    }
+
+    #[test]
+    fn utilization_monotonic_in_bandwidth() {
+        let p = dp(4);
+        let mut prev = 0.0;
+        for bw in [1e8, 1e9, 1e10, 1e11, 1e12] {
+            let u = p.utilization(bw);
+            assert!(u >= prev);
+            prev = u;
+        }
+    }
+
+    #[test]
+    fn bandwidth_for_target_utilization_inverts() {
+        let p = dp(8);
+        let bw = p.bandwidth_for_utilization(0.99);
+        assert!(p.utilization(bw) >= 0.989);
+        assert!(p.utilization(bw / 4.0) < 0.99);
+    }
+
+    #[test]
+    fn compressed_diloco_needs_two_orders_less_bandwidth() {
+        // the Fig 16 claim: DiLoCo + 4-bit needs ~100x less bandwidth
+        // than DP fp32 for 99% utilization
+        let dp_p = dp(8);
+        let mut dl = dp(8);
+        dl.pattern = CommPattern::EveryH { h: 30 };
+        dl.wire_bytes_per_sync = 4e9 / 8.0; // 4-bit
+        let bw_dp = dp_p.bandwidth_for_utilization(0.99);
+        let bw_dl = dl.bandwidth_for_utilization(0.99);
+        assert!(bw_dp / bw_dl > 100.0, "{}", bw_dp / bw_dl);
+    }
+
+    #[test]
+    fn single_worker_dp_has_no_comm() {
+        let p = dp(1);
+        assert_eq!(p.comm_secs_per_step(GBIT), 0.0);
+        assert_eq!(p.utilization(GBIT), 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.  Describes the flat tensor layout of every AOT
+//! executable so the coordinator can marshal buffers without ever
+//! interpreting model structure.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub kind: TensorKind,
+    /// streaming-DiLoCo partition id (0..3)
+    pub partition: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorKind {
+    Embed,
+    Head,
+    Norm,
+    Hidden,
+}
+
+impl TensorKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "embed" => TensorKind::Embed,
+            "head" => TensorKind::Head,
+            "norm" => TensorKind::Norm,
+            "hidden" => TensorKind::Hidden,
+            other => bail!("unknown tensor kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub name: String,
+    pub paper_scale: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    pub param_count: usize,
+    pub flops_per_token: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct StateSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelDims,
+    pub params: Vec<TensorSpec>,
+    pub adamw_state: Vec<StateSpec>,
+    pub muon_state: Vec<StateSpec>,
+    pub muon_hidden_indices: Vec<usize>,
+    pub muon_adamw_indices: Vec<usize>,
+    pub executables: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = v.get("config")?;
+        let config = ModelDims {
+            name: c.get("name")?.as_str()?.to_string(),
+            paper_scale: c.get("paper_scale")?.as_str()?.to_string(),
+            n_layers: c.get("n_layers")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            d_ff: c.get("d_ff")?.as_usize()?,
+            vocab: c.get("vocab")?.as_usize()?,
+            seq_len: c.get("seq_len")?.as_usize()?,
+            microbatch: c.get("microbatch")?.as_usize()?,
+            param_count: c.get("param_count")?.as_usize()?,
+            flops_per_token: c.get("flops_per_token")?.as_f64()?,
+        };
+
+        let mut params = Vec::new();
+        for p in v.get("params")?.as_arr()? {
+            let shape: Vec<usize> = p
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?;
+            params.push(TensorSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                size: p.get("size")?.as_usize()?,
+                kind: TensorKind::parse(p.get("kind")?.as_str()?)?,
+                partition: p.get("partition")?.as_usize()?,
+                shape,
+            });
+        }
+
+        let state = |key: &str| -> Result<Vec<StateSpec>> {
+            let mut out = Vec::new();
+            for s in v.get(key)?.as_arr()? {
+                let shape: Vec<usize> = s
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_usize())
+                    .collect::<Result<_>>()?;
+                out.push(StateSpec {
+                    name: s.get("name")?.as_str()?.to_string(),
+                    size: shape.iter().product(),
+                    shape,
+                });
+            }
+            Ok(out)
+        };
+
+        let idx = |key: &str| -> Result<Vec<usize>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect()
+        };
+
+        let mut executables = Vec::new();
+        if let Json::Obj(m) = v.get("executables")? {
+            for (k, val) in m {
+                executables.push((k.clone(), val.as_str()?.to_string()));
+            }
+        } else {
+            bail!("executables must be an object");
+        }
+
+        let man = Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            params,
+            adamw_state: state("adamw_state")?,
+            muon_state: state("muon_state")?,
+            muon_hidden_indices: idx("muon_hidden_indices")?,
+            muon_adamw_indices: idx("muon_adamw_indices")?,
+            executables,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.size).sum();
+        if total != self.config.param_count {
+            bail!("param sizes ({total}) disagree with param_count ({})",
+                  self.config.param_count);
+        }
+        if self.adamw_state.len() != 2 * self.params.len() {
+            bail!("adamw state must be [m..] + [v..]");
+        }
+        let nh = self.muon_hidden_indices.len();
+        let na = self.muon_adamw_indices.len();
+        if nh + na != self.params.len() {
+            bail!("muon routing does not cover the param list");
+        }
+        if self.muon_state.len() != nh + 2 * na {
+            bail!("muon state layout mismatch");
+        }
+        for &i in &self.muon_hidden_indices {
+            if self.params[i].kind != TensorKind::Hidden {
+                bail!("hidden index {i} points at non-hidden tensor");
+            }
+        }
+        for name in ["init", "fwd_grad", "apply_adamw", "apply_muon", "eval_step"] {
+            if !self.executables.iter().any(|(k, _)| k == name) {
+                bail!("manifest missing executable {name:?}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn exe_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .executables
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, f)| f.clone())
+            .with_context(|| format!("no executable {name:?}"))?;
+        Ok(self.dir.join(file))
+    }
+
+    /// Total number of f32 elements in all parameters.
+    pub fn param_elems(&self) -> usize {
+        self.config.param_count
+    }
+
+    /// Bytes of one full parameter set (f32).
+    pub fn param_bytes(&self) -> usize {
+        4 * self.param_elems()
+    }
+
+    /// Parameter indices belonging to a streaming partition.
+    pub fn partition_indices(&self, part: usize) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.partition == part)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.params.iter().map(|p| p.partition).max().unwrap_or(0) + 1
+    }
+}

@@ -1,0 +1,7 @@
+//! Runtime layer: PJRT client + AOT artifact loading (see DESIGN.md §3).
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{Manifest, ModelDims, StateSpec, TensorKind, TensorSpec};
+pub use session::{ExecStats, Session, Tensors};

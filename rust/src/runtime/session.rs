@@ -1,0 +1,312 @@
+//! PJRT session: loads HLO-text artifacts and exposes typed step calls.
+//!
+//! One `Session` per model config.  The five executables (init,
+//! fwd_grad, apply_adamw, apply_muon, eval_step) are compiled once and
+//! reused for every worker — workers are pure parameter/state vectors,
+//! so a single compiled executable serves all K replicas.
+//!
+//! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
+//! 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids);
+//! the text parser reassigns ids.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+use super::manifest::Manifest;
+
+/// A set of equally-ordered flat tensors (parameters, grads, opt state).
+pub type Tensors = Vec<Vec<f32>>;
+
+/// Wall-clock accounting per executable, used by netsim calibration and
+/// the fig9 system-metrics table.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub fwd_grad_calls: u64,
+    pub fwd_grad_secs: f64,
+    pub apply_calls: u64,
+    pub apply_secs: f64,
+    pub eval_calls: u64,
+    pub eval_secs: f64,
+}
+
+pub struct Session {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    exe_init: PjRtLoadedExecutable,
+    exe_fwd_grad: PjRtLoadedExecutable,
+    exe_apply_adamw: PjRtLoadedExecutable,
+    exe_apply_muon: PjRtLoadedExecutable,
+    exe_eval: PjRtLoadedExecutable,
+    stats: RefCell<ExecStats>,
+}
+
+impl Session {
+    /// Load and compile every executable of a config's artifact dir.
+    pub fn load(artifact_dir: &Path) -> Result<Session> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(wrap)?;
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.exe_path(name)?;
+            let proto = HloModuleProto::from_text_file(&path).map_err(wrap)
+                .with_context(|| format!("loading {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(wrap)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Session {
+            exe_init: compile("init")?,
+            exe_fwd_grad: compile("fwd_grad")?,
+            exe_apply_adamw: compile("apply_adamw")?,
+            exe_apply_muon: compile("apply_muon")?,
+            exe_eval: compile("eval_step")?,
+            manifest,
+            client,
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = ExecStats::default();
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Host -> device transfer with an OWNED buffer.  We deliberately
+    /// avoid `execute::<Literal>`: its C-side input conversion leaks the
+    /// intermediate device buffers (~input bytes per call; measured
+    /// ~190 KB/step at nano, OOM after ~40 cached runs — see
+    /// EXPERIMENTS.md §Perf).  `buffer_from_host_buffer` + `execute_b`
+    /// keeps every input buffer under rust Drop.
+    fn tensor_buffer(&self, data: &[f32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(wrap)
+    }
+
+    fn tokens_buffer(&self, data: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(wrap)
+    }
+
+    fn scalar_buffer(&self, x: f32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[x], &[], None)
+            .map_err(wrap)
+    }
+
+    fn scalar_u32_buffer(&self, x: u32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[x], &[], None)
+            .map_err(wrap)
+    }
+
+    fn run(exe: &PjRtLoadedExecutable, inputs: &[PjRtBuffer]) -> Result<Vec<Literal>> {
+        let result = exe.execute_b::<&PjRtBuffer>(
+            &inputs.iter().collect::<Vec<_>>()).map_err(wrap)?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?
+            .to_tuple()
+            .map_err(wrap)
+    }
+
+    fn unpack(outs: &mut std::vec::IntoIter<Literal>, shapes: &[Vec<usize>])
+              -> Result<Tensors> {
+        let mut tensors = Vec::with_capacity(shapes.len());
+        for shape in shapes {
+            let lit = outs.next().ok_or_else(|| anyhow!("output underflow"))?;
+            let v = lit.to_vec::<f32>().map_err(wrap)?;
+            let want: usize = shape.iter().product();
+            if v.len() != want {
+                bail!("output tensor has {} elems, want {want}", v.len());
+            }
+            tensors.push(v);
+        }
+        Ok(tensors)
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.manifest.params.iter().map(|p| p.shape.clone()).collect()
+    }
+
+    /// Initialize a fresh parameter set from a seed (deterministic).
+    pub fn init_params(&self, seed: u32) -> Result<Tensors> {
+        let outs = Self::run(&self.exe_init, &[self.scalar_u32_buffer(seed)?])?;
+        let mut it = outs.into_iter();
+        Self::unpack(&mut it, &self.param_shapes())
+    }
+
+    /// Zero-initialized AdamW state [m..]+[v..].
+    pub fn zero_adamw_state(&self) -> Tensors {
+        self.manifest
+            .adamw_state
+            .iter()
+            .map(|s| vec![0.0; s.size])
+            .collect()
+    }
+
+    /// Zero-initialized Muon state [mom..]+[m..]+[v..].
+    pub fn zero_muon_state(&self) -> Tensors {
+        self.manifest
+            .muon_state
+            .iter()
+            .map(|s| vec![0.0; s.size])
+            .collect()
+    }
+
+    /// Forward+backward on one microbatch: returns (loss, grads).
+    pub fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
+        let t0 = Instant::now();
+        let cfg = &self.manifest.config;
+        if tokens.len() != cfg.microbatch * cfg.seq_len {
+            bail!("tokens must be microbatch*seq_len = {}",
+                  cfg.microbatch * cfg.seq_len);
+        }
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        inputs.push(
+            self.tokens_buffer(tokens, &[cfg.microbatch, cfg.seq_len])?);
+        let outs = Self::run(&self.exe_fwd_grad, &inputs)?;
+        let mut it = outs.into_iter();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss output"))?
+            .get_first_element::<f32>()
+            .map_err(wrap)?;
+        let grads = Self::unpack(&mut it, &self.param_shapes())?;
+        let mut st = self.stats.borrow_mut();
+        st.fwd_grad_calls += 1;
+        st.fwd_grad_secs += t0.elapsed().as_secs_f64();
+        Ok((loss, grads))
+    }
+
+    /// One AdamW step. state = [m..]+[v..]; t is 1-indexed.
+    pub fn apply_adamw(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)> {
+        let t0 = Instant::now();
+        let np = self.manifest.params.len();
+        if state.len() != 2 * np {
+            bail!("adamw state must have 2*{np} tensors");
+        }
+        let mut inputs = Vec::with_capacity(4 * np + 3);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        for (s, spec) in state.iter().zip(&self.manifest.adamw_state) {
+            inputs.push(self.tensor_buffer(s, &spec.shape)?);
+        }
+        for (g, spec) in grads.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(g, &spec.shape)?);
+        }
+        inputs.push(self.scalar_buffer(t)?);
+        inputs.push(self.scalar_buffer(lr)?);
+        inputs.push(self.scalar_buffer(wd)?);
+        let outs = Self::run(&self.exe_apply_adamw, &inputs)?;
+        let mut it = outs.into_iter();
+        let new_params = Self::unpack(&mut it, &self.param_shapes())?;
+        let state_shapes: Vec<Vec<usize>> = self
+            .manifest
+            .adamw_state
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect();
+        let new_state = Self::unpack(&mut it, &state_shapes)?;
+        let mut st = self.stats.borrow_mut();
+        st.apply_calls += 1;
+        st.apply_secs += t0.elapsed().as_secs_f64();
+        Ok((new_params, new_state))
+    }
+
+    /// One Muon step. state = [mom..]+[m..]+[v..] per the manifest.
+    pub fn apply_muon(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)> {
+        let t0 = Instant::now();
+        let np = self.manifest.params.len();
+        if state.len() != self.manifest.muon_state.len() {
+            bail!("muon state must have {} tensors",
+                  self.manifest.muon_state.len());
+        }
+        let mut inputs = Vec::with_capacity(np + state.len() + np + 3);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        for (s, spec) in state.iter().zip(&self.manifest.muon_state) {
+            inputs.push(self.tensor_buffer(s, &spec.shape)?);
+        }
+        for (g, spec) in grads.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(g, &spec.shape)?);
+        }
+        inputs.push(self.scalar_buffer(t)?);
+        inputs.push(self.scalar_buffer(lr)?);
+        inputs.push(self.scalar_buffer(wd)?);
+        let outs = Self::run(&self.exe_apply_muon, &inputs)?;
+        let mut it = outs.into_iter();
+        let new_params = Self::unpack(&mut it, &self.param_shapes())?;
+        let state_shapes: Vec<Vec<usize>> = self
+            .manifest
+            .muon_state
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect();
+        let new_state = Self::unpack(&mut it, &state_shapes)?;
+        let mut st = self.stats.borrow_mut();
+        st.apply_calls += 1;
+        st.apply_secs += t0.elapsed().as_secs_f64();
+        Ok((new_params, new_state))
+    }
+
+    /// Eval loss + next-token accuracy on one microbatch.
+    pub fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        let cfg = &self.manifest.config;
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        inputs.push(
+            self.tokens_buffer(tokens, &[cfg.microbatch, cfg.seq_len])?);
+        let outs = Self::run(&self.exe_eval, &inputs)?;
+        if outs.len() != 2 {
+            bail!("eval_step must return (loss, acc)");
+        }
+        let loss = outs[0].get_first_element::<f32>().map_err(wrap)?;
+        let acc = outs[1].get_first_element::<f32>().map_err(wrap)?;
+        let mut st = self.stats.borrow_mut();
+        st.eval_calls += 1;
+        st.eval_secs += t0.elapsed().as_secs_f64();
+        Ok((loss, acc))
+    }
+}
+
+/// The xla crate has its own error type; fold it into anyhow.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

@@ -1,0 +1,146 @@
+//! Critical batch size & iso-loss training-time efficiency (§7.2).
+//!
+//! * B_opt: the batch size with the best final (smoothed) eval loss.
+//! * B_crit: the largest batch size with L(B) <= 1.01 * L(B_opt)
+//!   (the paper's definition under Fig 1b / §7.2).
+//! * CBS power laws B_crit(D) = a D^alpha.
+//! * Iso-loss training-time efficiency T_AdamW(L) / T_opt(L) with the
+//!   compute-savings x parallelism-advantage decomposition of Eq. (6),
+//!   using T(L) = C(L) / B_crit(C(L)) as the sequential-FLOPs proxy.
+
+use super::powerlaw::PowerLaw;
+
+/// (B_opt, L(B_opt), B_crit) from (batch, final loss) measurements.
+pub fn critical_batch(points: &[(f64, f64)], tolerance: f64)
+                      -> (f64, f64, f64) {
+    assert!(!points.is_empty());
+    let (b_opt, l_opt) = points
+        .iter()
+        .copied()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let cutoff = l_opt * (1.0 + tolerance);
+    let b_crit = points
+        .iter()
+        .copied()
+        .filter(|(_, l)| *l <= cutoff)
+        .map(|(b, _)| b)
+        .fold(f64::NEG_INFINITY, f64::max);
+    (b_opt, l_opt, b_crit)
+}
+
+/// The paper's tolerance: L(B_crit) <= 1.01 * L(B_opt).
+pub fn critical_batch_1pct(points: &[(f64, f64)]) -> (f64, f64, f64) {
+    critical_batch(points, 0.01)
+}
+
+/// Chinchilla bookkeeping: D = 20N, C = 6ND  =>  C = 6 N (20 N).
+pub fn chinchilla_compute(n_params: f64) -> f64 {
+    6.0 * n_params * 20.0 * n_params
+}
+
+pub fn tokens_from_compute(c: f64) -> f64 {
+    // C = 6 N D with D = 20N  =>  N = sqrt(C/120), D = 20N
+    20.0 * (c / 120.0).sqrt()
+}
+
+/// Sequential-FLOPs training-time proxy T(L) = C(L) / B_crit(D(C(L))).
+/// `loss_law`: L(C); `cbs_law`: B_crit(D).
+pub fn time_proxy(loss_law: &PowerLaw, cbs_law: &PowerLaw, l: f64)
+                  -> Option<f64> {
+    let c = loss_law.invert(l)?;
+    let d = tokens_from_compute(c);
+    let bcrit = cbs_law.eval(d);
+    if bcrit <= 0.0 {
+        return None;
+    }
+    Some(c / bcrit)
+}
+
+/// Iso-loss efficiency vs a baseline optimizer, with the Eq. (6)
+/// decomposition.  Returns (total_ratio, compute_ratio, parallel_ratio).
+pub fn iso_loss_efficiency(
+    baseline_loss: &PowerLaw,
+    baseline_cbs: &PowerLaw,
+    opt_loss: &PowerLaw,
+    opt_cbs: &PowerLaw,
+    l: f64,
+) -> Option<(f64, f64, f64)> {
+    let c_base = baseline_loss.invert(l)?;
+    let c_opt = opt_loss.invert(l)?;
+    let compute_ratio = c_base / c_opt;
+    let b_base = baseline_cbs.eval(tokens_from_compute(c_base));
+    let b_opt = opt_cbs.eval(tokens_from_compute(c_opt));
+    let parallel_ratio = b_opt / b_base;
+    Some((compute_ratio * parallel_ratio, compute_ratio, parallel_ratio))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_bopt_and_bcrit() {
+        // classic CBS curve: flat then degrading
+        let pts = vec![
+            (32.0, 2.700),
+            (64.0, 2.690),
+            (128.0, 2.695),
+            (256.0, 2.710),
+            (512.0, 2.760),
+            (1024.0, 2.900),
+        ];
+        let (b_opt, l_opt, b_crit) = critical_batch_1pct(&pts);
+        assert_eq!(b_opt, 64.0);
+        assert!((l_opt - 2.69).abs() < 1e-9);
+        assert_eq!(b_crit, 256.0); // 2.710 <= 1.01*2.690=2.7169, 2.760 not
+    }
+
+    #[test]
+    fn bcrit_at_least_bopt() {
+        let pts = vec![(16.0, 3.0), (32.0, 2.5), (64.0, 3.2)];
+        let (b_opt, _, b_crit) = critical_batch_1pct(&pts);
+        assert!(b_crit >= b_opt);
+    }
+
+    #[test]
+    fn chinchilla_identities() {
+        let n = 1e9;
+        let c = chinchilla_compute(n);
+        assert!((c - 1.2e20).abs() / 1.2e20 < 1e-12);
+        let d = tokens_from_compute(c);
+        assert!((d - 20.0 * n).abs() / (20.0 * n) < 1e-9);
+    }
+
+    #[test]
+    fn time_proxy_decreases_with_larger_cbs() {
+        let loss = PowerLaw { a: 400.0, alpha: -0.2, c: 1.7 };
+        let small_cbs = PowerLaw { a: 1e3, alpha: 0.2, c: 0.0 };
+        let big_cbs = PowerLaw { a: 4e3, alpha: 0.2, c: 0.0 };
+        let l = 2.2;
+        let t_small = time_proxy(&loss, &small_cbs, l).unwrap();
+        let t_big = time_proxy(&loss, &big_cbs, l).unwrap();
+        assert!((t_small / t_big - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_decomposition_multiplies() {
+        let base_loss = PowerLaw { a: 400.0, alpha: -0.18, c: 1.7 };
+        let base_cbs = PowerLaw { a: 800.0, alpha: 0.25, c: 0.0 };
+        let opt_loss = PowerLaw { a: 380.0, alpha: -0.20, c: 1.7 };
+        let opt_cbs = PowerLaw { a: 1600.0, alpha: 0.30, c: 0.0 };
+        let (total, comp, par) =
+            iso_loss_efficiency(&base_loss, &base_cbs, &opt_loss, &opt_cbs, 2.1)
+                .unwrap();
+        assert!((total - comp * par).abs() < 1e-9);
+        assert!(comp > 1.0); // the better optimizer needs less compute
+        assert!(par > 1.0); // and tolerates bigger batches
+    }
+
+    #[test]
+    fn unreachable_loss_returns_none() {
+        let loss = PowerLaw { a: 400.0, alpha: -0.2, c: 1.7 };
+        let cbs = PowerLaw { a: 1e3, alpha: 0.2, c: 0.0 };
+        assert!(time_proxy(&loss, &cbs, 1.6).is_none());
+    }
+}

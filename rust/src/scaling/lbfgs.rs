@@ -1,0 +1,214 @@
+//! L-BFGS substrate (Nocedal 1980) with backtracking line search.
+//!
+//! The paper fits every scaling law by minimizing a Huber loss in log
+//! space with L-BFGS from hundreds of random restarts (§7.1).  No
+//! optimization crates are available offline, so this is a small,
+//! self-contained two-loop-recursion implementation with numerical
+//! gradients as a fallback for objectives without analytic derivatives.
+
+/// Objective: value + gradient at x.
+pub trait Objective {
+    fn dim(&self) -> usize;
+    fn value(&self, x: &[f64]) -> f64;
+    /// Default: central finite differences.
+    fn gradient(&self, x: &[f64], grad: &mut [f64]) {
+        let h = 1e-6;
+        let mut xp = x.to_vec();
+        let n = xp.len();
+        for i in 0..n {
+            let x0 = xp[i];
+            xp[i] = x0 + h;
+            let fp = self.value(&xp);
+            xp[i] = x0 - h;
+            let fm = self.value(&xp);
+            xp[i] = x0;
+            grad[i] = (fp - fm) / (2.0 * h);
+        }
+    }
+}
+
+pub struct LbfgsResult {
+    pub x: Vec<f64>,
+    pub value: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Minimize `obj` from `x0`.  `m` = history size.
+pub fn minimize(obj: &dyn Objective, x0: &[f64], max_iter: usize) -> LbfgsResult {
+    let n = obj.dim();
+    assert_eq!(x0.len(), n);
+    let m = 8usize;
+    let mut x = x0.to_vec();
+    let mut f = obj.value(&x);
+    let mut g = vec![0.0; n];
+    obj.gradient(&x, &mut g);
+
+    let mut s_hist: Vec<Vec<f64>> = Vec::new();
+    let mut y_hist: Vec<Vec<f64>> = Vec::new();
+    let mut rho_hist: Vec<f64> = Vec::new();
+
+    for iter in 0..max_iter {
+        let gnorm = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if gnorm < 1e-10 || !f.is_finite() {
+            return LbfgsResult { x, value: f, iterations: iter, converged: f.is_finite() };
+        }
+
+        // two-loop recursion for the search direction
+        let mut q = g.clone();
+        let k = s_hist.len();
+        let mut alphas = vec![0.0; k];
+        for i in (0..k).rev() {
+            let a = rho_hist[i]
+                * s_hist[i].iter().zip(&q).map(|(s, q)| s * q).sum::<f64>();
+            alphas[i] = a;
+            for (qj, yj) in q.iter_mut().zip(&y_hist[i]) {
+                *qj -= a * yj;
+            }
+        }
+        // initial Hessian scaling gamma = s'y / y'y
+        if k > 0 {
+            let sy: f64 = s_hist[k - 1].iter().zip(&y_hist[k - 1]).map(|(s, y)| s * y).sum();
+            let yy: f64 = y_hist[k - 1].iter().map(|y| y * y).sum();
+            let gamma = if yy > 0.0 { sy / yy } else { 1.0 };
+            for qj in q.iter_mut() {
+                *qj *= gamma;
+            }
+        }
+        for i in 0..k {
+            let b = rho_hist[i]
+                * y_hist[i].iter().zip(&q).map(|(y, q)| y * q).sum::<f64>();
+            for (qj, sj) in q.iter_mut().zip(&s_hist[i]) {
+                *qj += (alphas[i] - b) * sj;
+            }
+        }
+        // descent direction
+        let mut d: Vec<f64> = q.iter().map(|v| -v).collect();
+        let dg: f64 = d.iter().zip(&g).map(|(d, g)| d * g).sum();
+        if dg >= 0.0 {
+            // not a descent direction: reset to steepest descent
+            d = g.iter().map(|v| -v).collect();
+            s_hist.clear();
+            y_hist.clear();
+            rho_hist.clear();
+        }
+
+        // backtracking Armijo line search
+        let dg: f64 = d.iter().zip(&g).map(|(d, g)| d * g).sum();
+        let mut step = 1.0f64;
+        let c1 = 1e-4;
+        let mut xn = vec![0.0; n];
+        let mut fn_ = f;
+        let mut ok = false;
+        for _ in 0..50 {
+            for i in 0..n {
+                xn[i] = x[i] + step * d[i];
+            }
+            fn_ = obj.value(&xn);
+            if fn_.is_finite() && fn_ <= f + c1 * step * dg {
+                ok = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !ok {
+            return LbfgsResult { x, value: f, iterations: iter, converged: true };
+        }
+
+        let mut gn = vec![0.0; n];
+        obj.gradient(&xn, &mut gn);
+        let s: Vec<f64> = xn.iter().zip(&x).map(|(a, b)| a - b).collect();
+        let y: Vec<f64> = gn.iter().zip(&g).map(|(a, b)| a - b).collect();
+        let sy: f64 = s.iter().zip(&y).map(|(s, y)| s * y).sum();
+        if sy > 1e-12 {
+            if s_hist.len() == m {
+                s_hist.remove(0);
+                y_hist.remove(0);
+                rho_hist.remove(0);
+            }
+            rho_hist.push(1.0 / sy);
+            s_hist.push(s);
+            y_hist.push(y);
+        }
+        if (f - fn_).abs() < 1e-14 * f.abs().max(1.0) {
+            return LbfgsResult { x: xn, value: fn_, iterations: iter + 1, converged: true };
+        }
+        x = xn;
+        f = fn_;
+        g = gn;
+    }
+    LbfgsResult { x, value: f, iterations: max_iter, converged: true }
+}
+
+/// Huber loss H_delta(r) (paper: delta = 1e-3, applied to log residuals).
+pub fn huber(r: f64, delta: f64) -> f64 {
+    let a = r.abs();
+    if a <= delta {
+        0.5 * r * r
+    } else {
+        delta * (a - 0.5 * delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Quadratic {
+        center: Vec<f64>,
+    }
+
+    impl Objective for Quadratic {
+        fn dim(&self) -> usize {
+            self.center.len()
+        }
+        fn value(&self, x: &[f64]) -> f64 {
+            x.iter()
+                .zip(&self.center)
+                .enumerate()
+                .map(|(i, (xi, ci))| (i as f64 + 1.0) * (xi - ci) * (xi - ci))
+                .sum()
+        }
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        let obj = Quadratic { center: vec![1.0, -2.0, 3.0] };
+        let r = minimize(&obj, &[0.0, 0.0, 0.0], 200);
+        for (xi, ci) in r.x.iter().zip(&obj.center) {
+            assert!((xi - ci).abs() < 1e-5, "{:?}", r.x);
+        }
+    }
+
+    struct Rosenbrock;
+
+    impl Objective for Rosenbrock {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn value(&self, x: &[f64]) -> f64 {
+            (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2)
+        }
+    }
+
+    #[test]
+    fn minimizes_rosenbrock() {
+        let r = minimize(&Rosenbrock, &[-1.2, 1.0], 2000);
+        assert!((r.x[0] - 1.0).abs() < 1e-3, "{:?}", r.x);
+        assert!((r.x[1] - 1.0).abs() < 1e-3, "{:?}", r.x);
+    }
+
+    #[test]
+    fn huber_regimes() {
+        assert!((huber(0.0005, 0.001) - 0.5 * 0.0005f64.powi(2)).abs() < 1e-15);
+        let big = huber(1.0, 0.001);
+        assert!((big - 0.001 * (1.0 - 0.0005)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn robust_to_bad_start() {
+        let obj = Quadratic { center: vec![5.0] };
+        let r = minimize(&obj, &[1e6], 500);
+        assert!((r.x[0] - 5.0).abs() < 1e-4);
+    }
+}

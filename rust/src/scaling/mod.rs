@@ -1,0 +1,11 @@
+//! Scaling-law toolkit: L-BFGS, power-law fitting, CBS, iso-loss (§7).
+
+pub mod cbs;
+pub mod lbfgs;
+pub mod powerlaw;
+
+pub use cbs::{chinchilla_compute, critical_batch, critical_batch_1pct,
+              iso_loss_efficiency, time_proxy, tokens_from_compute};
+pub use lbfgs::{huber, minimize, LbfgsResult, Objective};
+pub use powerlaw::{fit_fixed_offset, fit_free_offset, fit_joint_irreducible,
+                   fit_pure, mean_abs_log_residual, PowerLaw};

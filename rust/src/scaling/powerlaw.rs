@@ -1,0 +1,278 @@
+//! Power-law fitting for compute scaling laws (§7.1, Tables 2/6).
+//!
+//! Implements the paper's three candidate forms
+//!   (i)   L(C) = a * C^alpha
+//!   (ii)  L(C) = a * C^alpha + c          (per-run irreducible loss)
+//!   (iii) L(C) = a * C^alpha + L_irr      (joint irreducible loss)
+//! fit by minimizing sum_i Huber_delta(log Lhat_i - log L_i) with
+//! delta = 1e-3, L-BFGS, and multi-start restarts; the joint-L_irr fit
+//! uses the paper's three-phase grid search (coarse sweep, zoom,
+//! final refit).
+
+use super::lbfgs::{huber, minimize, Objective};
+use crate::util::rng::Rng;
+
+pub const HUBER_DELTA: f64 = 1e-3;
+
+/// One fitted curve L(x) = a * x^alpha + c.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLaw {
+    pub a: f64,
+    pub alpha: f64,
+    pub c: f64,
+}
+
+impl PowerLaw {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * x.powf(self.alpha) + self.c
+    }
+
+    /// Invert L -> x (requires L > c and alpha != 0).
+    pub fn invert(&self, l: f64) -> Option<f64> {
+        let excess = l - self.c;
+        if excess <= 0.0 || self.a <= 0.0 || self.alpha == 0.0 {
+            return None;
+        }
+        Some((excess / self.a).powf(1.0 / self.alpha))
+    }
+}
+
+/// Log-space Huber objective over (log a, alpha) with fixed offset c.
+struct LogHuberFit<'a> {
+    xs: &'a [f64],
+    ys: &'a [f64],
+    c: f64,
+}
+
+impl Objective for LogHuberFit<'_> {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn value(&self, p: &[f64]) -> f64 {
+        let (log_a, alpha) = (p[0], p[1]);
+        let mut total = 0.0;
+        for (&x, &y) in self.xs.iter().zip(self.ys) {
+            let pred = (log_a + alpha * x.ln()).exp() + self.c;
+            if pred <= 0.0 || y <= 0.0 {
+                return f64::INFINITY;
+            }
+            total += huber(pred.ln() - y.ln(), HUBER_DELTA);
+        }
+        total
+    }
+}
+
+/// Fit L(x) = a x^alpha + c with c FIXED, multi-start L-BFGS.
+pub fn fit_fixed_offset(xs: &[f64], ys: &[f64], c: f64, restarts: usize,
+                        rng: &mut Rng) -> (PowerLaw, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let obj = LogHuberFit { xs, ys, c };
+    let mut best: Option<(PowerLaw, f64)> = None;
+    for r in 0..restarts {
+        // informed init on the first restart: regress log(y - c) on log x
+        let x0 = if r == 0 {
+            informed_init(xs, ys, c)
+        } else {
+            vec![rng.normal() * 3.0, -rng.uniform() * 0.8 - 0.01]
+        };
+        let res = minimize(&obj, &x0, 500);
+        let law = PowerLaw { a: res.x[0].exp(), alpha: res.x[1], c };
+        if res.value.is_finite()
+            && best.as_ref().map(|(_, v)| res.value < *v).unwrap_or(true)
+        {
+            best = Some((law, res.value));
+        }
+    }
+    best.expect("at least one restart")
+}
+
+fn informed_init(xs: &[f64], ys: &[f64], c: f64) -> Vec<f64> {
+    // least squares on log(y - c) = log a + alpha log x
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(_, &y)| y > c)
+        .map(|(&x, &y)| (x.ln(), (y - c).ln()))
+        .collect();
+    if pts.len() < 2 {
+        return vec![0.0, -0.2];
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return vec![0.0, -0.2];
+    }
+    let alpha = (n * sxy - sx * sy) / denom;
+    let log_a = (sy - alpha * sx) / n;
+    vec![log_a, alpha]
+}
+
+/// Fit form (i): pure power law (c = 0).
+pub fn fit_pure(xs: &[f64], ys: &[f64], restarts: usize, rng: &mut Rng)
+                -> (PowerLaw, f64) {
+    fit_fixed_offset(xs, ys, 0.0, restarts, rng)
+}
+
+/// Fit form (ii): per-curve irreducible loss — 1-D golden search over c
+/// in [0, min y), refitting (a, alpha) at each candidate.
+pub fn fit_free_offset(xs: &[f64], ys: &[f64], restarts: usize,
+                       rng: &mut Rng) -> (PowerLaw, f64) {
+    let ymin = ys.iter().copied().fold(f64::INFINITY, f64::min);
+    let mut best: Option<(PowerLaw, f64)> = None;
+    // coarse grid then zoom (cheap 1-D outer problem)
+    let mut lo = 0.0;
+    let mut hi = ymin * 0.999;
+    for _phase in 0..3 {
+        let n = 12;
+        let mut phase_best_c = lo;
+        for i in 0..=n {
+            let c = lo + (hi - lo) * i as f64 / n as f64;
+            let (law, v) = fit_fixed_offset(xs, ys, c, restarts, rng);
+            if best.as_ref().map(|(_, bv)| v < *bv).unwrap_or(true) {
+                best = Some((law, v));
+                phase_best_c = c;
+            }
+        }
+        let span = (hi - lo) / n as f64;
+        lo = (phase_best_c - span).max(0.0);
+        hi = (phase_best_c + span).min(ymin * 0.999);
+    }
+    best.unwrap()
+}
+
+/// A joint fit across many curves sharing one irreducible loss L_irr
+/// (form iii; the paper's preferred form).  Returns (per-curve laws,
+/// L_irr, total objective).
+pub fn fit_joint_irreducible(
+    curves: &[(Vec<f64>, Vec<f64>)],
+    restarts: usize,
+    rng: &mut Rng,
+) -> (Vec<PowerLaw>, f64, f64) {
+    let ymin = curves
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let total_at = |c: f64, restarts: usize, rng: &mut Rng| -> (Vec<PowerLaw>, f64) {
+        let mut laws = Vec::with_capacity(curves.len());
+        let mut total = 0.0;
+        for (xs, ys) in curves {
+            let (law, v) = fit_fixed_offset(xs, ys, c, restarts, rng);
+            laws.push(law);
+            total += v;
+        }
+        (laws, total)
+    };
+    // three-phase grid search per the paper: coarse, zoom, final refit
+    let mut lo = 0.0;
+    let mut hi = ymin * 0.999;
+    let mut best_c = 0.0;
+    let mut best_v = f64::INFINITY;
+    for phase in 0..2 {
+        let n = if phase == 0 { 24 } else { 12 };
+        let quick = (restarts / 4).max(2);
+        for i in 0..=n {
+            let c = lo + (hi - lo) * i as f64 / n as f64;
+            let (_, v) = total_at(c, quick, rng);
+            if v < best_v {
+                best_v = v;
+                best_c = c;
+            }
+        }
+        let span = (hi - lo) / n as f64;
+        lo = (best_c - span).max(0.0);
+        hi = (best_c + span).min(ymin * 0.999);
+    }
+    let (laws, v) = total_at(best_c, restarts, rng);
+    (laws, best_c, v)
+}
+
+/// Mean absolute log-space residual of a law over points (Table 2).
+pub fn mean_abs_log_residual(law: &PowerLaw, xs: &[f64], ys: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        total += (law.eval(x).ln() - y.ln()).abs();
+    }
+    total / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(a: f64, alpha: f64, c: f64, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| a * x.powf(alpha) + c).collect()
+    }
+
+    #[test]
+    fn recovers_pure_power_law() {
+        let xs = vec![1e9, 1e10, 1e11, 1e12, 1e13];
+        let ys = synth(300.0, -0.15, 0.0, &xs);
+        let mut rng = Rng::new(0);
+        let (law, v) = fit_pure(&xs, &ys, 8, &mut rng);
+        assert!(v < 1e-8, "{v}");
+        assert!((law.alpha + 0.15).abs() < 1e-3, "{}", law.alpha);
+    }
+
+    #[test]
+    fn recovers_offset_form() {
+        let xs = vec![1e9, 3e9, 1e10, 3e10, 1e11, 3e11];
+        let ys = synth(500.0, -0.2, 1.7, &xs);
+        let mut rng = Rng::new(1);
+        let (law, _) = fit_free_offset(&xs, &ys, 6, &mut rng);
+        assert!((law.c - 1.7).abs() < 0.15, "c={}", law.c);
+        assert!((law.alpha + 0.2).abs() < 0.05, "alpha={}", law.alpha);
+    }
+
+    #[test]
+    fn joint_irreducible_shared_across_curves() {
+        let xs = vec![1e9, 1e10, 1e11, 1e12];
+        let curves = vec![
+            (xs.clone(), synth(400.0, -0.18, 1.7, &xs)),
+            (xs.clone(), synth(600.0, -0.22, 1.7, &xs)),
+            (xs.clone(), synth(500.0, -0.20, 1.7, &xs)),
+        ];
+        let mut rng = Rng::new(2);
+        let (laws, l_irr, _) = fit_joint_irreducible(&curves, 6, &mut rng);
+        assert!((l_irr - 1.7).abs() < 0.12, "L_irr={l_irr}");
+        assert!((laws[0].alpha + 0.18).abs() < 0.04);
+        assert!((laws[1].alpha + 0.22).abs() < 0.04);
+    }
+
+    #[test]
+    fn irreducible_improves_extrapolation() {
+        // Table 2's story: fit 4 small scales, hold out the largest
+        let xs = vec![1e9, 1e10, 1e11, 1e12];
+        let ys = synth(400.0, -0.2, 1.7, &xs);
+        let mut rng = Rng::new(3);
+        let (pure, _) = fit_pure(&xs, &ys, 6, &mut rng);
+        let (off, _) = fit_free_offset(&xs, &ys, 6, &mut rng);
+        let x_hold = 1e14f64;
+        let y_hold = 400.0 * x_hold.powf(-0.2) + 1.7;
+        let r_pure = (pure.eval(x_hold).ln() - y_hold.ln()).abs();
+        let r_off = (off.eval(x_hold).ln() - y_hold.ln()).abs();
+        assert!(r_off < r_pure, "{r_off} vs {r_pure}");
+    }
+
+    #[test]
+    fn invert_roundtrips() {
+        let law = PowerLaw { a: 500.0, alpha: -0.2, c: 1.7 };
+        let x = 3.3e12;
+        let l = law.eval(x);
+        let back = law.invert(l).unwrap();
+        assert!((back / x - 1.0).abs() < 1e-9);
+        assert!(law.invert(1.6).is_none()); // below the floor
+    }
+
+    #[test]
+    fn residual_metric() {
+        let law = PowerLaw { a: 1.0, alpha: 0.0, c: 0.0 };
+        // law predicts 1.0 everywhere
+        let r = mean_abs_log_residual(&law, &[1.0, 2.0], &[1.0, (1.0f64).exp()]);
+        assert!((r - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal CLI argument parser (no clap available offline).
+//!
+//! Supports `--key value`, `--flag` (boolean), and positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// options consumed via get/flag — used by `finish` to reject typos
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String], boolean_flags: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if boolean_flags.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("--{key} needs a value"))?;
+                    args.options.insert(key.to_string(), val.clone());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error out on unrecognized options (call after all gets).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.options.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for k in &self.flags {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&argv("train --model nano --workers 8 --ef"),
+                            &["ef"]).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("nano"));
+        assert_eq!(a.get_parse("workers", 1usize).unwrap(), 8);
+        assert!(a.flag("ef"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let a = Args::parse(&argv("--oops 3"), &[]).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("--model"), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(""), &[]).unwrap();
+        assert_eq!(a.get_or("x", "7"), "7");
+        assert_eq!(a.get_parse("y", 3.5f64).unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,110 @@
+//! Shared substrates: PRNG, JSON, table rendering, small math helpers.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Dot product of two f32 slices (hot path: used by alignment analysis
+/// and compression; kept in one place so the perf pass can vectorize it).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the compiler on SSE adds and
+    // limits fp error growth vs a single serial accumulator
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] as f64 * b[j] as f64;
+        acc[1] += a[j + 1] as f64 * b[j + 1] as f64;
+        acc[2] += a[j + 2] as f64 * b[j + 2] as f64;
+        acc[3] += a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for j in chunks * 4..a.len() {
+        tail += a[j] as f64 * b[j] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Euclidean norm of an f32 slice.
+#[inline]
+pub fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity between two flat vectors; 0 when either is zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.is_empty() {
+        f64::NAN
+    } else if v.len() % 2 == 1 {
+        v[v.len() / 2]
+    } else {
+        0.5 * (v[v.len() / 2 - 1] + v[v.len() / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32 - 50.0) * 0.25).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-6 * naive.abs());
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-12);
+        let b = vec![-1.0f32, -2.0, -3.0];
+        assert!((cosine(&a, &b) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&a, &[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Plain-text table rendering + CSV emission for experiment outputs.
+//!
+//! Every `muloco experiment <id>` prints its paper-table analogue with
+//! this renderer and writes the same rows to `results/<id>/<id>.csv`.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&format!(
+            "{}\n",
+            "-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1))
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist the CSV under `results/<id>/`.
+    pub fn emit(&self, id: &str) -> Result<()> {
+        println!("{}", self.render());
+        let dir = Path::new("results").join(id);
+        fs::create_dir_all(&dir)?;
+        fs::write(dir.join(format!("{id}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{:.*}", prec, x)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:+.2}%", 100.0 * x)
+}
+
+pub fn fmt_sci(x: f64) -> String {
+    format!("{:.3e}", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["k", "loss"]);
+        t.row(vec!["1".into(), "2.71".into()]);
+        t.row(vec!["16".into(), "2.9".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["he,llo \"q\"".into()]);
+        assert_eq!(t.to_csv(), "a\n\"he,llo \"\"q\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_row_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Property-style tests on coordinator/compression invariants.
+//!
+//! proptest is unavailable offline, so these are seeded randomized
+//! property checks over the in-house PRNG (many trials per property,
+//! deterministic seeds — failures reproduce exactly).
+
+use muloco::collectives::{quantized_reduce_mean, ring_allreduce_mean,
+                          sparse_allgather_mean};
+use muloco::compress::{Compressor, ErrorFeedback, NoCompression, QuantMode,
+                       Quantizer, TopK};
+use muloco::coordinator::{Method, NesterovOuter, TrainConfig};
+use muloco::util::rng::Rng;
+
+const TRIALS: usize = 50;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * scale).collect()
+}
+
+#[test]
+fn prop_quantization_idempotent_and_bounded() {
+    let mut rng = Rng::new(1);
+    for trial in 0..TRIALS {
+        let n = 1 + rng.below(2000);
+        let bits = [2u32, 4, 8][rng.below(3)];
+        let mode = if rng.below(2) == 0 { QuantMode::Linear } else { QuantMode::Statistical };
+        let q = Quantizer::new(bits, mode, false);
+        let orig = rand_vec(&mut rng, n, 1.0 + trial as f32);
+        let mut x = orig.clone();
+        q.compress(&mut x, 1, n);
+        // bounded: quantized values stay within [min, max] of the input
+        let lo = orig.iter().copied().fold(f32::INFINITY, f32::min);
+        let hi = orig.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        for v in &x {
+            assert!(*v >= lo - 1e-5 && *v <= hi + 1e-5, "trial {trial}");
+        }
+        // idempotent for linear mode (fixed grid)
+        if mode == QuantMode::Linear {
+            let once = x.clone();
+            q.compress(&mut x, 1, n);
+            assert_eq!(x, once, "trial {trial}");
+        }
+        // distinct levels bounded by the codebook size
+        let mut distinct = x.clone();
+        distinct.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        distinct.dedup();
+        assert!(distinct.len() <= 1 << bits, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_error_feedback_conserves_mass() {
+    // invariant: communicated + residual == total signal (beta = 1)
+    let mut rng = Rng::new(2);
+    for trial in 0..TRIALS {
+        let n = 1 + rng.below(500);
+        let mut ef = ErrorFeedback::new(1, 1.0);
+        let mut total_in = vec![0.0f64; n];
+        let mut total_sent = vec![0.0f64; n];
+        for _ in 0..10 {
+            let delta = rand_vec(&mut rng, n, 1.0);
+            for (t, d) in total_in.iter_mut().zip(&delta) {
+                *t += *d as f64;
+            }
+            let mut wire = delta.clone();
+            ef.compress_with_feedback(0, &mut wire, 1, n, &TopK::new(0.25));
+            for (t, w) in total_sent.iter_mut().zip(&wire) {
+                *t += *w as f64;
+            }
+        }
+        let resid_norm = ef.residual_norm(0);
+        let expect: f64 = total_in.iter().zip(&total_sent)
+            .map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!((resid_norm - expect).abs() < 1e-3 * (1.0 + expect),
+                "trial {trial}: {resid_norm} vs {expect}");
+    }
+}
+
+#[test]
+fn prop_collectives_agree_and_preserve_mean_when_lossless() {
+    let mut rng = Rng::new(3);
+    for trial in 0..TRIALS {
+        let k = 2 + rng.below(15);
+        let n = 1 + rng.below(300);
+        let bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 2.0)).collect();
+        let mut want = vec![0.0f64; n];
+        for b in &bufs {
+            for (w, x) in want.iter_mut().zip(b) {
+                *w += *x as f64 / k as f64;
+            }
+        }
+        for which in 0..3 {
+            let mut test = bufs.clone();
+            match which {
+                0 => { ring_allreduce_mean(&mut test); }
+                1 => { quantized_reduce_mean(&mut test, &NoCompression, 1, n); }
+                _ => { sparse_allgather_mean(&mut test, &NoCompression, 1, n); }
+            }
+            for b in &test[1..] {
+                assert_eq!(b, &test[0], "trial {trial} collective {which}");
+            }
+            for (x, w) in test[0].iter().zip(&want) {
+                assert!((*x as f64 - w).abs() < 1e-5,
+                        "trial {trial} collective {which}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantized_collective_error_does_not_grow_with_k() {
+    let mut rng = Rng::new(4);
+    let q = Quantizer::new(8, QuantMode::Linear, false);
+    let n = 512;
+    let mut errs = Vec::new();
+    for k in [2usize, 4, 8, 16, 32] {
+        let bufs: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vec(&mut rng, n, 1.0)).collect();
+        let mut want = vec![0.0f64; n];
+        for b in &bufs {
+            for (w, x) in want.iter_mut().zip(b) {
+                *w += *x as f64 / k as f64;
+            }
+        }
+        let mut test = bufs.clone();
+        quantized_reduce_mean(&mut test, &q, 1, n);
+        let err: f64 = test[0].iter().zip(&want)
+            .map(|(a, b)| (*a as f64 - b).abs()).fold(0.0, f64::max);
+        errs.push(err);
+    }
+    let base = errs[0].max(1e-6);
+    for (i, e) in errs.iter().enumerate() {
+        assert!(*e < 4.0 * base, "K index {i}: {e} vs base {base}");
+    }
+}
+
+#[test]
+fn prop_topk_preserves_top_entries_exactly() {
+    let mut rng = Rng::new(5);
+    for trial in 0..TRIALS {
+        let n = 10 + rng.below(1000);
+        let frac = [0.01, 0.1, 0.5][rng.below(3)];
+        let orig = rand_vec(&mut rng, n, 1.0);
+        let mut x = orig.clone();
+        TopK::new(frac).compress(&mut x, 1, n);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!(*a == 0.0 || a == b, "trial {trial}");
+        }
+        let kept_min = x.iter().zip(&orig)
+            .filter(|(a, _)| **a != 0.0)
+            .map(|(_, b)| b.abs())
+            .fold(f32::INFINITY, f32::min);
+        let dropped_max = x.iter().zip(&orig)
+            .filter(|(a, _)| **a == 0.0)
+            .map(|(_, b)| b.abs())
+            .fold(0.0f32, f32::max);
+        assert!(kept_min >= dropped_max, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_nesterov_linearity_in_pseudogradient() {
+    let mut rng = Rng::new(6);
+    for _ in 0..TRIALS {
+        let n = 1 + rng.below(64);
+        let psi = rand_vec(&mut rng, n, 1.0);
+        let lr = 0.1 + rng.uniform() * 0.9;
+        let mu = rng.uniform() * 0.95;
+        let mut o1 = NesterovOuter::new(lr, mu, &[n]);
+        let mut t1 = vec![0.0f32; n];
+        o1.step_tensor(0, &mut t1, &psi);
+        let mut o2 = NesterovOuter::new(lr, mu, &[n]);
+        let mut t2 = vec![0.0f32; n];
+        let psi2: Vec<f32> = psi.iter().map(|x| 2.0 * x).collect();
+        o2.step_tensor(0, &mut t2, &psi2);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert!((2.0 * a - b).abs() < 1e-4, "{a} {b}");
+        }
+    }
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_terminal() {
+    let mut rng = Rng::new(7);
+    for _ in 0..TRIALS {
+        let mut cfg = TrainConfig::new("nano", Method::Muloco);
+        cfg.total_steps = 50 + rng.below(500) as u64;
+        cfg.warmup_steps = rng.below(40) as u64 + 1;
+        cfg.lr = 0.001 + rng.uniform();
+        for step in 0..=cfg.total_steps {
+            let lr = cfg.lr_at(step);
+            assert!(lr > 0.0 && lr <= cfg.lr * (1.0 + 1e-9));
+        }
+        let terminal = cfg.lr_at(cfg.total_steps);
+        assert!((terminal - cfg.lr * cfg.lr_floor_frac).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_cache_keys_distinguish_configs() {
+    use muloco::experiments::cache_key_for_tests as key;
+    let base = TrainConfig::new("nano", Method::Muloco);
+    let mut variants: Vec<TrainConfig> = Vec::new();
+    let mut v = base.clone();
+    v.workers = 4;
+    variants.push(v);
+    let mut v = base.clone();
+    v.lr *= 2.0;
+    variants.push(v);
+    let mut v = base.clone();
+    v.seed += 1;
+    variants.push(v);
+    let mut v = base.clone();
+    v.error_feedback = true;
+    variants.push(v);
+    let mut v = base.clone();
+    v.streaming_partitions = 3;
+    variants.push(v);
+    let base_key = key(&base);
+    let mut all: Vec<String> = variants.iter().map(key).collect();
+    all.push(base_key);
+    let unique: std::collections::BTreeSet<&String> = all.iter().collect();
+    assert_eq!(unique.len(), all.len(), "cache keys collide: {all:?}");
+}

@@ -1,0 +1,129 @@
+//! End-to-end integration over the PJRT runtime + coordinator.
+//!
+//! Requires `make artifacts`.  All checks share one compiled Session
+//! (XLA's LLVM jit is expensive), so this is a single #[test] running
+//! a scripted sequence of scenarios.
+
+use muloco::compress::Compression;
+use muloco::coordinator::{branch_capture, dp_warmstart, evaluate, train,
+                          Method, TrainConfig};
+use muloco::data::Corpus;
+use muloco::runtime::Session;
+
+fn short_cfg(method: Method, k: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new("nano", method);
+    if method.is_local_update() {
+        cfg = cfg.tuned_outer(k);
+    }
+    cfg.total_steps = 20;
+    cfg.sync_interval = 5;
+    cfg.eval_every = 5;
+    cfg.eval_batches = 2;
+    cfg.global_batch = 16;
+    cfg.warmup_steps = 2;
+    cfg
+}
+
+#[test]
+fn end_to_end() {
+    let dir = std::path::PathBuf::from("artifacts/nano");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` (test skipped)");
+        return;
+    }
+    let sess = Session::load(&dir).expect("session");
+
+    // --- determinism: same seed, same params --------------------------
+    let p1 = sess.init_params(5).unwrap();
+    let p2 = sess.init_params(5).unwrap();
+    assert_eq!(p1, p2, "init must be deterministic");
+    let p3 = sess.init_params(6).unwrap();
+    assert_ne!(p1, p3, "seed must matter");
+
+    // --- fresh model's loss ~ log(vocab) -------------------------------
+    let corpus = Corpus::new(sess.manifest.config.vocab, 0);
+    let batch = corpus.eval_shard().next_batch(
+        sess.manifest.config.microbatch, sess.manifest.config.seq_len);
+    let (loss, acc) = sess.eval_step(&p1, &batch).unwrap();
+    let log_v = (sess.manifest.config.vocab as f32).ln();
+    assert!((loss - log_v).abs() < 1.2, "fresh loss {loss} vs ln V {log_v}");
+    assert!((0.0..=1.0).contains(&acc));
+
+    // --- every method trains and reduces loss --------------------------
+    // (20 steps is enough to beat the untrained ~ln(V) loss; local
+    // methods can oscillate between adjacent evals at this horizon, so
+    // the bar is "well below untrained", not strict monotonicity)
+    let mut finals = Vec::new();
+    for method in [Method::DpAdamw, Method::DpMuon, Method::Diloco,
+                   Method::Muloco] {
+        let cfg = short_cfg(method, 2);
+        let r = train(&sess, &cfg).expect("train");
+        let last = r.eval_curve.last().unwrap().1;
+        assert!(last < log_v as f64 - 0.2,
+                "{method:?} did not learn: final {last} vs ln V {log_v}");
+        assert!(last.is_finite());
+        assert_eq!(r.tokens,
+                   cfg.total_steps * (cfg.global_batch * 64) as u64);
+        finals.push((method, last));
+        // DP methods move no bytes; local methods do
+        if method.is_local_update() {
+            assert!(r.comm.bytes_per_worker > 0);
+        } else {
+            assert_eq!(r.comm.bytes_per_worker, 0);
+        }
+    }
+
+    // --- training is deterministic end-to-end --------------------------
+    let cfg = short_cfg(Method::Muloco, 2);
+    let a = train(&sess, &cfg).unwrap();
+    let b = train(&sess, &cfg).unwrap();
+    assert_eq!(a.eval_curve, b.eval_curve, "training must be reproducible");
+
+    // --- streaming J=... hits the same loss ballpark -------------------
+    let mut cfg_s = short_cfg(Method::Muloco, 2);
+    cfg_s.streaming_partitions = 5; // J must divide H = 5
+    let err = cfg_s.validate();
+    assert!(err.is_ok(), "{err:?}");
+    let streamed = train(&sess, &cfg_s).unwrap();
+    assert!(streamed.eval_curve.last().unwrap().1.is_finite());
+    assert!(
+        (streamed.smoothed_final - a.smoothed_final).abs() < 0.5,
+        "streaming diverged: {} vs {}",
+        streamed.smoothed_final, a.smoothed_final
+    );
+
+    // --- compression variants run and stay sane ------------------------
+    for spec in ["q8-linear", "q4-stat", "q2-linear-rw", "topk0.1"] {
+        let mut cfg_c = short_cfg(Method::Muloco, 2);
+        cfg_c.compression = Compression::parse(spec).unwrap();
+        cfg_c.error_feedback = spec.starts_with("topk");
+        let r = train(&sess, &cfg_c).unwrap();
+        let fin = r.eval_curve.last().unwrap().1;
+        assert!(fin.is_finite(), "{spec}");
+        assert!(fin < log_v as f64 + 0.5, "{spec} loss exploded: {fin}");
+        // compressed bytes strictly below fp32 collective bytes
+        assert!(r.comm.bytes_per_worker < a.comm.bytes_per_worker * 3,
+                "{spec}");
+    }
+
+    // --- probe capture shapes -------------------------------------------
+    let ckpt = dp_warmstart(&sess, Method::DpMuon, 4, 8, 0.05, 0.1, 1).unwrap();
+    let cap = branch_capture(&sess, Method::Muloco, &ckpt, 2, 3, 8,
+                             0.05, 0.1, 1).unwrap();
+    assert_eq!(cap.worker_delta.len(), 2);
+    assert_eq!(cap.step_updates[0].len(), 3);
+    assert_eq!(cap.pseudograd.len(), cap.hidden_idx.len());
+    // pseudograd really is the mean of worker deltas
+    for ti in 0..cap.n_tensors() {
+        for (i, p) in cap.pseudograd[ti].iter().enumerate() {
+            let want = 0.5 * (cap.worker_delta[0][ti][i]
+                              + cap.worker_delta[1][ti][i]);
+            assert!((p - want).abs() < 1e-6);
+        }
+    }
+
+    // --- evaluate() averages over batches -------------------------------
+    let batches = vec![batch.clone(), batch];
+    let (l2, _) = evaluate(&sess, &p1, &batches).unwrap();
+    assert!((l2 - loss as f64).abs() < 1e-5);
+}

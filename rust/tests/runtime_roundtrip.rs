@@ -1,0 +1,91 @@
+//! Manifest + artifact contract tests (no PJRT needed for most).
+
+use std::fs;
+
+use muloco::runtime::{Manifest, TensorKind};
+use muloco::util::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::PathBuf::from("artifacts/nano");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts missing; run `make artifacts` (test skipped)");
+        None
+    }
+}
+
+#[test]
+fn manifest_parses_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    assert_eq!(man.config.name, "nano");
+    let total: usize = man.params.iter().map(|p| p.size).sum();
+    assert_eq!(total, man.config.param_count);
+    assert!(man.params.iter().any(|p| p.kind == TensorKind::Hidden));
+    assert_eq!(man.n_partitions(), 3);
+    // every executable file exists and is HLO text
+    for name in ["init", "fwd_grad", "apply_adamw", "apply_muon", "eval_step"] {
+        let path = man.exe_path(name).unwrap();
+        let head: String = fs::read_to_string(path).unwrap()
+            .chars().take(9).collect();
+        assert_eq!(head, "HloModule", "{name}");
+    }
+}
+
+#[test]
+fn manifest_partitions_cover_all_params() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    let mut seen = vec![false; man.params.len()];
+    for part in 0..man.n_partitions() {
+        for idx in man.partition_indices(part) {
+            assert!(!seen[idx], "tensor in two partitions");
+            seen[idx] = true;
+        }
+    }
+    assert!(seen.iter().all(|s| *s));
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let tmp = std::env::temp_dir().join(format!("muloco-man-{}", std::process::id()));
+    fs::create_dir_all(&tmp).unwrap();
+    // (a) invalid JSON
+    fs::write(tmp.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&tmp).is_err());
+    // (b) valid JSON, inconsistent param_count
+    let Some(dir) = artifacts_dir() else {
+        fs::remove_dir_all(&tmp).ok();
+        return;
+    };
+    let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let mut v = Json::parse(&text).unwrap();
+    if let Json::Obj(m) = &mut v {
+        if let Some(Json::Obj(cfg)) = m.get_mut("config") {
+            cfg.insert("param_count".into(), Json::Num(1.0));
+        }
+    }
+    fs::write(tmp.join("manifest.json"), v.to_string()).unwrap();
+    let err = Manifest::load(&tmp).unwrap_err().to_string();
+    assert!(err.contains("disagree"), "{err}");
+    fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn manifest_missing_executable_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir().join(format!("muloco-man2-{}", std::process::id()));
+    fs::create_dir_all(&tmp).unwrap();
+    let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let mut v = Json::parse(&text).unwrap();
+    if let Json::Obj(m) = &mut v {
+        if let Some(Json::Obj(exes)) = m.get_mut("executables") {
+            exes.remove("apply_muon");
+        }
+    }
+    fs::write(tmp.join("manifest.json"), v.to_string()).unwrap();
+    let err = Manifest::load(&tmp).unwrap_err().to_string();
+    assert!(err.contains("apply_muon"), "{err}");
+    fs::remove_dir_all(&tmp).ok();
+}
