@@ -16,9 +16,10 @@ fn main() -> anyhow::Result<()> {
         sess.platform()
     );
 
-    let mut cfg = TrainConfig::new("nano", Method::Muloco).tuned_outer(4);
-    cfg.total_steps = 60;
+    let mut cfg = TrainConfig::new("nano", Method::Muloco);
     cfg.global_batch = 32;
+    cfg = cfg.tuned_outer(4)?;
+    cfg.total_steps = 60;
     cfg.sync_interval = 15;
     cfg.eval_every = 15;
 

@@ -39,11 +39,11 @@ fn main() -> anyhow::Result<()> {
         ("dp-adamw", Method::DpAdamw, 1),
     ] {
         let mut cfg = TrainConfig::new(&model, method);
+        cfg.global_batch = batch;
         if method.is_local_update() {
-            cfg = cfg.tuned_outer(k);
+            cfg = cfg.tuned_outer(k)?;
         }
         cfg.total_steps = steps;
-        cfg.global_batch = batch;
         cfg.sync_interval = 15;
         cfg.eval_every = 15;
         cfg.eval_batches = 4;

@@ -128,6 +128,16 @@ fn main() -> anyhow::Result<()> {
         bench("dot product (1M f32)", 8 * n, || {
             std::hint::black_box(muloco::util::dot(&a, &b));
         });
+        let mut y = a.clone();
+        bench("add_assign (1M f32)", 8 * n, || {
+            muloco::util::add_assign(&mut y, &b);
+        });
+        bench("scale (1M f32)", 4 * n, || {
+            muloco::util::scale(&mut y, 1.000001);
+        });
+        bench("sub / delta (1M f32)", 12 * n, || {
+            std::hint::black_box(muloco::util::sub(&a, &b));
+        });
     }
 
     // === end-to-end PJRT benches (paper Table 9 measurements) ========
@@ -165,12 +175,13 @@ fn main() -> anyhow::Result<()> {
     // one full outer round per method — the Table 9 end-to-end row
     println!("\n== full training rounds (K=4, H=5, B=16) ==");
     for method in [Method::Diloco, Method::Muloco] {
-        let mut cfg = TrainConfig::new("nano", method).tuned_outer(4);
+        let mut cfg = TrainConfig::new("nano", method);
+        cfg.global_batch = 16;
+        cfg = cfg.tuned_outer(4)?;
         cfg.total_steps = 5;
         cfg.sync_interval = 5;
         cfg.eval_every = 5;
         cfg.eval_batches = 1;
-        cfg.global_batch = 16;
         let t0 = Instant::now();
         let r = train(&sess, &cfg)?;
         let per_step = t0.elapsed().as_secs_f64() / 5.0;
@@ -181,5 +192,29 @@ fn main() -> anyhow::Result<()> {
             r.comm.bytes_per_worker
         );
     }
+
+    // worker-pool scaling: the acceptance check for the parallel
+    // engine — the inner-step phase of a K-worker run must land well
+    // under K x the single-worker wall clock on a multi-core host
+    println!("\n== worker-pool scaling (MuLoCo, H=5, B=32) ==");
+    let round = |k: usize, parallel: bool| -> anyhow::Result<f64> {
+        let mut cfg = TrainConfig::new("nano", Method::Muloco);
+        cfg.global_batch = 32;
+        cfg = cfg.tuned_outer(k)?;
+        cfg.total_steps = 10;
+        cfg.sync_interval = 5;
+        cfg.eval_every = 10;
+        cfg.eval_batches = 1;
+        cfg.parallel = parallel;
+        let t0 = Instant::now();
+        let _ = train(&sess, &cfg)?;
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let k = 8;
+    let t_seq = round(k, false)?;
+    let t_par = round(k, true)?;
+    println!("K={k} sequential  {:>8.1} ms/global-step", t_seq * 1e2);
+    println!("K={k} parallel    {:>8.1} ms/global-step  ({:.2}x speedup)",
+             t_par * 1e2, t_seq / t_par);
     Ok(())
 }

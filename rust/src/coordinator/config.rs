@@ -111,6 +111,10 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     /// data / init seed
     pub seed: u64,
+    /// run the K inner loops and the per-tensor sync reduce on scoped
+    /// threads (bit-identical to the sequential reference; excluded
+    /// from cache keys because it cannot affect the math)
+    pub parallel: bool,
 }
 
 impl TrainConfig {
@@ -143,12 +147,27 @@ impl TrainConfig {
             eval_every: 30,
             eval_batches: 8,
             seed: 17,
+            parallel: true,
         }
     }
 
     /// Outer-LR/momentum defaults as a function of K (the Fig 22
     /// sweep's optima: eta_out and mu rise with worker count).
-    pub fn tuned_outer(mut self, k: usize) -> TrainConfig {
+    ///
+    /// Errors immediately when `global_batch` does not shard across the
+    /// K workers, instead of silently storing an inconsistent config
+    /// that only blows up deep inside `train()`.
+    pub fn tuned_outer(mut self, k: usize) -> anyhow::Result<TrainConfig> {
+        if k == 0 {
+            anyhow::bail!("worker count K must be >= 1");
+        }
+        if self.global_batch % k != 0 {
+            anyhow::bail!(
+                "global_batch {} does not divide across K={k} workers; \
+                 pick a batch that shards evenly",
+                self.global_batch
+            );
+        }
         self.workers = k;
         let (eta, mu) = match (self.method, k) {
             (Method::Muloco, 1) => (0.7, 0.6),
@@ -164,7 +183,7 @@ impl TrainConfig {
         };
         self.outer_lr = eta;
         self.outer_momentum = mu;
-        self
+        Ok(self)
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -261,9 +280,21 @@ mod tests {
 
     #[test]
     fn tuned_outer_rises_with_k() {
-        let c1 = TrainConfig::new("nano", Method::Muloco).tuned_outer(1);
-        let c16 = TrainConfig::new("nano", Method::Muloco).tuned_outer(16);
+        let c1 = TrainConfig::new("nano", Method::Muloco).tuned_outer(1).unwrap();
+        let c16 = TrainConfig::new("nano", Method::Muloco).tuned_outer(16).unwrap();
         assert!(c16.outer_lr > c1.outer_lr);
         assert!(c16.outer_momentum > c1.outer_momentum);
+    }
+
+    #[test]
+    fn tuned_outer_rejects_unshardable_batch() {
+        // global_batch 32 does not divide across 5 (or 0) workers
+        let err = TrainConfig::new("nano", Method::Muloco).tuned_outer(5);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("shards evenly"));
+        assert!(TrainConfig::new("nano", Method::Muloco).tuned_outer(0).is_err());
+        // a config that shards cleanly passes validate() end-to-end
+        let ok = TrainConfig::new("nano", Method::Muloco).tuned_outer(8).unwrap();
+        assert!(ok.validate().is_ok());
     }
 }

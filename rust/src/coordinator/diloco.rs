@@ -8,22 +8,26 @@
 //! new global parameters.  DP baselines are the same loop with K = 1
 //! and no outer optimizer.
 //!
-//! Streaming DiLoCo (J > 1): parameter partitions are synchronized in
-//! a staggered schedule — partition j at steps where
-//! step mod H == (j+1) * H/J mod H — dividing peak bandwidth by J.
+//! The loop itself is thin: the K inner trajectories live in
+//! `worker::WorkerPool` (scoped threads, pluggable `InnerOptimizer`),
+//! and the synchronization boundary lives in `sync::SyncEngine`
+//! (streaming `SyncPlan` + parallel per-tensor reduce).  Setting
+//! `TrainConfig::parallel = false` runs the identical dataflow inline —
+//! the sequential reference path the determinism regression test
+//! compares against.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use super::config::{Method, TrainConfig};
-use super::outer::NesterovOuter;
-use crate::collectives::{quantized_reduce_mean, ring_allreduce_mean,
-                         sparse_allgather_mean, CommStats};
-use crate::compress::{Compression, ErrorFeedback};
+use super::config::TrainConfig;
+use super::sync::SyncEngine;
+use super::worker::{inner_for, WorkerPool};
+use crate::collectives::CommStats;
 use crate::data::Corpus;
 use crate::evalloss::Smoother;
 use crate::runtime::{ExecStats, Session, Tensors};
+use crate::util::{add_assign, scale};
 
 /// Everything a run produces (curves, counters, headline stats).
 #[derive(Clone, Debug)]
@@ -51,12 +55,6 @@ pub struct RunResult {
     pub final_params: Option<Tensors>,
 }
 
-/// Per-worker replica state.
-struct Worker {
-    params: Tensors,
-    opt_state: Tensors,
-}
-
 /// Gradient accumulation over `batch_seqs` sequences from `shard`.
 /// Returns (mean loss, mean grads).
 pub fn accumulate_grads(
@@ -80,9 +78,7 @@ pub fn accumulate_grads(
             None => acc = Some(grads),
             Some(a) => {
                 for (at, gt) in a.iter_mut().zip(&grads) {
-                    for (x, y) in at.iter_mut().zip(gt) {
-                        *x += y;
-                    }
+                    add_assign(at, gt);
                 }
             }
         }
@@ -90,38 +86,9 @@ pub fn accumulate_grads(
     let mut grads = acc.expect("n_micro >= 1");
     let inv = 1.0 / n_micro as f32;
     for g in grads.iter_mut() {
-        for x in g.iter_mut() {
-            *x *= inv;
-        }
+        scale(g, inv);
     }
     Ok((total_loss / n_micro as f64, grads))
-}
-
-fn apply_inner(
-    sess: &Session,
-    method: Method,
-    worker: &mut Worker,
-    grads: &Tensors,
-    t: f32,
-    lr: f32,
-    wd: f32,
-) -> Result<()> {
-    let (p, s) = if method.uses_muon() {
-        sess.apply_muon(&worker.params, &worker.opt_state, grads, t, lr, wd)?
-    } else {
-        sess.apply_adamw(&worker.params, &worker.opt_state, grads, t, lr, wd)?
-    };
-    worker.params = p;
-    worker.opt_state = s;
-    Ok(())
-}
-
-fn zero_state(sess: &Session, method: Method) -> Tensors {
-    if method.uses_muon() {
-        sess.zero_muon_state()
-    } else {
-        sess.zero_adamw_state()
-    }
 }
 
 /// Evaluate `params` on `batches` pre-generated eval microbatches.
@@ -137,19 +104,6 @@ pub fn evaluate(sess: &Session, params: &Tensors, batches: &[Vec<i32>])
     Ok((loss / batches.len() as f64, acc / batches.len() as f64))
 }
 
-/// Streaming schedule: which partitions sync at this step?
-/// With J partitions and interval H, partition j (0-based) syncs at
-/// steps where step mod H == ((j+1) * H/J) mod H.
-fn partitions_due(step: u64, h: u64, j_parts: usize) -> Vec<usize> {
-    if j_parts <= 1 {
-        return if step % h == 0 { vec![0] } else { vec![] };
-    }
-    let stride = h / j_parts as u64;
-    (0..j_parts)
-        .filter(|j| step % h == ((*j as u64 + 1) * stride) % h)
-        .collect()
-}
-
 /// Run one full training job.  This is the production entry point used
 /// by the CLI, the experiments and the examples.
 pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
@@ -158,6 +112,15 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
     sess.reset_stats();
     let man = &sess.manifest;
     let model = &man.config;
+    let k = cfg.workers;
+    let per_worker_batch = cfg.global_batch / k;
+    if per_worker_batch == 0 || per_worker_batch % model.microbatch != 0 {
+        bail!(
+            "per-worker batch {per_worker_batch} (global_batch {} / K={k}) \
+             must be a non-zero multiple of the {} microbatch ({})",
+            cfg.global_batch, model.name, model.microbatch
+        );
+    }
     let corpus = Corpus::new(model.vocab, cfg.seed);
 
     // fixed eval batches from the held-out stream (comparable across runs)
@@ -166,42 +129,12 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
         .map(|_| eval_shard.next_batch(model.microbatch, model.seq_len))
         .collect();
 
-    // global replica + K workers
+    // global replica + the K-worker pool + the sync engine
     let mut theta = sess.init_params(cfg.seed as u32)?;
-    let k = cfg.workers;
-    let mut workers: Vec<Worker> = (0..k)
-        .map(|_| Worker { params: theta.clone(), opt_state: zero_state(sess, cfg.method) })
-        .collect();
-    let mut shards: Vec<_> = (0..k as u64).map(|w| corpus.shard(w)).collect();
+    let inner = inner_for(cfg.method);
+    let mut pool = WorkerPool::new(sess, &corpus, inner, k, cfg.ef_beta, &theta);
+    let mut engine = SyncEngine::for_run(man, cfg);
 
-    // outer optimizer over per-tensor flat shapes
-    let shapes: Vec<usize> = man.params.iter().map(|p| p.size).collect();
-    let mut outer = NesterovOuter::new(cfg.outer_lr, cfg.outer_momentum, &shapes);
-
-    // streaming partition -> tensor indices
-    let j_parts = cfg.streaming_partitions.max(1);
-    let partition_tensors: Vec<Vec<usize>> = if j_parts == 1 {
-        vec![(0..man.params.len()).collect()]
-    } else {
-        // map the manifest's 3-way layer partition onto J groups
-        (0..j_parts)
-            .map(|j| {
-                man.params
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, p)| p.partition * j_parts / man.n_partitions() == j)
-                    .map(|(i, _)| i)
-                    .collect()
-            })
-            .collect()
-    };
-
-    let compressor = cfg.compression.build();
-    let mut efs: Vec<ErrorFeedback> = (0..k)
-        .map(|_| ErrorFeedback::new(man.params.len(), cfg.ef_beta))
-        .collect();
-
-    let per_worker_batch = cfg.global_batch / k;
     let mut comm = CommStats::default();
     let mut train_curve = Vec::new();
     let mut eval_curve = Vec::new();
@@ -211,78 +144,15 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
     for step in 1..=cfg.total_steps {
         let lr = cfg.lr_at(step - 1) as f32;
         let wd = cfg.weight_decay as f32;
-        let mut step_loss = 0.0;
-        for (w, shard) in workers.iter_mut().zip(shards.iter_mut()) {
-            let (loss, grads) =
-                accumulate_grads(sess, &w.params, shard, per_worker_batch)?;
-            step_loss += loss / k as f64;
-            apply_inner(sess, cfg.method, w, &grads, step as f32, lr, wd)?;
-            tokens += (per_worker_batch * model.seq_len) as u64;
-        }
+        let step_loss = pool.step(sess, per_worker_batch,
+                                  step as f32, lr, wd, cfg.parallel)?;
+        tokens += (k * per_worker_batch * model.seq_len) as u64;
         train_curve.push((step, step_loss));
 
         // --- synchronization (Algorithm 1 lines 11-13 / Algorithm 2) ---
         if cfg.method.is_local_update() {
-            for part in partitions_due(step, cfg.sync_interval, j_parts) {
-                for &ti in &partition_tensors[part] {
-                    let spec = &man.params[ti];
-                    let (rows, cols) = match spec.shape.len() {
-                        2 => (spec.shape[0], spec.shape[1]),
-                        _ => (1, spec.size),
-                    };
-                    // per-worker deltas for this tensor
-                    let mut deltas: Vec<Vec<f32>> = workers
-                        .iter()
-                        .map(|w| {
-                            theta[ti]
-                                .iter()
-                                .zip(&w.params[ti])
-                                .map(|(g, l)| g - l)
-                                .collect()
-                        })
-                        .collect();
-                    // compression (+EF) per Algorithm 2 lines 13-19
-                    if cfg.error_feedback && cfg.compression != Compression::None {
-                        for (wk, d) in deltas.iter_mut().enumerate() {
-                            efs[wk].compress_with_feedback(
-                                ti, d, rows, cols, compressor.as_ref());
-                        }
-                    }
-                    // collective: value semantics + byte accounting
-                    let stats = match (&cfg.compression, cfg.error_feedback) {
-                        (Compression::None, _) => ring_allreduce_mean(&mut deltas),
-                        (Compression::TopK { .. }, true) => {
-                            // already sparsified through EF; exact
-                            // all-gather mean, but charge top-k wire bytes
-                            let mut s = sparse_allgather_mean(
-                                &mut deltas, &crate::compress::NoCompression,
-                                rows, cols);
-                            let wire = compressor.wire_bytes(spec.size, rows);
-                            s.bytes_per_worker = (k - 1) * wire;
-                            s.total_bytes = k * s.bytes_per_worker;
-                            s
-                        }
-                        (Compression::TopK { .. }, false) =>
-                            sparse_allgather_mean(
-                                &mut deltas, compressor.as_ref(), rows, cols),
-                        // with EF the contributions are already quantized
-                        // (#1); quantization is idempotent on its own
-                        // grid, so the collective's first hop is a no-op
-                        // and the reduction requantize is hop #2.
-                        (Compression::Quant { .. }, _) =>
-                            quantized_reduce_mean(
-                                &mut deltas, compressor.as_ref(), rows, cols),
-                    };
-                    comm.add(stats);
-                    // outer update with Psi = the reduced delta
-                    let psi = &deltas[0];
-                    outer.step_tensor(ti, &mut theta[ti], psi);
-                    // broadcast: workers resume from the new global params
-                    for w in workers.iter_mut() {
-                        w.params[ti].copy_from_slice(&theta[ti]);
-                    }
-                }
-            }
+            engine.sync_step(step, &mut theta, &mut pool.workers, &mut comm,
+                             cfg.parallel);
         }
 
         if step % cfg.eval_every == 0 || step == cfg.total_steps {
@@ -290,7 +160,7 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
                 // DP: the worker IS the global model.  Clone only at
                 // eval boundaries — a per-step full-parameter copy was
                 // measurable on large configs (EXPERIMENTS.md §Perf).
-                theta = workers[0].params.clone();
+                theta = pool.workers[0].params.clone();
             }
             let (l, a) = evaluate(sess, &theta, &eval_batches)?;
             eval_curve.push((step, l));

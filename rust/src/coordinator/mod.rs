@@ -1,11 +1,23 @@
-//! L3 coordinator: the paper's system contribution (Algorithms 1 & 2).
+//! L3 coordinator: the paper's system contribution (Algorithms 1 & 2),
+//! structured as three layers over the thread-safe runtime:
+//!
+//!   `worker` — per-replica state, pluggable `InnerOptimizer`
+//!              (AdamW/Muon), parallel `WorkerPool`;
+//!   `sync`   — streaming `SyncPlan` + `SyncEngine` (compression, error
+//!              feedback, collectives, outer step, broadcast);
+//!   `diloco` — the thin training loop tying the two together.
 
 pub mod config;
 pub mod diloco;
 pub mod outer;
 pub mod probe;
+pub mod sync;
+pub mod worker;
 
 pub use config::{Method, TrainConfig};
 pub use diloco::{accumulate_grads, evaluate, train, RunResult};
 pub use outer::NesterovOuter;
 pub use probe::{branch_capture, dp_warmstart, BranchCapture, Checkpoint};
+pub use sync::{SyncEngine, SyncPlan, SyncTensorMeta};
+pub use worker::{inner_for, AdamWInner, InnerOptimizer, MuonInner, Worker,
+                 WorkerPool};

@@ -29,14 +29,26 @@ impl NesterovOuter {
     /// Apply one outer step to tensor `idx` of `theta` given its
     /// pseudogradient (in-place).
     pub fn step_tensor(&mut self, idx: usize, theta: &mut [f32], psi: &[f32]) {
-        let u = &mut self.u[idx];
+        Self::step_slot(self.lr, self.momentum, &mut self.u[idx], theta, psi);
+    }
+
+    /// The core recursion on one externally-held (u, theta) slot pair.
+    /// Associated fn (no `&mut self`) so the sync engine can drive
+    /// disjoint momentum slots from parallel reduce threads.
+    pub fn step_slot(eta: f32, mu: f32, u: &mut [f32], theta: &mut [f32], psi: &[f32]) {
         assert_eq!(u.len(), theta.len());
         assert_eq!(psi.len(), theta.len());
-        let (mu, eta) = (self.momentum, self.lr);
         for ((t, u), p) in theta.iter_mut().zip(u.iter_mut()).zip(psi) {
             *u = mu * *u + eta * p;
             *t -= mu * *u + eta * p;
         }
+    }
+
+    /// Mutable iteration over the per-tensor momentum slots, in tensor
+    /// order (the parallel sync engine zips this with `theta` to hand
+    /// each reduce job its own disjoint (theta, u) pair).
+    pub fn slots_mut(&mut self) -> std::slice::IterMut<'_, Vec<f32>> {
+        self.u.iter_mut()
     }
 
     pub fn momentum_norm(&self, idx: usize) -> f64 {

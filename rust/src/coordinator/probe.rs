@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use super::config::Method;
 use super::diloco::accumulate_grads;
+use super::worker::inner_for;
 use crate::data::Corpus;
 use crate::runtime::{Session, Tensors};
 
@@ -33,18 +34,11 @@ pub fn dp_warmstart(
     let corpus = Corpus::new(sess.manifest.config.vocab, seed);
     let mut shard = corpus.shard(0);
     let mut theta = sess.init_params(seed as u32)?;
-    let mut state = if method.uses_muon() {
-        sess.zero_muon_state()
-    } else {
-        sess.zero_adamw_state()
-    };
+    let inner = inner_for(method);
+    let mut state = inner.zero_state(sess);
     for t in 1..=steps {
         let (_, grads) = accumulate_grads(sess, &theta, &mut shard, batch_seqs)?;
-        let out = if method.uses_muon() {
-            sess.apply_muon(&theta, &state, &grads, t as f32, lr, wd)?
-        } else {
-            sess.apply_adamw(&theta, &state, &grads, t as f32, lr, wd)?
-        };
+        let out = inner.step(sess, &theta, &state, &grads, t as f32, lr, wd)?;
         theta = out.0;
         state = out.1;
     }
@@ -85,6 +79,7 @@ pub fn branch_capture(
     assert!(per_worker >= man.config.microbatch,
             "batch too small for {k} workers");
 
+    let inner = inner_for(method);
     let mut worker_delta = Vec::with_capacity(k);
     let mut step_updates = Vec::with_capacity(k);
     for w in 0..k {
@@ -95,13 +90,8 @@ pub fn branch_capture(
         for t in 1..=h {
             let (_, grads) =
                 accumulate_grads(sess, &theta, &mut shard, per_worker)?;
-            let out = if method.uses_muon() {
-                sess.apply_muon(&theta, &state, &grads,
-                                (ckpt.steps + t) as f32, lr, wd)?
-            } else {
-                sess.apply_adamw(&theta, &state, &grads,
-                                 (ckpt.steps + t) as f32, lr, wd)?
-            };
+            let out = inner.step(sess, &theta, &state, &grads,
+                                 (ckpt.steps + t) as f32, lr, wd)?;
             // psi_t = theta_{t-1} - theta_t on the hidden matrices
             let psi: Vec<Vec<f32>> = hidden_idx
                 .iter()

@@ -1,0 +1,387 @@
+//! Sync layer: the per-boundary pseudogradient pipeline
+//! (Algorithm 1 lines 11-13 / Algorithm 2), extracted from the training
+//! loop and parallelized.
+//!
+//! A `SyncPlan` owns the streaming-partition schedule (which tensors
+//! sync at which step); a `SyncEngine` owns the outer optimizer, the
+//! compressor and the per-boundary execution:
+//!
+//!   phase 1 — per-worker deltas theta_global - theta_k + error
+//!             feedback, parallel over workers;
+//!   phase 2 — per-tensor collective (compression + byte accounting) +
+//!             outer Nesterov step, parallel over tensors;
+//!   phase 3 — broadcast of the new global params back to the workers.
+//!
+//! Determinism contract: each (worker, tensor) delta is computed
+//! independently; each collective reduces its K contributions in
+//! worker-index order; comm stats accumulate in ascending tensor index
+//! after all reduce threads join.  A parallel sync is therefore
+//! bit-for-bit identical to the sequential reference
+//! (tests/parallel_determinism.rs).
+//!
+//! The engine is deliberately decoupled from `Session`/`Manifest` —
+//! it only needs flat-tensor geometry (`SyncTensorMeta`) — so the
+//! whole layer is unit-testable without compiled artifacts.
+
+use std::collections::BTreeMap;
+use std::thread;
+
+use super::config::TrainConfig;
+use super::outer::NesterovOuter;
+use super::worker::Worker;
+use crate::collectives::{quantized_reduce_mean, ring_allreduce_mean,
+                         sparse_allgather_mean, CommStats};
+use crate::compress::{Compression, Compressor, NoCompression};
+use crate::runtime::{Manifest, Tensors};
+
+/// Flat-tensor geometry the sync path needs: total element count and
+/// the 2-D view (rows=1 for vectors) used by row-wise compressors.
+#[derive(Clone, Copy, Debug)]
+pub struct SyncTensorMeta {
+    pub size: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SyncTensorMeta {
+    pub fn from_shape(shape: &[usize], size: usize) -> SyncTensorMeta {
+        let (rows, cols) = match shape.len() {
+            2 => (shape[0], shape[1]),
+            _ => (1, size),
+        };
+        SyncTensorMeta { size, rows, cols }
+    }
+}
+
+/// Streaming schedule: with J partitions and interval H, partition j
+/// (0-based) syncs at steps where step mod H == ((j+1) * H/J) mod H,
+/// dividing peak bandwidth by J (J=1 is classic DiLoCo: everything
+/// every H steps).
+#[derive(Clone, Debug)]
+pub struct SyncPlan {
+    pub sync_interval: u64,
+    /// group j -> tensor indices synced together (ascending)
+    groups: Vec<Vec<usize>>,
+}
+
+impl SyncPlan {
+    /// Classic DiLoCo: all tensors sync every H steps.
+    pub fn dense(h: u64, n_tensors: usize) -> SyncPlan {
+        SyncPlan { sync_interval: h, groups: vec![(0..n_tensors).collect()] }
+    }
+
+    /// Streaming DiLoCo: map the artifact's layer partition ids
+    /// (`tensor_partition[i]` in 0..n_partitions) onto J staggered
+    /// groups.
+    pub fn streaming(
+        h: u64,
+        j_parts: usize,
+        tensor_partition: &[usize],
+        n_partitions: usize,
+    ) -> SyncPlan {
+        if j_parts <= 1 {
+            return SyncPlan::dense(h, tensor_partition.len());
+        }
+        let groups = (0..j_parts)
+            .map(|j| {
+                tensor_partition
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &p)| p * j_parts / n_partitions == j)
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .collect();
+        SyncPlan { sync_interval: h, groups }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group(&self, j: usize) -> &[usize] {
+        &self.groups[j]
+    }
+
+    /// Groups due at `step`, ascending.
+    pub fn due_groups(&self, step: u64) -> Vec<usize> {
+        let h = self.sync_interval;
+        let j = self.groups.len();
+        if j <= 1 {
+            return if step % h == 0 { vec![0] } else { vec![] };
+        }
+        let stride = h / j as u64;
+        (0..j)
+            .filter(|g| step % h == ((*g as u64 + 1) * stride) % h)
+            .collect()
+    }
+
+    /// Tensor indices due at `step` (group order, in-group order).
+    pub fn due_tensors(&self, step: u64) -> Vec<usize> {
+        self.due_groups(step)
+            .into_iter()
+            .flat_map(|g| self.groups[g].iter().copied())
+            .collect()
+    }
+}
+
+/// One per-tensor reduce job: disjoint mutable views of the global
+/// replica and the outer momentum slot, plus the K worker deltas.
+struct SyncJob<'a> {
+    ti: usize,
+    theta: &'a mut Vec<f32>,
+    u: &'a mut Vec<f32>,
+    deltas: Vec<Vec<f32>>,
+    stats: CommStats,
+}
+
+/// Owns everything the sync boundary needs: schedule, compressor,
+/// outer optimizer, tensor geometry.
+pub struct SyncEngine {
+    pub plan: SyncPlan,
+    metas: Vec<SyncTensorMeta>,
+    outer: NesterovOuter,
+    compressor: Box<dyn Compressor + Send + Sync>,
+    compression: Compression,
+    error_feedback: bool,
+}
+
+impl SyncEngine {
+    /// Build the engine for a training run from the artifact manifest.
+    pub fn for_run(man: &Manifest, cfg: &TrainConfig) -> SyncEngine {
+        let metas: Vec<SyncTensorMeta> = man
+            .params
+            .iter()
+            .map(|p| SyncTensorMeta::from_shape(&p.shape, p.size))
+            .collect();
+        let j = cfg.streaming_partitions.max(1);
+        let plan = if j <= 1 {
+            SyncPlan::dense(cfg.sync_interval, man.params.len())
+        } else {
+            let parts: Vec<usize> = man.params.iter().map(|p| p.partition).collect();
+            SyncPlan::streaming(cfg.sync_interval, j, &parts, man.n_partitions())
+        };
+        let shapes: Vec<usize> = metas.iter().map(|m| m.size).collect();
+        let outer = NesterovOuter::new(cfg.outer_lr, cfg.outer_momentum, &shapes);
+        SyncEngine::from_parts(plan, metas, outer, cfg.compression.clone(),
+                               cfg.error_feedback)
+    }
+
+    /// Manifest-free constructor (unit tests, synthetic workloads).
+    pub fn from_parts(
+        plan: SyncPlan,
+        metas: Vec<SyncTensorMeta>,
+        outer: NesterovOuter,
+        compression: Compression,
+        error_feedback: bool,
+    ) -> SyncEngine {
+        SyncEngine {
+            plan,
+            metas,
+            outer,
+            compressor: compression.build(),
+            compression,
+            error_feedback,
+        }
+    }
+
+    /// Outer-momentum diagnostics (per-tensor L2), for probes/tests.
+    pub fn momentum_norm(&self, idx: usize) -> f64 {
+        self.outer.momentum_norm(idx)
+    }
+
+    /// Run the sync boundary for `step`: no-op unless the plan has
+    /// partitions due.  Compression + error feedback + collective
+    /// dispatch + outer step + broadcast, exactly the Algorithm 1/2
+    /// dataflow of the pre-refactor loop.
+    pub fn sync_step(
+        &mut self,
+        step: u64,
+        theta: &mut Tensors,
+        workers: &mut [Worker<'_>],
+        comm: &mut CommStats,
+        parallel: bool,
+    ) {
+        let due = self.plan.due_tensors(step);
+        if due.is_empty() || workers.is_empty() {
+            return;
+        }
+        let k = workers.len();
+        let apply_ef = self.error_feedback && self.compression != Compression::None;
+        let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
+        let metas: &[SyncTensorMeta] = &self.metas;
+        let due_ref: &[usize] = &due;
+        let theta_ref: &Tensors = theta;
+
+        // phase 1 — per-worker deltas + error feedback
+        let by_worker: Vec<Vec<Vec<f32>>> = if parallel && k > 1 {
+            thread::scope(|s| {
+                let handles: Vec<_> = workers
+                    .iter_mut()
+                    .map(|w| {
+                        s.spawn(move || {
+                            w.local_deltas(theta_ref, due_ref, metas, apply_ef,
+                                           compressor)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sync delta thread panicked"))
+                    .collect()
+            })
+        } else {
+            workers
+                .iter_mut()
+                .map(|w| w.local_deltas(theta_ref, due_ref, metas, apply_ef,
+                                        compressor))
+                .collect()
+        };
+
+        // transpose [worker][due_idx] -> tensor index -> [worker],
+        // preserving worker order so every collective reduces its K
+        // contributions identically to the sequential path
+        let mut deltas: BTreeMap<usize, Vec<Vec<f32>>> =
+            due.iter().map(|&ti| (ti, Vec::with_capacity(k))).collect();
+        for wd in by_worker {
+            for (&ti, d) in due.iter().zip(wd) {
+                deltas.get_mut(&ti).expect("due tensor").push(d);
+            }
+        }
+
+        // phase 2 — per-tensor collective + outer step.  Zipping theta
+        // with the momentum slots hands each job a disjoint (theta, u)
+        // pair, so jobs are free to run on any thread.
+        let (eta, mu) = (self.outer.lr, self.outer.momentum);
+        let mut jobs: Vec<SyncJob<'_>> = Vec::with_capacity(due.len());
+        for (ti, (th, u)) in theta.iter_mut().zip(self.outer.slots_mut()).enumerate() {
+            if let Some(d) = deltas.remove(&ti) {
+                jobs.push(SyncJob {
+                    ti,
+                    theta: th,
+                    u,
+                    deltas: d,
+                    stats: CommStats::default(),
+                });
+            }
+        }
+        let compression = &self.compression;
+        let error_feedback = self.error_feedback;
+        let reduce = |job: &mut SyncJob<'_>| {
+            let meta = metas[job.ti];
+            // collective: value semantics + byte accounting
+            job.stats = match (compression, error_feedback) {
+                (Compression::None, _) => ring_allreduce_mean(&mut job.deltas),
+                (Compression::TopK { .. }, true) => {
+                    // already sparsified through EF; exact all-gather
+                    // mean, but charge top-k wire bytes
+                    let mut s = sparse_allgather_mean(
+                        &mut job.deltas, &NoCompression, meta.rows, meta.cols);
+                    let wire = compressor.wire_bytes(meta.size, meta.rows);
+                    s.bytes_per_worker = (k - 1) * wire;
+                    s.total_bytes = k * s.bytes_per_worker;
+                    s
+                }
+                (Compression::TopK { .. }, false) => sparse_allgather_mean(
+                    &mut job.deltas, compressor, meta.rows, meta.cols),
+                // with EF the contributions are already quantized (#1);
+                // quantization is idempotent on its own grid, so the
+                // collective's first hop is a no-op and the reduction
+                // requantize is hop #2.
+                (Compression::Quant { .. }, _) => quantized_reduce_mean(
+                    &mut job.deltas, compressor, meta.rows, meta.cols),
+            };
+            // outer update with Psi = the reduced delta
+            let psi: &[f32] = &job.deltas[0];
+            NesterovOuter::step_slot(eta, mu, job.u.as_mut_slice(),
+                                     job.theta.as_mut_slice(), psi);
+        };
+        if parallel && jobs.len() > 1 {
+            let threads = thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(jobs.len());
+            let chunk = jobs.len().div_ceil(threads);
+            let reduce_ref = &reduce;
+            thread::scope(|s| {
+                for batch in jobs.chunks_mut(chunk) {
+                    s.spawn(move || {
+                        for job in batch.iter_mut() {
+                            reduce_ref(job);
+                        }
+                    });
+                }
+            });
+        } else {
+            for job in jobs.iter_mut() {
+                reduce(job);
+            }
+        }
+
+        // fixed reduction order at the barrier: stats accumulate in
+        // ascending tensor index regardless of which thread ran which
+        // job (byte counts are sums, but keep the contract explicit)
+        for job in &jobs {
+            comm.add(job.stats);
+        }
+        drop(jobs);
+
+        // phase 3 — broadcast: workers resume from the new global params
+        for w in workers.iter_mut() {
+            for &ti in &due {
+                w.params[ti].copy_from_slice(&theta[ti]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pre-refactor schedule function, kept verbatim as the
+    /// reference the plan must reproduce.
+    fn partitions_due_reference(step: u64, h: u64, j_parts: usize) -> Vec<usize> {
+        if j_parts <= 1 {
+            return if step % h == 0 { vec![0] } else { vec![] };
+        }
+        let stride = h / j_parts as u64;
+        (0..j_parts)
+            .filter(|j| step % h == ((*j as u64 + 1) * stride) % h)
+            .collect()
+    }
+
+    #[test]
+    fn plan_matches_reference_schedule() {
+        for (h, j) in [(30u64, 1usize), (30, 3), (15, 3), (10, 5), (30, 2)] {
+            let parts: Vec<usize> = (0..12).map(|i| i % 3).collect();
+            let plan = SyncPlan::streaming(h, j, &parts, 3);
+            for step in 1..=4 * h {
+                assert_eq!(plan.due_groups(step),
+                           partitions_due_reference(step, h, j),
+                           "h={h} j={j} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_groups_cover_every_tensor_once_per_window() {
+        let parts: Vec<usize> = vec![0, 0, 1, 1, 1, 2, 2, 0, 1, 2];
+        let plan = SyncPlan::streaming(30, 3, &parts, 3);
+        let mut seen = vec![0usize; parts.len()];
+        for step in 1..=30 {
+            for ti in plan.due_tensors(step) {
+                seen[ti] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn dense_plan_syncs_everything_at_multiples_of_h() {
+        let plan = SyncPlan::dense(5, 4);
+        assert!(plan.due_tensors(4).is_empty());
+        assert_eq!(plan.due_tensors(5), vec![0, 1, 2, 3]);
+        assert_eq!(plan.due_tensors(10), vec![0, 1, 2, 3]);
+    }
+}

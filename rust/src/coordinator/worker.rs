@@ -1,0 +1,282 @@
+//! Worker layer: per-replica state and the pluggable inner optimizer.
+//!
+//! Each of the K logical DiLoCo workers owns a full parameter replica,
+//! inner optimizer state, an independent data shard and an error-
+//! feedback accumulator.  The `WorkerPool` runs the K inner loops on
+//! scoped threads against the shared (thread-safe) `Session`, so the
+//! hot inner-step phase scales with cores instead of paying K× wall
+//! clock.
+//!
+//! Determinism contract: every worker draws from its own RNG stream
+//! (`corpus.shard(w)`), the per-step losses are reduced in worker-index
+//! order after all threads join, and the sync engine fixes the
+//! reduction order at the barrier — so a parallel run is bit-for-bit
+//! identical to the sequential reference path
+//! (tests/parallel_determinism.rs).
+
+use std::thread;
+
+use anyhow::Result;
+
+use super::config::Method;
+use super::diloco::accumulate_grads;
+use super::sync::SyncTensorMeta;
+use crate::compress::{Compressor, ErrorFeedback};
+use crate::data::{Corpus, Shard};
+use crate::runtime::{Session, Tensors};
+
+/// The per-step parameter/state update applied inside every worker
+/// (Algorithm 1 line 8).  Implementations are stateless dispatchers to
+/// the session's compiled executables — all optimizer state lives in
+/// the worker, so a single instance serves all K replicas from any
+/// thread.
+pub trait InnerOptimizer: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Fresh zero state shaped for this optimizer.
+    fn zero_state(&self, sess: &Session) -> Tensors;
+
+    /// One optimizer step: (params, state, grads) -> (params', state').
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        sess: &Session,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)>;
+}
+
+/// AdamW inner optimizer (DiLoCo / DP-AdamW).
+pub struct AdamWInner;
+
+impl InnerOptimizer for AdamWInner {
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn zero_state(&self, sess: &Session) -> Tensors {
+        sess.zero_adamw_state()
+    }
+
+    fn step(
+        &self,
+        sess: &Session,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)> {
+        sess.apply_adamw(params, state, grads, t, lr, wd)
+    }
+}
+
+/// Muon inner optimizer (MuLoCo / DP-Muon): Newton–Schulz
+/// orthogonalized momentum on hidden matrices, AdamW elsewhere
+/// (routing is baked into the apply_muon executable).
+pub struct MuonInner;
+
+impl InnerOptimizer for MuonInner {
+    fn name(&self) -> &'static str {
+        "muon"
+    }
+
+    fn zero_state(&self, sess: &Session) -> Tensors {
+        sess.zero_muon_state()
+    }
+
+    fn step(
+        &self,
+        sess: &Session,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)> {
+        sess.apply_muon(params, state, grads, t, lr, wd)
+    }
+}
+
+/// Inner-optimizer dispatch from the configured method.  The impls are
+/// zero-sized, so a `&'static` works for every worker thread.
+pub fn inner_for(method: Method) -> &'static dyn InnerOptimizer {
+    if method.uses_muon() {
+        &MuonInner
+    } else {
+        &AdamWInner
+    }
+}
+
+/// Per-worker replica state (Algorithm 1's theta_k / inner state /
+/// D_k shard, plus the Algorithm 2 error-feedback accumulator).
+pub struct Worker<'c> {
+    pub params: Tensors,
+    pub opt_state: Tensors,
+    pub shard: Shard<'c>,
+    pub ef: ErrorFeedback,
+}
+
+impl<'c> Worker<'c> {
+    pub fn new(
+        params: Tensors,
+        opt_state: Tensors,
+        shard: Shard<'c>,
+        ef: ErrorFeedback,
+    ) -> Worker<'c> {
+        Worker { params, opt_state, shard, ef }
+    }
+
+    /// One inner step: accumulate grads over this worker's batch slice
+    /// and apply the inner optimizer.  Returns the mean micro-loss.
+    pub fn inner_step(
+        &mut self,
+        sess: &Session,
+        inner: &dyn InnerOptimizer,
+        batch_seqs: usize,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<f64> {
+        let (loss, grads) =
+            accumulate_grads(sess, &self.params, &mut self.shard, batch_seqs)?;
+        let (p, s) =
+            inner.step(sess, &self.params, &self.opt_state, &grads, t, lr, wd)?;
+        self.params = p;
+        self.opt_state = s;
+        Ok(loss)
+    }
+
+    /// Per-worker half of the sync boundary: the deltas
+    /// theta_global - theta_k for the due tensors, folded through the
+    /// error-feedback accumulator when compression is active
+    /// (Algorithm 2 lines 13-17).  Pure per-worker work, safe to run
+    /// for all workers concurrently.
+    pub fn local_deltas(
+        &mut self,
+        theta: &Tensors,
+        due: &[usize],
+        metas: &[SyncTensorMeta],
+        apply_ef: bool,
+        compressor: &dyn Compressor,
+    ) -> Vec<Vec<f32>> {
+        due.iter()
+            .map(|&ti| {
+                let mut d = crate::util::sub(&theta[ti], &self.params[ti]);
+                if apply_ef {
+                    let m = metas[ti];
+                    self.ef.compress_with_feedback(ti, &mut d, m.rows, m.cols,
+                                                   compressor);
+                }
+                d
+            })
+            .collect()
+    }
+}
+
+/// The K inner-optimization trajectories, run concurrently.  The pool
+/// owns its inner optimizer: worker state is shaped for it at
+/// construction, so a mismatched optimizer/state pair is
+/// unrepresentable.
+pub struct WorkerPool<'c> {
+    pub workers: Vec<Worker<'c>>,
+    inner: &'c dyn InnerOptimizer,
+}
+
+impl<'c> WorkerPool<'c> {
+    /// K replicas of `theta`, each with its own shard `D_k`, zero inner
+    /// state and EF accumulator.
+    pub fn new(
+        sess: &Session,
+        corpus: &'c Corpus,
+        inner: &'c dyn InnerOptimizer,
+        k: usize,
+        ef_beta: f32,
+        theta: &Tensors,
+    ) -> WorkerPool<'c> {
+        let n_tensors = sess.manifest.params.len();
+        let workers = (0..k)
+            .map(|w| {
+                Worker::new(
+                    theta.clone(),
+                    inner.zero_state(sess),
+                    corpus.shard(w as u64),
+                    ErrorFeedback::new(n_tensors, ef_beta),
+                )
+            })
+            .collect();
+        WorkerPool { workers, inner }
+    }
+
+    pub fn inner(&self) -> &'c dyn InnerOptimizer {
+        self.inner
+    }
+
+    pub fn k(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// One inner step on every worker.  With `parallel` the K inner
+    /// loops run on scoped threads (one per worker — the work is
+    /// PJRT-bound, so K threads is the right granularity); otherwise
+    /// they run inline, which is the sequential reference path.  Either
+    /// way losses are reduced in worker-index order, so the mean is
+    /// bit-identical across modes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        sess: &Session,
+        batch_seqs: usize,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        parallel: bool,
+    ) -> Result<f64> {
+        let k = self.workers.len();
+        let inner = self.inner;
+        let losses: Vec<Result<f64>> = if parallel && k > 1 {
+            thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .map(|w| {
+                        s.spawn(move || w.inner_step(sess, inner, batch_seqs, t, lr, wd))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("worker thread panicked"))
+                    .collect()
+            })
+        } else {
+            self.workers
+                .iter_mut()
+                .map(|w| w.inner_step(sess, inner, batch_seqs, t, lr, wd))
+                .collect()
+        };
+        let mut mean = 0.0;
+        for loss in losses {
+            mean += loss? / k as f64;
+        }
+        Ok(mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_selects_the_configured_inner_optimizer() {
+        assert_eq!(inner_for(Method::DpAdamw).name(), "adamw");
+        assert_eq!(inner_for(Method::Diloco).name(), "adamw");
+        assert_eq!(inner_for(Method::DpMuon).name(), "muon");
+        assert_eq!(inner_for(Method::Muloco).name(), "muon");
+    }
+}

@@ -55,7 +55,7 @@ pub fn batch_sweep(ctx: &Ctx, model: &str, token_budget: f64)
             cfg.eval_batches = 4;
             cfg.warmup_steps = cfg.total_steps / 10;
             if method.is_local_update() {
-                cfg = cfg.tuned_outer(k);
+                cfg = cfg.tuned_outer(k)?;
             }
             // sqrt LR scaling from the B=32 reference (the paper
             // re-tunes per B; this is the standard heuristic stand-in)

@@ -23,7 +23,7 @@ fn run_compressed(
     ef: bool,
 ) -> Result<f64> {
     let sess = ctx.session(ctx.base_model())?;
-    let mut cfg = base_cfg(ctx, method).tuned_outer(8);
+    let mut cfg = base_cfg(ctx, method).tuned_outer(8)?;
     cfg.total_steps = comp_steps(ctx);
     cfg.warmup_steps = cfg.total_steps / 10;
     cfg.compression = compression;
@@ -110,7 +110,7 @@ pub fn fig8b(ctx: &Ctx) -> Result<()> {
     );
     for method in [Method::Diloco, Method::Muloco] {
         let run = |j: usize| -> Result<f64> {
-            let mut cfg = base_cfg(ctx, method).tuned_outer(8);
+            let mut cfg = base_cfg(ctx, method).tuned_outer(8)?;
             cfg.streaming_partitions = j;
             Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
         };

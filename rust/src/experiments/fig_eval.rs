@@ -90,7 +90,7 @@ pub fn tab3(ctx: &Ctx) -> Result<()> {
         // sqrt-scale LR from the B=32 reference, as in the CBS sweeps
         cfg.lr *= (batch as f64 / 32.0).sqrt();
         if method.is_local_update() {
-            cfg = cfg.tuned_outer(k);
+            cfg = cfg.tuned_outer(k)?;
         }
         eprintln!("[tab3] {} B={batch} steps={}", combo_label(method, k),
                   cfg.total_steps);

@@ -98,7 +98,7 @@ pub fn fig23(ctx: &Ctx) -> Result<()> {
                 cfg.eval_every = 15;
                 cfg.global_batch = 32;
                 if method.is_local_update() {
-                    cfg = cfg.tuned_outer(4);
+                    cfg = cfg.tuned_outer(4)?;
                 }
                 let loss = ctx.cache.run(&sess, &cfg)?.smoothed_final;
                 if loss < best.1 {

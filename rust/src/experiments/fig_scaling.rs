@@ -66,7 +66,7 @@ pub fn ladder_run(ctx: &Ctx, model: &str, method: Method, k: usize)
     cfg.eval_batches = 4;
     cfg.warmup_steps = cfg.total_steps / 10;
     if method.is_local_update() {
-        cfg = cfg.tuned_outer(k);
+        cfg = cfg.tuned_outer(k)?;
     }
     let run = ctx.cache.run(&sess, &cfg)?;
     let d = cfg.total_steps as f64 * tok_per_step;

@@ -21,9 +21,12 @@ fn measure(ctx: &Ctx, method: Method) -> Result<Measured> {
     cfg.total_steps = 30;
     cfg.warmup_steps = 3;
     if method.is_local_update() {
-        cfg = cfg.tuned_outer(4);
-        cfg.workers = 4;
+        cfg = cfg.tuned_outer(4)?;
     }
+    // measure sequentially: per-call elapsed times feed Table 9's
+    // per-step compute/throughput rows, and concurrent workers would
+    // fold cross-thread contention into exec.fwd_grad_secs
+    cfg.parallel = false;
     let r = train(&sess, &cfg)?;
     let steps = cfg.total_steps as f64;
     Ok(Measured {

@@ -37,7 +37,7 @@ pub fn dp_run(ctx: &Ctx, method: Method) -> Result<super::RunSummary> {
 pub fn local_run(ctx: &Ctx, method: Method, k: usize)
                  -> Result<super::RunSummary> {
     let sess = ctx.session(ctx.base_model())?;
-    let cfg = base_cfg(ctx, method).tuned_outer(k);
+    let cfg = base_cfg(ctx, method).tuned_outer(k)?;
     ctx.cache.run(&sess, &cfg)
 }
 
@@ -91,7 +91,7 @@ pub fn fig6b(ctx: &Ctx) -> Result<()> {
     );
     for h in hs {
         let run = |method: Method| -> Result<f64> {
-            let mut cfg = base_cfg(ctx, method).tuned_outer(k);
+            let mut cfg = base_cfg(ctx, method).tuned_outer(k)?;
             cfg.sync_interval = h;
             cfg.eval_every = h.min(cfg.total_steps);
             Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)

@@ -19,10 +19,9 @@ mod fig_scaling;
 mod fig_wallclock;
 mod fig_workers;
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -30,11 +29,13 @@ use crate::runtime::Session;
 
 pub use cache::{RunCache, RunSummary};
 
-/// Execution context shared by all experiments.
+/// Execution context shared by all experiments.  Sessions are handed
+/// out behind `Arc` (the runtime is `Send + Sync`), so experiment code
+/// is free to fan training runs out across threads.
 pub struct Ctx {
     pub artifacts: PathBuf,
     pub preset: Preset,
-    sessions: RefCell<BTreeMap<String, Rc<Session>>>,
+    sessions: Mutex<BTreeMap<String, Arc<Session>>>,
     pub cache: RunCache,
 }
 
@@ -56,20 +57,27 @@ impl Ctx {
         Ok(Ctx {
             artifacts: artifacts.to_path_buf(),
             preset,
-            sessions: RefCell::new(BTreeMap::new()),
+            sessions: Mutex::new(BTreeMap::new()),
             cache: RunCache::new("results/cache")?,
         })
     }
 
     /// Compiled sessions are expensive (XLA LLVM jit); cache per config.
-    pub fn session(&self, model: &str) -> Result<Rc<Session>> {
-        if let Some(s) = self.sessions.borrow().get(model) {
+    pub fn session(&self, model: &str) -> Result<Arc<Session>> {
+        if let Some(s) = self.sessions.lock().unwrap().get(model) {
             return Ok(s.clone());
         }
+        // load outside the lock: compilation takes seconds and must not
+        // block a concurrent lookup of an already-cached config.  Two
+        // threads missing on the same model both compile and one result
+        // is dropped — acceptable until `experiment all` actually fans
+        // out (then switch to a per-model OnceLock slot)
         eprintln!("[ctx] loading + compiling artifacts for {model} ...");
-        let s = Rc::new(Session::load(&self.artifacts.join(model))?);
-        self.sessions.borrow_mut().insert(model.to_string(), s.clone());
-        Ok(s)
+        let s = Arc::new(Session::load(&self.artifacts.join(model))?);
+        Ok(self.sessions.lock().unwrap()
+            .entry(model.to_string())
+            .or_insert(s)
+            .clone())
     }
 
     /// The base model for single-scale experiments (paper: 416M).

@@ -22,7 +22,7 @@ use muloco::metrics::RunLogger;
 use muloco::runtime::Session;
 use muloco::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["ef", "quiet"];
+const BOOL_FLAGS: &[&str] = &["ef", "quiet", "sequential"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -60,11 +60,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let model = args.get_or("model", "nano");
     let method = Method::parse(&args.get_or("method", "muloco"))?;
     let mut cfg = TrainConfig::new(&model, method);
+    cfg.global_batch = args.get_parse("batch", cfg.global_batch)?;
     let workers = args.get_parse("workers", cfg.workers)?;
-    cfg = cfg.tuned_outer(workers);
+    cfg = cfg.tuned_outer(workers)?;
     cfg.sync_interval = args.get_parse("sync-interval", cfg.sync_interval)?;
     cfg.total_steps = args.get_parse("steps", cfg.total_steps)?;
-    cfg.global_batch = args.get_parse("batch", cfg.global_batch)?;
     cfg.lr = args.get_parse("lr", cfg.lr)?;
     cfg.weight_decay = args.get_parse("wd", cfg.weight_decay)?;
     cfg.warmup_steps = args.get_parse("warmup", cfg.warmup_steps)?;
@@ -79,6 +79,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.compression = Compression::parse(spec)?;
     }
     cfg.error_feedback = args.flag("ef");
+    cfg.parallel = !args.flag("sequential");
     let quiet = args.flag("quiet");
     let group = args.get_or("log-group", "train");
     let label = args.get_or(
@@ -148,6 +149,7 @@ USAGE:
                [--lr F] [--wd F] [--outer-lr F] [--outer-momentum F]
                [--compression none|q<bits>-<linear|stat>[-rw]|topk<frac>]
                [--ef] [--streaming J] [--seed S] [--label L]
+               [--sequential]   # disable the parallel worker pool
   muloco experiment <id|all> [--preset fast|full]
   muloco info --model M
   muloco list

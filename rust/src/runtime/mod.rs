@@ -2,6 +2,8 @@
 
 pub mod manifest;
 pub mod session;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
 
 pub use manifest::{Manifest, ModelDims, StateSpec, TensorKind, TensorSpec};
 pub use session::{ExecStats, Session, Tensors};

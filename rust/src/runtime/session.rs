@@ -5,17 +5,28 @@
 //! reused for every worker — workers are pure parameter/state vectors,
 //! so a single compiled executable serves all K replicas.
 //!
+//! The session is `Send + Sync`: the `WorkerPool` issues fwd_grad /
+//! apply calls for the K replicas concurrently from scoped threads
+//! against the shared `PjRtLoadedExecutable`s, so execution stats are
+//! kept in atomics and every method takes `&self`.
+//!
 //! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
 //! 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids);
 //! the text parser reassigns ids.
 
-use std::cell::RefCell;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
-          XlaComputation};
+
+#[cfg(feature = "pjrt")]
+use xla::{Error as XlaError, HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub::{Error as XlaError, HloModuleProto, Literal, PjRtBuffer,
+                      PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::manifest::Manifest;
 
@@ -34,6 +45,46 @@ pub struct ExecStats {
     pub eval_secs: f64,
 }
 
+/// Lock-free stats accumulator: worker threads record concurrently,
+/// so counts and elapsed nanoseconds live in relaxed atomics (exact
+/// counts, no ordering dependencies between counters).
+#[derive(Default)]
+struct StatsCell {
+    fwd_grad_calls: AtomicU64,
+    fwd_grad_nanos: AtomicU64,
+    apply_calls: AtomicU64,
+    apply_nanos: AtomicU64,
+    eval_calls: AtomicU64,
+    eval_nanos: AtomicU64,
+}
+
+impl StatsCell {
+    fn record(calls: &AtomicU64, nanos: &AtomicU64, t0: Instant) {
+        calls.fetch_add(1, Ordering::Relaxed);
+        nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> ExecStats {
+        let secs = |n: &AtomicU64| n.load(Ordering::Relaxed) as f64 * 1e-9;
+        ExecStats {
+            fwd_grad_calls: self.fwd_grad_calls.load(Ordering::Relaxed),
+            fwd_grad_secs: secs(&self.fwd_grad_nanos),
+            apply_calls: self.apply_calls.load(Ordering::Relaxed),
+            apply_secs: secs(&self.apply_nanos),
+            eval_calls: self.eval_calls.load(Ordering::Relaxed),
+            eval_secs: secs(&self.eval_nanos),
+        }
+    }
+
+    fn reset(&self) {
+        for a in [&self.fwd_grad_calls, &self.fwd_grad_nanos,
+                  &self.apply_calls, &self.apply_nanos,
+                  &self.eval_calls, &self.eval_nanos] {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
 pub struct Session {
     pub manifest: Manifest,
     client: PjRtClient,
@@ -42,8 +93,22 @@ pub struct Session {
     exe_apply_adamw: PjRtLoadedExecutable,
     exe_apply_muon: PjRtLoadedExecutable,
     exe_eval: PjRtLoadedExecutable,
-    stats: RefCell<ExecStats>,
+    stats: StatsCell,
 }
+
+// SAFETY: the parallel WorkerPool shares `&Session` across scoped
+// threads.  This is sound because (a) every Session method takes
+// `&self` and the only interior mutability is the atomic `StatsCell`;
+// (b) the PJRT C API specifies the entry points used here —
+// BufferFromHostBuffer, Execute and buffer-to-literal transfers — as
+// thread-safe on a shared client/loaded-executable (xla_extension
+// 0.5.1 routes them through the C++ PjRt CPU client, whose handles are
+// atomically refcounted shared_ptrs); (c) the wrapper handles are
+// created once in `load` and only dropped when the Session is, never
+// cloned or freed from worker threads.  The determinism regression
+// test (tests/parallel_determinism.rs) exercises this contract.
+unsafe impl Send for Session {}
+unsafe impl Sync for Session {}
 
 impl Session {
     /// Load and compile every executable of a config's artifact dir.
@@ -66,16 +131,16 @@ impl Session {
             exe_eval: compile("eval_step")?,
             manifest,
             client,
-            stats: RefCell::new(ExecStats::default()),
+            stats: StatsCell::default(),
         })
     }
 
     pub fn stats(&self) -> ExecStats {
-        self.stats.borrow().clone()
+        self.stats.snapshot()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = ExecStats::default();
+        self.stats.reset();
     }
 
     pub fn platform(&self) -> String {
@@ -188,9 +253,7 @@ impl Session {
             .get_first_element::<f32>()
             .map_err(wrap)?;
         let grads = Self::unpack(&mut it, &self.param_shapes())?;
-        let mut st = self.stats.borrow_mut();
-        st.fwd_grad_calls += 1;
-        st.fwd_grad_secs += t0.elapsed().as_secs_f64();
+        StatsCell::record(&self.stats.fwd_grad_calls, &self.stats.fwd_grad_nanos, t0);
         Ok((loss, grads))
     }
 
@@ -232,9 +295,7 @@ impl Session {
             .map(|s| s.shape.clone())
             .collect();
         let new_state = Self::unpack(&mut it, &state_shapes)?;
-        let mut st = self.stats.borrow_mut();
-        st.apply_calls += 1;
-        st.apply_secs += t0.elapsed().as_secs_f64();
+        StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
         Ok((new_params, new_state))
     }
 
@@ -277,9 +338,7 @@ impl Session {
             .map(|s| s.shape.clone())
             .collect();
         let new_state = Self::unpack(&mut it, &state_shapes)?;
-        let mut st = self.stats.borrow_mut();
-        st.apply_calls += 1;
-        st.apply_secs += t0.elapsed().as_secs_f64();
+        StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
         Ok((new_params, new_state))
     }
 
@@ -299,14 +358,12 @@ impl Session {
         }
         let loss = outs[0].get_first_element::<f32>().map_err(wrap)?;
         let acc = outs[1].get_first_element::<f32>().map_err(wrap)?;
-        let mut st = self.stats.borrow_mut();
-        st.eval_calls += 1;
-        st.eval_secs += t0.elapsed().as_secs_f64();
+        StatsCell::record(&self.stats.eval_calls, &self.stats.eval_nanos, t0);
         Ok((loss, acc))
     }
 }
 
 /// The xla crate has its own error type; fold it into anyhow.
-fn wrap(e: xla::Error) -> anyhow::Error {
+fn wrap(e: XlaError) -> anyhow::Error {
     anyhow!("xla: {e}")
 }

@@ -1,0 +1,106 @@
+//! API-compatible stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real runtime needs the xla_extension toolchain, which is not
+//! available in every build environment.  This stub mirrors exactly the
+//! API surface `session.rs` consumes so the crate (and the whole
+//! non-PJRT test suite — coordinator, compression, collectives,
+//! scaling, data) builds and runs without it.  Every entry point that
+//! would touch PJRT fails fast at `PjRtClient::cpu()` with a clear
+//! message; enable the `pjrt` cargo feature to link the real bindings.
+
+use std::fmt;
+use std::path::Path;
+
+/// Mirrors `xla::Error` (folded into anyhow by the session).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable: muloco was built without the `pjrt` \
+         cargo feature (rebuild with `--features pjrt` and the \
+         xla_extension toolchain to load AOT artifacts)"
+            .to_string(),
+    )
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T, Error> {
+        Err(unavailable())
+    }
+}

@@ -45,13 +45,60 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     }
 }
 
-/// y += alpha * x
+/// y += alpha * x, 8-wide chunked so the compiler keeps it on packed
+/// SIMD adds (same per-element arithmetic as the scalar loop, so
+/// results are bit-identical).
 #[inline]
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (a, b) in yc.by_ref().zip(xc.by_ref()) {
+        for i in 0..8 {
+            a[i] += alpha * b[i];
+        }
     }
+    for (a, b) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += alpha * b;
+    }
+}
+
+/// y += x (gradient accumulation / reduction hot path).
+#[inline]
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (a, b) in yc.by_ref().zip(xc.by_ref()) {
+        for i in 0..8 {
+            a[i] += b[i];
+        }
+    }
+    for (a, b) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *a += b;
+    }
+}
+
+/// y *= alpha (in-place mean normalization).
+#[inline]
+pub fn scale(y: &mut [f32], alpha: f32) {
+    let mut yc = y.chunks_exact_mut(8);
+    for a in yc.by_ref() {
+        for v in a.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    for v in yc.into_remainder() {
+        *v *= alpha;
+    }
+}
+
+/// Element-wise a - b into a fresh vector (the per-worker pseudo-
+/// gradient delta theta_global - theta_k on the sync path).
+#[inline]
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
 }
 
 /// Mean of a slice.
@@ -100,6 +147,36 @@ mod tests {
         let b = vec![-1.0f32, -2.0, -3.0];
         assert!((cosine(&a, &b) + 1.0).abs() < 1e-12);
         assert_eq!(cosine(&a, &[0.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn chunked_helpers_match_naive() {
+        // 103 elements: exercises both the 8-wide body and the tail
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.5 - 20.0).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32).sin()).collect();
+
+        let mut y = a.clone();
+        add_assign(&mut y, &b);
+        for (i, v) in y.iter().enumerate() {
+            assert_eq!(*v, a[i] + b[i], "add_assign at {i}");
+        }
+
+        let mut y = a.clone();
+        axpy(&mut y, 0.25, &b);
+        for (i, v) in y.iter().enumerate() {
+            assert_eq!(*v, a[i] + 0.25 * b[i], "axpy at {i}");
+        }
+
+        let mut y = a.clone();
+        scale(&mut y, 1.0 / 3.0);
+        for (i, v) in y.iter().enumerate() {
+            assert_eq!(*v, a[i] * (1.0 / 3.0), "scale at {i}");
+        }
+
+        let d = sub(&a, &b);
+        for (i, v) in d.iter().enumerate() {
+            assert_eq!(*v, a[i] - b[i], "sub at {i}");
+        }
     }
 
     #[test]

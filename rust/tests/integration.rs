@@ -12,14 +12,14 @@ use muloco::runtime::Session;
 
 fn short_cfg(method: Method, k: usize) -> TrainConfig {
     let mut cfg = TrainConfig::new("nano", method);
+    cfg.global_batch = 16;
     if method.is_local_update() {
-        cfg = cfg.tuned_outer(k);
+        cfg = cfg.tuned_outer(k).expect("batch shards across workers");
     }
     cfg.total_steps = 20;
     cfg.sync_interval = 5;
     cfg.eval_every = 5;
     cfg.eval_batches = 2;
-    cfg.global_batch = 16;
     cfg.warmup_steps = 2;
     cfg
 }

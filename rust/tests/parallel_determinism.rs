@@ -1,0 +1,199 @@
+//! Determinism regression tests for the parallel execution engine.
+//!
+//! Contract under test: running the K inner loops on the WorkerPool's
+//! scoped threads and the per-tensor sync reduce across threads yields
+//! results bit-for-bit identical to the sequential reference path
+//! (`TrainConfig::parallel = false`).
+//!
+//! The SyncEngine tests run without compiled artifacts (the engine is
+//! decoupled from the PJRT session); the end-to-end train() comparison
+//! is gated on `make artifacts` like the rest of the PJRT suite.
+
+use muloco::compress::{Compression, ErrorFeedback, QuantMode};
+use muloco::collectives::CommStats;
+use muloco::coordinator::{train, Method, NesterovOuter, SyncEngine, SyncPlan,
+                          SyncTensorMeta, TrainConfig, Worker};
+use muloco::data::Corpus;
+use muloco::util::rng::Rng;
+
+/// Synthetic tensor geometry: two matrices + three vectors.
+fn metas() -> Vec<SyncTensorMeta> {
+    vec![
+        SyncTensorMeta::from_shape(&[8, 16], 128),
+        SyncTensorMeta::from_shape(&[64], 64),
+        SyncTensorMeta::from_shape(&[16, 4], 64),
+        SyncTensorMeta::from_shape(&[32], 32),
+        SyncTensorMeta::from_shape(&[96], 96),
+    ]
+}
+
+fn rand_theta(rng: &mut Rng, metas: &[SyncTensorMeta]) -> Vec<Vec<f32>> {
+    metas
+        .iter()
+        .map(|m| (0..m.size).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+/// Build an engine + K workers over `corpus`, all from one seed.
+fn build<'c>(
+    corpus: &'c Corpus,
+    k: usize,
+    compression: Compression,
+    ef: bool,
+    j_parts: usize,
+    h: u64,
+) -> (SyncEngine, Vec<Vec<f32>>, Vec<Worker<'c>>) {
+    let metas = metas();
+    let mut rng = Rng::new(99);
+    let theta = rand_theta(&mut rng, &metas);
+    let workers: Vec<Worker<'c>> = (0..k)
+        .map(|w| {
+            // each worker starts from theta plus its own deterministic drift
+            let params: Vec<Vec<f32>> = theta
+                .iter()
+                .map(|t| t.iter().map(|x| x + 0.01 * rng.normal_f32()).collect())
+                .collect();
+            Worker::new(params, Vec::new(), corpus.shard(w as u64),
+                        ErrorFeedback::new(metas.len(), 0.9))
+        })
+        .collect();
+    let sizes: Vec<usize> = metas.iter().map(|m| m.size).collect();
+    let outer = NesterovOuter::new(0.7, 0.9, &sizes);
+    let plan = if j_parts <= 1 {
+        SyncPlan::dense(h, metas.len())
+    } else {
+        // partition ids roughly mirroring the 3-way layer split
+        let parts = vec![0usize, 1, 1, 2, 2];
+        SyncPlan::streaming(h, j_parts, &parts, 3)
+    };
+    let engine = SyncEngine::from_parts(plan, metas, outer, compression, ef);
+    (engine, theta, workers)
+}
+
+/// Drift every worker deterministically (stand-in for inner steps).
+fn drift(workers: &mut [Worker<'_>], round: u64) {
+    for (w, worker) in workers.iter_mut().enumerate() {
+        let mut rng = Rng::new(round * 1000 + w as u64);
+        for t in worker.params.iter_mut() {
+            for x in t.iter_mut() {
+                *x += 0.02 * rng.normal_f32();
+            }
+        }
+    }
+}
+
+fn run_rounds(
+    corpus: &Corpus,
+    compression: Compression,
+    ef: bool,
+    j_parts: usize,
+    parallel: bool,
+) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>, CommStats) {
+    let h = if j_parts <= 1 { 2 } else { 4 };
+    let (mut engine, mut theta, mut workers) =
+        build(corpus, 4, compression, ef, j_parts, h);
+    let mut comm = CommStats::default();
+    for step in 1..=3 * h {
+        drift(&mut workers, step);
+        engine.sync_step(step, &mut theta, &mut workers, &mut comm, parallel);
+    }
+    let params = workers.iter().map(|w| w.params.clone()).collect();
+    (theta, params, comm)
+}
+
+#[test]
+fn sync_engine_parallel_matches_sequential() {
+    let corpus = Corpus::new(64, 3);
+    for (compression, ef) in [
+        (Compression::None, false),
+        (Compression::Quant { bits: 4, mode: QuantMode::Linear, rowwise: false }, false),
+        (Compression::Quant { bits: 8, mode: QuantMode::Linear, rowwise: true }, true),
+        (Compression::TopK { frac: 0.25 }, false),
+        (Compression::TopK { frac: 0.25 }, true),
+    ] {
+        for j_parts in [1usize, 2] {
+            let (t_seq, p_seq, c_seq) =
+                run_rounds(&corpus, compression.clone(), ef, j_parts, false);
+            let (t_par, p_par, c_par) =
+                run_rounds(&corpus, compression.clone(), ef, j_parts, true);
+            assert_eq!(t_seq, t_par,
+                       "theta diverged: {compression:?} ef={ef} J={j_parts}");
+            assert_eq!(p_seq, p_par,
+                       "worker params diverged: {compression:?} ef={ef} J={j_parts}");
+            assert_eq!(c_seq, c_par,
+                       "comm stats diverged: {compression:?} ef={ef} J={j_parts}");
+        }
+    }
+}
+
+#[test]
+fn sync_engine_broadcast_restores_agreement() {
+    // after a dense boundary every worker must hold exactly theta
+    let corpus = Corpus::new(64, 5);
+    let (mut engine, mut theta, mut workers) =
+        build(&corpus, 4, Compression::None, false, 1, 1);
+    drift(&mut workers, 7);
+    let mut comm = CommStats::default();
+    engine.sync_step(1, &mut theta, &mut workers, &mut comm, true);
+    for w in &workers {
+        assert_eq!(w.params, theta);
+    }
+    // fp32 dense collective moved ring-allreduce bytes for every tensor
+    assert!(comm.bytes_per_worker > 0);
+    // and the outer momentum picked up the pseudogradient
+    assert!(engine.momentum_norm(0) > 0.0);
+}
+
+#[test]
+fn sync_engine_streaming_only_touches_due_partitions() {
+    let corpus = Corpus::new(64, 5);
+    let (mut engine, mut theta, mut workers) =
+        build(&corpus, 2, Compression::None, false, 2, 4);
+    let before = theta.clone();
+    drift(&mut workers, 1);
+    let mut comm = CommStats::default();
+    // step 2 is group 0's slot (stride = H/J = 2): tensors of group 1
+    // must be untouched
+    engine.sync_step(2, &mut theta, &mut workers, &mut comm, true);
+    let due: Vec<usize> = engine.plan.group(0).to_vec();
+    for ti in 0..before.len() {
+        if due.contains(&ti) {
+            assert_ne!(theta[ti], before[ti], "due tensor {ti} not updated");
+        } else {
+            assert_eq!(theta[ti], before[ti], "idle tensor {ti} was touched");
+        }
+    }
+}
+
+/// End-to-end: a K=8 nano run through the parallel WorkerPool must
+/// reproduce the sequential reference bit-for-bit (eval curves, train
+/// curves, comm accounting).  Requires `make artifacts`.
+#[test]
+fn train_parallel_matches_sequential_reference() {
+    let dir = std::path::PathBuf::from("artifacts/nano");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; run `make artifacts` (test skipped)");
+        return;
+    }
+    let sess = muloco::runtime::Session::load(&dir).expect("session");
+    let mut cfg = TrainConfig::new("nano", Method::Muloco);
+    cfg.global_batch = 32;
+    cfg = cfg.tuned_outer(8).unwrap();
+    cfg.total_steps = 10;
+    cfg.sync_interval = 5;
+    cfg.eval_every = 5;
+    cfg.eval_batches = 2;
+    cfg.warmup_steps = 2;
+
+    cfg.parallel = false;
+    let seq = train(&sess, &cfg).expect("sequential run");
+    cfg.parallel = true;
+    let par = train(&sess, &cfg).expect("parallel run");
+
+    assert_eq!(seq.eval_curve, par.eval_curve, "eval curves diverged");
+    assert_eq!(seq.train_curve, par.train_curve, "train curves diverged");
+    assert_eq!(seq.acc_curve, par.acc_curve, "acc curves diverged");
+    assert_eq!(seq.comm, par.comm, "comm accounting diverged");
+    assert_eq!(seq.tokens, par.tokens);
+    assert_eq!(seq.final_params, par.final_params, "final params diverged");
+}
