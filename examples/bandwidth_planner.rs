@@ -23,18 +23,18 @@ fn main() -> anyhow::Result<()> {
     args.finish()?;
 
     let param_bytes = 4.0 * params;
-    let profile = SystemProfile {
-        compute_secs_per_step: step_secs,
-        optimizer_secs_per_step: opt_secs,
+    let profile = SystemProfile::flat(
+        step_secs,
+        opt_secs,
         param_bytes,
-        wire_bytes_per_sync: param_bytes * bits as f64 / 32.0,
+        param_bytes * bits as f64 / 32.0,
         workers,
-        pattern: if dp {
+        if dp {
             CommPattern::EveryStep
         } else {
             CommPattern::EveryH { h }
         },
-    };
+    );
 
     println!(
         "plan: {params:.2e} params, K={workers}, {} sync, {bits}-bit wire, \

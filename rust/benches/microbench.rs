@@ -14,8 +14,8 @@ use std::time::Instant;
 
 use muloco::analysis::svd;
 use muloco::analysis::Mat;
-use muloco::collectives::{quantized_reduce_mean, ring_allreduce_mean,
-                          sparse_allgather_mean};
+use muloco::comm::{AllToAll, CollectiveOp, Hierarchical, OpKind, Ring,
+                   Topology};
 use muloco::compress::{Compressor, ErrorFeedback, QuantMode, Quantizer, TopK};
 use muloco::coordinator::{train, Method, NesterovOuter, TrainConfig};
 use muloco::runtime::Session;
@@ -87,18 +87,27 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let q = Quantizer::new(4, QuantMode::Linear, false);
         let mut work = bufs.clone();
+        let dense = CollectiveOp::dense();
         bench("ring all-reduce K=8 (128K f32 each)", 4 * n, || {
             work.clone_from(&bufs);
-            ring_allreduce_mean(&mut work);
+            Ring.reduce_mean(&mut work, &dense, 1, shard);
         });
+        let quant = CollectiveOp::new(&q, OpKind::TwoQuant);
         bench("quantized reduce (a2a+ag) K=8 q4", 4 * n, || {
             work.clone_from(&bufs);
-            quantized_reduce_mean(&mut work, &q, 1, shard);
+            AllToAll.reduce_mean(&mut work, &quant, 1, shard);
+        });
+        let hier = Hierarchical::new(2);
+        bench("hierarchical 2-DC reduce K=8 q4", 4 * n, || {
+            work.clone_from(&bufs);
+            hier.reduce_mean(&mut work, &quant, 1, shard);
         });
         let t = TopK::new(0.05);
+        let sparse =
+            CollectiveOp::new(&t, OpKind::SparseGather { presparsified: false });
         bench("sparse all-gather K=8 top-5%", 4 * n, || {
             work.clone_from(&bufs);
-            sparse_allgather_mean(&mut work, &t, 1, shard);
+            Ring.reduce_mean(&mut work, &sparse, 1, shard);
         });
     }
 

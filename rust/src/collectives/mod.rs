@@ -1,113 +1,33 @@
-//! Simulated communication collectives (paper §2 "Collectives for
-//! compressed communication").
-//!
-//! Workers are in-process buffers, so these collectives are *bit-exact
-//! simulations* of the dataflow — what matters for reproducing the
-//! paper's compression results is WHERE lossy steps happen:
-//!
-//! * `ring_allreduce_mean` — dense fp32 baseline; bandwidth-optimal
-//!   volume 2(K-1)/K * n per worker.
-//! * `quantized_reduce_mean` — the paper's all-to-all reduce-scatter +
-//!   ring all-gather with exactly TWO quantizations: each worker
-//!   quantizes its shard contribution before the all-to-all (#1); the
-//!   shard owner dequantizes all K pieces, reduces in fp32, and
-//!   requantizes before the all-gather (#2).  Net value semantics:
-//!   result = Q( mean_k Q(delta_k) ), identical on all workers, with
-//!   no per-hop error compounding (that's the point vs a ring).
-//! * `sparse_allgather_mean` — top-k path: one sparsification per
-//!   worker, then an all-gather (bandwidth grows with K) and an exact
-//!   fp32 mean.
-//!
-//! Every collective returns honest per-worker byte counts for netsim.
+//! Retired module: the simulated collectives now live in the layered
+//! [`crate::comm`] subsystem (topology / collective-op pipeline /
+//! hop traces).  This file is a thin re-export + free-function shim
+//! kept for source compatibility; each shim routes through the same
+//! `CollectiveOp` pipeline the coordinator uses, so the value semantics
+//! and byte accounting of the original free functions are preserved
+//! bit-for-bit (enforced by `tests/comm_props.rs`).
 
+pub use crate::comm::{CommStats, CommTrace};
+
+use crate::comm::{AllToAll, CollectiveOp, OpKind, Ring, Topology};
 use crate::compress::Compressor;
 
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct CommStats {
-    /// bytes sent by each worker (symmetric collectives)
-    pub bytes_per_worker: usize,
-    /// sum over workers
-    pub total_bytes: usize,
-}
-
-impl CommStats {
-    fn symmetric(per_worker: usize, k: usize) -> CommStats {
-        CommStats { bytes_per_worker: per_worker, total_bytes: per_worker * k }
-    }
-
-    pub fn add(&mut self, other: CommStats) {
-        self.bytes_per_worker += other.bytes_per_worker;
-        self.total_bytes += other.total_bytes;
-    }
-}
-
-fn check_uniform(buffers: &[Vec<f32>]) -> usize {
-    let n = buffers.first().map(|b| b.len()).expect("no workers");
-    for b in buffers {
-        assert_eq!(b.len(), n, "ragged worker buffers");
-    }
-    n
-}
-
 /// Dense fp32 ring all-reduce (mean).  All buffers end equal to the
-/// element-wise mean.
+/// element-wise mean; volume 2(K-1)/K * 4n bytes per worker.
 pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) -> CommStats {
-    let k = buffers.len();
-    let n = check_uniform(buffers);
-    let mut mean = vec![0.0f32; n];
-    for b in buffers.iter() {
-        for (m, x) in mean.iter_mut().zip(b) {
-            *m += x;
-        }
-    }
-    let inv = 1.0 / k as f32;
-    for m in mean.iter_mut() {
-        *m *= inv;
-    }
-    for b in buffers.iter_mut() {
-        b.copy_from_slice(&mean);
-    }
-    // ring volume: reduce-scatter + all-gather, each (K-1)/K * 4n bytes
-    let per_worker = if k > 1 { 2 * (k - 1) * 4 * n / k } else { 0 };
-    CommStats::symmetric(per_worker, k)
+    Ring.reduce_mean(buffers, &CollectiveOp::dense(), 1, 0).stats()
 }
 
-/// All-to-all reduce-scatter + ring all-gather with two quantizations.
-/// `rows`/`cols` describe the tensor's 2-D view for row-wise modes.
+/// All-to-all reduce-scatter + ring all-gather with exactly two
+/// quantizations: result = Q(mean_k Q(delta_k)), identical on all
+/// workers, no per-hop error compounding.
 pub fn quantized_reduce_mean(
     buffers: &mut [Vec<f32>],
     compressor: &dyn Compressor,
     rows: usize,
     cols: usize,
 ) -> CommStats {
-    let k = buffers.len();
-    let n = check_uniform(buffers);
-    // quantization #1: every worker compresses its contribution
-    let mut wire = 0usize;
-    for b in buffers.iter_mut() {
-        wire = compressor.compress(b, rows, cols);
-    }
-    // all-to-all reduce-scatter: shard owners reduce in fp32.
-    // in-process this is just the exact mean of the quantized values.
-    let mut mean = vec![0.0f32; n];
-    for b in buffers.iter() {
-        for (m, x) in mean.iter_mut().zip(b) {
-            *m += x;
-        }
-    }
-    let inv = 1.0 / k as f32;
-    for m in mean.iter_mut() {
-        *m *= inv;
-    }
-    // quantization #2: requantize the reduced shard before all-gather
-    let _ = compressor.compress(&mut mean, rows, cols);
-    for b in buffers.iter_mut() {
-        b.copy_from_slice(&mean);
-    }
-    // volume: all-to-all sends (K-1)/K of the compressed tensor, the
-    // all-gather moves the same compressed volume back
-    let per_worker = if k > 1 { 2 * (k - 1) * wire / k } else { 0 };
-    CommStats::symmetric(per_worker, k)
+    let op = CollectiveOp::new(compressor, OpKind::TwoQuant);
+    AllToAll.reduce_mean(buffers, &op, rows, cols).stats()
 }
 
 /// Top-k path: sparsify once per worker, all-gather, exact fp32 mean.
@@ -117,72 +37,28 @@ pub fn sparse_allgather_mean(
     rows: usize,
     cols: usize,
 ) -> CommStats {
-    let k = buffers.len();
-    let n = check_uniform(buffers);
-    let mut wire = 0usize;
-    for b in buffers.iter_mut() {
-        wire = compressor.compress(b, rows, cols);
-    }
-    let mut mean = vec![0.0f32; n];
-    for b in buffers.iter() {
-        for (m, x) in mean.iter_mut().zip(b) {
-            *m += x;
-        }
-    }
-    let inv = 1.0 / k as f32;
-    for m in mean.iter_mut() {
-        *m *= inv;
-    }
-    for b in buffers.iter_mut() {
-        b.copy_from_slice(&mean);
-    }
-    // all-gather: every worker ships its compressed tensor to K-1 peers
-    let per_worker = if k > 1 { (k - 1) * wire } else { 0 };
-    CommStats::symmetric(per_worker, k)
+    let op = CollectiveOp::new(
+        compressor, OpKind::SparseGather { presparsified: false });
+    Ring.reduce_mean(buffers, &op, rows, cols).stats()
 }
 
-/// A ring reduce with per-hop dequantize-reduce-quantize, provided to
-/// DEMONSTRATE the error-compounding the paper's all-to-all design
-/// avoids (used by tests and the compression_lab example, not by the
-/// coordinator).
+/// A ring reduce with per-hop dequantize-reduce-requantize, provided to
+/// DEMONSTRATE the error compounding the paper's all-to-all design
+/// avoids (a `TwoQuant` op on the [`Ring`] topology).
 pub fn ring_quantized_reduce_compounding(
     buffers: &mut [Vec<f32>],
     compressor: &dyn Compressor,
     rows: usize,
     cols: usize,
 ) -> CommStats {
-    let k = buffers.len();
-    let _n = check_uniform(buffers);
-    // simulate a ring pass: acc starts at worker 0, each hop adds the
-    // next worker's (quantized) contribution and requantizes
-    let mut acc = buffers[0].clone();
-    #[allow(unused_assignments)]
-    let mut wire = compressor.compress(&mut acc, rows, cols);
-    for b in buffers.iter().skip(1) {
-        let mut contrib = b.clone();
-        wire = compressor.compress(&mut contrib, rows, cols);
-        for (a, c) in acc.iter_mut().zip(&contrib) {
-            *a += c;
-        }
-        // the hop that compounds error:
-        wire = compressor.compress(&mut acc, rows, cols);
-    }
-    let inv = 1.0 / k as f32;
-    for a in acc.iter_mut() {
-        *a *= inv;
-    }
-    let _ = compressor.compress(&mut acc, rows, cols);
-    for b in buffers.iter_mut() {
-        b.copy_from_slice(&acc);
-    }
-    let per_worker = if k > 1 { 2 * (k - 1) * wire / k } else { 0 };
-    CommStats::symmetric(per_worker, k)
+    let op = CollectiveOp::new(compressor, OpKind::TwoQuant);
+    Ring.reduce_mean(buffers, &op, rows, cols).stats()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{QuantMode, Quantizer, TopK};
+    use crate::compress::{Compressor, QuantMode, Quantizer, TopK};
     use crate::util::rng::Rng;
 
     fn worker_buffers(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -243,26 +119,6 @@ mod tests {
             // ~range/255 per quantization, two of them
             assert!(max_err < 0.12, "K={k}: {max_err}");
         }
-    }
-
-    #[test]
-    fn ring_compounds_error_worse_than_all_to_all() {
-        let k = 16;
-        let base = worker_buffers(k, 1024, 3);
-        let want = exact_mean(&base);
-        let q = Quantizer::new(4, QuantMode::Linear, false);
-        let mse = |bufs: &[Vec<f32>]| -> f64 {
-            bufs[0]
-                .iter()
-                .zip(&want)
-                .map(|(a, b)| ((a - b) as f64).powi(2))
-                .sum::<f64>()
-        };
-        let mut a2a = base.clone();
-        quantized_reduce_mean(&mut a2a, &q, 1, 1024);
-        let mut ring = base.clone();
-        ring_quantized_reduce_compounding(&mut ring, &q, 1, 1024);
-        assert!(mse(&a2a) < mse(&ring), "{} vs {}", mse(&a2a), mse(&ring));
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! The collective-op pipeline: what a reduce *does* (which lossy steps
+//! run where), decoupled from *how* bytes move (the [`Topology`]).
+//!
+//! A [`CollectiveOp`] composes a [`Compressor`] with an [`OpKind`] —
+//! the paper's three communication schemes:
+//!
+//! * [`OpKind::Dense`] — exact fp32 reduce, no lossy steps.
+//! * [`OpKind::TwoQuant`] — the paper's §2 scheme: quantize each
+//!   contribution (#1), reduce the shard in fp32, requantize the
+//!   reduced value (#2).  On the all-to-all topology this yields
+//!   exactly `Q(mean_k Q(delta_k))` with no per-hop compounding; on a
+//!   ring it degrades to dequantize-reduce-requantize per hop — the
+//!   error-compounding the all-to-all design avoids, now an expressible
+//!   experiment instead of a code comment.
+//! * [`OpKind::SparseGather`] — top-k: sparsify each contribution once,
+//!   all-gather, exact fp32 mean.  `presparsified` marks contributions
+//!   already compressed by upstream error feedback: the value path is
+//!   then lossless, but wire bytes are still charged from the real
+//!   compressor.
+//!
+//! Error feedback itself stays per-worker (it runs before the
+//! collective, in `Worker::local_deltas`); the op only needs to know
+//! whether it already happened.
+
+use crate::compress::{Compression, Compressor, NoCompression};
+
+use super::topology::{OpShape, Topology};
+use super::trace::CommTrace;
+
+/// Which reduce algorithm runs, and where its lossy steps sit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// exact fp32 reduce-to-mean
+    Dense,
+    /// compress contributions (#1), fp32 shard reduce, recompress the
+    /// reduced value (#2)
+    TwoQuant,
+    /// sparsify contributions once, gather, exact fp32 mean
+    SparseGather {
+        /// contributions were already sparsified by error feedback:
+        /// skip the (value-idempotent) compressor call but still charge
+        /// its wire bytes
+        presparsified: bool,
+    },
+}
+
+impl OpKind {
+    /// The dispatch rule the coordinator used before the refactor,
+    /// preserved bit-for-bit: quantizers go through the two-quant
+    /// scheme (idempotent on their own grid, so EF-precompressed
+    /// contributions pass through hop #1 unchanged); top-k goes through
+    /// the gather (with EF the sparsification already happened).
+    pub fn for_run(compression: &Compression, error_feedback: bool) -> OpKind {
+        match compression {
+            Compression::None => OpKind::Dense,
+            Compression::Quant { .. } => OpKind::TwoQuant,
+            Compression::TopK { .. } => {
+                OpKind::SparseGather { presparsified: error_feedback }
+            }
+        }
+    }
+
+    /// The hop shape this op needs from a topology.
+    pub fn shape(&self) -> OpShape {
+        match self {
+            OpKind::SparseGather { .. } => OpShape::Gather,
+            _ => OpShape::ReduceScatterGather,
+        }
+    }
+}
+
+/// A compressor bound to an op kind — everything a topology needs to
+/// run one collective.
+pub struct CollectiveOp<'a> {
+    pub compressor: &'a dyn Compressor,
+    pub kind: OpKind,
+}
+
+impl<'a> CollectiveOp<'a> {
+    /// The fp32 baseline op.
+    pub fn dense() -> CollectiveOp<'static> {
+        CollectiveOp { compressor: &NoCompression, kind: OpKind::Dense }
+    }
+
+    pub fn new(compressor: &'a dyn Compressor, kind: OpKind) -> CollectiveOp<'a> {
+        CollectiveOp { compressor, kind }
+    }
+
+    /// Run this op through `topo` on the worker buffers (in place).
+    pub fn reduce(
+        &self,
+        topo: &dyn Topology,
+        buffers: &mut [Vec<f32>],
+        rows: usize,
+        cols: usize,
+    ) -> CommTrace {
+        topo.reduce_mean(buffers, self, rows, cols)
+    }
+}
+
+// ---- shared dataflow helpers (used by every topology impl) ---------
+
+/// Assert uniform buffer lengths; returns the element count.
+pub(crate) fn check_uniform(buffers: &[Vec<f32>]) -> usize {
+    let n = buffers.first().map(|b| b.len()).expect("no workers");
+    for b in buffers {
+        assert_eq!(b.len(), n, "ragged worker buffers");
+    }
+    n
+}
+
+/// Exact fp32 mean in worker-index order (sum, then multiply by 1/k) —
+/// the accumulation order of the pre-refactor collectives, preserved
+/// so results stay bit-identical.
+pub(crate) fn exact_mean(buffers: &[Vec<f32>]) -> Vec<f32> {
+    let k = buffers.len();
+    let n = buffers[0].len();
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    mean
+}
+
+/// Overwrite every worker buffer with `value`.
+pub(crate) fn broadcast(buffers: &mut [Vec<f32>], value: &[f32]) {
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(value);
+    }
+}
+
+/// Compress every contribution in place (quantization/sparsification
+/// #1); returns the wire bytes of one compressed tensor.
+pub(crate) fn compress_all(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> usize {
+    let mut wire = 0usize;
+    for b in buffers.iter_mut() {
+        wire = compressor.compress(b, rows, cols);
+    }
+    wire
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QuantMode, Quantizer, TopK};
+
+    #[test]
+    fn dispatch_matches_pre_refactor_rules() {
+        assert_eq!(OpKind::for_run(&Compression::None, false), OpKind::Dense);
+        assert_eq!(OpKind::for_run(&Compression::None, true), OpKind::Dense);
+        let q = Compression::Quant {
+            bits: 4,
+            mode: QuantMode::Linear,
+            rowwise: false,
+        };
+        assert_eq!(OpKind::for_run(&q, false), OpKind::TwoQuant);
+        assert_eq!(OpKind::for_run(&q, true), OpKind::TwoQuant);
+        let t = Compression::TopK { frac: 0.1 };
+        assert_eq!(
+            OpKind::for_run(&t, false),
+            OpKind::SparseGather { presparsified: false }
+        );
+        assert_eq!(
+            OpKind::for_run(&t, true),
+            OpKind::SparseGather { presparsified: true }
+        );
+    }
+
+    #[test]
+    fn op_shapes() {
+        assert_eq!(OpKind::Dense.shape(), OpShape::ReduceScatterGather);
+        assert_eq!(OpKind::TwoQuant.shape(), OpShape::ReduceScatterGather);
+        assert_eq!(
+            OpKind::SparseGather { presparsified: false }.shape(),
+            OpShape::Gather
+        );
+    }
+
+    #[test]
+    fn mean_helper_is_worker_order_sum() {
+        let bufs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        assert_eq!(exact_mean(&bufs), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn compress_all_reports_wire_of_one_tensor() {
+        let q = Quantizer::new(8, QuantMode::Linear, false);
+        let mut bufs = vec![vec![0.5f32; 64]; 4];
+        assert_eq!(compress_all(&mut bufs, &q, 1, 64), q.wire_bytes(64, 1));
+        let t = TopK::new(0.25);
+        let mut bufs = vec![vec![0.5f32; 64]; 4];
+        assert_eq!(compress_all(&mut bufs, &t, 1, 64), t.wire_bytes(64, 1));
+    }
+}

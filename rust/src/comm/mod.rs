@@ -1,0 +1,122 @@
+//! Topology-aware communication subsystem.
+//!
+//! Three layers (see `rust/ARCHITECTURE.md` §"comm layer"):
+//!
+//! * [`topology`] — a [`Topology`] trait owning hop structure and
+//!   per-hop byte/latency accounting: [`Ring`], [`AllToAll`], and the
+//!   two-level multi-datacenter [`Hierarchical`] topology.
+//! * [`collective`] — the [`CollectiveOp`] pipeline composing a
+//!   `Compressor` with an [`OpKind`], so lossy steps happen at
+//!   explicit, topology-declared hops.
+//! * [`trace`] — [`CommTrace`] hop records and [`CommStats`]
+//!   aggregation; `netsim` derives wall-clock numbers from the same
+//!   traces the simulated collectives produce.
+//!
+//! The retired `crate::collectives` module re-exports thin free-function
+//! shims over this subsystem for source compatibility.
+
+pub mod collective;
+pub mod topology;
+pub mod trace;
+
+use std::sync::Arc;
+
+pub use collective::{CollectiveOp, OpKind};
+pub use topology::{AllToAll, Hierarchical, OpShape, Ring, Topology};
+pub use trace::{CommStats, CommTrace, Hop, LinkBandwidth, LinkClass};
+
+/// Config/CLI-level topology choice.  `Flat` preserves the
+/// pre-refactor per-op defaults (ring for dense/sparse, all-to-all for
+/// quantized) bit-for-bit; the others force a specific topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// per-op default: ring for dense/sparse, all-to-all for quantized
+    Flat,
+    /// force the ring even for lossy reduces (per-hop error
+    /// compounding — the experiment the all-to-all design avoids)
+    Ring,
+    /// two-level multi-datacenter topology with `groups` DCs
+    Hier { groups: usize },
+}
+
+impl TopologySpec {
+    /// Parse a CLI spec: `flat` | `ring` | `hier` | `hier:<G>`.
+    pub fn parse(s: &str) -> anyhow::Result<TopologySpec> {
+        let s = s.trim();
+        if s == "flat" {
+            return Ok(TopologySpec::Flat);
+        }
+        if s == "ring" {
+            return Ok(TopologySpec::Ring);
+        }
+        if let Some(rest) = s.strip_prefix("hier") {
+            let rest = rest.trim_start_matches(|c| c == ':' || c == '-');
+            let groups: usize = if rest.is_empty() { 2 } else { rest.parse()? };
+            if groups == 0 {
+                anyhow::bail!("hierarchical topology needs >= 1 group");
+            }
+            return Ok(TopologySpec::Hier { groups });
+        }
+        anyhow::bail!("unknown topology {s:?} (flat|ring|hier:<G>)")
+    }
+
+    /// Stable label for cache keys / tables.
+    pub fn label(&self) -> String {
+        match self {
+            TopologySpec::Flat => "flat".into(),
+            TopologySpec::Ring => "ring".into(),
+            TopologySpec::Hier { groups } => format!("hier:{groups}"),
+        }
+    }
+
+    /// Instantiate the topology an op of `kind` should run on.
+    pub fn build(&self, kind: OpKind) -> Arc<dyn Topology> {
+        match self {
+            TopologySpec::Flat => match kind {
+                OpKind::TwoQuant => Arc::new(topology::AllToAll),
+                _ => Arc::new(topology::Ring),
+            },
+            TopologySpec::Ring => Arc::new(topology::Ring),
+            TopologySpec::Hier { groups } => {
+                Arc::new(topology::Hierarchical::new(*groups))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(TopologySpec::parse("flat").unwrap(), TopologySpec::Flat);
+        assert_eq!(TopologySpec::parse("ring").unwrap(), TopologySpec::Ring);
+        assert_eq!(TopologySpec::parse("hier").unwrap(),
+                   TopologySpec::Hier { groups: 2 });
+        assert_eq!(TopologySpec::parse("hier:4").unwrap(),
+                   TopologySpec::Hier { groups: 4 });
+        assert_eq!(TopologySpec::parse("hier-3").unwrap(),
+                   TopologySpec::Hier { groups: 3 });
+        assert!(TopologySpec::parse("hier:0").is_err());
+        assert!(TopologySpec::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn flat_builds_the_pre_refactor_topology_per_op() {
+        assert_eq!(TopologySpec::Flat.build(OpKind::TwoQuant).name(),
+                   "all-to-all");
+        assert_eq!(TopologySpec::Flat.build(OpKind::Dense).name(), "ring");
+        assert_eq!(
+            TopologySpec::Flat
+                .build(OpKind::SparseGather { presparsified: false })
+                .name(),
+            "ring"
+        );
+        assert_eq!(TopologySpec::Ring.build(OpKind::TwoQuant).name(), "ring");
+        assert_eq!(
+            TopologySpec::Hier { groups: 2 }.build(OpKind::Dense).name(),
+            "hierarchical"
+        );
+    }
+}

@@ -1,0 +1,423 @@
+//! Communication topologies: who talks to whom, over which links, and
+//! where an op's lossy steps land.
+//!
+//! A [`Topology`] owns the hop structure of a collective.  It exposes
+//! two views of the same structure:
+//!
+//! * [`Topology::plan`] — the pure hop/byte trace for a collective of a
+//!   given wire size (what `netsim` consumes);
+//! * [`Topology::reduce_mean`] — the bit-exact in-process simulation of
+//!   the dataflow, which applies the [`CollectiveOp`]'s lossy steps at
+//!   this topology's declared hops and returns the identical trace.
+//!
+//! Implementations:
+//!
+//! * [`Ring`] — ring reduce-scatter + all-gather.  Dense and sparse ops
+//!   are exact; a lossy [`OpKind::TwoQuant`] op on a ring compounds
+//!   error per hop (dequantize-reduce-requantize at every step), the
+//!   failure mode the paper's all-to-all design exists to avoid.
+//! * [`AllToAll`] — all-to-all reduce-scatter + ring all-gather with
+//!   exactly two lossy steps: each worker compresses its shard
+//!   contribution (#1); the shard owner reduces in fp32 and
+//!   recompresses before the all-gather (#2).  Net semantics
+//!   `Q(mean_k Q(delta_k))`, identical on all workers.
+//! * [`Hierarchical`] — a two-level multi-datacenter topology: exact
+//!   fp32 reduction inside each DC over cheap [`LinkClass::Intra`]
+//!   links, then the two-quantization all-to-all between DC leaders
+//!   over the scarce [`LinkClass::Inter`] WAN, then an intra-DC
+//!   broadcast.  Net semantics `Q(mean_g Q(mean_{k in g} delta_k))`.
+
+use super::collective::{
+    broadcast, check_uniform, compress_all, exact_mean, CollectiveOp, OpKind,
+};
+use super::trace::{CommTrace, LinkClass};
+
+/// The hop shape an op needs (see [`OpKind::shape`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpShape {
+    /// reduce-scatter then all-gather (dense / quantized reduces)
+    ReduceScatterGather,
+    /// one all-gather of per-worker payloads (sparse top-k)
+    Gather,
+}
+
+/// A communication topology: hop structure + per-hop byte accounting.
+pub trait Topology: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Hop plan for one collective over `k` workers moving `wire`
+    /// compressed bytes per tensor.  `dense` is the uncompressed fp32
+    /// size, used for the intra-DC legs of hierarchical topologies
+    /// (compression is only worth paying for on the WAN).
+    fn plan(&self, k: usize, shape: OpShape, wire: usize, dense: usize) -> CommTrace;
+
+    /// Execute the in-process reduce-to-mean on the worker buffers,
+    /// applying `op`'s lossy steps at this topology's hops.  On return
+    /// every buffer holds the identical reduced value.  The returned
+    /// trace matches `plan` for the op's actual wire size.
+    fn reduce_mean(
+        &self,
+        buffers: &mut [Vec<f32>],
+        op: &CollectiveOp<'_>,
+        rows: usize,
+        cols: usize,
+    ) -> CommTrace;
+}
+
+/// Flat single-tier volume of a reduce-scatter + all-gather, split into
+/// its two hops.  Computed exactly as the pre-refactor collectives did
+/// (`2 * (k - 1) * wire / k` in integer arithmetic) so byte accounting
+/// is unchanged.
+fn flat_rsag_trace(k: usize, wire: usize) -> CommTrace {
+    let mut t = CommTrace::default();
+    if k > 1 {
+        let total = 2 * (k - 1) * wire / k;
+        let rs = total / 2;
+        t.push(LinkClass::Inter, rs, k);
+        t.push(LinkClass::Inter, total - rs, k);
+    }
+    t
+}
+
+/// Flat all-gather: every worker ships its payload to k-1 peers.
+fn flat_gather_trace(k: usize, wire: usize) -> CommTrace {
+    let mut t = CommTrace::default();
+    if k > 1 {
+        t.push(LinkClass::Inter, (k - 1) * wire, k);
+    }
+    t
+}
+
+fn flat_plan(k: usize, shape: OpShape, wire: usize) -> CommTrace {
+    match shape {
+        OpShape::ReduceScatterGather => flat_rsag_trace(k, wire),
+        OpShape::Gather => flat_gather_trace(k, wire),
+    }
+}
+
+/// Shared flat sparse-gather dataflow: sparsify once per worker (unless
+/// error feedback already did), gather, exact fp32 mean.
+fn flat_sparse_gather(
+    buffers: &mut [Vec<f32>],
+    op: &CollectiveOp<'_>,
+    rows: usize,
+    cols: usize,
+    presparsified: bool,
+) -> CommTrace {
+    let k = buffers.len();
+    let n = check_uniform(buffers);
+    let wire = if presparsified {
+        op.compressor.wire_bytes(n, rows)
+    } else {
+        compress_all(buffers, op.compressor, rows, cols)
+    };
+    let m = exact_mean(buffers);
+    broadcast(buffers, &m);
+    flat_gather_trace(k, wire)
+}
+
+/// Ring reduce-scatter + all-gather.
+pub struct Ring;
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn plan(&self, k: usize, shape: OpShape, wire: usize, _dense: usize) -> CommTrace {
+        flat_plan(k, shape, wire)
+    }
+
+    fn reduce_mean(
+        &self,
+        buffers: &mut [Vec<f32>],
+        op: &CollectiveOp<'_>,
+        rows: usize,
+        cols: usize,
+    ) -> CommTrace {
+        let k = buffers.len();
+        let n = check_uniform(buffers);
+        match op.kind {
+            OpKind::Dense => {
+                let m = exact_mean(buffers);
+                broadcast(buffers, &m);
+                flat_rsag_trace(k, 4 * n)
+            }
+            // a lossy reduce on a ring compounds error per hop: each hop
+            // adds the next (compressed) contribution and recompresses
+            // the accumulator
+            OpKind::TwoQuant => {
+                let mut acc = buffers[0].clone();
+                let mut wire = op.compressor.compress(&mut acc, rows, cols);
+                for b in buffers.iter().skip(1) {
+                    let mut contrib = b.clone();
+                    let _ = op.compressor.compress(&mut contrib, rows, cols);
+                    for (a, c) in acc.iter_mut().zip(&contrib) {
+                        *a += c;
+                    }
+                    // the hop that compounds error:
+                    wire = op.compressor.compress(&mut acc, rows, cols);
+                }
+                let inv = 1.0 / k as f32;
+                for a in acc.iter_mut() {
+                    *a *= inv;
+                }
+                let _ = op.compressor.compress(&mut acc, rows, cols);
+                broadcast(buffers, &acc);
+                flat_rsag_trace(k, wire)
+            }
+            OpKind::SparseGather { presparsified } => {
+                flat_sparse_gather(buffers, op, rows, cols, presparsified)
+            }
+        }
+    }
+}
+
+/// All-to-all reduce-scatter + ring all-gather (paper §2).
+pub struct AllToAll;
+
+impl Topology for AllToAll {
+    fn name(&self) -> &'static str {
+        "all-to-all"
+    }
+
+    fn plan(&self, k: usize, shape: OpShape, wire: usize, _dense: usize) -> CommTrace {
+        flat_plan(k, shape, wire)
+    }
+
+    fn reduce_mean(
+        &self,
+        buffers: &mut [Vec<f32>],
+        op: &CollectiveOp<'_>,
+        rows: usize,
+        cols: usize,
+    ) -> CommTrace {
+        let k = buffers.len();
+        let n = check_uniform(buffers);
+        match op.kind {
+            OpKind::Dense => {
+                let m = exact_mean(buffers);
+                broadcast(buffers, &m);
+                flat_rsag_trace(k, 4 * n)
+            }
+            // exactly two lossy steps: compress every contribution (#1),
+            // shard owners reduce in fp32 (in-process: the exact mean of
+            // the compressed values), recompress the reduced shard (#2)
+            OpKind::TwoQuant => {
+                let wire = compress_all(buffers, op.compressor, rows, cols);
+                let mut m = exact_mean(buffers);
+                let _ = op.compressor.compress(&mut m, rows, cols);
+                broadcast(buffers, &m);
+                flat_rsag_trace(k, wire)
+            }
+            OpKind::SparseGather { presparsified } => {
+                flat_sparse_gather(buffers, op, rows, cols, presparsified)
+            }
+        }
+    }
+}
+
+/// Two-level multi-datacenter topology: `groups` DCs of `k / groups`
+/// workers each.  Contributions reduce exactly (fp32) inside each DC
+/// over intra links; DC leaders run the two-quantization all-to-all
+/// across the WAN; leaders broadcast the result back inside their DC.
+pub struct Hierarchical {
+    pub groups: usize,
+}
+
+impl Hierarchical {
+    pub fn new(groups: usize) -> Hierarchical {
+        assert!(groups >= 1, "need at least one group");
+        Hierarchical { groups }
+    }
+
+    /// Effective (g, group_size) for k workers.  Divisibility is a
+    /// hard requirement (silently collapsing to one group would zero
+    /// the WAN traffic of analytic plans): `TrainConfig::validate`
+    /// rejects bad configs up front, and direct API misuse fails loudly
+    /// here.  A single worker always maps to one group of one.
+    fn split(&self, k: usize) -> (usize, usize) {
+        let g = self.groups.clamp(1, k.max(1));
+        assert!(
+            k % g == 0,
+            "hierarchical topology: {} groups must divide {k} workers",
+            self.groups
+        );
+        (g, k / g)
+    }
+
+    /// Per-group fp32 partial means, in ascending worker order.
+    fn group_partials(buffers: &[Vec<f32>], g: usize, gs: usize) -> Vec<Vec<f32>> {
+        (0..g)
+            .map(|gi| exact_mean(&buffers[gi * gs..(gi + 1) * gs]))
+            .collect()
+    }
+}
+
+impl Topology for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn plan(&self, k: usize, shape: OpShape, wire: usize, dense: usize) -> CommTrace {
+        let mut t = CommTrace::default();
+        if k <= 1 {
+            return t;
+        }
+        let (g, gs) = self.split(k);
+        match shape {
+            OpShape::ReduceScatterGather => {
+                // members ship fp32 contributions to their DC leader
+                if gs > 1 {
+                    t.push(LinkClass::Intra, dense, k - g);
+                }
+                // leaders: two-quant all-to-all across the WAN
+                if g > 1 {
+                    t.merge(&flat_rsag_trace(g, wire));
+                }
+                // leaders broadcast the reduced tensor inside the DC
+                if gs > 1 {
+                    t.push(LinkClass::Intra, (gs - 1) * dense, g);
+                }
+            }
+            OpShape::Gather => {
+                if gs > 1 {
+                    t.push(LinkClass::Intra, wire, k - g);
+                }
+                // leaders exchange their DC's concatenated payloads
+                if g > 1 {
+                    t.push(LinkClass::Inter, (g - 1) * gs * wire, g);
+                }
+                if gs > 1 {
+                    t.push(LinkClass::Intra, (gs - 1) * dense, g);
+                }
+            }
+        }
+        t
+    }
+
+    fn reduce_mean(
+        &self,
+        buffers: &mut [Vec<f32>],
+        op: &CollectiveOp<'_>,
+        rows: usize,
+        cols: usize,
+    ) -> CommTrace {
+        let k = buffers.len();
+        let n = check_uniform(buffers);
+        match op.kind {
+            OpKind::Dense => {
+                let (g, gs) = self.split(k);
+                let partials = Self::group_partials(buffers, g, gs);
+                let m = exact_mean(&partials);
+                broadcast(buffers, &m);
+                self.plan(k, OpShape::ReduceScatterGather, 4 * n, 4 * n)
+            }
+            // lossless intra-DC reduce, then the two WAN quantizations
+            // on the group partials: Q(mean_g Q(mean_{k in g} delta_k))
+            OpKind::TwoQuant => {
+                let (g, gs) = self.split(k);
+                let mut partials = Self::group_partials(buffers, g, gs);
+                let wire = compress_all(&mut partials, op.compressor, rows, cols);
+                let mut m = exact_mean(&partials);
+                let _ = op.compressor.compress(&mut m, rows, cols);
+                broadcast(buffers, &m);
+                self.plan(k, OpShape::ReduceScatterGather, wire, 4 * n)
+            }
+            // sparsification happens per worker, so the reduced value is
+            // identical to the flat gather; only the byte routing
+            // (member -> leader -> WAN) differs
+            OpKind::SparseGather { presparsified } => {
+                let wire = if presparsified {
+                    op.compressor.wire_bytes(n, rows)
+                } else {
+                    compress_all(buffers, op.compressor, rows, cols)
+                };
+                let m = exact_mean(buffers);
+                broadcast(buffers, &m);
+                self.plan(k, OpShape::Gather, wire, 4 * n)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{QuantMode, Quantizer};
+    use crate::util::rng::Rng;
+
+    fn worker_buffers(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn flat_plans_match_pre_refactor_volumes() {
+        // ring/a2a reduce-scatter + all-gather: 2*(k-1)*wire/k per worker
+        for k in [2usize, 4, 8, 16] {
+            let t = Ring.plan(k, OpShape::ReduceScatterGather, 400, 400);
+            assert_eq!(t.bytes_per_worker(), 2 * (k - 1) * 400 / k);
+            assert_eq!(t.total_bytes(), k * (2 * (k - 1) * 400 / k));
+            let t = AllToAll.plan(k, OpShape::Gather, 80, 400);
+            assert_eq!(t.bytes_per_worker(), (k - 1) * 80);
+        }
+        assert_eq!(Ring.plan(1, OpShape::ReduceScatterGather, 400, 400)
+                       .bytes_per_worker(), 0);
+    }
+
+    #[test]
+    fn hierarchical_moves_less_wan_traffic_than_flat() {
+        let (k, wire, dense) = (8usize, 1000usize, 4000usize);
+        let flat = AllToAll.plan(k, OpShape::ReduceScatterGather, wire, dense);
+        let hier = Hierarchical::new(2).plan(
+            k, OpShape::ReduceScatterGather, wire, dense);
+        let flat_wan = flat.link_bytes_per_worker(LinkClass::Inter);
+        let hier_wan = hier.link_bytes_per_worker(LinkClass::Inter);
+        assert!(hier_wan < flat_wan, "{hier_wan} vs {flat_wan}");
+        // and it actually uses the intra tier
+        assert!(hier.link_bytes_per_worker(LinkClass::Intra) > 0);
+    }
+
+    #[test]
+    fn two_quant_on_ring_compounds_error_worse_than_all_to_all() {
+        let k = 16;
+        let base = worker_buffers(k, 1024, 3);
+        let want = exact_mean(&base);
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let op = CollectiveOp::new(&q, OpKind::TwoQuant);
+        let mse = |bufs: &[Vec<f32>]| -> f64 {
+            bufs[0]
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let mut a2a = base.clone();
+        AllToAll.reduce_mean(&mut a2a, &op, 1, 1024);
+        let mut ring = base.clone();
+        Ring.reduce_mean(&mut ring, &op, 1, 1024);
+        assert!(mse(&a2a) < mse(&ring), "{} vs {}", mse(&a2a), mse(&ring));
+    }
+
+    #[test]
+    fn hierarchical_two_quant_agrees_across_workers() {
+        let q = Quantizer::new(8, QuantMode::Linear, false);
+        let op = CollectiveOp::new(&q, OpKind::TwoQuant);
+        let mut bufs = worker_buffers(8, 256, 5);
+        let want = exact_mean(&bufs);
+        Hierarchical::new(4).reduce_mean(&mut bufs, &op, 1, 256);
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+        // two 8-bit quantizations: error stays small
+        let max_err = bufs[0]
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 0.12, "{max_err}");
+    }
+}

@@ -1,0 +1,223 @@
+//! Per-hop communication traces and their aggregate statistics.
+//!
+//! A [`CommTrace`] is the hop-by-hop record of one collective: which
+//! link class each phase crossed, how many bytes every participating
+//! worker put on the wire, and how many workers transmitted
+//! concurrently.  Topologies produce traces (`Topology::plan` for the
+//! analytic path, `Topology::reduce_mean` for the simulated data path),
+//! and `netsim` consumes them — so wall-clock estimates are derived
+//! from the same hop structure the simulation charges bytes with,
+//! instead of a parallel set of closed-form formulas.
+
+/// Which physical link a hop crosses.  Flat single-site topologies put
+/// everything on `Inter` (the scarce link DiLoCo is designed around);
+/// the hierarchical topology distinguishes cheap intra-datacenter hops
+/// from the WAN.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// inside one datacenter (fast, plentiful)
+    Intra,
+    /// between datacenters / across the bottleneck link
+    Inter,
+}
+
+/// One synchronous phase of a collective.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hop {
+    pub link: LinkClass,
+    /// bytes each participating worker transmits during this hop
+    pub bytes_per_worker: usize,
+    /// number of workers transmitting concurrently in this hop
+    pub senders: usize,
+}
+
+/// Bandwidth per link class, bytes/sec.  `flat` models a single-tier
+/// network (the pre-refactor scalar-bandwidth world).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkBandwidth {
+    pub inter: f64,
+    pub intra: f64,
+}
+
+impl LinkBandwidth {
+    pub fn flat(bw: f64) -> LinkBandwidth {
+        LinkBandwidth { inter: bw, intra: bw }
+    }
+
+    pub fn of(&self, link: LinkClass) -> f64 {
+        match link {
+            LinkClass::Intra => self.intra,
+            LinkClass::Inter => self.inter,
+        }
+    }
+}
+
+/// Hop-by-hop record of one collective (or one sync event, when
+/// several collectives are merged).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommTrace {
+    pub hops: Vec<Hop>,
+}
+
+impl CommTrace {
+    pub fn push(&mut self, link: LinkClass, bytes_per_worker: usize, senders: usize) {
+        if bytes_per_worker > 0 && senders > 0 {
+            self.hops.push(Hop { link, bytes_per_worker, senders });
+        }
+    }
+
+    /// Append another trace's hops (sequential composition).
+    pub fn merge(&mut self, other: &CommTrace) {
+        self.hops.extend_from_slice(&other.hops);
+    }
+
+    /// Sum over hops of per-sender bytes: what the busiest endpoint (a
+    /// worker participating in every hop) puts on the wire.  For flat
+    /// symmetric collectives this is exactly the per-worker volume.
+    pub fn bytes_per_worker(&self) -> usize {
+        self.hops.iter().map(|h| h.bytes_per_worker).sum()
+    }
+
+    /// Total bytes moved across the whole collective.
+    pub fn total_bytes(&self) -> usize {
+        self.hops.iter().map(|h| h.bytes_per_worker * h.senders).sum()
+    }
+
+    /// Largest single-hop per-worker burst.
+    pub fn peak_hop_bytes(&self) -> usize {
+        self.hops.iter().map(|h| h.bytes_per_worker).max().unwrap_or(0)
+    }
+
+    /// Wall-clock seconds to move this trace: hops are sequential,
+    /// senders within a hop are concurrent, so each hop costs its
+    /// per-worker bytes over its link's bandwidth.
+    pub fn secs(&self, bw: &LinkBandwidth) -> f64 {
+        self.hops
+            .iter()
+            .map(|h| h.bytes_per_worker as f64 / bw.of(h.link))
+            .sum()
+    }
+
+    /// Bytes crossing a given link class, per busiest endpoint.
+    pub fn link_bytes_per_worker(&self, link: LinkClass) -> usize {
+        self.hops
+            .iter()
+            .filter(|h| h.link == link)
+            .map(|h| h.bytes_per_worker)
+            .sum()
+    }
+
+    /// Collapse to aggregate statistics (one collective = one event
+    /// fragment; see [`CommStats::add`] / [`CommStats::absorb_event`]).
+    pub fn stats(&self) -> CommStats {
+        CommStats {
+            bytes_per_worker: self.bytes_per_worker(),
+            total_bytes: self.total_bytes(),
+            peak_hop_bytes: self.peak_hop_bytes(),
+            peak_event_bytes: 0,
+        }
+    }
+}
+
+/// Aggregate communication accounting.
+///
+/// Two aggregation levels with different semantics:
+/// * within one sync event, per-tensor stats combine with [`add`]
+///   (bytes sum, per-hop peaks max);
+/// * a whole run absorbs finished events with [`absorb_event`], which
+///   sums volumes but records the *largest single event* in
+///   `peak_event_bytes` — the measured form of streaming DiLoCo's
+///   "peak bandwidth divided by J" claim (with J staggered partitions
+///   each event carries ~1/J of the dense volume).
+///
+/// [`add`]: CommStats::add
+/// [`absorb_event`]: CommStats::absorb_event
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// bytes sent by each worker (busiest endpoint for asymmetric
+    /// topologies), summed over the run
+    pub bytes_per_worker: usize,
+    /// sum over workers and events
+    pub total_bytes: usize,
+    /// largest per-worker burst within a single hop
+    pub peak_hop_bytes: usize,
+    /// largest per-worker volume of a single sync event
+    pub peak_event_bytes: usize,
+}
+
+impl CommStats {
+    /// Combine stats of collectives belonging to the same sync event.
+    pub fn add(&mut self, other: CommStats) {
+        self.bytes_per_worker += other.bytes_per_worker;
+        self.total_bytes += other.total_bytes;
+        self.peak_hop_bytes = self.peak_hop_bytes.max(other.peak_hop_bytes);
+        self.peak_event_bytes = self.peak_event_bytes.max(other.peak_event_bytes);
+    }
+
+    /// Fold one finished sync event into run-level accounting.
+    pub fn absorb_event(&mut self, event: CommStats) {
+        self.bytes_per_worker += event.bytes_per_worker;
+        self.total_bytes += event.total_bytes;
+        self.peak_hop_bytes = self.peak_hop_bytes.max(event.peak_hop_bytes);
+        self.peak_event_bytes = self.peak_event_bytes.max(event.bytes_per_worker);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> CommTrace {
+        let mut t = CommTrace::default();
+        t.push(LinkClass::Intra, 100, 6);
+        t.push(LinkClass::Inter, 40, 2);
+        t.push(LinkClass::Inter, 60, 2);
+        t
+    }
+
+    #[test]
+    fn aggregates() {
+        let t = trace();
+        assert_eq!(t.bytes_per_worker(), 200);
+        assert_eq!(t.total_bytes(), 600 + 80 + 120);
+        assert_eq!(t.peak_hop_bytes(), 100);
+        assert_eq!(t.link_bytes_per_worker(LinkClass::Inter), 100);
+    }
+
+    #[test]
+    fn zero_byte_hops_are_dropped() {
+        let mut t = CommTrace::default();
+        t.push(LinkClass::Inter, 0, 8);
+        t.push(LinkClass::Inter, 10, 0);
+        assert!(t.hops.is_empty());
+        assert_eq!(t.stats(), CommStats::default());
+    }
+
+    #[test]
+    fn secs_weights_links_independently() {
+        let t = trace();
+        // intra at 100 B/s, inter at 10 B/s
+        let bw = LinkBandwidth { inter: 10.0, intra: 100.0 };
+        assert!((t.secs(&bw) - (1.0 + 4.0 + 6.0)).abs() < 1e-12);
+        // flat bandwidth reduces to total per-worker bytes / bw
+        let flat = t.secs(&LinkBandwidth::flat(10.0));
+        assert!((flat - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_vs_run_aggregation() {
+        let mut event1 = CommStats::default();
+        event1.add(trace().stats());
+        event1.add(trace().stats());
+        assert_eq!(event1.bytes_per_worker, 400);
+        assert_eq!(event1.peak_hop_bytes, 100);
+
+        let event2 = trace().stats(); // a smaller (single-tensor) event
+        let mut run = CommStats::default();
+        run.absorb_event(event1);
+        run.absorb_event(event2);
+        assert_eq!(run.bytes_per_worker, 600);
+        assert_eq!(run.peak_event_bytes, 400);
+        assert_eq!(run.peak_hop_bytes, 100);
+    }
+}

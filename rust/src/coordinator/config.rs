@@ -1,5 +1,6 @@
 //! Training configuration: the knobs of Algorithms 1 & 2.
 
+use crate::comm::TopologySpec;
 use crate::compress::Compression;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -105,6 +106,13 @@ pub struct TrainConfig {
     pub ef_beta: f32,
     /// streaming partitions J (1 = classic DiLoCo; 3 = paper's setting)
     pub streaming_partitions: usize,
+    /// communication topology for the pseudogradient collectives
+    /// (flat = the pre-refactor per-op defaults)
+    pub topology: TopologySpec,
+    /// overlapped streaming sync: apply each partition's reduced result
+    /// tau steps after its boundary, with the collective running on a
+    /// background thread meanwhile (0 = classic blocking sync)
+    pub overlap_tau: u64,
     /// evaluate every this many steps (also the smoother boundary)
     pub eval_every: u64,
     /// number of eval microbatches per evaluation
@@ -144,6 +152,8 @@ impl TrainConfig {
             error_feedback: false,
             ef_beta: 0.9,
             streaming_partitions: 1,
+            topology: TopologySpec::Flat,
+            overlap_tau: 0,
             eval_every: 30,
             eval_batches: 8,
             seed: 17,
@@ -207,6 +217,32 @@ impl TrainConfig {
             && self.sync_interval % self.streaming_partitions as u64 != 0
         {
             anyhow::bail!("streaming partitions J must divide H");
+        }
+        if let TopologySpec::Hier { groups } = self.topology {
+            if groups == 0 {
+                anyhow::bail!("hierarchical topology needs >= 1 group");
+            }
+            if self.workers % groups != 0 {
+                anyhow::bail!(
+                    "hierarchical topology: groups ({groups}) must divide \
+                     K={} workers",
+                    self.workers
+                );
+            }
+        }
+        if self.overlap_tau > 0 {
+            if !self.method.is_local_update() {
+                anyhow::bail!(
+                    "overlap tau only applies to local-update methods \
+                     (DiLoCo/MuLoCo)"
+                );
+            }
+            if self.overlap_tau >= self.sync_interval {
+                anyhow::bail!(
+                    "overlap tau ({}) must be < sync interval H ({})",
+                    self.overlap_tau, self.sync_interval
+                );
+            }
         }
         Ok(())
     }
@@ -276,6 +312,22 @@ mod tests {
         assert!(c.validate().is_err());
         c.streaming_partitions = 3;
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_covers_topology_and_overlap() {
+        let mut c = TrainConfig::new("nano", Method::Muloco);
+        c.topology = TopologySpec::Hier { groups: 3 }; // K=8 % 3 != 0
+        assert!(c.validate().is_err());
+        c.topology = TopologySpec::Hier { groups: 2 };
+        assert!(c.validate().is_ok());
+        c.overlap_tau = c.sync_interval; // tau must stay below H
+        assert!(c.validate().is_err());
+        c.overlap_tau = 5;
+        assert!(c.validate().is_ok());
+        let mut dp = TrainConfig::new("nano", Method::DpMuon);
+        dp.overlap_tau = 1;
+        assert!(dp.validate().is_err());
     }
 
     #[test]

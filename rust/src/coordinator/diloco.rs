@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 use super::config::TrainConfig;
 use super::sync::SyncEngine;
 use super::worker::{inner_for, WorkerPool};
-use crate::collectives::CommStats;
+use crate::comm::CommStats;
 use crate::data::Corpus;
 use crate::evalloss::Smoother;
 use crate::runtime::{ExecStats, Session, Tensors};
@@ -135,55 +135,67 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
     let mut pool = WorkerPool::new(sess, &corpus, inner, k, cfg.ef_beta, &theta);
     let mut engine = SyncEngine::for_run(man, cfg);
 
-    let mut comm = CommStats::default();
-    let mut train_curve = Vec::new();
-    let mut eval_curve = Vec::new();
-    let mut acc_curve = Vec::new();
-    let mut tokens = 0u64;
+    // the whole loop runs with K persistent executor threads attached
+    // (channel-based step barrier); `parallel = false` runs everything
+    // inline — the sequential reference path
+    let mut result = pool.scoped(cfg.parallel, |pool| -> Result<RunResult> {
+        let mut comm = CommStats::default();
+        let mut train_curve = Vec::new();
+        let mut eval_curve = Vec::new();
+        let mut acc_curve = Vec::new();
+        let mut tokens = 0u64;
 
-    for step in 1..=cfg.total_steps {
-        let lr = cfg.lr_at(step - 1) as f32;
-        let wd = cfg.weight_decay as f32;
-        let step_loss = pool.step(sess, per_worker_batch,
-                                  step as f32, lr, wd, cfg.parallel)?;
-        tokens += (k * per_worker_batch * model.seq_len) as u64;
-        train_curve.push((step, step_loss));
+        for step in 1..=cfg.total_steps {
+            let lr = cfg.lr_at(step - 1) as f32;
+            let wd = cfg.weight_decay as f32;
+            let step_loss = pool.step(sess, per_worker_batch,
+                                      step as f32, lr, wd, cfg.parallel)?;
+            tokens += (k * per_worker_batch * model.seq_len) as u64;
+            train_curve.push((step, step_loss));
 
-        // --- synchronization (Algorithm 1 lines 11-13 / Algorithm 2) ---
-        if cfg.method.is_local_update() {
-            engine.sync_step(step, &mut theta, &mut pool.workers, &mut comm,
-                             cfg.parallel);
-        }
-
-        if step % cfg.eval_every == 0 || step == cfg.total_steps {
-            if !cfg.method.is_local_update() {
-                // DP: the worker IS the global model.  Clone only at
-                // eval boundaries — a per-step full-parameter copy was
-                // measurable on large configs (EXPERIMENTS.md §Perf).
-                theta = pool.workers[0].params.clone();
+            // --- synchronization (Algorithm 1 lines 11-13 / Algorithm 2) ---
+            if cfg.method.is_local_update() {
+                engine.sync_step(step, &mut theta, &mut pool.workers, &mut comm,
+                                 cfg.parallel);
+                if step == cfg.total_steps {
+                    // overlapped boundaries still in flight apply before
+                    // the final eval (no-op for tau = 0)
+                    engine.flush(&mut theta, &mut pool.workers, &mut comm);
+                }
             }
-            let (l, a) = evaluate(sess, &theta, &eval_batches)?;
-            eval_curve.push((step, l));
-            acc_curve.push((step, a));
+
+            if step % cfg.eval_every == 0 || step == cfg.total_steps {
+                if !cfg.method.is_local_update() {
+                    // DP: the worker IS the global model.  Clone only at
+                    // eval boundaries — a per-step full-parameter copy was
+                    // measurable on large configs (EXPERIMENTS.md §Perf).
+                    theta = pool.workers[0].params.clone();
+                }
+                let (l, a) = evaluate(sess, &theta, &eval_batches)?;
+                eval_curve.push((step, l));
+                acc_curve.push((step, a));
+            }
         }
-    }
 
-    let smoother = Smoother::new(0.2, cfg.eval_every);
-    let smoothed_final = smoother.final_loss(&eval_curve);
-    let raw_final = eval_curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN);
-    let final_acc = acc_curve.last().map(|(_, a)| *a).unwrap_or(f64::NAN);
+        let smoother = Smoother::new(0.2, cfg.eval_every);
+        let smoothed_final = smoother.final_loss(&eval_curve);
+        let raw_final = eval_curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN);
+        let final_acc = acc_curve.last().map(|(_, a)| *a).unwrap_or(f64::NAN);
 
-    Ok(RunResult {
-        eval_curve,
-        acc_curve,
-        train_curve,
-        smoothed_final,
-        raw_final,
-        final_acc,
-        comm,
-        exec: sess.stats(),
-        wall_secs: t_start.elapsed().as_secs_f64(),
-        tokens,
-        final_params: Some(theta),
-    })
+        Ok(RunResult {
+            eval_curve,
+            acc_curve,
+            train_curve,
+            smoothed_final,
+            raw_final,
+            final_acc,
+            comm,
+            exec: sess.stats(),
+            wall_secs: t_start.elapsed().as_secs_f64(),
+            tokens,
+            final_params: None,
+        })
+    })?;
+    result.final_params = Some(theta);
+    Ok(result)
 }

@@ -51,6 +51,12 @@ impl NesterovOuter {
         self.u.iter_mut()
     }
 
+    /// One tensor's momentum slot (the overlapped sync path applies
+    /// deferred outer steps tensor-by-tensor).
+    pub fn slot_mut(&mut self, idx: usize) -> &mut [f32] {
+        &mut self.u[idx]
+    }
+
     pub fn momentum_norm(&self, idx: usize) -> f64 {
         crate::util::norm(&self.u[idx])
     }

@@ -4,34 +4,44 @@
 //!
 //! A `SyncPlan` owns the streaming-partition schedule (which tensors
 //! sync at which step); a `SyncEngine` owns the outer optimizer, the
-//! compressor and the per-boundary execution:
+//! collective-op pipeline (compressor + `comm::Topology`) and the
+//! per-boundary execution:
 //!
 //!   phase 1 — per-worker deltas theta_global - theta_k + error
 //!             feedback, parallel over workers;
-//!   phase 2 — per-tensor collective (compression + byte accounting) +
-//!             outer Nesterov step, parallel over tensors;
+//!   phase 2 — per-tensor collective (topology reduce + byte/hop
+//!             accounting) + outer Nesterov step, parallel over tensors;
 //!   phase 3 — broadcast of the new global params back to the workers.
+//!
+//! **Overlapped streaming sync** (`overlap_tau > 0`): phase 1 still
+//! runs at the boundary, but the collective reduce is handed to a
+//! background thread while workers keep taking inner steps; the reduced
+//! result is applied (outer step + broadcast) tau steps later.  The
+//! reduce is a pure function of the captured deltas, so the overlap is
+//! deterministic; tau = 0 takes the original blocking code path
+//! untouched and is bit-for-bit identical to the pre-overlap engine
+//! (tests/parallel_determinism.rs, tests/comm_props.rs).
 //!
 //! Determinism contract: each (worker, tensor) delta is computed
 //! independently; each collective reduces its K contributions in
 //! worker-index order; comm stats accumulate in ascending tensor index
-//! after all reduce threads join.  A parallel sync is therefore
-//! bit-for-bit identical to the sequential reference
-//! (tests/parallel_determinism.rs).
+//! after all reduce threads join; pending overlapped boundaries apply
+//! in launch order at their scheduled step.  A parallel sync is
+//! therefore bit-for-bit identical to the sequential reference.
 //!
 //! The engine is deliberately decoupled from `Session`/`Manifest` —
 //! it only needs flat-tensor geometry (`SyncTensorMeta`) — so the
 //! whole layer is unit-testable without compiled artifacts.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::thread;
 
 use super::config::TrainConfig;
 use super::outer::NesterovOuter;
 use super::worker::Worker;
-use crate::collectives::{quantized_reduce_mean, ring_allreduce_mean,
-                         sparse_allgather_mean, CommStats};
-use crate::compress::{Compression, Compressor, NoCompression};
+use crate::comm::{CollectiveOp, CommStats, OpKind, Topology, TopologySpec};
+use crate::compress::{Compression, Compressor};
 use crate::runtime::{Manifest, Tensors};
 
 /// Flat-tensor geometry the sync path needs: total element count and
@@ -135,15 +145,62 @@ struct SyncJob<'a> {
     stats: CommStats,
 }
 
-/// Owns everything the sync boundary needs: schedule, compressor,
-/// outer optimizer, tensor geometry.
+/// The reduced output of one tensor's collective, ready for the
+/// deferred outer step of an overlapped boundary.
+struct ReducedTensor {
+    ti: usize,
+    psi: Vec<f32>,
+    stats: CommStats,
+}
+
+/// One launched-but-not-yet-applied overlapped boundary.
+enum PendingPayload {
+    /// computed inline (sequential reference path)
+    Ready(Vec<ReducedTensor>),
+    /// running on a background thread
+    InFlight(thread::JoinHandle<Vec<ReducedTensor>>),
+}
+
+struct PendingSync {
+    apply_step: u64,
+    payload: PendingPayload,
+}
+
+/// Pure collective reduce of one boundary's tensors (ti ascending):
+/// the background half of an overlapped sync.  Identical math on a
+/// background thread or inline, so overlap preserves determinism.
+fn reduce_tensors(
+    deltas: Vec<(usize, Vec<Vec<f32>>)>,
+    metas: Vec<SyncTensorMeta>,
+    compressor: Arc<dyn Compressor + Send + Sync>,
+    topology: Arc<dyn Topology>,
+    kind: OpKind,
+) -> Vec<ReducedTensor> {
+    let op = CollectiveOp::new(compressor.as_ref(), kind);
+    deltas
+        .into_iter()
+        .map(|(ti, mut bufs)| {
+            let meta = metas[ti];
+            let trace = topology.reduce_mean(&mut bufs, &op, meta.rows, meta.cols);
+            let psi = bufs.into_iter().next().expect("at least one worker");
+            ReducedTensor { ti, psi, stats: trace.stats() }
+        })
+        .collect()
+}
+
+/// Owns everything the sync boundary needs: schedule, collective-op
+/// pipeline, outer optimizer, tensor geometry, in-flight overlapped
+/// boundaries.
 pub struct SyncEngine {
     pub plan: SyncPlan,
     metas: Vec<SyncTensorMeta>,
     outer: NesterovOuter,
-    compressor: Box<dyn Compressor + Send + Sync>,
-    compression: Compression,
-    error_feedback: bool,
+    compressor: Arc<dyn Compressor + Send + Sync>,
+    kind: OpKind,
+    topology: Arc<dyn Topology>,
+    apply_ef: bool,
+    overlap_tau: u64,
+    pending: Vec<PendingSync>,
 }
 
 impl SyncEngine {
@@ -165,9 +222,13 @@ impl SyncEngine {
         let outer = NesterovOuter::new(cfg.outer_lr, cfg.outer_momentum, &shapes);
         SyncEngine::from_parts(plan, metas, outer, cfg.compression.clone(),
                                cfg.error_feedback)
+            .with_topology(cfg.topology)
+            .with_overlap(cfg.overlap_tau)
     }
 
     /// Manifest-free constructor (unit tests, synthetic workloads).
+    /// Defaults to the flat topology and blocking (tau = 0) sync —
+    /// exactly the pre-refactor behavior.
     pub fn from_parts(
         plan: SyncPlan,
         metas: Vec<SyncTensorMeta>,
@@ -175,14 +236,34 @@ impl SyncEngine {
         compression: Compression,
         error_feedback: bool,
     ) -> SyncEngine {
+        let kind = OpKind::for_run(&compression, error_feedback);
+        let apply_ef = error_feedback && compression != Compression::None;
+        let compressor: Arc<dyn Compressor + Send + Sync> =
+            Arc::from(compression.build());
         SyncEngine {
             plan,
             metas,
             outer,
-            compressor: compression.build(),
-            compression,
-            error_feedback,
+            compressor,
+            kind,
+            topology: TopologySpec::Flat.build(kind),
+            apply_ef,
+            overlap_tau: 0,
+            pending: Vec::new(),
         }
+    }
+
+    /// Route this engine's collectives through `spec`'s topology.
+    pub fn with_topology(mut self, spec: TopologySpec) -> SyncEngine {
+        self.topology = spec.build(self.kind);
+        self
+    }
+
+    /// Overlapped streaming sync: apply each boundary's reduced result
+    /// `tau` steps after its schedule slot (0 = blocking).
+    pub fn with_overlap(mut self, tau: u64) -> SyncEngine {
+        self.overlap_tau = tau;
+        self
     }
 
     /// Outer-momentum diagnostics (per-tensor L2), for probes/tests.
@@ -190,10 +271,10 @@ impl SyncEngine {
         self.outer.momentum_norm(idx)
     }
 
-    /// Run the sync boundary for `step`: no-op unless the plan has
-    /// partitions due.  Compression + error feedback + collective
-    /// dispatch + outer step + broadcast, exactly the Algorithm 1/2
-    /// dataflow of the pre-refactor loop.
+    /// Run the sync boundary for `step`: applies any overlapped
+    /// boundary scheduled for this step, then launches (tau > 0) or
+    /// executes (tau = 0) the partitions due now.  The blocking path is
+    /// exactly the Algorithm 1/2 dataflow of the pre-refactor loop.
     pub fn sync_step(
         &mut self,
         step: u64,
@@ -202,25 +283,55 @@ impl SyncEngine {
         comm: &mut CommStats,
         parallel: bool,
     ) {
+        // apply overlapped boundaries that matured, in launch order,
+        // before any new deltas are captured at this step
+        self.apply_matured(step, theta, workers, comm);
+
         let due = self.plan.due_tensors(step);
         if due.is_empty() || workers.is_empty() {
             return;
         }
+        let deltas = self.collect_deltas(&due, theta, workers, parallel);
+        if self.overlap_tau == 0 {
+            self.blocking_reduce(&due, deltas, theta, workers, comm, parallel);
+        } else {
+            self.launch_overlapped(step, deltas, parallel);
+        }
+    }
+
+    /// Apply every still-pending overlapped boundary (end of training).
+    pub fn flush(
+        &mut self,
+        theta: &mut Tensors,
+        workers: &mut [Worker<'_>],
+        comm: &mut CommStats,
+    ) {
+        self.apply_matured(u64::MAX, theta, workers, comm);
+    }
+
+    /// phase 1 — per-worker deltas + error feedback, transposed to
+    /// tensor index -> K contributions in worker order (so every
+    /// collective reduces identically to the sequential path).
+    fn collect_deltas(
+        &self,
+        due: &[usize],
+        theta: &Tensors,
+        workers: &mut [Worker<'_>],
+        parallel: bool,
+    ) -> BTreeMap<usize, Vec<Vec<f32>>> {
         let k = workers.len();
-        let apply_ef = self.error_feedback && self.compression != Compression::None;
+        let apply_ef = self.apply_ef;
         let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
         let metas: &[SyncTensorMeta] = &self.metas;
-        let due_ref: &[usize] = &due;
         let theta_ref: &Tensors = theta;
 
-        // phase 1 — per-worker deltas + error feedback
         let by_worker: Vec<Vec<Vec<f32>>> = if parallel && k > 1 {
             thread::scope(|s| {
                 let handles: Vec<_> = workers
                     .iter_mut()
                     .map(|w| {
                         s.spawn(move || {
-                            w.local_deltas(theta_ref, due_ref, metas, apply_ef,
+                            w.local_deltas(theta_ref, due, metas, apply_ef,
                                            compressor)
                         })
                     })
@@ -233,14 +344,11 @@ impl SyncEngine {
         } else {
             workers
                 .iter_mut()
-                .map(|w| w.local_deltas(theta_ref, due_ref, metas, apply_ef,
+                .map(|w| w.local_deltas(theta_ref, due, metas, apply_ef,
                                         compressor))
                 .collect()
         };
 
-        // transpose [worker][due_idx] -> tensor index -> [worker],
-        // preserving worker order so every collective reduces its K
-        // contributions identically to the sequential path
         let mut deltas: BTreeMap<usize, Vec<Vec<f32>>> =
             due.iter().map(|&ti| (ti, Vec::with_capacity(k))).collect();
         for wd in by_worker {
@@ -248,6 +356,24 @@ impl SyncEngine {
                 deltas.get_mut(&ti).expect("due tensor").push(d);
             }
         }
+        deltas
+    }
+
+    /// tau = 0: phase 2 (per-tensor collective + outer step) and
+    /// phase 3 (broadcast), inline at the boundary.
+    fn blocking_reduce(
+        &mut self,
+        due: &[usize],
+        mut deltas: BTreeMap<usize, Vec<Vec<f32>>>,
+        theta: &mut Tensors,
+        workers: &mut [Worker<'_>],
+        comm: &mut CommStats,
+        parallel: bool,
+    ) {
+        let metas: &[SyncTensorMeta] = &self.metas;
+        let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
+        let topology: &dyn Topology = self.topology.as_ref();
+        let kind = self.kind;
 
         // phase 2 — per-tensor collective + outer step.  Zipping theta
         // with the momentum slots hands each job a disjoint (theta, u)
@@ -265,32 +391,13 @@ impl SyncEngine {
                 });
             }
         }
-        let compression = &self.compression;
-        let error_feedback = self.error_feedback;
         let reduce = |job: &mut SyncJob<'_>| {
             let meta = metas[job.ti];
-            // collective: value semantics + byte accounting
-            job.stats = match (compression, error_feedback) {
-                (Compression::None, _) => ring_allreduce_mean(&mut job.deltas),
-                (Compression::TopK { .. }, true) => {
-                    // already sparsified through EF; exact all-gather
-                    // mean, but charge top-k wire bytes
-                    let mut s = sparse_allgather_mean(
-                        &mut job.deltas, &NoCompression, meta.rows, meta.cols);
-                    let wire = compressor.wire_bytes(meta.size, meta.rows);
-                    s.bytes_per_worker = (k - 1) * wire;
-                    s.total_bytes = k * s.bytes_per_worker;
-                    s
-                }
-                (Compression::TopK { .. }, false) => sparse_allgather_mean(
-                    &mut job.deltas, compressor, meta.rows, meta.cols),
-                // with EF the contributions are already quantized (#1);
-                // quantization is idempotent on its own grid, so the
-                // collective's first hop is a no-op and the reduction
-                // requantize is hop #2.
-                (Compression::Quant { .. }, _) => quantized_reduce_mean(
-                    &mut job.deltas, compressor, meta.rows, meta.cols),
-            };
+            // collective: value semantics + per-hop byte accounting
+            let op = CollectiveOp::new(compressor, kind);
+            let trace =
+                topology.reduce_mean(&mut job.deltas, &op, meta.rows, meta.cols);
+            job.stats = trace.stats();
             // outer update with Psi = the reduced delta
             let psi: &[f32] = &job.deltas[0];
             NesterovOuter::step_slot(eta, mu, job.u.as_mut_slice(),
@@ -318,18 +425,104 @@ impl SyncEngine {
             }
         }
 
-        // fixed reduction order at the barrier: stats accumulate in
-        // ascending tensor index regardless of which thread ran which
-        // job (byte counts are sums, but keep the contract explicit)
+        // fixed reduction order at the barrier: the boundary's event
+        // stats accumulate in ascending tensor index regardless of
+        // which thread ran which job, then fold into run-level
+        // accounting as one sync event (peak = max event volume)
+        let mut event = CommStats::default();
         for job in &jobs {
-            comm.add(job.stats);
+            event.add(job.stats);
         }
+        comm.absorb_event(event);
         drop(jobs);
 
         // phase 3 — broadcast: workers resume from the new global params
         for w in workers.iter_mut() {
-            for &ti in &due {
+            for &ti in due {
                 w.params[ti].copy_from_slice(&theta[ti]);
+            }
+        }
+    }
+
+    /// tau > 0: hand the captured deltas to a background reduce and
+    /// schedule its application.  `parallel = false` computes inline
+    /// (the sequential reference), which is bit-identical because the
+    /// reduce is a pure function of the captured deltas.
+    fn launch_overlapped(
+        &mut self,
+        step: u64,
+        deltas: BTreeMap<usize, Vec<Vec<f32>>>,
+        parallel: bool,
+    ) {
+        let deltas: Vec<(usize, Vec<Vec<f32>>)> = deltas.into_iter().collect();
+        let metas = self.metas.clone();
+        let compressor = self.compressor.clone();
+        let topology = self.topology.clone();
+        let kind = self.kind;
+        let payload = if parallel {
+            PendingPayload::InFlight(thread::spawn(move || {
+                reduce_tensors(deltas, metas, compressor, topology, kind)
+            }))
+        } else {
+            PendingPayload::Ready(reduce_tensors(
+                deltas, metas, compressor, topology, kind))
+        };
+        self.pending.push(PendingSync {
+            apply_step: step + self.overlap_tau,
+            payload,
+        });
+    }
+
+    /// Apply every pending boundary with apply_step <= step, in launch
+    /// order: outer step per tensor (ascending), one comm event per
+    /// boundary, broadcast of the touched tensors.
+    fn apply_matured(
+        &mut self,
+        step: u64,
+        theta: &mut Tensors,
+        workers: &mut [Worker<'_>],
+        comm: &mut CommStats,
+    ) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let mut still_pending = Vec::new();
+        let mut matured = Vec::new();
+        for p in self.pending.drain(..) {
+            if p.apply_step <= step {
+                matured.push(p);
+            } else {
+                still_pending.push(p);
+            }
+        }
+        self.pending = still_pending;
+
+        let (eta, mu) = (self.outer.lr, self.outer.momentum);
+        for p in matured {
+            let reduced = match p.payload {
+                PendingPayload::Ready(r) => r,
+                PendingPayload::InFlight(h) => {
+                    h.join().expect("overlapped reduce thread panicked")
+                }
+            };
+            let mut event = CommStats::default();
+            let mut touched = Vec::with_capacity(reduced.len());
+            for rt in reduced {
+                NesterovOuter::step_slot(
+                    eta,
+                    mu,
+                    self.outer.slot_mut(rt.ti),
+                    theta[rt.ti].as_mut_slice(),
+                    &rt.psi,
+                );
+                event.add(rt.stats);
+                touched.push(rt.ti);
+            }
+            comm.absorb_event(event);
+            for w in workers.iter_mut() {
+                for &ti in &touched {
+                    w.params[ti].copy_from_slice(&theta[ti]);
+                }
             }
         }
     }

@@ -3,17 +3,23 @@
 //! Each of the K logical DiLoCo workers owns a full parameter replica,
 //! inner optimizer state, an independent data shard and an error-
 //! feedback accumulator.  The `WorkerPool` runs the K inner loops on
-//! scoped threads against the shared (thread-safe) `Session`, so the
-//! hot inner-step phase scales with cores instead of paying K× wall
-//! clock.
+//! **K persistent executor threads** ("lanes") attached for the whole
+//! training run (`WorkerPool::scoped`): each step the pool moves every
+//! worker's state to its lane over a channel, the lane runs the inner
+//! step, and the pool collects `(worker, loss)` back in lane order — a
+//! channel-based step barrier.  Between steps the main thread owns all
+//! worker state, so the sync boundary needs no locking.  This replaces
+//! the per-step `thread::scope` spawn of the first parallel engine
+//! (thread churn that was measurable on nano-scale sweeps).
 //!
 //! Determinism contract: every worker draws from its own RNG stream
 //! (`corpus.shard(w)`), the per-step losses are reduced in worker-index
-//! order after all threads join, and the sync engine fixes the
-//! reduction order at the barrier — so a parallel run is bit-for-bit
+//! order after the barrier, and the sync engine fixes the reduction
+//! order at its own barrier — so a parallel run is bit-for-bit
 //! identical to the sequential reference path
 //! (tests/parallel_determinism.rs).
 
+use std::sync::mpsc;
 use std::thread;
 
 use anyhow::Result;
@@ -180,13 +186,44 @@ impl<'c> Worker<'c> {
     }
 }
 
-/// The K inner-optimization trajectories, run concurrently.  The pool
-/// owns its inner optimizer: worker state is shaped for it at
-/// construction, so a mismatched optimizer/state pair is
-/// unrepresentable.
+/// One step's work order for a lane: the worker state (moved in, moved
+/// back with the loss) plus the step parameters.
+struct StepJob<'c> {
+    worker: Worker<'c>,
+    sess: &'c Session,
+    inner: &'c dyn InnerOptimizer,
+    batch_seqs: usize,
+    t: f32,
+    lr: f32,
+    wd: f32,
+}
+
+/// A persistent executor thread's endpoints.
+struct Lane<'c> {
+    tx: mpsc::Sender<StepJob<'c>>,
+    rx: mpsc::Receiver<(Worker<'c>, Result<f64>)>,
+}
+
+/// Drops the pool's lane senders even if the scoped body panics, so
+/// the executor threads always see a closed channel and exit — the
+/// enclosing `thread::scope` would otherwise join them forever during
+/// unwinding.
+struct LaneGuard<'p, 'c>(&'p mut WorkerPool<'c>);
+
+impl Drop for LaneGuard<'_, '_> {
+    fn drop(&mut self) {
+        self.0.lanes.clear();
+    }
+}
+
+/// The K inner-optimization trajectories.  The pool owns its inner
+/// optimizer: worker state is shaped for it at construction, so a
+/// mismatched optimizer/state pair is unrepresentable.  Lanes (the
+/// persistent executor threads) exist only inside `scoped`.
 pub struct WorkerPool<'c> {
     pub workers: Vec<Worker<'c>>,
     inner: &'c dyn InnerOptimizer,
+    lanes: Vec<Lane<'c>>,
 }
 
 impl<'c> WorkerPool<'c> {
@@ -211,7 +248,7 @@ impl<'c> WorkerPool<'c> {
                 )
             })
             .collect();
-        WorkerPool { workers, inner }
+        WorkerPool { workers, inner, lanes: Vec::new() }
     }
 
     pub fn inner(&self) -> &'c dyn InnerOptimizer {
@@ -222,16 +259,58 @@ impl<'c> WorkerPool<'c> {
         self.workers.len()
     }
 
-    /// One inner step on every worker.  With `parallel` the K inner
-    /// loops run on scoped threads (one per worker — the work is
-    /// PJRT-bound, so K threads is the right granularity); otherwise
-    /// they run inline, which is the sequential reference path.  Either
-    /// way losses are reduced in worker-index order, so the mean is
-    /// bit-identical across modes.
+    /// Run `f` with K persistent executor threads attached (one lane
+    /// per worker; the work is PJRT-bound, so K threads is the right
+    /// granularity).  Threads live for the whole call and exit when the
+    /// lane senders drop; `spawn_executors = false` (the sequential
+    /// reference path, or K = 1) runs `f` with no threads at all.
+    pub fn scoped<R>(
+        &mut self,
+        spawn_executors: bool,
+        f: impl FnOnce(&mut WorkerPool<'c>) -> R,
+    ) -> R {
+        let k = self.workers.len();
+        if !spawn_executors || k <= 1 {
+            return f(self);
+        }
+        thread::scope(|s| {
+            let mut lanes = Vec::with_capacity(k);
+            for _ in 0..k {
+                let (jtx, jrx) = mpsc::channel::<StepJob<'c>>();
+                let (rtx, rrx) = mpsc::channel::<(Worker<'c>, Result<f64>)>();
+                s.spawn(move || {
+                    while let Ok(mut job) = jrx.recv() {
+                        let loss = job.worker.inner_step(
+                            job.sess, job.inner, job.batch_seqs,
+                            job.t, job.lr, job.wd);
+                        if rtx.send((job.worker, loss)).is_err() {
+                            break;
+                        }
+                    }
+                });
+                lanes.push(Lane { tx: jtx, rx: rrx });
+            }
+            self.lanes = lanes;
+            // the guard drops the senders (retiring the executors) on
+            // both the normal path and unwinding, so the scope's join
+            // can always complete
+            let mut guard = LaneGuard(self);
+            let out = f(&mut *guard.0);
+            drop(guard);
+            out
+        })
+    }
+
+    /// One inner step on every worker.  With `parallel` and attached
+    /// lanes, each worker's state ping-pongs through its persistent
+    /// executor (channel-based barrier); otherwise the K loops run
+    /// inline — the sequential reference path.  Either way losses are
+    /// reduced in worker-index order, so the mean is bit-identical
+    /// across modes.
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &mut self,
-        sess: &Session,
+        sess: &'c Session,
         batch_seqs: usize,
         t: f32,
         lr: f32,
@@ -239,32 +318,35 @@ impl<'c> WorkerPool<'c> {
         parallel: bool,
     ) -> Result<f64> {
         let k = self.workers.len();
-        let inner = self.inner;
-        let losses: Vec<Result<f64>> = if parallel && k > 1 {
-            thread::scope(|s| {
-                let handles: Vec<_> = self
-                    .workers
-                    .iter_mut()
-                    .map(|w| {
-                        s.spawn(move || w.inner_step(sess, inner, batch_seqs, t, lr, wd))
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("worker thread panicked"))
-                    .collect()
-            })
+        if parallel && k > 1 && !self.lanes.is_empty() {
+            let inner = self.inner;
+            let workers = std::mem::take(&mut self.workers);
+            for (lane, worker) in self.lanes.iter().zip(workers) {
+                lane.tx
+                    .send(StepJob { worker, sess, inner, batch_seqs, t, lr, wd })
+                    .expect("executor lane disappeared");
+            }
+            // the barrier: collect every lane in worker-index order
+            let mut losses = Vec::with_capacity(k);
+            for lane in &self.lanes {
+                let (worker, loss) =
+                    lane.rx.recv().expect("executor lane disappeared");
+                self.workers.push(worker);
+                losses.push(loss);
+            }
+            let mut mean = 0.0;
+            for loss in losses {
+                mean += loss? / k as f64;
+            }
+            Ok(mean)
         } else {
-            self.workers
-                .iter_mut()
-                .map(|w| w.inner_step(sess, inner, batch_seqs, t, lr, wd))
-                .collect()
-        };
-        let mut mean = 0.0;
-        for loss in losses {
-            mean += loss? / k as f64;
+            let inner = self.inner;
+            let mut mean = 0.0;
+            for w in self.workers.iter_mut() {
+                mean += w.inner_step(sess, inner, batch_seqs, t, lr, wd)? / k as f64;
+            }
+            Ok(mean)
         }
-        Ok(mean)
     }
 }
 

@@ -7,9 +7,15 @@
 use std::collections::BTreeMap;
 use std::fs;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
+/// Uniquifies concurrent temp-file names within this process (see
+/// `RunCache::put`).
+static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+use crate::comm::TopologySpec;
 use crate::compress::Compression;
 use crate::coordinator::{train, RunResult, TrainConfig};
 use crate::runtime::Session;
@@ -23,6 +29,9 @@ pub struct RunSummary {
     pub final_acc: f64,
     pub tokens: u64,
     pub bytes_per_worker: u64,
+    /// largest per-worker volume of a single sync event (streaming's
+    /// peak-bandwidth claim, measured)
+    pub peak_event_bytes: u64,
     pub eval_curve: Vec<(u64, f64)>,
     pub train_curve: Vec<(u64, f64)>,
     pub wall_secs: f64,
@@ -36,6 +45,7 @@ impl RunSummary {
             final_acc: r.final_acc,
             tokens: r.tokens,
             bytes_per_worker: r.comm.bytes_per_worker as u64,
+            peak_event_bytes: r.comm.peak_event_bytes as u64,
             eval_curve: r.eval_curve.clone(),
             train_curve: r.train_curve.clone(),
             wall_secs: r.wall_secs,
@@ -54,6 +64,8 @@ impl RunSummary {
         m.insert("final_acc".into(), Json::Num(self.final_acc));
         m.insert("tokens".into(), Json::Num(self.tokens as f64));
         m.insert("bytes_per_worker".into(), Json::Num(self.bytes_per_worker as f64));
+        m.insert("peak_event_bytes".into(),
+                 Json::Num(self.peak_event_bytes as f64));
         m.insert("eval_curve".into(), curve(&self.eval_curve));
         m.insert("train_curve".into(), curve(&self.train_curve));
         m.insert("wall_secs".into(), Json::Num(self.wall_secs));
@@ -77,6 +89,11 @@ impl RunSummary {
             final_acc: v.get("final_acc")?.as_f64()?,
             tokens: v.get("tokens")?.as_f64()? as u64,
             bytes_per_worker: v.get("bytes_per_worker")?.as_f64()? as u64,
+            // absent in cache files written before the comm refactor
+            peak_event_bytes: v
+                .get("peak_event_bytes")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0) as u64,
             eval_curve: curve("eval_curve")?,
             train_curve: curve("train_curve")?,
             wall_secs: v.get("wall_secs")?.as_f64()?,
@@ -85,6 +102,8 @@ impl RunSummary {
 }
 
 /// Canonical cache key for a config (every field that affects the math).
+/// Non-default topology/overlap settings append suffixes so the keys of
+/// pre-existing flat/blocking runs stay stable across the comm refactor.
 pub fn config_key(cfg: &TrainConfig) -> String {
     let comp = match &cfg.compression {
         Compression::None => "none".to_string(),
@@ -92,14 +111,21 @@ pub fn config_key(cfg: &TrainConfig) -> String {
             "q{bits}-{:?}-{rowwise}", mode),
         Compression::TopK { frac } => format!("topk{frac}"),
     };
-    format!(
+    let mut key = format!(
         "{}|{:?}|K{}|H{}|S{}|B{}|lr{}|wd{}|wu{}|fl{}|olr{}|om{}|{}|ef{}-{}|J{}|ev{}x{}|s{}",
         cfg.model, cfg.method, cfg.workers, cfg.sync_interval,
         cfg.total_steps, cfg.global_batch, cfg.lr, cfg.weight_decay,
         cfg.warmup_steps, cfg.lr_floor_frac, cfg.outer_lr,
         cfg.outer_momentum, comp, cfg.error_feedback, cfg.ef_beta,
         cfg.streaming_partitions, cfg.eval_every, cfg.eval_batches, cfg.seed
-    )
+    );
+    if cfg.topology != TopologySpec::Flat {
+        key.push_str(&format!("|T{}", cfg.topology.label()));
+    }
+    if cfg.overlap_tau > 0 {
+        key.push_str(&format!("|tau{}", cfg.overlap_tau));
+    }
+    key
 }
 
 pub struct RunCache {
@@ -138,7 +164,18 @@ impl RunCache {
         let mut m = BTreeMap::new();
         m.insert("key".into(), Json::Str(key.clone()));
         m.insert("run".into(), run.to_json());
-        fs::write(self.path_for(&key), Json::Obj(m).to_string())?;
+        // write-to-temp + rename: `experiment all --jobs N` can race two
+        // writers onto one entry (both trained after a shared miss);
+        // the rename keeps every reader seeing a complete file —
+        // last-write-wins, never a torn JSON that would poison get()
+        let path = self.path_for(&key);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, Json::Obj(m).to_string())?;
+        fs::rename(&tmp, &path)?;
         Ok(())
     }
 

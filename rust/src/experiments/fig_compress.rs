@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use super::fig_workers::base_cfg;
 use super::{Ctx, Preset};
+use crate::comm::TopologySpec;
 use crate::compress::{Compression, QuantMode};
 use crate::coordinator::Method;
 use crate::util::table::{fmt_f, Table};
@@ -101,25 +102,36 @@ pub fn fig8a(ctx: &Ctx) -> Result<()> {
     t.emit("fig8a")
 }
 
-/// Fig 8 (right): streaming (partitioned) synchronization, J=3.
+/// Fig 8 (right): streaming (partitioned) synchronization, J=3 — plus
+/// the comm-layer variants the refactor made expressible: overlapped
+/// streaming (the collective runs tau steps behind the workers) and the
+/// hierarchical two-datacenter topology.
 pub fn fig8b(ctx: &Ctx) -> Result<()> {
     let sess = ctx.session(ctx.base_model())?;
     let mut t = Table::new(
-        "Fig 8 right — streaming DiLoCo/MuLoCo (J=3 partitions, K=8)",
-        &["method", "non-streaming", "streaming", "delta"],
+        "Fig 8 right — streaming DiLoCo/MuLoCo (J=3 partitions, K=8) \
+         + overlap/hierarchical variants",
+        &["method", "non-streaming", "streaming", "stream tau=2",
+          "hier 2-DC", "delta stream"],
     );
     for method in [Method::Diloco, Method::Muloco] {
-        let run = |j: usize| -> Result<f64> {
+        let run = |j: usize, tau: u64, topo: TopologySpec| -> Result<f64> {
             let mut cfg = base_cfg(ctx, method).tuned_outer(8)?;
             cfg.streaming_partitions = j;
+            cfg.overlap_tau = tau;
+            cfg.topology = topo;
             Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
         };
-        let plain = run(1)?;
-        let streamed = run(3)?;
+        let plain = run(1, 0, TopologySpec::Flat)?;
+        let streamed = run(3, 0, TopologySpec::Flat)?;
+        let overlapped = run(3, 2, TopologySpec::Flat)?;
+        let hier = run(1, 0, TopologySpec::Hier { groups: 2 })?;
         t.row(vec![
             method.name().into(),
             fmt_f(plain, 4),
             fmt_f(streamed, 4),
+            fmt_f(overlapped, 4),
+            fmt_f(hier, 4),
             fmt_f(streamed - plain, 4),
         ]);
     }

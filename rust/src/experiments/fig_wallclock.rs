@@ -4,6 +4,7 @@ use anyhow::Result;
 
 use super::fig_workers::base_cfg;
 use super::Ctx;
+use crate::comm::{Hierarchical, LinkBandwidth};
 use crate::coordinator::{train, Method};
 use crate::netsim::{CommPattern, SystemProfile, GBIT};
 use crate::util::table::{fmt_f, fmt_pct, Table};
@@ -80,21 +81,24 @@ fn profile(ctx: &Ctx, measured: &Measured, method: Method, k: usize,
            h: u64, compressed_frac: f64) -> Result<SystemProfile> {
     let sess = ctx.session(ctx.base_model())?;
     let bytes = sess.manifest.param_bytes() as f64;
-    Ok(SystemProfile {
-        compute_secs_per_step: measured.compute_per_step,
-        optimizer_secs_per_step: measured.optimizer_per_step,
-        param_bytes: bytes,
-        wire_bytes_per_sync: bytes * compressed_frac,
-        workers: k,
-        pattern: if method.is_local_update() {
+    Ok(SystemProfile::flat(
+        measured.compute_per_step,
+        measured.optimizer_per_step,
+        bytes,
+        bytes * compressed_frac,
+        k,
+        if method.is_local_update() {
             CommPattern::EveryH { h }
         } else {
             CommPattern::EveryStep
         },
-    })
+    ))
 }
 
 /// Fig 16: compute utilization as a function of network bandwidth.
+/// Flat profiles sweep a single-tier link; the hierarchical row keeps a
+/// fast 100 Gbit/s intra-DC fabric and sweeps only the WAN — the trace
+/// seam makes the two-tier setup a netsim input instead of a new model.
 pub fn fig16(ctx: &Ctx) -> Result<()> {
     let dl = measure(ctx, Method::Diloco)?;
     let variants: Vec<(&str, Method, f64)> = vec![
@@ -125,6 +129,26 @@ pub fn fig16(ctx: &Ctx) -> Result<()> {
             name.to_string(),
             format!("{:.3}", p.bandwidth_for_utilization(0.99) / GBIT),
         ]);
+    }
+    {
+        let sess = ctx.session(ctx.base_model())?;
+        let bytes = sess.manifest.param_bytes() as f64;
+        let hier = Hierarchical::new(2);
+        let p = SystemProfile::with_topology(
+            dl.compute_per_step,
+            dl.optimizer_per_step,
+            bytes,
+            bytes * 0.125,
+            8,
+            CommPattern::EveryH { h },
+            &hier,
+        );
+        let mut row = vec!["MuLoCo 4-bit hier(2 DC)".to_string()];
+        for bw in &bws {
+            let link = LinkBandwidth { inter: bw * GBIT, intra: 100.0 * GBIT };
+            row.push(format!("{:.1}%", 100.0 * p.utilization_linked(link)));
+        }
+        t.row(row);
     }
     println!("{}", table99.render());
     table99.emit("fig16-99")?;
@@ -167,14 +191,8 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
         // DP baselines sync per step; K=1 local methods still exchange
         // their pseudogradient with the parameter server pool, modeled
         // as a K=2 ring per the paper's accounting
-        let p = SystemProfile {
-            compute_secs_per_step: step,
-            optimizer_secs_per_step: opt,
-            param_bytes,
-            wire_bytes_per_sync: param_bytes,
-            workers: k.max(2),
-            pattern,
-        };
+        let p = SystemProfile::flat(
+            step, opt, param_bytes, param_bytes, k.max(2), pattern);
         let mut row = vec![name.to_string()];
         for bw in &bws {
             row.push(format!("{:.1}", p.training_hours(steps, bw * GBIT)));

@@ -21,7 +21,10 @@ mod fig_workers;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -68,10 +71,11 @@ impl Ctx {
             return Ok(s.clone());
         }
         // load outside the lock: compilation takes seconds and must not
-        // block a concurrent lookup of an already-cached config.  Two
-        // threads missing on the same model both compile and one result
-        // is dropped — acceptable until `experiment all` actually fans
-        // out (then switch to a per-model OnceLock slot)
+        // block a concurrent lookup of an already-cached config.  With
+        // `experiment all --jobs N`, two threads missing on the same
+        // model may both compile and one result is dropped — wasted
+        // work bounded by the job count, never incorrect (first insert
+        // wins and all callers share it)
         eprintln!("[ctx] loading + compiling artifacts for {model} ...");
         let s = Arc::new(Session::load(&self.artifacts.join(model))?);
         Ok(self.sessions.lock().unwrap()
@@ -155,33 +159,71 @@ pub fn registry_names() -> Vec<(&'static str, &'static str)> {
     registry().iter().map(|(id, d, _)| (*id, *d)).collect()
 }
 
-pub fn run(id: &str, preset: &str, artifacts: &Path) -> Result<()> {
+pub fn run(id: &str, preset: &str, artifacts: &Path, jobs: usize) -> Result<()> {
     let ctx = Ctx::new(artifacts, preset)?;
     let reg = registry();
     if id == "all" {
-        let total = reg.len();
-        let mut failures = Vec::new();
-        for (i, (name, desc, f)) in reg.iter().enumerate() {
-            eprintln!("=== [{}/{}] {name}: {desc}", i + 1, total);
-            let t0 = std::time::Instant::now();
-            match f(&ctx) {
-                Ok(()) => eprintln!("=== {name} done in {:.1}s",
-                                    t0.elapsed().as_secs_f64()),
-                Err(e) => {
-                    eprintln!("=== {name} FAILED: {e:#}");
-                    failures.push(*name);
-                }
-            }
-        }
-        if !failures.is_empty() {
-            anyhow::bail!("experiments failed: {failures:?}");
-        }
-        return Ok(());
+        return run_all(&ctx, &reg, jobs);
     }
     match reg.iter().find(|(name, _, _)| *name == id) {
         Some((_, _, f)) => f(&ctx),
         None => bail!("unknown experiment {id:?}; see `muloco list`"),
     }
+}
+
+/// Run the whole registry across `jobs` worker threads sharing one
+/// `Ctx` (sessions behind `Arc`, the run cache on disk).  Generators
+/// are pulled off a shared counter; the per-experiment outcomes are
+/// collected into fixed slots and reported in registry order, so the
+/// summary is deterministic regardless of scheduling (interleaved
+/// *table* output under `--jobs > 1` still lands in each experiment's
+/// `results/<id>/` files).
+fn run_all(
+    ctx: &Ctx,
+    reg: &[(&'static str, &'static str, ExpFn)],
+    jobs: usize,
+) -> Result<()> {
+    let total = reg.len();
+    let jobs = jobs.clamp(1, total.max(1));
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<(f64, Result<()>)>>> =
+        (0..total).map(|_| Mutex::new(None)).collect();
+    thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let (name, desc, f) = reg[i];
+                eprintln!("=== [{}/{}] {name}: {desc}", i + 1, total);
+                let t0 = Instant::now();
+                let r = f(ctx);
+                *results[i].lock().unwrap() =
+                    Some((t0.elapsed().as_secs_f64(), r));
+            });
+        }
+    });
+    let mut failures = Vec::new();
+    for (i, (name, _, _)) in reg.iter().enumerate() {
+        match results[i].lock().unwrap().take() {
+            Some((secs, Ok(()))) => {
+                eprintln!("=== {name} done in {secs:.1}s");
+            }
+            Some((secs, Err(e))) => {
+                eprintln!("=== {name} FAILED after {secs:.1}s: {e:#}");
+                failures.push(*name);
+            }
+            None => {
+                eprintln!("=== {name} did not run");
+                failures.push(*name);
+            }
+        }
+    }
+    if !failures.is_empty() {
+        anyhow::bail!("experiments failed: {failures:?}");
+    }
+    Ok(())
 }
 
 /// Exposed for the cache-key property tests.

@@ -14,9 +14,10 @@
 //! paper-vs-measured record.
 
 pub mod analysis;
-pub mod coordinator;
 pub mod collectives;
+pub mod comm;
 pub mod compress;
+pub mod coordinator;
 pub mod data;
 pub mod evalloss;
 pub mod experiments;

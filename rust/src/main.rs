@@ -15,6 +15,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
+use muloco::comm::TopologySpec;
 use muloco::compress::Compression;
 use muloco::coordinator::{train, Method, TrainConfig};
 use muloco::experiments;
@@ -72,6 +73,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.outer_momentum = args.get_parse("outer-momentum", cfg.outer_momentum)?;
     cfg.streaming_partitions =
         args.get_parse("streaming", cfg.streaming_partitions)?;
+    if let Some(spec) = args.get("topology") {
+        cfg.topology = TopologySpec::parse(spec)?;
+    }
+    cfg.overlap_tau = args.get_parse("tau", cfg.overlap_tau)?;
     cfg.eval_every = args.get_parse("eval-every", cfg.eval_every)?;
     cfg.eval_batches = args.get_parse("eval-batches", cfg.eval_batches)?;
     cfg.seed = args.get_parse("seed", cfg.seed)?;
@@ -120,9 +125,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| "all".to_string());
     let preset = args.get_or("preset", "fast");
+    let jobs: usize = args.get_parse("jobs", 1)?;
     let artifacts = artifacts_dir(args);
     args.finish()?;
-    experiments::run(&id, &preset, &artifacts)
+    experiments::run(&id, &preset, &artifacts, jobs)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -149,8 +155,10 @@ USAGE:
                [--lr F] [--wd F] [--outer-lr F] [--outer-momentum F]
                [--compression none|q<bits>-<linear|stat>[-rw]|topk<frac>]
                [--ef] [--streaming J] [--seed S] [--label L]
+               [--topology flat|ring|hier:<G>]  # collective topology
+               [--tau T]        # overlapped sync: apply reduce T steps late
                [--sequential]   # disable the parallel worker pool
-  muloco experiment <id|all> [--preset fast|full]
+  muloco experiment <id|all> [--preset fast|full] [--jobs N]
   muloco info --model M
   muloco list
 ";

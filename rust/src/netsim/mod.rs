@@ -7,15 +7,22 @@
 //! that methodology exactly, parameterizing the compute/optimizer terms
 //! with timings measured on this host's PJRT runs (`ExecStats`).
 //!
-//! Communication volumes:
+//! Communication time is derived from a [`CommTrace`] — the per-hop
+//! byte record produced by the same `comm::Topology` plans the
+//! simulated collectives charge bytes with — instead of a parallel set
+//! of closed-form formulas.  A hop costs its per-worker bytes over its
+//! link's bandwidth; hops are sequential, senders within a hop
+//! concurrent.  The pre-refactor analytic values are recovered exactly
+//! for the flat setups (`trace_matches_closed_form` below):
+//!
 //! * DP (AdamW/Muon): ring all-reduce of gradients every step —
 //!   per-worker volume 2*(K-1)/K * bytes.
-//! * DiLoCo/MuLoCo: pseudogradient exchange every H steps.  Uncompressed
-//!   uses a ring all-reduce; compressed uses the paper's all-to-all
-//!   reduce-scatter + ring all-gather (same aggregate volume, two
-//!   quantization hops — see `collectives`).
+//! * DiLoCo/MuLoCo: pseudogradient exchange every H steps; compressed
+//!   setups move the compressed wire bytes through the same hop shape.
 //! * Streaming partitions divide *peak* bandwidth by J but keep the
-//!   total volume unchanged.
+//!   total volume unchanged (now measured: `CommStats::peak_event_bytes`).
+
+use crate::comm::{CommTrace, LinkBandwidth, OpShape, Ring, Topology};
 
 /// Gigabit (decimal) per second in bytes/sec.
 pub const GBIT: f64 = 1e9 / 8.0;
@@ -38,15 +45,16 @@ pub struct SystemProfile {
     pub optimizer_secs_per_step: f64,
     /// parameter bytes (fp32)
     pub param_bytes: f64,
-    /// bytes actually put on the wire per sync per worker
-    /// (compressed pseudogradient, or gradient bytes for DP)
-    pub wire_bytes_per_sync: f64,
-    pub workers: usize,
+    /// hop trace of one synchronization event, produced by the same
+    /// `Topology::plan` the simulated collectives use
+    pub sync_trace: CommTrace,
     pub pattern: CommPattern,
 }
 
 impl SystemProfile {
-    /// Ring all-reduce per-worker volume for n bytes across K workers.
+    /// Pre-refactor closed form for a flat ring's per-worker volume,
+    /// kept as the reference the trace-derived numbers are regression-
+    /// tested against.
     pub fn ring_allreduce_bytes(n: f64, k: usize) -> f64 {
         if k <= 1 {
             0.0
@@ -55,17 +63,81 @@ impl SystemProfile {
         }
     }
 
-    /// Communication seconds per *training step* at `bw` bytes/sec.
-    pub fn comm_secs_per_step(&self, bw: f64) -> f64 {
-        if self.workers <= 1 && matches!(self.pattern, CommPattern::EveryStep) {
-            return 0.0;
+    /// Flat single-tier profile (the pre-refactor default): `wire`
+    /// bytes per sync across `workers` on a ring / all-to-all hop
+    /// shape.  A single-worker DP setup moves nothing; K=1 local-update
+    /// setups are modeled as a K=2 ring per the paper's accounting.
+    pub fn flat(
+        compute_secs_per_step: f64,
+        optimizer_secs_per_step: f64,
+        param_bytes: f64,
+        wire_bytes_per_sync: f64,
+        workers: usize,
+        pattern: CommPattern,
+    ) -> SystemProfile {
+        let sync_trace =
+            if workers <= 1 && matches!(pattern, CommPattern::EveryStep) {
+                CommTrace::default()
+            } else {
+                Ring.plan(
+                    workers.max(2),
+                    OpShape::ReduceScatterGather,
+                    wire_bytes_per_sync as usize,
+                    param_bytes as usize,
+                )
+            };
+        SystemProfile {
+            compute_secs_per_step,
+            optimizer_secs_per_step,
+            param_bytes,
+            sync_trace,
+            pattern,
         }
-        let per_sync =
-            Self::ring_allreduce_bytes(self.wire_bytes_per_sync, self.workers.max(2));
+    }
+
+    /// Profile over an explicit topology (e.g. the hierarchical
+    /// two-level multi-datacenter plan).
+    pub fn with_topology(
+        compute_secs_per_step: f64,
+        optimizer_secs_per_step: f64,
+        param_bytes: f64,
+        wire_bytes_per_sync: f64,
+        workers: usize,
+        pattern: CommPattern,
+        topo: &dyn Topology,
+    ) -> SystemProfile {
+        let sync_trace = topo.plan(
+            workers.max(2),
+            OpShape::ReduceScatterGather,
+            wire_bytes_per_sync as usize,
+            param_bytes as usize,
+        );
+        SystemProfile {
+            compute_secs_per_step,
+            optimizer_secs_per_step,
+            param_bytes,
+            sync_trace,
+            pattern,
+        }
+    }
+
+    /// Communication seconds of one sync event at per-link bandwidths.
+    pub fn comm_secs_per_sync(&self, bw: LinkBandwidth) -> f64 {
+        self.sync_trace.secs(&bw)
+    }
+
+    /// Communication seconds per *training step*, per-link bandwidths.
+    pub fn comm_secs_per_step_linked(&self, bw: LinkBandwidth) -> f64 {
+        let per_sync = self.comm_secs_per_sync(bw);
         match self.pattern {
-            CommPattern::EveryStep => per_sync / bw,
-            CommPattern::EveryH { h } => per_sync / bw / h as f64,
+            CommPattern::EveryStep => per_sync,
+            CommPattern::EveryH { h } => per_sync / h as f64,
         }
+    }
+
+    /// Communication seconds per training step at a flat `bw` bytes/sec.
+    pub fn comm_secs_per_step(&self, bw: f64) -> f64 {
+        self.comm_secs_per_step_linked(LinkBandwidth::flat(bw))
     }
 
     /// Total seconds per training step.
@@ -82,11 +154,17 @@ impl SystemProfile {
 
     /// Fraction of time doing useful compute (Fig 16).
     pub fn utilization(&self, bw: f64) -> f64 {
-        let c = self.compute_secs_per_step + self.optimizer_secs_per_step;
-        c / (c + self.comm_secs_per_step(bw))
+        self.utilization_linked(LinkBandwidth::flat(bw))
     }
 
-    /// Smallest bandwidth achieving `target` utilization (bisection).
+    /// Utilization with distinct intra/inter-DC bandwidths.
+    pub fn utilization_linked(&self, bw: LinkBandwidth) -> f64 {
+        let c = self.compute_secs_per_step + self.optimizer_secs_per_step;
+        c / (c + self.comm_secs_per_step_linked(bw))
+    }
+
+    /// Smallest flat bandwidth achieving `target` utilization
+    /// (bisection).
     pub fn bandwidth_for_utilization(&self, target: f64) -> f64 {
         let mut lo = 1e3f64;
         let mut hi = 1e15;
@@ -105,16 +183,10 @@ impl SystemProfile {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::Hierarchical;
 
     fn dp(k: usize) -> SystemProfile {
-        SystemProfile {
-            compute_secs_per_step: 1.0,
-            optimizer_secs_per_step: 0.01,
-            param_bytes: 4e9,
-            wire_bytes_per_sync: 4e9,
-            workers: k,
-            pattern: CommPattern::EveryStep,
-        }
+        SystemProfile::flat(1.0, 0.01, 4e9, 4e9, k, CommPattern::EveryStep)
     }
 
     #[test]
@@ -125,9 +197,28 @@ mod tests {
     }
 
     #[test]
+    fn trace_matches_closed_form() {
+        // the acceptance gate for the netsim refactor: trace-derived
+        // comm time equals the pre-refactor analytic formula
+        for k in [2usize, 4, 8, 16, 64] {
+            for wire in [4e9, 5e8, 1.7e7] {
+                let p = SystemProfile::flat(
+                    1.0, 0.01, 4e9, wire, k, CommPattern::EveryStep);
+                let bw = 10.0 * GBIT;
+                let got = p.comm_secs_per_step(bw);
+                let want = SystemProfile::ring_allreduce_bytes(wire, k) / bw;
+                assert!(
+                    (got - want).abs() <= 1e-6 * want,
+                    "K={k} wire={wire}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn diloco_amortizes_by_h() {
-        let mut p = dp(8);
-        p.pattern = CommPattern::EveryH { h: 30 };
+        let p = SystemProfile::flat(
+            1.0, 0.01, 4e9, 4e9, 8, CommPattern::EveryH { h: 30 });
         let dp_t = dp(8).comm_secs_per_step(10.0 * GBIT);
         let dl_t = p.comm_secs_per_step(10.0 * GBIT);
         assert!((dp_t / dl_t - 30.0).abs() < 1e-6);
@@ -166,9 +257,8 @@ mod tests {
         // the Fig 16 claim: DiLoCo + 4-bit needs ~100x less bandwidth
         // than DP fp32 for 99% utilization
         let dp_p = dp(8);
-        let mut dl = dp(8);
-        dl.pattern = CommPattern::EveryH { h: 30 };
-        dl.wire_bytes_per_sync = 4e9 / 8.0; // 4-bit
+        let dl = SystemProfile::flat(
+            1.0, 0.01, 4e9, 4e9 / 8.0, 8, CommPattern::EveryH { h: 30 });
         let bw_dp = dp_p.bandwidth_for_utilization(0.99);
         let bw_dl = dl.bandwidth_for_utilization(0.99);
         assert!(bw_dp / bw_dl > 100.0, "{}", bw_dp / bw_dl);
@@ -179,5 +269,28 @@ mod tests {
         let p = dp(1);
         assert_eq!(p.comm_secs_per_step(GBIT), 0.0);
         assert_eq!(p.utilization(GBIT), 1.0);
+    }
+
+    #[test]
+    fn hierarchical_profile_shifts_load_off_the_wan() {
+        let hier = Hierarchical::new(2);
+        let p = SystemProfile::with_topology(
+            1.0, 0.01, 4e9, 5e8, 8, CommPattern::EveryH { h: 30 }, &hier);
+        let flat = SystemProfile::flat(
+            1.0, 0.01, 4e9, 5e8, 8, CommPattern::EveryH { h: 30 });
+        // with a fast intra-DC fabric, a scarce WAN hurts the
+        // hierarchical plan less than the flat one
+        let bw = LinkBandwidth { inter: 0.5 * GBIT, intra: 400.0 * GBIT };
+        assert!(
+            p.comm_secs_per_step_linked(bw)
+                < flat.comm_secs_per_step_linked(bw)
+        );
+        // but the intra legs are not free: at flat bandwidth the
+        // hierarchical plan moves MORE bytes (fp32 member legs)
+        let flat_bw = LinkBandwidth::flat(0.5 * GBIT);
+        assert!(
+            p.comm_secs_per_step_linked(flat_bw)
+                > flat.comm_secs_per_step_linked(flat_bw)
+        );
     }
 }

@@ -1,0 +1,521 @@
+//! Property + regression tests for the `comm` subsystem refactor.
+//!
+//! * the retired `collectives` free functions (now shims over the
+//!   `CollectiveOp` pipeline) must reproduce the pre-refactor
+//!   implementations **bit-for-bit** — the originals are copied
+//!   verbatim below as references;
+//! * every `Topology` must reduce to the exact fp32 mean under
+//!   `NoCompression`, with all workers in exact agreement;
+//! * reported wire bytes must match `Compressor::wire_bytes`;
+//! * overlapped streaming sync with tau = 0 must be bit-identical to
+//!   the blocking path, tau > 0 must be deterministic (parallel ==
+//!   sequential) and must apply exactly tau steps late;
+//! * streaming must divide the measured *peak* per-event bytes by J
+//!   while keeping the total volume unchanged.
+
+use muloco::comm::{
+    AllToAll, CollectiveOp, CommStats, Hierarchical, OpKind, Ring, Topology,
+    TopologySpec,
+};
+use muloco::collectives::{
+    quantized_reduce_mean, ring_allreduce_mean,
+    ring_quantized_reduce_compounding, sparse_allgather_mean,
+};
+use muloco::compress::{
+    Compression, Compressor, ErrorFeedback, NoCompression, QuantMode,
+    Quantizer, TopK,
+};
+use muloco::coordinator::{
+    NesterovOuter, SyncEngine, SyncPlan, SyncTensorMeta, Worker,
+};
+use muloco::data::Corpus;
+use muloco::util::rng::Rng;
+
+fn worker_buffers(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..k)
+        .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+// ---- the pre-refactor free functions, verbatim (value semantics +
+// ---- per-worker byte accounting), as regression references ----------
+
+fn ref_ring_allreduce_mean(buffers: &mut [Vec<f32>]) -> usize {
+    let k = buffers.len();
+    let n = buffers[0].len();
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&mean);
+    }
+    if k > 1 { 2 * (k - 1) * 4 * n / k } else { 0 }
+}
+
+fn ref_quantized_reduce_mean(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> usize {
+    let k = buffers.len();
+    let n = buffers[0].len();
+    let mut wire = 0usize;
+    for b in buffers.iter_mut() {
+        wire = compressor.compress(b, rows, cols);
+    }
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    let _ = compressor.compress(&mut mean, rows, cols);
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&mean);
+    }
+    if k > 1 { 2 * (k - 1) * wire / k } else { 0 }
+}
+
+fn ref_sparse_allgather_mean(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> usize {
+    let k = buffers.len();
+    let n = buffers[0].len();
+    let mut wire = 0usize;
+    for b in buffers.iter_mut() {
+        wire = compressor.compress(b, rows, cols);
+    }
+    let mut mean = vec![0.0f32; n];
+    for b in buffers.iter() {
+        for (m, x) in mean.iter_mut().zip(b) {
+            *m += x;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&mean);
+    }
+    if k > 1 { (k - 1) * wire } else { 0 }
+}
+
+fn ref_ring_quantized_reduce_compounding(
+    buffers: &mut [Vec<f32>],
+    compressor: &dyn Compressor,
+    rows: usize,
+    cols: usize,
+) -> usize {
+    let k = buffers.len();
+    let mut acc = buffers[0].clone();
+    #[allow(unused_assignments)]
+    let mut wire = compressor.compress(&mut acc, rows, cols);
+    for b in buffers.iter().skip(1) {
+        let mut contrib = b.clone();
+        wire = compressor.compress(&mut contrib, rows, cols);
+        for (a, c) in acc.iter_mut().zip(&contrib) {
+            *a += c;
+        }
+        wire = compressor.compress(&mut acc, rows, cols);
+    }
+    let inv = 1.0 / k as f32;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+    let _ = compressor.compress(&mut acc, rows, cols);
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&acc);
+    }
+    if k > 1 { 2 * (k - 1) * wire / k } else { 0 }
+}
+
+#[test]
+fn shims_reproduce_pre_refactor_collectives_bit_for_bit() {
+    let compressors: Vec<Box<dyn Compressor>> = vec![
+        Box::new(NoCompression),
+        Box::new(Quantizer::new(4, QuantMode::Linear, false)),
+        Box::new(Quantizer::new(8, QuantMode::Linear, true)),
+        Box::new(Quantizer::new(2, QuantMode::Statistical, false)),
+    ];
+    for k in [1usize, 2, 4, 8, 16] {
+        for (seed, (rows, cols)) in [(1u64, (1usize, 256usize)), (2, (8, 32))] {
+            let base = worker_buffers(k, rows * cols, seed);
+
+            let mut got = base.clone();
+            let mut want = base.clone();
+            let s = ring_allreduce_mean(&mut got);
+            let w = ref_ring_allreduce_mean(&mut want);
+            assert_eq!(got, want, "dense K={k}");
+            assert_eq!(s.bytes_per_worker, w, "dense bytes K={k}");
+            assert_eq!(s.total_bytes, w * k, "dense total K={k}");
+
+            for c in &compressors {
+                let mut got = base.clone();
+                let mut want = base.clone();
+                let s = quantized_reduce_mean(&mut got, c.as_ref(), rows, cols);
+                let w = ref_quantized_reduce_mean(
+                    &mut want, c.as_ref(), rows, cols);
+                assert_eq!(got, want, "quant {} K={k}", c.name());
+                assert_eq!(s.bytes_per_worker, w, "quant bytes {}", c.name());
+
+                let mut got = base.clone();
+                let mut want = base.clone();
+                let s = ring_quantized_reduce_compounding(
+                    &mut got, c.as_ref(), rows, cols);
+                let w = ref_ring_quantized_reduce_compounding(
+                    &mut want, c.as_ref(), rows, cols);
+                assert_eq!(got, want, "ring-compound {} K={k}", c.name());
+                assert_eq!(s.bytes_per_worker, w, "ring bytes {}", c.name());
+            }
+
+            let topk = TopK::new(0.1);
+            let mut got = base.clone();
+            let mut want = base;
+            let s = sparse_allgather_mean(&mut got, &topk, rows, cols);
+            let w = ref_sparse_allgather_mean(&mut want, &topk, rows, cols);
+            assert_eq!(got, want, "sparse K={k}");
+            assert_eq!(s.bytes_per_worker, w, "sparse bytes K={k}");
+        }
+    }
+}
+
+#[test]
+fn every_topology_reduces_to_exact_mean_under_no_compression() {
+    let topologies: Vec<Box<dyn Topology>> = vec![
+        Box::new(Ring),
+        Box::new(AllToAll),
+        Box::new(Hierarchical::new(2)),
+        Box::new(Hierarchical::new(4)),
+        Box::new(Hierarchical::new(8)),
+    ];
+    let (k, n) = (8usize, 333usize);
+    let base = worker_buffers(k, n, 7);
+    let mut want = vec![0.0f64; n];
+    for b in &base {
+        for (w, x) in want.iter_mut().zip(b) {
+            *w += *x as f64 / k as f64;
+        }
+    }
+    for topo in &topologies {
+        for kind in [
+            OpKind::Dense,
+            OpKind::SparseGather { presparsified: false },
+        ] {
+            let op = CollectiveOp::new(&NoCompression, kind);
+            let mut bufs = base.clone();
+            let trace = topo.reduce_mean(&mut bufs, &op, 1, n);
+            for b in &bufs[1..] {
+                assert_eq!(b, &bufs[0], "{} disagreement", topo.name());
+            }
+            for (x, w) in bufs[0].iter().zip(&want) {
+                assert!(
+                    (*x as f64 - w).abs() < 1e-5,
+                    "{} {kind:?}: {x} vs {w}",
+                    topo.name()
+                );
+            }
+            assert!(trace.total_bytes() > 0, "{} moved no bytes", topo.name());
+        }
+    }
+}
+
+#[test]
+fn reported_wire_bytes_match_compressor_wire_bytes() {
+    let k = 8usize;
+    let (rows, cols) = (16usize, 16usize);
+    let n = rows * cols;
+
+    // two-quant on the flat all-to-all: 2(K-1)/K of one compressed tensor
+    for q in [
+        Quantizer::new(4, QuantMode::Linear, false),
+        Quantizer::new(8, QuantMode::Linear, true),
+        Quantizer::new(2, QuantMode::Statistical, false),
+    ] {
+        let mut bufs = worker_buffers(k, n, 11);
+        let op = CollectiveOp::new(&q, OpKind::TwoQuant);
+        let stats = AllToAll.reduce_mean(&mut bufs, &op, rows, cols).stats();
+        let wire = q.wire_bytes(n, rows);
+        assert_eq!(stats.bytes_per_worker, 2 * (k - 1) * wire / k, "{}",
+                   q.name());
+    }
+
+    // sparse gather: K-1 copies of one compressed tensor per worker
+    let t = TopK::new(0.1);
+    let wire = t.wire_bytes(n, rows);
+    let mut bufs = worker_buffers(k, n, 12);
+    let op = CollectiveOp::new(&t, OpKind::SparseGather { presparsified: false });
+    let stats = Ring.reduce_mean(&mut bufs, &op, rows, cols).stats();
+    assert_eq!(stats.bytes_per_worker, (k - 1) * wire);
+
+    // presparsified (error-feedback) path: values untouched, but the
+    // real compressor's wire bytes are still charged
+    let mut bufs = worker_buffers(k, n, 13);
+    let before = bufs.clone();
+    let op = CollectiveOp::new(&t, OpKind::SparseGather { presparsified: true });
+    let stats = Ring.reduce_mean(&mut bufs, &op, rows, cols).stats();
+    assert_eq!(stats.bytes_per_worker, (k - 1) * wire);
+    // the reduced value is the exact mean of the *unsparsified* inputs
+    let mut exact = before[0].clone();
+    for b in &before[1..] {
+        for (e, x) in exact.iter_mut().zip(b) {
+            *e += x;
+        }
+    }
+    for e in exact.iter_mut() {
+        *e *= 1.0 / k as f32;
+    }
+    for (x, w) in bufs[0].iter().zip(&exact) {
+        assert!((x - w).abs() < 1e-6);
+    }
+}
+
+// ---- engine-level harness (mirrors tests/parallel_determinism.rs) ---
+
+fn metas() -> Vec<SyncTensorMeta> {
+    vec![
+        SyncTensorMeta::from_shape(&[8, 16], 128),
+        SyncTensorMeta::from_shape(&[64], 64),
+        SyncTensorMeta::from_shape(&[16, 4], 64),
+        SyncTensorMeta::from_shape(&[32], 32),
+        SyncTensorMeta::from_shape(&[96], 96),
+    ]
+}
+
+fn rand_theta(rng: &mut Rng, metas: &[SyncTensorMeta]) -> Vec<Vec<f32>> {
+    metas
+        .iter()
+        .map(|m| (0..m.size).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build<'c>(
+    corpus: &'c Corpus,
+    k: usize,
+    compression: Compression,
+    ef: bool,
+    j_parts: usize,
+    h: u64,
+    topology: TopologySpec,
+    tau: u64,
+) -> (SyncEngine, Vec<Vec<f32>>, Vec<Worker<'c>>) {
+    let metas = metas();
+    let mut rng = Rng::new(99);
+    let theta = rand_theta(&mut rng, &metas);
+    let workers: Vec<Worker<'c>> = (0..k)
+        .map(|w| {
+            let params: Vec<Vec<f32>> = theta
+                .iter()
+                .map(|t| t.iter().map(|x| x + 0.01 * rng.normal_f32()).collect())
+                .collect();
+            Worker::new(params, Vec::new(), corpus.shard(w as u64),
+                        ErrorFeedback::new(metas.len(), 0.9))
+        })
+        .collect();
+    let sizes: Vec<usize> = metas.iter().map(|m| m.size).collect();
+    let outer = NesterovOuter::new(0.7, 0.9, &sizes);
+    let plan = if j_parts <= 1 {
+        SyncPlan::dense(h, metas.len())
+    } else {
+        let parts = vec![0usize, 1, 1, 2, 2];
+        SyncPlan::streaming(h, j_parts, &parts, 3)
+    };
+    let engine = SyncEngine::from_parts(plan, metas, outer, compression, ef)
+        .with_topology(topology)
+        .with_overlap(tau);
+    (engine, theta, workers)
+}
+
+fn drift(workers: &mut [Worker<'_>], round: u64) {
+    for (w, worker) in workers.iter_mut().enumerate() {
+        let mut rng = Rng::new(round * 1000 + w as u64);
+        for t in worker.params.iter_mut() {
+            for x in t.iter_mut() {
+                *x += 0.02 * rng.normal_f32();
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_rounds(
+    corpus: &Corpus,
+    compression: Compression,
+    ef: bool,
+    j_parts: usize,
+    topology: TopologySpec,
+    tau: u64,
+    parallel: bool,
+) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>, CommStats) {
+    let h = if j_parts <= 1 { 4 } else { 8 };
+    let (mut engine, mut theta, mut workers) =
+        build(corpus, 4, compression, ef, j_parts, h, topology, tau);
+    let mut comm = CommStats::default();
+    for step in 1..=3 * h {
+        drift(&mut workers, step);
+        engine.sync_step(step, &mut theta, &mut workers, &mut comm, parallel);
+    }
+    engine.flush(&mut theta, &mut workers, &mut comm);
+    let params = workers.iter().map(|w| w.params.clone()).collect();
+    (theta, params, comm)
+}
+
+#[test]
+fn overlap_tau_zero_is_bit_identical_to_blocking() {
+    let corpus = Corpus::new(64, 3);
+    for (compression, ef) in [
+        (Compression::None, false),
+        (Compression::Quant { bits: 4, mode: QuantMode::Linear, rowwise: false },
+         true),
+        (Compression::TopK { frac: 0.25 }, true),
+    ] {
+        for parallel in [false, true] {
+            // tau = 0 takes the blocking code path; an engine built
+            // without with_overlap is the blocking reference
+            let blocking = {
+                let h = 4;
+                let (mut engine, mut theta, mut workers) = build(
+                    &corpus, 4, compression.clone(), ef, 1, h,
+                    TopologySpec::Flat, 0);
+                let mut comm = CommStats::default();
+                for step in 1..=3 * h {
+                    drift(&mut workers, step);
+                    engine.sync_step(step, &mut theta, &mut workers, &mut comm,
+                                     parallel);
+                }
+                let params: Vec<Vec<Vec<f32>>> =
+                    workers.iter().map(|w| w.params.clone()).collect();
+                (theta, params, comm)
+            };
+            let tau0 = run_rounds(&corpus, compression.clone(), ef, 1,
+                                  TopologySpec::Flat, 0, parallel);
+            assert_eq!(blocking.0, tau0.0, "{compression:?} theta");
+            assert_eq!(blocking.1, tau0.1, "{compression:?} workers");
+            assert_eq!(blocking.2, tau0.2, "{compression:?} comm");
+        }
+    }
+}
+
+#[test]
+fn overlapped_sync_is_deterministic_across_thread_modes() {
+    let corpus = Corpus::new(64, 3);
+    for (compression, ef) in [
+        (Compression::None, false),
+        (Compression::Quant { bits: 8, mode: QuantMode::Linear, rowwise: true },
+         true),
+        (Compression::TopK { frac: 0.25 }, false),
+    ] {
+        for j_parts in [1usize, 2] {
+            for tau in [0u64, 1, 3] {
+                for topology in [TopologySpec::Flat, TopologySpec::Hier { groups: 2 }]
+                {
+                    let seq = run_rounds(&corpus, compression.clone(), ef,
+                                         j_parts, topology, tau, false);
+                    let par = run_rounds(&corpus, compression.clone(), ef,
+                                         j_parts, topology, tau, true);
+                    let tag = format!(
+                        "{compression:?} ef={ef} J={j_parts} tau={tau} \
+                         topo={topology:?}"
+                    );
+                    assert_eq!(seq.0, par.0, "theta diverged: {tag}");
+                    assert_eq!(seq.1, par.1, "workers diverged: {tag}");
+                    assert_eq!(seq.2, par.2, "comm diverged: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_sync_applies_exactly_tau_steps_late() {
+    let corpus = Corpus::new(64, 5);
+    let (mut engine, mut theta, mut workers) = build(
+        &corpus, 4, Compression::None, false, 1, 4, TopologySpec::Flat, 2);
+    let before = theta.clone();
+    let mut comm = CommStats::default();
+    // boundary at step 4 launches the collective; theta stays fixed
+    // until the result applies at step 6
+    for step in 1..=5 {
+        drift(&mut workers, step);
+        engine.sync_step(step, &mut theta, &mut workers, &mut comm, true);
+        assert_eq!(theta, before, "theta moved early at step {step}");
+        assert_eq!(comm.bytes_per_worker, 0, "bytes charged early");
+    }
+    drift(&mut workers, 6);
+    engine.sync_step(6, &mut theta, &mut workers, &mut comm, true);
+    assert_ne!(theta, before, "overlapped boundary never applied");
+    assert!(comm.bytes_per_worker > 0);
+    // the apply also re-broadcast: every worker agrees with theta
+    for w in &workers {
+        assert_eq!(w.params, theta);
+    }
+}
+
+#[test]
+fn streaming_divides_measured_peak_event_bytes_by_j() {
+    // six equal tensors across three partitions: J=3 streaming must
+    // show exactly 1/3 of the dense per-event peak at equal total
+    let metas: Vec<SyncTensorMeta> = (0..6)
+        .map(|_| SyncTensorMeta::from_shape(&[64], 64))
+        .collect();
+    let corpus = Corpus::new(64, 9);
+    let run = |j_parts: usize| -> CommStats {
+        let mut rng = Rng::new(42);
+        let theta_init = rand_theta(&mut rng, &metas);
+        let mut theta = theta_init.clone();
+        let mut workers: Vec<Worker<'_>> = (0..4)
+            .map(|w| {
+                let params: Vec<Vec<f32>> = theta_init
+                    .iter()
+                    .map(|t| {
+                        t.iter().map(|x| x + 0.01 * rng.normal_f32()).collect()
+                    })
+                    .collect();
+                Worker::new(params, Vec::new(), corpus.shard(w as u64),
+                            ErrorFeedback::new(metas.len(), 0.9))
+            })
+            .collect();
+        let sizes: Vec<usize> = metas.iter().map(|m| m.size).collect();
+        let outer = NesterovOuter::new(0.7, 0.9, &sizes);
+        let h = 6;
+        let plan = if j_parts <= 1 {
+            SyncPlan::dense(h, metas.len())
+        } else {
+            let parts = vec![0usize, 0, 1, 1, 2, 2];
+            SyncPlan::streaming(h, j_parts, &parts, 3)
+        };
+        let mut engine = SyncEngine::from_parts(
+            plan, metas.clone(), outer, Compression::None, false);
+        let mut comm = CommStats::default();
+        for step in 1..=2 * h {
+            drift(&mut workers, step);
+            engine.sync_step(step, &mut theta, &mut workers, &mut comm, true);
+        }
+        comm
+    };
+    let dense = run(1);
+    let streamed = run(3);
+    assert_eq!(dense.total_bytes, streamed.total_bytes,
+               "streaming changed total volume");
+    assert_eq!(dense.bytes_per_worker, streamed.bytes_per_worker);
+    assert_eq!(dense.peak_event_bytes, 3 * streamed.peak_event_bytes,
+               "dense {} vs streamed {}", dense.peak_event_bytes,
+               streamed.peak_event_bytes);
+}

@@ -217,6 +217,15 @@ fn prop_cache_keys_distinguish_configs() {
     let mut v = base.clone();
     v.streaming_partitions = 3;
     variants.push(v);
+    let mut v = base.clone();
+    v.topology = muloco::comm::TopologySpec::Hier { groups: 2 };
+    variants.push(v);
+    let mut v = base.clone();
+    v.topology = muloco::comm::TopologySpec::Ring;
+    variants.push(v);
+    let mut v = base.clone();
+    v.overlap_tau = 2;
+    variants.push(v);
     let base_key = key(&base);
     let mut all: Vec<String> = variants.iter().map(key).collect();
     all.push(base_key);
