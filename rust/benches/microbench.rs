@@ -5,10 +5,14 @@
 //! * L3 hot-path microbenches: quantizers, top-k, error feedback,
 //!   collectives, outer step, SVD, dot/cosine — the components on the
 //!   coordinator's synchronization path.
-//! * end-to-end PJRT benches (one per paper-table workload) when
-//!   artifacts are present: fwd_grad / apply_muon / apply_adamw per
-//!   config, plus a full MuLoCo round — the Table 9 generator's
-//!   underlying measurements.
+//! * native GEMM benches: the cache-blocked lane-parallel `sgemm`
+//!   against the naive triple-loop reference (the acceptance bar:
+//!   >= 3x at d_model >= 256 on a multi-core host).
+//! * end-to-end runtime benches (one per paper-table workload):
+//!   fwd_grad / apply_muon / apply_adamw per config, plus a full MuLoCo
+//!   round — the Table 9 generator's underlying measurements.  These
+//!   run on whichever backend `Session::load` selects (native on the
+//!   default build; PJRT when artifacts + feature are present).
 
 use std::time::Instant;
 
@@ -18,6 +22,8 @@ use muloco::comm::{AllToAll, CollectiveOp, Hierarchical, OpKind, Ring,
                    Topology};
 use muloco::compress::{Compressor, ErrorFeedback, QuantMode, Quantizer, TopK};
 use muloco::coordinator::{train, Method, NesterovOuter, TrainConfig};
+use muloco::runtime::native::gemm::time_blocked_vs_naive;
+use muloco::runtime::native::muon::newton_schulz_group;
 use muloco::runtime::Session;
 use muloco::util::rng::Rng;
 
@@ -149,15 +155,39 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    // === end-to-end PJRT benches (paper Table 9 measurements) ========
-    let dir = std::path::PathBuf::from("artifacts/nano");
-    if !dir.join("manifest.json").exists() {
-        println!("\n(artifacts missing — skipping PJRT end-to-end benches; \
-                  run `make artifacts`)");
-        return Ok(());
+    // === native GEMM: blocked lane-parallel vs naive reference =======
+    // (same measurement as `muloco bench` / BENCH_native.json —
+    //  gemm::time_blocked_vs_naive is the single definition)
+    println!("\n== native GEMM (blocked vs naive triple-loop) ==");
+    for d in [64usize, 128, 256, 512] {
+        let (blocked, naive) = time_blocked_vs_naive(d, if d >= 512 { 3 } else { 5 });
+        let gflops = 2.0 * (d * d * d) as f64 / blocked / 1e9;
+        println!(
+            "sgemm {d:>3}^3: blocked {:>9.1} us ({gflops:>6.2} GFLOP/s)  \
+             naive {:>10.1} us  speedup {:>5.1}x",
+            blocked * 1e6,
+            naive * 1e6,
+            naive / blocked
+        );
     }
-    println!("\n== end-to-end PJRT benches (nano) ==");
+    {
+        // batched Newton-Schulz over an 8-matrix 128x128 group (the
+        // Muon orthogonalization hot-spot at `med` scale)
+        let (r, cdim, nb) = (128usize, 128usize, 8usize);
+        let base: Vec<Vec<f32>> = (0..nb)
+            .map(|_| (0..r * cdim).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut work = base.clone();
+        bench("newton-schulz5 batched 8x128x128", 0, || {
+            work.clone_from(&base);
+            newton_schulz_group(&mut work, r, cdim, 5);
+        });
+    }
+
+    // === end-to-end runtime benches (paper Table 9 measurements) =====
+    let dir = std::path::PathBuf::from("artifacts/nano");
     let sess = Session::load(&dir)?;
+    println!("\n== end-to-end runtime benches (nano, {}) ==", sess.platform());
     let cfg_m = &sess.manifest.config;
     let params = sess.init_params(0)?;
     let tokens: Vec<i32> = (0..cfg_m.microbatch * cfg_m.seq_len)

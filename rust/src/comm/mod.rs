@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 pub use collective::{CollectiveOp, OpKind};
 pub use topology::{AllToAll, Hierarchical, OpShape, Ring, Topology};
-pub use trace::{CommStats, CommTrace, Hop, LinkBandwidth, LinkClass};
+pub use trace::{CommStats, CommTrace, Hop, LinkBandwidth, LinkClass, LinkLatency};
 
 /// Config/CLI-level topology choice.  `Flat` preserves the
 /// pre-refactor per-op defaults (ring for dense/sparse, all-to-all for

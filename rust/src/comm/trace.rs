@@ -52,6 +52,32 @@ impl LinkBandwidth {
     }
 }
 
+/// Per-hop latency per link class, seconds.  Every synchronous hop pays
+/// its link's constant once, independent of payload — the term that
+/// dominates small-tensor collectives (a WAN round trip costs the same
+/// for 64 floats as for 64 MB).  `ZERO` recovers the bandwidth-only
+/// pre-latency model exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkLatency {
+    pub inter: f64,
+    pub intra: f64,
+}
+
+impl LinkLatency {
+    pub const ZERO: LinkLatency = LinkLatency { inter: 0.0, intra: 0.0 };
+
+    pub fn flat(lat: f64) -> LinkLatency {
+        LinkLatency { inter: lat, intra: lat }
+    }
+
+    pub fn of(&self, link: LinkClass) -> f64 {
+        match link {
+            LinkClass::Intra => self.intra,
+            LinkClass::Inter => self.inter,
+        }
+    }
+}
+
 /// Hop-by-hop record of one collective (or one sync event, when
 /// several collectives are merged).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -88,14 +114,25 @@ impl CommTrace {
         self.hops.iter().map(|h| h.bytes_per_worker).max().unwrap_or(0)
     }
 
-    /// Wall-clock seconds to move this trace: hops are sequential,
-    /// senders within a hop are concurrent, so each hop costs its
-    /// per-worker bytes over its link's bandwidth.
+    /// Wall-clock seconds to move this trace at zero per-hop latency:
+    /// hops are sequential, senders within a hop are concurrent, so
+    /// each hop costs its per-worker bytes over its link's bandwidth.
     pub fn secs(&self, bw: &LinkBandwidth) -> f64 {
+        self.secs_with_latency(bw, &LinkLatency::ZERO)
+    }
+
+    /// Wall-clock seconds with a per-hop latency constant per link
+    /// class: each hop costs `latency(link) + bytes / bandwidth(link)`.
+    pub fn secs_with_latency(&self, bw: &LinkBandwidth, lat: &LinkLatency) -> f64 {
         self.hops
             .iter()
-            .map(|h| h.bytes_per_worker as f64 / bw.of(h.link))
+            .map(|h| lat.of(h.link) + h.bytes_per_worker as f64 / bw.of(h.link))
             .sum()
+    }
+
+    /// Number of synchronous hops (each pays its link's latency once).
+    pub fn n_hops(&self) -> usize {
+        self.hops.len()
     }
 
     /// Bytes crossing a given link class, per busiest endpoint.
@@ -202,6 +239,18 @@ mod tests {
         // flat bandwidth reduces to total per-worker bytes / bw
         let flat = t.secs(&LinkBandwidth::flat(10.0));
         assert!((flat - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_adds_one_constant_per_hop() {
+        let t = trace(); // 1 intra hop + 2 inter hops
+        assert_eq!(t.n_hops(), 3);
+        let bw = LinkBandwidth { inter: 10.0, intra: 100.0 };
+        let lat = LinkLatency { inter: 2.0, intra: 0.5 };
+        let got = t.secs_with_latency(&bw, &lat);
+        assert!((got - (t.secs(&bw) + 0.5 + 2.0 + 2.0)).abs() < 1e-12);
+        // ZERO latency recovers the bandwidth-only model bit-for-bit
+        assert_eq!(t.secs_with_latency(&bw, &LinkLatency::ZERO), t.secs(&bw));
     }
 
     #[test]

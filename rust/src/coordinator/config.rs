@@ -106,6 +106,10 @@ pub struct TrainConfig {
     pub ef_beta: f32,
     /// streaming partitions J (1 = classic DiLoCo; 3 = paper's setting)
     pub streaming_partitions: usize,
+    /// Muon Newton-Schulz iteration count (paper: 5).  0 degrades Muon
+    /// to normalized momentum SGD on the hidden matrices; values other
+    /// than 5 need the native backend (the AOT executable bakes 5 in)
+    pub ns_iters: usize,
     /// communication topology for the pseudogradient collectives
     /// (flat = the pre-refactor per-op defaults)
     pub topology: TopologySpec,
@@ -152,6 +156,7 @@ impl TrainConfig {
             error_feedback: false,
             ef_beta: 0.9,
             streaming_partitions: 1,
+            ns_iters: crate::runtime::NS_STEPS,
             topology: TopologySpec::Flat,
             overlap_tau: 0,
             eval_every: 30,

@@ -22,7 +22,7 @@ use anyhow::{bail, Result};
 
 use super::config::TrainConfig;
 use super::sync::SyncEngine;
-use super::worker::{inner_for, WorkerPool};
+use super::worker::{inner_with, WorkerPool};
 use crate::comm::CommStats;
 use crate::data::Corpus;
 use crate::evalloss::Smoother;
@@ -131,8 +131,9 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
 
     // global replica + the K-worker pool + the sync engine
     let mut theta = sess.init_params(cfg.seed as u32)?;
-    let inner = inner_for(cfg.method);
-    let mut pool = WorkerPool::new(sess, &corpus, inner, k, cfg.ef_beta, &theta);
+    let inner = inner_with(cfg.method, cfg.ns_iters);
+    let mut pool =
+        WorkerPool::new(sess, &corpus, inner.as_ref(), k, cfg.ef_beta, &theta);
     let mut engine = SyncEngine::for_run(man, cfg);
 
     // the whole loop runs with K persistent executor threads attached

@@ -19,5 +19,5 @@ pub use diloco::{accumulate_grads, evaluate, train, RunResult};
 pub use outer::NesterovOuter;
 pub use probe::{branch_capture, dp_warmstart, BranchCapture, Checkpoint};
 pub use sync::{SyncEngine, SyncPlan, SyncTensorMeta};
-pub use worker::{inner_for, AdamWInner, InnerOptimizer, MuonInner, Worker,
+pub use worker::{inner_with, AdamWInner, InnerOptimizer, MuonInner, Worker,
                  WorkerPool};

@@ -84,8 +84,12 @@ impl InnerOptimizer for AdamWInner {
 
 /// Muon inner optimizer (MuLoCo / DP-Muon): Newton–Schulz
 /// orthogonalized momentum on hidden matrices, AdamW elsewhere
-/// (routing is baked into the apply_muon executable).
-pub struct MuonInner;
+/// (routing comes from the manifest).  `ns_iters` is the Newton-Schulz
+/// iteration count (`TrainConfig::ns_iters` / CLI `--ns-iters`); the
+/// native backend honors any count, PJRT only the baked-in default.
+pub struct MuonInner {
+    pub ns_iters: usize,
+}
 
 impl InnerOptimizer for MuonInner {
     fn name(&self) -> &'static str {
@@ -106,17 +110,19 @@ impl InnerOptimizer for MuonInner {
         lr: f32,
         wd: f32,
     ) -> Result<(Tensors, Tensors)> {
-        sess.apply_muon(params, state, grads, t, lr, wd)
+        sess.apply_muon_ns(params, state, grads, t, lr, wd, self.ns_iters)
     }
 }
 
-/// Inner-optimizer dispatch from the configured method.  The impls are
-/// zero-sized, so a `&'static` works for every worker thread.
-pub fn inner_for(method: Method) -> &'static dyn InnerOptimizer {
+/// Inner-optimizer dispatch from the configured method.  `ns_iters` is
+/// the Muon Newton-Schulz depth (`NS_STEPS` for the paper's setting;
+/// ignored by AdamW methods) — the single dispatch point, so every
+/// caller (train loop, probes) agrees on the optimizer's knobs.
+pub fn inner_with(method: Method, ns_iters: usize) -> Box<dyn InnerOptimizer> {
     if method.uses_muon() {
-        &MuonInner
+        Box::new(MuonInner { ns_iters })
     } else {
-        &AdamWInner
+        Box::new(AdamWInner)
     }
 }
 
@@ -356,9 +362,10 @@ mod tests {
 
     #[test]
     fn dispatch_selects_the_configured_inner_optimizer() {
-        assert_eq!(inner_for(Method::DpAdamw).name(), "adamw");
-        assert_eq!(inner_for(Method::Diloco).name(), "adamw");
-        assert_eq!(inner_for(Method::DpMuon).name(), "muon");
-        assert_eq!(inner_for(Method::Muloco).name(), "muon");
+        use crate::runtime::NS_STEPS;
+        assert_eq!(inner_with(Method::DpAdamw, NS_STEPS).name(), "adamw");
+        assert_eq!(inner_with(Method::Diloco, NS_STEPS).name(), "adamw");
+        assert_eq!(inner_with(Method::DpMuon, NS_STEPS).name(), "muon");
+        assert_eq!(inner_with(Method::Muloco, 0).name(), "muon");
     }
 }

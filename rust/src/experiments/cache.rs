@@ -125,7 +125,23 @@ pub fn config_key(cfg: &TrainConfig) -> String {
     if cfg.overlap_tau > 0 {
         key.push_str(&format!("|tau{}", cfg.overlap_tau));
     }
+    if cfg.ns_iters != crate::runtime::NS_STEPS {
+        key.push_str(&format!("|ns{}", cfg.ns_iters));
+    }
     key
+}
+
+/// Backend disambiguator appended to the config key: the PJRT CPU
+/// backend keeps its historical bare keys, every other backend
+/// (native-cpu) is suffixed — the two produce different numbers
+/// (different init RNGs, different accumulation order), so their runs
+/// must never share a cache entry.
+fn backend_suffix(platform: &str) -> String {
+    if platform == "cpu" {
+        String::new()
+    } else {
+        format!("|bk-{platform}")
+    }
 }
 
 pub struct RunCache {
@@ -148,8 +164,8 @@ impl RunCache {
         self.dir.join(format!("{h:016x}.json"))
     }
 
-    pub fn get(&self, cfg: &TrainConfig) -> Option<RunSummary> {
-        let key = config_key(cfg);
+    pub fn get(&self, cfg: &TrainConfig, platform: &str) -> Option<RunSummary> {
+        let key = config_key(cfg) + &backend_suffix(platform);
         let path = self.path_for(&key);
         let text = fs::read_to_string(path).ok()?;
         let v = Json::parse(&text).ok()?;
@@ -159,8 +175,9 @@ impl RunCache {
         RunSummary::from_json(v.get("run").ok()?).ok()
     }
 
-    pub fn put(&self, cfg: &TrainConfig, run: &RunSummary) -> Result<()> {
-        let key = config_key(cfg);
+    pub fn put(&self, cfg: &TrainConfig, platform: &str, run: &RunSummary)
+               -> Result<()> {
+        let key = config_key(cfg) + &backend_suffix(platform);
         let mut m = BTreeMap::new();
         m.insert("key".into(), Json::Str(key.clone()));
         m.insert("run".into(), run.to_json());
@@ -179,15 +196,19 @@ impl RunCache {
         Ok(())
     }
 
-    /// Train (or fetch) a run.
+    /// Train (or fetch) a run.  The cache key includes the session's
+    /// backend, so native and PJRT results never masquerade for each
+    /// other.
     pub fn run(&self, sess: &Session, cfg: &TrainConfig) -> Result<RunSummary> {
-        if let Some(hit) = self.get(cfg) {
+        let platform = sess.platform();
+        if let Some(hit) = self.get(cfg, &platform) {
             return Ok(hit);
         }
-        eprintln!("[cache] training {}", config_key(cfg));
+        eprintln!("[cache] training {}{}", config_key(cfg),
+                  backend_suffix(&platform));
         let result = train(sess, cfg)?;
         let summary = RunSummary::from_result(&result);
-        self.put(cfg, &summary)?;
+        self.put(cfg, &platform, &summary)?;
         Ok(summary)
     }
 }

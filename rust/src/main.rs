@@ -3,15 +3,19 @@
 //! Subcommands:
 //!   train       run one training job (method/model/K/H/compression...)
 //!   experiment  regenerate a paper table/figure (or `all`)
+//!   bench       time the runtime kernels + a short train; emit
+//!               BENCH_native.json (the perf trajectory record)
 //!   info        print a config's manifest summary
 //!   list        list available experiments
 //!
 //! Examples:
 //!   muloco train --model nano --method muloco --workers 8 --steps 240
 //!   muloco experiment fig1a --preset fast
-//!   muloco experiment all
+//!   muloco bench --model nano
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -20,8 +24,11 @@ use muloco::compress::Compression;
 use muloco::coordinator::{train, Method, TrainConfig};
 use muloco::experiments;
 use muloco::metrics::RunLogger;
+use muloco::runtime::native::gemm::time_blocked_vs_naive;
 use muloco::runtime::Session;
 use muloco::util::cli::Args;
+use muloco::util::json::Json;
+use muloco::util::median_secs;
 
 const BOOL_FLAGS: &[&str] = &["ef", "quiet", "sequential"];
 
@@ -39,6 +46,7 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "experiment" => cmd_experiment(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(&args),
         "list" => {
             for (id, desc) in experiments::registry_names() {
@@ -73,6 +81,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.outer_momentum = args.get_parse("outer-momentum", cfg.outer_momentum)?;
     cfg.streaming_partitions =
         args.get_parse("streaming", cfg.streaming_partitions)?;
+    cfg.ns_iters = args.get_parse("ns-iters", cfg.ns_iters)?;
     if let Some(spec) = args.get("topology") {
         cfg.topology = TopologySpec::parse(spec)?;
     }
@@ -96,8 +105,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let sess = Session::load(&artifacts_dir(args).join(&model))?;
     if !quiet {
         println!(
-            "{} on {} ({} params): K={} H={} B={} steps={} lr={} compression={:?}",
-            method.name(), model, sess.manifest.config.param_count,
+            "{} on {} via {} ({} params): K={} H={} B={} steps={} lr={} \
+             compression={:?}",
+            method.name(), model, sess.platform(),
+            sess.manifest.config.param_count,
             cfg.workers, cfg.sync_interval, cfg.global_batch,
             cfg.total_steps, cfg.lr, cfg.compression
         );
@@ -131,11 +142,118 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     experiments::run(&id, &preset, &artifacts, jobs)
 }
 
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// `muloco bench`: per-kernel timings + tokens/sec of a short train,
+/// written to BENCH_native.json — the measured perf trajectory the
+/// ROADMAP's "as fast as the hardware allows" goal is tracked against.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "nano");
+    let out = args.get_or("out", "BENCH_native.json");
+    let steps: u64 = args.get_parse("steps", 20)?;
+    let artifacts = artifacts_dir(args);
+    args.finish()?;
+
+    let sess = Session::load(&artifacts.join(&model))?;
+    let platform = sess.platform();
+    let cfg_m = sess.manifest.config.clone();
+    println!("bench: {model} on {platform} ({} params)", cfg_m.param_count);
+
+    // --- per-kernel timings -------------------------------------------
+    let params = sess.init_params(0)?;
+    let tokens: Vec<i32> = (0..cfg_m.microbatch * cfg_m.seq_len)
+        .map(|i| (i * 31 % cfg_m.vocab) as i32)
+        .collect();
+    let (_, grads) = sess.fwd_grad(&params, &tokens)?;
+    let mu_state = sess.zero_muon_state();
+    let aw_state = sess.zero_adamw_state();
+    let fwd = median_secs(5, || {
+        let _ = sess.fwd_grad(&params, &tokens).unwrap();
+    });
+    let muon = median_secs(5, || {
+        let _ = sess
+            .apply_muon(&params, &mu_state, &grads, 1.0, 0.05, 0.0)
+            .unwrap();
+    });
+    let adamw = median_secs(5, || {
+        let _ = sess
+            .apply_adamw(&params, &aw_state, &grads, 1.0, 0.05, 0.0)
+            .unwrap();
+    });
+    let eval = median_secs(5, || {
+        let _ = sess.eval_step(&params, &tokens).unwrap();
+    });
+    let mut kernels = BTreeMap::new();
+    kernels.insert("fwd_grad_us".to_string(), num(fwd * 1e6));
+    kernels.insert("apply_muon_us".to_string(), num(muon * 1e6));
+    kernels.insert("apply_adamw_us".to_string(), num(adamw * 1e6));
+    kernels.insert("eval_step_us".to_string(), num(eval * 1e6));
+    println!(
+        "  kernels: fwd_grad {:.1}us  apply_muon {:.1}us  apply_adamw {:.1}us  \
+         eval {:.1}us",
+        fwd * 1e6, muon * 1e6, adamw * 1e6, eval * 1e6
+    );
+
+    // --- blocked vs naive GEMM (the perf headline; one shared
+    //     definition with benches/microbench.rs) ----------------------
+    let mut gemm_rows = Vec::new();
+    for d in [64usize, 128, 256] {
+        let (blocked, naive) = time_blocked_vs_naive(d, 5);
+        let speedup = naive / blocked;
+        let gflops = 2.0 * (d * d * d) as f64 / blocked / 1e9;
+        println!(
+            "  sgemm {d}x{d}x{d}: blocked {:.1}us ({gflops:.2} GFLOP/s), \
+             naive {:.1}us, speedup {speedup:.1}x",
+            blocked * 1e6, naive * 1e6
+        );
+        let mut row = BTreeMap::new();
+        row.insert("size".to_string(), num(d as f64));
+        row.insert("blocked_us".to_string(), num(blocked * 1e6));
+        row.insert("naive_us".to_string(), num(naive * 1e6));
+        row.insert("speedup".to_string(), num(speedup));
+        row.insert("gflops".to_string(), num(gflops));
+        gemm_rows.push(Json::Obj(row));
+    }
+
+    // --- end-to-end tokens/sec -----------------------------------------
+    let mut cfg = TrainConfig::new(&model, Method::Muloco);
+    cfg.global_batch = 32;
+    cfg = cfg.tuned_outer(4)?;
+    cfg.total_steps = steps;
+    cfg.sync_interval = 5;
+    cfg.eval_every = steps;
+    cfg.eval_batches = 1;
+    let t0 = Instant::now();
+    let r = train(&sess, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens_per_sec = r.tokens as f64 / wall;
+    println!(
+        "  train: {} tokens in {wall:.2}s -> {tokens_per_sec:.0} tokens/s \
+         (MuLoCo K=4, {steps} steps)",
+        r.tokens
+    );
+
+    let mut top = BTreeMap::new();
+    top.insert("backend".to_string(), Json::Str(platform));
+    top.insert("model".to_string(), Json::Str(model.clone()));
+    top.insert("param_count".to_string(), num(cfg_m.param_count as f64));
+    top.insert("tokens_per_sec".to_string(), num(tokens_per_sec));
+    top.insert("train_steps".to_string(), num(steps as f64));
+    top.insert("train_wall_secs".to_string(), num(wall));
+    top.insert("kernels".to_string(), Json::Obj(kernels));
+    top.insert("gemm".to_string(), Json::Arr(gemm_rows));
+    std::fs::write(&out, Json::Obj(top).to_string())?;
+    println!("  wrote {out}");
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let model = args.get_or("model", "nano");
     let artifacts = artifacts_dir(args);
     args.finish()?;
-    let man = muloco::runtime::Manifest::load(&artifacts.join(&model))?;
+    let man = muloco::runtime::Manifest::load_or_synthesize(&artifacts.join(&model))?;
     let c = &man.config;
     println!("config {} (paper scale {})", c.name, c.paper_scale);
     println!("  layers={} d_model={} heads={} d_ff={} vocab={} seq={}",
@@ -155,10 +273,12 @@ USAGE:
                [--lr F] [--wd F] [--outer-lr F] [--outer-momentum F]
                [--compression none|q<bits>-<linear|stat>[-rw]|topk<frac>]
                [--ef] [--streaming J] [--seed S] [--label L]
+               [--ns-iters N]   # Muon Newton-Schulz depth (0 = momentum SGD)
                [--topology flat|ring|hier:<G>]  # collective topology
                [--tau T]        # overlapped sync: apply reduce T steps late
                [--sequential]   # disable the parallel worker pool
   muloco experiment <id|all> [--preset fast|full] [--jobs N]
+  muloco bench [--model M] [--steps N] [--out BENCH_native.json]
   muloco info --model M
   muloco list
 ";

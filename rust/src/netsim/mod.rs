@@ -22,7 +22,7 @@
 //! * Streaming partitions divide *peak* bandwidth by J but keep the
 //!   total volume unchanged (now measured: `CommStats::peak_event_bytes`).
 
-use crate::comm::{CommTrace, LinkBandwidth, OpShape, Ring, Topology};
+use crate::comm::{CommTrace, LinkBandwidth, LinkLatency, OpShape, Ring, Topology};
 
 /// Gigabit (decimal) per second in bytes/sec.
 pub const GBIT: f64 = 1e9 / 8.0;
@@ -49,6 +49,9 @@ pub struct SystemProfile {
     /// `Topology::plan` the simulated collectives use
     pub sync_trace: CommTrace,
     pub pattern: CommPattern,
+    /// per-hop latency constant per link class (default zero: the
+    /// bandwidth-only pre-latency model; dominates small-tensor syncs)
+    pub latency: LinkLatency,
 }
 
 impl SystemProfile {
@@ -92,6 +95,7 @@ impl SystemProfile {
             param_bytes,
             sync_trace,
             pattern,
+            latency: LinkLatency::ZERO,
         }
     }
 
@@ -118,12 +122,20 @@ impl SystemProfile {
             param_bytes,
             sync_trace,
             pattern,
+            latency: LinkLatency::ZERO,
         }
     }
 
-    /// Communication seconds of one sync event at per-link bandwidths.
+    /// Attach a per-hop latency constant per link class (builder).
+    pub fn with_latency(mut self, latency: LinkLatency) -> SystemProfile {
+        self.latency = latency;
+        self
+    }
+
+    /// Communication seconds of one sync event at per-link bandwidths,
+    /// including one latency constant per hop.
     pub fn comm_secs_per_sync(&self, bw: LinkBandwidth) -> f64 {
-        self.sync_trace.secs(&bw)
+        self.sync_trace.secs_with_latency(&bw, &self.latency)
     }
 
     /// Communication seconds per *training step*, per-link bandwidths.
@@ -269,6 +281,38 @@ mod tests {
         let p = dp(1);
         assert_eq!(p.comm_secs_per_step(GBIT), 0.0);
         assert_eq!(p.utilization(GBIT), 1.0);
+    }
+
+    #[test]
+    fn hop_latency_dominates_small_tensor_hierarchical_syncs() {
+        // a 64-float tensor across 8 workers in 2 DCs: the hierarchical
+        // plan has more hops (intra gather, 2 WAN hops, intra
+        // broadcast) than the flat 2-hop ring, so once each hop pays a
+        // latency constant the WAN model sharpens: tiny tensors are
+        // *slower* hierarchically even though they move fewer WAN bytes
+        let (wire, dense) = (256.0, 256.0);
+        let lat = LinkLatency { inter: 0.05, intra: 0.001 };
+        let hier_topo = Hierarchical::new(2);
+        let hier = SystemProfile::with_topology(
+            0.0, 0.0, dense, wire, 8, CommPattern::EveryH { h: 1 }, &hier_topo)
+            .with_latency(lat);
+        let flat = SystemProfile::flat(
+            0.0, 0.0, dense, wire, 8, CommPattern::EveryH { h: 1 })
+            .with_latency(lat);
+        let bw = LinkBandwidth::flat(10.0 * GBIT); // bytes ~ free
+        assert!(hier.sync_trace.n_hops() > flat.sync_trace.n_hops());
+        let t_hier = hier.comm_secs_per_sync(bw);
+        let t_flat = flat.comm_secs_per_sync(bw);
+        assert!(t_hier > t_flat, "{t_hier} vs {t_flat}");
+        // each profile pays at least its hop-count worth of latency...
+        let floor: f64 = hier.sync_trace.hops.iter()
+            .map(|h| lat.of(h.link)).sum();
+        assert!(t_hier >= floor);
+        // ...and zero latency recovers the bandwidth-only numbers
+        let hier0 = SystemProfile::with_topology(
+            0.0, 0.0, dense, wire, 8, CommPattern::EveryH { h: 1 }, &hier_topo);
+        assert_eq!(hier0.comm_secs_per_sync(bw),
+                   hier0.sync_trace.secs(&bw));
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! The execution-backend seam: five step functions behind one trait.
+//!
+//! A `Backend` executes the manifest's model — the same five entry
+//! points `python/compile/aot.py` lowers to HLO executables — without
+//! the caller knowing whether the math runs through PJRT-compiled
+//! artifacts ([`crate::runtime::pjrt::PjrtBackend`]) or the pure-Rust
+//! kernels ([`crate::runtime::native::NativeBackend`]).  `Session`
+//! owns the dispatch, input validation and wall-clock accounting;
+//! backends own only the math.
+//!
+//! Contract shared by all implementations (enforced by
+//! `tests/native_backend.rs` and the artifact-gated PJRT suite):
+//!
+//! * `init_params` is a pure function of the seed;
+//! * `fwd_grad` returns the mean next-token cross-entropy over
+//!   `microbatch * (seq_len - 1)` positions and its exact gradient;
+//! * the optimizer steps implement the paper's AdamW
+//!   (beta1=0.9, beta2=0.99, decay on 2-D tensors only) and Muon
+//!   (beta=0.9 momentum, Newton-Schulz orthogonalization, sqrt(n/m)
+//!   LR rescale, decoupled decay) update rules;
+//! * every method takes `&self` and is safe to call from the
+//!   `WorkerPool`'s executor lanes concurrently (`Send + Sync`).
+
+use anyhow::Result;
+
+/// A set of equally-ordered flat tensors (parameters, grads, opt state).
+pub type Tensors = Vec<Vec<f32>>;
+
+/// Newton-Schulz iteration count baked into the AOT `apply_muon`
+/// executable (Jordan et al. 2024; paper §2).  The native backend
+/// accepts any count at call time; PJRT only this one.
+pub const NS_STEPS: usize = 5;
+
+/// One execution backend for the manifest's transformer.
+pub trait Backend: Send + Sync {
+    /// Human-readable platform tag (`"cpu"` under PJRT, `"native-cpu"`).
+    fn platform(&self) -> String;
+
+    /// Initialize a fresh parameter set from a seed (deterministic).
+    fn init_params(&self, seed: u32) -> Result<Tensors>;
+
+    /// Forward + backward on one microbatch: returns (loss, grads).
+    fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)>;
+
+    /// One AdamW step. state = [m..]+[v..]; t is 1-indexed.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_adamw(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)>;
+
+    /// One Muon step. state = [mom..]+[m..]+[v..] per the manifest;
+    /// `ns_iters` is the Newton-Schulz iteration count (0 degrades to
+    /// normalized momentum SGD on the hidden matrices).
+    #[allow(clippy::too_many_arguments)]
+    fn apply_muon(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<(Tensors, Tensors)>;
+
+    /// Eval loss + next-token accuracy on one microbatch.
+    fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)>;
+}

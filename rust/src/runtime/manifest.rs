@@ -2,6 +2,12 @@
 //! the rust runtime.  Describes the flat tensor layout of every AOT
 //! executable so the coordinator can marshal buffers without ever
 //! interpreting model structure.
+//!
+//! Two provenances, one type: `Manifest::load` parses a manifest.json
+//! written at AOT time, while `Manifest::synthesize` derives the
+//! identical layout from the built-in config ladder (the rust mirror
+//! of `python/compile/configs.py` + `model.py::param_specs`) so the
+//! native backend runs with no artifacts on disk at all.
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -53,6 +59,90 @@ pub struct ModelDims {
     pub microbatch: usize,
     pub param_count: usize,
     pub flops_per_token: f64,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameter count of the canonical transformer (mirrors
+    /// `configs.py::ModelConfig.param_count`).
+    fn derived_param_count(
+        n_layers: usize,
+        d: usize,
+        d_ff: usize,
+        vocab: usize,
+        head_dim: usize,
+    ) -> usize {
+        let per_layer = 4 * d * d + 3 * d * d_ff + 4 * d + 2 * head_dim;
+        vocab * d + n_layers * per_layer + d + d * vocab
+    }
+
+    /// ~6N fwd+bwd plus the attention quadratic term (mirrors
+    /// `configs.py::ModelConfig.flops_per_token`).
+    fn derived_flops_per_token(
+        n_layers: usize,
+        d: usize,
+        seq_len: usize,
+        vocab: usize,
+        param_count: usize,
+    ) -> f64 {
+        let n_matmul = param_count - 2 * vocab * d;
+        let attn = 12 * n_layers * d * seq_len;
+        6.0 * (n_matmul + vocab * d * 2) as f64 + attn as f64
+    }
+
+    /// One rung of the built-in ladder (d_ff values precomputed from
+    /// configs.py's `int(round(2.75 * d / 8)) * 8`, including its
+    /// banker's rounding at d=48).
+    fn rung(
+        name: &str,
+        paper_scale: &str,
+        n_layers: usize,
+        d_model: usize,
+        n_heads: usize,
+        d_ff: usize,
+        vocab: usize,
+        seq_len: usize,
+    ) -> ModelDims {
+        let head_dim = d_model / n_heads;
+        let param_count =
+            Self::derived_param_count(n_layers, d_model, d_ff, vocab, head_dim);
+        ModelDims {
+            name: name.to_string(),
+            paper_scale: paper_scale.to_string(),
+            n_layers,
+            d_model,
+            n_heads,
+            d_ff,
+            vocab,
+            seq_len,
+            microbatch: 4,
+            param_count,
+            flops_per_token: Self::derived_flops_per_token(
+                n_layers, d_model, seq_len, vocab, param_count,
+            ),
+        }
+    }
+
+    /// The built-in config ladder, mirroring `configs.py::CONFIGS`.
+    pub fn builtin(name: &str) -> Option<ModelDims> {
+        Some(match name {
+            "nano" => Self::rung("nano", "150M", 2, 32, 2, 88, 256, 64),
+            "micro" => Self::rung("micro", "416M", 3, 48, 3, 128, 256, 64),
+            "tiny" => Self::rung("tiny", "914M", 4, 64, 4, 176, 256, 64),
+            "small" => Self::rung("small", "1.76B", 5, 96, 6, 264, 256, 64),
+            "med" => Self::rung("med", "3.07B", 6, 128, 8, 352, 256, 64),
+            "big" => Self::rung("big", "15.2B", 8, 192, 12, 528, 512, 64),
+            "e2e" => Self::rung("e2e", "e2e-demo", 6, 256, 16, 704, 2048, 128),
+            _ => return None,
+        })
+    }
+
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["nano", "micro", "tiny", "small", "med", "big", "e2e"]
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -224,5 +314,126 @@ impl Manifest {
 
     pub fn n_partitions(&self) -> usize {
         self.params.iter().map(|p| p.partition).max().unwrap_or(0) + 1
+    }
+
+    /// The canonical flat parameter layout (order matters everywhere;
+    /// mirrors `python/compile/model.py::param_specs`).
+    pub fn canonical_param_specs(dims: &ModelDims) -> Vec<TensorSpec> {
+        let (d, f, hd) = (dims.d_model, dims.d_ff, dims.head_dim());
+        let l = dims.n_layers;
+        let spec = |name: String, shape: Vec<usize>, kind: TensorKind, part: usize| {
+            let size = shape.iter().product();
+            TensorSpec { name, shape, size, kind, partition: part }
+        };
+        let mut specs =
+            vec![spec("embed".into(), vec![dims.vocab, d], TensorKind::Embed, 0)];
+        for i in 0..l {
+            // partition layers into thirds for streaming DiLoCo
+            // (Douillard et al. 2025); embed joins the first, head the
+            // last partition
+            let part = (3 * i / l.max(1)).min(2);
+            let p = |s: &str| format!("l{i}.{s}");
+            specs.push(spec(p("norm_att_in"), vec![d], TensorKind::Norm, part));
+            specs.push(spec(p("wq"), vec![d, d], TensorKind::Hidden, part));
+            specs.push(spec(p("wk"), vec![d, d], TensorKind::Hidden, part));
+            specs.push(spec(p("wv"), vec![d, d], TensorKind::Hidden, part));
+            specs.push(spec(p("qnorm"), vec![hd], TensorKind::Norm, part));
+            specs.push(spec(p("knorm"), vec![hd], TensorKind::Norm, part));
+            specs.push(spec(p("wo"), vec![d, d], TensorKind::Hidden, part));
+            specs.push(spec(p("norm_att_out"), vec![d], TensorKind::Norm, part));
+            specs.push(spec(p("norm_ffn_in"), vec![d], TensorKind::Norm, part));
+            specs.push(spec(p("wg"), vec![d, f], TensorKind::Hidden, part));
+            specs.push(spec(p("wu"), vec![d, f], TensorKind::Hidden, part));
+            specs.push(spec(p("wd"), vec![f, d], TensorKind::Hidden, part));
+            specs.push(spec(p("norm_ffn_out"), vec![d], TensorKind::Norm, part));
+        }
+        specs.push(spec("norm_f".into(), vec![d], TensorKind::Norm, 2));
+        specs.push(spec("head".into(), vec![d, dims.vocab], TensorKind::Head, 2));
+        specs
+    }
+
+    /// The one manifest-resolution rule: an on-disk `manifest.json` is
+    /// the source of truth, otherwise synthesize from the built-in
+    /// ladder.  `Session::load` and `muloco info` both route through
+    /// here so they can never disagree about what a config dir means.
+    pub fn load_or_synthesize(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Manifest::synthesize(dir)
+        }
+    }
+
+    /// Derive the manifest for a built-in config entirely in memory —
+    /// the no-artifacts path the native backend runs on.  The config
+    /// name is the artifact directory's file name (`artifacts/nano` ->
+    /// `nano`).
+    pub fn synthesize(dir: &Path) -> Result<Manifest> {
+        let name = dir
+            .file_name()
+            .and_then(|n| n.to_str())
+            .with_context(|| format!("no config name in path {}", dir.display()))?;
+        let dims = ModelDims::builtin(name).with_context(|| {
+            format!(
+                "no artifacts at {} and {name:?} is not a built-in config \
+                 (known: {})",
+                dir.display(),
+                ModelDims::builtin_names().join(", ")
+            )
+        })?;
+        Manifest::from_dims(dims, dir)
+    }
+
+    /// Build the canonical manifest for `dims` (param layout, optimizer
+    /// state layouts, Muon routing).  The executables table carries the
+    /// `native` placeholder — only the PJRT backend reads paths.
+    pub fn from_dims(dims: ModelDims, dir: &Path) -> Result<Manifest> {
+        let params = Self::canonical_param_specs(&dims);
+        let state_of = |name: &str, spec: &TensorSpec| StateSpec {
+            name: format!("{name}.{}", spec.name),
+            shape: spec.shape.clone(),
+            size: spec.size,
+        };
+        let mut adamw_state: Vec<StateSpec> =
+            params.iter().map(|p| state_of("m", p)).collect();
+        adamw_state.extend(params.iter().map(|p| state_of("v", p)));
+
+        let hidden: Vec<usize> = params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind == TensorKind::Hidden)
+            .map(|(i, _)| i)
+            .collect();
+        let adamw_routed: Vec<usize> = params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind != TensorKind::Hidden)
+            .map(|(i, _)| i)
+            .collect();
+        let mut muon_state: Vec<StateSpec> = hidden
+            .iter()
+            .map(|&i| state_of("mom", &params[i]))
+            .collect();
+        muon_state.extend(adamw_routed.iter().map(|&i| state_of("m", &params[i])));
+        muon_state.extend(adamw_routed.iter().map(|&i| state_of("v", &params[i])));
+
+        let executables = ["init", "fwd_grad", "apply_adamw", "apply_muon",
+                           "eval_step"]
+            .iter()
+            .map(|n| (n.to_string(), "native".to_string()))
+            .collect();
+
+        let man = Manifest {
+            dir: dir.to_path_buf(),
+            config: dims,
+            params,
+            adamw_state,
+            muon_state,
+            muon_hidden_indices: hidden,
+            muon_adamw_indices: adamw_routed,
+            executables,
+        };
+        man.validate()?;
+        Ok(man)
     }
 }

@@ -1,9 +1,17 @@
-//! Runtime layer: PJRT client + AOT artifact loading (see DESIGN.md §3).
+//! Runtime layer: the `Session` facade over pluggable execution
+//! backends — native pure-Rust kernels by default, PJRT-compiled AOT
+//! artifacts behind the `pjrt` feature (see rust/ARCHITECTURE.md
+//! §"runtime backends").
 
+pub mod backend;
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
 pub mod session;
 #[cfg(not(feature = "pjrt"))]
 pub mod xla_stub;
 
+pub use backend::{Backend, Tensors, NS_STEPS};
 pub use manifest::{Manifest, ModelDims, StateSpec, TensorKind, TensorSpec};
-pub use session::{ExecStats, Session, Tensors};
+pub use native::NativeBackend;
+pub use session::{ExecStats, Session};

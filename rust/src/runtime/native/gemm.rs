@@ -1,0 +1,286 @@
+//! f32 GEMM kernels: the compute hot-spot of the native backend.
+//!
+//! `sgemm` is a cache-blocked, lane-parallel kernel: the k dimension is
+//! tiled so a panel of B stays L2-resident while a block of C rows
+//! accumulates, the inner j loop runs over contiguous rows of B and C
+//! (8-wide auto-vectorizable form, 4 k-steps fused per C-row pass), and
+//! large products split their output rows across scoped threads
+//! ("lanes").  `sgemm_naive` is the deliberately untuned triple-loop
+//! reference kept for regression benchmarking (`benches/microbench.rs`
+//! prints the blocked-vs-naive speedup; `muloco bench` records it in
+//! BENCH_native.json).
+//!
+//! Determinism contract: every C element accumulates its k terms in
+//! ascending-k order with a fixed 4-term grouping that depends only on
+//! (k, KC), never on the lane count — so threaded and single-lane runs
+//! are bit-for-bit identical, which is what lets the WorkerPool's
+//! parallel==sequential contract hold on the native backend.
+//!
+//! The transposed variants (`sgemm_nt`, `sgemm_tn`) pack the transposed
+//! operand once and reuse the same blocked kernel, so there is exactly
+//! one accumulation-order definition to reason about.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+
+/// k-panel height: a KC x n slice of B (<= 256 * n * 4 bytes) stays
+/// cache-resident while a row block of C sweeps it.
+const KC: usize = 256;
+
+/// Products below this many multiply-adds run single-lane: the scoped
+/// thread spawn (~tens of us) would dominate.
+const PAR_THRESHOLD: usize = 1 << 22;
+
+/// GEMMs currently inside their parallel region, across all threads.
+/// The WorkerPool already runs K executor lanes; each lane's GEMMs
+/// divide the machine by the number of concurrently-active GEMMs so
+/// K lanes x N gemm-lanes cannot oversubscribe the cores.  This only
+/// shapes the row partition width, never the per-element accumulation
+/// order, so results stay bit-identical at any lane count.
+static ACTIVE_GEMMS: AtomicUsize = AtomicUsize::new(0);
+
+struct ActiveGuard;
+
+impl ActiveGuard {
+    fn enter() -> (ActiveGuard, usize) {
+        let prior = ACTIVE_GEMMS.fetch_add(1, Ordering::Relaxed);
+        (ActiveGuard, prior + 1)
+    }
+}
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        ACTIVE_GEMMS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn lanes_for(m: usize, n: usize, k: usize, active: usize) -> usize {
+    if m.saturating_mul(n).saturating_mul(k) < PAR_THRESHOLD {
+        return 1;
+    }
+    let avail = thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    (avail / active.max(1)).clamp(1, 8).min(m)
+}
+
+/// C[m,n] = A[m,k] @ B[k,n] (row-major, C overwritten).
+pub fn sgemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let (_guard, active) = ActiveGuard::enter();
+    let lanes = lanes_for(m, n, k, active);
+    if lanes <= 1 {
+        sgemm_rows(0, m, n, k, a, b, c);
+        return;
+    }
+    let rows_per = m.div_ceil(lanes);
+    thread::scope(|s| {
+        let mut rest = &mut c[..];
+        let mut i0 = 0;
+        while i0 < m {
+            let take = rows_per.min(m - i0);
+            let (chunk, tail) = rest.split_at_mut(take * n);
+            rest = tail;
+            let start = i0;
+            s.spawn(move || sgemm_rows(start, take, n, k, a, b, chunk));
+            i0 += take;
+        }
+    });
+}
+
+/// The single-lane body: rows [i0, i0+rows) of A into a local C chunk.
+fn sgemm_rows(
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    c.fill(0.0);
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        for li in 0..rows {
+            let arow = &a[(i0 + li) * k..(i0 + li) * k + k];
+            let crow = &mut c[li * n..li * n + n];
+            let mut k_ = kk;
+            while k_ + 4 <= kend {
+                let a0 = arow[k_];
+                let a1 = arow[k_ + 1];
+                let a2 = arow[k_ + 2];
+                let a3 = arow[k_ + 3];
+                let b0 = &b[k_ * n..k_ * n + n];
+                let b1 = &b[(k_ + 1) * n..(k_ + 1) * n + n];
+                let b2 = &b[(k_ + 2) * n..(k_ + 2) * n + n];
+                let b3 = &b[(k_ + 3) * n..(k_ + 3) * n + n];
+                for j in 0..n {
+                    crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                k_ += 4;
+            }
+            while k_ < kend {
+                let av = arow[k_];
+                let brow = &b[k_ * n..k_ * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+                k_ += 1;
+            }
+        }
+        kk = kend;
+    }
+}
+
+/// C[m,n] = A[m,k] @ B[n,k]^T (B packed transposed, then the blocked
+/// kernel).
+pub fn sgemm_nt(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(b.len(), n * k);
+    let bt = transpose_copy(n, k, b);
+    sgemm(m, n, k, a, &bt, c);
+}
+
+/// C[m,n] = A[k,m]^T @ B[k,n] (A packed transposed, then the blocked
+/// kernel).
+pub fn sgemm_tn(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    let at = transpose_copy(k, m, a);
+    sgemm(m, n, k, &at, b, c);
+}
+
+/// Tile-blocked out-of-place transpose: a is rows x cols, the result
+/// cols x rows.
+pub fn transpose_copy(rows: usize, cols: usize, a: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * cols);
+    const TB: usize = 32;
+    let mut out = vec![0f32; rows * cols];
+    let mut i0 = 0;
+    while i0 < rows {
+        let iend = (i0 + TB).min(rows);
+        let mut j0 = 0;
+        while j0 < cols {
+            let jend = (j0 + TB).min(cols);
+            for i in i0..iend {
+                for j in j0..jend {
+                    out[j * rows + i] = a[i * cols + j];
+                }
+            }
+            j0 = jend;
+        }
+        i0 = iend;
+    }
+    out
+}
+
+/// Median-of-`reps` seconds for the blocked and naive kernels at a
+/// square d x d x d product — the single definition of the
+/// blocked-vs-naive perf headline, shared by `muloco bench`
+/// (BENCH_native.json) and `benches/microbench.rs` so the two can
+/// never drift.  Returns (blocked_secs, naive_secs).
+pub fn time_blocked_vs_naive(d: usize, reps: usize) -> (f64, f64) {
+    let mut rng = crate::util::rng::Rng::new(d as u64);
+    let a: Vec<f32> = (0..d * d).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..d * d).map(|_| rng.normal_f32()).collect();
+    let mut c = vec![0f32; d * d];
+    let blocked = crate::util::median_secs(reps, || sgemm(d, d, d, &a, &b, &mut c));
+    let naive =
+        crate::util::median_secs(reps, || sgemm_naive(d, d, d, &a, &b, &mut c));
+    (blocked, naive)
+}
+
+/// The naive triple-loop reference (strided B access, no blocking, no
+/// lanes).  Kept as the perf regression baseline — do not "fix" it.
+pub fn sgemm_naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0f32;
+            for k_ in 0..k {
+                s += a[i * k + k_] * b[k_ * n + j];
+            }
+            c[i * n + j] = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f64], k: usize, label: &str) {
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-5 * (k as f64).sqrt() * (1.0 + w.abs());
+            assert!(
+                ((*g as f64) - *w).abs() <= tol,
+                "{label}[{i}]: {g} vs {w} (tol {tol})"
+            );
+        }
+    }
+
+    fn reference(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for k_ in 0..k {
+                    s += a[i * k + k_] as f64 * b[k_ * n + j] as f64;
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matches_f64_reference_over_awkward_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (17, 33, 65), (32, 88, 32),
+                            (64, 64, 300), (5, 1, 9)] {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let want = reference(m, n, k, &a, &b);
+            let mut c = vec![0f32; m * n];
+            sgemm(m, n, k, &a, &b, &mut c);
+            assert_close(&c, &want, k, "sgemm");
+            let mut cn = vec![0f32; m * n];
+            sgemm_naive(m, n, k, &a, &b, &mut cn);
+            assert_close(&cn, &want, k, "sgemm_naive");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match_reference() {
+        let mut rng = Rng::new(12);
+        let (m, n, k) = (13, 21, 34);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let want = reference(m, n, k, &a, &b);
+        // nt: feed B as (n x k) rows
+        let b_nk = transpose_copy(k, n, &b);
+        let mut c = vec![0f32; m * n];
+        sgemm_nt(m, n, k, &a, &b_nk, &mut c);
+        assert_close(&c, &want, k, "sgemm_nt");
+        // tn: feed A as (k x m) rows
+        let a_km = transpose_copy(m, k, &a);
+        let mut c2 = vec![0f32; m * n];
+        sgemm_tn(m, n, k, &a_km, &b, &mut c2);
+        assert_close(&c2, &want, k, "sgemm_tn");
+    }
+
+    #[test]
+    fn transpose_roundtrips() {
+        let mut rng = Rng::new(13);
+        let a = randn(&mut rng, 37 * 53);
+        let t = transpose_copy(37, 53, &a);
+        let back = transpose_copy(53, 37, &t);
+        assert_eq!(a, back);
+    }
+}

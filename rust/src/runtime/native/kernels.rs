@@ -1,0 +1,241 @@
+//! Elementwise / row-wise kernels of the native backend: RMSNorm
+//! forward + backward, RoPE rotation, silu, and the fused AdamW update
+//! (the rust mirror of `python/compile/kernels/fused_adamw.py`).
+//!
+//! Everything here is a pure function over flat f32 slices with fixed
+//! iteration order, so results are identical no matter which worker
+//! lane calls in — the same determinism contract the GEMM layer keeps.
+
+/// paper §5: beta1 = 0.9, beta2 = 0.99 for all AdamW (inner) runs
+pub const ADAMW_BETA1: f32 = 0.9;
+pub const ADAMW_BETA2: f32 = 0.99;
+pub const ADAMW_EPS: f32 = 1e-8;
+
+/// One fused AdamW sweep over a flat tensor, in place:
+///
+///   m' = b1*m + (1-b1)*g
+///   v' = b2*v + (1-b2)*g*g
+///   p' = p - lr * ( (m'*bc1) / (sqrt(v'*bc2) + eps) + wd*p )
+///
+/// `t` is the 1-indexed step; pass `wd = 0` for tensors excluded from
+/// decay (the caller masks 1-D tensors, as in optim.py).
+pub fn fused_adamw(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32],
+                   t: f32, lr: f32, wd: f32) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(m.len(), g.len());
+    debug_assert_eq!(v.len(), g.len());
+    let bc1 = 1.0 / (1.0 - ADAMW_BETA1.powf(t));
+    let bc2 = 1.0 / (1.0 - ADAMW_BETA2.powf(t));
+    for i in 0..p.len() {
+        let gi = g[i];
+        let mi = ADAMW_BETA1 * m[i] + (1.0 - ADAMW_BETA1) * gi;
+        let vi = ADAMW_BETA2 * v[i] + (1.0 - ADAMW_BETA2) * gi * gi;
+        let update = (mi * bc1) / ((vi * bc2).sqrt() + ADAMW_EPS);
+        p[i] -= lr * (update + wd * p[i]);
+        m[i] = mi;
+        v[i] = vi;
+    }
+}
+
+/// RMSNorm forward over rows of width `n`: returns (y, inv_rms) with
+/// y = x * inv_rms * g and inv_rms = 1/sqrt(mean(x^2) + eps) per row.
+pub fn rmsnorm_fwd(x: &[f32], g: &[f32], n: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(g.len(), n);
+    debug_assert_eq!(x.len() % n, 0);
+    let rows = x.len() / n;
+    let mut out = vec![0f32; x.len()];
+    let mut inv = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * n..(r + 1) * n];
+        let mut ss = 0f64;
+        for &xv in xr {
+            ss += xv as f64 * xv as f64;
+        }
+        let rr = (1.0 / (ss / n as f64 + eps as f64).sqrt()) as f32;
+        inv[r] = rr;
+        let orow = &mut out[r * n..(r + 1) * n];
+        for j in 0..n {
+            orow[j] = xr[j] * rr * g[j];
+        }
+    }
+    (out, inv)
+}
+
+/// RMSNorm backward: given the forward inputs (x, g), the saved per-row
+/// inv_rms and the upstream dy, writes dx (overwritten) and accumulates
+/// dg.  Per row: s = sum_j dy_j g_j x_j;
+/// dx_j = r*g_j*dy_j - x_j * r^3 * s / n; dg_j += dy_j * x_j * r.
+pub fn rmsnorm_bwd(x: &[f32], g: &[f32], inv_rms: &[f32], dy: &[f32], n: usize,
+                   dx: &mut [f32], dg: &mut [f32]) {
+    debug_assert_eq!(x.len(), dy.len());
+    debug_assert_eq!(x.len(), dx.len());
+    debug_assert_eq!(g.len(), n);
+    debug_assert_eq!(dg.len(), n);
+    let rows = x.len() / n;
+    debug_assert_eq!(inv_rms.len(), rows);
+    for r in 0..rows {
+        let xr = &x[r * n..(r + 1) * n];
+        let dyr = &dy[r * n..(r + 1) * n];
+        let rr = inv_rms[r];
+        let mut s = 0f64;
+        for j in 0..n {
+            s += (dyr[j] * g[j] * xr[j]) as f64;
+        }
+        let coef = ((rr as f64).powi(3) * s / n as f64) as f32;
+        let dxr = &mut dx[r * n..(r + 1) * n];
+        for j in 0..n {
+            dxr[j] = rr * g[j] * dyr[j] - xr[j] * coef;
+            dg[j] += dyr[j] * xr[j] * rr;
+        }
+    }
+}
+
+/// Precomputed RoPE tables: (cos, sin), each seq_len x (head_dim / 2),
+/// ang[t, j] = t * theta^(-j / half).
+pub fn rope_tables(seq_len: usize, head_dim: usize, theta: f32) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let freqs: Vec<f64> = (0..half)
+        .map(|j| (theta as f64).powf(-(j as f64) / half as f64))
+        .collect();
+    let mut cos = vec![0f32; seq_len * half];
+    let mut sin = vec![0f32; seq_len * half];
+    for t in 0..seq_len {
+        for (j, freq) in freqs.iter().enumerate() {
+            let ang = t as f64 * freq;
+            cos[t * half + j] = ang.cos() as f32;
+            sin[t * half + j] = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply the half-split RoPE rotation in place to x laid out as
+/// (b, t, h, hd) rows of d = h*hd.  `inverse` rotates by -angle — the
+/// exact adjoint, used by the backward pass.
+#[allow(clippy::too_many_arguments)]
+pub fn rope_apply(x: &mut [f32], b: usize, t: usize, h: usize, hd: usize,
+                  cos: &[f32], sin: &[f32], inverse: bool) {
+    let half = hd / 2;
+    let d = h * hd;
+    debug_assert_eq!(x.len(), b * t * d);
+    for b_ in 0..b {
+        for t_ in 0..t {
+            let crow = &cos[t_ * half..(t_ + 1) * half];
+            let srow = &sin[t_ * half..(t_ + 1) * half];
+            for h_ in 0..h {
+                let off = (b_ * t + t_) * d + h_ * hd;
+                for j in 0..half {
+                    let x1 = x[off + j];
+                    let x2 = x[off + half + j];
+                    let c = crow[j];
+                    let s = if inverse { -srow[j] } else { srow[j] };
+                    x[off + j] = x1 * c - x2 * s;
+                    x[off + half + j] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fused_adamw_matches_closed_form() {
+        let mut p = vec![0.5f32, -1.0, 2.0];
+        let mut m = vec![0.1f32, 0.0, -0.2];
+        let mut v = vec![0.01f32, 0.0, 0.04];
+        let g = vec![0.3f32, -0.5, 0.0];
+        let (p0, m0, v0) = (p.clone(), m.clone(), v.clone());
+        let (t, lr, wd) = (3.0f32, 0.05f32, 0.1f32);
+        fused_adamw(&mut p, &mut m, &mut v, &g, t, lr, wd);
+        let bc1 = 1.0 / (1.0 - 0.9f32.powf(t));
+        let bc2 = 1.0 / (1.0 - 0.99f32.powf(t));
+        for i in 0..3 {
+            let mi = 0.9 * m0[i] + 0.1 * g[i];
+            let vi = 0.99 * v0[i] + 0.01 * g[i] * g[i];
+            let upd = mi * bc1 / ((vi * bc2).sqrt() + 1e-8);
+            let pi = p0[i] - lr * (upd + wd * p0[i]);
+            assert!((p[i] - pi).abs() < 1e-6, "p[{i}]");
+            assert!((m[i] - mi).abs() < 1e-7, "m[{i}]");
+            assert!((v[i] - vi).abs() < 1e-7, "v[{i}]");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_fwd_unit_rms() {
+        let x = vec![3.0f32, -3.0, 3.0, -3.0];
+        let g = vec![1.0f32; 4];
+        let (y, inv) = rmsnorm_fwd(&x, &g, 4, 0.0);
+        // rms(x) = 3, so y = x/3 and inv = 1/3
+        assert!((inv[0] - 1.0 / 3.0).abs() < 1e-6);
+        for (yv, xv) in y.iter().zip(&x) {
+            assert!((yv - xv / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let n = 8;
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..2 * n).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..n).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect();
+        let dy: Vec<f32> = (0..2 * n).map(|_| rng.normal_f32()).collect();
+        let eps = 1e-6f32;
+        let loss = |x: &[f32], g: &[f32]| -> f64 {
+            let (y, _) = rmsnorm_fwd(x, g, n, eps);
+            y.iter().zip(&dy).map(|(a, b)| (a * b) as f64).sum()
+        };
+        let (_, inv) = rmsnorm_fwd(&x, &g, n, eps);
+        let mut dx = vec![0f32; x.len()];
+        let mut dg = vec![0f32; n];
+        rmsnorm_bwd(&x, &g, &inv, &dy, n, &mut dx, &mut dg);
+        let h = 1e-3;
+        for i in [0usize, 3, 9, 15] {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (loss(&xp, &g) - loss(&xm, &g)) / (2.0 * h as f64);
+            assert!((fd - dx[i] as f64).abs() < 2e-3, "dx[{i}]: {fd} vs {}", dx[i]);
+        }
+        for j in [0usize, 5] {
+            let mut gp = g.clone();
+            gp[j] += h;
+            let mut gm = g.clone();
+            gm[j] -= h;
+            let fd = (loss(&x, &gp) - loss(&x, &gm)) / (2.0 * h as f64);
+            assert!((fd - dg[j] as f64).abs() < 2e-3, "dg[{j}]: {fd} vs {}", dg[j]);
+        }
+    }
+
+    #[test]
+    fn rope_inverse_is_exact_adjoint() {
+        let (b, t, h, hd) = (2usize, 5, 2, 8);
+        let (cos, sin) = rope_tables(t, hd, 10_000.0);
+        let mut rng = Rng::new(9);
+        let x0: Vec<f32> = (0..b * t * h * hd).map(|_| rng.normal_f32()).collect();
+        let mut x = x0.clone();
+        rope_apply(&mut x, b, t, h, hd, &cos, &sin, false);
+        // rotation preserves pairwise norms
+        let n0: f64 = x0.iter().map(|v| (*v as f64).powi(2)).sum();
+        let n1: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((n0 - n1).abs() < 1e-3 * n0);
+        rope_apply(&mut x, b, t, h, hd, &cos, &sin, true);
+        for (a, b_) in x.iter().zip(&x0) {
+            assert!((a - b_).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Native execution backend: the pure-Rust implementation of the five
+//! step functions (`init`, `fwd_grad`, `apply_adamw`, `apply_muon`,
+//! `eval_step`) behind the `Session` API — no PJRT artifacts, no
+//! toolchain, same math as `python/compile/`.
+//!
+//! Layering:
+//!
+//! * [`gemm`] — cache-blocked lane-parallel `sgemm` (+ naive reference
+//!   kept for regression benchmarking);
+//! * [`kernels`] — fused AdamW sweep, RMSNorm fwd/bwd, RoPE, silu;
+//! * [`model`] — transformer forward + hand-written backward;
+//! * [`muon`] — batched Newton-Schulz orthogonalization.
+//!
+//! The backend is a pure function layer: no interior mutability, every
+//! entry point takes `&self`, and all kernels fix their accumulation
+//! order independent of thread count — so the WorkerPool's bit-for-bit
+//! parallel==sequential contract holds here exactly as it does under
+//! PJRT (tests/parallel_determinism.rs runs un-skipped on this
+//! backend).
+
+pub mod gemm;
+pub mod kernels;
+pub mod model;
+pub mod muon;
+
+use anyhow::{bail, Result};
+
+use self::kernels::fused_adamw;
+use self::model::NativeModel;
+use self::muon::{newton_schulz_group, MUON_BETA};
+use super::backend::{Backend, Tensors};
+use super::manifest::{Manifest, TensorSpec};
+use crate::util::rng::Rng;
+
+/// RoPE base / norm epsilon: configs.py defaults, shared by every
+/// ladder rung (aot.py would bake per-config overrides into the HLO;
+/// none exist today).
+const ROPE_THETA: f32 = 10_000.0;
+const NORM_EPS: f32 = 1e-6;
+
+pub struct NativeBackend {
+    model: NativeModel,
+    microbatch: usize,
+    seq_len: usize,
+    params: Vec<TensorSpec>,
+    /// Muon routing (indices into the flat param list)
+    hidden: Vec<usize>,
+    adamw_routed: Vec<usize>,
+}
+
+impl NativeBackend {
+    /// Build the backend for a manifest, verifying the manifest's
+    /// layout is the canonical transformer (the native kernels hardcode
+    /// that structure; a foreign layout must use the PJRT path).
+    pub fn new(man: &Manifest) -> Result<NativeBackend> {
+        let dims = &man.config;
+        if dims.d_model % dims.n_heads != 0 {
+            bail!("d_model {} must divide by n_heads {}", dims.d_model, dims.n_heads);
+        }
+        if dims.head_dim() % 2 != 0 {
+            bail!("RoPE needs an even head_dim, got {}", dims.head_dim());
+        }
+        let canonical = Manifest::canonical_param_specs(dims);
+        if man.params.len() != canonical.len() {
+            bail!(
+                "manifest has {} tensors but the canonical layout has {}; \
+                 the native backend only runs the canonical transformer",
+                man.params.len(),
+                canonical.len()
+            );
+        }
+        for (got, want) in man.params.iter().zip(&canonical) {
+            if got.name != want.name || got.shape != want.shape {
+                bail!(
+                    "manifest tensor {:?} {:?} does not match the canonical \
+                     layout ({:?} {:?}); use the PJRT backend for custom models",
+                    got.name, got.shape, want.name, want.shape
+                );
+            }
+        }
+        let model = NativeModel::from_dims(dims, ROPE_THETA, NORM_EPS);
+        Ok(NativeBackend {
+            model,
+            microbatch: dims.microbatch,
+            seq_len: dims.seq_len,
+            params: man.params.clone(),
+            hidden: man.muon_hidden_indices.clone(),
+            adamw_routed: man.muon_adamw_indices.clone(),
+        })
+    }
+
+    fn batch_dims(&self, tokens: &[i32]) -> (usize, usize) {
+        debug_assert_eq!(tokens.len(), self.microbatch * self.seq_len);
+        (self.microbatch, self.seq_len)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    /// Deterministic init mirroring model.py: norms at 1, embeddings at
+    /// 0.02 * N(0,1), matrices at fan_in^-1/2 * N(0,1) with the
+    /// 1/sqrt(2L) shrink on residual-output projections (wo, wd).  Each
+    /// tensor draws from its own forked stream, so the layout — not the
+    /// sampling order — defines the values.
+    fn init_params(&self, seed: u32) -> Result<Tensors> {
+        let mut root = Rng::new(seed as u64);
+        let shrink = 1.0 / (2.0 * self.model.n_layers as f64).sqrt();
+        let out = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mut rng = root.fork(i as u64);
+                match spec.shape.len() {
+                    1 => vec![1.0f32; spec.size],
+                    _ => {
+                        let std = if spec.name == "embed" {
+                            0.02
+                        } else {
+                            let fan_in = spec.shape[0] as f64;
+                            let mut s = fan_in.powf(-0.5);
+                            if spec.name.ends_with("wo") || spec.name.ends_with("wd")
+                            {
+                                s *= shrink;
+                            }
+                            s
+                        };
+                        (0..spec.size)
+                            .map(|_| (std * rng.normal()) as f32)
+                            .collect()
+                    }
+                }
+            })
+            .collect();
+        Ok(out)
+    }
+
+    fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
+        let (b, t) = self.batch_dims(tokens);
+        let acts = self.model.forward(params, tokens, b, t)?;
+        let (loss, dlogits) = self.model.loss_and_dlogits(&acts.logits, tokens, b, t);
+        let grads = self.model.backward(params, tokens, &acts, &dlogits, b, t);
+        Ok((loss as f32, grads))
+    }
+
+    fn apply_adamw(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)> {
+        let np = self.params.len();
+        let mut new_p = params.clone();
+        let mut new_m: Tensors = state[..np].to_vec();
+        let mut new_v: Tensors = state[np..].to_vec();
+        for (i, spec) in self.params.iter().enumerate() {
+            // norms/embeddings convention: decay 2-D tensors only
+            let wd_eff = if spec.shape.len() == 2 { wd } else { 0.0 };
+            fused_adamw(&mut new_p[i], &mut new_m[i], &mut new_v[i], &grads[i],
+                        t, lr, wd_eff);
+        }
+        let mut new_state = new_m;
+        new_state.extend(new_v);
+        Ok((new_p, new_state))
+    }
+
+    fn apply_muon(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<(Tensors, Tensors)> {
+        let nh = self.hidden.len();
+        let na = self.adamw_routed.len();
+        let mut new_p = params.clone();
+
+        // --- Muon branch: momentum, batched NS, sqrt(n/m) rescale ------
+        let mut new_mom: Tensors = Vec::with_capacity(nh);
+        for (j, &pi) in self.hidden.iter().enumerate() {
+            let mut mom = state[j].clone();
+            for (mv, &gv) in mom.iter_mut().zip(&grads[pi]) {
+                *mv = MUON_BETA * *mv + gv;
+            }
+            new_mom.push(mom);
+        }
+        // group same-shape matrices in first-seen order (one batched
+        // NS pass per group, as in optim.py::_group_by_shape)
+        let mut groups: Vec<((usize, usize), Vec<usize>)> = Vec::new();
+        for (j, &pi) in self.hidden.iter().enumerate() {
+            let sh = (self.params[pi].shape[0], self.params[pi].shape[1]);
+            match groups.iter_mut().find(|(s, _)| *s == sh) {
+                Some((_, v)) => v.push(j),
+                None => groups.push((sh, vec![j])),
+            }
+        }
+        for ((rows, cols), js) in &groups {
+            let mut mats: Tensors = js.iter().map(|&j| new_mom[j].clone()).collect();
+            newton_schulz_group(&mut mats, *rows, *cols, ns_iters);
+            // paper §5: for W in R^{m x n} rescale LR by sqrt(n/m)
+            let scale = (*cols as f32 / *rows as f32).sqrt();
+            for (o, &j) in mats.iter().zip(js) {
+                let pi = self.hidden[j];
+                let prow = &mut new_p[pi];
+                for (i, ov) in o.iter().enumerate() {
+                    let pv = params[pi][i];
+                    prow[i] = pv - lr * scale * ov - lr * wd * pv;
+                }
+            }
+        }
+
+        // --- AdamW branch (embed / head / norms) -----------------------
+        let mut new_m: Tensors = state[nh..nh + na].to_vec();
+        let mut new_v: Tensors = state[nh + na..].to_vec();
+        for (jj, &pi) in self.adamw_routed.iter().enumerate() {
+            let wd_eff = if self.params[pi].shape.len() == 2 { wd } else { 0.0 };
+            fused_adamw(&mut new_p[pi], &mut new_m[jj], &mut new_v[jj],
+                        &grads[pi], t, lr, wd_eff);
+        }
+
+        let mut new_state = new_mom;
+        new_state.extend(new_m);
+        new_state.extend(new_v);
+        Ok((new_p, new_state))
+    }
+
+    fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
+        let (b, t) = self.batch_dims(tokens);
+        let acts = self.model.forward(params, tokens, b, t)?;
+        let (loss, acc) = self.model.metrics(&acts.logits, tokens, b, t);
+        Ok((loss as f32, acc as f32))
+    }
+}

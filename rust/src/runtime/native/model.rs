@@ -1,0 +1,512 @@
+//! Pure-Rust decoder-only transformer: forward, hand-written reverse-
+//! mode backward, and eval metrics — the native mirror of
+//! `python/compile/model.py` (Gemma3-style: SwiGLU FFN, QK-norm, RoPE,
+//! RMSNorm before *and* after the attention/FFN blocks, untied head).
+//!
+//! Parameters arrive as the canonical flat list defined by
+//! `Manifest::canonical_param_specs` (embed, per-layer [norm, wq, wk,
+//! wv, qnorm, knorm, wo, norm, norm, wg, wu, wd, norm], norm_f, head).
+//! The big projections run through the blocked GEMM layer; attention's
+//! per-(batch, head) T x T work uses direct loops over contiguous
+//! head slices.  Loss is the mean next-token cross-entropy over
+//! (microbatch, seq_len - 1) positions, reduced in f64 (the finite-
+//! difference gradient checks in tests/native_backend.rs lean on that
+//! headroom).
+//!
+//! Everything is a pure function of (params, tokens) with fixed
+//! iteration order — the backbone of the native backend's bit-for-bit
+//! parallel==sequential determinism.
+
+use anyhow::{bail, Result};
+
+use super::gemm::{sgemm, sgemm_nt, sgemm_tn};
+use super::kernels::{rmsnorm_bwd, rmsnorm_fwd, rope_apply, rope_tables, sigmoid,
+                     silu};
+use crate::runtime::backend::Tensors;
+use crate::runtime::manifest::ModelDims;
+use crate::util::{add_assign, axpy};
+
+/// Flat-parameter offsets inside one layer's 13-tensor block.
+const O_NORM_ATT_IN: usize = 0;
+const O_WQ: usize = 1;
+const O_WK: usize = 2;
+const O_WV: usize = 3;
+const O_QNORM: usize = 4;
+const O_KNORM: usize = 5;
+const O_WO: usize = 6;
+const O_NORM_ATT_OUT: usize = 7;
+const O_NORM_FFN_IN: usize = 8;
+const O_WG: usize = 9;
+const O_WU: usize = 10;
+const O_WD: usize = 11;
+const O_NORM_FFN_OUT: usize = 12;
+const LAYER_TENSORS: usize = 13;
+
+/// Model geometry (derived from `ModelDims`; rope/eps match configs.py
+/// defaults — every ladder rung uses them).
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub n_layers: usize,
+    pub d: usize,
+    pub h: usize,
+    pub hd: usize,
+    pub f: usize,
+    pub v: usize,
+    pub rope_theta: f32,
+    pub eps: f32,
+    /// RoPE tables precomputed for `rope_len` positions (the manifest
+    /// seq_len); shorter sequences reuse a prefix, longer ones are
+    /// rejected in `rope_for`
+    rope_len: usize,
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+}
+
+/// Saved forward activations of one layer (everything backward needs).
+struct LayerActs {
+    /// residual input to the layer
+    xa: Vec<f32>,
+    /// rmsnorm(xa, norm_att_in)
+    a_in: Vec<f32>,
+    r1: Vec<f32>,
+    /// raw projections, pre QK-norm (v has no norm)
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    /// per-(row, head) inv rms of the QK-norms
+    rq: Vec<f32>,
+    rk: Vec<f32>,
+    /// post-norm, post-rope q/k (what scores are computed from)
+    qr: Vec<f32>,
+    kr: Vec<f32>,
+    /// softmax rows, (b, h, t, t), masked entries zero
+    probs: Vec<f32>,
+    attn_out: Vec<f32>,
+    /// attn_out @ wo
+    proj: Vec<f32>,
+    r2: Vec<f32>,
+    /// residual input to the FFN half (xa + rmsnorm(proj))
+    xf: Vec<f32>,
+    f_in: Vec<f32>,
+    r3: Vec<f32>,
+    g_pre: Vec<f32>,
+    u: Vec<f32>,
+    /// silu(g_pre) * u
+    prod: Vec<f32>,
+    /// prod @ wd
+    ffn_out: Vec<f32>,
+    r4: Vec<f32>,
+}
+
+/// Whole-forward activation record.
+pub struct Acts {
+    layers: Vec<LayerActs>,
+    /// input to the final norm
+    x_final: Vec<f32>,
+    rf: Vec<f32>,
+    xnorm: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+impl NativeModel {
+    /// Build the model geometry for a manifest config, precomputing the
+    /// RoPE tables for its seq_len.
+    pub fn from_dims(dims: &ModelDims, rope_theta: f32, eps: f32) -> NativeModel {
+        let hd = dims.head_dim();
+        let (rope_cos, rope_sin) = rope_tables(dims.seq_len, hd, rope_theta);
+        NativeModel {
+            n_layers: dims.n_layers,
+            d: dims.d_model,
+            h: dims.n_heads,
+            hd,
+            f: dims.d_ff,
+            v: dims.vocab,
+            rope_theta,
+            eps,
+            rope_len: dims.seq_len,
+            rope_cos,
+            rope_sin,
+        }
+    }
+
+    /// RoPE tables for a `t`-position batch: a prefix view of the
+    /// precomputed tables (row-major by position, so any t <= the
+    /// manifest seq_len is exactly the shorter table).  Session pins
+    /// every batch to the manifest shape today; if variable-length
+    /// forward ever lands (ROADMAP follow-up), extend the cache here.
+    fn rope_for(&self, t: usize) -> Result<(&[f32], &[f32])> {
+        if t > self.rope_len {
+            bail!("seq len {t} exceeds the precomputed RoPE table ({})",
+                  self.rope_len);
+        }
+        let half = self.hd / 2;
+        Ok((&self.rope_cos[..t * half], &self.rope_sin[..t * half]))
+    }
+
+    fn li(&self, layer: usize, off: usize) -> usize {
+        1 + layer * LAYER_TENSORS + off
+    }
+
+    fn idx_norm_f(&self) -> usize {
+        1 + self.n_layers * LAYER_TENSORS
+    }
+
+    fn idx_head(&self) -> usize {
+        2 + self.n_layers * LAYER_TENSORS
+    }
+
+    /// Forward pass over one microbatch, recording every activation the
+    /// backward pass needs.  tokens: (b, t) row-major.
+    pub fn forward(&self, params: &Tensors, tokens: &[i32], b: usize, t: usize)
+                   -> Result<Acts> {
+        let (d, f, v) = (self.d, self.f, self.v);
+        let (h, hd) = (self.h, self.hd);
+        let bt = b * t;
+        debug_assert_eq!(tokens.len(), bt);
+        for &tok in tokens {
+            if tok < 0 || tok as usize >= v {
+                bail!("token {tok} out of vocab range 0..{v}");
+            }
+        }
+
+        // embedding lookup, scaled by sqrt(d)
+        let scale = (d as f32).sqrt();
+        let embed = &params[0];
+        let mut x = vec![0f32; bt * d];
+        for (r, &tok) in tokens.iter().enumerate() {
+            let src = &embed[tok as usize * d..(tok as usize + 1) * d];
+            let dst = &mut x[r * d..(r + 1) * d];
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o = s * scale;
+            }
+        }
+
+        let (cos, sin) = self.rope_for(t)?;
+        let mut layers = Vec::with_capacity(self.n_layers);
+        for layer in 0..self.n_layers {
+            let g1 = &params[self.li(layer, O_NORM_ATT_IN)];
+            let wq = &params[self.li(layer, O_WQ)];
+            let wk = &params[self.li(layer, O_WK)];
+            let wv = &params[self.li(layer, O_WV)];
+            let qnorm = &params[self.li(layer, O_QNORM)];
+            let knorm = &params[self.li(layer, O_KNORM)];
+            let wo = &params[self.li(layer, O_WO)];
+            let g2 = &params[self.li(layer, O_NORM_ATT_OUT)];
+            let g3 = &params[self.li(layer, O_NORM_FFN_IN)];
+            let wg = &params[self.li(layer, O_WG)];
+            let wu = &params[self.li(layer, O_WU)];
+            let wd_ = &params[self.li(layer, O_WD)];
+            let g4 = &params[self.li(layer, O_NORM_FFN_OUT)];
+
+            // --- attention half -----------------------------------------
+            let xa = x;
+            let (a_in, r1) = rmsnorm_fwd(&xa, g1, d, self.eps);
+            let mut qh = vec![0f32; bt * d];
+            sgemm(bt, d, d, &a_in, wq, &mut qh);
+            let mut kh = vec![0f32; bt * d];
+            sgemm(bt, d, d, &a_in, wk, &mut kh);
+            let mut vh = vec![0f32; bt * d];
+            sgemm(bt, d, d, &a_in, wv, &mut vh);
+            // QK-norm over head slices (rows of hd), then RoPE
+            let (mut qr, rq) = rmsnorm_fwd(&qh, qnorm, hd, self.eps);
+            let (mut kr, rk) = rmsnorm_fwd(&kh, knorm, hd, self.eps);
+            rope_apply(&mut qr, b, t, h, hd, cos, sin, false);
+            rope_apply(&mut kr, b, t, h, hd, cos, sin, false);
+            let mut probs = vec![0f32; b * h * t * t];
+            let mut attn_out = vec![0f32; bt * d];
+            self.attention_fwd(&qr, &kr, &vh, &mut probs, &mut attn_out, b, t);
+            let mut proj = vec![0f32; bt * d];
+            sgemm(bt, d, d, &attn_out, wo, &mut proj);
+            let (y1, r2) = rmsnorm_fwd(&proj, g2, d, self.eps);
+            let mut xf = xa.clone();
+            add_assign(&mut xf, &y1);
+
+            // --- SwiGLU half ---------------------------------------------
+            let (f_in, r3) = rmsnorm_fwd(&xf, g3, d, self.eps);
+            let mut g_pre = vec![0f32; bt * f];
+            sgemm(bt, f, d, &f_in, wg, &mut g_pre);
+            let mut u = vec![0f32; bt * f];
+            sgemm(bt, f, d, &f_in, wu, &mut u);
+            let prod: Vec<f32> = g_pre
+                .iter()
+                .zip(&u)
+                .map(|(gv, uv)| silu(*gv) * uv)
+                .collect();
+            let mut ffn_out = vec![0f32; bt * d];
+            sgemm(bt, d, f, &prod, wd_, &mut ffn_out);
+            let (y2, r4) = rmsnorm_fwd(&ffn_out, g4, d, self.eps);
+            let mut x_next = xf.clone();
+            add_assign(&mut x_next, &y2);
+
+            layers.push(LayerActs {
+                xa, a_in, r1, qh, kh, vh, rq, rk, qr, kr, probs, attn_out,
+                proj, r2, xf, f_in, r3, g_pre, u, prod, ffn_out, r4,
+            });
+            x = x_next;
+        }
+
+        let norm_f = &params[self.idx_norm_f()];
+        let (xnorm, rf) = rmsnorm_fwd(&x, norm_f, d, self.eps);
+        let mut logits = vec![0f32; bt * v];
+        sgemm(bt, v, d, &xnorm, &params[self.idx_head()], &mut logits);
+        Ok(Acts { layers, x_final: x, rf, xnorm, logits })
+    }
+
+    /// Scores + causal softmax + weighted value sum, per (batch, head).
+    #[allow(clippy::too_many_arguments)]
+    fn attention_fwd(&self, qr: &[f32], kr: &[f32], vh: &[f32], probs: &mut [f32],
+                     attn_out: &mut [f32], b: usize, t: usize) {
+        let (h, hd, d) = (self.h, self.hd, self.d);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let mut srow = vec![0f32; t];
+        for b_ in 0..b {
+            for h_ in 0..h {
+                for q_ in 0..t {
+                    let qoff = (b_ * t + q_) * d + h_ * hd;
+                    let qv = &qr[qoff..qoff + hd];
+                    let mut mx = f32::NEG_INFINITY;
+                    for k_ in 0..=q_ {
+                        let koff = (b_ * t + k_) * d + h_ * hd;
+                        let s = dot_head(qv, &kr[koff..koff + hd]) * inv_sqrt;
+                        srow[k_] = s;
+                        mx = mx.max(s);
+                    }
+                    let mut sum = 0f32;
+                    for sv in srow.iter_mut().take(q_ + 1) {
+                        let e = (*sv - mx).exp();
+                        *sv = e;
+                        sum += e;
+                    }
+                    let inv = 1.0 / sum;
+                    let pbase = ((b_ * h + h_) * t + q_) * t;
+                    for k_ in 0..=q_ {
+                        let p = srow[k_] * inv;
+                        probs[pbase + k_] = p;
+                        let koff = (b_ * t + k_) * d + h_ * hd;
+                        let orow = &mut attn_out[qoff..qoff + hd];
+                        axpy(orow, p, &vh[koff..koff + hd]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Backward through scores/softmax/value-sum.  dqr/dkr/dvh must be
+    /// zero-initialized (b*t*d).
+    #[allow(clippy::too_many_arguments)]
+    fn attention_bwd(&self, qr: &[f32], kr: &[f32], vh: &[f32], probs: &[f32],
+                     dattn: &[f32], dqr: &mut [f32], dkr: &mut [f32],
+                     dvh: &mut [f32], b: usize, t: usize) {
+        let (h, hd, d) = (self.h, self.hd, self.d);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let mut dp = vec![0f32; t];
+        for b_ in 0..b {
+            for h_ in 0..h {
+                for q_ in 0..t {
+                    let qoff = (b_ * t + q_) * d + h_ * hd;
+                    let da = &dattn[qoff..qoff + hd];
+                    let pbase = ((b_ * h + h_) * t + q_) * t;
+                    let prow = &probs[pbase..pbase + t];
+                    // dP = dattn . v, and the softmax row dot p . dP
+                    let mut pdp = 0f32;
+                    for k_ in 0..=q_ {
+                        let koff = (b_ * t + k_) * d + h_ * hd;
+                        let dpk = dot_head(da, &vh[koff..koff + hd]);
+                        dp[k_] = dpk;
+                        pdp += prow[k_] * dpk;
+                    }
+                    for k_ in 0..=q_ {
+                        let p = prow[k_];
+                        let ds = p * (dp[k_] - pdp) * inv_sqrt;
+                        let koff = (b_ * t + k_) * d + h_ * hd;
+                        axpy(&mut dqr[qoff..qoff + hd], ds, &kr[koff..koff + hd]);
+                        axpy(&mut dkr[koff..koff + hd], ds, &qr[qoff..qoff + hd]);
+                        axpy(&mut dvh[koff..koff + hd], p, da);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mean next-token cross-entropy over (b, t-1) positions plus its
+    /// gradient w.r.t. the logits.  Loss reduces in f64.
+    pub fn loss_and_dlogits(&self, logits: &[f32], tokens: &[i32], b: usize,
+                            t: usize) -> (f64, Vec<f32>) {
+        let v = self.v;
+        let n_pos = b * (t - 1);
+        let inv_n = 1.0 / n_pos as f32;
+        let mut loss = 0f64;
+        let mut dl = vec![0f32; b * t * v];
+        for b_ in 0..b {
+            for t_ in 0..t - 1 {
+                let row = b_ * t + t_;
+                let lrow = &logits[row * v..(row + 1) * v];
+                let target = tokens[b_ * t + t_ + 1] as usize;
+                let mx = lrow.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let mut sum = 0f64;
+                for &lx in lrow {
+                    sum += ((lx - mx) as f64).exp();
+                }
+                let logz = mx as f64 + sum.ln();
+                loss += logz - lrow[target] as f64;
+                let drow = &mut dl[row * v..(row + 1) * v];
+                for (o, &lx) in drow.iter_mut().zip(lrow) {
+                    *o = (((lx - mx) as f64).exp() / sum) as f32 * inv_n;
+                }
+                drow[target] -= inv_n;
+            }
+        }
+        (loss / n_pos as f64, dl)
+    }
+
+    /// Eval metrics: (mean CE loss, next-token top-1 accuracy), same
+    /// position set as the loss.
+    pub fn metrics(&self, logits: &[f32], tokens: &[i32], b: usize, t: usize)
+                   -> (f64, f64) {
+        let v = self.v;
+        let n_pos = b * (t - 1);
+        let mut loss = 0f64;
+        let mut hits = 0usize;
+        for b_ in 0..b {
+            for t_ in 0..t - 1 {
+                let row = b_ * t + t_;
+                let lrow = &logits[row * v..(row + 1) * v];
+                let target = tokens[b_ * t + t_ + 1] as usize;
+                let mut mx = f32::NEG_INFINITY;
+                let mut arg = 0usize;
+                for (j, &lx) in lrow.iter().enumerate() {
+                    if lx > mx {
+                        mx = lx;
+                        arg = j;
+                    }
+                }
+                let mut sum = 0f64;
+                for &lx in lrow {
+                    sum += ((lx - mx) as f64).exp();
+                }
+                loss += mx as f64 + sum.ln() - lrow[target] as f64;
+                if arg == target {
+                    hits += 1;
+                }
+            }
+        }
+        (loss / n_pos as f64, hits as f64 / n_pos as f64)
+    }
+
+    /// Reverse-mode backward from dlogits to per-parameter gradients.
+    pub fn backward(&self, params: &Tensors, tokens: &[i32], acts: &Acts,
+                    dlogits: &[f32], b: usize, t: usize) -> Tensors {
+        let (d, f, v) = (self.d, self.f, self.v);
+        let (h, hd) = (self.h, self.hd);
+        let bt = b * t;
+        let mut grads: Tensors = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let (cos, sin) = self
+            .rope_for(t)
+            .expect("backward always follows a forward that validated t");
+
+        // head + final norm
+        let head_idx = self.idx_head();
+        let norm_f_idx = self.idx_norm_f();
+        sgemm_tn(d, v, bt, &acts.xnorm, dlogits, &mut grads[head_idx]);
+        let mut dxnorm = vec![0f32; bt * d];
+        sgemm_nt(bt, d, v, dlogits, &params[head_idx], &mut dxnorm);
+        let mut dx = vec![0f32; bt * d];
+        rmsnorm_bwd(&acts.x_final, &params[norm_f_idx], &acts.rf, &dxnorm, d,
+                    &mut dx, &mut grads[norm_f_idx]);
+
+        for layer in (0..self.n_layers).rev() {
+            let la = &acts.layers[layer];
+
+            // --- SwiGLU half (x_out = xf + rmsnorm(ffn_out, g4)) ---------
+            let mut dffn_out = vec![0f32; bt * d];
+            rmsnorm_bwd(&la.ffn_out, &params[self.li(layer, O_NORM_FFN_OUT)],
+                        &la.r4, &dx, d, &mut dffn_out,
+                        &mut grads[self.li(layer, O_NORM_FFN_OUT)]);
+            sgemm_tn(f, d, bt, &la.prod, &dffn_out,
+                     &mut grads[self.li(layer, O_WD)]);
+            let mut dprod = vec![0f32; bt * f];
+            sgemm_nt(bt, f, d, &dffn_out, &params[self.li(layer, O_WD)],
+                     &mut dprod);
+            let mut dg_pre = vec![0f32; bt * f];
+            let mut du = vec![0f32; bt * f];
+            for i in 0..bt * f {
+                let gp = la.g_pre[i];
+                let sg = sigmoid(gp);
+                du[i] = dprod[i] * gp * sg;
+                dg_pre[i] = dprod[i] * la.u[i] * sg * (1.0 + gp * (1.0 - sg));
+            }
+            sgemm_tn(d, f, bt, &la.f_in, &dg_pre,
+                     &mut grads[self.li(layer, O_WG)]);
+            sgemm_tn(d, f, bt, &la.f_in, &du, &mut grads[self.li(layer, O_WU)]);
+            let mut df_in = vec![0f32; bt * d];
+            sgemm_nt(bt, d, f, &dg_pre, &params[self.li(layer, O_WG)],
+                     &mut df_in);
+            let mut tmp = vec![0f32; bt * d];
+            sgemm_nt(bt, d, f, &du, &params[self.li(layer, O_WU)], &mut tmp);
+            add_assign(&mut df_in, &tmp);
+            let mut dxf = vec![0f32; bt * d];
+            rmsnorm_bwd(&la.xf, &params[self.li(layer, O_NORM_FFN_IN)], &la.r3,
+                        &df_in, d, &mut dxf,
+                        &mut grads[self.li(layer, O_NORM_FFN_IN)]);
+            add_assign(&mut dxf, &dx); // residual skip
+
+            // --- attention half (xf = xa + rmsnorm(proj, g2)) ------------
+            let mut dproj = vec![0f32; bt * d];
+            rmsnorm_bwd(&la.proj, &params[self.li(layer, O_NORM_ATT_OUT)],
+                        &la.r2, &dxf, d, &mut dproj,
+                        &mut grads[self.li(layer, O_NORM_ATT_OUT)]);
+            sgemm_tn(d, d, bt, &la.attn_out, &dproj,
+                     &mut grads[self.li(layer, O_WO)]);
+            let mut dattn = vec![0f32; bt * d];
+            sgemm_nt(bt, d, d, &dproj, &params[self.li(layer, O_WO)],
+                     &mut dattn);
+            let mut dqr = vec![0f32; bt * d];
+            let mut dkr = vec![0f32; bt * d];
+            let mut dvh = vec![0f32; bt * d];
+            self.attention_bwd(&la.qr, &la.kr, &la.vh, &la.probs, &dattn,
+                               &mut dqr, &mut dkr, &mut dvh, b, t);
+            rope_apply(&mut dqr, b, t, h, hd, cos, sin, true);
+            rope_apply(&mut dkr, b, t, h, hd, cos, sin, true);
+            let mut dqh = vec![0f32; bt * d];
+            rmsnorm_bwd(&la.qh, &params[self.li(layer, O_QNORM)], &la.rq, &dqr,
+                        hd, &mut dqh, &mut grads[self.li(layer, O_QNORM)]);
+            let mut dkh = vec![0f32; bt * d];
+            rmsnorm_bwd(&la.kh, &params[self.li(layer, O_KNORM)], &la.rk, &dkr,
+                        hd, &mut dkh, &mut grads[self.li(layer, O_KNORM)]);
+            sgemm_tn(d, d, bt, &la.a_in, &dqh, &mut grads[self.li(layer, O_WQ)]);
+            sgemm_tn(d, d, bt, &la.a_in, &dkh, &mut grads[self.li(layer, O_WK)]);
+            sgemm_tn(d, d, bt, &la.a_in, &dvh, &mut grads[self.li(layer, O_WV)]);
+            let mut da_in = vec![0f32; bt * d];
+            sgemm_nt(bt, d, d, &dqh, &params[self.li(layer, O_WQ)], &mut da_in);
+            sgemm_nt(bt, d, d, &dkh, &params[self.li(layer, O_WK)], &mut tmp);
+            add_assign(&mut da_in, &tmp);
+            sgemm_nt(bt, d, d, &dvh, &params[self.li(layer, O_WV)], &mut tmp);
+            add_assign(&mut da_in, &tmp);
+            let mut dxa = vec![0f32; bt * d];
+            rmsnorm_bwd(&la.xa, &params[self.li(layer, O_NORM_ATT_IN)], &la.r1,
+                        &da_in, d, &mut dxa,
+                        &mut grads[self.li(layer, O_NORM_ATT_IN)]);
+            add_assign(&mut dxa, &dxf); // residual skip
+            dx = dxa;
+        }
+
+        // embedding scatter-add (rows in ascending (b, t) order)
+        let scale = (d as f32).sqrt();
+        for (r, &tok) in tokens.iter().enumerate() {
+            let grow = &mut grads[0][tok as usize * d..(tok as usize + 1) * d];
+            axpy(grow, scale, &dx[r * d..(r + 1) * d]);
+        }
+        grads
+    }
+}
+
+/// Short contiguous dot product (head slices; hd is small).
+#[inline]
+fn dot_head(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}

@@ -1,0 +1,273 @@
+//! PJRT backend: loads HLO-text artifacts and executes them on the
+//! XLA CPU client.
+//!
+//! One `PjrtBackend` per model config.  The five executables (init,
+//! fwd_grad, apply_adamw, apply_muon, eval_step) are compiled once and
+//! reused for every worker — workers are pure parameter/state vectors,
+//! so a single compiled executable serves all K replicas.
+//!
+//! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
+//! 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids);
+//! the text parser reassigns ids.
+//!
+//! Without the `pjrt` cargo feature this compiles against
+//! `runtime::xla_stub` and `load` fails fast at `PjRtClient::cpu()`;
+//! `Session::load` never reaches it on the default build (it selects
+//! the native backend instead).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[cfg(feature = "pjrt")]
+use xla::{
+    Error as XlaError, HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+    PjRtLoadedExecutable, XlaComputation,
+};
+
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub::{
+    Error as XlaError, HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+    PjRtLoadedExecutable, XlaComputation,
+};
+
+use super::backend::{Backend, Tensors, NS_STEPS};
+use super::manifest::Manifest;
+
+pub struct PjrtBackend {
+    manifest: Manifest,
+    client: PjRtClient,
+    exe_init: PjRtLoadedExecutable,
+    exe_fwd_grad: PjRtLoadedExecutable,
+    exe_apply_adamw: PjRtLoadedExecutable,
+    exe_apply_muon: PjRtLoadedExecutable,
+    exe_eval: PjRtLoadedExecutable,
+}
+
+// SAFETY: the parallel WorkerPool shares the backend across scoped
+// threads.  This is sound because (a) every method takes `&self` and
+// the backend holds no interior mutability; (b) the PJRT C API
+// specifies the entry points used here — BufferFromHostBuffer, Execute
+// and buffer-to-literal transfers — as thread-safe on a shared
+// client/loaded-executable (xla_extension 0.5.1 routes them through
+// the C++ PjRt CPU client, whose handles are atomically refcounted
+// shared_ptrs); (c) the wrapper handles are created once in `load` and
+// only dropped when the backend is, never cloned or freed from worker
+// threads.  The determinism regression test
+// (tests/parallel_determinism.rs) exercises this contract.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Compile every executable of a config's artifact dir.
+    pub fn load(manifest: &Manifest) -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().map_err(wrap)?;
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.exe_path(name)?;
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(wrap)
+                .with_context(|| format!("loading {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(wrap)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(PjrtBackend {
+            exe_init: compile("init")?,
+            exe_fwd_grad: compile("fwd_grad")?,
+            exe_apply_adamw: compile("apply_adamw")?,
+            exe_apply_muon: compile("apply_muon")?,
+            exe_eval: compile("eval_step")?,
+            manifest: manifest.clone(),
+            client,
+        })
+    }
+
+    /// Host -> device transfer with an OWNED buffer.  We deliberately
+    /// avoid `execute::<Literal>`: its C-side input conversion leaks the
+    /// intermediate device buffers (~input bytes per call; measured
+    /// ~190 KB/step at nano, OOM after ~40 cached runs — see
+    /// EXPERIMENTS.md §Perf).  `buffer_from_host_buffer` + `execute_b`
+    /// keeps every input buffer under rust Drop.
+    fn tensor_buffer(&self, data: &[f32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(wrap)
+    }
+
+    fn tokens_buffer(&self, data: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(wrap)
+    }
+
+    fn scalar_buffer(&self, x: f32) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(&[x], &[], None).map_err(wrap)
+    }
+
+    fn scalar_u32_buffer(&self, x: u32) -> Result<PjRtBuffer> {
+        self.client.buffer_from_host_buffer(&[x], &[], None).map_err(wrap)
+    }
+
+    fn run(exe: &PjRtLoadedExecutable, inputs: &[PjRtBuffer]) -> Result<Vec<Literal>> {
+        let result = exe
+            .execute_b::<&PjRtBuffer>(&inputs.iter().collect::<Vec<_>>())
+            .map_err(wrap)?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?
+            .to_tuple()
+            .map_err(wrap)
+    }
+
+    fn unpack(
+        outs: &mut std::vec::IntoIter<Literal>,
+        shapes: &[Vec<usize>],
+    ) -> Result<Tensors> {
+        let mut tensors = Vec::with_capacity(shapes.len());
+        for shape in shapes {
+            let lit = outs.next().ok_or_else(|| anyhow!("output underflow"))?;
+            let v = lit.to_vec::<f32>().map_err(wrap)?;
+            let want: usize = shape.iter().product();
+            if v.len() != want {
+                bail!("output tensor has {} elems, want {want}", v.len());
+            }
+            tensors.push(v);
+        }
+        Ok(tensors)
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.manifest.params.iter().map(|p| p.shape.clone()).collect()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Tensors> {
+        let outs = Self::run(&self.exe_init, &[self.scalar_u32_buffer(seed)?])?;
+        let mut it = outs.into_iter();
+        Self::unpack(&mut it, &self.param_shapes())
+    }
+
+    fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
+        let cfg = &self.manifest.config;
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        inputs.push(self.tokens_buffer(tokens, &[cfg.microbatch, cfg.seq_len])?);
+        let outs = Self::run(&self.exe_fwd_grad, &inputs)?;
+        let mut it = outs.into_iter();
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss output"))?
+            .get_first_element::<f32>()
+            .map_err(wrap)?;
+        let grads = Self::unpack(&mut it, &self.param_shapes())?;
+        Ok((loss, grads))
+    }
+
+    fn apply_adamw(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<(Tensors, Tensors)> {
+        let np = self.manifest.params.len();
+        let mut inputs = Vec::with_capacity(4 * np + 3);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        for (s, spec) in state.iter().zip(&self.manifest.adamw_state) {
+            inputs.push(self.tensor_buffer(s, &spec.shape)?);
+        }
+        for (g, spec) in grads.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(g, &spec.shape)?);
+        }
+        inputs.push(self.scalar_buffer(t)?);
+        inputs.push(self.scalar_buffer(lr)?);
+        inputs.push(self.scalar_buffer(wd)?);
+        let outs = Self::run(&self.exe_apply_adamw, &inputs)?;
+        let mut it = outs.into_iter();
+        let new_params = Self::unpack(&mut it, &self.param_shapes())?;
+        let state_shapes: Vec<Vec<usize>> = self
+            .manifest
+            .adamw_state
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect();
+        let new_state = Self::unpack(&mut it, &state_shapes)?;
+        Ok((new_params, new_state))
+    }
+
+    fn apply_muon(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<(Tensors, Tensors)> {
+        if ns_iters != NS_STEPS {
+            bail!(
+                "the AOT apply_muon executable bakes in {NS_STEPS} \
+                 Newton-Schulz iterations; --ns-iters={ns_iters} needs the \
+                 native backend"
+            );
+        }
+        let np = self.manifest.params.len();
+        let mut inputs = Vec::with_capacity(np + state.len() + np + 3);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        for (s, spec) in state.iter().zip(&self.manifest.muon_state) {
+            inputs.push(self.tensor_buffer(s, &spec.shape)?);
+        }
+        for (g, spec) in grads.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(g, &spec.shape)?);
+        }
+        inputs.push(self.scalar_buffer(t)?);
+        inputs.push(self.scalar_buffer(lr)?);
+        inputs.push(self.scalar_buffer(wd)?);
+        let outs = Self::run(&self.exe_apply_muon, &inputs)?;
+        let mut it = outs.into_iter();
+        let new_params = Self::unpack(&mut it, &self.param_shapes())?;
+        let state_shapes: Vec<Vec<usize>> = self
+            .manifest
+            .muon_state
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect();
+        let new_state = Self::unpack(&mut it, &state_shapes)?;
+        Ok((new_params, new_state))
+    }
+
+    fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
+        let cfg = &self.manifest.config;
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for (p, spec) in params.iter().zip(&self.manifest.params) {
+            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        }
+        inputs.push(self.tokens_buffer(tokens, &[cfg.microbatch, cfg.seq_len])?);
+        let outs = Self::run(&self.exe_eval, &inputs)?;
+        if outs.len() != 2 {
+            bail!("eval_step must return (loss, acc)");
+        }
+        let loss = outs[0].get_first_element::<f32>().map_err(wrap)?;
+        let acc = outs[1].get_first_element::<f32>().map_err(wrap)?;
+        Ok((loss, acc))
+    }
+}
+
+/// The xla crate has its own error type; fold it into anyhow.
+fn wrap(e: XlaError) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

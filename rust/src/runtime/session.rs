@@ -1,40 +1,33 @@
-//! PJRT session: loads HLO-text artifacts and exposes typed step calls.
+//! Session: typed step calls over a pluggable execution backend.
 //!
-//! One `Session` per model config.  The five executables (init,
-//! fwd_grad, apply_adamw, apply_muon, eval_step) are compiled once and
-//! reused for every worker — workers are pure parameter/state vectors,
-//! so a single compiled executable serves all K replicas.
+//! One `Session` per model config.  The session owns the manifest (the
+//! flat-tensor contract), input validation and wall-clock accounting;
+//! the math runs in a [`Backend`] chosen at load time:
+//!
+//! * **native** (default build): the pure-Rust transformer + optimizer
+//!   kernels in `runtime/native/` — no artifacts or toolchain needed;
+//! * **pjrt** (`--features pjrt` + `make artifacts`): the AOT-compiled
+//!   HLO executables in `runtime/pjrt.rs`.
 //!
 //! The session is `Send + Sync`: the `WorkerPool` issues fwd_grad /
-//! apply calls for the K replicas concurrently from scoped threads
-//! against the shared `PjRtLoadedExecutable`s, so execution stats are
-//! kept in atomics and every method takes `&self`.
-//!
-//! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
-//! 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids);
-//! the text parser reassigns ids.
+//! apply calls for the K replicas concurrently from scoped threads, so
+//! execution stats are kept in atomics and every method takes `&self`.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
-#[cfg(feature = "pjrt")]
-use xla::{Error as XlaError, HloModuleProto, Literal, PjRtBuffer, PjRtClient,
-          PjRtLoadedExecutable, XlaComputation};
-
-#[cfg(not(feature = "pjrt"))]
-use super::xla_stub::{Error as XlaError, HloModuleProto, Literal, PjRtBuffer,
-                      PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
+use super::backend::{Backend, NS_STEPS};
 use super::manifest::Manifest;
+use super::native::NativeBackend;
+use super::pjrt::PjrtBackend;
 
-/// A set of equally-ordered flat tensors (parameters, grads, opt state).
-pub type Tensors = Vec<Vec<f32>>;
+pub use super::backend::Tensors;
 
-/// Wall-clock accounting per executable, used by netsim calibration and
-/// the fig9 system-metrics table.
+/// Wall-clock accounting per step function, used by netsim calibration
+/// and the fig9 system-metrics table.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     pub fwd_grad_calls: u64,
@@ -77,9 +70,14 @@ impl StatsCell {
     }
 
     fn reset(&self) {
-        for a in [&self.fwd_grad_calls, &self.fwd_grad_nanos,
-                  &self.apply_calls, &self.apply_nanos,
-                  &self.eval_calls, &self.eval_nanos] {
+        for a in [
+            &self.fwd_grad_calls,
+            &self.fwd_grad_nanos,
+            &self.apply_calls,
+            &self.apply_nanos,
+            &self.eval_calls,
+            &self.eval_nanos,
+        ] {
             a.store(0, Ordering::Relaxed);
         }
     }
@@ -87,52 +85,33 @@ impl StatsCell {
 
 pub struct Session {
     pub manifest: Manifest,
-    client: PjRtClient,
-    exe_init: PjRtLoadedExecutable,
-    exe_fwd_grad: PjRtLoadedExecutable,
-    exe_apply_adamw: PjRtLoadedExecutable,
-    exe_apply_muon: PjRtLoadedExecutable,
-    exe_eval: PjRtLoadedExecutable,
+    backend: Box<dyn Backend>,
     stats: StatsCell,
 }
 
-// SAFETY: the parallel WorkerPool shares `&Session` across scoped
-// threads.  This is sound because (a) every Session method takes
-// `&self` and the only interior mutability is the atomic `StatsCell`;
-// (b) the PJRT C API specifies the entry points used here —
-// BufferFromHostBuffer, Execute and buffer-to-literal transfers — as
-// thread-safe on a shared client/loaded-executable (xla_extension
-// 0.5.1 routes them through the C++ PjRt CPU client, whose handles are
-// atomically refcounted shared_ptrs); (c) the wrapper handles are
-// created once in `load` and only dropped when the Session is, never
-// cloned or freed from worker threads.  The determinism regression
-// test (tests/parallel_determinism.rs) exercises this contract.
-unsafe impl Send for Session {}
-unsafe impl Sync for Session {}
-
 impl Session {
-    /// Load and compile every executable of a config's artifact dir.
+    /// Load a session for a config's artifact dir, selecting the
+    /// backend:
+    ///
+    /// * `pjrt` feature enabled AND `manifest.json` present — the AOT
+    ///   path: compile the HLO-text executables;
+    /// * otherwise — the native backend.  An on-disk manifest is still
+    ///   honored (layout source of truth); with no artifacts at all the
+    ///   manifest is synthesized from the built-in config ladder using
+    ///   the directory's file name (`artifacts/nano` -> `nano`).
     pub fn load(artifact_dir: &Path) -> Result<Session> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = PjRtClient::cpu().map_err(wrap)?;
-        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
-            let path = manifest.exe_path(name)?;
-            let proto = HloModuleProto::from_text_file(&path).map_err(wrap)
-                .with_context(|| format!("loading {}", path.display()))?;
-            let comp = XlaComputation::from_proto(&proto);
-            client.compile(&comp).map_err(wrap)
-                .with_context(|| format!("compiling {name}"))
-        };
-        Ok(Session {
-            exe_init: compile("init")?,
-            exe_fwd_grad: compile("fwd_grad")?,
-            exe_apply_adamw: compile("apply_adamw")?,
-            exe_apply_muon: compile("apply_muon")?,
-            exe_eval: compile("eval_step")?,
-            manifest,
-            client,
-            stats: StatsCell::default(),
-        })
+        let has_artifacts = artifact_dir.join("manifest.json").exists();
+        if cfg!(feature = "pjrt") && has_artifacts {
+            let manifest = Manifest::load(artifact_dir)?;
+            let backend: Box<dyn Backend> = Box::new(PjrtBackend::load(&manifest)?);
+            return Ok(Session { manifest, backend, stats: StatsCell::default() });
+        }
+        let manifest = Manifest::load_or_synthesize(artifact_dir)?;
+        let native = NativeBackend::new(&manifest).with_context(|| {
+            format!("building native backend for {}", manifest.config.name)
+        })?;
+        let backend: Box<dyn Backend> = Box::new(native);
+        Ok(Session { manifest, backend, stats: StatsCell::default() })
     }
 
     pub fn stats(&self) -> ExecStats {
@@ -144,73 +123,12 @@ impl Session {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Host -> device transfer with an OWNED buffer.  We deliberately
-    /// avoid `execute::<Literal>`: its C-side input conversion leaks the
-    /// intermediate device buffers (~input bytes per call; measured
-    /// ~190 KB/step at nano, OOM after ~40 cached runs — see
-    /// EXPERIMENTS.md §Perf).  `buffer_from_host_buffer` + `execute_b`
-    /// keeps every input buffer under rust Drop.
-    fn tensor_buffer(&self, data: &[f32], shape: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, shape, None)
-            .map_err(wrap)
-    }
-
-    fn tokens_buffer(&self, data: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, shape, None)
-            .map_err(wrap)
-    }
-
-    fn scalar_buffer(&self, x: f32) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(&[x], &[], None)
-            .map_err(wrap)
-    }
-
-    fn scalar_u32_buffer(&self, x: u32) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(&[x], &[], None)
-            .map_err(wrap)
-    }
-
-    fn run(exe: &PjRtLoadedExecutable, inputs: &[PjRtBuffer]) -> Result<Vec<Literal>> {
-        let result = exe.execute_b::<&PjRtBuffer>(
-            &inputs.iter().collect::<Vec<_>>()).map_err(wrap)?;
-        result[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?
-            .to_tuple()
-            .map_err(wrap)
-    }
-
-    fn unpack(outs: &mut std::vec::IntoIter<Literal>, shapes: &[Vec<usize>])
-              -> Result<Tensors> {
-        let mut tensors = Vec::with_capacity(shapes.len());
-        for shape in shapes {
-            let lit = outs.next().ok_or_else(|| anyhow!("output underflow"))?;
-            let v = lit.to_vec::<f32>().map_err(wrap)?;
-            let want: usize = shape.iter().product();
-            if v.len() != want {
-                bail!("output tensor has {} elems, want {want}", v.len());
-            }
-            tensors.push(v);
-        }
-        Ok(tensors)
-    }
-
-    fn param_shapes(&self) -> Vec<Vec<usize>> {
-        self.manifest.params.iter().map(|p| p.shape.clone()).collect()
+        self.backend.platform()
     }
 
     /// Initialize a fresh parameter set from a seed (deterministic).
     pub fn init_params(&self, seed: u32) -> Result<Tensors> {
-        let outs = Self::run(&self.exe_init, &[self.scalar_u32_buffer(seed)?])?;
-        let mut it = outs.into_iter();
-        Self::unpack(&mut it, &self.param_shapes())
+        self.backend.init_params(seed)
     }
 
     /// Zero-initialized AdamW state [m..]+[v..].
@@ -231,30 +149,31 @@ impl Session {
             .collect()
     }
 
+    fn check_params(&self, params: &Tensors, what: &str) -> Result<()> {
+        if params.len() != self.manifest.params.len() {
+            bail!(
+                "{what} got {} tensors, manifest has {}",
+                params.len(),
+                self.manifest.params.len()
+            );
+        }
+        Ok(())
+    }
+
     /// Forward+backward on one microbatch: returns (loss, grads).
     pub fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
         let t0 = Instant::now();
         let cfg = &self.manifest.config;
         if tokens.len() != cfg.microbatch * cfg.seq_len {
-            bail!("tokens must be microbatch*seq_len = {}",
-                  cfg.microbatch * cfg.seq_len);
+            bail!(
+                "tokens must be microbatch*seq_len = {}",
+                cfg.microbatch * cfg.seq_len
+            );
         }
-        let mut inputs = Vec::with_capacity(params.len() + 1);
-        for (p, spec) in params.iter().zip(&self.manifest.params) {
-            inputs.push(self.tensor_buffer(p, &spec.shape)?);
-        }
-        inputs.push(
-            self.tokens_buffer(tokens, &[cfg.microbatch, cfg.seq_len])?);
-        let outs = Self::run(&self.exe_fwd_grad, &inputs)?;
-        let mut it = outs.into_iter();
-        let loss = it
-            .next()
-            .ok_or_else(|| anyhow!("missing loss output"))?
-            .get_first_element::<f32>()
-            .map_err(wrap)?;
-        let grads = Self::unpack(&mut it, &self.param_shapes())?;
+        self.check_params(params, "fwd_grad")?;
+        let out = self.backend.fwd_grad(params, tokens)?;
         StatsCell::record(&self.stats.fwd_grad_calls, &self.stats.fwd_grad_nanos, t0);
-        Ok((loss, grads))
+        Ok(out)
     }
 
     /// One AdamW step. state = [m..]+[v..]; t is 1-indexed.
@@ -272,34 +191,15 @@ impl Session {
         if state.len() != 2 * np {
             bail!("adamw state must have 2*{np} tensors");
         }
-        let mut inputs = Vec::with_capacity(4 * np + 3);
-        for (p, spec) in params.iter().zip(&self.manifest.params) {
-            inputs.push(self.tensor_buffer(p, &spec.shape)?);
-        }
-        for (s, spec) in state.iter().zip(&self.manifest.adamw_state) {
-            inputs.push(self.tensor_buffer(s, &spec.shape)?);
-        }
-        for (g, spec) in grads.iter().zip(&self.manifest.params) {
-            inputs.push(self.tensor_buffer(g, &spec.shape)?);
-        }
-        inputs.push(self.scalar_buffer(t)?);
-        inputs.push(self.scalar_buffer(lr)?);
-        inputs.push(self.scalar_buffer(wd)?);
-        let outs = Self::run(&self.exe_apply_adamw, &inputs)?;
-        let mut it = outs.into_iter();
-        let new_params = Self::unpack(&mut it, &self.param_shapes())?;
-        let state_shapes: Vec<Vec<usize>> = self
-            .manifest
-            .adamw_state
-            .iter()
-            .map(|s| s.shape.clone())
-            .collect();
-        let new_state = Self::unpack(&mut it, &state_shapes)?;
+        self.check_params(params, "apply_adamw params")?;
+        self.check_params(grads, "apply_adamw grads")?;
+        let out = self.backend.apply_adamw(params, state, grads, t, lr, wd)?;
         StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
-        Ok((new_params, new_state))
+        Ok(out)
     }
 
-    /// One Muon step. state = [mom..]+[m..]+[v..] per the manifest.
+    /// One Muon step with the paper's Newton-Schulz iteration count.
+    /// state = [mom..]+[m..]+[v..] per the manifest.
     pub fn apply_muon(
         &self,
         params: &Tensors,
@@ -309,61 +209,50 @@ impl Session {
         lr: f32,
         wd: f32,
     ) -> Result<(Tensors, Tensors)> {
+        self.apply_muon_ns(params, state, grads, t, lr, wd, NS_STEPS)
+    }
+
+    /// One Muon step with an explicit Newton-Schulz iteration count
+    /// (`--ns-iters`; 0 degrades Muon to normalized momentum SGD on the
+    /// hidden matrices).  The PJRT backend only accepts the baked-in
+    /// [`NS_STEPS`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_muon_ns(
+        &self,
+        params: &Tensors,
+        state: &Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<(Tensors, Tensors)> {
         let t0 = Instant::now();
-        let np = self.manifest.params.len();
         if state.len() != self.manifest.muon_state.len() {
-            bail!("muon state must have {} tensors",
-                  self.manifest.muon_state.len());
+            bail!("muon state must have {} tensors", self.manifest.muon_state.len());
         }
-        let mut inputs = Vec::with_capacity(np + state.len() + np + 3);
-        for (p, spec) in params.iter().zip(&self.manifest.params) {
-            inputs.push(self.tensor_buffer(p, &spec.shape)?);
-        }
-        for (s, spec) in state.iter().zip(&self.manifest.muon_state) {
-            inputs.push(self.tensor_buffer(s, &spec.shape)?);
-        }
-        for (g, spec) in grads.iter().zip(&self.manifest.params) {
-            inputs.push(self.tensor_buffer(g, &spec.shape)?);
-        }
-        inputs.push(self.scalar_buffer(t)?);
-        inputs.push(self.scalar_buffer(lr)?);
-        inputs.push(self.scalar_buffer(wd)?);
-        let outs = Self::run(&self.exe_apply_muon, &inputs)?;
-        let mut it = outs.into_iter();
-        let new_params = Self::unpack(&mut it, &self.param_shapes())?;
-        let state_shapes: Vec<Vec<usize>> = self
-            .manifest
-            .muon_state
-            .iter()
-            .map(|s| s.shape.clone())
-            .collect();
-        let new_state = Self::unpack(&mut it, &state_shapes)?;
+        self.check_params(params, "apply_muon params")?;
+        self.check_params(grads, "apply_muon grads")?;
+        let out = self
+            .backend
+            .apply_muon(params, state, grads, t, lr, wd, ns_iters)?;
         StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
-        Ok((new_params, new_state))
+        Ok(out)
     }
 
     /// Eval loss + next-token accuracy on one microbatch.
     pub fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
         let t0 = Instant::now();
         let cfg = &self.manifest.config;
-        let mut inputs = Vec::with_capacity(params.len() + 1);
-        for (p, spec) in params.iter().zip(&self.manifest.params) {
-            inputs.push(self.tensor_buffer(p, &spec.shape)?);
+        if tokens.len() != cfg.microbatch * cfg.seq_len {
+            bail!(
+                "tokens must be microbatch*seq_len = {}",
+                cfg.microbatch * cfg.seq_len
+            );
         }
-        inputs.push(
-            self.tokens_buffer(tokens, &[cfg.microbatch, cfg.seq_len])?);
-        let outs = Self::run(&self.exe_eval, &inputs)?;
-        if outs.len() != 2 {
-            bail!("eval_step must return (loss, acc)");
-        }
-        let loss = outs[0].get_first_element::<f32>().map_err(wrap)?;
-        let acc = outs[1].get_first_element::<f32>().map_err(wrap)?;
+        self.check_params(params, "eval_step")?;
+        let out = self.backend.eval_step(params, tokens)?;
         StatsCell::record(&self.stats.eval_calls, &self.stats.eval_nanos, t0);
-        Ok((loss, acc))
+        Ok(out)
     }
-}
-
-/// The xla crate has its own error type; fold it into anyhow.
-fn wrap(e: XlaError) -> anyhow::Error {
-    anyhow!("xla: {e}")
 }

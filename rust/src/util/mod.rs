@@ -115,6 +115,22 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Median wall-clock seconds of `f` over `reps` trials after one
+/// warmup call — the single timing protocol shared by `muloco bench`
+/// and the GEMM perf-headline measurement (`gemm::time_blocked_vs_naive`),
+/// so numbers inside one BENCH_native.json are comparable.
+pub fn median_secs<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    let times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    median(&times)
+}
+
 /// Median (copies + sorts).
 pub fn median(xs: &[f64]) -> f64 {
     let mut v: Vec<f64> = xs.to_vec();

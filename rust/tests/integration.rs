@@ -1,8 +1,11 @@
-//! End-to-end integration over the PJRT runtime + coordinator.
+//! End-to-end integration over the runtime + coordinator.
 //!
-//! Requires `make artifacts`.  All checks share one compiled Session
-//! (XLA's LLVM jit is expensive), so this is a single #[test] running
-//! a scripted sequence of scenarios.
+//! Runs on whichever backend `Session::load` selects: the native
+//! pure-Rust backend on the default build (no artifacts needed — this
+//! test never skips), or PJRT when artifacts + the `pjrt` feature are
+//! present.  All checks share one Session (XLA's LLVM jit is expensive
+//! on the PJRT path), so this is a single #[test] running a scripted
+//! sequence of scenarios.
 
 use muloco::compress::Compression;
 use muloco::coordinator::{branch_capture, dp_warmstart, evaluate, train,
@@ -27,10 +30,6 @@ fn short_cfg(method: Method, k: usize) -> TrainConfig {
 #[test]
 fn end_to_end() {
     let dir = std::path::PathBuf::from("artifacts/nano");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing; run `make artifacts` (test skipped)");
-        return;
-    }
     let sess = Session::load(&dir).expect("session");
 
     // --- determinism: same seed, same params --------------------------
