@@ -4,7 +4,7 @@
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
-use muloco::coordinator::{train, Method, TrainConfig};
+use muloco::coordinator::{train, Method, RunSpec};
 use muloco::runtime::Session;
 
 fn main() -> anyhow::Result<()> {
@@ -16,12 +16,13 @@ fn main() -> anyhow::Result<()> {
         sess.platform()
     );
 
-    let mut cfg = TrainConfig::new("nano", Method::Muloco);
-    cfg.global_batch = 32;
-    cfg = cfg.tuned_outer(4)?;
-    cfg.total_steps = 60;
-    cfg.sync_interval = 15;
-    cfg.eval_every = 15;
+    let cfg = RunSpec::new("nano", Method::Muloco)
+        .batch(32)
+        .workers(4)
+        .steps(60)
+        .sync_interval(15)
+        .eval_every(15)
+        .build()?;
 
     println!(
         "training MuLoCo: K={} workers, H={} local steps, {} total steps",

@@ -10,7 +10,7 @@
 //! Pass `--model nano --steps 60` for a quick check; defaults exercise
 //! the real workload.
 
-use muloco::coordinator::{train, Method, TrainConfig};
+use muloco::coordinator::{train, Method, RunSpec};
 use muloco::metrics::RunLogger;
 use muloco::runtime::Session;
 use muloco::util::cli::Args;
@@ -38,16 +38,17 @@ fn main() -> anyhow::Result<()> {
         ("dp-muon", Method::DpMuon, 1),
         ("dp-adamw", Method::DpAdamw, 1),
     ] {
-        let mut cfg = TrainConfig::new(&model, method);
-        cfg.global_batch = batch;
+        let mut spec = RunSpec::new(&model, method)
+            .batch(batch)
+            .steps(steps)
+            .sync_interval(15)
+            .eval_every(15)
+            .eval_batches(4)
+            .warmup(steps / 10);
         if method.is_local_update() {
-            cfg = cfg.tuned_outer(k)?;
+            spec = spec.workers(k);
         }
-        cfg.total_steps = steps;
-        cfg.sync_interval = 15;
-        cfg.eval_every = 15;
-        cfg.eval_batches = 4;
-        cfg.warmup_steps = steps / 10;
+        let cfg = spec.build()?;
         println!("\n=== {label}: K={} H={} B={} steps={}",
                  cfg.workers, cfg.sync_interval, cfg.global_batch, steps);
         let t0 = std::time::Instant::now();

@@ -21,7 +21,7 @@ use muloco::analysis::Mat;
 use muloco::comm::{AllToAll, CollectiveOp, Hierarchical, OpKind, Ring,
                    Topology};
 use muloco::compress::{Compressor, ErrorFeedback, QuantMode, Quantizer, TopK};
-use muloco::coordinator::{train, Method, NesterovOuter, TrainConfig};
+use muloco::coordinator::{train, Method, NesterovOuter, RunSpec};
 use muloco::runtime::native::gemm::time_blocked_vs_naive;
 use muloco::runtime::native::muon::newton_schulz_group;
 use muloco::runtime::Session;
@@ -214,13 +214,14 @@ fn main() -> anyhow::Result<()> {
     // one full outer round per method — the Table 9 end-to-end row
     println!("\n== full training rounds (K=4, H=5, B=16) ==");
     for method in [Method::Diloco, Method::Muloco] {
-        let mut cfg = TrainConfig::new("nano", method);
-        cfg.global_batch = 16;
-        cfg = cfg.tuned_outer(4)?;
-        cfg.total_steps = 5;
-        cfg.sync_interval = 5;
-        cfg.eval_every = 5;
-        cfg.eval_batches = 1;
+        let cfg = RunSpec::new("nano", method)
+            .batch(16)
+            .workers(4)
+            .steps(5)
+            .sync_interval(5)
+            .eval_every(5)
+            .eval_batches(1)
+            .build()?;
         let t0 = Instant::now();
         let r = train(&sess, &cfg)?;
         let per_step = t0.elapsed().as_secs_f64() / 5.0;
@@ -237,14 +238,15 @@ fn main() -> anyhow::Result<()> {
     // under K x the single-worker wall clock on a multi-core host
     println!("\n== worker-pool scaling (MuLoCo, H=5, B=32) ==");
     let round = |k: usize, parallel: bool| -> anyhow::Result<f64> {
-        let mut cfg = TrainConfig::new("nano", Method::Muloco);
-        cfg.global_batch = 32;
-        cfg = cfg.tuned_outer(k)?;
-        cfg.total_steps = 10;
-        cfg.sync_interval = 5;
-        cfg.eval_every = 10;
-        cfg.eval_batches = 1;
-        cfg.parallel = parallel;
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .batch(32)
+            .workers(k)
+            .steps(10)
+            .sync_interval(5)
+            .eval_every(10)
+            .eval_batches(1)
+            .parallel(parallel)
+            .build()?;
         let t0 = Instant::now();
         let _ = train(&sess, &cfg)?;
         Ok(t0.elapsed().as_secs_f64())

@@ -252,6 +252,18 @@ impl Hierarchical {
             .map(|gi| exact_mean(&buffers[gi * gs..(gi + 1) * gs]))
             .collect()
     }
+
+    /// Rank attribution: group gi's leader is rank `gi * gs`, everyone
+    /// else is a member — the asymmetry `CommStats::sent_per_rank`
+    /// reports (leaders carry the WAN exchange and the DC broadcast).
+    /// Public so per-rank consumers (fig9's role labels) share the one
+    /// definition instead of re-deriving it.
+    pub fn roles(g: usize, gs: usize) -> (Vec<usize>, Vec<usize>) {
+        let leaders: Vec<usize> = (0..g).map(|gi| gi * gs).collect();
+        let members: Vec<usize> =
+            (0..g * gs).filter(|r| r % gs != 0).collect();
+        (leaders, members)
+    }
 }
 
 impl Topology for Hierarchical {
@@ -265,31 +277,37 @@ impl Topology for Hierarchical {
             return t;
         }
         let (g, gs) = self.split(k);
+        let (leaders, members) = Self::roles(g, gs);
         match shape {
             OpShape::ReduceScatterGather => {
                 // members ship fp32 contributions to their DC leader
                 if gs > 1 {
-                    t.push(LinkClass::Intra, dense, k - g);
+                    t.push_ranked(LinkClass::Intra, dense, members.clone(),
+                                  leaders.clone());
                 }
                 // leaders: two-quant all-to-all across the WAN
                 if g > 1 {
-                    t.merge(&flat_rsag_trace(g, wire));
+                    t.merge(&flat_rsag_trace(g, wire).with_ranks(&leaders));
                 }
                 // leaders broadcast the reduced tensor inside the DC
                 if gs > 1 {
-                    t.push(LinkClass::Intra, (gs - 1) * dense, g);
+                    t.push_ranked(LinkClass::Intra, (gs - 1) * dense,
+                                  leaders, members);
                 }
             }
             OpShape::Gather => {
                 if gs > 1 {
-                    t.push(LinkClass::Intra, wire, k - g);
+                    t.push_ranked(LinkClass::Intra, wire, members.clone(),
+                                  leaders.clone());
                 }
                 // leaders exchange their DC's concatenated payloads
                 if g > 1 {
-                    t.push(LinkClass::Inter, (g - 1) * gs * wire, g);
+                    t.push_ranked(LinkClass::Inter, (g - 1) * gs * wire,
+                                  leaders.clone(), leaders.clone());
                 }
                 if gs > 1 {
-                    t.push(LinkClass::Intra, (gs - 1) * dense, g);
+                    t.push_ranked(LinkClass::Intra, (gs - 1) * dense,
+                                  leaders, members);
                 }
             }
         }

@@ -22,13 +22,20 @@ pub enum LinkClass {
 }
 
 /// One synchronous phase of a collective.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Hop {
     pub link: LinkClass,
     /// bytes each participating worker transmits during this hop
     pub bytes_per_worker: usize,
     /// number of workers transmitting concurrently in this hop
     pub senders: usize,
+    /// explicit sender ranks for asymmetric topologies; `None` means
+    /// the hop is symmetric — ranks `0..senders` each transmit
+    /// `bytes_per_worker` (exactly the flat single-tier collectives)
+    pub sender_ranks: Option<Vec<usize>>,
+    /// explicit receiver ranks; `None` mirrors the symmetric case
+    /// (every sender also receives its share of the hop's volume)
+    pub receiver_ranks: Option<Vec<usize>>,
 }
 
 /// Bandwidth per link class, bytes/sec.  `flat` models a single-tier
@@ -88,8 +95,56 @@ pub struct CommTrace {
 impl CommTrace {
     pub fn push(&mut self, link: LinkClass, bytes_per_worker: usize, senders: usize) {
         if bytes_per_worker > 0 && senders > 0 {
-            self.hops.push(Hop { link, bytes_per_worker, senders });
+            self.hops.push(Hop {
+                link,
+                bytes_per_worker,
+                senders,
+                sender_ranks: None,
+                receiver_ranks: None,
+            });
         }
+    }
+
+    /// Push a hop with explicit rank attribution: `senders` each
+    /// transmit `bytes_per_worker`, `receivers` split the hop's total
+    /// volume evenly.  Used by asymmetric (leader-heavy) topologies.
+    /// An empty `receivers` normalizes to the senders themselves (the
+    /// symmetric exchange semantics), so `per_rank` never sees an
+    /// attributed hop without receivers.
+    pub fn push_ranked(
+        &mut self,
+        link: LinkClass,
+        bytes_per_worker: usize,
+        senders: Vec<usize>,
+        receivers: Vec<usize>,
+    ) {
+        if bytes_per_worker > 0 && !senders.is_empty() {
+            let receivers =
+                if receivers.is_empty() { senders.clone() } else { receivers };
+            self.hops.push(Hop {
+                link,
+                bytes_per_worker,
+                senders: senders.len(),
+                sender_ranks: Some(senders),
+                receiver_ranks: Some(receivers),
+            });
+        }
+    }
+
+    /// Re-attribute every symmetric hop of `self` to the given global
+    /// ranks (hop position i -> `ranks[i]`): embeds a flat sub-trace —
+    /// e.g. the WAN all-to-all among DC leaders — into a larger
+    /// topology's rank space.  Hops that already carry ranks are kept.
+    pub fn with_ranks(mut self, ranks: &[usize]) -> CommTrace {
+        for h in self.hops.iter_mut() {
+            if h.sender_ranks.is_none() {
+                let rs: Vec<usize> =
+                    ranks.iter().copied().take(h.senders).collect();
+                h.sender_ranks = Some(rs.clone());
+                h.receiver_ranks = Some(rs);
+            }
+        }
+        self
     }
 
     /// Append another trace's hops (sequential composition).
@@ -144,14 +199,77 @@ impl CommTrace {
             .sum()
     }
 
+    /// Per-rank accounting over `k` workers: (sent, received) bytes per
+    /// rank.  Symmetric hops attribute `bytes_per_worker` to ranks
+    /// `0..senders` on both sides; ranked hops follow their explicit
+    /// attribution, receivers splitting the hop's total volume evenly.
+    pub fn per_rank(&self, k: usize) -> (Vec<u64>, Vec<u64>) {
+        let mut sent = vec![0u64; k];
+        let mut recv = vec![0u64; k];
+        for h in &self.hops {
+            let total = (h.bytes_per_worker * h.senders) as u64;
+            match &h.sender_ranks {
+                Some(rs) => {
+                    for &r in rs.iter().filter(|&&r| r < k) {
+                        sent[r] += h.bytes_per_worker as u64;
+                    }
+                }
+                None => {
+                    for s in sent.iter_mut().take(h.senders.min(k)) {
+                        *s += h.bytes_per_worker as u64;
+                    }
+                }
+            }
+            // receivers split the volume evenly, the first `rem` of
+            // them absorbing the integer-division remainder — so the
+            // ledger conserves bytes (sum(sent) == sum(recv)) even
+            // when the receiver count does not divide the total
+            match &h.receiver_ranks {
+                Some(rs) if !rs.is_empty() => {
+                    let n = rs.len() as u64;
+                    let (share, rem) = (total / n, (total % n) as usize);
+                    for (i, &r) in rs.iter().enumerate() {
+                        if r < k {
+                            recv[r] += share + (i < rem) as u64;
+                        }
+                    }
+                }
+                _ => {
+                    let n = h.senders.min(k).max(1);
+                    let share = total / n as u64;
+                    let rem = (total % n as u64) as usize;
+                    for (i, r) in recv.iter_mut().take(n).enumerate() {
+                        *r += share + (i < rem) as u64;
+                    }
+                }
+            }
+        }
+        (sent, recv)
+    }
+
     /// Collapse to aggregate statistics (one collective = one event
     /// fragment; see [`CommStats::add`] / [`CommStats::absorb_event`]).
+    /// Scalars only — use [`stats_for`](CommTrace::stats_for) when the
+    /// per-rank vectors are wanted.
     pub fn stats(&self) -> CommStats {
         CommStats {
             bytes_per_worker: self.bytes_per_worker(),
             total_bytes: self.total_bytes(),
             peak_hop_bytes: self.peak_hop_bytes(),
             peak_event_bytes: 0,
+            sent_per_rank: Vec::new(),
+            recv_per_rank: Vec::new(),
+        }
+    }
+
+    /// [`stats`](CommTrace::stats) plus the asymmetric per-rank
+    /// sent/received vectors over `k` workers.
+    pub fn stats_for(&self, k: usize) -> CommStats {
+        let (sent, recv) = self.per_rank(k);
+        CommStats {
+            sent_per_rank: sent,
+            recv_per_rank: recv,
+            ..self.stats()
         }
     }
 }
@@ -169,7 +287,7 @@ impl CommTrace {
 ///
 /// [`add`]: CommStats::add
 /// [`absorb_event`]: CommStats::absorb_event
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     /// bytes sent by each worker (busiest endpoint for asymmetric
     /// topologies), summed over the run
@@ -180,23 +298,43 @@ pub struct CommStats {
     pub peak_hop_bytes: usize,
     /// largest per-worker volume of a single sync event
     pub peak_event_bytes: usize,
+    /// asymmetric accounting: bytes actually sent per rank (empty when
+    /// nothing was traced with rank attribution — e.g. DP runs).
+    /// Leader-heavy hierarchical runs show leaders far above members
+    /// here while `bytes_per_worker` only reports the busiest endpoint
+    pub sent_per_rank: Vec<u64>,
+    /// bytes received per rank (same attribution as `sent_per_rank`)
+    pub recv_per_rank: Vec<u64>,
+}
+
+fn add_per_rank(acc: &mut Vec<u64>, other: &[u64]) {
+    if acc.len() < other.len() {
+        acc.resize(other.len(), 0);
+    }
+    for (a, b) in acc.iter_mut().zip(other) {
+        *a += b;
+    }
 }
 
 impl CommStats {
     /// Combine stats of collectives belonging to the same sync event.
-    pub fn add(&mut self, other: CommStats) {
+    pub fn add(&mut self, other: &CommStats) {
         self.bytes_per_worker += other.bytes_per_worker;
         self.total_bytes += other.total_bytes;
         self.peak_hop_bytes = self.peak_hop_bytes.max(other.peak_hop_bytes);
         self.peak_event_bytes = self.peak_event_bytes.max(other.peak_event_bytes);
+        add_per_rank(&mut self.sent_per_rank, &other.sent_per_rank);
+        add_per_rank(&mut self.recv_per_rank, &other.recv_per_rank);
     }
 
     /// Fold one finished sync event into run-level accounting.
-    pub fn absorb_event(&mut self, event: CommStats) {
+    pub fn absorb_event(&mut self, event: &CommStats) {
         self.bytes_per_worker += event.bytes_per_worker;
         self.total_bytes += event.total_bytes;
         self.peak_hop_bytes = self.peak_hop_bytes.max(event.peak_hop_bytes);
         self.peak_event_bytes = self.peak_event_bytes.max(event.bytes_per_worker);
+        add_per_rank(&mut self.sent_per_rank, &event.sent_per_rank);
+        add_per_rank(&mut self.recv_per_rank, &event.recv_per_rank);
     }
 }
 
@@ -256,17 +394,87 @@ mod tests {
     #[test]
     fn event_vs_run_aggregation() {
         let mut event1 = CommStats::default();
-        event1.add(trace().stats());
-        event1.add(trace().stats());
+        event1.add(&trace().stats());
+        event1.add(&trace().stats());
         assert_eq!(event1.bytes_per_worker, 400);
         assert_eq!(event1.peak_hop_bytes, 100);
 
         let event2 = trace().stats(); // a smaller (single-tensor) event
         let mut run = CommStats::default();
-        run.absorb_event(event1);
-        run.absorb_event(event2);
+        run.absorb_event(&event1);
+        run.absorb_event(&event2);
         assert_eq!(run.bytes_per_worker, 600);
         assert_eq!(run.peak_event_bytes, 400);
         assert_eq!(run.peak_hop_bytes, 100);
+    }
+
+    #[test]
+    fn symmetric_per_rank_attribution() {
+        let mut t = CommTrace::default();
+        t.push(LinkClass::Inter, 100, 4);
+        let (sent, recv) = t.per_rank(4);
+        assert_eq!(sent, vec![100; 4]);
+        assert_eq!(recv, vec![100; 4]);
+        // stats_for carries the vectors; stats() stays scalar-only
+        assert_eq!(t.stats_for(4).sent_per_rank, vec![100; 4]);
+        assert!(t.stats().sent_per_rank.is_empty());
+    }
+
+    #[test]
+    fn ranked_hops_attribute_asymmetrically() {
+        // 6 members ship 40 B each to 2 leaders, leaders exchange 30 B,
+        // leaders broadcast 120 B back to their 3 members
+        let leaders = vec![0usize, 4];
+        let members = vec![1usize, 2, 3, 5, 6, 7];
+        let mut t = CommTrace::default();
+        t.push_ranked(LinkClass::Intra, 40, members.clone(), leaders.clone());
+        t.push_ranked(LinkClass::Inter, 30, leaders.clone(), leaders.clone());
+        t.push_ranked(LinkClass::Intra, 120, leaders.clone(), members.clone());
+        let (sent, recv) = t.per_rank(8);
+        // leaders: send 30 (WAN) + 120 (broadcast); members send 40
+        assert_eq!(sent[0], 150);
+        assert_eq!(sent[4], 150);
+        assert_eq!(sent[1], 40);
+        // leaders receive 3*40 = 120 member contributions + 30 WAN;
+        // members receive 2*120/6 = 40 of the broadcast
+        assert_eq!(recv[0], 120 + 30);
+        assert_eq!(recv[1], 40);
+        // conservation: total sent == total received
+        assert_eq!(sent.iter().sum::<u64>(), recv.iter().sum::<u64>());
+        // event aggregation sums rank vectors elementwise
+        let mut run = CommStats::default();
+        run.absorb_event(&t.stats_for(8));
+        run.absorb_event(&t.stats_for(8));
+        assert_eq!(run.sent_per_rank[0], 300);
+        assert_eq!(run.recv_per_rank[1], 80);
+    }
+
+    #[test]
+    fn per_rank_conserves_bytes_under_uneven_receiver_splits() {
+        // 1 sender ships 100 B to 3 receivers: 34 + 33 + 33
+        let mut t = CommTrace::default();
+        t.push_ranked(LinkClass::Inter, 100, vec![0], vec![1, 2, 3]);
+        let (sent, recv) = t.per_rank(4);
+        assert_eq!(sent.iter().sum::<u64>(), 100);
+        assert_eq!(recv, vec![0, 34, 33, 33]);
+        assert_eq!(sent.iter().sum::<u64>(), recv.iter().sum::<u64>());
+        // empty receivers normalize to the senders (symmetric)
+        let mut t2 = CommTrace::default();
+        t2.push_ranked(LinkClass::Inter, 50, vec![2], vec![]);
+        let (sent2, recv2) = t2.per_rank(4);
+        assert_eq!(sent2[2], 50);
+        assert_eq!(recv2[2], 50);
+        assert_eq!(recv2[0], 0);
+    }
+
+    #[test]
+    fn with_ranks_embeds_a_flat_subtrace() {
+        let mut flat = CommTrace::default();
+        flat.push(LinkClass::Inter, 50, 2);
+        let embedded = flat.with_ranks(&[0, 4]);
+        let (sent, _) = embedded.per_rank(8);
+        assert_eq!(sent[0], 50);
+        assert_eq!(sent[4], 50);
+        assert_eq!(sent[1], 0);
     }
 }

@@ -70,6 +70,23 @@ impl Compression {
         }
     }
 
+    /// Canonical label: the exact string `parse` round-trips.  Used by
+    /// the knob registry for cache keys, spec files and table rows.
+    pub fn label(&self) -> String {
+        match self {
+            Compression::None => "none".to_string(),
+            Compression::Quant { bits, mode, rowwise } => format!(
+                "q{bits}-{}{}",
+                match mode {
+                    QuantMode::Linear => "linear",
+                    QuantMode::Statistical => "stat",
+                },
+                if *rowwise { "-rw" } else { "" }
+            ),
+            Compression::TopK { frac } => format!("topk{frac}"),
+        }
+    }
+
     pub fn parse(s: &str) -> anyhow::Result<Compression> {
         // forms: none | q<bits>-<linear|stat>[-rw] | topk<frac>
         let s = s.trim();
@@ -110,6 +127,18 @@ mod tests {
             Compression::TopK { frac: 0.05 }
         );
         assert!(Compression::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn label_round_trips_through_parse() {
+        for spec in ["none", "q8-linear", "q4-stat", "q2-linear-rw", "topk0.05"] {
+            let c = Compression::parse(spec).unwrap();
+            assert_eq!(Compression::parse(&c.label()).unwrap(), c);
+            assert_eq!(c.label(), spec, "label must be canonical");
+        }
+        // long-form mode names normalize to the canonical short form
+        assert_eq!(Compression::parse("q4-statistical").unwrap().label(),
+                   "q4-stat");
     }
 
     #[test]

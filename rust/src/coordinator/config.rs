@@ -35,6 +35,17 @@ impl Method {
         }
     }
 
+    /// Canonical machine name: the string `parse` round-trips, used by
+    /// the knob registry for cache keys and spec files.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::DpAdamw => "dp-adamw",
+            Method::DpMuon => "dp-muon",
+            Method::Diloco => "diloco",
+            Method::Muloco => "muloco",
+        }
+    }
+
     pub fn is_local_update(&self) -> bool {
         matches!(self, Method::Diloco | Method::Muloco)
     }
@@ -110,6 +121,12 @@ pub struct TrainConfig {
     /// to normalized momentum SGD on the hidden matrices; values other
     /// than 5 need the native backend (the AOT executable bakes 5 in)
     pub ns_iters: usize,
+    /// MuonBP-style block-periodic orthogonalization (Khaled et al.):
+    /// run Newton-Schulz every r-th inner step and fall back to
+    /// normalized momentum SGD on the steps between.  1 = classic Muon
+    /// (every step, bit-identical to the pre-knob dispatch); values > 1
+    /// need the native backend for the same reason as `ns_iters`
+    pub ortho_interval: usize,
     /// communication topology for the pseudogradient collectives
     /// (flat = the pre-refactor per-op defaults)
     pub topology: TopologySpec,
@@ -157,6 +174,7 @@ impl TrainConfig {
             ef_beta: 0.9,
             streaming_partitions: 1,
             ns_iters: crate::runtime::NS_STEPS,
+            ortho_interval: 1,
             topology: TopologySpec::Flat,
             overlap_tau: 0,
             eval_every: 30,
@@ -164,41 +182,6 @@ impl TrainConfig {
             seed: 17,
             parallel: true,
         }
-    }
-
-    /// Outer-LR/momentum defaults as a function of K (the Fig 22
-    /// sweep's optima: eta_out and mu rise with worker count).
-    ///
-    /// Errors immediately when `global_batch` does not shard across the
-    /// K workers, instead of silently storing an inconsistent config
-    /// that only blows up deep inside `train()`.
-    pub fn tuned_outer(mut self, k: usize) -> anyhow::Result<TrainConfig> {
-        if k == 0 {
-            anyhow::bail!("worker count K must be >= 1");
-        }
-        if self.global_batch % k != 0 {
-            anyhow::bail!(
-                "global_batch {} does not divide across K={k} workers; \
-                 pick a batch that shards evenly",
-                self.global_batch
-            );
-        }
-        self.workers = k;
-        let (eta, mu) = match (self.method, k) {
-            (Method::Muloco, 1) => (0.7, 0.6),
-            (Method::Muloco, 2) => (0.9, 0.7),
-            (Method::Muloco, 4) => (0.9, 0.8),
-            (Method::Muloco, 8) => (0.9, 0.8),
-            (Method::Muloco, _) => (1.0, 0.9),
-            (_, 1) => (0.6, 0.8),
-            (_, 2) => (0.9, 0.8),
-            (_, 4) => (0.9, 0.8),
-            (_, 8) => (0.9, 0.9),
-            (_, _) => (1.0, 0.9),
-        };
-        self.outer_lr = eta;
-        self.outer_momentum = mu;
-        Ok(self)
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -222,6 +205,12 @@ impl TrainConfig {
             && self.sync_interval % self.streaming_partitions as u64 != 0
         {
             anyhow::bail!("streaming partitions J must divide H");
+        }
+        if self.ortho_interval == 0 {
+            anyhow::bail!(
+                "ortho_interval must be >= 1 (1 = orthogonalize every \
+                 inner step, classic Muon)"
+            );
         }
         if let TopologySpec::Hier { groups } = self.topology {
             if groups == 0 {
@@ -336,22 +325,11 @@ mod tests {
     }
 
     #[test]
-    fn tuned_outer_rises_with_k() {
-        let c1 = TrainConfig::new("nano", Method::Muloco).tuned_outer(1).unwrap();
-        let c16 = TrainConfig::new("nano", Method::Muloco).tuned_outer(16).unwrap();
-        assert!(c16.outer_lr > c1.outer_lr);
-        assert!(c16.outer_momentum > c1.outer_momentum);
-    }
-
-    #[test]
-    fn tuned_outer_rejects_unshardable_batch() {
-        // global_batch 32 does not divide across 5 (or 0) workers
-        let err = TrainConfig::new("nano", Method::Muloco).tuned_outer(5);
-        assert!(err.is_err());
-        assert!(err.unwrap_err().to_string().contains("shards evenly"));
-        assert!(TrainConfig::new("nano", Method::Muloco).tuned_outer(0).is_err());
-        // a config that shards cleanly passes validate() end-to-end
-        let ok = TrainConfig::new("nano", Method::Muloco).tuned_outer(8).unwrap();
-        assert!(ok.validate().is_ok());
+    fn validation_rejects_zero_ortho_interval() {
+        let mut c = TrainConfig::new("nano", Method::Muloco);
+        c.ortho_interval = 0;
+        assert!(c.validate().is_err());
+        c.ortho_interval = 4;
+        assert!(c.validate().is_ok());
     }
 }

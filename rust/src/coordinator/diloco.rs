@@ -131,7 +131,7 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
 
     // global replica + the K-worker pool + the sync engine
     let mut theta = sess.init_params(cfg.seed as u32)?;
-    let inner = inner_with(cfg.method, cfg.ns_iters);
+    let inner = inner_with(cfg.method, cfg.ns_iters, cfg.ortho_interval);
     let mut pool =
         WorkerPool::new(sess, &corpus, inner.as_ref(), k, cfg.ef_beta, &theta);
     let mut engine = SyncEngine::for_run(man, cfg);

@@ -11,10 +11,12 @@ pub mod config;
 pub mod diloco;
 pub mod outer;
 pub mod probe;
+pub mod spec;
 pub mod sync;
 pub mod worker;
 
 pub use config::{Method, TrainConfig};
+pub use spec::{cache_key, knobs, RunSpec};
 pub use diloco::{accumulate_grads, evaluate, train, RunResult};
 pub use outer::NesterovOuter;
 pub use probe::{branch_capture, dp_warmstart, BranchCapture, Checkpoint};

@@ -34,7 +34,7 @@ pub fn dp_warmstart(
     let corpus = Corpus::new(sess.manifest.config.vocab, seed);
     let mut shard = corpus.shard(0);
     let mut theta = sess.init_params(seed as u32)?;
-    let inner = inner_with(method, NS_STEPS);
+    let inner = inner_with(method, NS_STEPS, 1);
     let mut state = inner.zero_state(sess);
     for t in 1..=steps {
         let (_, grads) = accumulate_grads(sess, &theta, &mut shard, batch_seqs)?;
@@ -79,7 +79,7 @@ pub fn branch_capture(
     assert!(per_worker >= man.config.microbatch,
             "batch too small for {k} workers");
 
-    let inner = inner_with(method, NS_STEPS);
+    let inner = inner_with(method, NS_STEPS, 1);
     let mut worker_delta = Vec::with_capacity(k);
     let mut step_updates = Vec::with_capacity(k);
     for w in 0..k {

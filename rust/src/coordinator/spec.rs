@@ -1,0 +1,565 @@
+//! Declarative run-spec layer: one schema for every training knob.
+//!
+//! The [`Knob`] registry declares each `TrainConfig` field exactly once
+//! (name, doc line, canonical stringifier, parser), and everything that
+//! used to hand-maintain a parallel field list is *derived* from it:
+//!
+//! * CLI parsing — `muloco train --<knob> <value>` loops over the
+//!   registry instead of a 30-line copy in `main.rs`, and the `--help`
+//!   flag list renders from the same doc strings ([`flag_help`]);
+//! * the canonical cache key ([`cache_key`]) — a new field lands in the
+//!   key the moment it lands in the registry, so it can never silently
+//!   alias cache entries (`tests/spec_contract.rs` perturbs every knob
+//!   and asserts the key moves);
+//! * spec-file round-trip — `muloco train --spec run.json`
+//!   ([`RunSpec::from_json`] / [`to_json`]) reproduces a flag-specified
+//!   run bit-for-bit (same key, same math).
+//!
+//! [`RunSpec`] is the builder over the registry: setters record which
+//! knobs were set explicitly, and [`RunSpec::build`] is the one place
+//! where defaulting (inner LR per scale, the Fig 22 tuned outer-HP
+//! table as a function of K) and validation happen, producing a
+//! finished [`TrainConfig`].
+//!
+//! [`to_json`]: spec_json
+
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::config::{default_lr, Method, TrainConfig};
+use crate::comm::TopologySpec;
+use crate::compress::Compression;
+use crate::util::json::Json;
+
+/// One declared run-configuration field.
+pub struct Knob {
+    /// CLI flag (`--name`) and spec-file field name.
+    pub name: &'static str,
+    /// short cache-key prefix (empty for self-describing values).
+    pub tag: &'static str,
+    /// one-line doc shown in `--help`.
+    pub doc: &'static str,
+    /// a valid non-default value: rendered in `--help`, and used by the
+    /// perturb-every-knob cache-key property test.
+    pub example: &'static str,
+    /// boolean CLI flag (`--name` with no value argument).
+    pub flag: bool,
+    /// participates in the canonical cache key (false only for knobs
+    /// that provably cannot affect the math, e.g. `sequential`).
+    pub in_key: bool,
+    /// canonical string value (round-trips through `set`).
+    pub get: fn(&TrainConfig) -> String,
+    /// parse + apply one value.
+    pub set: fn(&mut TrainConfig, &str) -> Result<()>,
+}
+
+macro_rules! parse_knob {
+    ($name:literal, $tag:literal, $ex:literal, $field:ident, $doc:literal) => {
+        Knob {
+            name: $name,
+            tag: $tag,
+            doc: $doc,
+            example: $ex,
+            flag: false,
+            in_key: true,
+            get: |c| c.$field.to_string(),
+            set: |c, v| {
+                c.$field = v
+                    .parse()
+                    .map_err(|e| anyhow!("bad value for --{}: {e}", $name))?;
+                Ok(())
+            },
+        }
+    };
+}
+
+/// The schema: every run-configuration field, declared once.  Registry
+/// order is the cache-key order — append new knobs at the position that
+/// reads best, the key derives from whatever is here.  Built once and
+/// cached: every `cache_key` / CLI-parse / Sweep-point resolution reads
+/// the same `'static` slice.
+pub fn knobs() -> &'static [Knob] {
+    static KNOBS: std::sync::OnceLock<Vec<Knob>> = std::sync::OnceLock::new();
+    KNOBS.get_or_init(build_registry)
+}
+
+fn build_registry() -> Vec<Knob> {
+    vec![
+        Knob {
+            name: "model",
+            tag: "",
+            doc: "artifact config name (nano|micro|tiny|small|med|big|e2e)",
+            example: "tiny",
+            flag: false,
+            in_key: true,
+            get: |c| c.model.clone(),
+            set: |c, v| {
+                c.model = v.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            name: "method",
+            tag: "",
+            doc: "optimizer recipe: muloco|diloco|dp-muon|dp-adamw",
+            example: "diloco",
+            flag: false,
+            in_key: true,
+            get: |c| c.method.key().to_string(),
+            set: |c, v| {
+                c.method = Method::parse(v)?;
+                Ok(())
+            },
+        },
+        parse_knob!("workers", "K", "16", workers,
+                    "number of DiLoCo workers K (1 for DP baselines)"),
+        parse_knob!("sync-interval", "H", "60", sync_interval,
+                    "inner steps between outer synchronizations H"),
+        parse_knob!("steps", "S", "480", total_steps,
+                    "total inner optimization steps"),
+        parse_knob!("batch", "B", "64", global_batch,
+                    "global batch in sequences (shards across K workers)"),
+        parse_knob!("lr", "lr", "0.05", lr,
+                    "peak inner learning rate (default: per-scale table)"),
+        parse_knob!("wd", "wd", "0.05", weight_decay,
+                    "decoupled weight decay lambda"),
+        parse_knob!("warmup", "wu", "48", warmup_steps,
+                    "linear warmup steps"),
+        parse_knob!("lr-floor", "fl", "0.05", lr_floor_frac,
+                    "cosine decay floor as a fraction of peak LR"),
+        parse_knob!("outer-lr", "olr", "0.85", outer_lr,
+                    "outer Nesterov learning rate (default: tuned-by-K table)"),
+        parse_knob!("outer-momentum", "om", "0.55", outer_momentum,
+                    "outer Nesterov momentum (default: tuned-by-K table)"),
+        Knob {
+            name: "compression",
+            tag: "",
+            doc: "pseudogradient compression: none|q<bits>-<linear|stat>[-rw]|topk<frac>",
+            example: "q4-stat",
+            flag: false,
+            in_key: true,
+            get: |c| c.compression.label(),
+            set: |c, v| {
+                c.compression = Compression::parse(v)?;
+                Ok(())
+            },
+        },
+        Knob {
+            name: "ef",
+            tag: "ef",
+            doc: "error feedback on the compressed pseudogradient (Algorithm 2)",
+            example: "true",
+            flag: true,
+            in_key: true,
+            get: |c| c.error_feedback.to_string(),
+            set: |c, v| {
+                c.error_feedback = parse_bool("ef", v)?;
+                Ok(())
+            },
+        },
+        parse_knob!("ef-beta", "efb", "0.95", ef_beta,
+                    "error-feedback accumulator decay beta"),
+        parse_knob!("streaming", "J", "3", streaming_partitions,
+                    "streaming sync partitions J (1 = classic DiLoCo)"),
+        parse_knob!("ns-iters", "ns", "3", ns_iters,
+                    "Muon Newton-Schulz depth (0 = normalized momentum SGD)"),
+        parse_knob!("ortho-interval", "r", "4", ortho_interval,
+                    "orthogonalize every r-th inner step (MuonBP; 1 = every step)"),
+        Knob {
+            name: "topology",
+            tag: "T",
+            doc: "collective topology: flat|ring|hier:<G>",
+            example: "hier:2",
+            flag: false,
+            in_key: true,
+            get: |c| c.topology.label(),
+            set: |c, v| {
+                c.topology = TopologySpec::parse(v)?;
+                Ok(())
+            },
+        },
+        parse_knob!("tau", "tau", "2", overlap_tau,
+                    "overlapped sync: apply each reduce tau steps late (0 = blocking)"),
+        parse_knob!("eval-every", "ev", "10", eval_every,
+                    "evaluate every this many steps"),
+        parse_knob!("eval-batches", "eb", "4", eval_batches,
+                    "eval microbatches per evaluation"),
+        parse_knob!("seed", "s", "23", seed,
+                    "data / init seed"),
+        Knob {
+            name: "sequential",
+            tag: "",
+            doc: "run the reference sequential path (bit-identical; excluded from cache keys)",
+            example: "true",
+            flag: true,
+            in_key: false,
+            get: |c| (!c.parallel).to_string(),
+            set: |c, v| {
+                c.parallel = !parse_bool("sequential", v)?;
+                Ok(())
+            },
+        },
+    ]
+}
+
+fn parse_bool(name: &str, v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "on" => Ok(true),
+        "false" | "0" | "off" => Ok(false),
+        other => bail!("bad value for --{name}: {other:?} (true|false)"),
+    }
+}
+
+/// The canonical cache key: every math-relevant knob, in registry
+/// order.  There is no hand-maintained field list to forget — adding a
+/// knob to [`knobs`] adds it to the key.
+pub fn cache_key(cfg: &TrainConfig) -> String {
+    knobs()
+        .iter()
+        .filter(|k| k.in_key)
+        .map(|k| format!("{}{}", k.tag, (k.get)(cfg)))
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// `--help` flag list rendered from the registry.
+pub fn flag_help() -> String {
+    let ks = knobs();
+    let width = ks.iter().map(|k| k.name.len()).max().unwrap_or(0);
+    ks.iter()
+        .map(|k| {
+            let arg = if k.flag { String::new() } else { format!(" {}", k.example) };
+            format!("  --{:<w$}{arg:<8}  {}\n", k.name, k.doc, w = width)
+        })
+        .collect()
+}
+
+/// Outer-HP defaults as a function of (method, K): the Fig 22 sweep's
+/// optima — eta_out and mu rise with worker count, MuLoCo prefers lower
+/// momentum at low K.  Applied by [`RunSpec::build`] whenever the outer
+/// knobs were not set explicitly.
+pub fn tuned_outer(method: Method, k: usize) -> (f64, f64) {
+    match (method, k) {
+        (Method::Muloco, 1) => (0.7, 0.6),
+        (Method::Muloco, 2) => (0.9, 0.7),
+        (Method::Muloco, 4) => (0.9, 0.8),
+        (Method::Muloco, 8) => (0.9, 0.8),
+        (Method::Muloco, _) => (1.0, 0.9),
+        (_, 1) => (0.6, 0.8),
+        (_, 2) => (0.9, 0.8),
+        (_, 4) => (0.9, 0.8),
+        (_, 8) => (0.9, 0.9),
+        (_, _) => (1.0, 0.9),
+    }
+}
+
+/// Builder over the knob registry.  Setters record which knobs were
+/// set explicitly; [`build`](RunSpec::build) fills the remaining
+/// defaults (per-scale inner LR, tuned outer HPs) and validates.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    cfg: TrainConfig,
+    explicit: BTreeSet<&'static str>,
+}
+
+macro_rules! setter {
+    ($fn_name:ident, $knob:literal, $ty:ty, $field:ident) => {
+        pub fn $fn_name(mut self, v: $ty) -> Self {
+            self.cfg.$field = v;
+            self.explicit.insert($knob);
+            self
+        }
+    };
+}
+
+impl RunSpec {
+    pub fn new(model: &str, method: Method) -> RunSpec {
+        RunSpec {
+            cfg: TrainConfig::new(model, method),
+            explicit: BTreeSet::new(),
+        }
+    }
+
+    setter!(workers, "workers", usize, workers);
+    setter!(sync_interval, "sync-interval", u64, sync_interval);
+    setter!(steps, "steps", u64, total_steps);
+    setter!(batch, "batch", usize, global_batch);
+    setter!(lr, "lr", f64, lr);
+    setter!(weight_decay, "wd", f64, weight_decay);
+    setter!(warmup, "warmup", u64, warmup_steps);
+    setter!(lr_floor, "lr-floor", f64, lr_floor_frac);
+    setter!(outer_lr, "outer-lr", f64, outer_lr);
+    setter!(outer_momentum, "outer-momentum", f64, outer_momentum);
+    setter!(compression, "compression", Compression, compression);
+    setter!(error_feedback, "ef", bool, error_feedback);
+    setter!(ef_beta, "ef-beta", f32, ef_beta);
+    setter!(streaming, "streaming", usize, streaming_partitions);
+    setter!(ns_iters, "ns-iters", usize, ns_iters);
+    setter!(ortho_interval, "ortho-interval", usize, ortho_interval);
+    setter!(topology, "topology", TopologySpec, topology);
+    setter!(tau, "tau", u64, overlap_tau);
+    setter!(eval_every, "eval-every", u64, eval_every);
+    setter!(eval_batches, "eval-batches", usize, eval_batches);
+    setter!(seed, "seed", u64, seed);
+
+    pub fn parallel(mut self, parallel: bool) -> Self {
+        self.cfg.parallel = parallel;
+        self.explicit.insert("sequential");
+        self
+    }
+
+    /// Set one knob by registry name (the CLI / spec-file path).
+    pub fn set(mut self, name: &str, value: &str) -> Result<Self> {
+        let ks = knobs();
+        let knob = ks
+            .iter()
+            .find(|k| k.name == name)
+            .ok_or_else(|| anyhow!("unknown knob {name:?}"))?;
+        (knob.set)(&mut self.cfg, value)?;
+        self.explicit.insert(knob.name);
+        Ok(self)
+    }
+
+    /// Peek at the config being assembled (defaults not yet applied).
+    pub fn peek(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Finish the spec: fill the derived defaults for every knob that
+    /// was not set explicitly — per-scale inner LR, and the Fig 22
+    /// tuned (eta_out, mu) table as a function of the final K — then
+    /// validate.  This is the *only* place defaulting happens; direct
+    /// `TrainConfig` mutation bypasses it and owns its own values.
+    pub fn build(self) -> Result<TrainConfig> {
+        let mut cfg = self.cfg;
+        if !self.explicit.contains("lr") {
+            cfg.lr = default_lr(&cfg.model, cfg.method);
+        }
+        if cfg.method.is_local_update() {
+            let (eta, mu) = tuned_outer(cfg.method, cfg.workers);
+            if !self.explicit.contains("outer-lr") {
+                cfg.outer_lr = eta;
+            }
+            if !self.explicit.contains("outer-momentum") {
+                cfg.outer_momentum = mu;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse a spec file.  `model` and `method` are required; every
+    /// other field is optional and counts as explicitly set (so a file
+    /// written by [`spec_json`] pins all knobs and re-runs bit-for-bit
+    /// — tuned-outer defaulting does not re-fire on load).
+    pub fn from_json(text: &str) -> Result<RunSpec> {
+        let v = Json::parse(text)?;
+        let obj = match &v {
+            Json::Obj(m) => m,
+            _ => bail!("run spec must be a JSON object"),
+        };
+        let model = v.get("model")?.as_str()?;
+        let method = Method::parse(v.get("method")?.as_str()?)?;
+        let mut spec = RunSpec::new(model, method);
+        spec.explicit.insert("model");
+        spec.explicit.insert("method");
+        let ks = knobs();
+        for (key, val) in obj {
+            if key == "model" || key == "method" {
+                continue;
+            }
+            let knob = ks
+                .iter()
+                .find(|k| k.name == key)
+                .ok_or_else(|| anyhow!("unknown spec field {key:?}"))?;
+            let s = match val {
+                Json::Str(s) => s.clone(),
+                Json::Bool(b) => b.to_string(),
+                Json::Num(_) => val.to_string(),
+                other => bail!("spec field {key:?}: unsupported value {other:?}"),
+            };
+            spec = spec.set(knob.name, &s)?;
+        }
+        Ok(spec)
+    }
+}
+
+/// Serialize a finished config as a spec file: every knob, canonical
+/// values, typed where JSON has a type for it.  `from_json(to_json(c))`
+/// builds back to an identical config (and hence cache key).
+pub fn spec_json(cfg: &TrainConfig) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for k in knobs() {
+        let s = (k.get)(cfg);
+        // emit a JSON number only when it reproduces the canonical
+        // string EXACTLY — a u64 seed above 2^53 would silently round
+        // through f64 and break the bit-for-bit replay guarantee, so
+        // such values stay strings
+        let v = match s.as_str() {
+            "true" => Json::Bool(true),
+            "false" => Json::Bool(false),
+            _ => match s.parse::<f64>() {
+                Ok(x) if x.is_finite() && Json::Num(x).to_string() == s => {
+                    Json::Num(x)
+                }
+                _ => Json::Str(s),
+            },
+        };
+        m.insert(k.name.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_and_tags_are_unique() {
+        let ks = knobs();
+        let names: BTreeSet<&str> = ks.iter().map(|k| k.name).collect();
+        assert_eq!(names.len(), ks.len(), "duplicate knob name");
+        // non-empty tags must be unique too (key fields self-describe)
+        let tags: Vec<&str> =
+            ks.iter().filter(|k| !k.tag.is_empty()).map(|k| k.tag).collect();
+        let tag_set: BTreeSet<&&str> = tags.iter().collect();
+        assert_eq!(tag_set.len(), tags.len(), "duplicate knob tag");
+    }
+
+    #[test]
+    fn canonical_values_round_trip_through_set() {
+        let cfg = TrainConfig::new("nano", Method::Muloco);
+        for k in knobs() {
+            let canon = (k.get)(&cfg);
+            let mut copy = cfg.clone();
+            (k.set)(&mut copy, &canon).unwrap_or_else(|e| {
+                panic!("knob {} rejects its own canonical value: {e}", k.name)
+            });
+            assert_eq!((k.get)(&copy), canon, "knob {} not canonical", k.name);
+        }
+    }
+
+    #[test]
+    fn examples_differ_from_defaults_for_key_knobs() {
+        // the perturb-every-knob property test relies on this
+        for method in [Method::Muloco, Method::DpAdamw] {
+            let cfg = TrainConfig::new("nano", method);
+            for k in knobs().iter().filter(|k| k.in_key) {
+                let mut copy = cfg.clone();
+                (k.set)(&mut copy, k.example).unwrap();
+                assert_ne!(
+                    (k.get)(&copy),
+                    (k.get)(&cfg),
+                    "knob {} example equals its {method:?} default",
+                    k.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn build_applies_tuned_outer_by_k() {
+        let c1 = RunSpec::new("nano", Method::Muloco).workers(1).build().unwrap();
+        let c16 = RunSpec::new("nano", Method::Muloco).workers(16).build().unwrap();
+        assert!(c16.outer_lr > c1.outer_lr);
+        assert!(c16.outer_momentum > c1.outer_momentum);
+        // explicit outer knobs win over the table
+        let c = RunSpec::new("nano", Method::Muloco)
+            .workers(16)
+            .outer_lr(0.33)
+            .build()
+            .unwrap();
+        assert_eq!(c.outer_lr, 0.33);
+        assert_eq!(c.outer_momentum, 0.9, "momentum still tuned");
+    }
+
+    #[test]
+    fn build_rejects_invalid_specs() {
+        // unshardable batch
+        let err = RunSpec::new("nano", Method::Muloco).workers(5).build();
+        assert!(err.is_err());
+        // zero workers
+        assert!(RunSpec::new("nano", Method::Muloco).workers(0).build().is_err());
+        // DP baselines are a single logical worker
+        assert!(RunSpec::new("nano", Method::DpAdamw).workers(4).build().is_err());
+        // J must divide H
+        assert!(RunSpec::new("nano", Method::Diloco).streaming(4).build().is_err());
+        assert!(RunSpec::new("nano", Method::Diloco).streaming(3).build().is_ok());
+        // tau below H, local-update only
+        assert!(RunSpec::new("nano", Method::Muloco).tau(30).build().is_err());
+        assert!(RunSpec::new("nano", Method::DpMuon).tau(1).build().is_err());
+        // ortho interval >= 1
+        assert!(RunSpec::new("nano", Method::Muloco).ortho_interval(0).build().is_err());
+        // unknown knob names fail loudly
+        assert!(RunSpec::new("nano", Method::Muloco).set("ortho", "2").is_err());
+    }
+
+    #[test]
+    fn lr_default_follows_model_and_method() {
+        let base = RunSpec::new("nano", Method::Muloco).build().unwrap();
+        let moved = RunSpec::new("nano", Method::Muloco)
+            .set("model", "tiny")
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(base.lr, default_lr("nano", Method::Muloco));
+        assert_eq!(moved.lr, default_lr("tiny", Method::Muloco));
+        let pinned = RunSpec::new("nano", Method::Muloco)
+            .lr(0.123)
+            .set("model", "tiny")
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(pinned.lr, 0.123);
+    }
+
+    #[test]
+    fn spec_json_round_trips_bit_for_bit() {
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .workers(4)
+            .compression(Compression::parse("q4-stat").unwrap())
+            .error_feedback(true)
+            .topology(TopologySpec::Hier { groups: 2 })
+            .ns_iters(3)
+            .ortho_interval(2)
+            .build()
+            .unwrap();
+        let text = spec_json(&cfg).to_string();
+        let back = RunSpec::from_json(&text).unwrap().build().unwrap();
+        assert_eq!(cache_key(&back), cache_key(&cfg));
+        assert_eq!(back.lr, cfg.lr);
+        assert_eq!(back.outer_lr, cfg.outer_lr);
+        assert_eq!(back.parallel, cfg.parallel);
+    }
+
+    #[test]
+    fn spec_json_keeps_values_f64_cannot_represent() {
+        // 2^53 + 1 is not an f64; it must survive the file round-trip
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .seed(9007199254740993)
+            .build()
+            .unwrap();
+        let text = spec_json(&cfg).to_string();
+        assert!(text.contains("\"9007199254740993\""), "{text}");
+        let back = RunSpec::from_json(&text).unwrap().build().unwrap();
+        assert_eq!(back.seed, 9007199254740993);
+        assert_eq!(cache_key(&back), cache_key(&cfg));
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_fields() {
+        let bad = r#"{"model": "nano", "method": "muloco", "wrokers": 8}"#;
+        assert!(RunSpec::from_json(bad).is_err());
+        // model/method required
+        assert!(RunSpec::from_json(r#"{"method": "muloco"}"#).is_err());
+    }
+
+    #[test]
+    fn help_lists_every_knob() {
+        let help = flag_help();
+        for k in knobs() {
+            assert!(help.contains(&format!("--{}", k.name)), "{}", k.name);
+        }
+    }
+}

@@ -181,9 +181,10 @@ fn reduce_tensors(
         .into_iter()
         .map(|(ti, mut bufs)| {
             let meta = metas[ti];
+            let k = bufs.len();
             let trace = topology.reduce_mean(&mut bufs, &op, meta.rows, meta.cols);
             let psi = bufs.into_iter().next().expect("at least one worker");
-            ReducedTensor { ti, psi, stats: trace.stats() }
+            ReducedTensor { ti, psi, stats: trace.stats_for(k) }
         })
         .collect()
 }
@@ -393,11 +394,12 @@ impl SyncEngine {
         }
         let reduce = |job: &mut SyncJob<'_>| {
             let meta = metas[job.ti];
+            let k = job.deltas.len();
             // collective: value semantics + per-hop byte accounting
             let op = CollectiveOp::new(compressor, kind);
             let trace =
                 topology.reduce_mean(&mut job.deltas, &op, meta.rows, meta.cols);
-            job.stats = trace.stats();
+            job.stats = trace.stats_for(k);
             // outer update with Psi = the reduced delta
             let psi: &[f32] = &job.deltas[0];
             NesterovOuter::step_slot(eta, mu, job.u.as_mut_slice(),
@@ -431,9 +433,9 @@ impl SyncEngine {
         // accounting as one sync event (peak = max event volume)
         let mut event = CommStats::default();
         for job in &jobs {
-            event.add(job.stats);
+            event.add(&job.stats);
         }
-        comm.absorb_event(event);
+        comm.absorb_event(&event);
         drop(jobs);
 
         // phase 3 — broadcast: workers resume from the new global params
@@ -515,10 +517,10 @@ impl SyncEngine {
                     theta[rt.ti].as_mut_slice(),
                     &rt.psi,
                 );
-                event.add(rt.stats);
+                event.add(&rt.stats);
                 touched.push(rt.ti);
             }
-            comm.absorb_event(event);
+            comm.absorb_event(&event);
             for w in workers.iter_mut() {
                 for &ti in &touched {
                     w.params[ti].copy_from_slice(&theta[ti]);

@@ -87,8 +87,33 @@ impl InnerOptimizer for AdamWInner {
 /// (routing comes from the manifest).  `ns_iters` is the Newton-Schulz
 /// iteration count (`TrainConfig::ns_iters` / CLI `--ns-iters`); the
 /// native backend honors any count, PJRT only the baked-in default.
+///
+/// `ortho_interval` is the MuonBP-style block-periodic schedule
+/// (Khaled et al.): orthogonalize on steps where
+/// `(t - 1) % r == 0` and fall back to normalized momentum SGD
+/// (`ns_iters = 0`) on the steps between, amortizing the Newton-Schulz
+/// cost over r inner steps.  `r = 1` takes the exact pre-knob code
+/// path — every step orthogonalizes with `ns_iters` — so it is
+/// bit-identical to classic Muon (closed-form test below).
 pub struct MuonInner {
     pub ns_iters: usize,
+    pub ortho_interval: usize,
+}
+
+impl MuonInner {
+    /// Newton-Schulz depth for global step `t` under the block-periodic
+    /// schedule.
+    fn ns_at(&self, t: f32) -> usize {
+        if self.ortho_interval <= 1 {
+            return self.ns_iters;
+        }
+        let step = (t as u64).max(1);
+        if (step - 1) % self.ortho_interval as u64 == 0 {
+            self.ns_iters
+        } else {
+            0
+        }
+    }
 }
 
 impl InnerOptimizer for MuonInner {
@@ -110,17 +135,22 @@ impl InnerOptimizer for MuonInner {
         lr: f32,
         wd: f32,
     ) -> Result<(Tensors, Tensors)> {
-        sess.apply_muon_ns(params, state, grads, t, lr, wd, self.ns_iters)
+        sess.apply_muon_ns(params, state, grads, t, lr, wd, self.ns_at(t))
     }
 }
 
 /// Inner-optimizer dispatch from the configured method.  `ns_iters` is
-/// the Muon Newton-Schulz depth (`NS_STEPS` for the paper's setting;
-/// ignored by AdamW methods) — the single dispatch point, so every
-/// caller (train loop, probes) agrees on the optimizer's knobs.
-pub fn inner_with(method: Method, ns_iters: usize) -> Box<dyn InnerOptimizer> {
+/// the Muon Newton-Schulz depth (`NS_STEPS` for the paper's setting)
+/// and `ortho_interval` the block-periodic schedule (1 = every step);
+/// both are ignored by AdamW methods.  The single dispatch point, so
+/// every caller (train loop, probes) agrees on the optimizer's knobs.
+pub fn inner_with(
+    method: Method,
+    ns_iters: usize,
+    ortho_interval: usize,
+) -> Box<dyn InnerOptimizer> {
     if method.uses_muon() {
-        Box::new(MuonInner { ns_iters })
+        Box::new(MuonInner { ns_iters, ortho_interval })
     } else {
         Box::new(AdamWInner)
     }
@@ -363,9 +393,26 @@ mod tests {
     #[test]
     fn dispatch_selects_the_configured_inner_optimizer() {
         use crate::runtime::NS_STEPS;
-        assert_eq!(inner_with(Method::DpAdamw, NS_STEPS).name(), "adamw");
-        assert_eq!(inner_with(Method::Diloco, NS_STEPS).name(), "adamw");
-        assert_eq!(inner_with(Method::DpMuon, NS_STEPS).name(), "muon");
-        assert_eq!(inner_with(Method::Muloco, 0).name(), "muon");
+        assert_eq!(inner_with(Method::DpAdamw, NS_STEPS, 1).name(), "adamw");
+        assert_eq!(inner_with(Method::Diloco, NS_STEPS, 1).name(), "adamw");
+        assert_eq!(inner_with(Method::DpMuon, NS_STEPS, 1).name(), "muon");
+        assert_eq!(inner_with(Method::Muloco, 0, 2).name(), "muon");
+    }
+
+    #[test]
+    fn block_periodic_schedule_closed_form() {
+        // r = 1: every step orthogonalizes at full depth — the exact
+        // classic-Muon dispatch, regardless of step index
+        let classic = MuonInner { ns_iters: 5, ortho_interval: 1 };
+        for t in 1..=20 {
+            assert_eq!(classic.ns_at(t as f32), 5);
+        }
+        // r = 3: steps 1, 4, 7, ... orthogonalize; the rest run
+        // normalized momentum SGD (ns = 0)
+        let bp = MuonInner { ns_iters: 5, ortho_interval: 3 };
+        for t in 1u64..=12 {
+            let want = if (t - 1) % 3 == 0 { 5 } else { 0 };
+            assert_eq!(bp.ns_at(t as f32), want, "t={t}");
+        }
     }
 }

@@ -1,0 +1,283 @@
+//! Structured experiment outputs: typed rows, one rendering/CSV/JSON
+//! sink.
+//!
+//! Generators used to print tables and write CSVs themselves; they now
+//! return an [`Artifact`] — typed tables plus free-form notes — and the
+//! single [`Artifact::emit`] sink renders text, writes
+//! `results/<table>/<table>.csv` per table (the pre-refactor file
+//! layout) and `results/<id>/<id>.json` with the raw typed rows.  That
+//! one choke point is what makes `muloco experiment --format json` and
+//! the `--jobs` aggregated progress UI possible without touching any
+//! generator.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Output mode of the sink (`muloco experiment --format ...`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// rendered tables + notes on stdout (the historical behavior)
+    Text,
+    /// the artifact's JSON document on stdout
+    Json,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Result<Format> {
+        match s {
+            "text" => Ok(Format::Text),
+            "json" => Ok(Format::Json),
+            other => anyhow::bail!("unknown format {other:?} (text|json)"),
+        }
+    }
+}
+
+/// One typed table cell: keeps the raw value for JSON/CSV consumers and
+/// the display convention (precision, percent, scientific) for the
+/// rendered text table.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    Bool(bool),
+    /// float with display precision
+    F(f64, usize),
+    /// fraction displayed as a signed percentage ("+3.21%")
+    Pct(f64),
+    /// scientific notation ("1.234e-5")
+    Sci(f64),
+}
+
+impl Cell {
+    pub fn s(v: impl Into<String>) -> Cell {
+        Cell::Str(v.into())
+    }
+
+    /// Panics when the value does not fit an i64 — a loud failure at
+    /// generation time beats a silent sentinel in a paper artifact
+    /// (same stance as `TypedTable::row`'s ragged-row assert).
+    pub fn int(v: impl TryInto<i64>) -> Cell {
+        Cell::Int(
+            v.try_into()
+                .unwrap_or_else(|_| panic!("Cell::int value exceeds i64 range")),
+        )
+    }
+
+    pub fn f(v: f64, prec: usize) -> Cell {
+        Cell::F(v, prec)
+    }
+
+    pub fn pct(v: f64) -> Cell {
+        Cell::Pct(v)
+    }
+
+    pub fn sci(v: f64) -> Cell {
+        Cell::Sci(v)
+    }
+
+    /// Rendered text form (what the table/CSV shows).
+    pub fn text(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(v) => v.to_string(),
+            Cell::Bool(b) => b.to_string(),
+            Cell::F(v, p) => format!("{:.*}", p, v),
+            Cell::Pct(v) => format!("{:+.2}%", 100.0 * v),
+            Cell::Sci(v) => format!("{:.3e}", v),
+        }
+    }
+
+    /// Raw typed value for the JSON sink.
+    pub fn json(&self) -> Json {
+        match self {
+            Cell::Str(s) => Json::Str(s.clone()),
+            Cell::Int(v) => Json::Num(*v as f64),
+            Cell::Bool(b) => Json::Bool(*b),
+            Cell::F(v, _) | Cell::Pct(v) | Cell::Sci(v) => {
+                if v.is_finite() {
+                    Json::Num(*v)
+                } else {
+                    Json::Str(v.to_string())
+                }
+            }
+        }
+    }
+}
+
+/// A typed table: `name` is its file identity (`results/<name>/`),
+/// `title` the rendered headline.
+#[derive(Clone, Debug)]
+pub struct TypedTable {
+    pub name: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl TypedTable {
+    pub fn new(name: &str, title: &str, headers: &[&str]) -> TypedTable {
+        TypedTable {
+            name: name.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    /// Project onto the string renderer (one definition of alignment
+    /// and CSV escaping for the whole crate: `util::table`).
+    fn to_render_table(&self) -> Table {
+        let headers: Vec<&str> = self.headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&self.title, &headers);
+        for row in &self.rows {
+            t.row(row.iter().map(|c| c.text()).collect());
+        }
+        t
+    }
+
+    pub fn render(&self) -> String {
+        self.to_render_table().render()
+    }
+
+    pub fn to_csv(&self) -> String {
+        self.to_render_table().to_csv()
+    }
+
+    /// `{name, title, headers, rows: [{header: raw value, ...}]}`.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let m = self
+                    .headers
+                    .iter()
+                    .zip(row)
+                    .map(|(h, c)| (h.clone(), c.json()))
+                    .collect();
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("title".into(), Json::Str(self.title.clone()));
+        m.insert(
+            "headers".into(),
+            Json::Arr(self.headers.iter().cloned().map(Json::Str).collect()),
+        );
+        m.insert("rows".into(), Json::Arr(rows));
+        Json::Obj(m)
+    }
+}
+
+/// Everything one experiment produces.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    /// experiment id (registry name; also the JSON file identity)
+    pub id: String,
+    pub tables: Vec<TypedTable>,
+    /// free-form commentary lines (the old inline `println!` asides)
+    pub notes: Vec<String>,
+}
+
+impl Artifact {
+    pub fn new(id: &str) -> Artifact {
+        Artifact { id: id.to_string(), tables: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn table(&mut self, t: TypedTable) {
+        self.tables.push(t);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".into(), Json::Str(self.id.clone()));
+        m.insert(
+            "tables".into(),
+            Json::Arr(self.tables.iter().map(|t| t.to_json()).collect()),
+        );
+        m.insert(
+            "notes".into(),
+            Json::Arr(self.notes.iter().cloned().map(Json::Str).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// The sink: persist every table's CSV under `results/<table name>/`
+    /// and the whole artifact under `results/<id>/<id>.json`, then print
+    /// rendered text or the JSON document depending on `format`.
+    pub fn emit(&self, format: Format) -> Result<()> {
+        for t in &self.tables {
+            let dir = Path::new("results").join(&t.name);
+            fs::create_dir_all(&dir)?;
+            fs::write(dir.join(format!("{}.csv", t.name)), t.to_csv())?;
+        }
+        let dir = Path::new("results").join(&self.id);
+        fs::create_dir_all(&dir)?;
+        fs::write(
+            dir.join(format!("{}.json", self.id)),
+            self.to_json().to_string(),
+        )?;
+        match format {
+            Format::Text => {
+                for t in &self.tables {
+                    println!("{}", t.render());
+                }
+                for n in &self.notes {
+                    println!("{n}\n");
+                }
+            }
+            Format::Json => println!("{}", self.to_json().to_string()),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_render_like_the_old_formatters() {
+        assert_eq!(Cell::f(2.71828, 4).text(), "2.7183");
+        assert_eq!(Cell::pct(0.0321).text(), "+3.21%");
+        assert_eq!(Cell::pct(-0.25).text(), "-25.00%");
+        assert_eq!(Cell::sci(1.5e-4).text(), "1.500e-4");
+        assert_eq!(Cell::int(42u64).text(), "42");
+    }
+
+    #[test]
+    fn json_keeps_raw_values() {
+        let mut t = TypedTable::new("demo", "demo table", &["k", "loss", "win"]);
+        t.row(vec![Cell::int(8usize), Cell::f(2.71828, 2), Cell::Bool(true)]);
+        let j = t.to_json();
+        let row = &j.get("rows").unwrap().as_arr().unwrap()[0];
+        // full precision survives even though the text shows 2 digits
+        assert_eq!(row.get("loss").unwrap().as_f64().unwrap(), 2.71828);
+        assert_eq!(row.get("k").unwrap().as_f64().unwrap(), 8.0);
+        // round-trips through the parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_typed_row_panics() {
+        let mut t = TypedTable::new("x", "x", &["a", "b"]);
+        t.row(vec![Cell::int(1)]);
+    }
+}

@@ -15,8 +15,6 @@ use anyhow::Result;
 /// `RunCache::put`).
 static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
 
-use crate::comm::TopologySpec;
-use crate::compress::Compression;
 use crate::coordinator::{train, RunResult, TrainConfig};
 use crate::runtime::Session;
 use crate::util::json::Json;
@@ -101,34 +99,14 @@ impl RunSummary {
     }
 }
 
-/// Canonical cache key for a config (every field that affects the math).
-/// Non-default topology/overlap settings append suffixes so the keys of
-/// pre-existing flat/blocking runs stay stable across the comm refactor.
+/// Canonical cache key for a config: derived from the knob registry
+/// (`coordinator::spec`), so there is no hand-maintained field list to
+/// forget — a knob added to the schema lands in the key automatically
+/// (property-tested in `tests/spec_contract.rs`).  The registry-derived
+/// format retired the old suffix scheme, invalidating pre-PR cache
+/// entries once; runs regenerate on first use.
 pub fn config_key(cfg: &TrainConfig) -> String {
-    let comp = match &cfg.compression {
-        Compression::None => "none".to_string(),
-        Compression::Quant { bits, mode, rowwise } => format!(
-            "q{bits}-{:?}-{rowwise}", mode),
-        Compression::TopK { frac } => format!("topk{frac}"),
-    };
-    let mut key = format!(
-        "{}|{:?}|K{}|H{}|S{}|B{}|lr{}|wd{}|wu{}|fl{}|olr{}|om{}|{}|ef{}-{}|J{}|ev{}x{}|s{}",
-        cfg.model, cfg.method, cfg.workers, cfg.sync_interval,
-        cfg.total_steps, cfg.global_batch, cfg.lr, cfg.weight_decay,
-        cfg.warmup_steps, cfg.lr_floor_frac, cfg.outer_lr,
-        cfg.outer_momentum, comp, cfg.error_feedback, cfg.ef_beta,
-        cfg.streaming_partitions, cfg.eval_every, cfg.eval_batches, cfg.seed
-    );
-    if cfg.topology != TopologySpec::Flat {
-        key.push_str(&format!("|T{}", cfg.topology.label()));
-    }
-    if cfg.overlap_tau > 0 {
-        key.push_str(&format!("|tau{}", cfg.overlap_tau));
-    }
-    if cfg.ns_iters != crate::runtime::NS_STEPS {
-        key.push_str(&format!("|ns{}", cfg.ns_iters));
-    }
-    key
+    crate::coordinator::spec::cache_key(cfg)
 }
 
 /// Backend disambiguator appended to the config key: the PJRT CPU

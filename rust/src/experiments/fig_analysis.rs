@@ -6,11 +6,10 @@
 
 use anyhow::Result;
 
-use super::{Ctx, Preset};
+use super::{Artifact, Cell, Ctx, Preset, TypedTable};
 use crate::analysis::{cosine_stats, interference_gap_frac, nuclear_norm_identity,
                       svd, tensor_cosine, Mat};
 use crate::coordinator::{branch_capture, dp_warmstart, BranchCapture, Method};
-use crate::util::table::{fmt_f, Table};
 use crate::util::{mean, norm, std_dev};
 
 struct Setup {
@@ -56,11 +55,12 @@ fn captures(ctx: &Ctx, method: Method, ks: &[usize])
 
 /// Fig 2: cosine similarity of the K-worker pseudogradient to the K=1
 /// pseudogradient, per hidden tensor (mean/min/max across tensors).
-pub fn fig2(ctx: &Ctx) -> Result<()> {
+pub fn fig2(ctx: &Ctx) -> Result<Artifact> {
     let s = setup(ctx);
     let mut ks = vec![1usize];
     ks.extend(&s.ks);
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig2",
         "Fig 2 — pseudogradient cosine similarity to K=1",
         &["method", "K", "mean cos", "min", "max", "std"],
     );
@@ -74,13 +74,15 @@ pub fn fig2(ctx: &Ctx) -> Result<()> {
                 .collect();
             let st = cosine_stats(&cosines);
             t.row(vec![
-                method.name().into(), k.to_string(),
-                fmt_f(st.mean, 4), fmt_f(st.min, 4), fmt_f(st.max, 4),
-                fmt_f(st.std, 4),
+                Cell::s(method.name()), Cell::int(*k),
+                Cell::f(st.mean, 4), Cell::f(st.min, 4), Cell::f(st.max, 4),
+                Cell::f(st.std, 4),
             ]);
         }
     }
-    t.emit("fig2")
+    let mut art = Artifact::new("fig2");
+    art.table(t);
+    Ok(art)
 }
 
 fn to_mat(shape: (usize, usize), data: &[f32]) -> Mat {
@@ -89,15 +91,17 @@ fn to_mat(shape: (usize, usize), data: &[f32]) -> Mat {
 
 /// Fig 3: worker-delta spectra vs pseudogradient spectrum + top-S
 /// interference gap as K grows.
-pub fn fig3(ctx: &Ctx) -> Result<()> {
+pub fn fig3(ctx: &Ctx) -> Result<Artifact> {
     let s = setup(ctx);
     let sess = ctx.session(ctx.base_model())?;
-    let mut spectra = Table::new(
+    let mut spectra = TypedTable::new(
+        "fig3",
         "Fig 3a — top singular values: mean worker Delta_k vs Psi (first hidden tensor, K=8)",
         &["method", "sigma_1(Dk) mean", "sigma_1(Psi)", "sigma_2(Dk) mean",
           "sigma_2(Psi)", "collapse ratio s1"],
     );
-    let mut gaps = Table::new(
+    let mut gaps = TypedTable::new(
+        "fig3-gap",
         "Fig 3b — top-5% interference gap G_S vs K (mean over hidden tensors)",
         &["method", "K", "G_S", "G_S / mean top-S mass"],
     );
@@ -122,9 +126,9 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
                 rel_sum += if mass > 0.0 { g / mass } else { 0.0 };
             }
             gaps.row(vec![
-                method.name().into(), k.to_string(),
-                fmt_f(gap_sum / n_t as f64, 5),
-                fmt_f(rel_sum / n_t as f64, 4),
+                Cell::s(method.name()), Cell::int(*k),
+                Cell::f(gap_sum / n_t as f64, 5),
+                Cell::f(rel_sum / n_t as f64, 4),
             ]);
             if *k == 8 {
                 let ti = 0;
@@ -136,23 +140,25 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
                 let m1: f64 = mean(&worker_s.iter().map(|s| s[0]).collect::<Vec<_>>());
                 let m2: f64 = mean(&worker_s.iter().map(|s| s[1]).collect::<Vec<_>>());
                 spectra.row(vec![
-                    method.name().into(),
-                    fmt_f(m1, 5), fmt_f(psi_s[0], 5),
-                    fmt_f(m2, 5), fmt_f(psi_s[1], 5),
-                    fmt_f(psi_s[0] / m1, 4),
+                    Cell::s(method.name()),
+                    Cell::f(m1, 5), Cell::f(psi_s[0], 5),
+                    Cell::f(m2, 5), Cell::f(psi_s[1], 5),
+                    Cell::f(psi_s[0] / m1, 4),
                 ]);
             }
         }
     }
-    println!("{}", spectra.render());
-    spectra.emit("fig3")?;
-    gaps.emit("fig3-gap")
+    let mut art = Artifact::new("fig3");
+    art.table(spectra);
+    art.table(gaps);
+    Ok(art)
 }
 
 /// Fig 4: cosine of (a) individual inner steps and (b) worker deltas to
 /// the communicated pseudogradient (K=8).
-pub fn fig4(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
+pub fn fig4(ctx: &Ctx) -> Result<Artifact> {
+    let mut t = TypedTable::new(
+        "fig4",
         "Fig 4 — alignment to the full pseudogradient (K=8)",
         &["method", "step->Psi mean", "step->Psi std",
           "Delta_k->Psi mean", "Delta_k->Psi std (inter-worker)"],
@@ -175,18 +181,21 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
             }
         }
         t.row(vec![
-            method.name().into(),
-            fmt_f(mean(&step_cos), 4), fmt_f(std_dev(&step_cos), 4),
-            fmt_f(mean(&delta_cos), 4), fmt_f(std_dev(&delta_cos), 4),
+            Cell::s(method.name()),
+            Cell::f(mean(&step_cos), 4), Cell::f(std_dev(&step_cos), 4),
+            Cell::f(mean(&delta_cos), 4), Cell::f(std_dev(&delta_cos), 4),
         ]);
     }
-    t.emit("fig4")
+    let mut art = Artifact::new("fig4");
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 5: Frobenius norms of the per-step inner updates — AdamW erratic
 /// across workers, Muon pinned near sqrt(r) * lr-scale.
-pub fn fig5(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
+pub fn fig5(ctx: &Ctx) -> Result<Artifact> {
+    let mut t = TypedTable::new(
+        "fig5",
         "Fig 5 — inner-step Frobenius norms across workers (K=8, first hidden tensor)",
         &["method", "mean ||psi||_F", "std across workers",
           "cv (std/mean)", "min", "max"],
@@ -205,19 +214,22 @@ pub fn fig5(ctx: &Ctx) -> Result<()> {
         let m = mean(&norms);
         let sd = std_dev(&norms);
         t.row(vec![
-            method.name().into(),
-            fmt_f(m, 6), fmt_f(sd, 6), fmt_f(sd / m, 4),
-            fmt_f(norms.iter().copied().fold(f64::INFINITY, f64::min), 6),
-            fmt_f(norms.iter().copied().fold(f64::NEG_INFINITY, f64::max), 6),
+            Cell::s(method.name()),
+            Cell::f(m, 6), Cell::f(sd, 6), Cell::f(sd / m, 4),
+            Cell::f(norms.iter().copied().fold(f64::INFINITY, f64::min), 6),
+            Cell::f(norms.iter().copied().fold(f64::NEG_INFINITY, f64::max), 6),
         ]);
     }
-    t.emit("fig5")
+    let mut art = Artifact::new("fig5");
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 21: per-worker step-alignment trajectories — the variance
 /// structure across workers over the H local steps.
-pub fn fig21(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
+pub fn fig21(ctx: &Ctx) -> Result<Artifact> {
+    let mut t = TypedTable::new(
+        "fig21",
         "Fig 21 — inter-worker variability of step alignment per local step h (K=8)",
         &["method", "h", "mean cos(psi_h, Psi)", "std across workers"],
     );
@@ -236,19 +248,22 @@ pub fn fig21(ctx: &Ctx) -> Result<()> {
                 })
                 .collect();
             t.row(vec![
-                method.name().into(), (h + 1).to_string(),
-                fmt_f(mean(&cosines), 4), fmt_f(std_dev(&cosines), 4),
+                Cell::s(method.name()), Cell::int(h + 1),
+                Cell::f(mean(&cosines), 4), Cell::f(std_dev(&cosines), 4),
             ]);
         }
     }
-    t.emit("fig21")
+    let mut art = Artifact::new("fig21");
+    art.table(t);
+    Ok(art)
 }
 
 /// Prop 4.2: numerically verify the nuclear-norm identity on REAL
 /// captured optimizer steps (both optimizers), not just random data.
-pub fn prop42(ctx: &Ctx) -> Result<()> {
+pub fn prop42(ctx: &Ctx) -> Result<Artifact> {
     let sess = ctx.session(ctx.base_model())?;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "prop42",
         "Prop 4.2 — ||Psi||_* identity on captured inner steps (K=4)",
         &["method", "tensor", "lhs ||Psi||_*", "rhs (sqrt(r)/K)·sum rho·||psi||_F",
           "rel err"],
@@ -267,12 +282,14 @@ pub fn prop42(ctx: &Ctx) -> Result<()> {
             let alphas = vec![1.0; steps[0].len()];
             let (lhs, rhs) = nuclear_norm_identity(&steps, &alphas);
             t.row(vec![
-                method.name().into(),
-                sess.manifest.params[cap.hidden_idx[ti]].name.clone(),
-                fmt_f(lhs, 6), fmt_f(rhs, 6),
-                format!("{:.2e}", (lhs - rhs).abs() / lhs.abs().max(1e-12)),
+                Cell::s(method.name()),
+                Cell::s(sess.manifest.params[cap.hidden_idx[ti]].name.clone()),
+                Cell::f(lhs, 6), Cell::f(rhs, 6),
+                Cell::sci((lhs - rhs).abs() / lhs.abs().max(1e-12)),
             ]);
         }
     }
-    t.emit("prop42")
+    let mut art = Artifact::new("prop42");
+    art.table(t);
+    Ok(art)
 }

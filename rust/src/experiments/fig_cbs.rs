@@ -6,12 +6,12 @@
 
 use anyhow::Result;
 
-use super::{Ctx, Preset};
-use crate::coordinator::{Method, TrainConfig};
+use super::{Artifact, Cell, Ctx, Preset, TypedTable};
+use crate::coordinator::config::default_lr;
+use crate::coordinator::{Method, RunSpec};
 use crate::scaling::{critical_batch_1pct, fit_pure, iso_loss_efficiency,
                      PowerLaw};
 use crate::util::rng::Rng;
-use crate::util::table::{fmt_f, Table};
 
 fn sweep_methods(ctx: &Ctx) -> Vec<(Method, usize)> {
     match ctx.preset {
@@ -46,21 +46,23 @@ pub fn batch_sweep(ctx: &Ctx, model: &str, token_budget: f64)
     for (method, k) in sweep_methods(ctx) {
         let mut pts = Vec::new();
         for b in batches(ctx, k) {
-            let steps = (token_budget / (b * seq) as f64).ceil() as u64;
-            let mut cfg = TrainConfig::new(model, method);
-            cfg.total_steps = steps.max(20);
-            cfg.global_batch = b;
-            cfg.sync_interval = 15.min(cfg.total_steps);
-            cfg.eval_every = cfg.sync_interval;
-            cfg.eval_batches = 4;
-            cfg.warmup_steps = cfg.total_steps / 10;
+            let steps =
+                ((token_budget / (b * seq) as f64).ceil() as u64).max(20);
+            let mut spec = RunSpec::new(model, method)
+                .steps(steps)
+                .batch(b)
+                .sync_interval(15.min(steps))
+                .eval_every(15.min(steps))
+                .eval_batches(4)
+                .warmup(steps / 10)
+                // sqrt LR scaling from the B=32 reference (the paper
+                // re-tunes per B; this is the standard heuristic
+                // stand-in)
+                .lr(default_lr(model, method) * ((b as f64) / 32.0).sqrt());
             if method.is_local_update() {
-                cfg = cfg.tuned_outer(k)?;
+                spec = spec.workers(k);
             }
-            // sqrt LR scaling from the B=32 reference (the paper
-            // re-tunes per B; this is the standard heuristic stand-in)
-            cfg.lr *= ((b as f64) / 32.0).sqrt();
-            let run = ctx.cache.run(&sess, &cfg)?;
+            let run = ctx.cache.run(&sess, &spec.build()?)?;
             pts.push((b as f64, run.smoothed_final));
         }
         out.push(((method, k), pts));
@@ -79,11 +81,12 @@ fn base_token_budget(ctx: &Ctx, model: &str) -> Result<f64> {
 }
 
 /// Fig 12: loss vs batch size per method; B_opt and B_crit markers.
-pub fn fig12(ctx: &Ctx) -> Result<()> {
+pub fn fig12(ctx: &Ctx) -> Result<Artifact> {
     let model = ctx.base_model();
     let budget = base_token_budget(ctx, model)?;
     let sweeps = batch_sweep(ctx, model, budget)?;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig12",
         "Fig 12 — final eval loss vs global batch (FLOP-matched)",
         &["method", "K", "losses per B", "B_opt", "B_crit"],
     );
@@ -94,26 +97,30 @@ pub fn fig12(ctx: &Ctx) -> Result<()> {
             .collect::<Vec<_>>()
             .join(" ");
         t.row(vec![
-            method.name().into(), k.to_string(), losses,
-            (b_opt as u64).to_string(), (b_crit as u64).to_string(),
+            Cell::s(method.name()), Cell::int(*k), Cell::s(losses),
+            Cell::int(b_opt as u64), Cell::int(b_crit as u64),
         ]);
     }
-    t.emit("fig12")
+    let mut art = Artifact::new("fig12");
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 1b: the iso-FLOP Pareto view — loss vs FLOPs/batch (a proxy for
 /// sequential training time), with B_opt/B_crit called out.
-pub fn fig1b(ctx: &Ctx) -> Result<()> {
+pub fn fig1b(ctx: &Ctx) -> Result<Artifact> {
     let model = ctx.base_model();
     let budget = base_token_budget(ctx, model)?;
     let sweeps = batch_sweep(ctx, model, budget)?;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig1b",
         "Fig 1b — FLOP-matched performance/time Pareto (higher B = fewer sequential steps)",
         &["method", "K", "best loss", "loss at B_crit", "B_crit",
           "seq steps at B_crit"],
     );
     let sess = ctx.session(model)?;
     let seq = sess.manifest.config.seq_len;
+    let mut art = Artifact::new("fig1b");
     let mut best: Option<(String, f64, f64)> = None;
     for ((method, k), pts) in &sweeps {
         let (_, l_opt, b_crit) = critical_batch_1pct(pts);
@@ -123,9 +130,9 @@ pub fn fig1b(ctx: &Ctx) -> Result<()> {
             .unwrap_or(f64::NAN);
         let steps = budget / (b_crit * seq as f64);
         t.row(vec![
-            method.name().into(), k.to_string(),
-            fmt_f(l_opt, 4), fmt_f(l_at_crit, 4),
-            (b_crit as u64).to_string(), format!("{steps:.0}"),
+            Cell::s(method.name()), Cell::int(*k),
+            Cell::f(l_opt, 4), Cell::f(l_at_crit, 4),
+            Cell::int(b_crit as u64), Cell::f(steps, 0),
         ]);
         let label = format!("{} K={}", method.name(), k);
         let better = match &best {
@@ -137,14 +144,16 @@ pub fn fig1b(ctx: &Ctx) -> Result<()> {
         }
     }
     if let Some((label, l, s)) = best {
-        println!("Pareto pick: {label} (loss {l:.4} at {s:.0} sequential steps)\n");
+        art.note(format!(
+            "Pareto pick: {label} (loss {l:.4} at {s:.0} sequential steps)"));
     }
-    t.emit("fig1b")
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 13 / Fig 18: CBS power laws B_crit(D) = a D^alpha and the
 /// iso-loss training-time efficiency vs DP AdamW (Eq 6 decomposition).
-pub fn fig13(ctx: &Ctx) -> Result<()> {
+pub fn fig13(ctx: &Ctx) -> Result<Artifact> {
     // CBS at two (fast) or three (full) data scales
     let scales: Vec<&str> = match ctx.preset {
         Preset::Fast => vec!["nano", "micro"],
@@ -171,8 +180,10 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
         }
     }
 
+    let mut art = Artifact::new("fig13");
     let mut rng = Rng::new(23);
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig13",
         "Fig 13 right — CBS power laws B_crit(D) = a * D^alpha",
         &["method", "a", "alpha", "B_crit at 10x data (extrapolated)"],
     );
@@ -183,13 +194,13 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
         let (law, _) = fit_pure(&xs, &ys, 4, &mut rng);
         let d10 = xs.last().unwrap() * 10.0;
         t.row(vec![
-            method.name().into(),
-            format!("{:.3e}", law.a), fmt_f(law.alpha, 3),
-            format!("{:.0}", law.eval(d10)),
+            Cell::s(method.name()),
+            Cell::sci(law.a), Cell::f(law.alpha, 3),
+            Cell::f(law.eval(d10), 0),
         ]);
         laws.push(((*method, *k), law));
     }
-    t.emit("fig13")?;
+    art.table(t);
 
     // iso-loss efficiency: invert the ladder loss laws (fig10 machinery)
     let grid = super::fig_scaling::ladder_grid(ctx)?;
@@ -213,7 +224,8 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
             .fold(f64::INFINITY, f64::min);
         (min_obs * 0.995).max(max_floor + 0.05)
     };
-    let mut t2 = Table::new(
+    let mut t2 = TypedTable::new(
+        "fig13-iso",
         &format!("Fig 13 left / Fig 18 — iso-loss efficiency vs DP-AdamW at L = {target_l:.3}"),
         &["method", "T_AdamW/T_opt", "compute savings", "parallelism advantage"],
     );
@@ -226,13 +238,15 @@ pub fn fig13(ctx: &Ctx) -> Result<()> {
             .find(|((m, _), _)| *m == method).map(|(_, l)| *l).unwrap();
         match iso_loss_efficiency(&base_loss, &base_cbs, &ol, &ocbs, target_l) {
             Some((total, comp, par)) => t2.row(vec![
-                method.name().into(),
-                fmt_f(total, 2), fmt_f(comp, 2), fmt_f(par, 2),
+                Cell::s(method.name()),
+                Cell::f(total, 2), Cell::f(comp, 2), Cell::f(par, 2),
             ]),
             None => t2.row(vec![
-                method.name().into(), "n/a".into(), "n/a".into(), "n/a".into(),
+                Cell::s(method.name()), Cell::s("n/a"), Cell::s("n/a"),
+                Cell::s("n/a"),
             ]),
         }
     }
-    t2.emit("fig13-iso")
+    art.table(t2);
+    Ok(art)
 }

@@ -3,18 +3,25 @@
 
 use anyhow::Result;
 
-use super::fig_workers::base_cfg;
-use super::{Ctx, Preset};
+use super::fig_workers::base_spec;
+use super::{lookup, Artifact, Cell, Ctx, Preset, Sweep, TypedTable};
 use crate::comm::TopologySpec;
 use crate::compress::{Compression, QuantMode};
-use crate::coordinator::Method;
-use crate::util::table::{fmt_f, Table};
+use crate::coordinator::{Method, RunSpec};
 
 fn comp_steps(ctx: &Ctx) -> u64 {
     match ctx.preset {
         Preset::Fast => 60,
         Preset::Full => 300,
     }
+}
+
+/// Shared base for the compression section: K=8, shortened budget.
+fn comp_spec(ctx: &Ctx, method: Method) -> RunSpec {
+    base_spec(ctx, method)
+        .workers(8)
+        .steps(comp_steps(ctx))
+        .warmup(comp_steps(ctx) / 10)
 }
 
 fn run_compressed(
@@ -24,25 +31,25 @@ fn run_compressed(
     ef: bool,
 ) -> Result<f64> {
     let sess = ctx.session(ctx.base_model())?;
-    let mut cfg = base_cfg(ctx, method).tuned_outer(8)?;
-    cfg.total_steps = comp_steps(ctx);
-    cfg.warmup_steps = cfg.total_steps / 10;
-    cfg.compression = compression;
-    cfg.error_feedback = ef;
+    let cfg = comp_spec(ctx, method)
+        .compression(compression)
+        .error_feedback(ef)
+        .build()?;
     Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
 }
 
 /// Fig 7 / Fig 15 / Table 5: quantized pseudogradient communication.
-pub fn fig7(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
+pub fn fig7(ctx: &Ctx) -> Result<Artifact> {
+    let mut t = TypedTable::new(
+        "fig7",
         "Fig 7/15 + Table 5 — quantization (final eval loss, K=8)",
         &["compressor", "bits", "DiLoCo", "DiLoCo+EF", "MuLoCo", "MuLoCo+EF"],
     );
     // fp32 baselines
     let dl0 = run_compressed(ctx, Method::Diloco, Compression::None, false)?;
     let ml0 = run_compressed(ctx, Method::Muloco, Compression::None, false)?;
-    t.row(vec!["fp32".into(), "-".into(), fmt_f(dl0, 4), "-".into(),
-               fmt_f(ml0, 4), "-".into()]);
+    t.row(vec![Cell::s("fp32"), Cell::s("-"), Cell::f(dl0, 4), Cell::s("-"),
+               Cell::f(ml0, 4), Cell::s("-")]);
 
     let rowwise_modes: &[bool] = match ctx.preset {
         Preset::Fast => &[false],
@@ -65,50 +72,69 @@ pub fn fig7(ctx: &Ctx) -> Result<()> {
                 let ml = run_compressed(ctx, Method::Muloco, comp.clone(), false)?;
                 let mle = run_compressed(ctx, Method::Muloco, comp, true)?;
                 t.row(vec![
-                    name, bits.to_string(),
-                    fmt_f(dl, 4), fmt_f(dle, 4), fmt_f(ml, 4), fmt_f(mle, 4),
+                    Cell::s(name), Cell::int(bits),
+                    Cell::f(dl, 4), Cell::f(dle, 4),
+                    Cell::f(ml, 4), Cell::f(mle, 4),
                 ]);
             }
         }
     }
-    t.emit("fig7")
+    let mut art = Artifact::new("fig7");
+    art.table(t);
+    Ok(art)
 }
 
-/// Fig 8 (left) / Table 4: top-k sparsification with/without EF.
-pub fn fig8a(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
+/// Fig 8 (left) / Table 4: top-k sparsification with/without EF —
+/// a `Sweep` over (method x top-k fraction x EF), pivoted into the
+/// paper's table shape.
+pub fn fig8a(ctx: &Ctx) -> Result<Artifact> {
+    let mut t = TypedTable::new(
+        "fig8a",
         "Fig 8 left + Table 4 — top-k sparsification (final eval loss, K=8)",
         &["top-k", "DiLoCo", "DiLoCo+EF", "MuLoCo", "MuLoCo+EF"],
     );
     let dl0 = run_compressed(ctx, Method::Diloco, Compression::None, false)?;
     let ml0 = run_compressed(ctx, Method::Muloco, Compression::None, false)?;
-    t.row(vec!["fp32".into(), fmt_f(dl0, 4), "-".into(),
-               fmt_f(ml0, 4), "-".into()]);
+    t.row(vec![Cell::s("fp32"), Cell::f(dl0, 4), Cell::s("-"),
+               Cell::f(ml0, 4), Cell::s("-")]);
     let fracs: &[f64] = match ctx.preset {
         Preset::Fast => &[0.01, 0.05, 0.25],
         Preset::Full => &[0.005, 0.01, 0.025, 0.05, 0.10, 0.25, 0.50],
     };
-    for &frac in fracs {
-        let comp = Compression::TopK { frac };
-        let dl = run_compressed(ctx, Method::Diloco, comp.clone(), false)?;
-        let dle = run_compressed(ctx, Method::Diloco, comp.clone(), true)?;
-        let ml = run_compressed(ctx, Method::Muloco, comp.clone(), false)?;
-        let mle = run_compressed(ctx, Method::Muloco, comp, true)?;
+    let comps: Vec<String> = fracs.iter().map(|f| format!("topk{f}")).collect();
+    let results = Sweep::new(comp_spec(ctx, Method::Diloco))
+        .axis("method", &["diloco", "muloco"])
+        .axis("compression", &comps)
+        .axis("ef", &[false, true])
+        .run(ctx)?;
+    for (frac, comp) in fracs.iter().zip(&comps) {
+        let get = |method: &str, ef: &str| -> f64 {
+            lookup(&results,
+                   &[("method", method), ("compression", comp), ("ef", ef)])
+                .expect("swept point")
+                .smoothed_final
+        };
         t.row(vec![
-            format!("{:.1}%", frac * 100.0),
-            fmt_f(dl, 4), fmt_f(dle, 4), fmt_f(ml, 4), fmt_f(mle, 4),
+            Cell::s(format!("{:.1}%", frac * 100.0)),
+            Cell::f(get("diloco", "false"), 4),
+            Cell::f(get("diloco", "true"), 4),
+            Cell::f(get("muloco", "false"), 4),
+            Cell::f(get("muloco", "true"), 4),
         ]);
     }
-    t.emit("fig8a")
+    let mut art = Artifact::new("fig8a");
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 8 (right): streaming (partitioned) synchronization, J=3 — plus
 /// the comm-layer variants the refactor made expressible: overlapped
 /// streaming (the collective runs tau steps behind the workers) and the
 /// hierarchical two-datacenter topology.
-pub fn fig8b(ctx: &Ctx) -> Result<()> {
+pub fn fig8b(ctx: &Ctx) -> Result<Artifact> {
     let sess = ctx.session(ctx.base_model())?;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig8b",
         "Fig 8 right — streaming DiLoCo/MuLoCo (J=3 partitions, K=8) \
          + overlap/hierarchical variants",
         &["method", "non-streaming", "streaming", "stream tau=2",
@@ -116,10 +142,12 @@ pub fn fig8b(ctx: &Ctx) -> Result<()> {
     );
     for method in [Method::Diloco, Method::Muloco] {
         let run = |j: usize, tau: u64, topo: TopologySpec| -> Result<f64> {
-            let mut cfg = base_cfg(ctx, method).tuned_outer(8)?;
-            cfg.streaming_partitions = j;
-            cfg.overlap_tau = tau;
-            cfg.topology = topo;
+            let cfg = base_spec(ctx, method)
+                .workers(8)
+                .streaming(j)
+                .tau(tau)
+                .topology(topo)
+                .build()?;
             Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
         };
         let plain = run(1, 0, TopologySpec::Flat)?;
@@ -127,13 +155,15 @@ pub fn fig8b(ctx: &Ctx) -> Result<()> {
         let overlapped = run(3, 2, TopologySpec::Flat)?;
         let hier = run(1, 0, TopologySpec::Hier { groups: 2 })?;
         t.row(vec![
-            method.name().into(),
-            fmt_f(plain, 4),
-            fmt_f(streamed, 4),
-            fmt_f(overlapped, 4),
-            fmt_f(hier, 4),
-            fmt_f(streamed - plain, 4),
+            Cell::s(method.name()),
+            Cell::f(plain, 4),
+            Cell::f(streamed, 4),
+            Cell::f(overlapped, 4),
+            Cell::f(hier, 4),
+            Cell::f(streamed - plain, 4),
         ]);
     }
-    t.emit("fig8b")
+    let mut art = Artifact::new("fig8b");
+    art.table(t);
+    Ok(art)
 }

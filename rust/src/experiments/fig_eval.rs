@@ -4,21 +4,22 @@
 use anyhow::Result;
 
 use super::fig_scaling::{combo_label, ladder_batch};
-use super::fig_workers::base_cfg;
-use super::{Ctx, Preset};
-use crate::coordinator::{train, Method, TrainConfig};
+use super::fig_workers::base_spec;
+use super::{Artifact, Cell, Ctx, Preset, TypedTable};
+use crate::coordinator::config::default_lr;
+use crate::coordinator::{train, Method, RunSpec};
 use crate::data::{tasks, Corpus};
 use crate::evalloss::Smoother;
-use crate::util::table::{fmt_f, Table};
 
 /// Fig 24: the raw final validation loss is noisy; the time-weighted
 /// EMA estimate L-hat is robust.  Demonstrated on real eval curves by
 /// comparing the smoothed estimate against the raw last point and
 /// against an outlier-corrupted last point.
-pub fn fig24(ctx: &Ctx) -> Result<()> {
+pub fn fig24(ctx: &Ctx) -> Result<Artifact> {
     let run = super::fig_workers::local_run(ctx, Method::Muloco, 8)?;
     let curve = run.eval_curve.clone();
-    let smoother = Smoother::new(0.2, base_cfg(ctx, Method::Muloco).eval_every);
+    let eval_every = base_spec(ctx, Method::Muloco).peek().eval_every;
+    let smoother = Smoother::new(0.2, eval_every);
     let raw = curve.last().unwrap().1;
     let smooth = smoother.final_loss(&curve);
     // inject an unusually hard final eval batch (the Fig 24 left panel)
@@ -27,29 +28,32 @@ pub fn fig24(ctx: &Ctx) -> Result<()> {
     let raw_bad = corrupted.last().unwrap().1;
     let smooth_bad = smoother.final_loss(&corrupted);
 
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig24",
         "Fig 24 / App F — raw final loss vs time-weighted-EMA L-hat",
         &["scenario", "raw final", "smoothed L-hat", "|bias| raw",
           "|bias| smoothed"],
     );
-    t.row(vec!["clean trajectory".into(), fmt_f(raw, 4), fmt_f(smooth, 4),
-               "-".into(), "-".into()]);
+    t.row(vec![Cell::s("clean trajectory"), Cell::f(raw, 4),
+               Cell::f(smooth, 4), Cell::s("-"), Cell::s("-")]);
     t.row(vec![
-        "outlier final batch (+0.15)".into(),
-        fmt_f(raw_bad, 4), fmt_f(smooth_bad, 4),
-        fmt_f((raw_bad - raw).abs(), 4),
-        fmt_f((smooth_bad - smooth).abs(), 4),
+        Cell::s("outlier final batch (+0.15)"),
+        Cell::f(raw_bad, 4), Cell::f(smooth_bad, 4),
+        Cell::f((raw_bad - raw).abs(), 4),
+        Cell::f((smooth_bad - smooth).abs(), 4),
     ]);
-    println!(
-        "(the smoothed estimate absorbs {:.0}% of the injected outlier)\n",
+    let mut art = Artifact::new("fig24");
+    art.table(t);
+    art.note(format!(
+        "(the smoothed estimate absorbs {:.0}% of the injected outlier)",
         100.0 * (1.0 - (smooth_bad - smooth).abs() / 0.15)
-    );
-    t.emit("fig24")
+    ));
+    Ok(art)
 }
 
 /// Tables 3/8: train the holdout-scale analogue with extrapolated HPs
 /// and score the synthetic zero-shot suite (heldout / cloze / sticky).
-pub fn tab3(ctx: &Ctx) -> Result<()> {
+pub fn tab3(ctx: &Ctx) -> Result<Artifact> {
     let model = match ctx.preset {
         Preset::Fast => "micro",
         Preset::Full => "tiny",
@@ -73,46 +77,51 @@ pub fn tab3(ctx: &Ctx) -> Result<()> {
     ];
     let corpus = Corpus::new(m.vocab, 17);
     let suite_seed = 99;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "tab3",
         "Tables 3/8 — final eval + synthetic zero-shot suite at the holdout scale",
         &["optimizer", "B", "steps", "eval loss", "heldout acc",
           "cloze acc", "sticky acc", "mean acc"],
     );
     for (method, k, batch) in configs {
-        let steps = (tokens / (batch * m.seq_len) as f64).ceil() as u64;
-        let mut cfg = TrainConfig::new(model, method);
-        cfg.total_steps = steps.max(30);
-        cfg.global_batch = batch;
-        cfg.sync_interval = 15;
-        cfg.eval_every = 15;
-        cfg.eval_batches = 4;
-        cfg.warmup_steps = cfg.total_steps / 10;
-        // sqrt-scale LR from the B=32 reference, as in the CBS sweeps
-        cfg.lr *= (batch as f64 / 32.0).sqrt();
+        let steps = ((tokens / (batch * m.seq_len) as f64).ceil() as u64)
+            .max(30);
+        let mut spec = RunSpec::new(model, method)
+            .steps(steps)
+            .batch(batch)
+            .sync_interval(15)
+            .eval_every(15)
+            .eval_batches(4)
+            .warmup(steps / 10)
+            // sqrt-scale LR from the B=32 reference, as in the CBS sweeps
+            .lr(default_lr(model, method) * (batch as f64 / 32.0).sqrt());
         if method.is_local_update() {
-            cfg = cfg.tuned_outer(k)?;
+            spec = spec.workers(k);
         }
+        let cfg = spec.build()?;
         eprintln!("[tab3] {} B={batch} steps={}", combo_label(method, k),
                   cfg.total_steps);
         let r = train(&sess, &cfg)?;
         let params = r.final_params.as_ref().expect("train keeps params");
         let mut accs = Vec::new();
         let mut cells = vec![
-            combo_label(method, k),
-            batch.to_string(),
-            cfg.total_steps.to_string(),
-            fmt_f(r.smoothed_final, 4),
+            Cell::s(combo_label(method, k)),
+            Cell::int(batch),
+            Cell::int(cfg.total_steps),
+            Cell::f(r.smoothed_final, 4),
         ];
         for (_, batch_tokens) in
             tasks::task_suite(&corpus, m.microbatch, m.seq_len, suite_seed)
         {
             let (_, acc) = sess.eval_step(params, &batch_tokens)?;
             accs.push(acc as f64);
-            cells.push(fmt_f(acc as f64, 3));
+            cells.push(Cell::f(acc as f64, 3));
         }
-        cells.push(fmt_f(crate::util::mean(&accs), 3));
+        cells.push(Cell::f(crate::util::mean(&accs), 3));
         t.row(cells);
     }
     let _ = ladder_batch(ctx); // documented: ladder runs share the cache
-    t.emit("tab3")
+    let mut art = Artifact::new("tab3");
+    art.table(t);
+    Ok(art)
 }

@@ -3,63 +3,73 @@
 
 use anyhow::Result;
 
-use super::fig_workers::base_cfg;
-use super::{Ctx, Preset};
-use crate::coordinator::Method;
+use super::fig_workers::base_spec;
+use super::{Artifact, Cell, Ctx, Preset, Sweep, TypedTable};
+use crate::coordinator::config::default_lr;
+use crate::coordinator::{Method, RunSpec};
 use crate::scaling::fit_pure;
 use crate::util::rng::Rng;
-use crate::util::table::{fmt_f, Table};
 
-/// Fig 22: sweep (eta_out, mu) for DiLoCo/MuLoCo at K in {1, 8}.
+/// Fig 22: sweep (eta_out, mu) for DiLoCo/MuLoCo at K in {1, 8} — a
+/// `Sweep` over the two outer knobs per (method, K).
 /// The paper's finding: MuLoCo prefers LOWER outer momentum at low K.
-pub fn fig22(ctx: &Ctx) -> Result<()> {
-    let sess = ctx.session(ctx.base_model())?;
+pub fn fig22(ctx: &Ctx) -> Result<Artifact> {
     let (etas, mus, steps): (Vec<f64>, Vec<f64>, u64) = match ctx.preset {
         Preset::Fast => (vec![0.6, 0.8, 1.0], vec![0.4, 0.6, 0.8], 45),
         Preset::Full => (vec![0.4, 0.6, 0.8, 1.0],
                          vec![0.3, 0.5, 0.7, 0.9], 180),
     };
-    let mut t = Table::new(
+    // reference column: the loss at the highest swept momentum (0.8 on
+    // the fast axis, 0.9 on full) — the "high mu hurts MuLoCo at low K"
+    // comparison the paper makes
+    let mu_hi = *mus.last().expect("non-empty momentum axis");
+    let mut t = TypedTable::new(
+        "fig22",
         "Fig 22 — outer HP sweep: best (eta_out, mu) per method/K",
         &["method", "K", "best eta_out", "best mu", "best loss",
-          "loss at mu=0.8"],
+          "loss at high mu"],
     );
     for method in [Method::Diloco, Method::Muloco] {
         for k in [1usize, 8] {
+            let results = Sweep::new(
+                base_spec(ctx, method)
+                    .workers(k)
+                    .steps(steps)
+                    .warmup(steps / 10)
+                    .sync_interval(15)
+                    .eval_every(15),
+            )
+            .axis("outer-lr", &etas)
+            .axis("outer-momentum", &mus)
+            .run(ctx)?;
             let mut best = (f64::NAN, f64::NAN, f64::INFINITY);
-            let mut at_mu08 = f64::NAN;
-            for &eta in &etas {
-                for &mu in &mus {
-                    let mut cfg = base_cfg(ctx, method);
-                    cfg.workers = k;
-                    cfg.total_steps = steps;
-                    cfg.warmup_steps = steps / 10;
-                    cfg.sync_interval = 15;
-                    cfg.eval_every = 15;
-                    cfg.outer_lr = eta;
-                    cfg.outer_momentum = mu;
-                    let loss = ctx.cache.run(&sess, &cfg)?.smoothed_final;
-                    if loss < best.2 {
-                        best = (eta, mu, loss);
-                    }
-                    if (mu - 0.8).abs() < 1e-9 && (eta - best.0).abs() < 0.21 {
-                        at_mu08 = loss;
-                    }
+            let mut at_mu_hi = f64::NAN;
+            for (p, run) in &results {
+                let eta: f64 = p.coord("outer-lr").parse()?;
+                let mu: f64 = p.coord("outer-momentum").parse()?;
+                let loss = run.smoothed_final;
+                if loss < best.2 {
+                    best = (eta, mu, loss);
+                }
+                if (mu - mu_hi).abs() < 1e-9 && (eta - best.0).abs() < 0.21 {
+                    at_mu_hi = loss;
                 }
             }
             t.row(vec![
-                method.name().into(), k.to_string(),
-                fmt_f(best.0, 1), fmt_f(best.1, 1), fmt_f(best.2, 4),
-                fmt_f(at_mu08, 4),
+                Cell::s(method.name()), Cell::int(k),
+                Cell::f(best.0, 1), Cell::f(best.1, 1), Cell::f(best.2, 4),
+                Cell::f(at_mu_hi, 4),
             ]);
         }
     }
-    t.emit("fig22")
+    let mut art = Artifact::new("fig22");
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 23 / Table 15: fit power laws to per-scale optimal LR and batch
 /// size, extrapolate to the largest (unswept) scale.
-pub fn fig23(ctx: &Ctx) -> Result<()> {
+pub fn fig23(ctx: &Ctx) -> Result<Artifact> {
     // mini LR sweep per scale per method: {0.5x, 1x, 2x} of default
     let scales: Vec<&str> = match ctx.preset {
         Preset::Fast => vec!["nano", "micro"],
@@ -69,37 +79,41 @@ pub fn fig23(ctx: &Ctx) -> Result<()> {
         Preset::Fast => "tiny",
         Preset::Full => "med",
     };
+    let steps: u64 = match ctx.preset {
+        Preset::Fast => 45,
+        Preset::Full => 180,
+    };
     let methods = [Method::DpAdamw, Method::DpMuon, Method::Diloco,
                    Method::Muloco];
     let mut rng = Rng::new(31);
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig23",
         "Fig 23 / Table 15 — eta_in(N) = a*N^alpha fits + extrapolation",
         &["method", "a", "alpha", "extrapolated lr @ target",
           "default lr @ target"],
     );
     for method in methods {
+        // the sweep multiplies the base model's default LR, as the
+        // original Table 15 protocol did
+        let base_lr = default_lr(ctx.base_model(), method);
         let mut ns = Vec::new();
         let mut best_lrs = Vec::new();
         for model in &scales {
             let sess = ctx.session(model)?;
             let n_params = sess.manifest.config.param_count as f64;
-            let default_lr = base_cfg(ctx, method).lr;
             let mut best = (f64::NAN, f64::INFINITY);
             for mult in [0.5, 1.0, 2.0] {
-                let mut cfg = base_cfg(ctx, method);
-                cfg.model = model.to_string();
-                cfg.lr = default_lr * mult;
-                cfg.total_steps = match ctx.preset {
-                    Preset::Fast => 45,
-                    Preset::Full => 180,
-                };
-                cfg.warmup_steps = cfg.total_steps / 10;
-                cfg.sync_interval = 15;
-                cfg.eval_every = 15;
-                cfg.global_batch = 32;
+                let mut spec = RunSpec::new(model, method)
+                    .lr(base_lr * mult)
+                    .steps(steps)
+                    .warmup(steps / 10)
+                    .sync_interval(15)
+                    .eval_every(15)
+                    .batch(32);
                 if method.is_local_update() {
-                    cfg = cfg.tuned_outer(4)?;
+                    spec = spec.workers(4);
                 }
+                let cfg = spec.build()?;
                 let loss = ctx.cache.run(&sess, &cfg)?.smoothed_final;
                 if loss < best.1 {
                     best = (cfg.lr, loss);
@@ -111,15 +125,17 @@ pub fn fig23(ctx: &Ctx) -> Result<()> {
         let (law, _) = fit_pure(&ns, &best_lrs, 4, &mut rng);
         let target_n = ctx.session(target)?.manifest.config.param_count as f64;
         t.row(vec![
-            method.name().into(),
-            format!("{:.3e}", law.a), fmt_f(law.alpha, 3),
-            format!("{:.4e}", law.eval(target_n)),
-            format!("{:.4e}", base_cfg(ctx, method).lr),
+            Cell::s(method.name()),
+            Cell::sci(law.a), Cell::f(law.alpha, 3),
+            Cell::sci(law.eval(target_n)),
+            Cell::sci(base_lr),
         ]);
     }
-    println!(
+    let mut art = Artifact::new("fig23");
+    art.table(t);
+    art.note(
         "(paper shape: AdamW-based optimal LR falls steeply with scale; \
-         Muon-based LR stays comparatively flat)\n"
+         Muon-based LR stays comparatively flat)",
     );
-    t.emit("fig23")
+    Ok(art)
 }

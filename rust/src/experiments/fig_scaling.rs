@@ -3,12 +3,11 @@
 
 use anyhow::Result;
 
-use super::{Ctx, Preset, RunSummary};
-use crate::coordinator::{Method, TrainConfig};
+use super::{Artifact, Cell, Ctx, Preset, RunSummary, TypedTable};
+use crate::coordinator::{Method, RunSpec};
 use crate::scaling::{fit_fixed_offset, fit_joint_irreducible, fit_pure,
                      fit_free_offset, mean_abs_log_residual};
 use crate::util::rng::Rng;
-use crate::util::table::{fmt_f, fmt_pct, fmt_sci, Table};
 
 /// tokens-per-parameter budget for the ladder runs
 fn tpp(ctx: &Ctx) -> f64 {
@@ -57,17 +56,18 @@ pub fn ladder_run(ctx: &Ctx, model: &str, method: Method, k: usize)
     let m = &sess.manifest.config;
     let tokens = tpp(ctx) * m.param_count as f64;
     let tok_per_step = (ladder_batch(ctx) * m.seq_len) as f64;
-    let steps = (tokens / tok_per_step).ceil() as u64;
-    let mut cfg = TrainConfig::new(model, method);
-    cfg.total_steps = steps.max(30);
-    cfg.global_batch = ladder_batch(ctx);
-    cfg.sync_interval = 15;
-    cfg.eval_every = 15;
-    cfg.eval_batches = 4;
-    cfg.warmup_steps = cfg.total_steps / 10;
+    let steps = ((tokens / tok_per_step).ceil() as u64).max(30);
+    let mut spec = RunSpec::new(model, method)
+        .steps(steps)
+        .batch(ladder_batch(ctx))
+        .sync_interval(15)
+        .eval_every(15)
+        .eval_batches(4)
+        .warmup(steps / 10);
     if method.is_local_update() {
-        cfg = cfg.tuned_outer(k)?;
+        spec = spec.workers(k);
     }
+    let cfg = spec.build()?;
     let run = ctx.cache.run(&sess, &cfg)?;
     let d = cfg.total_steps as f64 * tok_per_step;
     let c = 6.0 * m.param_count as f64 * d; // C = 6 N D
@@ -89,14 +89,16 @@ pub fn ladder_grid(ctx: &Ctx)
 }
 
 /// Fig 10 + Tables 2/6: power-law fits with three functional forms.
-pub fn fig10(ctx: &Ctx) -> Result<()> {
+pub fn fig10(ctx: &Ctx) -> Result<Artifact> {
     let grid = ladder_grid(ctx)?;
     let ladder = ctx.ladder();
     let holdout_model = *ladder.last().unwrap();
+    let mut art = Artifact::new("fig10");
 
     // --- Table 2 analogue: functional-form comparison with the largest
     // trained scale held out -----------------------------------------
-    let mut t2 = Table::new(
+    let mut t2 = TypedTable::new(
+        "fig10-tab2",
         "Table 2 — functional forms (fit on smaller scales, eval on largest)",
         &["form", "train residual", "holdout residual"],
     );
@@ -147,10 +149,10 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
                        hold_r / laws.len() as f64));
         }
         for (name, tr, hr) in rows {
-            t2.row(vec![name, fmt_f(tr, 4), fmt_f(hr, 4)]);
+            t2.row(vec![Cell::s(name), Cell::f(tr, 4), Cell::f(hr, 4)]);
         }
     }
-    t2.emit("fig10-tab2")?;
+    art.table(t2);
 
     // --- Table 6 / Fig 10: final joint-L_irr fit on ALL scales --------
     let curves: Vec<(Vec<f64>, Vec<f64>)> = combos(ctx).iter()
@@ -163,7 +165,8 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
         })
         .collect();
     let (laws, l_irr, _) = fit_joint_irreducible(&curves, 6, &mut rng);
-    let mut t6 = Table::new(
+    let mut t6 = TypedTable::new(
+        "fig10",
         &format!("Table 6 / Fig 10 — L(C) = a*C^alpha + L_irr (joint L_irr = {l_irr:.3})"),
         &["method", "K", "a", "alpha", "train residual"],
     );
@@ -171,9 +174,9 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
         combos(ctx).iter().zip(&laws).zip(&curves)
     {
         t6.row(vec![
-            method.name().into(), k.to_string(),
-            fmt_sci(law.a), fmt_f(law.alpha, 4),
-            fmt_f(mean_abs_log_residual(law, xs, ys), 4),
+            Cell::s(method.name()), Cell::int(*k),
+            Cell::sci(law.a), Cell::f(law.alpha, 4),
+            Cell::f(mean_abs_log_residual(law, xs, ys), 4),
         ]);
     }
     // the paper's headline: Muon-based alphas are more negative
@@ -183,16 +186,19 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
     };
     if let (Some(am), Some(aa)) = (alpha_of(Method::Muloco, 1),
                                    alpha_of(Method::Diloco, 1)) {
-        println!("MuLoCo K=1 alpha = {am:.4} vs DiLoCo K=1 alpha = {aa:.4} \
-                  (paper: Muon-based methods scale better / more negative)\n");
+        art.note(format!(
+            "MuLoCo K=1 alpha = {am:.4} vs DiLoCo K=1 alpha = {aa:.4} \
+             (paper: Muon-based methods scale better / more negative)"));
     }
-    t6.emit("fig10")
+    art.table(t6);
+    Ok(art)
 }
 
 /// Fig 11 / Table 7: % loss increase over the DP baseline per scale/K.
-pub fn fig11(ctx: &Ctx) -> Result<()> {
+pub fn fig11(ctx: &Ctx) -> Result<Artifact> {
     let grid = ladder_grid(ctx)?;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig11",
         "Fig 11 / Table 7 — % change vs DP baseline across scales",
         &["model", "K", "DiLoCo", "vs DP-AdamW", "MuLoCo", "vs DP-Muon"],
     );
@@ -212,24 +218,27 @@ pub fn fig11(ctx: &Ctx) -> Result<()> {
             let dl = get(Method::Diloco);
             let ml = get(Method::Muloco);
             t.row(vec![
-                model.to_string(), k.to_string(),
-                fmt_f(dl, 4), fmt_pct(dl / dp_a - 1.0),
-                fmt_f(ml, 4), fmt_pct(ml / dp_m - 1.0),
+                Cell::s(model), Cell::int(k),
+                Cell::f(dl, 4), Cell::pct(dl / dp_a - 1.0),
+                Cell::f(ml, 4), Cell::pct(ml / dp_m - 1.0),
             ]);
         }
     }
-    t.emit("fig11")
+    let mut art = Artifact::new("fig11");
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 17: scaling exponent ratio alpha_method/alpha_DP as a function
 /// of the ASSUMED irreducible loss.
-pub fn fig17(ctx: &Ctx) -> Result<()> {
+pub fn fig17(ctx: &Ctx) -> Result<Artifact> {
     let grid = ladder_grid(ctx)?;
     let mut rng = Rng::new(11);
     let min_loss = grid.iter().map(|g| g.5).fold(f64::INFINITY, f64::min);
     // sweep L_irr from 0 to just below the smallest observed loss
     let lirrs: Vec<f64> = (0..6).map(|i| min_loss * i as f64 / 6.0).collect();
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig17",
         "Fig 17 — alpha(method) / alpha(DP) vs assumed L_irr",
         &["L_irr", "DiLoCo K=8 / DP-AdamW", "MuLoCo K=8 / DP-Muon",
           "DiLoCo K=1 / DP-AdamW", "MuLoCo K=1 / DP-Muon"],
@@ -252,12 +261,14 @@ pub fn fig17(ctx: &Ctx) -> Result<()> {
         let a_dp_a = alpha(Method::DpAdamw, 1, &mut rng);
         let a_dp_m = alpha(Method::DpMuon, 1, &mut rng);
         t.row(vec![
-            fmt_f(l_irr, 3),
-            fmt_f(alpha(Method::Diloco, 8, &mut rng) / a_dp_a, 4),
-            fmt_f(alpha(Method::Muloco, 8, &mut rng) / a_dp_m, 4),
-            fmt_f(alpha(Method::Diloco, 1, &mut rng) / a_dp_a, 4),
-            fmt_f(alpha(Method::Muloco, 1, &mut rng) / a_dp_m, 4),
+            Cell::f(l_irr, 3),
+            Cell::f(alpha(Method::Diloco, 8, &mut rng) / a_dp_a, 4),
+            Cell::f(alpha(Method::Muloco, 8, &mut rng) / a_dp_m, 4),
+            Cell::f(alpha(Method::Diloco, 1, &mut rng) / a_dp_a, 4),
+            Cell::f(alpha(Method::Muloco, 1, &mut rng) / a_dp_m, 4),
         ]);
     }
-    t.emit("fig17")
+    let mut art = Artifact::new("fig17");
+    art.table(t);
+    Ok(art)
 }

@@ -2,12 +2,11 @@
 
 use anyhow::Result;
 
-use super::fig_workers::base_cfg;
-use super::Ctx;
-use crate::comm::{Hierarchical, LinkBandwidth};
+use super::fig_workers::base_spec;
+use super::{Artifact, Cell, Ctx, TypedTable};
+use crate::comm::{Hierarchical, LinkBandwidth, TopologySpec};
 use crate::coordinator::{train, Method};
 use crate::netsim::{CommPattern, SystemProfile, GBIT};
-use crate::util::table::{fmt_f, fmt_pct, Table};
 
 /// Measured per-step timings for one method (short instrumented run).
 struct Measured {
@@ -18,16 +17,14 @@ struct Measured {
 
 fn measure(ctx: &Ctx, method: Method) -> Result<Measured> {
     let sess = ctx.session(ctx.base_model())?;
-    let mut cfg = base_cfg(ctx, method);
-    cfg.total_steps = 30;
-    cfg.warmup_steps = 3;
+    let mut spec = base_spec(ctx, method).steps(30).warmup(3);
     if method.is_local_update() {
-        cfg = cfg.tuned_outer(4)?;
+        spec = spec.workers(4);
     }
     // measure sequentially: per-call elapsed times feed Table 9's
     // per-step compute/throughput rows, and concurrent workers would
     // fold cross-thread contention into exec.fwd_grad_secs
-    cfg.parallel = false;
+    let cfg = spec.parallel(false).build()?;
     let r = train(&sess, &cfg)?;
     let steps = cfg.total_steps as f64;
     Ok(Measured {
@@ -38,8 +35,10 @@ fn measure(ctx: &Ctx, method: Method) -> Result<Measured> {
 }
 
 /// Fig 9 / Table 9: end-to-end step time, throughput, optimizer
-/// overhead and memory complexity for DiLoCo vs MuLoCo.
-pub fn fig9(ctx: &Ctx) -> Result<()> {
+/// overhead and memory complexity for DiLoCo vs MuLoCo — plus the
+/// asymmetric per-rank communication ledger of a leader-heavy
+/// hierarchical run (`CommStats::sent_per_rank`).
+pub fn fig9(ctx: &Ctx) -> Result<Artifact> {
     let sess = ctx.session(ctx.base_model())?;
     let m = &sess.manifest.config;
     let dl = measure(ctx, Method::Diloco)?;
@@ -50,31 +49,75 @@ pub fn fig9(ctx: &Ctx) -> Result<()> {
     let flops = |x: &Measured| {
         m.flops_per_token * tokens_per_step / step(x) / 1e9
     };
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig9",
         "Fig 9 / Table 9 — system metrics (K=4, measured on this host)",
         &["metric", "DiLoCo", "MuLoCo", "delta %"],
     );
-    let pct = |a: f64, b: f64| fmt_pct(b / a - 1.0);
-    t.row(vec!["end-to-end step (s)".into(),
-               fmt_f(step(&dl), 4), fmt_f(step(&ml), 4),
+    let pct = |a: f64, b: f64| Cell::pct(b / a - 1.0);
+    t.row(vec![Cell::s("end-to-end step (s)"),
+               Cell::f(step(&dl), 4), Cell::f(step(&ml), 4),
                pct(step(&dl), step(&ml))]);
-    t.row(vec!["optimizer step (s)".into(),
-               fmt_f(dl.optimizer_per_step, 4), fmt_f(ml.optimizer_per_step, 4),
+    t.row(vec![Cell::s("optimizer step (s)"),
+               Cell::f(dl.optimizer_per_step, 4),
+               Cell::f(ml.optimizer_per_step, 4),
                pct(dl.optimizer_per_step, ml.optimizer_per_step)]);
-    t.row(vec!["throughput (tokens/s)".into(),
-               fmt_f(thr(&dl), 0), fmt_f(thr(&ml), 0),
+    t.row(vec![Cell::s("throughput (tokens/s)"),
+               Cell::f(thr(&dl), 0), Cell::f(thr(&ml), 0),
                pct(thr(&dl), thr(&ml))]);
-    t.row(vec!["GFLOPS (model)".into(),
-               fmt_f(flops(&dl), 2), fmt_f(flops(&ml), 2),
+    t.row(vec![Cell::s("GFLOPS (model)"),
+               Cell::f(flops(&dl), 2), Cell::f(flops(&ml), 2),
                pct(flops(&dl), flops(&ml))]);
-    t.row(vec!["final eval loss".into(),
-               fmt_f(dl.loss, 4), fmt_f(ml.loss, 4),
+    t.row(vec![Cell::s("final eval loss"),
+               Cell::f(dl.loss, 4), Cell::f(ml.loss, 4),
                pct(dl.loss, ml.loss)]);
-    t.row(vec!["memory (param copies)".into(),
-               Method::Diloco.memory_copies().to_string(),
-               Method::Muloco.memory_copies().to_string(),
-               "-25%".into()]);
-    t.emit("fig9")
+    t.row(vec![Cell::s("memory (param copies)"),
+               Cell::int(Method::Diloco.memory_copies()),
+               Cell::int(Method::Muloco.memory_copies()),
+               Cell::s("-25%")]);
+
+    // --- asymmetric per-rank comm: leaders vs members on a 2-DC
+    //     hierarchical MuLoCo run (ROADMAP follow-up from the comm PR).
+    //     Flat topologies are symmetric; the hierarchical ledger shows
+    //     leaders carrying the WAN exchange + the DC broadcast.
+    let hier_cfg = base_spec(ctx, Method::Muloco)
+        .workers(4)
+        .steps(16)
+        .sync_interval(4)
+        .eval_every(16)
+        .eval_batches(1)
+        .warmup(2)
+        .topology(TopologySpec::Hier { groups: 2 })
+        .build()?;
+    let hier = train(&sess, &hier_cfg)?;
+    let mut ranks = TypedTable::new(
+        "fig9-ranks",
+        "Fig 9 inset — per-rank comm, MuLoCo K=4 hier(2 DC)",
+        &["rank", "role", "sent MB", "recv MB"],
+    );
+    // role labels come from the topology's own attribution, so they
+    // can never drift from how the bytes were actually charged
+    let groups = match hier_cfg.topology {
+        TopologySpec::Hier { groups } => groups,
+        _ => 1,
+    };
+    let (leaders, _) = Hierarchical::roles(groups, hier_cfg.workers / groups);
+    for (r, (s, v)) in hier.comm.sent_per_rank.iter()
+        .zip(&hier.comm.recv_per_rank)
+        .enumerate()
+    {
+        ranks.row(vec![
+            Cell::int(r),
+            Cell::s(if leaders.contains(&r) { "leader" } else { "member" }),
+            Cell::f(*s as f64 / 1e6, 2),
+            Cell::f(*v as f64 / 1e6, 2),
+        ]);
+    }
+
+    let mut art = Artifact::new("fig9");
+    art.table(t);
+    art.table(ranks);
+    Ok(art)
 }
 
 fn profile(ctx: &Ctx, measured: &Measured, method: Method, k: usize,
@@ -99,7 +142,7 @@ fn profile(ctx: &Ctx, measured: &Measured, method: Method, k: usize,
 /// Flat profiles sweep a single-tier link; the hierarchical row keeps a
 /// fast 100 Gbit/s intra-DC fabric and sweeps only the WAN — the trace
 /// seam makes the two-tier setup a netsim input instead of a new model.
-pub fn fig16(ctx: &Ctx) -> Result<()> {
+pub fn fig16(ctx: &Ctx) -> Result<Artifact> {
     let dl = measure(ctx, Method::Diloco)?;
     let variants: Vec<(&str, Method, f64)> = vec![
         ("DP fp32", Method::DpAdamw, 1.0),
@@ -110,24 +153,25 @@ pub fn fig16(ctx: &Ctx) -> Result<()> {
     let h = 15;
     let bws: Vec<f64> = vec![0.01, 0.1, 1.0, 10.0, 100.0, 1000.0];
     let mut headers = vec!["config".to_string()];
-    headers.extend(bws.iter().map(|b| format!("{b} Gbit/s")));
+    headers.extend(bws.iter().map(|b| format!("{b} Gbit/s (util %)")));
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    let mut t = Table::new("Fig 16 — compute utilization vs bandwidth (K=8)",
-                           &hdr_refs);
-    let mut table99 = Table::new(
+    let mut t = TypedTable::new(
+        "fig16", "Fig 16 — compute utilization vs bandwidth (K=8)", &hdr_refs);
+    let mut table99 = TypedTable::new(
+        "fig16-99",
         "Fig 16 inset — bandwidth needed for 99% utilization",
         &["config", "Gbit/s"],
     );
     for (name, method, frac) in variants {
         let p = profile(ctx, &dl, method, 8, h, frac)?;
-        let mut row = vec![name.to_string()];
+        let mut row = vec![Cell::s(name)];
         for bw in &bws {
-            row.push(format!("{:.1}%", 100.0 * p.utilization(bw * GBIT)));
+            row.push(Cell::f(100.0 * p.utilization(bw * GBIT), 1));
         }
         t.row(row);
         table99.row(vec![
-            name.to_string(),
-            format!("{:.3}", p.bandwidth_for_utilization(0.99) / GBIT),
+            Cell::s(name),
+            Cell::f(p.bandwidth_for_utilization(0.99) / GBIT, 3),
         ]);
     }
     {
@@ -143,16 +187,17 @@ pub fn fig16(ctx: &Ctx) -> Result<()> {
             CommPattern::EveryH { h },
             &hier,
         );
-        let mut row = vec!["MuLoCo 4-bit hier(2 DC)".to_string()];
+        let mut row = vec![Cell::s("MuLoCo 4-bit hier(2 DC)")];
         for bw in &bws {
             let link = LinkBandwidth { inter: bw * GBIT, intra: 100.0 * GBIT };
-            row.push(format!("{:.1}%", 100.0 * p.utilization_linked(link)));
+            row.push(Cell::f(100.0 * p.utilization_linked(link), 1));
         }
         t.row(row);
     }
-    println!("{}", table99.render());
-    table99.emit("fig16-99")?;
-    t.emit("fig16")
+    let mut art = Artifact::new("fig16");
+    art.table(table99);
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 14 / Fig 20 / Table 10: idealized wall-clock training time under
@@ -163,7 +208,7 @@ pub fn fig16(ctx: &Ctx) -> Result<()> {
 /// 0.98 s (their Table 9), token budget 304.6B, and the per-method
 /// batch sizes of their Table 15 — reproducing Table 10's crossover
 /// analytically.
-pub fn fig14(ctx: &Ctx) -> Result<()> {
+pub fn fig14(ctx: &Ctx) -> Result<Artifact> {
     let _ = ctx; // analytic: no runs needed
     let param_bytes = 4.0 * 15.23e9;
     let tokens = 304.6e9;
@@ -182,7 +227,8 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
     let mut headers = vec!["method".to_string()];
     headers.extend(bws.iter().map(|b| format!("{b} Gbit/s (h)")));
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig14",
         "Table 10 / Figs 14+20 — idealized wall-clock hours (paper-scale projection)",
         &hdr_refs,
     );
@@ -193,14 +239,18 @@ pub fn fig14(ctx: &Ctx) -> Result<()> {
         // as a K=2 ring per the paper's accounting
         let p = SystemProfile::flat(
             step, opt, param_bytes, param_bytes, k.max(2), pattern);
-        let mut row = vec![name.to_string()];
+        let mut row = vec![Cell::s(name)];
         for bw in &bws {
-            row.push(format!("{:.1}", p.training_hours(steps, bw * GBIT)));
+            row.push(Cell::f(p.training_hours(steps, bw * GBIT), 1));
         }
         t.row(row);
     }
-    println!(
-        "(shape to check vs paper Table 10: K=16 MuLoCo fastest at 10 Gbit/s; \n          K=1 MuLoCo (largest batch, fewest sequential steps) fastest at high bandwidth)\n"
+    let mut art = Artifact::new("fig14");
+    art.table(t);
+    art.note(
+        "(shape to check vs paper Table 10: K=16 MuLoCo fastest at 10 Gbit/s; \
+         K=1 MuLoCo (largest batch, fewest sequential steps) fastest at high \
+         bandwidth)",
     );
-    t.emit("fig14")
+    Ok(art)
 }

@@ -2,22 +2,21 @@
 
 use anyhow::Result;
 
-use super::{Ctx, Preset};
-use crate::coordinator::{Method, TrainConfig};
-use crate::util::table::{fmt_f, fmt_pct, Table};
+use super::{Artifact, Cell, Ctx, Preset, TypedTable};
+use crate::coordinator::{Method, RunSpec};
 
-/// Base config for the single-scale communication-efficiency section.
-pub fn base_cfg(ctx: &Ctx, method: Method) -> TrainConfig {
-    let mut cfg = TrainConfig::new(ctx.base_model(), method);
-    cfg.total_steps = ctx.base_steps();
-    cfg.global_batch = ctx.base_batch();
-    cfg.sync_interval = match ctx.preset {
+/// Base spec for the single-scale communication-efficiency section.
+pub fn base_spec(ctx: &Ctx, method: Method) -> RunSpec {
+    let h = match ctx.preset {
         Preset::Fast => 15,
         Preset::Full => 30,
     };
-    cfg.eval_every = cfg.sync_interval;
-    cfg.warmup_steps = cfg.total_steps / 10;
-    cfg
+    RunSpec::new(ctx.base_model(), method)
+        .steps(ctx.base_steps())
+        .batch(ctx.base_batch())
+        .sync_interval(h)
+        .eval_every(h)
+        .warmup(ctx.base_steps() / 10)
 }
 
 pub fn k_values(ctx: &Ctx) -> Vec<usize> {
@@ -30,24 +29,25 @@ pub fn k_values(ctx: &Ctx) -> Vec<usize> {
 /// DP baseline (K=1 logical) with matched budget.
 pub fn dp_run(ctx: &Ctx, method: Method) -> Result<super::RunSummary> {
     let sess = ctx.session(ctx.base_model())?;
-    let cfg = base_cfg(ctx, method);
+    let cfg = base_spec(ctx, method).build()?;
     ctx.cache.run(&sess, &cfg)
 }
 
 pub fn local_run(ctx: &Ctx, method: Method, k: usize)
                  -> Result<super::RunSummary> {
     let sess = ctx.session(ctx.base_model())?;
-    let cfg = base_cfg(ctx, method).tuned_outer(k)?;
+    let cfg = base_spec(ctx, method).workers(k).build()?;
     ctx.cache.run(&sess, &cfg)
 }
 
 /// Fig 1a / Fig 6a: % increase in final smoothed eval loss over the
 /// respective DP baseline as K grows.
-pub fn fig1a(ctx: &Ctx) -> Result<()> {
+pub fn fig1a(ctx: &Ctx) -> Result<Artifact> {
     let dp_adamw = dp_run(ctx, Method::DpAdamw)?.smoothed_final;
     let dp_muon = dp_run(ctx, Method::DpMuon)?.smoothed_final;
 
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig1a",
         "Fig 1a/6a — worker scaling (final smoothed eval loss; % vs DP)",
         &["K", "DiLoCo", "% vs DP-AdamW", "MuLoCo", "% vs DP-Muon",
           "MuLoCo wins abs", "MuLoCo wins rel"],
@@ -58,24 +58,27 @@ pub fn fig1a(ctx: &Ctx) -> Result<()> {
         let rel_dl = dl / dp_adamw - 1.0;
         let rel_ml = ml / dp_muon - 1.0;
         t.row(vec![
-            k.to_string(),
-            fmt_f(dl, 4),
-            fmt_pct(rel_dl),
-            fmt_f(ml, 4),
-            fmt_pct(rel_ml),
-            (ml < dl).to_string(),
-            (rel_ml < rel_dl).to_string(),
+            Cell::int(k),
+            Cell::f(dl, 4),
+            Cell::pct(rel_dl),
+            Cell::f(ml, 4),
+            Cell::pct(rel_ml),
+            Cell::Bool(ml < dl),
+            Cell::Bool(rel_ml < rel_dl),
         ]);
     }
-    let mut base = Table::new("DP baselines", &["method", "loss"]);
-    base.row(vec!["DP-AdamW".into(), fmt_f(dp_adamw, 4)]);
-    base.row(vec!["DP-Muon".into(), fmt_f(dp_muon, 4)]);
-    println!("{}", base.render());
-    t.emit("fig1a")
+    let mut base = TypedTable::new(
+        "fig1a-base", "DP baselines", &["method", "loss"]);
+    base.row(vec![Cell::s("DP-AdamW"), Cell::f(dp_adamw, 4)]);
+    base.row(vec![Cell::s("DP-Muon"), Cell::f(dp_muon, 4)]);
+    let mut art = Artifact::new("fig1a");
+    art.table(base);
+    art.table(t);
+    Ok(art)
 }
 
 /// Fig 6b: relative loss vs DP as the sync interval H is doubled.
-pub fn fig6b(ctx: &Ctx) -> Result<()> {
+pub fn fig6b(ctx: &Ctx) -> Result<Artifact> {
     let sess = ctx.session(ctx.base_model())?;
     let dp_adamw = dp_run(ctx, Method::DpAdamw)?.smoothed_final;
     let dp_muon = dp_run(ctx, Method::DpMuon)?.smoothed_final;
@@ -85,26 +88,31 @@ pub fn fig6b(ctx: &Ctx) -> Result<()> {
         Preset::Full => vec![15, 30, 60, 120, 240],
     };
     let k = 8;
-    let mut t = Table::new(
+    let mut t = TypedTable::new(
+        "fig6b",
         "Fig 6b — sync interval sweep at K=8 (% vs DP baseline)",
         &["H", "DiLoCo", "% vs DP-AdamW", "MuLoCo", "% vs DP-Muon"],
     );
     for h in hs {
         let run = |method: Method| -> Result<f64> {
-            let mut cfg = base_cfg(ctx, method).tuned_outer(k)?;
-            cfg.sync_interval = h;
-            cfg.eval_every = h.min(cfg.total_steps);
+            let cfg = base_spec(ctx, method)
+                .workers(k)
+                .sync_interval(h)
+                .eval_every(h.min(ctx.base_steps()))
+                .build()?;
             Ok(ctx.cache.run(&sess, &cfg)?.smoothed_final)
         };
         let dl = run(Method::Diloco)?;
         let ml = run(Method::Muloco)?;
         t.row(vec![
-            h.to_string(),
-            fmt_f(dl, 4),
-            fmt_pct(dl / dp_adamw - 1.0),
-            fmt_f(ml, 4),
-            fmt_pct(ml / dp_muon - 1.0),
+            Cell::int(h),
+            Cell::f(dl, 4),
+            Cell::pct(dl / dp_adamw - 1.0),
+            Cell::f(ml, 4),
+            Cell::pct(ml / dp_muon - 1.0),
         ]);
     }
-    t.emit("fig6b")
+    let mut art = Artifact::new("fig6b");
+    art.table(t);
+    Ok(art)
 }

@@ -1,23 +1,30 @@
-//! Experiment harness: one generator per paper table/figure.
+//! Experiment harness: one generator per paper table/figure, all run
+//! through the [`Experiment`] trait and the [`Artifact`] sink.
 //!
 //! `muloco experiment <id>` regenerates the corresponding artifact into
-//! `results/<id>/` (rendered table on stdout + CSV).  See DESIGN.md §5
+//! `results/<id>/` (rendered table on stdout + CSV + typed JSON; pass
+//! `--format json` for the JSON document on stdout).  See DESIGN.md §5
 //! for the full paper-artifact -> generator index.
 //!
 //! Training runs are cached on disk (`results/cache/`) keyed by the
-//! full run configuration, so `experiment all` is incremental and
-//! experiments can share underlying runs (e.g. fig1a and fig11 reuse
-//! the same K-sweep).
+//! knob-registry cache key (`coordinator::spec::cache_key`), so
+//! `experiment all` is incremental and experiments share underlying
+//! runs (e.g. fig1a and fig11 reuse the same K-sweep).  Sweep-shaped
+//! generators go through the [`Sweep`] combinator, which resolves knob
+//! axes against the same registry.
 
+mod artifact;
 mod cache;
 mod fig_analysis;
 mod fig_cbs;
 mod fig_compress;
 mod fig_eval;
 mod fig_hp;
+mod fig_nsweep;
 mod fig_scaling;
 mod fig_wallclock;
 mod fig_workers;
+mod sweep;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -30,7 +37,9 @@ use anyhow::{bail, Result};
 
 use crate::runtime::Session;
 
+pub use artifact::{Artifact, Cell, Format, TypedTable};
 pub use cache::{RunCache, RunSummary};
+pub use sweep::{lookup, Sweep, SweepPoint};
 
 /// Execution context shared by all experiments.  Sessions are handed
 /// out behind `Arc` (the runtime is `Send + Sync`), so experiment code
@@ -123,71 +132,116 @@ impl Ctx {
     }
 }
 
-type ExpFn = fn(&Ctx) -> Result<()>;
+/// One registered experiment: a paper-table generator returning a
+/// structured [`Artifact`].  Rendering, CSV and JSON all happen in the
+/// shared sink, never inside an implementation.
+pub trait Experiment: Send + Sync {
+    fn id(&self) -> &'static str;
+    fn desc(&self) -> &'static str;
+    fn run(&self, ctx: &Ctx) -> Result<Artifact>;
+}
 
-/// (id, description, generator) — the DESIGN.md §5 index, executable.
-pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+/// Function-backed experiment (every generator in this crate).
+struct FnExperiment {
+    id: &'static str,
+    desc: &'static str,
+    f: fn(&Ctx) -> Result<Artifact>,
+}
+
+impl Experiment for FnExperiment {
+    fn id(&self) -> &'static str {
+        self.id
+    }
+
+    fn desc(&self) -> &'static str {
+        self.desc
+    }
+
+    fn run(&self, ctx: &Ctx) -> Result<Artifact> {
+        (self.f)(ctx)
+    }
+}
+
+/// The DESIGN.md §5 index, executable.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    fn e(
+        id: &'static str,
+        desc: &'static str,
+        f: fn(&Ctx) -> Result<Artifact>,
+    ) -> Box<dyn Experiment> {
+        Box::new(FnExperiment { id, desc, f })
+    }
     vec![
-        ("fig1a", "worker scaling: % loss vs DP baseline, K=1..16 (Figs 1a/6a)", fig_workers::fig1a),
-        ("fig6b", "sync-interval sweep H (Fig 6b)", fig_workers::fig6b),
-        ("fig2", "pseudogradient cosine sim to K=1 (Fig 2)", fig_analysis::fig2),
-        ("fig3", "spectra + top-S interference gap vs K (Fig 3)", fig_analysis::fig3),
-        ("fig4", "step/worker alignment to pseudogradient (Fig 4)", fig_analysis::fig4),
-        ("fig5", "inner-step Frobenius norms (Fig 5)", fig_analysis::fig5),
-        ("fig21", "per-worker alignment variability (Fig 21)", fig_analysis::fig21),
-        ("prop42", "nuclear-norm identity check (Prop 4.2)", fig_analysis::prop42),
-        ("fig7", "quantization: linear/stat x bits x EF (Fig 7/15, Tab 5)", fig_compress::fig7),
-        ("fig8a", "top-k sparsification x EF (Fig 8 left, Tab 4)", fig_compress::fig8a),
-        ("fig8b", "streaming partitioned sync (Fig 8 right)", fig_compress::fig8b),
-        ("fig9", "system metrics + memory complexity (Fig 9, Tab 9)", fig_wallclock::fig9),
-        ("fig16", "compute utilization vs bandwidth (Fig 16)", fig_wallclock::fig16),
-        ("fig14", "idealized wall-clock at low/high bandwidth (Figs 14/20, Tab 10)", fig_wallclock::fig14),
-        ("fig10", "compute scaling laws + functional forms (Fig 10, Tabs 2/6)", fig_scaling::fig10),
-        ("fig11", "% over DP vs scale per K (Fig 11, Tab 7)", fig_scaling::fig11),
-        ("fig17", "scaling exponent vs assumed L_irr (Fig 17)", fig_scaling::fig17),
-        ("fig12", "loss vs batch size; B_opt/B_crit per method (Fig 12)", fig_cbs::fig12),
-        ("fig1b", "iso-FLOP Pareto: loss vs batch (Fig 1b)", fig_cbs::fig1b),
-        ("fig13", "CBS power laws + iso-loss efficiency (Figs 13/18)", fig_cbs::fig13),
-        ("fig22", "outer HP sweep (Fig 22, Tabs 12-14)", fig_hp::fig22),
-        ("fig23", "HP power-law extrapolation to holdout scale (Fig 23, Tab 15)", fig_hp::fig23),
-        ("fig24", "raw vs smoothed eval loss (Fig 24, App F)", fig_eval::fig24),
-        ("tab3", "final eval + synthetic zero-shot suite (Tabs 3/8)", fig_eval::tab3),
+        e("fig1a", "worker scaling: % loss vs DP baseline, K=1..16 (Figs 1a/6a)", fig_workers::fig1a),
+        e("fig6b", "sync-interval sweep H (Fig 6b)", fig_workers::fig6b),
+        e("fig2", "pseudogradient cosine sim to K=1 (Fig 2)", fig_analysis::fig2),
+        e("fig3", "spectra + top-S interference gap vs K (Fig 3)", fig_analysis::fig3),
+        e("fig4", "step/worker alignment to pseudogradient (Fig 4)", fig_analysis::fig4),
+        e("fig5", "inner-step Frobenius norms (Fig 5)", fig_analysis::fig5),
+        e("fig21", "per-worker alignment variability (Fig 21)", fig_analysis::fig21),
+        e("prop42", "nuclear-norm identity check (Prop 4.2)", fig_analysis::prop42),
+        e("fig7", "quantization: linear/stat x bits x EF (Fig 7/15, Tab 5)", fig_compress::fig7),
+        e("fig8a", "top-k sparsification x EF (Fig 8 left, Tab 4)", fig_compress::fig8a),
+        e("fig8b", "streaming partitioned sync (Fig 8 right)", fig_compress::fig8b),
+        e("fig9", "system metrics + memory complexity (Fig 9, Tab 9)", fig_wallclock::fig9),
+        e("fig16", "compute utilization vs bandwidth (Fig 16)", fig_wallclock::fig16),
+        e("fig14", "idealized wall-clock at low/high bandwidth (Figs 14/20, Tab 10)", fig_wallclock::fig14),
+        e("fig10", "compute scaling laws + functional forms (Fig 10, Tabs 2/6)", fig_scaling::fig10),
+        e("fig11", "% over DP vs scale per K (Fig 11, Tab 7)", fig_scaling::fig11),
+        e("fig17", "scaling exponent vs assumed L_irr (Fig 17)", fig_scaling::fig17),
+        e("fig12", "loss vs batch size; B_opt/B_crit per method (Fig 12)", fig_cbs::fig12),
+        e("fig1b", "iso-FLOP Pareto: loss vs batch (Fig 1b)", fig_cbs::fig1b),
+        e("fig13", "CBS power laws + iso-loss efficiency (Figs 13/18)", fig_cbs::fig13),
+        e("fig22", "outer HP sweep (Fig 22, Tabs 12-14)", fig_hp::fig22),
+        e("fig23", "HP power-law extrapolation to holdout scale (Fig 23, Tab 15)", fig_hp::fig23),
+        e("fig24", "raw vs smoothed eval loss (Fig 24, App F)", fig_eval::fig24),
+        e("tab3", "final eval + synthetic zero-shot suite (Tabs 3/8)", fig_eval::tab3),
+        e("nsweep", "Newton-Schulz depth x ortho-interval sweep (MuonBP)", fig_nsweep::nsweep),
     ]
 }
 
 pub fn registry_names() -> Vec<(&'static str, &'static str)> {
-    registry().iter().map(|(id, d, _)| (*id, *d)).collect()
+    registry().iter().map(|e| (e.id(), e.desc())).collect()
 }
 
-pub fn run(id: &str, preset: &str, artifacts: &Path, jobs: usize) -> Result<()> {
+pub fn run(
+    id: &str,
+    preset: &str,
+    artifacts: &Path,
+    jobs: usize,
+    format: Format,
+) -> Result<()> {
     let ctx = Ctx::new(artifacts, preset)?;
     let reg = registry();
     if id == "all" {
-        return run_all(&ctx, &reg, jobs);
+        return run_all(&ctx, &reg, jobs, format);
     }
-    match reg.iter().find(|(name, _, _)| *name == id) {
-        Some((_, _, f)) => f(&ctx),
+    match reg.iter().find(|e| e.id() == id) {
+        Some(e) => e.run(&ctx)?.emit(format),
         None => bail!("unknown experiment {id:?}; see `muloco list`"),
     }
 }
 
 /// Run the whole registry across `jobs` worker threads sharing one
-/// `Ctx` (sessions behind `Arc`, the run cache on disk).  Generators
-/// are pulled off a shared counter; the per-experiment outcomes are
-/// collected into fixed slots and reported in registry order, so the
-/// summary is deterministic regardless of scheduling (interleaved
-/// *table* output under `--jobs > 1` still lands in each experiment's
-/// `results/<id>/` files).
+/// `Ctx` (sessions behind `Arc`, the run cache on disk).  Experiments
+/// are pulled off a shared counter; the aggregating progress UI prints
+/// one start line and one `[done/total]` completion line per experiment
+/// as they finish (stderr), emits each artifact under a print lock so
+/// tables never interleave, and closes with a deterministic
+/// registry-order summary table.
 fn run_all(
     ctx: &Ctx,
-    reg: &[(&'static str, &'static str, ExpFn)],
+    reg: &[Box<dyn Experiment>],
     jobs: usize,
+    format: Format,
 ) -> Result<()> {
     let total = reg.len();
     let jobs = jobs.clamp(1, total.max(1));
     let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<(f64, Result<()>)>>> =
+    let done = AtomicUsize::new(0);
+    let outcomes: Vec<Mutex<Option<(f64, Result<()>)>>> =
         (0..total).map(|_| Mutex::new(None)).collect();
+    let sink = Mutex::new(());
     thread::scope(|s| {
         for _ in 0..jobs {
             s.spawn(|| loop {
@@ -195,33 +249,55 @@ fn run_all(
                 if i >= total {
                     break;
                 }
-                let (name, desc, f) = reg[i];
-                eprintln!("=== [{}/{}] {name}: {desc}", i + 1, total);
+                let e = &reg[i];
+                eprintln!("=== [{}/{}] {}: {}", i + 1, total, e.id(), e.desc());
                 let t0 = Instant::now();
-                let r = f(ctx);
-                *results[i].lock().unwrap() =
-                    Some((t0.elapsed().as_secs_f64(), r));
+                let r = e.run(ctx);
+                let secs = t0.elapsed().as_secs_f64();
+                let status = {
+                    let _emit = sink.lock().unwrap();
+                    let status = r.and_then(|art| art.emit(format));
+                    let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                    match &status {
+                        Ok(()) => eprintln!(
+                            "=== [{d}/{total} done] {} ok in {secs:.1}s", e.id()),
+                        Err(err) => eprintln!(
+                            "=== [{d}/{total} done] {} FAILED in {secs:.1}s: {err:#}",
+                            e.id()),
+                    }
+                    status
+                };
+                *outcomes[i].lock().unwrap() = Some((secs, status));
             });
         }
     });
+
+    // deterministic registry-order summary, itself an artifact table
+    let mut summary = TypedTable::new(
+        "experiment-summary",
+        "experiment all — summary",
+        &["experiment", "status", "secs"],
+    );
     let mut failures = Vec::new();
-    for (i, (name, _, _)) in reg.iter().enumerate() {
-        match results[i].lock().unwrap().take() {
-            Some((secs, Ok(()))) => {
-                eprintln!("=== {name} done in {secs:.1}s");
-            }
-            Some((secs, Err(e))) => {
-                eprintln!("=== {name} FAILED after {secs:.1}s: {e:#}");
-                failures.push(*name);
+    for (i, e) in reg.iter().enumerate() {
+        let (secs, status) = match outcomes[i].lock().unwrap().take() {
+            Some((secs, Ok(()))) => (secs, "ok"),
+            Some((secs, Err(_))) => {
+                failures.push(e.id());
+                (secs, "FAILED")
             }
             None => {
-                eprintln!("=== {name} did not run");
-                failures.push(*name);
+                failures.push(e.id());
+                (0.0, "did not run")
             }
-        }
+        };
+        summary.row(vec![Cell::s(e.id()), Cell::s(status), Cell::f(secs, 1)]);
     }
+    let mut art = Artifact::new("experiment-summary");
+    art.table(summary);
+    art.emit(format)?;
     if !failures.is_empty() {
-        anyhow::bail!("experiments failed: {failures:?}");
+        bail!("experiments failed: {failures:?}");
     }
     Ok(())
 }

@@ -1,0 +1,137 @@
+//! Sweep combinator: a cartesian product of knob axes over a base
+//! [`RunSpec`], resolved through the knob registry and executed through
+//! the run cache.
+//!
+//! Axes are set by knob *name* — the same names the CLI and spec files
+//! use — so anything the schema can express can be swept (method, K, H,
+//! compression, `ns-iters`, `ortho-interval`, ...), and every point
+//! goes through `RunSpec::build`, so tuned-outer defaulting and
+//! validation apply per point exactly as they would for a hand-built
+//! run.
+
+use anyhow::Result;
+
+use super::cache::RunSummary;
+use super::Ctx;
+use crate::coordinator::{RunSpec, TrainConfig};
+
+/// One resolved grid point: its axis coordinates (knob name -> value,
+/// in axis order) and the finished config.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub coords: Vec<(String, String)>,
+    pub cfg: TrainConfig,
+}
+
+impl SweepPoint {
+    /// Coordinate value for one axis name.
+    pub fn coord(&self, name: &str) -> &str {
+        self.coords
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or_else(|| panic!("sweep point has no axis {name:?}"))
+    }
+}
+
+pub struct Sweep {
+    base: RunSpec,
+    axes: Vec<(String, Vec<String>)>,
+}
+
+impl Sweep {
+    pub fn new(base: RunSpec) -> Sweep {
+        Sweep { base, axes: Vec::new() }
+    }
+
+    /// Add one axis: `knob` swept over `values` (canonical knob
+    /// strings; numbers and labels alike go through `ToString`).
+    pub fn axis<T: ToString>(mut self, knob: &str, values: &[T]) -> Sweep {
+        self.axes
+            .push((knob.to_string(), values.iter().map(|v| v.to_string()).collect()));
+        self
+    }
+
+    /// Resolve the full grid, row-major (first axis slowest, last axis
+    /// fastest — the nesting order of the loops this combinator
+    /// replaces).  Every point is validated by `build`.
+    pub fn points(&self) -> Result<Vec<SweepPoint>> {
+        let total: usize = self.axes.iter().map(|(_, v)| v.len()).product();
+        let mut out = Vec::with_capacity(total);
+        for idx in 0..total {
+            let mut rem = idx;
+            let mut coords: Vec<(String, String)> = Vec::with_capacity(self.axes.len());
+            for (name, vals) in self.axes.iter().rev() {
+                coords.push((name.clone(), vals[rem % vals.len()].clone()));
+                rem /= vals.len();
+            }
+            coords.reverse();
+            let mut spec = self.base.clone();
+            for (name, v) in &coords {
+                spec = spec.set(name, v)?;
+            }
+            out.push(SweepPoint { coords, cfg: spec.build()? });
+        }
+        Ok(out)
+    }
+
+    /// Train (or fetch from the run cache) every grid point, in grid
+    /// order.
+    pub fn run(&self, ctx: &Ctx) -> Result<Vec<(SweepPoint, RunSummary)>> {
+        self.points()?
+            .into_iter()
+            .map(|p| {
+                let sess = ctx.session(&p.cfg.model)?;
+                let run = ctx.cache.run(&sess, &p.cfg)?;
+                Ok((p, run))
+            })
+            .collect()
+    }
+}
+
+/// Look one point up by a set of (axis, value) coordinates.
+pub fn lookup<'a>(
+    results: &'a [(SweepPoint, RunSummary)],
+    want: &[(&str, &str)],
+) -> Option<&'a RunSummary> {
+    results
+        .iter()
+        .find(|(p, _)| want.iter().all(|(n, v)| p.coord(n) == *v))
+        .map(|(_, r)| r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Method;
+
+    #[test]
+    fn grid_is_row_major_and_validated() {
+        let sweep = Sweep::new(RunSpec::new("nano", Method::Muloco))
+            .axis("workers", &[1usize, 2])
+            .axis("ns-iters", &[0usize, 5]);
+        let pts = sweep.points().unwrap();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].coord("workers"), "1");
+        assert_eq!(pts[0].coord("ns-iters"), "0");
+        assert_eq!(pts[1].coord("ns-iters"), "5");
+        assert_eq!(pts[2].coord("workers"), "2");
+        // build() ran per point: tuned outer HPs follow the K axis
+        assert!(pts[2].cfg.outer_momentum > pts[0].cfg.outer_momentum);
+        // an invalid point poisons the whole grid loudly
+        let bad = Sweep::new(RunSpec::new("nano", Method::Muloco))
+            .axis("workers", &[5usize]);
+        assert!(bad.points().is_err());
+    }
+
+    #[test]
+    fn method_is_sweepable_like_any_knob() {
+        let sweep = Sweep::new(RunSpec::new("nano", Method::Diloco))
+            .axis("method", &["diloco", "muloco"]);
+        let pts = sweep.points().unwrap();
+        assert_eq!(pts[0].cfg.method, Method::Diloco);
+        assert_eq!(pts[1].cfg.method, Method::Muloco);
+        // per-method LR defaulting fired inside build()
+        assert!(pts[1].cfg.lr > pts[0].cfg.lr);
+    }
+}

@@ -1,36 +1,39 @@
 //! `muloco` — CLI launcher for the MuLoCo reproduction.
 //!
 //! Subcommands:
-//!   train       run one training job (method/model/K/H/compression...)
-//!   experiment  regenerate a paper table/figure (or `all`)
+//!   train       run one training job (method/model/K/H/compression...);
+//!               every flag comes from the knob registry
+//!               (`coordinator::spec`), and `--spec run.json` replays a
+//!               saved spec file bit-for-bit
+//!   experiment  regenerate a paper table/figure (or `all`), optionally
+//!               as structured JSON (`--format json`)
 //!   bench       time the runtime kernels + a short train; emit
-//!               BENCH_native.json (the perf trajectory record)
+//!               BENCH_native.json (the perf trajectory record) and
+//!               optionally gate against a prior record (`--compare`)
 //!   info        print a config's manifest summary
 //!   list        list available experiments
 //!
 //! Examples:
 //!   muloco train --model nano --method muloco --workers 8 --steps 240
-//!   muloco experiment fig1a --preset fast
-//!   muloco bench --model nano
+//!   muloco train --spec run.json --seed 18
+//!   muloco experiment fig1a --preset fast --jobs 4 --format json
+//!   muloco bench --model nano --compare BENCH_prev.json
 
 use std::collections::BTreeMap;
+use std::fs;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use muloco::comm::TopologySpec;
-use muloco::compress::Compression;
-use muloco::coordinator::{train, Method, TrainConfig};
-use muloco::experiments;
+use muloco::coordinator::{spec, train, Method, RunSpec};
+use muloco::experiments::{self, Format};
 use muloco::metrics::RunLogger;
 use muloco::runtime::native::gemm::time_blocked_vs_naive;
 use muloco::runtime::Session;
 use muloco::util::cli::Args;
 use muloco::util::json::Json;
 use muloco::util::median_secs;
-
-const BOOL_FLAGS: &[&str] = &["ef", "quiet", "sequential"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -40,8 +43,23 @@ fn main() {
     }
 }
 
+/// Boolean CLI flags: the registry's flag-shaped knobs (each with a
+/// `--no-` negation, so a spec file's `true` can be overridden back)
+/// plus the launcher-only switches.
+fn bool_flags() -> Vec<String> {
+    let mut flags = Vec::new();
+    for k in spec::knobs().iter().filter(|k| k.flag) {
+        flags.push(k.name.to_string());
+        flags.push(format!("no-{}", k.name));
+    }
+    flags.push("quiet".to_string());
+    flags
+}
+
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, BOOL_FLAGS)?;
+    let bools = bool_flags();
+    let bool_refs: Vec<&str> = bools.iter().map(|s| s.as_str()).collect();
+    let args = Args::parse(argv, &bool_refs)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -55,7 +73,7 @@ fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         _ => {
-            println!("{}", HELP);
+            println!("{}", help_text());
             Ok(())
         }
     }
@@ -65,52 +83,63 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
+/// Assemble the run spec: start from a spec file (`--spec`) or the
+/// registry defaults, then apply every knob flag present on the command
+/// line — one loop over the schema instead of a hand-written flag per
+/// field.
+fn spec_from_args(args: &Args) -> Result<RunSpec> {
+    let mut run_spec = match args.get("spec") {
+        Some(path) => RunSpec::from_json(&fs::read_to_string(path)?)?,
+        None => RunSpec::new(
+            &args.get_or("model", "nano"),
+            Method::parse(&args.get_or("method", "muloco"))?,
+        ),
+    };
+    for knob in spec::knobs() {
+        if knob.flag {
+            // `--<name>` sets, `--no-<name>` clears (overriding a spec
+            // file's true); last mention on the line is irrelevant —
+            // the negation wins if both are present
+            if args.flag(knob.name) {
+                run_spec = run_spec.set(knob.name, "true")?;
+            }
+            if args.flag(&format!("no-{}", knob.name)) {
+                run_spec = run_spec.set(knob.name, "false")?;
+            }
+        } else if let Some(v) = args.get(knob.name) {
+            run_spec = run_spec.set(knob.name, v)?;
+        }
+    }
+    Ok(run_spec)
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "nano");
-    let method = Method::parse(&args.get_or("method", "muloco"))?;
-    let mut cfg = TrainConfig::new(&model, method);
-    cfg.global_batch = args.get_parse("batch", cfg.global_batch)?;
-    let workers = args.get_parse("workers", cfg.workers)?;
-    cfg = cfg.tuned_outer(workers)?;
-    cfg.sync_interval = args.get_parse("sync-interval", cfg.sync_interval)?;
-    cfg.total_steps = args.get_parse("steps", cfg.total_steps)?;
-    cfg.lr = args.get_parse("lr", cfg.lr)?;
-    cfg.weight_decay = args.get_parse("wd", cfg.weight_decay)?;
-    cfg.warmup_steps = args.get_parse("warmup", cfg.warmup_steps)?;
-    cfg.outer_lr = args.get_parse("outer-lr", cfg.outer_lr)?;
-    cfg.outer_momentum = args.get_parse("outer-momentum", cfg.outer_momentum)?;
-    cfg.streaming_partitions =
-        args.get_parse("streaming", cfg.streaming_partitions)?;
-    cfg.ns_iters = args.get_parse("ns-iters", cfg.ns_iters)?;
-    if let Some(spec) = args.get("topology") {
-        cfg.topology = TopologySpec::parse(spec)?;
-    }
-    cfg.overlap_tau = args.get_parse("tau", cfg.overlap_tau)?;
-    cfg.eval_every = args.get_parse("eval-every", cfg.eval_every)?;
-    cfg.eval_batches = args.get_parse("eval-batches", cfg.eval_batches)?;
-    cfg.seed = args.get_parse("seed", cfg.seed)?;
-    if let Some(spec) = args.get("compression") {
-        cfg.compression = Compression::parse(spec)?;
-    }
-    cfg.error_feedback = args.flag("ef");
-    cfg.parallel = !args.flag("sequential");
+    let cfg = spec_from_args(args)?.build()?;
     let quiet = args.flag("quiet");
     let group = args.get_or("log-group", "train");
     let label = args.get_or(
         "label",
-        &format!("{}-{}-K{}", model, method.name(), cfg.workers),
+        &format!("{}-{}-K{}", cfg.model, cfg.method.name(), cfg.workers),
     );
+    let dump_spec = args.get("dump-spec").map(|s| s.to_string());
+    let artifacts = artifacts_dir(args);
     args.finish()?;
 
-    let sess = Session::load(&artifacts_dir(args).join(&model))?;
+    if let Some(path) = dump_spec {
+        fs::write(&path, spec::spec_json(&cfg).to_string())?;
+        if !quiet {
+            println!("wrote spec to {path} (key: {})", spec::cache_key(&cfg));
+        }
+    }
+    let sess = Session::load(&artifacts.join(&cfg.model))?;
     if !quiet {
         println!(
             "{} on {} via {} ({} params): K={} H={} B={} steps={} lr={} \
-             compression={:?}",
-            method.name(), model, sess.platform(),
+             compression={}",
+            cfg.method.name(), cfg.model, sess.platform(),
             sess.manifest.config.param_count,
             cfg.workers, cfg.sync_interval, cfg.global_batch,
-            cfg.total_steps, cfg.lr, cfg.compression
+            cfg.total_steps, cfg.lr, cfg.compression.label()
         );
     }
     let result = train(&sess, &cfg)?;
@@ -137,9 +166,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .unwrap_or_else(|| "all".to_string());
     let preset = args.get_or("preset", "fast");
     let jobs: usize = args.get_parse("jobs", 1)?;
+    let format = Format::parse(&args.get_or("format", "text"))?;
     let artifacts = artifacts_dir(args);
     args.finish()?;
-    experiments::run(&id, &preset, &artifacts, jobs)
+    experiments::run(&id, &preset, &artifacts, jobs, format)
 }
 
 fn num(x: f64) -> Json {
@@ -149,12 +179,27 @@ fn num(x: f64) -> Json {
 /// `muloco bench`: per-kernel timings + tokens/sec of a short train,
 /// written to BENCH_native.json — the measured perf trajectory the
 /// ROADMAP's "as fast as the hardware allows" goal is tracked against.
+///
+/// `--compare OLD.json` diffs against a prior record and exits nonzero
+/// when tokens/sec regressed by more than `--tolerance` (default 0.2) —
+/// the CI perf gate.  `--from CUR.json` skips the measurement and diffs
+/// two existing records (what CI does after the artifact upload).
 fn cmd_bench(args: &Args) -> Result<()> {
     let model = args.get_or("model", "nano");
     let out = args.get_or("out", "BENCH_native.json");
     let steps: u64 = args.get_parse("steps", 20)?;
+    let compare = args.get("compare").map(|s| s.to_string());
+    let from = args.get("from").map(|s| s.to_string());
+    let tolerance: f64 = args.get_parse("tolerance", 0.2)?;
     let artifacts = artifacts_dir(args);
     args.finish()?;
+
+    if let Some(from_path) = from {
+        let current = Json::parse(&fs::read_to_string(&from_path)?)?;
+        let old_path = compare
+            .ok_or_else(|| anyhow::anyhow!("--from needs --compare OLD.json"))?;
+        return bench_compare(&current, &old_path, tolerance);
+    }
 
     let sess = Session::load(&artifacts.join(&model))?;
     let platform = sess.platform();
@@ -218,13 +263,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 
     // --- end-to-end tokens/sec -----------------------------------------
-    let mut cfg = TrainConfig::new(&model, Method::Muloco);
-    cfg.global_batch = 32;
-    cfg = cfg.tuned_outer(4)?;
-    cfg.total_steps = steps;
-    cfg.sync_interval = 5;
-    cfg.eval_every = steps;
-    cfg.eval_batches = 1;
+    let cfg = RunSpec::new(&model, Method::Muloco)
+        .batch(32)
+        .workers(4)
+        .steps(steps)
+        .sync_interval(5)
+        .eval_every(steps)
+        .eval_batches(1)
+        .build()?;
     let t0 = Instant::now();
     let r = train(&sess, &cfg)?;
     let wall = t0.elapsed().as_secs_f64();
@@ -244,8 +290,48 @@ fn cmd_bench(args: &Args) -> Result<()> {
     top.insert("train_wall_secs".to_string(), num(wall));
     top.insert("kernels".to_string(), Json::Obj(kernels));
     top.insert("gemm".to_string(), Json::Arr(gemm_rows));
-    std::fs::write(&out, Json::Obj(top).to_string())?;
+    let doc = Json::Obj(top);
+    fs::write(&out, doc.to_string())?;
     println!("  wrote {out}");
+    if let Some(old_path) = compare {
+        bench_compare(&doc, &old_path, tolerance)?;
+    }
+    Ok(())
+}
+
+/// Diff a bench record against a prior one; error (nonzero exit) on a
+/// tokens/sec regression beyond `tolerance`.
+fn bench_compare(current: &Json, old_path: &str, tolerance: f64) -> Result<()> {
+    let old = Json::parse(&fs::read_to_string(old_path)?)?;
+    let new_tps = current.get("tokens_per_sec")?.as_f64()?;
+    let old_tps = old.get("tokens_per_sec")?.as_f64()?;
+    let ratio = new_tps / old_tps;
+    println!(
+        "compare vs {old_path}: tokens/sec {old_tps:.0} -> {new_tps:.0} \
+         ({:+.1}%)",
+        100.0 * (ratio - 1.0)
+    );
+    if let (Ok(new_k), Ok(old_k)) = (current.get("kernels"), old.get("kernels")) {
+        if let Json::Obj(m) = new_k {
+            for (name, v) in m {
+                if let (Ok(new_us), Ok(old_us)) =
+                    (v.as_f64(), old_k.get(name).and_then(|x| x.as_f64()))
+                {
+                    println!(
+                        "  {name}: {old_us:.1}us -> {new_us:.1}us ({:+.1}%)",
+                        100.0 * (new_us / old_us - 1.0)
+                    );
+                }
+            }
+        }
+    }
+    if !ratio.is_finite() || ratio < 1.0 - tolerance {
+        bail!(
+            "tokens/sec regressed beyond the {:.0}% gate: {old_tps:.0} -> \
+             {new_tps:.0}",
+            100.0 * tolerance
+        );
+    }
     Ok(())
 }
 
@@ -264,21 +350,28 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const HELP: &str = "\
+/// Top-level help; the `train` flag list renders from the knob
+/// registry, so it can never drift from what the parser accepts.
+fn help_text() -> String {
+    format!(
+        "\
 muloco — MuLoCo/DiLoCo distributed-training reproduction
 
 USAGE:
-  muloco train [--model M] [--method muloco|diloco|dp-muon|dp-adamw]
-               [--workers K] [--sync-interval H] [--steps N] [--batch B]
-               [--lr F] [--wd F] [--outer-lr F] [--outer-momentum F]
-               [--compression none|q<bits>-<linear|stat>[-rw]|topk<frac>]
-               [--ef] [--streaming J] [--seed S] [--label L]
-               [--ns-iters N]   # Muon Newton-Schulz depth (0 = momentum SGD)
-               [--topology flat|ring|hier:<G>]  # collective topology
-               [--tau T]        # overlapped sync: apply reduce T steps late
-               [--sequential]   # disable the parallel worker pool
+  muloco train [--spec run.json] [knob flags below]
+               [--label L] [--log-group G] [--quiet]
+               [--dump-spec out.json]   # save the resolved spec file
   muloco experiment <id|all> [--preset fast|full] [--jobs N]
+               [--format text|json]
   muloco bench [--model M] [--steps N] [--out BENCH_native.json]
+               [--compare OLD.json] [--tolerance 0.2]
+               [--from CUR.json]        # diff two records, no re-measure
   muloco info --model M
   muloco list
-";
+
+TRAIN KNOBS (schema-driven; also the spec-file fields — boolean knobs
+take no value and accept a --no-<name> negation to override a spec):
+{}",
+        spec::flag_help()
+    )
+}

@@ -9,22 +9,22 @@
 
 use muloco::compress::Compression;
 use muloco::coordinator::{branch_capture, dp_warmstart, evaluate, train,
-                          Method, TrainConfig};
+                          Method, RunSpec, TrainConfig};
 use muloco::data::Corpus;
 use muloco::runtime::Session;
 
 fn short_cfg(method: Method, k: usize) -> TrainConfig {
-    let mut cfg = TrainConfig::new("nano", method);
-    cfg.global_batch = 16;
+    let mut spec = RunSpec::new("nano", method)
+        .batch(16)
+        .steps(20)
+        .sync_interval(5)
+        .eval_every(5)
+        .eval_batches(2)
+        .warmup(2);
     if method.is_local_update() {
-        cfg = cfg.tuned_outer(k).expect("batch shards across workers");
+        spec = spec.workers(k);
     }
-    cfg.total_steps = 20;
-    cfg.sync_interval = 5;
-    cfg.eval_every = 5;
-    cfg.eval_batches = 2;
-    cfg.warmup_steps = 2;
-    cfg
+    spec.build().expect("short config is valid")
 }
 
 #[test]

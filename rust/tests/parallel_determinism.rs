@@ -13,7 +13,7 @@
 use muloco::compress::{Compression, ErrorFeedback, QuantMode};
 use muloco::collectives::CommStats;
 use muloco::coordinator::{train, Method, NesterovOuter, SyncEngine, SyncPlan,
-                          SyncTensorMeta, TrainConfig, Worker};
+                          SyncTensorMeta, Worker};
 use muloco::data::Corpus;
 use muloco::util::rng::Rng;
 
@@ -175,14 +175,16 @@ fn sync_engine_streaming_only_touches_due_partitions() {
 fn train_parallel_matches_sequential_reference() {
     let dir = std::path::PathBuf::from("artifacts/nano");
     let sess = muloco::runtime::Session::load(&dir).expect("session");
-    let mut cfg = TrainConfig::new("nano", Method::Muloco);
-    cfg.global_batch = 32;
-    cfg = cfg.tuned_outer(8).unwrap();
-    cfg.total_steps = 10;
-    cfg.sync_interval = 5;
-    cfg.eval_every = 5;
-    cfg.eval_batches = 2;
-    cfg.warmup_steps = 2;
+    let mut cfg = muloco::coordinator::RunSpec::new("nano", Method::Muloco)
+        .batch(32)
+        .workers(8)
+        .steps(10)
+        .sync_interval(5)
+        .eval_every(5)
+        .eval_batches(2)
+        .warmup(2)
+        .build()
+        .unwrap();
 
     cfg.parallel = false;
     let seq = train(&sess, &cfg).expect("sequential run");

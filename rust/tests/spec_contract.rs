@@ -1,0 +1,183 @@
+//! The run-spec schema contract (coordinator::spec):
+//!
+//! * perturb-every-knob: every registry knob that claims cache-key
+//!   membership actually moves the key — the property that makes
+//!   "new field silently aliases cache entries" unrepresentable;
+//! * spec-file round-trip: `--spec` reproduces a flag-specified run
+//!   bit-for-bit (same cache key, same final loss);
+//! * builder defaulting/validation (the old tuned_outer/validate split,
+//!   now a single `build()`);
+//! * `ortho_interval = 1` is bit-identical to classic Muon.
+
+use std::collections::BTreeSet;
+
+use muloco::coordinator::spec::{cache_key, knobs, spec_json};
+use muloco::coordinator::{train, Method, MuonInner, RunSpec, InnerOptimizer};
+use muloco::experiments::cache_key_for_tests;
+use muloco::runtime::{Session, NS_STEPS};
+
+/// Every in-key knob perturbs the canonical key, for every method's
+/// default baseline, and no two perturbations collide.
+#[test]
+fn every_knob_perturbs_the_cache_key() {
+    for method in [Method::Muloco, Method::Diloco, Method::DpMuon,
+                   Method::DpAdamw] {
+        let base = RunSpec::new("nano", method).peek().clone();
+        let base_key = cache_key(&base);
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        seen.insert(base_key.clone());
+        for k in knobs() {
+            let mut cfg = base.clone();
+            (k.set)(&mut cfg, k.example)
+                .unwrap_or_else(|e| panic!("knob {}: {e}", k.name));
+            // a method's own name is that base's default; every other
+            // example is required to differ from every method's default
+            let changed = (k.get)(&cfg) != (k.get)(&base);
+            assert!(changed || k.name == "method",
+                    "{method:?}: knob {} example equals its default", k.name);
+            let key = cache_key(&cfg);
+            if k.in_key && changed {
+                assert_ne!(key, base_key,
+                           "{method:?}: knob {} does not move the key", k.name);
+                assert!(seen.insert(key),
+                        "{method:?}: knob {} collides with another knob's key",
+                        k.name);
+            } else if !k.in_key {
+                assert_eq!(key, base_key,
+                           "{method:?}: execution knob {} leaked into the key",
+                           k.name);
+            }
+        }
+    }
+}
+
+/// The experiments cache uses the registry key verbatim — no second
+/// hand-maintained list behind `cache::config_key`.
+#[test]
+fn cache_config_key_is_the_registry_key() {
+    let cfg = RunSpec::new("nano", Method::Muloco)
+        .workers(4)
+        .ns_iters(3)
+        .ortho_interval(2)
+        .build()
+        .unwrap();
+    assert_eq!(cache_key_for_tests(&cfg), cache_key(&cfg));
+    // and the key mentions the new knobs (regression for the PR-3-era
+    // "remember the |ns suffix by hand" failure mode)
+    assert!(cache_key(&cfg).contains("ns3"));
+    assert!(cache_key(&cfg).contains("r2"));
+}
+
+/// Flags -> build -> spec file -> build reproduces the exact config:
+/// same cache key and, end-to-end on the native backend, the same
+/// training trajectory bit-for-bit.
+#[test]
+fn spec_file_reproduces_a_flag_run_bit_for_bit() {
+    let flag_cfg = RunSpec::new("nano", Method::Muloco)
+        .batch(16)
+        .workers(2)
+        .steps(10)
+        .sync_interval(5)
+        .eval_every(5)
+        .eval_batches(2)
+        .warmup(2)
+        .ns_iters(3)
+        .build()
+        .unwrap();
+    let text = spec_json(&flag_cfg).to_string();
+    let spec_cfg = RunSpec::from_json(&text).unwrap().build().unwrap();
+    assert_eq!(cache_key(&spec_cfg), cache_key(&flag_cfg));
+
+    let sess = Session::load(std::path::Path::new("artifacts/nano"))
+        .expect("session");
+    let a = train(&sess, &flag_cfg).expect("flag run");
+    let b = train(&sess, &spec_cfg).expect("spec run");
+    assert_eq!(a.eval_curve, b.eval_curve, "spec replay diverged");
+    assert_eq!(a.train_curve, b.train_curve);
+    assert_eq!(a.comm, b.comm);
+}
+
+/// A spec file pins every knob, so flag overrides on top of it change
+/// exactly the overridden knob.
+#[test]
+fn spec_overrides_change_only_the_overridden_knob() {
+    let cfg = RunSpec::new("nano", Method::Muloco).workers(4).build().unwrap();
+    let text = spec_json(&cfg).to_string();
+    let bumped = RunSpec::from_json(&text)
+        .unwrap()
+        .set("seed", "99")
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(bumped.seed, 99);
+    assert_eq!(bumped.workers, cfg.workers);
+    assert_eq!(bumped.outer_lr, cfg.outer_lr,
+               "tuned outer defaulting must not re-fire on a pinned spec");
+}
+
+/// `ortho_interval = 1` dispatches exactly like classic Muon: the same
+/// (params, state, grads) produce bit-identical outputs against the
+/// pre-knob `apply_muon` entry point, at several step indices.
+#[test]
+fn ortho_interval_one_is_bit_identical_to_classic_muon() {
+    let sess = Session::load(std::path::Path::new("artifacts/nano"))
+        .expect("session");
+    let params = sess.init_params(3).unwrap();
+    let cfg = &sess.manifest.config;
+    let tokens: Vec<i32> = (0..cfg.microbatch * cfg.seq_len)
+        .map(|i| (i * 13 % cfg.vocab) as i32)
+        .collect();
+    let (_, grads) = sess.fwd_grad(&params, &tokens).unwrap();
+    let state = sess.zero_muon_state();
+    let inner = MuonInner { ns_iters: NS_STEPS, ortho_interval: 1 };
+    for t in [1.0f32, 2.0, 7.0] {
+        let (p_new, s_new) = inner
+            .step(&sess, &params, &state, &grads, t, 0.05, 0.0)
+            .unwrap();
+        let (p_ref, s_ref) = sess
+            .apply_muon(&params, &state, &grads, t, 0.05, 0.0)
+            .unwrap();
+        assert_eq!(p_new, p_ref, "params diverged at t={t}");
+        assert_eq!(s_new, s_ref, "state diverged at t={t}");
+    }
+    // r = 2, t = 2 is an off-step: identical to the ns = 0 dispatch
+    let bp = MuonInner { ns_iters: NS_STEPS, ortho_interval: 2 };
+    let (p_off, _) = bp.step(&sess, &params, &state, &grads, 2.0, 0.05, 0.0)
+        .unwrap();
+    let (p_sgd, _) = sess
+        .apply_muon_ns(&params, &state, &grads, 2.0, 0.05, 0.0, 0)
+        .unwrap();
+    assert_eq!(p_off, p_sgd);
+}
+
+/// End-to-end: `ns_iters = 0` makes the ortho schedule irrelevant
+/// (both dispatch to normalized momentum SGD on every step), while at
+/// full depth `ortho_interval` changes the trajectory.
+#[test]
+fn ortho_interval_end_to_end_contract() {
+    let sess = Session::load(std::path::Path::new("artifacts/nano"))
+        .expect("session");
+    let run = |ns: usize, r: usize| {
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .batch(16)
+            .workers(2)
+            .steps(8)
+            .sync_interval(4)
+            .eval_every(4)
+            .eval_batches(1)
+            .warmup(2)
+            .ns_iters(ns)
+            .ortho_interval(r)
+            .build()
+            .unwrap();
+        train(&sess, &cfg).expect("train")
+    };
+    let sgd_r1 = run(0, 1);
+    let sgd_r4 = run(0, 4);
+    assert_eq!(sgd_r1.eval_curve, sgd_r4.eval_curve,
+               "ns=0 must be schedule-independent");
+    let full = run(NS_STEPS, 1);
+    let periodic = run(NS_STEPS, 3);
+    assert_ne!(full.train_curve, periodic.train_curve,
+               "ortho_interval > 1 must change the trajectory");
+}
