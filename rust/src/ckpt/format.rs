@@ -1,0 +1,369 @@
+//! On-disk checkpoint container: one JSON manifest + one CRC-checked
+//! binary page file, written atomically.
+//!
+//! Layout of a checkpoint directory `<ckpt-dir>/step-<NNNNNNNN>/`:
+//!
+//! * `state.bin`  — concatenated pages: raw little-endian f32 words for
+//!   tensors, raw bytes for opaque blobs.  No framing — the manifest
+//!   carries every page's (id, byte offset, byte length, CRC-32).
+//! * `manifest.json` — written with `util::json`: format version, the
+//!   run's canonical knob key + full spec, all small scalar state
+//!   (curves, comm/fault counters, stream cursors) and the page table.
+//!
+//! Write protocol: serialize into a `.tmp-step-<N>-<pid>` sibling
+//! (pages first, manifest last), fsync both files, then `rename` the
+//! directory into place — a reader can never observe a half-written
+//! checkpoint, and a crash mid-write leaves only a `.tmp-*` directory
+//! that the next writer clears.
+//!
+//! Read protocol: every page access re-checks bounds against the
+//! actual `state.bin` length (truncation) and the stored CRC
+//! (corruption) before any bytes are interpreted — a damaged
+//! checkpoint fails with an actionable error naming the page, never
+//! with garbage state.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::crc32;
+use crate::util::json::Json;
+
+/// Checkpoint format version.  Bump on any layout change: a reader
+/// refuses other versions up front instead of misinterpreting pages.
+pub const VERSION: u64 = 1;
+
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Binary page file name inside a checkpoint directory.
+pub const PAGES_FILE: &str = "state.bin";
+
+/// One entry of the page table.
+#[derive(Clone, Debug)]
+pub struct Page {
+    pub id: String,
+    pub offset: usize,
+    pub bytes: usize,
+    pub crc: u32,
+}
+
+/// Accumulates pages into one buffer + page table.
+#[derive(Default)]
+pub struct PageWriter {
+    buf: Vec<u8>,
+    pages: Vec<Page>,
+}
+
+impl PageWriter {
+    pub fn new() -> PageWriter {
+        PageWriter::default()
+    }
+
+    /// Append a raw-byte page.
+    pub fn put_bytes(&mut self, id: impl Into<String>, data: &[u8]) {
+        let offset = self.buf.len();
+        self.buf.extend_from_slice(data);
+        self.pages.push(Page {
+            id: id.into(),
+            offset,
+            bytes: data.len(),
+            crc: crc32(data),
+        });
+    }
+
+    /// Append an f32 tensor page (little-endian words).
+    pub fn put_f32(&mut self, id: impl Into<String>, data: &[f32]) {
+        let offset = self.buf.len();
+        self.buf.reserve(4 * data.len());
+        for x in data {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let slice = &self.buf[offset..];
+        self.pages.push(Page {
+            id: id.into(),
+            offset,
+            bytes: 4 * data.len(),
+            crc: crc32(slice),
+        });
+    }
+
+    /// The page table as JSON plus the binary buffer.
+    pub fn finish(self) -> (Json, Vec<u8>) {
+        let pages = self
+            .pages
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("id".to_string(), Json::Str(p.id.clone()));
+                m.insert("offset".to_string(), Json::Num(p.offset as f64));
+                m.insert("bytes".to_string(), Json::Num(p.bytes as f64));
+                m.insert("crc".to_string(), Json::Num(p.crc as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        (Json::Arr(pages), self.buf)
+    }
+}
+
+/// Validating reader over a page table + `state.bin` contents.
+pub struct PageReader {
+    buf: Vec<u8>,
+    pages: BTreeMap<String, Page>,
+}
+
+impl PageReader {
+    /// Parse the manifest's page table and load `state.bin` from `dir`.
+    pub fn open(dir: &Path, manifest: &Json) -> Result<PageReader> {
+        let mut pages = BTreeMap::new();
+        for p in manifest.get("pages")?.as_arr()? {
+            let page = Page {
+                id: p.get("id")?.as_str()?.to_string(),
+                offset: p.get("offset")?.as_usize()?,
+                bytes: p.get("bytes")?.as_usize()?,
+                crc: p.get("crc")?.as_f64()? as u32,
+            };
+            pages.insert(page.id.clone(), page);
+        }
+        let path = dir.join(PAGES_FILE);
+        let buf = fs::read(&path)
+            .with_context(|| format!("reading checkpoint pages {}", path.display()))?;
+        Ok(PageReader { buf, pages })
+    }
+
+    pub fn has(&self, id: &str) -> bool {
+        self.pages.contains_key(id)
+    }
+
+    /// A page's verified bytes: bounds-checked against the file that is
+    /// actually on disk, then CRC-checked against the manifest.
+    pub fn bytes(&self, id: &str) -> Result<&[u8]> {
+        let p = self
+            .pages
+            .get(id)
+            .with_context(|| format!("checkpoint has no page {id:?}"))?;
+        let end = p.offset.checked_add(p.bytes).with_context(|| {
+            format!("checkpoint page {id:?} has an overflowing extent")
+        })?;
+        if end > self.buf.len() {
+            bail!(
+                "checkpoint truncated: page {id:?} spans bytes {}..{end} but \
+                 {PAGES_FILE} holds only {} bytes — the file was cut short \
+                 (partial copy / disk full); restore from an older checkpoint",
+                p.offset,
+                self.buf.len()
+            );
+        }
+        let slice = &self.buf[p.offset..end];
+        let got = crc32(slice);
+        if got != p.crc {
+            bail!(
+                "checkpoint corrupt: CRC mismatch on page {id:?} (manifest \
+                 {:#010x}, computed {got:#010x}) — {PAGES_FILE} was modified \
+                 or damaged after writing; restore from an older checkpoint",
+                p.crc
+            );
+        }
+        Ok(slice)
+    }
+
+    /// A page decoded as little-endian f32 words.
+    pub fn f32s(&self, id: &str) -> Result<Vec<f32>> {
+        let bytes = self.bytes(id)?;
+        if bytes.len() % 4 != 0 {
+            bail!(
+                "checkpoint page {id:?} holds {} bytes, not a whole number \
+                 of f32 words",
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+fn sync_file(path: &Path) -> Result<()> {
+    fs::File::open(path)?
+        .sync_all()
+        .with_context(|| format!("fsync {}", path.display()))
+}
+
+/// Directory name for a checkpoint at `step` (zero-padded so
+/// lexicographic order is step order).
+pub fn step_dir_name(step: u64) -> String {
+    format!("step-{step:08}")
+}
+
+/// Atomically publish one checkpoint: write pages + manifest into a
+/// temp sibling, fsync, then rename into `<dir>/step-<N>`.  An existing
+/// checkpoint at the same step is replaced (last-write-wins).
+pub fn write_atomic(dir: &Path, step: u64, manifest: &Json, bin: &[u8]) -> Result<PathBuf> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    // clear abandoned temp directories (a crashed writer's leftovers);
+    // one coordinator owns a checkpoint dir, so there is no live
+    // concurrent writer to race with
+    for entry in fs::read_dir(dir)?.flatten() {
+        if entry
+            .file_name()
+            .to_str()
+            .map(|n| n.starts_with(".tmp-"))
+            .unwrap_or(false)
+        {
+            let _ = fs::remove_dir_all(entry.path());
+        }
+    }
+    let final_dir = dir.join(step_dir_name(step));
+    let tmp = dir.join(format!(".tmp-step-{step:08}-{}", std::process::id()));
+    fs::create_dir_all(&tmp)?;
+    // pages first, manifest last: a manifest's presence implies its
+    // pages were fully written even before the directory rename lands
+    let pages_path = tmp.join(PAGES_FILE);
+    let mut f = fs::File::create(&pages_path)?;
+    f.write_all(bin)?;
+    f.sync_all()?;
+    let man_path = tmp.join(MANIFEST_FILE);
+    fs::write(&man_path, manifest.to_string())?;
+    sync_file(&man_path)?;
+    if final_dir.exists() {
+        fs::remove_dir_all(&final_dir)?;
+    }
+    fs::rename(&tmp, &final_dir)
+        .with_context(|| format!("publishing checkpoint {}", final_dir.display()))?;
+    // fsync the containing directory so the rename itself (directory
+    // metadata) survives a crash, not just the file contents.  Unix
+    // permits opening a directory read-only for exactly this purpose;
+    // best-effort elsewhere.
+    #[cfg(unix)]
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(final_dir)
+}
+
+/// Newest complete checkpoint under `dir` (highest step with a
+/// manifest; in-progress `.tmp-*` directories are ignored).
+pub fn latest(dir: &Path) -> Result<PathBuf> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("reading checkpoint dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(step) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("step-"))
+            .and_then(|n| n.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if !entry.path().join(MANIFEST_FILE).exists() {
+            continue;
+        }
+        if best.as_ref().map(|(s, _)| step > *s).unwrap_or(true) {
+            best = Some((step, entry.path()));
+        }
+    }
+    best.map(|(_, p)| p).with_context(|| {
+        format!(
+            "no checkpoint found under {} (expected step-<N>/{MANIFEST_FILE})",
+            dir.display()
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = PathBuf::from("target").join(format!(
+            "ckpt-format-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn manifest_with(pages: Json) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("pages".to_string(), pages);
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn pages_round_trip_bit_for_bit() {
+        let dir = tmp_dir("roundtrip");
+        let mut w = PageWriter::new();
+        let a = vec![1.0f32, -2.5, 3.25e-8, f32::MIN_POSITIVE, -0.0];
+        w.put_f32("a", &a);
+        w.put_bytes("blob", b"opaque");
+        let (pages, bin) = w.finish();
+        let man = manifest_with(pages);
+        write_atomic(&dir, 7, &man, &bin).unwrap();
+        let step = latest(&dir).unwrap();
+        assert!(step.ends_with("step-00000007"));
+        let text = fs::read_to_string(step.join(MANIFEST_FILE)).unwrap();
+        let r = PageReader::open(&step, &Json::parse(&text).unwrap()).unwrap();
+        let back = r.f32s("a").unwrap();
+        assert_eq!(a.len(), back.len());
+        for (x, y) in a.iter().zip(&back) {
+            assert_eq!(x.to_bits(), y.to_bits(), "f32 bits changed");
+        }
+        assert_eq!(r.bytes("blob").unwrap(), b"opaque");
+        assert!(!r.has("missing"));
+        assert!(r.bytes("missing").is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_and_corruption_fail_loudly() {
+        let dir = tmp_dir("corrupt");
+        let mut w = PageWriter::new();
+        w.put_f32("t", &[1.0f32; 64]);
+        let (pages, bin) = w.finish();
+        let man = manifest_with(pages);
+        let step = write_atomic(&dir, 1, &man, &bin).unwrap();
+        let text = fs::read_to_string(step.join(MANIFEST_FILE)).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+
+        // truncated page file
+        let full = fs::read(step.join(PAGES_FILE)).unwrap();
+        fs::write(step.join(PAGES_FILE), &full[..full.len() - 5]).unwrap();
+        let r = PageReader::open(&step, &parsed).unwrap();
+        let err = r.f32s("t").unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // single-byte corruption
+        let mut flipped = full.clone();
+        flipped[10] ^= 0x40;
+        fs::write(step.join(PAGES_FILE), &flipped).unwrap();
+        let r = PageReader::open(&step, &parsed).unwrap();
+        let err = r.f32s("t").unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn latest_picks_highest_step_and_ignores_tmp() {
+        let dir = tmp_dir("latest");
+        let (pages, bin) = PageWriter::new().finish();
+        let man = manifest_with(pages);
+        write_atomic(&dir, 3, &man, &bin).unwrap();
+        write_atomic(&dir, 12, &man, &bin).unwrap();
+        fs::create_dir_all(dir.join(".tmp-step-00000099-1")).unwrap();
+        fs::create_dir_all(dir.join("step-00000050")).unwrap(); // no manifest
+        assert!(latest(&dir).unwrap().ends_with("step-00000012"));
+        // the next writer clears a crashed writer's leftover tmp dir
+        write_atomic(&dir, 13, &man, &bin).unwrap();
+        assert!(!dir.join(".tmp-step-00000099-1").exists());
+        assert!(latest(&dir).unwrap().ends_with("step-00000013"));
+        fs::remove_dir_all(&dir).unwrap();
+        assert!(latest(&dir).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Fault-tolerance subsystem: durable, versioned checkpoints of the
+//! complete training state with a bit-for-bit resume contract.
+//!
+//! Two layers:
+//!
+//! * [`format`] — the on-disk container: a JSON manifest (format
+//!   version, knob key, scalar state, page table) plus one binary page
+//!   file of raw little-endian f32 words, every page CRC-32-checked,
+//!   published with an atomic write-to-temp + rename protocol.
+//! * [`state`] — the semantic snapshot ([`TrainState`]): global
+//!   replica, per-worker replicas + inner-optimizer state +
+//!   error-feedback residuals + data cursors, outer momentum, in-flight
+//!   overlapped boundaries, comm/fault ledgers and loss curves.
+//!
+//! The contract (enforced by `tests/ckpt_resume.rs`): a run resumed
+//! from the checkpoint at step `s` produces the *identical* curves,
+//! comm accounting and final parameters as the same run left
+//! uninterrupted — across sequential and parallel execution, and with
+//! overlapped sync boundaries (`tau > 0`) in flight at the save point.
+//! Resume refuses mismatched math knobs (the canonical
+//! `spec::cache_key`), format versions, and backend platforms, and any
+//! damaged page (truncation, bit flips) fails loudly before a single
+//! value is deserialized.
+//!
+//! The elastic half of the subsystem — seeded worker dropout and
+//! straggler schedules — lives in `coordinator::fault`, close to the
+//! worker pool and sync engine it steers; this module only persists its
+//! accounting ([`coordinator::fault::FaultStats`]).
+
+pub mod format;
+pub mod state;
+
+pub use format::{latest, step_dir_name, PageReader, PageWriter, VERSION};
+pub use state::{load_dir, load_latest, save, CkptMeta, PendingSnap, TrainState,
+                WorkerSnap};

@@ -1,0 +1,443 @@
+//! The complete training-state snapshot and its on-disk mapping.
+//!
+//! [`TrainState`] is everything `coordinator::train` needs to continue
+//! a run bit-for-bit from a sync boundary: the global replica, every
+//! worker's replica + inner-optimizer state + error-feedback residuals
+//! + data-stream cursor, the outer Nesterov momentum, any overlapped
+//! sync boundaries still in flight (tau > 0), the run-level comm and
+//! fault ledgers, the loss curves so far, and an opaque backend blob.
+//!
+//! Mapping onto the [`format`](super::format) container: every tensor
+//! becomes one CRC-checked f32 page (ids below), every scalar lives in
+//! the JSON manifest.  64-bit values that may exceed f64's exact
+//! integer range (RNG cursors, seeds) are stored as hex strings.
+//!
+//! Page ids:
+//!
+//! * `theta/<t>` — global parameter tensor t
+//! * `outer/<t>` — outer momentum slot t
+//! * `w<k>/p/<t>` / `w<k>/s/<t>` — worker k's params / optimizer state
+//! * `w<k>/ef/<t>` — worker k's error-feedback residual (only slots
+//!   that have accumulated one)
+//! * `pend/<i>/<j>` — pending boundary i, reduced tensor j
+//! * `backend` — opaque backend state blob (absent when empty)
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::CommStats;
+use crate::coordinator::fault::FaultStats;
+use crate::runtime::Tensors;
+use crate::util::json::{curve_from_json, curve_to_json, u64s_from_json,
+                        u64s_to_json, Json};
+
+use super::format::{self, PageReader, PageWriter, MANIFEST_FILE, VERSION};
+
+/// One worker's checkpointable state.
+#[derive(Clone, Debug)]
+pub struct WorkerSnap {
+    pub params: Tensors,
+    pub opt_state: Tensors,
+    /// error-feedback residuals, `None` for never-touched slots
+    pub ef: Vec<Option<Vec<f32>>>,
+    /// data shard cursor: raw RNG state + latent Markov state
+    pub shard_rng: u64,
+    pub shard_state: usize,
+}
+
+/// One overlapped sync boundary captured mid-flight: the pure reduce
+/// has been joined, so only its outputs travel.
+#[derive(Clone, Debug)]
+pub struct PendingSnap {
+    pub apply_step: u64,
+    /// (tensor index, reduced pseudogradient, comm stats of the event
+    /// fragment) in ascending tensor order
+    pub tensors: Vec<(usize, Vec<f32>, CommStats)>,
+}
+
+/// The complete resumable training state at the end of step `step`.
+#[derive(Clone, Debug, Default)]
+pub struct TrainState {
+    pub step: u64,
+    pub tokens: u64,
+    pub theta: Tensors,
+    pub outer_u: Tensors,
+    pub workers: Vec<WorkerSnap>,
+    pub pending: Vec<PendingSnap>,
+    pub comm: CommStats,
+    pub faults: FaultStats,
+    pub train_curve: Vec<(u64, f64)>,
+    pub eval_curve: Vec<(u64, f64)>,
+    pub acc_curve: Vec<(u64, f64)>,
+    pub backend: Vec<u8>,
+}
+
+/// Identity of a checkpoint: who wrote it, with which knobs, where.
+#[derive(Clone, Debug)]
+pub struct CkptMeta {
+    pub version: u64,
+    pub step: u64,
+    /// canonical math-knob key (`coordinator::spec::cache_key`)
+    pub key: String,
+    /// backend platform tag — native/PJRT numbers never interchange
+    pub platform: String,
+    /// the full spec file of the writing run, for diagnostics
+    pub spec: Json,
+}
+
+fn hex_u64(x: u64) -> Json {
+    Json::Str(format!("{x:016x}"))
+}
+
+fn parse_hex_u64(v: &Json, what: &str) -> Result<u64> {
+    let s = v.as_str().with_context(|| format!("{what} must be a hex string"))?;
+    u64::from_str_radix(s, 16).with_context(|| format!("parsing {what} {s:?}"))
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn comm_json(c: &CommStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("bytes_per_worker".into(), num(c.bytes_per_worker as f64));
+    m.insert("total_bytes".into(), num(c.total_bytes as f64));
+    m.insert("peak_hop_bytes".into(), num(c.peak_hop_bytes as f64));
+    m.insert("peak_event_bytes".into(), num(c.peak_event_bytes as f64));
+    m.insert("sent_per_rank".into(), u64s_to_json(&c.sent_per_rank));
+    m.insert("recv_per_rank".into(), u64s_to_json(&c.recv_per_rank));
+    Json::Obj(m)
+}
+
+fn comm_from_json(v: &Json) -> Result<CommStats> {
+    Ok(CommStats {
+        bytes_per_worker: v.get("bytes_per_worker")?.as_usize()?,
+        total_bytes: v.get("total_bytes")?.as_usize()?,
+        peak_hop_bytes: v.get("peak_hop_bytes")?.as_usize()?,
+        peak_event_bytes: v.get("peak_event_bytes")?.as_usize()?,
+        sent_per_rank: u64s_from_json(v.get("sent_per_rank")?)?,
+        recv_per_rank: u64s_from_json(v.get("recv_per_rank")?)?,
+    })
+}
+
+/// Serialize + atomically publish one checkpoint under `dir`.
+/// Returns the published checkpoint directory.
+pub fn save(
+    dir: &Path,
+    key: &str,
+    platform: &str,
+    spec: Json,
+    state: &TrainState,
+) -> Result<PathBuf> {
+    let mut w = PageWriter::new();
+    for (t, x) in state.theta.iter().enumerate() {
+        w.put_f32(format!("theta/{t}"), x);
+    }
+    for (t, x) in state.outer_u.iter().enumerate() {
+        w.put_f32(format!("outer/{t}"), x);
+    }
+    let mut worker_meta = Vec::with_capacity(state.workers.len());
+    for (k, ws) in state.workers.iter().enumerate() {
+        for (t, x) in ws.params.iter().enumerate() {
+            w.put_f32(format!("w{k}/p/{t}"), x);
+        }
+        for (t, x) in ws.opt_state.iter().enumerate() {
+            w.put_f32(format!("w{k}/s/{t}"), x);
+        }
+        let mut ef_flags = Vec::with_capacity(ws.ef.len());
+        for (t, r) in ws.ef.iter().enumerate() {
+            ef_flags.push(Json::Bool(r.is_some()));
+            if let Some(r) = r {
+                w.put_f32(format!("w{k}/ef/{t}"), r);
+            }
+        }
+        let mut m = BTreeMap::new();
+        m.insert("rng".into(), hex_u64(ws.shard_rng));
+        m.insert("state".into(), num(ws.shard_state as f64));
+        m.insert("opt_tensors".into(), num(ws.opt_state.len() as f64));
+        m.insert("ef".into(), Json::Arr(ef_flags));
+        worker_meta.push(Json::Obj(m));
+    }
+    let mut pending_meta = Vec::with_capacity(state.pending.len());
+    for (i, p) in state.pending.iter().enumerate() {
+        let mut tensors = Vec::with_capacity(p.tensors.len());
+        for (j, (ti, psi, stats)) in p.tensors.iter().enumerate() {
+            w.put_f32(format!("pend/{i}/{j}"), psi);
+            let mut m = BTreeMap::new();
+            m.insert("ti".into(), num(*ti as f64));
+            m.insert("stats".into(), comm_json(stats));
+            tensors.push(Json::Obj(m));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("apply_step".into(), num(p.apply_step as f64));
+        m.insert("tensors".into(), Json::Arr(tensors));
+        pending_meta.push(Json::Obj(m));
+    }
+    if !state.backend.is_empty() {
+        w.put_bytes("backend", &state.backend);
+    }
+    let (pages, bin) = w.finish();
+
+    let mut curves = BTreeMap::new();
+    curves.insert("train".to_string(), curve_to_json(&state.train_curve));
+    curves.insert("eval".to_string(), curve_to_json(&state.eval_curve));
+    curves.insert("acc".to_string(), curve_to_json(&state.acc_curve));
+    let mut faults = BTreeMap::new();
+    faults.insert("rounds".to_string(), num(state.faults.rounds as f64));
+    faults.insert("dropped".to_string(), num(state.faults.dropped as f64));
+    faults.insert("straggled".to_string(), num(state.faults.straggled as f64));
+    faults.insert("stall_steps".to_string(), num(state.faults.stall_steps as f64));
+
+    let mut top = BTreeMap::new();
+    top.insert("version".to_string(), num(VERSION as f64));
+    top.insert("step".to_string(), num(state.step as f64));
+    top.insert("tokens".to_string(), num(state.tokens as f64));
+    top.insert("key".to_string(), Json::Str(key.to_string()));
+    top.insert("platform".to_string(), Json::Str(platform.to_string()));
+    top.insert("spec".to_string(), spec);
+    top.insert("theta_tensors".to_string(), num(state.theta.len() as f64));
+    top.insert("workers".to_string(), Json::Arr(worker_meta));
+    top.insert("pending".to_string(), Json::Arr(pending_meta));
+    top.insert("comm".to_string(), comm_json(&state.comm));
+    top.insert("faults".to_string(), Json::Obj(faults));
+    top.insert("curves".to_string(), Json::Obj(curves));
+    top.insert("pages".to_string(), pages);
+    format::write_atomic(dir, state.step, &Json::Obj(top), &bin)
+}
+
+/// Load one checkpoint directory (`.../step-<N>`), verifying the
+/// format version and every page's bounds + CRC.
+pub fn load_dir(step_dir: &Path) -> Result<(CkptMeta, TrainState)> {
+    let man_path = step_dir.join(MANIFEST_FILE);
+    let text = fs_read(&man_path)?;
+    let v = Json::parse(&text)
+        .with_context(|| format!("parsing {}", man_path.display()))?;
+    let version = v.get("version")?.as_f64()? as u64;
+    if version != VERSION {
+        bail!(
+            "checkpoint {} uses format version {version}, this build reads \
+             version {VERSION} — re-save the checkpoint with a matching \
+             build (the formats are not interchangeable)",
+            step_dir.display()
+        );
+    }
+    let meta = CkptMeta {
+        version,
+        step: v.get("step")?.as_f64()? as u64,
+        key: v.get("key")?.as_str()?.to_string(),
+        platform: v.get("platform")?.as_str()?.to_string(),
+        spec: v.get("spec")?.clone(),
+    };
+    let r = PageReader::open(step_dir, &v)?;
+
+    let n_theta = v.get("theta_tensors")?.as_usize()?;
+    let tensor_set = |prefix: &str, n: usize| -> Result<Tensors> {
+        (0..n).map(|t| r.f32s(&format!("{prefix}/{t}"))).collect()
+    };
+    let theta = tensor_set("theta", n_theta)?;
+    let outer_u = tensor_set("outer", n_theta)?;
+
+    let mut workers = Vec::new();
+    for (k, wm) in v.get("workers")?.as_arr()?.iter().enumerate() {
+        let n_opt = wm.get("opt_tensors")?.as_usize()?;
+        let params = tensor_set(&format!("w{k}/p"), n_theta)?;
+        let opt_state = tensor_set(&format!("w{k}/s"), n_opt)?;
+        let mut ef = Vec::new();
+        for (t, flag) in wm.get("ef")?.as_arr()?.iter().enumerate() {
+            ef.push(match flag {
+                Json::Bool(true) => Some(r.f32s(&format!("w{k}/ef/{t}"))?),
+                Json::Bool(false) => None,
+                other => bail!("worker {k} ef flag {t} is not a bool: {other:?}"),
+            });
+        }
+        workers.push(WorkerSnap {
+            params,
+            opt_state,
+            ef,
+            shard_rng: parse_hex_u64(wm.get("rng")?, "shard rng cursor")?,
+            shard_state: wm.get("state")?.as_usize()?,
+        });
+    }
+
+    let mut pending = Vec::new();
+    for (i, pm) in v.get("pending")?.as_arr()?.iter().enumerate() {
+        let mut tensors = Vec::new();
+        for (j, tm) in pm.get("tensors")?.as_arr()?.iter().enumerate() {
+            tensors.push((
+                tm.get("ti")?.as_usize()?,
+                r.f32s(&format!("pend/{i}/{j}"))?,
+                comm_from_json(tm.get("stats")?)?,
+            ));
+        }
+        pending.push(PendingSnap {
+            apply_step: pm.get("apply_step")?.as_f64()? as u64,
+            tensors,
+        });
+    }
+
+    let faults_v = v.get("faults")?;
+    let faults = FaultStats {
+        rounds: faults_v.get("rounds")?.as_f64()? as u64,
+        dropped: faults_v.get("dropped")?.as_f64()? as u64,
+        straggled: faults_v.get("straggled")?.as_f64()? as u64,
+        stall_steps: faults_v.get("stall_steps")?.as_f64()? as u64,
+    };
+    let curves = v.get("curves")?;
+    let backend = if r.has("backend") {
+        r.bytes("backend")?.to_vec()
+    } else {
+        Vec::new()
+    };
+    Ok((
+        meta,
+        TrainState {
+            step: v.get("step")?.as_f64()? as u64,
+            tokens: v.get("tokens")?.as_f64()? as u64,
+            theta,
+            outer_u,
+            workers,
+            pending,
+            comm: comm_from_json(v.get("comm")?)?,
+            faults,
+            train_curve: curve_from_json(curves.get("train")?)?,
+            eval_curve: curve_from_json(curves.get("eval")?)?,
+            acc_curve: curve_from_json(curves.get("acc")?)?,
+            backend,
+        },
+    ))
+}
+
+/// Load the newest checkpoint under a run's checkpoint directory.
+pub fn load_latest(dir: &Path) -> Result<(CkptMeta, TrainState)> {
+    load_dir(&format::latest(dir)?)
+}
+
+fn fs_read(path: &Path) -> Result<String> {
+    std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint manifest {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> TrainState {
+        let comm = CommStats {
+            bytes_per_worker: 123,
+            total_bytes: 456,
+            peak_hop_bytes: 78,
+            peak_event_bytes: 90,
+            sent_per_rank: vec![10, 20],
+            recv_per_rank: vec![15, 15],
+        };
+        TrainState {
+            step: 40,
+            tokens: 9999,
+            theta: vec![vec![1.0, 2.0], vec![3.0]],
+            outer_u: vec![vec![0.5, -0.5], vec![0.0]],
+            workers: vec![
+                WorkerSnap {
+                    params: vec![vec![1.5, 2.5], vec![3.5]],
+                    opt_state: vec![vec![0.1, 0.2], vec![0.3]],
+                    ef: vec![Some(vec![0.01, 0.02]), None],
+                    shard_rng: 0xDEADBEEFCAFEF00D,
+                    shard_state: 3,
+                },
+                WorkerSnap {
+                    params: vec![vec![-1.0, 0.0], vec![1.0]],
+                    opt_state: vec![vec![0.0, 0.0], vec![0.0]],
+                    ef: vec![None, None],
+                    shard_rng: u64::MAX,
+                    shard_state: 0,
+                },
+            ],
+            pending: vec![PendingSnap {
+                apply_step: 42,
+                tensors: vec![(1, vec![7.0], comm.clone())],
+            }],
+            comm: comm.clone(),
+            faults: FaultStats { rounds: 4, dropped: 2, straggled: 1, stall_steps: 3 },
+            train_curve: vec![(1, 5.5), (2, 5.25)],
+            eval_curve: vec![(2, 5.0)],
+            acc_curve: vec![(2, 0.125)],
+            backend: Vec::new(),
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = PathBuf::from("target")
+            .join(format!("ckpt-state-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn state_round_trips_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let state = sample_state();
+        let spec = Json::parse(r#"{"model": "nano", "method": "muloco"}"#).unwrap();
+        save(&dir, "K4|H30", "native-cpu", spec, &state).unwrap();
+        let (meta, back) = load_latest(&dir).unwrap();
+        assert_eq!(meta.step, 40);
+        assert_eq!(meta.key, "K4|H30");
+        assert_eq!(meta.platform, "native-cpu");
+        assert_eq!(back.step, state.step);
+        assert_eq!(back.tokens, state.tokens);
+        assert_eq!(back.theta, state.theta);
+        assert_eq!(back.outer_u, state.outer_u);
+        assert_eq!(back.comm, state.comm);
+        assert_eq!(back.faults, state.faults);
+        assert_eq!(back.train_curve, state.train_curve);
+        assert_eq!(back.eval_curve, state.eval_curve);
+        assert_eq!(back.acc_curve, state.acc_curve);
+        assert_eq!(back.workers.len(), 2);
+        for (a, b) in back.workers.iter().zip(&state.workers) {
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.opt_state, b.opt_state);
+            assert_eq!(a.ef, b.ef);
+            assert_eq!(a.shard_rng, b.shard_rng);
+            assert_eq!(a.shard_state, b.shard_state);
+        }
+        assert_eq!(back.pending.len(), 1);
+        assert_eq!(back.pending[0].apply_step, 42);
+        assert_eq!(back.pending[0].tensors[0].0, 1);
+        assert_eq!(back.pending[0].tensors[0].1, vec![7.0]);
+        assert_eq!(back.pending[0].tensors[0].2, state.comm);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn version_drift_fails_with_actionable_error() {
+        let dir = tmp_dir("version");
+        let state = sample_state();
+        let step_dir = save(&dir, "k", "native-cpu", Json::Null, &state).unwrap();
+        let man = step_dir.join(MANIFEST_FILE);
+        let doctored = std::fs::read_to_string(&man)
+            .unwrap()
+            .replace("\"version\":1", "\"version\":999");
+        std::fs::write(&man, doctored).unwrap();
+        let err = load_dir(&step_dir).unwrap_err().to_string();
+        assert!(err.contains("version 999"), "{err}");
+        assert!(err.contains("version 1"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn successive_saves_coexist_and_latest_wins() {
+        let dir = tmp_dir("succession");
+        let mut state = sample_state();
+        save(&dir, "k", "p", Json::Null, &state).unwrap();
+        state.step = 80;
+        state.theta[0][0] = 99.0;
+        save(&dir, "k", "p", Json::Null, &state).unwrap();
+        let (meta, back) = load_latest(&dir).unwrap();
+        assert_eq!(meta.step, 80);
+        assert_eq!(back.theta[0][0], 99.0);
+        // the older checkpoint is still readable directly
+        let old = load_dir(&dir.join(format::step_dir_name(40))).unwrap();
+        assert_eq!(old.0.step, 40);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -327,6 +327,34 @@ impl CommStats {
         add_per_rank(&mut self.recv_per_rank, &other.recv_per_rank);
     }
 
+    /// Re-attribute per-rank vectors recorded over a dense participant
+    /// space `0..P` onto the participants' global ranks in a K-worker
+    /// run (`ranks[i]` = global rank of participant i).  The elastic
+    /// sync path reduces over survivors only; without the remap a
+    /// dropped rank 1 would absorb rank 2's bytes.  Identity maps are
+    /// a no-op, so the zero-fault path is bit-identical.
+    pub fn remap_ranks(&mut self, ranks: &[usize], k: usize) {
+        if self.sent_per_rank.is_empty() && self.recv_per_rank.is_empty() {
+            return;
+        }
+        if ranks.len() == k && ranks.iter().enumerate().all(|(i, &r)| i == r) {
+            return;
+        }
+        let spread = |v: &[u64]| {
+            let mut out = vec![0u64; k];
+            for (i, &x) in v.iter().enumerate() {
+                if let Some(&r) = ranks.get(i) {
+                    if r < k {
+                        out[r] += x;
+                    }
+                }
+            }
+            out
+        };
+        self.sent_per_rank = spread(&self.sent_per_rank);
+        self.recv_per_rank = spread(&self.recv_per_rank);
+    }
+
     /// Fold one finished sync event into run-level accounting.
     pub fn absorb_event(&mut self, event: &CommStats) {
         self.bytes_per_worker += event.bytes_per_worker;
@@ -465,6 +493,25 @@ mod tests {
         assert_eq!(sent2[2], 50);
         assert_eq!(recv2[2], 50);
         assert_eq!(recv2[0], 0);
+    }
+
+    #[test]
+    fn remap_ranks_spreads_survivors_onto_global_ranks() {
+        // 2 survivors of a K=4 run: participant 0 -> rank 0,
+        // participant 1 -> rank 2 (rank 1 dropped this round)
+        let mut t = CommTrace::default();
+        t.push(LinkClass::Inter, 100, 2);
+        let mut stats = t.stats_for(2);
+        stats.remap_ranks(&[0, 2], 4);
+        assert_eq!(stats.sent_per_rank, vec![100, 0, 100, 0]);
+        assert_eq!(stats.recv_per_rank, vec![100, 0, 100, 0]);
+        // scalars untouched
+        assert_eq!(stats.bytes_per_worker, 100);
+        // identity map is a no-op (the zero-fault path)
+        let mut id = t.stats_for(2);
+        let before = id.clone();
+        id.remap_ranks(&[0, 1], 2);
+        assert_eq!(id, before);
     }
 
     #[test]

@@ -49,6 +49,20 @@ impl ErrorFeedback {
         bytes
     }
 
+    /// Read-only view of the residual accumulators (checkpointing):
+    /// `None` marks a slot that has never been compressed.
+    pub fn residuals(&self) -> &[Option<Vec<f32>>] {
+        &self.residuals
+    }
+
+    /// Rebuild an accumulator set from a snapshot captured via
+    /// [`residuals`](ErrorFeedback::residuals) — the resume half of the
+    /// checkpoint contract (uncommunicated mass must survive a restart
+    /// or Algorithm 2's convergence guarantee silently degrades).
+    pub fn restore(beta: f32, residuals: Vec<Option<Vec<f32>>>) -> ErrorFeedback {
+        ErrorFeedback { beta, residuals }
+    }
+
     /// L2 norm of a slot's residual (diagnostics / tests).
     pub fn residual_norm(&self, slot: usize) -> f64 {
         match &self.residuals[slot] {

@@ -134,6 +134,32 @@ pub struct TrainConfig {
     /// tau steps after its boundary, with the collective running on a
     /// background thread meanwhile (0 = classic blocking sync)
     pub overlap_tau: u64,
+    /// per-window worker dropout probability (elastic training): each
+    /// sync window, each worker independently drops with this
+    /// probability — it takes no inner steps, contributes nothing to
+    /// the pseudogradient (the mean renormalizes over survivors), and
+    /// rejoins from the next boundary broadcast.  0 = no faults (the
+    /// plan is never consulted, bit-identical to pre-fault builds)
+    pub dropout: f64,
+    /// per-window straggler probability: the worker participates but
+    /// finishes late; the barrier stall is accounted in
+    /// `RunResult::faults::stall_steps` (inner-step units)
+    pub straggler: f64,
+    /// seed of the deterministic fault schedule (independent of the
+    /// data/init seed so fault patterns can be varied in isolation)
+    pub fault_seed: u64,
+    /// checkpoint every this many steps into `ckpt_dir` (0 = never)
+    pub save_every: u64,
+    /// directory checkpoints are written to / resumed from
+    pub ckpt_dir: String,
+    /// resume from the newest checkpoint under this directory before
+    /// step 1 (empty = fresh start).  The checkpoint's math knobs must
+    /// match this config's exactly (canonical cache key)
+    pub resume: String,
+    /// stop training after this step (0 = run to total_steps) — the
+    /// deterministic stand-in for a crash in kill-and-resume tests; a
+    /// halted run is never cached
+    pub halt_after: u64,
     /// evaluate every this many steps (also the smoother boundary)
     pub eval_every: u64,
     /// number of eval microbatches per evaluation
@@ -177,6 +203,13 @@ impl TrainConfig {
             ortho_interval: 1,
             topology: TopologySpec::Flat,
             overlap_tau: 0,
+            dropout: 0.0,
+            straggler: 0.0,
+            fault_seed: 0,
+            save_every: 0,
+            ckpt_dir: "ckpts".to_string(),
+            resume: String::new(),
+            halt_after: 0,
             eval_every: 30,
             eval_batches: 8,
             seed: 17,
@@ -223,6 +256,38 @@ impl TrainConfig {
                     self.workers
                 );
             }
+        }
+        for (name, p) in [("dropout", self.dropout), ("straggler", self.straggler)] {
+            if !(0.0..1.0).contains(&p) {
+                anyhow::bail!("{name} must be a probability in [0, 1), got {p}");
+            }
+        }
+        if (self.dropout > 0.0 || self.straggler > 0.0)
+            && !self.method.is_local_update()
+        {
+            anyhow::bail!(
+                "fault injection (dropout/straggler) models DiLoCo-style \
+                 elastic workers; DP baselines have no sync windows to \
+                 drop out of"
+            );
+        }
+        if self.dropout > 0.0 {
+            if self.workers < 2 {
+                anyhow::bail!(
+                    "dropout needs K >= 2 workers (a single worker is always \
+                     kept active by the quorum rule, making dropout a no-op)"
+                );
+            }
+            if matches!(self.topology, TopologySpec::Hier { .. }) {
+                anyhow::bail!(
+                    "dropout cannot reshape the hierarchical topology (its \
+                     groups must divide the surviving participant set); use \
+                     the flat or ring topology"
+                );
+            }
+        }
+        if self.save_every > 0 && self.ckpt_dir.is_empty() {
+            anyhow::bail!("--save-every needs a non-empty --ckpt-dir");
         }
         if self.overlap_tau > 0 {
             if !self.method.is_local_update() {
@@ -322,6 +387,30 @@ mod tests {
         let mut dp = TrainConfig::new("nano", Method::DpMuon);
         dp.overlap_tau = 1;
         assert!(dp.validate().is_err());
+    }
+
+    #[test]
+    fn validation_covers_fault_and_ckpt_knobs() {
+        let mut c = TrainConfig::new("nano", Method::Muloco);
+        c.dropout = 1.0; // probabilities live in [0, 1)
+        assert!(c.validate().is_err());
+        c.dropout = 0.25;
+        assert!(c.validate().is_ok());
+        c.topology = TopologySpec::Hier { groups: 2 }; // survivors break groups
+        assert!(c.validate().is_err());
+        c.topology = TopologySpec::Flat;
+        c.workers = 1;
+        c.global_batch = 4; // keep shardable
+        assert!(c.validate().is_err(), "dropout needs K >= 2");
+        let mut dp = TrainConfig::new("nano", Method::DpMuon);
+        dp.straggler = 0.5;
+        assert!(dp.validate().is_err(), "DP baselines have no sync windows");
+        let mut s = TrainConfig::new("nano", Method::Muloco);
+        s.save_every = 10;
+        s.ckpt_dir = String::new();
+        assert!(s.validate().is_err());
+        s.ckpt_dir = "ckpts".into();
+        assert!(s.validate().is_ok());
     }
 
     #[test]

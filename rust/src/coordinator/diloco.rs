@@ -15,15 +15,39 @@
 //! `TrainConfig::parallel = false` runs the identical dataflow inline —
 //! the sequential reference path the determinism regression test
 //! compares against.
+//!
+//! **Fault tolerance** (the `ckpt`/`fault` subsystem) threads through
+//! here in two independent pieces:
+//!
+//! * durable checkpoints — `--save-every N` snapshots the *complete*
+//!   training state (global + per-worker replicas, inner/outer
+//!   optimizer state, error-feedback residuals, data cursors, pending
+//!   overlapped boundaries, comm/fault ledgers, curves) after the
+//!   boundary work of the step; `--resume DIR` restores the newest one
+//!   and continues.  Contract: the resumed run is bit-for-bit identical
+//!   to the uninterrupted one (`tests/ckpt_resume.rs`).  `--halt-after`
+//!   is the deterministic stand-in for a crash.
+//! * elastic workers — a seeded `FaultPlan` decides per sync window
+//!   which workers drop out (skip the window, excluded from the
+//!   pseudogradient, rejoin via the boundary broadcast) or straggle
+//!   (participate late; the barrier stall is accounted in
+//!   `RunResult::faults`).  The plan is a pure function of
+//!   (fault seed, window, worker), so it needs no checkpointed state
+//!   and is identical across parallel/sequential and resume boundaries.
 
+use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::config::TrainConfig;
+use super::fault::{FaultPlan, FaultStats};
+use super::spec;
 use super::sync::SyncEngine;
-use super::worker::{inner_with, WorkerPool};
+use super::worker::{inner_with, Worker, WorkerPool};
+use crate::ckpt;
 use crate::comm::CommStats;
+use crate::compress::ErrorFeedback;
 use crate::data::Corpus;
 use crate::evalloss::Smoother;
 use crate::runtime::{ExecStats, Session, Tensors};
@@ -36,7 +60,7 @@ pub struct RunResult {
     pub eval_curve: Vec<(u64, f64)>,
     /// (step, eval next-token accuracy)
     pub acc_curve: Vec<(u64, f64)>,
-    /// (step, mean train loss across workers)
+    /// (step, mean train loss across active workers)
     pub train_curve: Vec<(u64, f64)>,
     /// time-weighted-EMA smoothed final eval loss (Appendix F)
     pub smoothed_final: f64,
@@ -46,10 +70,12 @@ pub struct RunResult {
     pub final_acc: f64,
     /// communication accounting over the whole run
     pub comm: CommStats,
+    /// fault-injection accounting (all-zero for fault-free runs)
+    pub faults: FaultStats,
     /// runtime execution stats (per-executable wall time)
     pub exec: ExecStats,
     pub wall_secs: f64,
-    /// tokens consumed
+    /// tokens consumed (dropped workers consume none)
     pub tokens: u64,
     /// the final global parameters (for downstream task evaluation)
     pub final_params: Option<Tensors>,
@@ -104,6 +130,152 @@ pub fn evaluate(sess: &Session, params: &Tensors, batches: &[Vec<i32>])
     Ok((loss / batches.len() as f64, acc / batches.len() as f64))
 }
 
+/// Refuse to resume across incompatible identities: the checkpoint's
+/// canonical math-knob key and backend platform must match this run's
+/// exactly, or the numbers could silently diverge from the
+/// uninterrupted reference.
+fn check_resume_meta(
+    meta: &ckpt::CkptMeta,
+    cfg: &TrainConfig,
+    sess: &Session,
+) -> Result<()> {
+    let key = spec::cache_key(cfg);
+    if meta.key != key {
+        bail!(
+            "checkpoint at step {} was written with different math knobs:\n  \
+             checkpoint: {}\n  this run:   {}\nresume requires an identical \
+             run spec — the spec that wrote the checkpoint is stored in its \
+             manifest.json under \"spec\" (replay it with --spec)",
+            meta.step, meta.key, key
+        );
+    }
+    let platform = sess.platform();
+    if meta.platform != platform {
+        bail!(
+            "checkpoint was written on backend {:?}, this session runs {:?}; \
+             native and PJRT numbers are not interchangeable",
+            meta.platform, platform
+        );
+    }
+    Ok(())
+}
+
+/// Restore the snapshot into the freshly constructed training state.
+/// Geometry is validated piece by piece against the live structures so
+/// a checkpoint for the wrong model fails loudly, never half-applies.
+fn restore_into(
+    state: ckpt::TrainState,
+    theta: &mut Tensors,
+    pool: &mut WorkerPool<'_>,
+    engine: &mut SyncEngine,
+    sess: &Session,
+    cfg: &TrainConfig,
+) -> Result<()> {
+    let check_set = |what: &str, cur: &Tensors, new: &Tensors| -> Result<()> {
+        if cur.len() != new.len() {
+            bail!("checkpoint {what} has {} tensors, model expects {}",
+                  new.len(), cur.len());
+        }
+        for (i, (c, n)) in cur.iter().zip(new).enumerate() {
+            if c.len() != n.len() {
+                bail!(
+                    "checkpoint {what} tensor {i} has {} elems, model \
+                     expects {}",
+                    n.len(), c.len()
+                );
+            }
+        }
+        Ok(())
+    };
+    check_set("global params", theta, &state.theta)?;
+    let n_tensors = theta.len();
+    *theta = state.theta;
+    if state.workers.len() != pool.workers.len() {
+        bail!(
+            "checkpoint holds {} workers, this run has K={}",
+            state.workers.len(),
+            pool.workers.len()
+        );
+    }
+    for (i, (worker, snap)) in
+        pool.workers.iter_mut().zip(state.workers).enumerate()
+    {
+        check_set(&format!("worker {i} params"), &worker.params, &snap.params)?;
+        check_set(&format!("worker {i} optimizer state"), &worker.opt_state,
+                  &snap.opt_state)?;
+        if snap.ef.len() != n_tensors {
+            bail!(
+                "checkpoint worker {i} carries {} error-feedback slots, \
+                 model has {n_tensors} tensors",
+                snap.ef.len()
+            );
+        }
+        worker.params = snap.params;
+        worker.opt_state = snap.opt_state;
+        worker.ef = ErrorFeedback::restore(cfg.ef_beta, snap.ef);
+        worker.shard.seek(snap.shard_rng, snap.shard_state)?;
+    }
+    engine.restore_state(state.outer_u, state.pending)?;
+    sess.import_backend_state(&state.backend)?;
+    Ok(())
+}
+
+/// Snapshot + atomically publish the complete training state after the
+/// boundary work of `step`.
+#[allow(clippy::too_many_arguments)]
+fn save_checkpoint(
+    sess: &Session,
+    cfg: &TrainConfig,
+    step: u64,
+    tokens: u64,
+    theta: &Tensors,
+    workers: &[Worker<'_>],
+    engine: &mut SyncEngine,
+    comm: &CommStats,
+    faults: &FaultStats,
+    train_curve: &[(u64, f64)],
+    eval_curve: &[(u64, f64)],
+    acc_curve: &[(u64, f64)],
+) -> Result<()> {
+    let (outer_u, pending) = engine.export_state();
+    let worker_snaps = workers
+        .iter()
+        .map(|w| {
+            let (shard_rng, shard_state) = w.shard.cursor();
+            ckpt::WorkerSnap {
+                params: w.params.clone(),
+                opt_state: w.opt_state.clone(),
+                ef: w.ef.residuals().to_vec(),
+                shard_rng,
+                shard_state,
+            }
+        })
+        .collect();
+    let state = ckpt::TrainState {
+        step,
+        tokens,
+        theta: theta.clone(),
+        outer_u,
+        workers: worker_snaps,
+        pending,
+        comm: comm.clone(),
+        faults: *faults,
+        train_curve: train_curve.to_vec(),
+        eval_curve: eval_curve.to_vec(),
+        acc_curve: acc_curve.to_vec(),
+        backend: sess.export_backend_state()?,
+    };
+    ckpt::save(
+        Path::new(&cfg.ckpt_dir),
+        &spec::cache_key(cfg),
+        &sess.platform(),
+        spec::spec_json(cfg),
+        &state,
+    )
+    .with_context(|| format!("saving checkpoint at step {step}"))?;
+    Ok(())
+}
+
 /// Run one full training job.  This is the production entry point used
 /// by the CLI, the experiments and the examples.
 pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
@@ -123,7 +295,8 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
     }
     let corpus = Corpus::new(model.vocab, cfg.seed);
 
-    // fixed eval batches from the held-out stream (comparable across runs)
+    // fixed eval batches from the held-out stream (comparable across
+    // runs, and regenerated identically on resume)
     let mut eval_shard = corpus.eval_shard();
     let eval_batches: Vec<Vec<i32>> = (0..cfg.eval_batches)
         .map(|_| eval_shard.next_batch(model.microbatch, model.seq_len))
@@ -135,29 +308,80 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
     let mut pool =
         WorkerPool::new(sess, &corpus, inner.as_ref(), k, cfg.ef_beta, &theta);
     let mut engine = SyncEngine::for_run(man, cfg);
+    let faults = FaultPlan::for_run(cfg);
+
+    // run-level progress: restored from a checkpoint on resume,
+    // snapshotted into every checkpoint on save
+    let mut comm = CommStats::default();
+    let mut fstats = FaultStats::default();
+    let mut train_curve: Vec<(u64, f64)> = Vec::new();
+    let mut eval_curve: Vec<(u64, f64)> = Vec::new();
+    let mut acc_curve: Vec<(u64, f64)> = Vec::new();
+    let mut tokens = 0u64;
+    let mut start_step = 1u64;
+
+    if !cfg.resume.is_empty() {
+        let (meta, mut state) = ckpt::load_latest(Path::new(&cfg.resume))
+            .with_context(|| format!("resuming from {:?}", cfg.resume))?;
+        check_resume_meta(&meta, cfg, sess)?;
+        start_step = state.step + 1;
+        tokens = state.tokens;
+        comm = std::mem::take(&mut state.comm);
+        fstats = state.faults;
+        train_curve = std::mem::take(&mut state.train_curve);
+        eval_curve = std::mem::take(&mut state.eval_curve);
+        acc_curve = std::mem::take(&mut state.acc_curve);
+        restore_into(state, &mut theta, &mut pool, &mut engine, sess, cfg)?;
+    }
 
     // the whole loop runs with K persistent executor threads attached
     // (channel-based step barrier); `parallel = false` runs everything
     // inline — the sequential reference path
     let mut result = pool.scoped(cfg.parallel, |pool| -> Result<RunResult> {
-        let mut comm = CommStats::default();
-        let mut train_curve = Vec::new();
-        let mut eval_curve = Vec::new();
-        let mut acc_curve = Vec::new();
-        let mut tokens = 0u64;
+        // per-window fault mask, recomputed only when the window turns
+        // (or on the first — possibly mid-window — step after a resume)
+        let mut mask: Option<Vec<bool>> = None;
+        let mut mask_window = 0u64;
+        for step in start_step..=cfg.total_steps {
+            // --- elastic fault schedule (pure function of the window,
+            //     so parallel/sequential/resumed runs all agree) -------
+            let h = cfg.sync_interval.max(1);
+            let window = (step - 1) / h + 1;
+            if let Some(f) = &faults {
+                if mask.is_none() || window != mask_window {
+                    let m = f.mask(window, k);
+                    // window-start accounting only: a resume landing
+                    // mid-window was already accounted before the save
+                    if (step - 1) % h == 0 {
+                        fstats.rounds += 1;
+                        fstats.dropped +=
+                            m.iter().filter(|&&a| !a).count() as u64;
+                        let (straggled, stall) = f.window_stall(window, &m);
+                        fstats.straggled += straggled;
+                        fstats.stall_steps += stall;
+                    }
+                    mask = Some(m);
+                    mask_window = window;
+                }
+            }
+            let n_active = mask
+                .as_ref()
+                .map(|m| m.iter().filter(|&&a| a).count())
+                .unwrap_or(k);
 
-        for step in 1..=cfg.total_steps {
             let lr = cfg.lr_at(step - 1) as f32;
             let wd = cfg.weight_decay as f32;
             let step_loss = pool.step(sess, per_worker_batch,
-                                      step as f32, lr, wd, cfg.parallel)?;
-            tokens += (k * per_worker_batch * model.seq_len) as u64;
+                                      step as f32, lr, wd, cfg.parallel,
+                                      mask.as_deref())?;
+            tokens += (n_active * per_worker_batch * model.seq_len) as u64;
             train_curve.push((step, step_loss));
 
             // --- synchronization (Algorithm 1 lines 11-13 / Algorithm 2) ---
             if cfg.method.is_local_update() {
-                engine.sync_step(step, &mut theta, &mut pool.workers, &mut comm,
-                                 cfg.parallel);
+                engine.sync_step_masked(step, &mut theta, &mut pool.workers,
+                                        &mut comm, cfg.parallel,
+                                        mask.as_deref());
                 if step == cfg.total_steps {
                     // overlapped boundaries still in flight apply before
                     // the final eval (no-op for tau = 0)
@@ -176,6 +400,18 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
                 eval_curve.push((step, l));
                 acc_curve.push((step, a));
             }
+
+            // --- durable checkpoint, after all of this step's effects ---
+            if cfg.save_every > 0 && step % cfg.save_every == 0 {
+                save_checkpoint(sess, cfg, step, tokens, &theta,
+                                &pool.workers, &mut engine, &comm, &fstats,
+                                &train_curve, &eval_curve, &acc_curve)?;
+            }
+            // deterministic crash point for kill-and-resume tests: the
+            // state on disk is whatever the last --save-every wrote
+            if cfg.halt_after != 0 && step == cfg.halt_after {
+                break;
+            }
         }
 
         let smoother = Smoother::new(0.2, cfg.eval_every);
@@ -184,13 +420,14 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
         let final_acc = acc_curve.last().map(|(_, a)| *a).unwrap_or(f64::NAN);
 
         Ok(RunResult {
-            eval_curve,
-            acc_curve,
-            train_curve,
+            eval_curve: std::mem::take(&mut eval_curve),
+            acc_curve: std::mem::take(&mut acc_curve),
+            train_curve: std::mem::take(&mut train_curve),
             smoothed_final,
             raw_final,
             final_acc,
-            comm,
+            comm: std::mem::take(&mut comm),
+            faults: fstats,
             exec: sess.stats(),
             wall_secs: t_start.elapsed().as_secs_f64(),
             tokens,

@@ -1,0 +1,214 @@
+//! Fault injection: a deterministic, seeded schedule of per-round
+//! worker dropout and straggler delay — the elastic-training half of
+//! the fault-tolerance subsystem.
+//!
+//! DiLoCo's founding setting (Douillard et al. 2023) is training across
+//! unreliable workers: replicas drop out mid-run, straggle behind, and
+//! rejoin later.  The [`FaultPlan`] models that as a *pure function* of
+//! `(fault seed, sync window, worker)`: no stream state to thread
+//! through the training loop, so the schedule is identical across
+//! parallel/sequential execution and — crucially — across a
+//! checkpoint/resume boundary without saving anything.
+//!
+//! Semantics per sync window `w` (the H-step span between outer
+//! boundaries):
+//!
+//! * **Dropped** — the worker is down for the whole window: it takes no
+//!   inner steps (consumes no data, no tokens), contributes nothing to
+//!   the window's pseudogradients (the collective reduces over the
+//!   survivors and the mean renormalizes to their count), and rejoins
+//!   from the freshest global snapshot at the next boundary broadcast —
+//!   its inner-optimizer state stays whatever it last held (a real
+//!   restart from local disk keeps stale momentum too).
+//! * **Straggler** — the worker computes and participates, but finishes
+//!   `delay` inner-step-equivalents late; the boundary barrier absorbs
+//!   the delay, which [`FaultStats::stall_steps`] accounts so wall-clock
+//!   models can price it.
+//! * At least one worker is always active: if the draw drops everyone,
+//!   the lowest-indexed worker is forced back in (quorum of one) so the
+//!   pseudogradient mean is never empty.
+
+use crate::util::rng::Rng;
+
+use super::config::TrainConfig;
+
+/// One worker's fate for one sync window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultStatus {
+    Active,
+    Dropped,
+    /// participates, but `delay` inner-step-equivalents late
+    Straggler { delay: u64 },
+}
+
+/// Run-level fault accounting (checkpointed, so a resumed run reports
+/// the same totals as the uninterrupted one).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// sync windows entered
+    pub rounds: u64,
+    /// worker-window dropout events
+    pub dropped: u64,
+    /// worker-window straggler events
+    pub straggled: u64,
+    /// sum over windows of the max straggler delay among participants —
+    /// the barrier wait the run would pay in inner-step units
+    pub stall_steps: u64,
+}
+
+/// Deterministic fault schedule.  Stateless: every query re-derives its
+/// stream from `(seed, window, worker)`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    dropout: f64,
+    straggler: f64,
+}
+
+impl FaultPlan {
+    /// The plan for a run, or `None` when the config injects no faults
+    /// (the zero-fault path must stay bit-identical to pre-fault
+    /// builds, so it never consults a plan at all).
+    pub fn for_run(cfg: &TrainConfig) -> Option<FaultPlan> {
+        if !cfg.method.is_local_update()
+            || (cfg.dropout == 0.0 && cfg.straggler == 0.0)
+        {
+            return None;
+        }
+        Some(FaultPlan {
+            seed: cfg.fault_seed,
+            dropout: cfg.dropout,
+            straggler: cfg.straggler,
+        })
+    }
+
+    fn stream(&self, window: u64, worker: usize) -> Rng {
+        Rng::new(
+            self.seed
+                ^ window.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (worker as u64 + 1).wrapping_mul(0xD1B54A32D192ED03),
+        )
+    }
+
+    /// This worker's fate for `window` (1-based).  Draw order is fixed
+    /// (dropout first, then straggle) so the schedule is stable across
+    /// builds.
+    pub fn status(&self, window: u64, worker: usize) -> FaultStatus {
+        let mut rng = self.stream(window, worker);
+        if rng.uniform() < self.dropout {
+            return FaultStatus::Dropped;
+        }
+        if rng.uniform() < self.straggler {
+            return FaultStatus::Straggler { delay: 1 + rng.below(3) as u64 };
+        }
+        FaultStatus::Active
+    }
+
+    /// Participation mask for `window` over `k` workers, with the
+    /// quorum-of-one guarantee.
+    pub fn mask(&self, window: u64, k: usize) -> Vec<bool> {
+        let mut m: Vec<bool> = (0..k)
+            .map(|w| self.status(window, w) != FaultStatus::Dropped)
+            .collect();
+        if !m.iter().any(|&a| a) {
+            m[0] = true;
+        }
+        m
+    }
+
+    /// Straggler accounting for one window: (straggler count among
+    /// participants, barrier stall = their max delay).
+    pub fn window_stall(&self, window: u64, mask: &[bool]) -> (u64, u64) {
+        let mut count = 0u64;
+        let mut stall = 0u64;
+        for (w, &active) in mask.iter().enumerate() {
+            if !active {
+                continue;
+            }
+            if let FaultStatus::Straggler { delay } = self.status(window, w) {
+                count += 1;
+                stall = stall.max(delay);
+            }
+        }
+        (count, stall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Method;
+
+    fn plan(dropout: f64, straggler: f64, seed: u64) -> FaultPlan {
+        FaultPlan { seed, dropout, straggler }
+    }
+
+    #[test]
+    fn plan_only_exists_when_faults_are_configured() {
+        let mut cfg = TrainConfig::new("nano", Method::Muloco);
+        assert!(FaultPlan::for_run(&cfg).is_none());
+        cfg.dropout = 0.3;
+        assert!(FaultPlan::for_run(&cfg).is_some());
+        // DP baselines never fault (validation rejects the knobs too)
+        let mut dp = TrainConfig::new("nano", Method::DpMuon);
+        dp.dropout = 0.3;
+        assert!(FaultPlan::for_run(&dp).is_none());
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function() {
+        let p = plan(0.4, 0.3, 17);
+        for window in 1..=20 {
+            for w in 0..8 {
+                assert_eq!(p.status(window, w), p.status(window, w));
+            }
+            assert_eq!(p.mask(window, 8), p.mask(window, 8));
+        }
+        // different seeds give different schedules
+        let q = plan(0.4, 0.3, 18);
+        let diverges = (1..=50)
+            .any(|win| p.mask(win, 8) != q.mask(win, 8));
+        assert!(diverges);
+    }
+
+    #[test]
+    fn quorum_of_one_survives_certain_dropout() {
+        let p = plan(1.0, 0.0, 5);
+        for window in 1..=10 {
+            let m = p.mask(window, 4);
+            assert_eq!(m, vec![true, false, false, false], "window {window}");
+        }
+    }
+
+    #[test]
+    fn dropout_rate_is_roughly_honored() {
+        let p = plan(0.25, 0.0, 99);
+        let k = 16;
+        let windows = 400u64;
+        let dropped: usize = (1..=windows)
+            .map(|w| p.mask(w, k).iter().filter(|&&a| !a).count())
+            .sum();
+        let rate = dropped as f64 / (windows * k as u64) as f64;
+        assert!((rate - 0.25).abs() < 0.03, "{rate}");
+    }
+
+    #[test]
+    fn stall_is_max_delay_among_active_stragglers() {
+        let p = plan(0.0, 1.0, 3); // everyone straggles
+        let mask = p.mask(1, 4);
+        let (count, stall) = p.window_stall(1, &mask);
+        assert_eq!(count, 4);
+        let max_delay = (0..4)
+            .map(|w| match p.status(1, w) {
+                FaultStatus::Straggler { delay } => delay,
+                _ => 0,
+            })
+            .max()
+            .unwrap();
+        assert_eq!(stall, max_delay);
+        assert!((1..=3).contains(&stall));
+        // dropped workers do not stall the barrier
+        let none = p.window_stall(1, &[false; 4]);
+        assert_eq!(none, (0, 0));
+    }
+}

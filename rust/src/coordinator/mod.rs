@@ -1,14 +1,19 @@
 //! L3 coordinator: the paper's system contribution (Algorithms 1 & 2),
-//! structured as three layers over the thread-safe runtime:
+//! structured as layers over the thread-safe runtime:
 //!
 //!   `worker` — per-replica state, pluggable `InnerOptimizer`
 //!              (AdamW/Muon), parallel `WorkerPool`;
 //!   `sync`   — streaming `SyncPlan` + `SyncEngine` (compression, error
 //!              feedback, collectives, outer step, broadcast);
-//!   `diloco` — the thin training loop tying the two together.
+//!   `fault`  — seeded elastic-worker schedule (`FaultPlan`: dropout /
+//!              straggler per sync window) + run-level accounting;
+//!   `diloco` — the thin training loop tying them together, including
+//!              the durable-checkpoint / bit-for-bit resume hooks of
+//!              the `crate::ckpt` subsystem.
 
 pub mod config;
 pub mod diloco;
+pub mod fault;
 pub mod outer;
 pub mod probe;
 pub mod spec;
@@ -18,6 +23,7 @@ pub mod worker;
 pub use config::{Method, TrainConfig};
 pub use spec::{cache_key, knobs, RunSpec};
 pub use diloco::{accumulate_grads, evaluate, train, RunResult};
+pub use fault::{FaultPlan, FaultStats, FaultStatus};
 pub use outer::NesterovOuter;
 pub use probe::{branch_capture, dp_warmstart, BranchCapture, Checkpoint};
 pub use sync::{SyncEngine, SyncPlan, SyncTensorMeta};

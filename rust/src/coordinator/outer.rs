@@ -60,6 +60,37 @@ impl NesterovOuter {
     pub fn momentum_norm(&self, idx: usize) -> f64 {
         crate::util::norm(&self.u[idx])
     }
+
+    /// Read-only view of all momentum slots (checkpointing).
+    pub fn slots(&self) -> &[Vec<f32>] {
+        &self.u
+    }
+
+    /// Replace the momentum slots with a snapshot captured via
+    /// [`slots`](NesterovOuter::slots).  Geometry must match the
+    /// optimizer's — a checkpoint for a different model fails loudly
+    /// here instead of corrupting the outer recursion.
+    pub fn set_slots(&mut self, u: Tensors) -> anyhow::Result<()> {
+        if u.len() != self.u.len() {
+            anyhow::bail!(
+                "outer state has {} momentum slots, checkpoint carries {}",
+                self.u.len(),
+                u.len()
+            );
+        }
+        for (i, (cur, new)) in self.u.iter().zip(&u).enumerate() {
+            if cur.len() != new.len() {
+                anyhow::bail!(
+                    "outer momentum slot {i} expects {} elems, checkpoint \
+                     carries {}",
+                    cur.len(),
+                    new.len()
+                );
+            }
+        }
+        self.u = u;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

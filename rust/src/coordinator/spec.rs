@@ -181,6 +181,71 @@ fn build_registry() -> Vec<Knob> {
         },
         parse_knob!("tau", "tau", "2", overlap_tau,
                     "overlapped sync: apply each reduce tau steps late (0 = blocking)"),
+        parse_knob!("dropout", "do", "0.25", dropout,
+                    "per-window worker dropout probability (elastic training)"),
+        parse_knob!("straggler", "st", "0.1", straggler,
+                    "per-window straggler probability (stall accounting only)"),
+        parse_knob!("fault-seed", "fs", "7", fault_seed,
+                    "seed of the deterministic fault schedule"),
+        Knob {
+            name: "save-every",
+            tag: "",
+            doc: "checkpoint every N steps into --ckpt-dir (0 = never; \
+                  excluded from cache keys)",
+            example: "30",
+            flag: false,
+            in_key: false,
+            get: |c| c.save_every.to_string(),
+            set: |c, v| {
+                c.save_every = v
+                    .parse()
+                    .map_err(|e| anyhow!("bad value for --save-every: {e}"))?;
+                Ok(())
+            },
+        },
+        Knob {
+            name: "ckpt-dir",
+            tag: "",
+            doc: "checkpoint directory (excluded from cache keys)",
+            example: "my-ckpts",
+            flag: false,
+            in_key: false,
+            get: |c| c.ckpt_dir.clone(),
+            set: |c, v| {
+                c.ckpt_dir = v.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            name: "resume",
+            tag: "",
+            doc: "resume from the newest checkpoint under this directory \
+                  (math knobs must match; excluded from cache keys)",
+            example: "my-ckpts",
+            flag: false,
+            in_key: false,
+            get: |c| c.resume.clone(),
+            set: |c, v| {
+                c.resume = v.to_string();
+                Ok(())
+            },
+        },
+        Knob {
+            name: "halt-after",
+            tag: "",
+            doc: "stop after this step (kill-and-resume testing; halted \
+                  runs are never cached; excluded from cache keys)",
+            example: "10",
+            flag: false,
+            in_key: false,
+            get: |c| c.halt_after.to_string(),
+            set: |c, v| {
+                c.halt_after = v
+                    .parse()
+                    .map_err(|e| anyhow!("bad value for --halt-after: {e}"))?;
+                Ok(())
+            },
+        },
         parse_knob!("eval-every", "ev", "10", eval_every,
                     "evaluate every this many steps"),
         parse_knob!("eval-batches", "eb", "4", eval_batches,
@@ -299,6 +364,13 @@ impl RunSpec {
     setter!(ortho_interval, "ortho-interval", usize, ortho_interval);
     setter!(topology, "topology", TopologySpec, topology);
     setter!(tau, "tau", u64, overlap_tau);
+    setter!(dropout, "dropout", f64, dropout);
+    setter!(straggler, "straggler", f64, straggler);
+    setter!(fault_seed, "fault-seed", u64, fault_seed);
+    setter!(save_every, "save-every", u64, save_every);
+    setter!(ckpt_dir, "ckpt-dir", String, ckpt_dir);
+    setter!(resume, "resume", String, resume);
+    setter!(halt_after, "halt-after", u64, halt_after);
     setter!(eval_every, "eval-every", u64, eval_every);
     setter!(eval_batches, "eval-batches", usize, eval_batches);
     setter!(seed, "seed", u64, seed);
@@ -335,6 +407,12 @@ impl RunSpec {
         let mut cfg = self.cfg;
         if !self.explicit.contains("lr") {
             cfg.lr = default_lr(&cfg.model, cfg.method);
+        }
+        // a resumed run that keeps checkpointing should keep writing to
+        // the directory it resumed from unless told otherwise — the
+        // default "ckpts" would silently fork the checkpoint history
+        if !cfg.resume.is_empty() && !self.explicit.contains("ckpt-dir") {
+            cfg.ckpt_dir = cfg.resume.clone();
         }
         if cfg.method.is_local_update() {
             let (eta, mu) = tuned_outer(cfg.method, cfg.workers);
@@ -531,6 +609,54 @@ mod tests {
         assert_eq!(back.lr, cfg.lr);
         assert_eq!(back.outer_lr, cfg.outer_lr);
         assert_eq!(back.parallel, cfg.parallel);
+    }
+
+    #[test]
+    fn ckpt_knobs_stay_out_of_the_cache_key() {
+        // save-every/ckpt-dir/resume/halt-after cannot affect the math
+        // a run produces, so two configs differing only there must share
+        // a cache entry; the fault knobs DO move the math and the key
+        let base = RunSpec::new("nano", Method::Muloco).build().unwrap();
+        let ckpt = RunSpec::new("nano", Method::Muloco)
+            .save_every(10)
+            .ckpt_dir("elsewhere".to_string())
+            .resume("elsewhere".to_string())
+            .halt_after(5)
+            .build()
+            .unwrap();
+        assert_eq!(cache_key(&base), cache_key(&ckpt));
+        let faulty = RunSpec::new("nano", Method::Muloco)
+            .dropout(0.25)
+            .build()
+            .unwrap();
+        assert_ne!(cache_key(&base), cache_key(&faulty));
+        let seeded = RunSpec::new("nano", Method::Muloco)
+            .dropout(0.25)
+            .fault_seed(9)
+            .build()
+            .unwrap();
+        assert_ne!(cache_key(&faulty), cache_key(&seeded));
+    }
+
+    #[test]
+    fn resume_defaults_ckpt_dir_to_the_resume_directory() {
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .resume("my-run".to_string())
+            .save_every(10)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.ckpt_dir, "my-run",
+                   "post-resume checkpoints must not fork into the default dir");
+        // an explicit --ckpt-dir still wins
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .resume("my-run".to_string())
+            .ckpt_dir("fresh".to_string())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.ckpt_dir, "fresh");
+        // no resume: the default stands
+        let cfg = RunSpec::new("nano", Method::Muloco).build().unwrap();
+        assert_eq!(cfg.ckpt_dir, "ckpts");
     }
 
     #[test]

@@ -37,9 +37,12 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::thread;
 
+use anyhow::{bail, Result};
+
 use super::config::TrainConfig;
 use super::outer::NesterovOuter;
 use super::worker::Worker;
+use crate::ckpt::PendingSnap;
 use crate::comm::{CollectiveOp, CommStats, OpKind, Topology, TopologySpec};
 use crate::compress::{Compression, Compressor};
 use crate::runtime::{Manifest, Tensors};
@@ -169,22 +172,29 @@ struct PendingSync {
 /// Pure collective reduce of one boundary's tensors (ti ascending):
 /// the background half of an overlapped sync.  Identical math on a
 /// background thread or inline, so overlap preserves determinism.
+/// `ranks` are the contributors' global worker ranks (`0..k_total`
+/// when every worker participated); per-rank byte attribution is
+/// remapped onto them, which is a no-op for the identity map.
 fn reduce_tensors(
     deltas: Vec<(usize, Vec<Vec<f32>>)>,
     metas: Vec<SyncTensorMeta>,
     compressor: Arc<dyn Compressor + Send + Sync>,
     topology: Arc<dyn Topology>,
     kind: OpKind,
+    ranks: Arc<Vec<usize>>,
+    k_total: usize,
 ) -> Vec<ReducedTensor> {
     let op = CollectiveOp::new(compressor.as_ref(), kind);
     deltas
         .into_iter()
         .map(|(ti, mut bufs)| {
             let meta = metas[ti];
-            let k = bufs.len();
+            let p = bufs.len();
             let trace = topology.reduce_mean(&mut bufs, &op, meta.rows, meta.cols);
             let psi = bufs.into_iter().next().expect("at least one worker");
-            ReducedTensor { ti, psi, stats: trace.stats_for(k) }
+            let mut stats = trace.stats_for(p);
+            stats.remap_ranks(&ranks, k_total);
+            ReducedTensor { ti, psi, stats }
         })
         .collect()
 }
@@ -272,6 +282,86 @@ impl SyncEngine {
         self.outer.momentum_norm(idx)
     }
 
+    /// Overlapped boundaries currently awaiting application.
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Checkpoint half of the engine's mutable state: the outer
+    /// momentum slots plus every pending overlapped boundary.  In-flight
+    /// background reduces are joined first — the reduce is a pure
+    /// function of its captured deltas, so joining early changes only
+    /// *when* the wall clock pays, never the math — and parked back as
+    /// `Ready`, so training continues unchanged after the save.
+    pub fn export_state(&mut self) -> (Tensors, Vec<PendingSnap>) {
+        let drained: Vec<PendingSync> = self.pending.drain(..).collect();
+        let mut snaps = Vec::with_capacity(drained.len());
+        let mut kept = Vec::with_capacity(drained.len());
+        for p in drained {
+            let ready = match p.payload {
+                PendingPayload::Ready(r) => r,
+                PendingPayload::InFlight(h) => {
+                    h.join().expect("overlapped reduce thread panicked")
+                }
+            };
+            snaps.push(PendingSnap {
+                apply_step: p.apply_step,
+                tensors: ready
+                    .iter()
+                    .map(|rt| (rt.ti, rt.psi.clone(), rt.stats.clone()))
+                    .collect(),
+            });
+            kept.push(PendingSync {
+                apply_step: p.apply_step,
+                payload: PendingPayload::Ready(ready),
+            });
+        }
+        self.pending = kept;
+        (self.outer.slots().to_vec(), snaps)
+    }
+
+    /// Resume half: restore the outer momentum and the pending
+    /// overlapped boundaries captured by
+    /// [`export_state`](SyncEngine::export_state).  Geometry is
+    /// validated against the engine's tensor metas — a checkpoint for a
+    /// different model fails loudly instead of corrupting the outer
+    /// recursion.
+    pub fn restore_state(
+        &mut self,
+        outer_u: Tensors,
+        pending: Vec<PendingSnap>,
+    ) -> Result<()> {
+        self.outer.set_slots(outer_u)?;
+        let mut restored = Vec::with_capacity(pending.len());
+        for p in pending {
+            let mut reduced = Vec::with_capacity(p.tensors.len());
+            for (ti, psi, stats) in p.tensors {
+                let Some(meta) = self.metas.get(ti) else {
+                    bail!(
+                        "pending boundary references tensor {ti}, engine has \
+                         only {}",
+                        self.metas.len()
+                    );
+                };
+                if psi.len() != meta.size {
+                    bail!(
+                        "pending pseudogradient for tensor {ti} has {} elems, \
+                         engine expects {}",
+                        psi.len(),
+                        meta.size
+                    );
+                }
+                reduced.push(ReducedTensor { ti, psi, stats });
+            }
+            restored.push(PendingSync {
+                apply_step: p.apply_step,
+                payload: PendingPayload::Ready(reduced),
+            });
+        }
+        self.pending = restored;
+        Ok(())
+    }
+
     /// Run the sync boundary for `step`: applies any overlapped
     /// boundary scheduled for this step, then launches (tau > 0) or
     /// executes (tau = 0) the partitions due now.  The blocking path is
@@ -284,6 +374,26 @@ impl SyncEngine {
         comm: &mut CommStats,
         parallel: bool,
     ) {
+        self.sync_step_masked(step, theta, workers, comm, parallel, None)
+    }
+
+    /// [`sync_step`](SyncEngine::sync_step) with an elastic
+    /// participation mask (`FaultPlan::mask`): masked-out workers
+    /// contribute no deltas — the collective reduces over the survivors
+    /// only, so the pseudogradient mean renormalizes to their count —
+    /// but every worker (dropped ones included) receives the boundary
+    /// broadcast, which is how a dropped worker rejoins from the
+    /// freshest global snapshot.  `None` is the zero-fault fast path,
+    /// bit-identical to the unmasked engine.
+    pub fn sync_step_masked(
+        &mut self,
+        step: u64,
+        theta: &mut Tensors,
+        workers: &mut [Worker<'_>],
+        comm: &mut CommStats,
+        parallel: bool,
+        active: Option<&[bool]>,
+    ) {
         // apply overlapped boundaries that matured, in launch order,
         // before any new deltas are captured at this step
         self.apply_matured(step, theta, workers, comm);
@@ -292,11 +402,25 @@ impl SyncEngine {
         if due.is_empty() || workers.is_empty() {
             return;
         }
-        let deltas = self.collect_deltas(&due, theta, workers, parallel);
+        let k = workers.len();
+        let ranks: Vec<usize> = match active {
+            Some(m) => m
+                .iter()
+                .enumerate()
+                .filter(|(_, &a)| a)
+                .map(|(i, _)| i)
+                .collect(),
+            None => (0..k).collect(),
+        };
+        if ranks.is_empty() {
+            return; // nobody to reduce over (unreachable via FaultPlan)
+        }
+        let deltas = self.collect_deltas(&due, theta, workers, parallel, active);
         if self.overlap_tau == 0 {
-            self.blocking_reduce(&due, deltas, theta, workers, comm, parallel);
+            self.blocking_reduce(&due, deltas, theta, workers, comm, parallel,
+                                 &ranks);
         } else {
-            self.launch_overlapped(step, deltas, parallel);
+            self.launch_overlapped(step, deltas, parallel, ranks, k);
         }
     }
 
@@ -310,26 +434,36 @@ impl SyncEngine {
         self.apply_matured(u64::MAX, theta, workers, comm);
     }
 
-    /// phase 1 — per-worker deltas + error feedback, transposed to
-    /// tensor index -> K contributions in worker order (so every
-    /// collective reduces identically to the sequential path).
+    /// phase 1 — per-worker deltas + error feedback for the *active*
+    /// workers, transposed to tensor index -> P contributions in
+    /// ascending worker order (so every collective reduces identically
+    /// to the sequential path).  Masked-out workers are skipped
+    /// entirely: no delta, no error-feedback fold.
     fn collect_deltas(
         &self,
         due: &[usize],
         theta: &Tensors,
         workers: &mut [Worker<'_>],
         parallel: bool,
+        active: Option<&[bool]>,
     ) -> BTreeMap<usize, Vec<Vec<f32>>> {
-        let k = workers.len();
         let apply_ef = self.apply_ef;
         let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
         let metas: &[SyncTensorMeta] = &self.metas;
         let theta_ref: &Tensors = theta;
 
-        let by_worker: Vec<Vec<Vec<f32>>> = if parallel && k > 1 {
+        let participants: Vec<&mut Worker<'_>> = workers
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| active.map(|m| m[*i]).unwrap_or(true))
+            .map(|(_, w)| w)
+            .collect();
+        let p = participants.len();
+
+        let by_worker: Vec<Vec<Vec<f32>>> = if parallel && p > 1 {
             thread::scope(|s| {
-                let handles: Vec<_> = workers
-                    .iter_mut()
+                let handles: Vec<_> = participants
+                    .into_iter()
                     .map(|w| {
                         s.spawn(move || {
                             w.local_deltas(theta_ref, due, metas, apply_ef,
@@ -343,15 +477,15 @@ impl SyncEngine {
                     .collect()
             })
         } else {
-            workers
-                .iter_mut()
+            participants
+                .into_iter()
                 .map(|w| w.local_deltas(theta_ref, due, metas, apply_ef,
                                         compressor))
                 .collect()
         };
 
         let mut deltas: BTreeMap<usize, Vec<Vec<f32>>> =
-            due.iter().map(|&ti| (ti, Vec::with_capacity(k))).collect();
+            due.iter().map(|&ti| (ti, Vec::with_capacity(p))).collect();
         for wd in by_worker {
             for (&ti, d) in due.iter().zip(wd) {
                 deltas.get_mut(&ti).expect("due tensor").push(d);
@@ -361,7 +495,11 @@ impl SyncEngine {
     }
 
     /// tau = 0: phase 2 (per-tensor collective + outer step) and
-    /// phase 3 (broadcast), inline at the boundary.
+    /// phase 3 (broadcast), inline at the boundary.  `ranks` are the
+    /// contributors' global worker ranks (per-rank stats attribution);
+    /// the broadcast deliberately covers *every* worker — that is the
+    /// rejoin path for workers dropped this window.
+    #[allow(clippy::too_many_arguments)]
     fn blocking_reduce(
         &mut self,
         due: &[usize],
@@ -370,7 +508,9 @@ impl SyncEngine {
         workers: &mut [Worker<'_>],
         comm: &mut CommStats,
         parallel: bool,
+        ranks: &[usize],
     ) {
+        let k_total = workers.len();
         let metas: &[SyncTensorMeta] = &self.metas;
         let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
         let topology: &dyn Topology = self.topology.as_ref();
@@ -394,12 +534,16 @@ impl SyncEngine {
         }
         let reduce = |job: &mut SyncJob<'_>| {
             let meta = metas[job.ti];
-            let k = job.deltas.len();
-            // collective: value semantics + per-hop byte accounting
+            let p = job.deltas.len();
+            // collective: value semantics + per-hop byte accounting.
+            // With an elastic mask only P <= K contributions arrive, so
+            // the mean is already renormalized over the survivors
             let op = CollectiveOp::new(compressor, kind);
             let trace =
                 topology.reduce_mean(&mut job.deltas, &op, meta.rows, meta.cols);
-            job.stats = trace.stats_for(k);
+            let mut stats = trace.stats_for(p);
+            stats.remap_ranks(ranks, k_total);
+            job.stats = stats;
             // outer update with Psi = the reduced delta
             let psi: &[f32] = &job.deltas[0];
             NesterovOuter::step_slot(eta, mu, job.u.as_mut_slice(),
@@ -455,19 +599,23 @@ impl SyncEngine {
         step: u64,
         deltas: BTreeMap<usize, Vec<Vec<f32>>>,
         parallel: bool,
+        ranks: Vec<usize>,
+        k_total: usize,
     ) {
         let deltas: Vec<(usize, Vec<Vec<f32>>)> = deltas.into_iter().collect();
         let metas = self.metas.clone();
         let compressor = self.compressor.clone();
         let topology = self.topology.clone();
         let kind = self.kind;
+        let ranks = Arc::new(ranks);
         let payload = if parallel {
             PendingPayload::InFlight(thread::spawn(move || {
-                reduce_tensors(deltas, metas, compressor, topology, kind)
+                reduce_tensors(deltas, metas, compressor, topology, kind,
+                               ranks, k_total)
             }))
         } else {
             PendingPayload::Ready(reduce_tensors(
-                deltas, metas, compressor, topology, kind))
+                deltas, metas, compressor, topology, kind, ranks, k_total))
         };
         self.pending.push(PendingSync {
             apply_step: step + self.overlap_tau,

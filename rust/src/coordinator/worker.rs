@@ -337,12 +337,17 @@ impl<'c> WorkerPool<'c> {
         })
     }
 
-    /// One inner step on every worker.  With `parallel` and attached
-    /// lanes, each worker's state ping-pongs through its persistent
-    /// executor (channel-based barrier); otherwise the K loops run
-    /// inline — the sequential reference path.  Either way losses are
-    /// reduced in worker-index order, so the mean is bit-identical
-    /// across modes.
+    /// One inner step on every *active* worker.  With `parallel` and
+    /// attached lanes, each active worker's state ping-pongs through
+    /// its persistent executor (channel-based barrier); otherwise the
+    /// loops run inline — the sequential reference path.  Either way
+    /// losses are reduced in worker-index order over the active set, so
+    /// the mean is bit-identical across modes.
+    ///
+    /// `active` is the fault mask (`FaultPlan::mask`): `None` — the
+    /// zero-fault fast path — steps everyone and divides by K, exactly
+    /// the pre-elastic arithmetic.  A masked-out worker takes no step,
+    /// consumes no data, and is excluded from the loss mean.
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &mut self,
@@ -352,34 +357,62 @@ impl<'c> WorkerPool<'c> {
         lr: f32,
         wd: f32,
         parallel: bool,
+        active: Option<&[bool]>,
     ) -> Result<f64> {
         let k = self.workers.len();
+        if let Some(m) = active {
+            debug_assert_eq!(m.len(), k, "fault mask must cover every worker");
+        }
+        let is_active = |i: usize| active.map(|m| m[i]).unwrap_or(true);
+        let n_active = (0..k).filter(|&i| is_active(i)).count();
+        if n_active == 0 {
+            // unreachable through FaultPlan (quorum of one), but direct
+            // API misuse must not divide by zero
+            anyhow::bail!("worker pool stepped with no active workers");
+        }
         if parallel && k > 1 && !self.lanes.is_empty() {
             let inner = self.inner;
             let workers = std::mem::take(&mut self.workers);
-            for (lane, worker) in self.lanes.iter().zip(workers) {
-                lane.tx
-                    .send(StepJob { worker, sess, inner, batch_seqs, t, lr, wd })
-                    .expect("executor lane disappeared");
+            let mut parked: Vec<Option<Worker<'c>>> =
+                workers.into_iter().map(Some).collect();
+            for (i, lane) in self.lanes.iter().enumerate() {
+                if is_active(i) {
+                    let worker = parked[i].take().expect("worker parked twice");
+                    lane.tx
+                        .send(StepJob { worker, sess, inner, batch_seqs, t, lr, wd })
+                        .expect("executor lane disappeared");
+                }
             }
-            // the barrier: collect every lane in worker-index order
-            let mut losses = Vec::with_capacity(k);
-            for lane in &self.lanes {
-                let (worker, loss) =
-                    lane.rx.recv().expect("executor lane disappeared");
-                self.workers.push(worker);
-                losses.push(loss);
+            // the barrier: collect every active lane in worker-index
+            // order; inactive workers never left the main thread.  All
+            // worker state is reassembled before any loss error
+            // propagates, so the pool stays intact on the abort path
+            let mut losses = Vec::with_capacity(n_active);
+            for i in 0..k {
+                if is_active(i) {
+                    let (worker, loss) =
+                        self.lanes[i].rx.recv().expect("executor lane disappeared");
+                    parked[i] = Some(worker);
+                    losses.push(loss);
+                }
             }
+            self.workers = parked
+                .into_iter()
+                .map(|w| w.expect("worker lost at the step barrier"))
+                .collect();
             let mut mean = 0.0;
             for loss in losses {
-                mean += loss? / k as f64;
+                mean += loss? / n_active as f64;
             }
             Ok(mean)
         } else {
             let inner = self.inner;
             let mut mean = 0.0;
-            for w in self.workers.iter_mut() {
-                mean += w.inner_step(sess, inner, batch_seqs, t, lr, wd)? / k as f64;
+            for (i, w) in self.workers.iter_mut().enumerate() {
+                if is_active(i) {
+                    mean +=
+                        w.inner_step(sess, inner, batch_seqs, t, lr, wd)? / n_active as f64;
+                }
             }
             Ok(mean)
         }

@@ -152,6 +152,31 @@ impl<'a> Shard<'a> {
         let rank = self.rng.categorical(&c.emit_cdf[self.state]);
         c.perm[self.state][rank] as i32
     }
+
+    /// The stream's serializable cursor: (raw RNG state, latent Markov
+    /// state).  Together with the corpus seed this pins the stream's
+    /// entire future — the piece of the data pipeline a checkpoint must
+    /// carry for a resumed run to consume the exact same tokens.
+    pub fn cursor(&self) -> (u64, usize) {
+        (self.rng.raw_state(), self.state)
+    }
+
+    /// Reposition the stream at a cursor captured by
+    /// [`cursor`](Shard::cursor).  Rejects an out-of-range Markov state
+    /// (e.g. a checkpoint written for a different corpus configuration)
+    /// instead of sampling from a nonexistent CDF.
+    pub fn seek(&mut self, rng_state: u64, state: usize) -> anyhow::Result<()> {
+        if state >= self.corpus.n_states {
+            anyhow::bail!(
+                "shard cursor state {state} out of range (corpus has {} \
+                 latent states)",
+                self.corpus.n_states
+            );
+        }
+        self.rng = Rng::from_raw(rng_state);
+        self.state = state;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -182,6 +207,20 @@ mod tests {
         for tok in c.shard(0).next_batch(4, 128) {
             assert!((0..100).contains(&tok));
         }
+    }
+
+    #[test]
+    fn cursor_round_trips_mid_stream() {
+        let c = Corpus::new(256, 11);
+        let mut a = c.shard(2);
+        a.next_batch(3, 50); // advance mid-stream
+        let (rng, state) = a.cursor();
+        let mut b = c.shard(2);
+        b.seek(rng, state).unwrap();
+        assert_eq!(a.next_batch(2, 64), b.next_batch(2, 64));
+        // out-of-range markov state fails loudly
+        let mut bad = c.shard(0);
+        assert!(bad.seek(rng, 10_000).is_err());
     }
 
     #[test]

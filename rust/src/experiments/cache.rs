@@ -3,6 +3,10 @@
 //!
 //! Key = a canonical string of the full TrainConfig; value = the run's
 //! summary + curves, serialized with the in-house JSON substrate.
+//! Entries carry a format version ([`CACHE_FORMAT`]); readers treat any
+//! other version as a miss, so a schema change (new summary fields)
+//! invalidates stale entries once instead of surfacing partly-default
+//! summaries.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -15,9 +19,14 @@ use anyhow::Result;
 /// `RunCache::put`).
 static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Cache entry schema version.  2 = per-rank comm vectors + fault
+/// counters added (PR 5); version-1 entries regenerate on first use.
+pub const CACHE_FORMAT: u64 = 2;
+
 use crate::coordinator::{train, RunResult, TrainConfig};
 use crate::runtime::Session;
-use crate::util::json::Json;
+use crate::util::json::{curve_from_json, curve_to_json, u64s_from_json,
+                        u64s_to_json, Json};
 
 /// The persisted slice of a RunResult.
 #[derive(Clone, Debug)]
@@ -30,6 +39,14 @@ pub struct RunSummary {
     /// largest per-worker volume of a single sync event (streaming's
     /// peak-bandwidth claim, measured)
     pub peak_event_bytes: u64,
+    /// asymmetric per-rank comm ledger (empty when nothing was traced
+    /// with rank attribution) — cached so fig9's hierarchical inset
+    /// renders without retraining
+    pub sent_per_rank: Vec<u64>,
+    pub recv_per_rank: Vec<u64>,
+    /// elastic-training accounting (zero for fault-free runs)
+    pub drop_events: u64,
+    pub stall_steps: u64,
     pub eval_curve: Vec<(u64, f64)>,
     pub train_curve: Vec<(u64, f64)>,
     pub wall_secs: f64,
@@ -44,6 +61,10 @@ impl RunSummary {
             tokens: r.tokens,
             bytes_per_worker: r.comm.bytes_per_worker as u64,
             peak_event_bytes: r.comm.peak_event_bytes as u64,
+            sent_per_rank: r.comm.sent_per_rank.clone(),
+            recv_per_rank: r.comm.recv_per_rank.clone(),
+            drop_events: r.faults.dropped,
+            stall_steps: r.faults.stall_steps,
             eval_curve: r.eval_curve.clone(),
             train_curve: r.train_curve.clone(),
             wall_secs: r.wall_secs,
@@ -51,11 +72,6 @@ impl RunSummary {
     }
 
     fn to_json(&self) -> Json {
-        let curve = |c: &[(u64, f64)]| {
-            Json::Arr(c.iter()
-                .map(|(s, l)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*l)]))
-                .collect())
-        };
         let mut m = BTreeMap::new();
         m.insert("smoothed_final".into(), Json::Num(self.smoothed_final));
         m.insert("raw_final".into(), Json::Num(self.raw_final));
@@ -64,36 +80,30 @@ impl RunSummary {
         m.insert("bytes_per_worker".into(), Json::Num(self.bytes_per_worker as f64));
         m.insert("peak_event_bytes".into(),
                  Json::Num(self.peak_event_bytes as f64));
-        m.insert("eval_curve".into(), curve(&self.eval_curve));
-        m.insert("train_curve".into(), curve(&self.train_curve));
+        m.insert("sent_per_rank".into(), u64s_to_json(&self.sent_per_rank));
+        m.insert("recv_per_rank".into(), u64s_to_json(&self.recv_per_rank));
+        m.insert("drop_events".into(), Json::Num(self.drop_events as f64));
+        m.insert("stall_steps".into(), Json::Num(self.stall_steps as f64));
+        m.insert("eval_curve".into(), curve_to_json(&self.eval_curve));
+        m.insert("train_curve".into(), curve_to_json(&self.train_curve));
         m.insert("wall_secs".into(), Json::Num(self.wall_secs));
         Json::Obj(m)
     }
 
     fn from_json(v: &Json) -> Result<RunSummary> {
-        let curve = |key: &str| -> Result<Vec<(u64, f64)>> {
-            v.get(key)?
-                .as_arr()?
-                .iter()
-                .map(|p| {
-                    let p = p.as_arr()?;
-                    Ok((p[0].as_f64()? as u64, p[1].as_f64()?))
-                })
-                .collect()
-        };
         Ok(RunSummary {
             smoothed_final: v.get("smoothed_final")?.as_f64()?,
             raw_final: v.get("raw_final")?.as_f64()?,
             final_acc: v.get("final_acc")?.as_f64()?,
             tokens: v.get("tokens")?.as_f64()? as u64,
             bytes_per_worker: v.get("bytes_per_worker")?.as_f64()? as u64,
-            // absent in cache files written before the comm refactor
-            peak_event_bytes: v
-                .get("peak_event_bytes")
-                .and_then(|x| x.as_f64())
-                .unwrap_or(0.0) as u64,
-            eval_curve: curve("eval_curve")?,
-            train_curve: curve("train_curve")?,
+            peak_event_bytes: v.get("peak_event_bytes")?.as_f64()? as u64,
+            sent_per_rank: u64s_from_json(v.get("sent_per_rank")?)?,
+            recv_per_rank: u64s_from_json(v.get("recv_per_rank")?)?,
+            drop_events: v.get("drop_events")?.as_f64()? as u64,
+            stall_steps: v.get("stall_steps")?.as_f64()? as u64,
+            eval_curve: curve_from_json(v.get("eval_curve")?)?,
+            train_curve: curve_from_json(v.get("train_curve")?)?,
             wall_secs: v.get("wall_secs")?.as_f64()?,
         })
     }
@@ -147,6 +157,13 @@ impl RunCache {
         let path = self.path_for(&key);
         let text = fs::read_to_string(path).ok()?;
         let v = Json::parse(&text).ok()?;
+        // schema gate: entries written under another format version are
+        // misses (they lack fields this build expects), regenerated on
+        // first use
+        let format = v.get("format").ok().and_then(|x| x.as_f64().ok())? as u64;
+        if format != CACHE_FORMAT {
+            return None;
+        }
         if v.get("key").ok()?.as_str().ok()? != key {
             return None; // hash collision — treat as miss
         }
@@ -157,6 +174,7 @@ impl RunCache {
                -> Result<()> {
         let key = config_key(cfg) + &backend_suffix(platform);
         let mut m = BTreeMap::new();
+        m.insert("format".into(), Json::Num(CACHE_FORMAT as f64));
         m.insert("key".into(), Json::Str(key.clone()));
         m.insert("run".into(), run.to_json());
         // write-to-temp + rename: `experiment all --jobs N` can race two
@@ -176,8 +194,15 @@ impl RunCache {
 
     /// Train (or fetch) a run.  The cache key includes the session's
     /// backend, so native and PJRT results never masquerade for each
-    /// other.
+    /// other.  Halted runs (`halt_after != 0`) bypass the cache in both
+    /// directions: their truncated results must never stand in for the
+    /// full run the key describes (the key deliberately excludes
+    /// execution-only knobs like `halt-after`).
     pub fn run(&self, sess: &Session, cfg: &TrainConfig) -> Result<RunSummary> {
+        if cfg.halt_after != 0 {
+            let result = train(sess, cfg)?;
+            return Ok(RunSummary::from_result(&result));
+        }
         let platform = sess.platform();
         if let Some(hit) = self.get(cfg, &platform) {
             return Ok(hit);

@@ -79,7 +79,9 @@ pub fn fig9(ctx: &Ctx) -> Result<Artifact> {
     // --- asymmetric per-rank comm: leaders vs members on a 2-DC
     //     hierarchical MuLoCo run (ROADMAP follow-up from the comm PR).
     //     Flat topologies are symmetric; the hierarchical ledger shows
-    //     leaders carrying the WAN exchange + the DC broadcast.
+    //     leaders carrying the WAN exchange + the DC broadcast.  The
+    //     per-rank vectors ride in the cached RunSummary (cache format
+    //     2), so a cached hierarchical run renders without retraining.
     let hier_cfg = base_spec(ctx, Method::Muloco)
         .workers(4)
         .steps(16)
@@ -89,7 +91,7 @@ pub fn fig9(ctx: &Ctx) -> Result<Artifact> {
         .warmup(2)
         .topology(TopologySpec::Hier { groups: 2 })
         .build()?;
-    let hier = train(&sess, &hier_cfg)?;
+    let hier = ctx.cache.run(&sess, &hier_cfg)?;
     let mut ranks = TypedTable::new(
         "fig9-ranks",
         "Fig 9 inset — per-rank comm, MuLoCo K=4 hier(2 DC)",
@@ -102,8 +104,8 @@ pub fn fig9(ctx: &Ctx) -> Result<Artifact> {
         _ => 1,
     };
     let (leaders, _) = Hierarchical::roles(groups, hier_cfg.workers / groups);
-    for (r, (s, v)) in hier.comm.sent_per_rank.iter()
-        .zip(&hier.comm.recv_per_rank)
+    for (r, (s, v)) in hier.sent_per_rank.iter()
+        .zip(&hier.recv_per_rank)
         .enumerate()
     {
         ranks.row(vec![

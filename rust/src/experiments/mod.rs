@@ -19,6 +19,7 @@ mod fig_analysis;
 mod fig_cbs;
 mod fig_compress;
 mod fig_eval;
+mod fig_faults;
 mod fig_hp;
 mod fig_nsweep;
 mod fig_scaling;
@@ -197,6 +198,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         e("fig24", "raw vs smoothed eval loss (Fig 24, App F)", fig_eval::fig24),
         e("tab3", "final eval + synthetic zero-shot suite (Tabs 3/8)", fig_eval::tab3),
         e("nsweep", "Newton-Schulz depth x ortho-interval sweep (MuonBP)", fig_nsweep::nsweep),
+        e("faults", "elastic workers: loss + wallclock vs dropout rate x K", fig_faults::faults),
     ]
 }
 

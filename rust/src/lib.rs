@@ -14,6 +14,7 @@
 //! paper-vs-measured record.
 
 pub mod analysis;
+pub mod ckpt;
 pub mod collectives;
 pub mod comm;
 pub mod compress;

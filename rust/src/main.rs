@@ -26,6 +26,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use muloco::ckpt;
 use muloco::coordinator::{spec, train, Method, RunSpec};
 use muloco::experiments::{self, Format};
 use muloco::metrics::RunLogger;
@@ -176,32 +177,18 @@ fn num(x: f64) -> Json {
     Json::Num(x)
 }
 
-/// `muloco bench`: per-kernel timings + tokens/sec of a short train,
-/// written to BENCH_native.json — the measured perf trajectory the
-/// ROADMAP's "as fast as the hardware allows" goal is tracked against.
-///
-/// `--compare OLD.json` diffs against a prior record and exits nonzero
-/// when tokens/sec regressed by more than `--tolerance` (default 0.2) —
-/// the CI perf gate.  `--from CUR.json` skips the measurement and diffs
-/// two existing records (what CI does after the artifact upload).
-fn cmd_bench(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "nano");
-    let out = args.get_or("out", "BENCH_native.json");
-    let steps: u64 = args.get_parse("steps", 20)?;
-    let compare = args.get("compare").map(|s| s.to_string());
-    let from = args.get("from").map(|s| s.to_string());
-    let tolerance: f64 = args.get_parse("tolerance", 0.2)?;
-    let artifacts = artifacts_dir(args);
-    args.finish()?;
+/// One model's kernel timings + short-train throughput.
+struct ModelBench {
+    platform: String,
+    param_count: usize,
+    kernels: BTreeMap<String, Json>,
+    tokens_per_sec: f64,
+    wall: f64,
+}
 
-    if let Some(from_path) = from {
-        let current = Json::parse(&fs::read_to_string(&from_path)?)?;
-        let old_path = compare
-            .ok_or_else(|| anyhow::anyhow!("--from needs --compare OLD.json"))?;
-        return bench_compare(&current, &old_path, tolerance);
-    }
-
-    let sess = Session::load(&artifacts.join(&model))?;
+fn bench_model(artifacts: &std::path::Path, model: &str, steps: u64)
+               -> Result<ModelBench> {
+    let sess = Session::load(&artifacts.join(model))?;
     let platform = sess.platform();
     let cfg_m = sess.manifest.config.clone();
     println!("bench: {model} on {platform} ({} params)", cfg_m.param_count);
@@ -241,6 +228,157 @@ fn cmd_bench(args: &Args) -> Result<()> {
         fwd * 1e6, muon * 1e6, adamw * 1e6, eval * 1e6
     );
 
+    // --- end-to-end tokens/sec -----------------------------------------
+    let cfg = RunSpec::new(model, Method::Muloco)
+        .batch(32)
+        .workers(4)
+        .steps(steps)
+        .sync_interval(5)
+        .eval_every(steps)
+        .eval_batches(1)
+        .build()?;
+    let t0 = Instant::now();
+    let r = train(&sess, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens_per_sec = r.tokens as f64 / wall;
+    println!(
+        "  train: {} tokens in {wall:.2}s -> {tokens_per_sec:.0} tokens/s \
+         (MuLoCo K=4, {steps} steps)",
+        r.tokens
+    );
+    Ok(ModelBench {
+        platform,
+        param_count: cfg_m.param_count,
+        kernels,
+        tokens_per_sec,
+        wall,
+    })
+}
+
+/// Checkpoint save/load throughput on one model's full state (global +
+/// 2 worker replicas + Muon state), measured through the real `ckpt`
+/// path: serialize, CRC, atomic publish; then re-read with full
+/// verification.
+fn bench_ckpt(artifacts: &std::path::Path, model: &str) -> Result<Json> {
+    let sess = Session::load(&artifacts.join(model))?;
+    let theta = sess.init_params(0)?;
+    let outer_u: Vec<Vec<f32>> =
+        theta.iter().map(|t| vec![0.0f32; t.len()]).collect();
+    let workers = (0..2u64)
+        .map(|w| ckpt::WorkerSnap {
+            params: theta.clone(),
+            opt_state: sess.zero_muon_state(),
+            ef: vec![None; theta.len()],
+            shard_rng: 0x1234_5678 + w,
+            shard_state: 0,
+        })
+        .collect();
+    let state = ckpt::TrainState {
+        step: 1,
+        theta: theta.clone(),
+        outer_u,
+        workers,
+        ..Default::default()
+    };
+    let cfg = RunSpec::new(model, Method::Muloco).workers(2).build()?;
+    let key = spec::cache_key(&cfg);
+    let platform = sess.platform();
+    let dir = std::path::PathBuf::from(format!(
+        "BENCH_ckpt.tmp-{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    let save = median_secs(3, || {
+        ckpt::save(&dir, &key, &platform, spec::spec_json(&cfg), &state)
+            .expect("ckpt save");
+    });
+    let step_dir = ckpt::latest(&dir)?;
+    let bytes = fs::metadata(step_dir.join("state.bin"))?.len();
+    let load = median_secs(3, || {
+        let _ = ckpt::load_dir(&step_dir).expect("ckpt load");
+    });
+    fs::remove_dir_all(&dir)?;
+    let save_mbs = bytes as f64 / 1e6 / save;
+    let load_mbs = bytes as f64 / 1e6 / load;
+    println!(
+        "  ckpt ({model}): {:.2} MB  save {:.1}us ({save_mbs:.0} MB/s)  \
+         load {:.1}us ({load_mbs:.0} MB/s)",
+        bytes as f64 / 1e6,
+        save * 1e6,
+        load * 1e6
+    );
+    let mut m = BTreeMap::new();
+    m.insert("model".to_string(), Json::Str(model.to_string()));
+    m.insert("bytes".to_string(), num(bytes as f64));
+    m.insert("save_us".to_string(), num(save * 1e6));
+    m.insert("load_us".to_string(), num(load * 1e6));
+    m.insert("save_mb_per_s".to_string(), num(save_mbs));
+    m.insert("load_mb_per_s".to_string(), num(load_mbs));
+    Ok(Json::Obj(m))
+}
+
+/// `muloco bench`: per-kernel timings + tokens/sec of a short train for
+/// every rung of `--models` (default nano,micro,tiny), GEMM headline
+/// numbers and checkpoint save/load throughput, written to
+/// BENCH_native.json — the measured perf trajectory the ROADMAP's "as
+/// fast as the hardware allows" goal is tracked against.  The first
+/// model keeps the legacy top-level fields so records compare across
+/// versions.
+///
+/// `--compare OLD.json` diffs against a prior record and exits nonzero
+/// when tokens/sec regressed by more than `--tolerance` (default 0.2) —
+/// the CI perf gate.  `--from CUR.json` skips the measurement and diffs
+/// two existing records (what CI does after the artifact upload).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let model = args.get("model").map(|s| s.to_string());
+    let models_arg = args.get("models").map(|s| s.to_string());
+    let out = args.get_or("out", "BENCH_native.json");
+    let steps: u64 = args.get_parse("steps", 20)?;
+    let compare = args.get("compare").map(|s| s.to_string());
+    let from = args.get("from").map(|s| s.to_string());
+    let tolerance: f64 = args.get_parse("tolerance", 0.2)?;
+    let artifacts = artifacts_dir(args);
+    args.finish()?;
+
+    if let Some(from_path) = from {
+        let current = Json::parse(&fs::read_to_string(&from_path)?)?;
+        let old_path = compare
+            .ok_or_else(|| anyhow::anyhow!("--from needs --compare OLD.json"))?;
+        return bench_compare(&current, &old_path, tolerance);
+    }
+
+    // `--model M` narrows to one rung (the historical behavior);
+    // otherwise `--models a,b,c` or the default small-end ladder
+    let models: Vec<String> = match (model, models_arg) {
+        (Some(m), _) => vec![m],
+        (None, Some(list)) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        (None, None) => vec!["nano".into(), "micro".into(), "tiny".into()],
+    };
+    if models.is_empty() {
+        bail!("--models needs at least one config name");
+    }
+
+    let mut ladder_rows = Vec::new();
+    let mut primary: Option<ModelBench> = None;
+    for m in &models {
+        let b = bench_model(&artifacts, m, steps)?;
+        let mut row = BTreeMap::new();
+        row.insert("model".to_string(), Json::Str(m.clone()));
+        row.insert("param_count".to_string(), num(b.param_count as f64));
+        row.insert("tokens_per_sec".to_string(), num(b.tokens_per_sec));
+        row.insert("train_wall_secs".to_string(), num(b.wall));
+        row.insert("kernels".to_string(), Json::Obj(b.kernels.clone()));
+        ladder_rows.push(Json::Obj(row));
+        if primary.is_none() {
+            primary = Some(b);
+        }
+    }
+    let primary = primary.expect("at least one model");
+
     // --- blocked vs naive GEMM (the perf headline; one shared
     //     definition with benches/microbench.rs) ----------------------
     let mut gemm_rows = Vec::new();
@@ -262,34 +400,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         gemm_rows.push(Json::Obj(row));
     }
 
-    // --- end-to-end tokens/sec -----------------------------------------
-    let cfg = RunSpec::new(&model, Method::Muloco)
-        .batch(32)
-        .workers(4)
-        .steps(steps)
-        .sync_interval(5)
-        .eval_every(steps)
-        .eval_batches(1)
-        .build()?;
-    let t0 = Instant::now();
-    let r = train(&sess, &cfg)?;
-    let wall = t0.elapsed().as_secs_f64();
-    let tokens_per_sec = r.tokens as f64 / wall;
-    println!(
-        "  train: {} tokens in {wall:.2}s -> {tokens_per_sec:.0} tokens/s \
-         (MuLoCo K=4, {steps} steps)",
-        r.tokens
-    );
+    // --- checkpoint save/load throughput --------------------------------
+    let ckpt_section = bench_ckpt(&artifacts, &models[0])?;
 
     let mut top = BTreeMap::new();
-    top.insert("backend".to_string(), Json::Str(platform));
-    top.insert("model".to_string(), Json::Str(model.clone()));
-    top.insert("param_count".to_string(), num(cfg_m.param_count as f64));
-    top.insert("tokens_per_sec".to_string(), num(tokens_per_sec));
+    top.insert("backend".to_string(), Json::Str(primary.platform.clone()));
+    top.insert("model".to_string(), Json::Str(models[0].clone()));
+    top.insert("param_count".to_string(), num(primary.param_count as f64));
+    top.insert("tokens_per_sec".to_string(), num(primary.tokens_per_sec));
     top.insert("train_steps".to_string(), num(steps as f64));
-    top.insert("train_wall_secs".to_string(), num(wall));
-    top.insert("kernels".to_string(), Json::Obj(kernels));
+    top.insert("train_wall_secs".to_string(), num(primary.wall));
+    top.insert("kernels".to_string(), Json::Obj(primary.kernels));
     top.insert("gemm".to_string(), Json::Arr(gemm_rows));
+    top.insert("ladder".to_string(), Json::Arr(ladder_rows));
+    top.insert("ckpt".to_string(), ckpt_section);
     let doc = Json::Obj(top);
     fs::write(&out, doc.to_string())?;
     println!("  wrote {out}");
@@ -363,7 +487,8 @@ USAGE:
                [--dump-spec out.json]   # save the resolved spec file
   muloco experiment <id|all> [--preset fast|full] [--jobs N]
                [--format text|json]
-  muloco bench [--model M] [--steps N] [--out BENCH_native.json]
+  muloco bench [--models nano,micro,tiny | --model M] [--steps N]
+               [--out BENCH_native.json]
                [--compare OLD.json] [--tolerance 0.2]
                [--from CUR.json]        # diff two records, no re-measure
   muloco info --model M

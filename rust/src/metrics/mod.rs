@@ -71,6 +71,7 @@ mod tests {
             raw_final: 2.5,
             final_acc: 0.3,
             comm: CommStats::default(),
+            faults: Default::default(),
             exec: ExecStats::default(),
             wall_secs: 1.0,
             tokens: 1000,

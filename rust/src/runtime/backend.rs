@@ -71,4 +71,31 @@ pub trait Backend: Send + Sync {
 
     /// Eval loss + next-token accuracy on one microbatch.
     fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)>;
+
+    /// Opaque backend-internal state a checkpoint must carry across a
+    /// process restart.  The native and PJRT backends are stateless
+    /// (all optimizer/model state flows through the call arguments), so
+    /// the default is the empty blob; a future backend with persistent
+    /// device buffers overrides both halves.  Interior mutability keeps
+    /// the `&self` convention shared by every other trait method.
+    fn export_state(&self) -> Result<Vec<u8>> {
+        Ok(Vec::new())
+    }
+
+    /// Restore a blob produced by [`export_state`](Backend::export_state).
+    /// Stateless backends accept only the empty blob — resuming a
+    /// checkpoint that carries backend state onto a backend that cannot
+    /// hold it must fail, not silently drop state.
+    fn import_state(&self, blob: &[u8]) -> Result<()> {
+        if blob.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "backend {:?} is stateless but the checkpoint carries {} \
+                 bytes of backend state",
+                self.platform(),
+                blob.len()
+            )
+        }
+    }
 }

@@ -240,6 +240,17 @@ impl Session {
         Ok(out)
     }
 
+    /// Backend-internal state for a checkpoint (empty for the stateless
+    /// native/PJRT backends; see `Backend::export_state`).
+    pub fn export_backend_state(&self) -> Result<Vec<u8>> {
+        self.backend.export_state()
+    }
+
+    /// Restore backend-internal state from a checkpoint blob.
+    pub fn import_backend_state(&self, blob: &[u8]) -> Result<()> {
+        self.backend.import_state(blob)
+    }
+
     /// Eval loss + next-token accuracy on one microbatch.
     pub fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
         let t0 = Instant::now();

@@ -107,6 +107,42 @@ impl Json {
     }
 }
 
+/// Serialize a (step, value) curve as `[[step, value], ...]` — the one
+/// curve encoding shared by the run cache and the checkpoint manifest.
+pub fn curve_to_json(c: &[(u64, f64)]) -> Json {
+    Json::Arr(
+        c.iter()
+            .map(|(s, v)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*v)]))
+            .collect(),
+    )
+}
+
+/// Parse a curve written by [`curve_to_json`].
+pub fn curve_from_json(v: &Json) -> Result<Vec<(u64, f64)>> {
+    v.as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            if p.len() != 2 {
+                bail!("curve points must be [step, value] pairs");
+            }
+            Ok((p[0].as_f64()? as u64, p[1].as_f64()?))
+        })
+        .collect()
+}
+
+/// Serialize a u64 vector as plain JSON numbers.  Values must stay
+/// below 2^53 (byte/event counters do by orders of magnitude); full-
+/// entropy words (RNG states) use hex strings instead.
+pub fn u64s_to_json(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Parse a u64 vector written by [`u64s_to_json`].
+pub fn u64s_from_json(v: &Json) -> Result<Vec<u64>> {
+    v.as_arr()?.iter().map(|x| Ok(x.as_f64()? as u64)).collect()
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -315,6 +351,22 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("[1] x").is_err());
+    }
+
+    #[test]
+    fn curve_and_u64_helpers_round_trip() {
+        let curve = vec![(30u64, 3.125), (60, 2.0), (90, f64::MIN_POSITIVE)];
+        let back =
+            curve_from_json(&Json::parse(&curve_to_json(&curve).to_string())
+                .unwrap())
+            .unwrap();
+        assert_eq!(curve, back);
+        let v = vec![0u64, 7, 1 << 40];
+        let back = u64s_from_json(&Json::parse(&u64s_to_json(&v).to_string())
+            .unwrap())
+            .unwrap();
+        assert_eq!(v, back);
+        assert!(curve_from_json(&Json::parse("[[1,2,3]]").unwrap()).is_err());
     }
 
     #[test]

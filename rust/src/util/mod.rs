@@ -131,6 +131,30 @@ pub fn median_secs<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     median(&times)
 }
 
+/// CRC-32 (IEEE 802.3, poly 0xEDB88320), table-driven.  Integrity
+/// check for checkpoint pages (`ckpt::format`): every page of
+/// `state.bin` stores its CRC in the manifest and the reader refuses
+/// corrupted bytes instead of deserializing garbage.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
 /// Median (copies + sorts).
 pub fn median(xs: &[f64]) -> f64 {
     let mut v: Vec<f64> = xs.to_vec();
@@ -193,6 +217,15 @@ mod tests {
         for (i, v) in d.iter().enumerate() {
             assert_eq!(*v, a[i] - b[i], "sub at {i}");
         }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the classic check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+        // sensitive to single-bit flips
+        assert_ne!(crc32(b"muloco"), crc32(b"mulocp"));
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! The fault-tolerance subsystem's contract, end to end:
+//!
+//! * **bit-for-bit resume** — killing a run at any sync boundary
+//!   (`--halt-after`, the deterministic crash stand-in) and resuming
+//!   from the durable checkpoint reproduces the uninterrupted run's
+//!   curves, comm accounting, fault ledger, token count and final
+//!   parameters exactly — sequential and parallel, blocking and
+//!   overlapped (`tau > 0`, with boundaries in flight at the save);
+//! * **corruption safety** — truncated pages, flipped bits, format
+//!   version drift and math-knob drift all fail with actionable
+//!   errors, never garbage state;
+//! * **elastic determinism** — a seeded `FaultPlan` dropout run is
+//!   identical across repeats and across parallel/sequential modes,
+//!   its accounting matches the pure schedule, and the pseudogradient
+//!   mean renormalizes over the surviving participants.
+
+use std::fs;
+use std::path::PathBuf;
+
+use muloco::ckpt;
+use muloco::compress::{Compression, ErrorFeedback};
+use muloco::collectives::CommStats;
+use muloco::coordinator::{train, FaultPlan, Method, NesterovOuter, RunResult,
+                          RunSpec, SyncEngine, SyncPlan, SyncTensorMeta,
+                          Worker};
+use muloco::data::Corpus;
+use muloco::runtime::Session;
+
+fn sess() -> Session {
+    Session::load(std::path::Path::new("artifacts/nano")).expect("session")
+}
+
+/// A 12-step K=4 nano run with boundaries at 4, 8, 12.
+fn base(tau: u64, parallel: bool) -> RunSpec {
+    RunSpec::new("nano", Method::Muloco)
+        .batch(16)
+        .workers(4)
+        .steps(12)
+        .sync_interval(4)
+        .eval_every(4)
+        .eval_batches(2)
+        .warmup(2)
+        .tau(tau)
+        .parallel(parallel)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = PathBuf::from("target")
+        .join(format!("ckpt-resume-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    d
+}
+
+fn assert_same(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.eval_curve, b.eval_curve, "eval curve diverged: {tag}");
+    assert_eq!(a.train_curve, b.train_curve, "train curve diverged: {tag}");
+    assert_eq!(a.acc_curve, b.acc_curve, "acc curve diverged: {tag}");
+    assert_eq!(a.comm, b.comm, "comm accounting diverged: {tag}");
+    assert_eq!(a.faults, b.faults, "fault ledger diverged: {tag}");
+    assert_eq!(a.tokens, b.tokens, "token count diverged: {tag}");
+    assert_eq!(a.smoothed_final.to_bits(), b.smoothed_final.to_bits(),
+               "smoothed final diverged: {tag}");
+    assert_eq!(a.final_params, b.final_params, "final params diverged: {tag}");
+}
+
+/// The signature guarantee: kill at EVERY sync boundary, resume, and
+/// compare against the uninterrupted run — for the sequential reference
+/// path, the parallel engine, and overlapped sync with a boundary
+/// mid-flight at the save point.
+#[test]
+fn resume_at_every_sync_boundary_is_bit_for_bit() {
+    let sess = sess();
+    for parallel in [false, true] {
+        for tau in [0u64, 2] {
+            let full =
+                train(&sess, &base(tau, parallel).build().unwrap()).unwrap();
+            for halt in [4u64, 8] {
+                let tag = format!("parallel={parallel} tau={tau} halt={halt}");
+                let dir = tmp(&format!("b-{parallel}-{tau}-{halt}"));
+                let dir_s = dir.to_string_lossy().to_string();
+                // the "crash": checkpoint at each boundary, die at `halt`
+                let halted = base(tau, parallel)
+                    .save_every(4)
+                    .ckpt_dir(dir_s.clone())
+                    .halt_after(halt)
+                    .build()
+                    .unwrap();
+                let partial = train(&sess, &halted).unwrap();
+                assert!(partial.train_curve.len() < full.train_curve.len(),
+                        "halted run must be truncated: {tag}");
+                // resurrection: resume from the newest checkpoint
+                let resumed_cfg =
+                    base(tau, parallel).resume(dir_s).build().unwrap();
+                let resumed = train(&sess, &resumed_cfg).unwrap();
+                assert_same(&full, &resumed, &tag);
+                fs::remove_dir_all(&dir).unwrap();
+            }
+        }
+    }
+}
+
+/// Compression + error feedback: the EF residuals are part of the
+/// contract — losing them on resume would silently change what gets
+/// communicated at later boundaries.
+#[test]
+fn resume_preserves_error_feedback_residuals() {
+    let sess = sess();
+    let spec = || {
+        base(0, true)
+            .compression(Compression::parse("topk0.25").unwrap())
+            .error_feedback(true)
+    };
+    let full = train(&sess, &spec().build().unwrap()).unwrap();
+    let dir = tmp("ef");
+    let dir_s = dir.to_string_lossy().to_string();
+    let halted = spec()
+        .save_every(4)
+        .ckpt_dir(dir_s.clone())
+        .halt_after(4)
+        .build()
+        .unwrap();
+    train(&sess, &halted).unwrap();
+    let resumed = train(&sess, &spec().resume(dir_s).build().unwrap()).unwrap();
+    assert_same(&full, &resumed, "topk+ef");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Corruption paths through the public resume entry point: every
+/// failure names its cause; none of them touch training state.
+#[test]
+fn resume_rejects_drift_and_corruption_with_actionable_errors() {
+    let sess = sess();
+    let dir = tmp("drift");
+    let dir_s = dir.to_string_lossy().to_string();
+    let halted = base(0, true)
+        .save_every(4)
+        .ckpt_dir(dir_s.clone())
+        .halt_after(4)
+        .build()
+        .unwrap();
+    train(&sess, &halted).unwrap();
+
+    // knob-map drift: same model, different inner LR
+    let drifted = base(0, true)
+        .lr(0.123)
+        .resume(dir_s.clone())
+        .build()
+        .unwrap();
+    let err = format!("{:#}", train(&sess, &drifted).unwrap_err());
+    assert!(err.contains("different math knobs"), "{err}");
+
+    // format-version drift
+    let step_dir = ckpt::latest(&dir).unwrap();
+    let man = step_dir.join("manifest.json");
+    let original = fs::read_to_string(&man).unwrap();
+    fs::write(&man, original.replace("\"version\":1", "\"version\":7")).unwrap();
+    let ok_cfg = base(0, true).resume(dir_s.clone()).build().unwrap();
+    let err = format!("{:#}", train(&sess, &ok_cfg).unwrap_err());
+    assert!(err.contains("version 7"), "{err}");
+    fs::write(&man, &original).unwrap();
+
+    // truncated page file
+    let bin_path = step_dir.join("state.bin");
+    let bin = fs::read(&bin_path).unwrap();
+    fs::write(&bin_path, &bin[..bin.len() - 9]).unwrap();
+    let err = format!("{:#}", train(&sess, &ok_cfg).unwrap_err());
+    assert!(err.contains("truncated"), "{err}");
+
+    // single flipped bit
+    let mut flipped = bin.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x01;
+    fs::write(&bin_path, &flipped).unwrap();
+    let err = format!("{:#}", train(&sess, &ok_cfg).unwrap_err());
+    assert!(err.contains("CRC"), "{err}");
+
+    // intact bytes resume fine again
+    fs::write(&bin_path, &bin).unwrap();
+    train(&sess, &ok_cfg).expect("pristine checkpoint resumes");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Seeded dropout: identical across repeats AND across thread modes,
+/// with the run ledger matching the pure schedule and dropped workers
+/// consuming no tokens.
+#[test]
+fn dropout_runs_are_deterministic_and_account_honestly() {
+    let sess = sess();
+    // pick a seed whose schedule actually drops someone in 3 windows
+    let faulty = |seed: u64, parallel: bool| {
+        base(0, parallel)
+            .dropout(0.35)
+            .fault_seed(seed)
+            .build()
+            .unwrap()
+    };
+    let seed = (0..100u64)
+        .find(|&s| {
+            let plan = FaultPlan::for_run(&faulty(s, true)).unwrap();
+            (1..=3u64).any(|w| plan.mask(w, 4).iter().any(|&a| !a))
+        })
+        .expect("some seed under p=0.35 drops a worker in 3 windows");
+
+    let a = train(&sess, &faulty(seed, true)).unwrap();
+    let b = train(&sess, &faulty(seed, true)).unwrap();
+    assert_same(&a, &b, "repeat");
+    let s = train(&sess, &faulty(seed, false)).unwrap();
+    assert_same(&a, &s, "parallel vs sequential under dropout");
+
+    // the ledger equals the pure schedule's arithmetic
+    let plan = FaultPlan::for_run(&faulty(seed, true)).unwrap();
+    let expected_drops: u64 = (1..=3u64)
+        .map(|w| plan.mask(w, 4).iter().filter(|&&x| !x).count() as u64)
+        .sum();
+    assert_eq!(a.faults.rounds, 3);
+    assert_eq!(a.faults.dropped, expected_drops);
+    assert!(expected_drops > 0, "seed search guaranteed a drop");
+
+    // dropped workers take no inner steps: fewer tokens than fault-free
+    let clean = train(&sess, &base(0, true).build().unwrap()).unwrap();
+    assert!(a.tokens < clean.tokens, "{} vs {}", a.tokens, clean.tokens);
+    assert_eq!(clean.faults.dropped, 0);
+    assert_ne!(a.eval_curve, clean.eval_curve,
+               "dropout must change the trajectory, not crash it");
+}
+
+/// Synthetic boundary: with eta=1, mu=0 the outer step lands exactly on
+/// the mean of the SURVIVING workers — the renormalization the elastic
+/// sync owes the pseudogradient (dividing by K with a worker missing
+/// would shrink Psi toward zero).
+#[test]
+fn masked_boundary_renormalizes_the_pseudogradient_over_survivors() {
+    let corpus = Corpus::new(16, 1);
+    let metas = vec![SyncTensorMeta::from_shape(&[4], 4)];
+    let mk = |v: f32| {
+        Worker::new(vec![vec![v; 4]], Vec::new(), corpus.shard(0),
+                    ErrorFeedback::new(1, 1.0))
+    };
+    // worker 1 holds a wild replica; it is dropped this round
+    let mut workers = vec![mk(1.0), mk(100.0), mk(3.0)];
+    let outer = NesterovOuter::new(1.0, 0.0, &[4]);
+    let mut engine = SyncEngine::from_parts(
+        SyncPlan::dense(1, 1), metas, outer, Compression::None, false);
+    let mut theta = vec![vec![0.0f32; 4]];
+    let mut comm = CommStats::default();
+    engine.sync_step_masked(1, &mut theta, &mut workers, &mut comm, false,
+                            Some(&[true, false, true]));
+    // Psi = mean over survivors of (theta - theta_k) = -(1+3)/2 = -2,
+    // so theta' = 0 - 1*(-2) = 2 — the survivor mean, untouched by the
+    // dropped replica's 100.0
+    for x in &theta[0] {
+        assert!((x - 2.0).abs() < 1e-6, "theta = {x}, want survivor mean 2.0");
+    }
+    // the dropped worker rejoined from the boundary broadcast
+    assert_eq!(workers[1].params, theta);
+    // and the comm ledger priced 2 participants, not 3
+    assert!(comm.total_bytes > 0);
+    assert_eq!(comm.sent_per_rank.len(), 3);
+    assert_eq!(comm.sent_per_rank[1], 0, "dropped rank must not be charged");
+}
+
+/// Checkpoint/resume composes with fault injection: the ledger and the
+/// trajectory both survive the restart.
+#[test]
+fn resume_under_faults_is_bit_for_bit() {
+    let sess = sess();
+    let spec = || base(0, true).dropout(0.4).fault_seed(3);
+    let full = train(&sess, &spec().build().unwrap()).unwrap();
+    let dir = tmp("faultresume");
+    let dir_s = dir.to_string_lossy().to_string();
+    let halted = spec()
+        .save_every(4)
+        .ckpt_dir(dir_s.clone())
+        .halt_after(8)
+        .build()
+        .unwrap();
+    train(&sess, &halted).unwrap();
+    let resumed = train(&sess, &spec().resume(dir_s).build().unwrap()).unwrap();
+    assert_same(&full, &resumed, "dropout + resume");
+    fs::remove_dir_all(&dir).unwrap();
+}

@@ -9,7 +9,9 @@
 //! * reported wire bytes must match `Compressor::wire_bytes`;
 //! * overlapped streaming sync with tau = 0 must be bit-identical to
 //!   the blocking path, tau > 0 must be deterministic (parallel ==
-//!   sequential) and must apply exactly tau steps late;
+//!   sequential) and must apply exactly tau steps late; tau > stride
+//!   (multiple boundaries in flight per group) must pin bit-for-bit to
+//!   a longhand delayed-apply reference simulation;
 //! * streaming must divide the measured *peak* per-event bytes by J
 //!   while keeping the total volume unchanged.
 
@@ -423,7 +425,9 @@ fn overlapped_sync_is_deterministic_across_thread_modes() {
         (Compression::TopK { frac: 0.25 }, false),
     ] {
         for j_parts in [1usize, 2] {
-            for tau in [0u64, 1, 3] {
+            // 6 exceeds the J=2 stride (H/J = 4) and even the J=1
+            // boundary spacing: multiple boundaries stay in flight
+            for tau in [0u64, 1, 3, 6] {
                 for topology in [TopologySpec::Flat, TopologySpec::Hier { groups: 2 }]
                 {
                     let seq = run_rounds(&corpus, compression.clone(), ef,
@@ -518,4 +522,151 @@ fn streaming_divides_measured_peak_event_bytes_by_j() {
     assert_eq!(dense.peak_event_bytes, 3 * streamed.peak_event_bytes,
                "dense {} vs streamed {}", dense.peak_event_bytes,
                streamed.peak_event_bytes);
+}
+
+// ---- tau > stride: multiple boundaries in flight per group ----------
+
+/// One launched-but-unapplied boundary of the reference simulation.
+struct RefPending {
+    apply_step: u64,
+    /// (tensor, reduced psi, event-fragment stats), ascending tensor
+    tensors: Vec<(usize, Vec<f32>, CommStats)>,
+}
+
+/// Apply every reference boundary matured by `upto`, in launch order:
+/// outer step per tensor ascending, one comm event per boundary,
+/// broadcast of the touched tensors — the delayed-apply semantics
+/// written out longhand.
+#[allow(clippy::too_many_arguments)]
+fn ref_apply(
+    upto: u64,
+    queue: &mut Vec<RefPending>,
+    eta: f32,
+    mu: f32,
+    u: &mut [Vec<f32>],
+    theta: &mut [Vec<f32>],
+    workers: &mut [Worker<'_>],
+    comm: &mut CommStats,
+) {
+    let mut rest = Vec::new();
+    for p in queue.drain(..) {
+        if p.apply_step > upto {
+            rest.push(p);
+            continue;
+        }
+        let mut event = CommStats::default();
+        let mut touched = Vec::new();
+        for (ti, psi, stats) in &p.tensors {
+            NesterovOuter::step_slot(eta, mu, &mut u[*ti], &mut theta[*ti], psi);
+            event.add(stats);
+            touched.push(*ti);
+        }
+        comm.absorb_event(&event);
+        for w in workers.iter_mut() {
+            for &ti in &touched {
+                w.params[ti].copy_from_slice(&theta[ti]);
+            }
+        }
+    }
+    *queue = rest;
+}
+
+/// Independent inline simulation of overlapped streaming sync: capture
+/// deltas at the boundary, reduce them immediately (the reduce is a
+/// pure function of the captured deltas, so *when* it runs cannot
+/// matter), apply the result tau steps later in launch order.  Same
+/// seeds and drift as `build`, no `SyncEngine` involved.
+fn delayed_apply_reference(
+    corpus: &Corpus,
+    j_parts: usize,
+    h: u64,
+    tau: u64,
+) -> (Vec<Vec<f32>>, Vec<Vec<Vec<f32>>>, CommStats) {
+    let metas = metas();
+    let mut rng = Rng::new(99);
+    let mut theta = rand_theta(&mut rng, &metas);
+    let mut workers: Vec<Worker<'_>> = (0..4)
+        .map(|w| {
+            let params: Vec<Vec<f32>> = theta
+                .iter()
+                .map(|t| t.iter().map(|x| x + 0.01 * rng.normal_f32()).collect())
+                .collect();
+            Worker::new(params, Vec::new(), corpus.shard(w as u64),
+                        ErrorFeedback::new(metas.len(), 0.9))
+        })
+        .collect();
+    let (eta, mu) = (0.7f32, 0.9f32);
+    let mut u: Vec<Vec<f32>> =
+        metas.iter().map(|m| vec![0.0f32; m.size]).collect();
+    let plan = SyncPlan::streaming(h, j_parts, &[0, 1, 1, 2, 2], 3);
+    let topo = TopologySpec::Flat.build(OpKind::Dense);
+    let nc = NoCompression;
+    let op = CollectiveOp::new(&nc, OpKind::Dense);
+    let mut comm = CommStats::default();
+    let mut queue: Vec<RefPending> = Vec::new();
+
+    for step in 1..=3 * h {
+        drift(&mut workers, step);
+        ref_apply(step, &mut queue, eta, mu, &mut u, &mut theta, &mut workers,
+                  &mut comm);
+        let mut due = plan.due_tensors(step);
+        due.sort_unstable(); // the engine reduces in ascending tensor order
+        if due.is_empty() {
+            continue;
+        }
+        let k = workers.len();
+        let tensors = due
+            .iter()
+            .map(|&ti| {
+                let mut bufs: Vec<Vec<f32>> = workers
+                    .iter()
+                    .map(|w| muloco::util::sub(&theta[ti], &w.params[ti]))
+                    .collect();
+                let trace =
+                    topo.reduce_mean(&mut bufs, &op, metas[ti].rows, metas[ti].cols);
+                (ti, bufs.into_iter().next().unwrap(), trace.stats_for(k))
+            })
+            .collect();
+        queue.push(RefPending { apply_step: step + tau, tensors });
+    }
+    ref_apply(u64::MAX, &mut queue, eta, mu, &mut u, &mut theta, &mut workers,
+              &mut comm);
+    let params = workers.iter().map(|w| w.params.clone()).collect();
+    (theta, params, comm)
+}
+
+/// tau > stride (H/J): several boundaries are in flight for the same
+/// group at once.  The engine's numbers must pin to the longhand
+/// delayed-apply reference bit-for-bit — sequential and parallel — and
+/// the pending queue must actually hold more than one boundary.
+#[test]
+fn overlap_tau_beyond_stride_matches_delayed_apply_reference() {
+    let corpus = Corpus::new(64, 3);
+    let (j_parts, h) = (2usize, 8u64); // boundaries every stride = 4 steps
+    for tau in [5u64, 6] {
+        let want = delayed_apply_reference(&corpus, j_parts, h, tau);
+        for parallel in [false, true] {
+            let (mut engine, mut theta, mut workers) = build(
+                &corpus, 4, Compression::None, false, j_parts, h,
+                TopologySpec::Flat, tau);
+            let mut comm = CommStats::default();
+            let mut max_pending = 0usize;
+            for step in 1..=3 * h {
+                drift(&mut workers, step);
+                engine.sync_step(step, &mut theta, &mut workers, &mut comm,
+                                 parallel);
+                max_pending = max_pending.max(engine.n_pending());
+            }
+            engine.flush(&mut theta, &mut workers, &mut comm);
+            let params: Vec<Vec<Vec<f32>>> =
+                workers.iter().map(|w| w.params.clone()).collect();
+            let tag = format!("tau={tau} parallel={parallel}");
+            assert!(max_pending >= 2,
+                    "tau > stride must overlap boundaries ({tag}): \
+                     max in flight {max_pending}");
+            assert_eq!(want.0, theta, "theta diverged from reference: {tag}");
+            assert_eq!(want.1, params, "workers diverged from reference: {tag}");
+            assert_eq!(want.2, comm, "comm diverged from reference: {tag}");
+        }
+    }
 }
