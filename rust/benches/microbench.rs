@@ -22,7 +22,8 @@ use muloco::comm::{AllToAll, CollectiveOp, Hierarchical, OpKind, Ring,
                    Topology};
 use muloco::compress::{Compressor, ErrorFeedback, QuantMode, Quantizer, TopK};
 use muloco::coordinator::{train, Method, NesterovOuter, RunSpec};
-use muloco::runtime::native::gemm::time_blocked_vs_naive;
+use muloco::runtime::native::gemm::{time_blocked_vs_naive,
+                                    time_scalar_vs_active};
 use muloco::runtime::native::muon::newton_schulz_group;
 use muloco::runtime::Session;
 use muloco::util::rng::Rng;
@@ -168,6 +169,22 @@ fn main() -> anyhow::Result<()> {
             blocked * 1e6,
             naive * 1e6,
             naive / blocked
+        );
+    }
+    // single-lane scalar reference vs the dispatched microkernel (the
+    // SIMD body under `--features simd`, the identical scalar body on
+    // the default build — speedup 1.0x there, by construction)
+    println!("\n== native GEMM (microkernel vs scalar reference, simd={}) ==",
+             cfg!(feature = "simd"));
+    for d in [64usize, 128, 256] {
+        let (scalar, active) = time_scalar_vs_active(d, 5);
+        let gflops = 2.0 * (d * d * d) as f64 / active / 1e9;
+        println!(
+            "sgemm {d:>3}^3: active {:>9.1} us ({gflops:>6.2} GFLOP/s)  \
+             scalar {:>9.1} us  speedup {:>5.2}x",
+            active * 1e6,
+            scalar * 1e6,
+            scalar / active
         );
     }
     {

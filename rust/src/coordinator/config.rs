@@ -2,6 +2,7 @@
 
 use crate::comm::TopologySpec;
 use crate::compress::Compression;
+use crate::runtime::Precision;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -170,6 +171,11 @@ pub struct TrainConfig {
     /// threads (bit-identical to the sequential reference; excluded
     /// from cache keys because it cannot affect the math)
     pub parallel: bool,
+    /// storage precision of step calls: params-in-flight, activations-
+    /// at-rest and collective payloads are rounded to bf16 (f32
+    /// accumulation everywhere); f32 is the exact default.  Needs the
+    /// native backend — PJRT executables are compiled f32
+    pub precision: Precision,
 }
 
 impl TrainConfig {
@@ -214,6 +220,7 @@ impl TrainConfig {
             eval_batches: 8,
             seed: 17,
             parallel: true,
+            precision: Precision::F32,
         }
     }
 

@@ -51,7 +51,7 @@ use crate::compress::ErrorFeedback;
 use crate::data::Corpus;
 use crate::evalloss::Smoother;
 use crate::runtime::{ExecStats, Session, Tensors};
-use crate::util::{add_assign, scale};
+use crate::util::{add_assign, axpy, scale};
 
 /// Everything a run produces (curves, counters, headline stats).
 #[derive(Clone, Debug)]
@@ -83,6 +83,13 @@ pub struct RunResult {
 
 /// Gradient accumulation over `batch_seqs` sequences from `shard`.
 /// Returns (mean loss, mean grads).
+///
+/// When `batch_seqs` divides evenly into microbatches the original
+/// equal-weight accumulation runs unchanged (same op order, bit-for-bit
+/// with pre-variable-batch builds).  Otherwise the tail microbatch is
+/// smaller and every microbatch is weighted by its sequence count —
+/// this path needs a backend with a variable batch dimension (native;
+/// PJRT bails at `fwd_grad`).
 pub fn accumulate_grads(
     sess: &Session,
     params: &Tensors,
@@ -91,30 +98,67 @@ pub fn accumulate_grads(
 ) -> Result<(f64, Tensors)> {
     let cfg = &sess.manifest.config;
     let micro = cfg.microbatch;
-    assert!(batch_seqs % micro == 0,
-            "batch ({batch_seqs}) must be a multiple of microbatch ({micro})");
-    let n_micro = batch_seqs / micro;
+    assert!(batch_seqs > 0, "batch must be non-empty");
+    let rem = batch_seqs % micro;
+    if rem == 0 {
+        // equal microbatches: accumulate then scale by 1/n (the exact
+        // legacy op order — do not merge with the weighted path below)
+        let n_micro = batch_seqs / micro;
+        let mut total_loss = 0.0f64;
+        let mut acc: Option<Tensors> = None;
+        for _ in 0..n_micro {
+            let tokens = shard.next_batch(micro, cfg.seq_len);
+            let (loss, grads) = sess.fwd_grad(params, &tokens)?;
+            total_loss += loss as f64;
+            match acc.as_mut() {
+                None => acc = Some(grads),
+                Some(a) => {
+                    for (at, gt) in a.iter_mut().zip(&grads) {
+                        add_assign(at, gt);
+                    }
+                }
+            }
+        }
+        let mut grads = acc.expect("n_micro >= 1");
+        let inv = 1.0 / n_micro as f32;
+        for g in grads.iter_mut() {
+            scale(g, inv);
+        }
+        return Ok((total_loss / n_micro as f64, grads));
+    }
+    // uneven tail: sequence-weighted mean.  fwd_grad returns per-batch
+    // means, so the batch mean is sum(b_i * mean_i) / sum(b_i).
+    let n_full = batch_seqs / micro;
+    let mut sizes: Vec<usize> = vec![micro; n_full];
+    sizes.push(rem);
     let mut total_loss = 0.0f64;
     let mut acc: Option<Tensors> = None;
-    for _ in 0..n_micro {
-        let tokens = shard.next_batch(micro, cfg.seq_len);
+    for &b in &sizes {
+        let tokens = shard.next_batch(b, cfg.seq_len);
         let (loss, grads) = sess.fwd_grad(params, &tokens)?;
-        total_loss += loss as f64;
+        let w = b as f32;
+        total_loss += loss as f64 * b as f64;
         match acc.as_mut() {
-            None => acc = Some(grads),
+            None => {
+                let mut g = grads;
+                for t in g.iter_mut() {
+                    scale(t, w);
+                }
+                acc = Some(g);
+            }
             Some(a) => {
                 for (at, gt) in a.iter_mut().zip(&grads) {
-                    add_assign(at, gt);
+                    axpy(at, w, gt);
                 }
             }
         }
     }
-    let mut grads = acc.expect("n_micro >= 1");
-    let inv = 1.0 / n_micro as f32;
+    let mut grads = acc.expect("at least one microbatch");
+    let inv = 1.0 / batch_seqs as f32;
     for g in grads.iter_mut() {
         scale(g, inv);
     }
-    Ok((total_loss / n_micro as f64, grads))
+    Ok((total_loss / batch_seqs as f64, grads))
 }
 
 /// Evaluate `params` on `batches` pre-generated eval microbatches.
@@ -280,19 +324,24 @@ fn save_checkpoint(
 /// by the CLI, the experiments and the examples.
 pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
     cfg.validate()?;
+    // select the storage precision before any step runs; fails fast on
+    // backends that cannot narrow storage (PJRT executables are f32)
+    sess.set_precision(cfg.precision)?;
     let t_start = Instant::now();
     sess.reset_stats();
     let man = &sess.manifest;
     let model = &man.config;
     let k = cfg.workers;
     let per_worker_batch = cfg.global_batch / k;
-    if per_worker_batch == 0 || per_worker_batch % model.microbatch != 0 {
+    if per_worker_batch == 0 {
         bail!(
-            "per-worker batch {per_worker_batch} (global_batch {} / K={k}) \
-             must be a non-zero multiple of the {} microbatch ({})",
-            cfg.global_batch, model.name, model.microbatch
+            "per-worker batch is zero (global_batch {} / K={k})",
+            cfg.global_batch
         );
     }
+    // a per-worker batch that is not a microbatch multiple runs through
+    // accumulate_grads' weighted-tail path — supported by the native
+    // backend's variable batch dimension; PJRT rejects it at fwd_grad
     let corpus = Corpus::new(model.vocab, cfg.seed);
 
     // fixed eval batches from the held-out stream (comparable across

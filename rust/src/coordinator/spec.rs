@@ -30,6 +30,7 @@ use anyhow::{anyhow, bail, Result};
 use super::config::{default_lr, Method, TrainConfig};
 use crate::comm::TopologySpec;
 use crate::compress::Compression;
+use crate::runtime::Precision;
 use crate::util::json::Json;
 
 /// One declared run-configuration field.
@@ -253,6 +254,21 @@ fn build_registry() -> Vec<Knob> {
         parse_knob!("seed", "s", "23", seed,
                     "data / init seed"),
         Knob {
+            name: "precision",
+            tag: "p",
+            doc: "storage precision of step calls: f32|bf16 (bf16 rounds \
+                  params-in-flight, activations-at-rest and collective \
+                  payloads; f32 accumulation; native backend only)",
+            example: "bf16",
+            flag: false,
+            in_key: true,
+            get: |c| c.precision.label().to_string(),
+            set: |c, v| {
+                c.precision = Precision::parse(v)?;
+                Ok(())
+            },
+        },
+        Knob {
             name: "sequential",
             tag: "",
             doc: "run the reference sequential path (bit-identical; excluded from cache keys)",
@@ -374,6 +390,7 @@ impl RunSpec {
     setter!(eval_every, "eval-every", u64, eval_every);
     setter!(eval_batches, "eval-batches", usize, eval_batches);
     setter!(seed, "seed", u64, seed);
+    setter!(precision, "precision", Precision, precision);
 
     pub fn parallel(mut self, parallel: bool) -> Self {
         self.cfg.parallel = parallel;

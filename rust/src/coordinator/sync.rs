@@ -45,7 +45,8 @@ use super::worker::Worker;
 use crate::ckpt::PendingSnap;
 use crate::comm::{CollectiveOp, CommStats, OpKind, Topology, TopologySpec};
 use crate::compress::{Compression, Compressor};
-use crate::runtime::{Manifest, Tensors};
+use crate::runtime::{Manifest, Precision, Tensors};
+use crate::util::round_bf16_slice;
 
 /// Flat-tensor geometry the sync path needs: total element count and
 /// the 2-D view (rows=1 for vectors) used by row-wise compressors.
@@ -212,6 +213,11 @@ pub struct SyncEngine {
     apply_ef: bool,
     overlap_tau: u64,
     pending: Vec<PendingSync>,
+    /// `--precision bf16` rounds each worker's delta (the collective
+    /// payload) to bf16 storage before it enters the reduce — after the
+    /// error-feedback fold, so EF still tracks what was actually sent.
+    /// The reduce itself accumulates f32.
+    precision: Precision,
 }
 
 impl SyncEngine {
@@ -235,6 +241,7 @@ impl SyncEngine {
                                cfg.error_feedback)
             .with_topology(cfg.topology)
             .with_overlap(cfg.overlap_tau)
+            .with_precision(cfg.precision)
     }
 
     /// Manifest-free constructor (unit tests, synthetic workloads).
@@ -261,6 +268,7 @@ impl SyncEngine {
             apply_ef,
             overlap_tau: 0,
             pending: Vec::new(),
+            precision: Precision::F32,
         }
     }
 
@@ -274,6 +282,14 @@ impl SyncEngine {
     /// `tau` steps after its schedule slot (0 = blocking).
     pub fn with_overlap(mut self, tau: u64) -> SyncEngine {
         self.overlap_tau = tau;
+        self
+    }
+
+    /// Storage precision of the collective payloads (`--precision`):
+    /// bf16 rounds every worker delta before the reduce, f32 (the
+    /// default) is a bit-exact no-op.
+    pub fn with_precision(mut self, precision: Precision) -> SyncEngine {
+        self.precision = precision;
         self
     }
 
@@ -487,7 +503,14 @@ impl SyncEngine {
         let mut deltas: BTreeMap<usize, Vec<Vec<f32>>> =
             due.iter().map(|&ti| (ti, Vec::with_capacity(p))).collect();
         for wd in by_worker {
-            for (&ti, d) in due.iter().zip(wd) {
+            for (&ti, mut d) in due.iter().zip(wd) {
+                // bf16 collective payloads: each worker's contribution
+                // is rounded to bf16 storage on the wire; the reduce
+                // below still accumulates f32.  Pure elementwise
+                // rounding, so determinism is unaffected
+                if self.precision == Precision::Bf16 {
+                    round_bf16_slice(&mut d);
+                }
                 deltas.get_mut(&ti).expect("due tensor").push(d);
             }
         }

@@ -1,3 +1,7 @@
+// The `simd` feature selects explicit std::simd microkernels in
+// runtime/native/ (nightly-only; scalar fallbacks are the default).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # MuLoCo-RS
 //!
 //! A three-layer (rust + JAX + Pallas) reproduction of *"MuLoCo: Muon is

@@ -26,6 +26,46 @@ use anyhow::Result;
 /// A set of equally-ordered flat tensors (parameters, grads, opt state).
 pub type Tensors = Vec<Vec<f32>>;
 
+/// Storage precision of the training step's in-flight data: the
+/// parameter copy entering `fwd_grad`/`eval_step`, activations at rest
+/// inside the forward record, and the collective payloads on the sync
+/// path.  Accumulation (GEMMs, softmax, loss reduction, optimizer
+/// state) always stays f32 — `Bf16` narrows only what is *stored*, via
+/// round-to-nearest-even (`util::round_bf16`).
+///
+/// Determinism: both precisions are fully deterministic within a build
+/// (the rounding is itself a fixed pure function), so the bit-for-bit
+/// parallel==sequential and ckpt-resume contracts hold under either.
+/// `Bf16` results differ from `F32` results by the documented
+/// toleranced-tier bounds (`runtime/native/tier.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl Precision {
+    /// Knob-value spelling (`--precision {f32,bf16}`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse the knob-value spelling.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            other => anyhow::bail!(
+                "unknown precision {other:?} (expected f32 or bf16)"
+            ),
+        }
+    }
+}
+
 /// Newton-Schulz iteration count baked into the AOT `apply_muon`
 /// executable (Jordan et al. 2024; paper §2).  The native backend
 /// accepts any count at call time; PJRT only this one.
@@ -71,6 +111,23 @@ pub trait Backend: Send + Sync {
 
     /// Eval loss + next-token accuracy on one microbatch.
     fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)>;
+
+    /// Select the storage precision for subsequent step calls.  The
+    /// default implementation accepts only `F32`: a backend that cannot
+    /// narrow its storage must reject the request rather than silently
+    /// run full-precision under a `--precision bf16` spec.  The native
+    /// backend overrides this.
+    fn set_precision(&self, precision: Precision) -> Result<()> {
+        if precision == Precision::F32 {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "backend {:?} does not support --precision {}",
+                self.platform(),
+                precision.label()
+            )
+        }
+    }
 
     /// Opaque backend-internal state a checkpoint must carry across a
     /// process restart.  The native and PJRT backends are stateless

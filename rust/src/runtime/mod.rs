@@ -11,7 +11,7 @@ pub mod session;
 #[cfg(not(feature = "pjrt"))]
 pub mod xla_stub;
 
-pub use backend::{Backend, Tensors, NS_STEPS};
+pub use backend::{Backend, Precision, Tensors, NS_STEPS};
 pub use manifest::{Manifest, ModelDims, StateSpec, TensorKind, TensorSpec};
 pub use native::NativeBackend;
 pub use session::{ExecStats, Session};

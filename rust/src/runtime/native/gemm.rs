@@ -1,20 +1,34 @@
 //! f32 GEMM kernels: the compute hot-spot of the native backend.
 //!
-//! `sgemm` is a cache-blocked, lane-parallel kernel: the k dimension is
-//! tiled so a panel of B stays L2-resident while a block of C rows
-//! accumulates, the inner j loop runs over contiguous rows of B and C
-//! (8-wide auto-vectorizable form, 4 k-steps fused per C-row pass), and
-//! large products split their output rows across scoped threads
-//! ("lanes").  `sgemm_naive` is the deliberately untuned triple-loop
-//! reference kept for regression benchmarking (`benches/microbench.rs`
-//! prints the blocked-vs-naive speedup; `muloco bench` records it in
-//! BENCH_native.json).
+//! `sgemm` is a cache-blocked, lane-parallel kernel.  The single-lane
+//! body has two interchangeable implementations:
 //!
-//! Determinism contract: every C element accumulates its k terms in
-//! ascending-k order with a fixed 4-term grouping that depends only on
-//! (k, KC), never on the lane count — so threaded and single-lane runs
-//! are bit-for-bit identical, which is what lets the WorkerPool's
-//! parallel==sequential contract hold on the native backend.
+//! * `sgemm_rows_scalar` — the portable reference: the k dimension is
+//!   tiled so a panel of B stays L2-resident while a block of C rows
+//!   accumulates, the inner j loop runs over contiguous rows of B and C
+//!   (auto-vectorizable form, 4 k-steps fused per C-row pass);
+//! * an explicit 8-wide `std::simd` microkernel (`--features simd`,
+//!   nightly): a 4-row x 16-column register block that keeps C in
+//!   accumulator registers for the whole k sweep and reuses each B row
+//!   across the 4 A rows — eliminating the per-k-group C memory
+//!   round-trips that bound the scalar form.
+//!
+//! Determinism contract (`Tier::Exact`, see `runtime/native/tier.rs`):
+//! every C element accumulates its k terms in ascending-k order with a
+//! fixed 4-term left-to-right grouping that depends only on k — never
+//! on the lane count, the feature set, or the register-block position.
+//! The SIMD microkernel keeps that exact grouping as its lane-reduction
+//! order (per-lane IEEE mul/add, no FMA contraction, accumulators
+//! spilled/reloaded exactly), so simd and scalar builds — and threaded
+//! and single-lane runs — are all bit-for-bit identical, which is what
+//! lets the WorkerPool's parallel==sequential contract hold on the
+//! native backend.
+//!
+//! `sgemm_naive` is the deliberately untuned triple-loop reference kept
+//! for regression benchmarking (`benches/microbench.rs` prints the
+//! blocked-vs-naive speedup; `muloco bench` records it — and the
+//! scalar-vs-microkernel ratio from `time_scalar_vs_active` — in
+//! BENCH_native.json).
 //!
 //! The transposed variants (`sgemm_nt`, `sgemm_tn`) pack the transposed
 //! operand once and reuse the same blocked kernel, so there is exactly
@@ -24,7 +38,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::thread;
 
 /// k-panel height: a KC x n slice of B (<= 256 * n * 4 bytes) stays
-/// cache-resident while a row block of C sweeps it.
+/// cache-resident while a row block of C sweeps it.  KC is a multiple
+/// of 4, so the ascending-k 4-term grouping is independent of the
+/// panel boundaries.
 const KC: usize = 256;
 
 /// Products below this many multiply-adds run single-lane: the scoped
@@ -89,7 +105,30 @@ pub fn sgemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
 }
 
 /// The single-lane body: rows [i0, i0+rows) of A into a local C chunk.
+/// Dispatches to the SIMD microkernel when the `simd` feature is on;
+/// both implementations produce bit-identical C (the Tier::Exact
+/// contract, pinned by `tests/kernel_tiers.rs`).
 fn sgemm_rows(
+    i0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    #[cfg(feature = "simd")]
+    simd_kernel::sgemm_rows(i0, rows, n, k, a, b, c);
+    #[cfg(not(feature = "simd"))]
+    sgemm_rows_scalar(i0, rows, n, k, a, b, c);
+}
+
+/// The portable scalar reference body (always compiled): k-panel
+/// blocking with the 4-term fused inner loop.  This defines the
+/// accumulation order every other implementation must reproduce:
+/// `crow[j] += a0*b0[j] + a1*b1[j] + a2*b2[j] + a3*b3[j]` over
+/// ascending k groups of 4, then single steps for the k % 4 tail.
+pub fn sgemm_rows_scalar(
     i0: usize,
     rows: usize,
     n: usize,
@@ -130,6 +169,157 @@ fn sgemm_rows(
             }
         }
         kk = kend;
+    }
+}
+
+/// The explicit 8-wide microkernel (nightly `std::simd`).  Register
+/// blocking: 4 A rows x 16 C columns (two f32x8 accumulators per row)
+/// held in registers for the full k sweep.  Per C element the add
+/// sequence is exactly the scalar reference's — ascending k, the same
+/// left-to-right 4-term grouping, `acc += a0*b0 + a1*b1 + a2*b2 +
+/// a3*b3` per group — so the result is bit-identical; the speedup
+/// comes from eliminating the C memory round-trip per k-group (a
+/// factor-KC/4 traffic cut) and reusing each B row across 4 A rows.
+#[cfg(feature = "simd")]
+mod simd_kernel {
+    use std::simd::Simd;
+
+    type F8 = Simd<f32, 8>;
+
+    pub(super) fn sgemm_rows(
+        i0: usize,
+        rows: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) {
+        let mut li = 0;
+        while li + 4 <= rows {
+            tile_rows::<4>(i0, li, n, k, a, b, c);
+            li += 4;
+        }
+        match rows - li {
+            3 => tile_rows::<3>(i0, li, n, k, a, b, c),
+            2 => tile_rows::<2>(i0, li, n, k, a, b, c),
+            1 => tile_rows::<1>(i0, li, n, k, a, b, c),
+            _ => {}
+        }
+    }
+
+    /// MR rows of the output, all n columns: 16-wide register blocks,
+    /// an 8-wide block, then scalar columns — every element stored
+    /// exactly once, every accumulator following the reference order.
+    #[inline(always)]
+    fn tile_rows<const MR: usize>(
+        i0: usize,
+        li: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+    ) {
+        let mut j0 = 0;
+        while j0 + 16 <= n {
+            let mut acc0 = [F8::splat(0.0); MR];
+            let mut acc1 = [F8::splat(0.0); MR];
+            let mut k_ = 0;
+            while k_ + 4 <= k {
+                let p0 = k_ * n + j0;
+                let p1 = (k_ + 1) * n + j0;
+                let p2 = (k_ + 2) * n + j0;
+                let p3 = (k_ + 3) * n + j0;
+                let b00 = F8::from_slice(&b[p0..p0 + 8]);
+                let b01 = F8::from_slice(&b[p0 + 8..p0 + 16]);
+                let b10 = F8::from_slice(&b[p1..p1 + 8]);
+                let b11 = F8::from_slice(&b[p1 + 8..p1 + 16]);
+                let b20 = F8::from_slice(&b[p2..p2 + 8]);
+                let b21 = F8::from_slice(&b[p2 + 8..p2 + 16]);
+                let b30 = F8::from_slice(&b[p3..p3 + 8]);
+                let b31 = F8::from_slice(&b[p3 + 8..p3 + 16]);
+                for r in 0..MR {
+                    let ar = (i0 + li + r) * k + k_;
+                    let a0 = F8::splat(a[ar]);
+                    let a1 = F8::splat(a[ar + 1]);
+                    let a2 = F8::splat(a[ar + 2]);
+                    let a3 = F8::splat(a[ar + 3]);
+                    acc0[r] += a0 * b00 + a1 * b10 + a2 * b20 + a3 * b30;
+                    acc1[r] += a0 * b01 + a1 * b11 + a2 * b21 + a3 * b31;
+                }
+                k_ += 4;
+            }
+            while k_ < k {
+                let p = k_ * n + j0;
+                let bv0 = F8::from_slice(&b[p..p + 8]);
+                let bv1 = F8::from_slice(&b[p + 8..p + 16]);
+                for r in 0..MR {
+                    let av = F8::splat(a[(i0 + li + r) * k + k_]);
+                    acc0[r] += av * bv0;
+                    acc1[r] += av * bv1;
+                }
+                k_ += 1;
+            }
+            for r in 0..MR {
+                let co = (li + r) * n + j0;
+                acc0[r].copy_to_slice(&mut c[co..co + 8]);
+                acc1[r].copy_to_slice(&mut c[co + 8..co + 16]);
+            }
+            j0 += 16;
+        }
+        if j0 + 8 <= n {
+            let mut acc = [F8::splat(0.0); MR];
+            let mut k_ = 0;
+            while k_ + 4 <= k {
+                let b0v = F8::from_slice(&b[k_ * n + j0..k_ * n + j0 + 8]);
+                let b1v = F8::from_slice(&b[(k_ + 1) * n + j0..(k_ + 1) * n + j0 + 8]);
+                let b2v = F8::from_slice(&b[(k_ + 2) * n + j0..(k_ + 2) * n + j0 + 8]);
+                let b3v = F8::from_slice(&b[(k_ + 3) * n + j0..(k_ + 3) * n + j0 + 8]);
+                for r in 0..MR {
+                    let ar = (i0 + li + r) * k + k_;
+                    acc[r] += F8::splat(a[ar]) * b0v
+                        + F8::splat(a[ar + 1]) * b1v
+                        + F8::splat(a[ar + 2]) * b2v
+                        + F8::splat(a[ar + 3]) * b3v;
+                }
+                k_ += 4;
+            }
+            while k_ < k {
+                let bv = F8::from_slice(&b[k_ * n + j0..k_ * n + j0 + 8]);
+                for r in 0..MR {
+                    acc[r] += F8::splat(a[(i0 + li + r) * k + k_]) * bv;
+                }
+                k_ += 1;
+            }
+            for r in 0..MR {
+                let co = (li + r) * n + j0;
+                acc[r].copy_to_slice(&mut c[co..co + 8]);
+            }
+            j0 += 8;
+        }
+        if j0 < n {
+            for r in 0..MR {
+                let arow = &a[(i0 + li + r) * k..(i0 + li + r) * k + k];
+                let crow = &mut c[(li + r) * n..(li + r) * n + n];
+                for j in j0..n {
+                    let mut s = 0f32;
+                    let mut k_ = 0;
+                    while k_ + 4 <= k {
+                        s += arow[k_] * b[k_ * n + j]
+                            + arow[k_ + 1] * b[(k_ + 1) * n + j]
+                            + arow[k_ + 2] * b[(k_ + 2) * n + j]
+                            + arow[k_ + 3] * b[(k_ + 3) * n + j];
+                        k_ += 4;
+                    }
+                    while k_ < k {
+                        s += arow[k_] * b[k_ * n + j];
+                        k_ += 1;
+                    }
+                    crow[j] = s;
+                }
+            }
+        }
     }
 }
 
@@ -187,6 +377,26 @@ pub fn time_blocked_vs_naive(d: usize, reps: usize) -> (f64, f64) {
     let naive =
         crate::util::median_secs(reps, || sgemm_naive(d, d, d, &a, &b, &mut c));
     (blocked, naive)
+}
+
+/// Median-of-`reps` seconds for the single-lane scalar reference vs the
+/// active single-lane kernel (the SIMD microkernel when the `simd`
+/// feature is on, the same scalar body otherwise) at d x d x d — the
+/// scalar-vs-microkernel speedup `muloco bench` records per tier in
+/// BENCH_native.json.  Single-lane on both sides so the ratio isolates
+/// the kernel, not the thread split.  Returns (scalar_secs,
+/// active_secs).
+pub fn time_scalar_vs_active(d: usize, reps: usize) -> (f64, f64) {
+    let mut rng = crate::util::rng::Rng::new(0x51AD + d as u64);
+    let a: Vec<f32> = (0..d * d).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..d * d).map(|_| rng.normal_f32()).collect();
+    let mut c = vec![0f32; d * d];
+    let scalar = crate::util::median_secs(reps, || {
+        sgemm_rows_scalar(0, d, d, d, &a, &b, &mut c)
+    });
+    let active =
+        crate::util::median_secs(reps, || sgemm_rows(0, d, d, d, &a, &b, &mut c));
+    (scalar, active)
 }
 
 /// The naive triple-loop reference (strided B access, no blocking, no
@@ -253,6 +463,34 @@ mod tests {
             let mut cn = vec![0f32; m * n];
             sgemm_naive(m, n, k, &a, &b, &mut cn);
             assert_close(&cn, &want, k, "sgemm_naive");
+        }
+    }
+
+    /// The Tier::Exact contract at the source: the public `sgemm`
+    /// (microkernel when `simd` is on, threaded above the size
+    /// threshold) must equal the single-lane scalar reference
+    /// bit-for-bit on every shape — including row/column/k tails and a
+    /// product big enough to split across lanes.
+    #[test]
+    fn active_kernel_is_bit_identical_to_scalar_reference() {
+        let mut rng = Rng::new(77);
+        for &(m, n, k) in &[(1, 1, 1), (4, 16, 8), (5, 17, 9), (7, 23, 301),
+                            (8, 24, 260), (33, 47, 129), (3, 100, 5),
+                            (200, 200, 150)] {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let mut want = vec![0f32; m * n];
+            sgemm_rows_scalar(0, m, n, k, &a, &b, &mut want);
+            let mut got = vec![0f32; m * n];
+            sgemm(m, n, k, &a, &b, &mut got);
+            for i in 0..m * n {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "sgemm[{i}] {} vs {} at ({m},{n},{k})",
+                    got[i], want[i]
+                );
+            }
         }
     }
 

@@ -1,10 +1,22 @@
 //! Elementwise / row-wise kernels of the native backend: RMSNorm
-//! forward + backward, RoPE rotation, silu, and the fused AdamW update
-//! (the rust mirror of `python/compile/kernels/fused_adamw.py`).
+//! forward + backward, RoPE rotation, SwiGLU, silu, and the fused AdamW
+//! update (the rust mirror of `python/compile/kernels/fused_adamw.py`).
 //!
 //! Everything here is a pure function over flat f32 slices with fixed
 //! iteration order, so results are identical no matter which worker
 //! lane calls in — the same determinism contract the GEMM layer keeps.
+//!
+//! Each hot kernel has two bodies: a `_scalar` reference (always
+//! compiled — the definition of correct bits) and an 8-wide `std::simd`
+//! form behind the `simd` feature.  All of these are `Tier::Exact`
+//! (see `runtime/native/tier.rs`): the SIMD forms vectorize only the
+//! per-element maps, whose lane operations are IEEE-identical to the
+//! scalar sequence (mul/add/sub/div/sqrt are correctly rounded; no FMA
+//! contraction; transcendentals — sigmoid's exp — are still computed
+//! through the same scalar libm calls and only combined vector-wide).
+//! The f64 row reductions (RMSNorm sum-of-squares and the backward dot)
+//! stay scalar: a vector horizontal reduction would reorder the sum and
+//! break bit-exactness for zero wall-clock win on rows this short.
 
 /// paper §5: beta1 = 0.9, beta2 = 0.99 for all AdamW (inner) runs
 pub const ADAMW_BETA1: f32 = 0.9;
@@ -21,6 +33,15 @@ pub const ADAMW_EPS: f32 = 1e-8;
 /// decay (the caller masks 1-D tensors, as in optim.py).
 pub fn fused_adamw(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32],
                    t: f32, lr: f32, wd: f32) {
+    #[cfg(feature = "simd")]
+    simd::fused_adamw(p, m, v, g, t, lr, wd);
+    #[cfg(not(feature = "simd"))]
+    fused_adamw_scalar(p, m, v, g, t, lr, wd);
+}
+
+/// Scalar reference body for [`fused_adamw`].
+pub fn fused_adamw_scalar(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32],
+                          t: f32, lr: f32, wd: f32) {
     debug_assert_eq!(p.len(), g.len());
     debug_assert_eq!(m.len(), g.len());
     debug_assert_eq!(v.len(), g.len());
@@ -40,6 +61,15 @@ pub fn fused_adamw(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32],
 /// RMSNorm forward over rows of width `n`: returns (y, inv_rms) with
 /// y = x * inv_rms * g and inv_rms = 1/sqrt(mean(x^2) + eps) per row.
 pub fn rmsnorm_fwd(x: &[f32], g: &[f32], n: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    #[cfg(feature = "simd")]
+    return simd::rmsnorm_fwd(x, g, n, eps);
+    #[cfg(not(feature = "simd"))]
+    rmsnorm_fwd_scalar(x, g, n, eps)
+}
+
+/// Scalar reference body for [`rmsnorm_fwd`].
+pub fn rmsnorm_fwd_scalar(x: &[f32], g: &[f32], n: usize, eps: f32)
+                          -> (Vec<f32>, Vec<f32>) {
     debug_assert_eq!(g.len(), n);
     debug_assert_eq!(x.len() % n, 0);
     let rows = x.len() / n;
@@ -67,6 +97,15 @@ pub fn rmsnorm_fwd(x: &[f32], g: &[f32], n: usize, eps: f32) -> (Vec<f32>, Vec<f
 /// dx_j = r*g_j*dy_j - x_j * r^3 * s / n; dg_j += dy_j * x_j * r.
 pub fn rmsnorm_bwd(x: &[f32], g: &[f32], inv_rms: &[f32], dy: &[f32], n: usize,
                    dx: &mut [f32], dg: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    simd::rmsnorm_bwd(x, g, inv_rms, dy, n, dx, dg);
+    #[cfg(not(feature = "simd"))]
+    rmsnorm_bwd_scalar(x, g, inv_rms, dy, n, dx, dg);
+}
+
+/// Scalar reference body for [`rmsnorm_bwd`].
+pub fn rmsnorm_bwd_scalar(x: &[f32], g: &[f32], inv_rms: &[f32], dy: &[f32],
+                          n: usize, dx: &mut [f32], dg: &mut [f32]) {
     debug_assert_eq!(x.len(), dy.len());
     debug_assert_eq!(x.len(), dx.len());
     debug_assert_eq!(g.len(), n);
@@ -115,6 +154,16 @@ pub fn rope_tables(seq_len: usize, head_dim: usize, theta: f32) -> (Vec<f32>, Ve
 #[allow(clippy::too_many_arguments)]
 pub fn rope_apply(x: &mut [f32], b: usize, t: usize, h: usize, hd: usize,
                   cos: &[f32], sin: &[f32], inverse: bool) {
+    #[cfg(feature = "simd")]
+    simd::rope_apply(x, b, t, h, hd, cos, sin, inverse);
+    #[cfg(not(feature = "simd"))]
+    rope_apply_scalar(x, b, t, h, hd, cos, sin, inverse);
+}
+
+/// Scalar reference body for [`rope_apply`].
+#[allow(clippy::too_many_arguments)]
+pub fn rope_apply_scalar(x: &mut [f32], b: usize, t: usize, h: usize, hd: usize,
+                         cos: &[f32], sin: &[f32], inverse: bool) {
     let half = hd / 2;
     let d = h * hd;
     debug_assert_eq!(x.len(), b * t * d);
@@ -137,6 +186,50 @@ pub fn rope_apply(x: &mut [f32], b: usize, t: usize, h: usize, hd: usize,
     }
 }
 
+/// SwiGLU forward: prod = silu(g_pre) * u, elementwise.
+pub fn swiglu_fwd(g_pre: &[f32], u: &[f32], prod: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    simd::swiglu_fwd(g_pre, u, prod);
+    #[cfg(not(feature = "simd"))]
+    swiglu_fwd_scalar(g_pre, u, prod);
+}
+
+/// Scalar reference body for [`swiglu_fwd`].
+pub fn swiglu_fwd_scalar(g_pre: &[f32], u: &[f32], prod: &mut [f32]) {
+    debug_assert_eq!(g_pre.len(), u.len());
+    debug_assert_eq!(g_pre.len(), prod.len());
+    for i in 0..g_pre.len() {
+        prod[i] = silu(g_pre[i]) * u[i];
+    }
+}
+
+/// SwiGLU backward: given the saved pre-activations and the upstream
+/// dprod, writes du and dg_pre (both overwritten):
+///   du      = dprod * silu(g_pre)
+///   dg_pre  = dprod * u * sg * (1 + g_pre*(1 - sg)),  sg = sigmoid(g_pre)
+pub fn swiglu_bwd(g_pre: &[f32], u: &[f32], dprod: &[f32],
+                  du: &mut [f32], dg_pre: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    simd::swiglu_bwd(g_pre, u, dprod, du, dg_pre);
+    #[cfg(not(feature = "simd"))]
+    swiglu_bwd_scalar(g_pre, u, dprod, du, dg_pre);
+}
+
+/// Scalar reference body for [`swiglu_bwd`].
+pub fn swiglu_bwd_scalar(g_pre: &[f32], u: &[f32], dprod: &[f32],
+                         du: &mut [f32], dg_pre: &mut [f32]) {
+    debug_assert_eq!(g_pre.len(), u.len());
+    debug_assert_eq!(g_pre.len(), dprod.len());
+    debug_assert_eq!(g_pre.len(), du.len());
+    debug_assert_eq!(g_pre.len(), dg_pre.len());
+    for i in 0..g_pre.len() {
+        let gp = g_pre[i];
+        let sg = sigmoid(gp);
+        du[i] = dprod[i] * gp * sg;
+        dg_pre[i] = dprod[i] * u[i] * sg * (1.0 + gp * (1.0 - sg));
+    }
+}
+
 #[inline]
 pub fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
@@ -145,6 +238,220 @@ pub fn sigmoid(x: f32) -> f32 {
 #[inline]
 pub fn silu(x: f32) -> f32 {
     x * sigmoid(x)
+}
+
+/// 8-wide `std::simd` bodies.  Every vector expression mirrors the
+/// scalar reference's operand association term for term (left-to-right,
+/// same grouping), and reductions stay scalar, so each of these is
+/// bit-for-bit against its `_scalar` twin — pinned by
+/// `tests/kernel_tiers.rs` and the in-module tests below.
+#[cfg(feature = "simd")]
+mod simd {
+    use super::{sigmoid, silu, ADAMW_BETA1, ADAMW_BETA2, ADAMW_EPS};
+    use std::simd::{Simd, StdFloat};
+
+    const L: usize = 8;
+    type F8 = Simd<f32, L>;
+
+    pub(super) fn fused_adamw(p: &mut [f32], m: &mut [f32], v: &mut [f32],
+                              g: &[f32], t: f32, lr: f32, wd: f32) {
+        debug_assert_eq!(p.len(), g.len());
+        debug_assert_eq!(m.len(), g.len());
+        debug_assert_eq!(v.len(), g.len());
+        let bc1 = 1.0 / (1.0 - ADAMW_BETA1.powf(t));
+        let bc2 = 1.0 / (1.0 - ADAMW_BETA2.powf(t));
+        let n = p.len();
+        let main = n - n % L;
+        let b1 = F8::splat(ADAMW_BETA1);
+        let b1c = F8::splat(1.0 - ADAMW_BETA1);
+        let b2 = F8::splat(ADAMW_BETA2);
+        let b2c = F8::splat(1.0 - ADAMW_BETA2);
+        let bc1v = F8::splat(bc1);
+        let bc2v = F8::splat(bc2);
+        let epsv = F8::splat(ADAMW_EPS);
+        let lrv = F8::splat(lr);
+        let wdv = F8::splat(wd);
+        let mut i = 0;
+        while i < main {
+            let gv = F8::from_slice(&g[i..i + L]);
+            let mv = F8::from_slice(&m[i..i + L]);
+            let vv = F8::from_slice(&v[i..i + L]);
+            let pv = F8::from_slice(&p[i..i + L]);
+            let mi = b1 * mv + b1c * gv;
+            let vi = b2 * vv + b2c * gv * gv;
+            let update = (mi * bc1v) / ((vi * bc2v).sqrt() + epsv);
+            let pn = pv - lrv * (update + wdv * pv);
+            pn.copy_to_slice(&mut p[i..i + L]);
+            mi.copy_to_slice(&mut m[i..i + L]);
+            vi.copy_to_slice(&mut v[i..i + L]);
+            i += L;
+        }
+        super::fused_adamw_scalar(&mut p[main..], &mut m[main..], &mut v[main..],
+                                  &g[main..], t, lr, wd);
+    }
+
+    pub(super) fn rmsnorm_fwd(x: &[f32], g: &[f32], n: usize, eps: f32)
+                              -> (Vec<f32>, Vec<f32>) {
+        debug_assert_eq!(g.len(), n);
+        debug_assert_eq!(x.len() % n, 0);
+        let rows = x.len() / n;
+        let mut out = vec![0f32; x.len()];
+        let mut inv = vec![0f32; rows];
+        let main = n - n % L;
+        for r in 0..rows {
+            let xr = &x[r * n..(r + 1) * n];
+            // the row reduction stays scalar f64: fixed order is the
+            // contract, and a lane reduction would reorder it
+            let mut ss = 0f64;
+            for &xv in xr {
+                ss += xv as f64 * xv as f64;
+            }
+            let rr = (1.0 / (ss / n as f64 + eps as f64).sqrt()) as f32;
+            inv[r] = rr;
+            let orow = &mut out[r * n..(r + 1) * n];
+            let rrv = F8::splat(rr);
+            let mut j = 0;
+            while j < main {
+                let xv = F8::from_slice(&xr[j..j + L]);
+                let gv = F8::from_slice(&g[j..j + L]);
+                (xv * rrv * gv).copy_to_slice(&mut orow[j..j + L]);
+                j += L;
+            }
+            for j in main..n {
+                orow[j] = xr[j] * rr * g[j];
+            }
+        }
+        (out, inv)
+    }
+
+    pub(super) fn rmsnorm_bwd(x: &[f32], g: &[f32], inv_rms: &[f32], dy: &[f32],
+                              n: usize, dx: &mut [f32], dg: &mut [f32]) {
+        debug_assert_eq!(x.len(), dy.len());
+        debug_assert_eq!(x.len(), dx.len());
+        debug_assert_eq!(g.len(), n);
+        debug_assert_eq!(dg.len(), n);
+        let rows = x.len() / n;
+        debug_assert_eq!(inv_rms.len(), rows);
+        let main = n - n % L;
+        for r in 0..rows {
+            let xr = &x[r * n..(r + 1) * n];
+            let dyr = &dy[r * n..(r + 1) * n];
+            let rr = inv_rms[r];
+            let mut s = 0f64;
+            for j in 0..n {
+                s += (dyr[j] * g[j] * xr[j]) as f64;
+            }
+            let coef = ((rr as f64).powi(3) * s / n as f64) as f32;
+            let dxr = &mut dx[r * n..(r + 1) * n];
+            let rrv = F8::splat(rr);
+            let coefv = F8::splat(coef);
+            let mut j = 0;
+            while j < main {
+                let xv = F8::from_slice(&xr[j..j + L]);
+                let dyv = F8::from_slice(&dyr[j..j + L]);
+                let gv = F8::from_slice(&g[j..j + L]);
+                let dgv = F8::from_slice(&dg[j..j + L]);
+                (rrv * gv * dyv - xv * coefv).copy_to_slice(&mut dxr[j..j + L]);
+                (dgv + dyv * xv * rrv).copy_to_slice(&mut dg[j..j + L]);
+                j += L;
+            }
+            for j in main..n {
+                dxr[j] = rr * g[j] * dyr[j] - xr[j] * coef;
+                dg[j] += dyr[j] * xr[j] * rr;
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn rope_apply(x: &mut [f32], b: usize, t: usize, h: usize,
+                             hd: usize, cos: &[f32], sin: &[f32], inverse: bool) {
+        let half = hd / 2;
+        let d = h * hd;
+        debug_assert_eq!(x.len(), b * t * d);
+        let main = half - half % L;
+        for b_ in 0..b {
+            for t_ in 0..t {
+                let crow = &cos[t_ * half..(t_ + 1) * half];
+                let srow = &sin[t_ * half..(t_ + 1) * half];
+                for h_ in 0..h {
+                    let off = (b_ * t + t_) * d + h_ * hd;
+                    let mut j = 0;
+                    while j < main {
+                        let x1 = F8::from_slice(&x[off + j..off + j + L]);
+                        let x2 =
+                            F8::from_slice(&x[off + half + j..off + half + j + L]);
+                        let c = F8::from_slice(&crow[j..j + L]);
+                        let s0 = F8::from_slice(&srow[j..j + L]);
+                        let s = if inverse { -s0 } else { s0 };
+                        (x1 * c - x2 * s).copy_to_slice(&mut x[off + j..off + j + L]);
+                        (x1 * s + x2 * c)
+                            .copy_to_slice(&mut x[off + half + j..off + half + j + L]);
+                        j += L;
+                    }
+                    for j in main..half {
+                        let x1 = x[off + j];
+                        let x2 = x[off + half + j];
+                        let c = crow[j];
+                        let s = if inverse { -srow[j] } else { srow[j] };
+                        x[off + j] = x1 * c - x2 * s;
+                        x[off + half + j] = x1 * s + x2 * c;
+                    }
+                }
+            }
+        }
+    }
+
+    pub(super) fn swiglu_fwd(g_pre: &[f32], u: &[f32], prod: &mut [f32]) {
+        debug_assert_eq!(g_pre.len(), u.len());
+        debug_assert_eq!(g_pre.len(), prod.len());
+        let n = g_pre.len();
+        let main = n - n % L;
+        let mut sg = [0f32; L];
+        let mut i = 0;
+        while i < main {
+            // sigmoid goes through the same scalar libm exp as the
+            // reference — only the multiplies are vector-wide
+            for (l, s) in sg.iter_mut().enumerate() {
+                *s = sigmoid(g_pre[i + l]);
+            }
+            let sgv = F8::from_array(sg);
+            let gv = F8::from_slice(&g_pre[i..i + L]);
+            let uv = F8::from_slice(&u[i..i + L]);
+            (gv * sgv * uv).copy_to_slice(&mut prod[i..i + L]);
+            i += L;
+        }
+        for i in main..n {
+            prod[i] = silu(g_pre[i]) * u[i];
+        }
+    }
+
+    pub(super) fn swiglu_bwd(g_pre: &[f32], u: &[f32], dprod: &[f32],
+                             du: &mut [f32], dg_pre: &mut [f32]) {
+        debug_assert_eq!(g_pre.len(), u.len());
+        debug_assert_eq!(g_pre.len(), dprod.len());
+        debug_assert_eq!(g_pre.len(), du.len());
+        debug_assert_eq!(g_pre.len(), dg_pre.len());
+        let n = g_pre.len();
+        let main = n - n % L;
+        let one = F8::splat(1.0);
+        let mut sg = [0f32; L];
+        let mut i = 0;
+        while i < main {
+            for (l, s) in sg.iter_mut().enumerate() {
+                *s = sigmoid(g_pre[i + l]);
+            }
+            let sgv = F8::from_array(sg);
+            let gv = F8::from_slice(&g_pre[i..i + L]);
+            let uv = F8::from_slice(&u[i..i + L]);
+            let dpv = F8::from_slice(&dprod[i..i + L]);
+            (dpv * gv * sgv).copy_to_slice(&mut du[i..i + L]);
+            (dpv * uv * sgv * (one + gv * (one - sgv)))
+                .copy_to_slice(&mut dg_pre[i..i + L]);
+            i += L;
+        }
+        super::swiglu_bwd_scalar(&g_pre[main..], &u[main..], &dprod[main..],
+                                 &mut du[main..], &mut dg_pre[main..]);
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +478,72 @@ mod tests {
             assert!((p[i] - pi).abs() < 1e-6, "p[{i}]");
             assert!((m[i] - mi).abs() < 1e-7, "m[{i}]");
             assert!((v[i] - vi).abs() < 1e-7, "v[{i}]");
+        }
+    }
+
+    /// Tier::Exact pinned at the source for every dispatched kernel:
+    /// the active bodies (SIMD when the feature is on) must reproduce
+    /// the `_scalar` references bit-for-bit, including non-multiple-of-8
+    /// tails.
+    #[test]
+    fn active_kernels_are_bit_identical_to_scalar_references() {
+        let mut rng = Rng::new(31);
+        for n in [1usize, 7, 8, 16, 19, 64, 200] {
+            let len = 3 * n;
+            let g: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            // adamw
+            let p0: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let m0: Vec<f32> = (0..len).map(|_| 0.1 * rng.normal_f32()).collect();
+            let v0: Vec<f32> = (0..len).map(|_| rng.normal_f32().powi(2)).collect();
+            let (mut pa, mut ma, mut va) = (p0.clone(), m0.clone(), v0.clone());
+            let (mut ps, mut ms, mut vs) = (p0.clone(), m0.clone(), v0.clone());
+            fused_adamw(&mut pa, &mut ma, &mut va, &g, 5.0, 0.01, 0.1);
+            fused_adamw_scalar(&mut ps, &mut ms, &mut vs, &g, 5.0, 0.01, 0.1);
+            assert_eq!(pa, ps, "adamw p, n={n}");
+            assert_eq!(ma, ms, "adamw m, n={n}");
+            assert_eq!(va, vs, "adamw v, n={n}");
+            // rmsnorm fwd + bwd
+            let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let gn: Vec<f32> = (0..n).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect();
+            let dy: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let (ya, inva) = rmsnorm_fwd(&x, &gn, n, 1e-6);
+            let (ys, invs) = rmsnorm_fwd_scalar(&x, &gn, n, 1e-6);
+            assert_eq!(ya, ys, "rmsnorm y, n={n}");
+            assert_eq!(inva, invs, "rmsnorm inv, n={n}");
+            let mut dxa = vec![0f32; len];
+            let mut dga = vec![0.5f32; n];
+            let mut dxs = vec![0f32; len];
+            let mut dgs = vec![0.5f32; n];
+            rmsnorm_bwd(&x, &gn, &inva, &dy, n, &mut dxa, &mut dga);
+            rmsnorm_bwd_scalar(&x, &gn, &invs, &dy, n, &mut dxs, &mut dgs);
+            assert_eq!(dxa, dxs, "rmsnorm dx, n={n}");
+            assert_eq!(dga, dgs, "rmsnorm dg, n={n}");
+            // swiglu fwd + bwd
+            let u: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+            let mut prod_a = vec![0f32; len];
+            let mut prod_s = vec![0f32; len];
+            swiglu_fwd(&x, &u, &mut prod_a);
+            swiglu_fwd_scalar(&x, &u, &mut prod_s);
+            assert_eq!(prod_a, prod_s, "swiglu prod, n={n}");
+            let (mut dua, mut dgpa) = (vec![0f32; len], vec![0f32; len]);
+            let (mut dus, mut dgps) = (vec![0f32; len], vec![0f32; len]);
+            swiglu_bwd(&x, &u, &dy, &mut dua, &mut dgpa);
+            swiglu_bwd_scalar(&x, &u, &dy, &mut dus, &mut dgps);
+            assert_eq!(dua, dus, "swiglu du, n={n}");
+            assert_eq!(dgpa, dgps, "swiglu dg_pre, n={n}");
+        }
+        // rope (head_dim covers vector + tail lanes)
+        for hd in [8usize, 16, 20] {
+            let (b, t, h) = (2usize, 3, 2);
+            let (cos, sin) = rope_tables(t, hd, 10_000.0);
+            let x0: Vec<f32> = (0..b * t * h * hd).map(|_| rng.normal_f32()).collect();
+            for inverse in [false, true] {
+                let mut xa = x0.clone();
+                let mut xs = x0.clone();
+                rope_apply(&mut xa, b, t, h, hd, &cos, &sin, inverse);
+                rope_apply_scalar(&mut xs, b, t, h, hd, &cos, &sin, inverse);
+                assert_eq!(xa, xs, "rope hd={hd} inverse={inverse}");
+            }
         }
     }
 
@@ -218,6 +591,38 @@ mod tests {
             gm[j] -= h;
             let fd = (loss(&x, &gp) - loss(&x, &gm)) / (2.0 * h as f64);
             assert!((fd - dg[j] as f64).abs() < 2e-3, "dg[{j}]: {fd} vs {}", dg[j]);
+        }
+    }
+
+    #[test]
+    fn swiglu_bwd_matches_finite_difference() {
+        let n = 12;
+        let mut rng = Rng::new(6);
+        let g_pre: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let u: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let dprod: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let loss = |g_pre: &[f32], u: &[f32]| -> f64 {
+            let mut prod = vec![0f32; n];
+            swiglu_fwd(g_pre, u, &mut prod);
+            prod.iter().zip(&dprod).map(|(a, b)| (a * b) as f64).sum()
+        };
+        let mut du = vec![0f32; n];
+        let mut dgp = vec![0f32; n];
+        swiglu_bwd(&g_pre, &u, &dprod, &mut du, &mut dgp);
+        let h = 1e-3;
+        for i in [0usize, 4, 11] {
+            let mut gp = g_pre.clone();
+            gp[i] += h;
+            let mut gm = g_pre.clone();
+            gm[i] -= h;
+            let fd = (loss(&gp, &u) - loss(&gm, &u)) / (2.0 * h as f64);
+            assert!((fd - dgp[i] as f64).abs() < 2e-3, "dg_pre[{i}]");
+            let mut up = u.clone();
+            up[i] += h;
+            let mut um = u.clone();
+            um[i] -= h;
+            let fd = (loss(&g_pre, &up) - loss(&g_pre, &um)) / (2.0 * h as f64);
+            assert!((fd - du[i] as f64).abs() < 2e-3, "du[{i}]");
         }
     }
 

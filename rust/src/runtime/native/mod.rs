@@ -5,32 +5,47 @@
 //!
 //! Layering:
 //!
-//! * [`gemm`] — cache-blocked lane-parallel `sgemm` (+ naive reference
-//!   kept for regression benchmarking);
-//! * [`kernels`] — fused AdamW sweep, RMSNorm fwd/bwd, RoPE, silu;
-//! * [`model`] — transformer forward + hand-written backward;
-//! * [`muon`] — batched Newton-Schulz orthogonalization.
+//! * [`gemm`] — cache-blocked lane-parallel `sgemm` with an explicit
+//!   8-wide SIMD microkernel behind `--features simd` (+ naive
+//!   reference kept for regression benchmarking);
+//! * [`kernels`] — fused AdamW sweep, RMSNorm fwd/bwd, RoPE, SwiGLU
+//!   (scalar references + SIMD twins);
+//! * [`model`] — transformer forward + hand-written backward, with
+//!   flash-tiled attention;
+//! * [`muon`] — batched Newton-Schulz orthogonalization;
+//! * [`tier`] — the per-kernel determinism-tier registry and the shared
+//!   assertion harness the contract tests run through.
 //!
-//! The backend is a pure function layer: no interior mutability, every
-//! entry point takes `&self`, and all kernels fix their accumulation
-//! order independent of thread count — so the WorkerPool's bit-for-bit
-//! parallel==sequential contract holds here exactly as it does under
-//! PJRT (tests/parallel_determinism.rs runs un-skipped on this
-//! backend).
+//! The backend is a pure function layer: every step entry point takes
+//! `&self` (the only interior mutability is the precision mode, an
+//! atomic set once before training), and all kernels fix their
+//! accumulation order independent of thread count — so the WorkerPool's
+//! bit-for-bit parallel==sequential contract holds here exactly as it
+//! does under PJRT (tests/parallel_determinism.rs runs un-skipped on
+//! this backend).
+//!
+//! Batch shapes: `fwd_grad`/`eval_step` accept any token buffer that is
+//! a non-empty multiple of the manifest seq_len — the batch dimension is
+//! derived from the buffer length, so eval tails smaller than the
+//! configured microbatch run unpadded.
 
 pub mod gemm;
 pub mod kernels;
 pub mod model;
 pub mod muon;
+pub mod tier;
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 use anyhow::{bail, Result};
 
 use self::kernels::fused_adamw;
 use self::model::NativeModel;
 use self::muon::{newton_schulz_group, MUON_BETA};
-use super::backend::{Backend, Tensors};
+use super::backend::{Backend, Precision, Tensors};
 use super::manifest::{Manifest, TensorSpec};
 use crate::util::rng::Rng;
+use crate::util::round_bf16_slice;
 
 /// RoPE base / norm epsilon: configs.py defaults, shared by every
 /// ladder rung (aot.py would bake per-config overrides into the HLO;
@@ -40,13 +55,19 @@ const NORM_EPS: f32 = 1e-6;
 
 pub struct NativeBackend {
     model: NativeModel,
-    microbatch: usize,
     seq_len: usize,
     params: Vec<TensorSpec>,
     /// Muon routing (indices into the flat param list)
     hidden: Vec<usize>,
     adamw_routed: Vec<usize>,
+    /// Storage precision of step calls (`Precision` as u8; an atomic so
+    /// `set_precision` keeps the `&self` convention).  Written once by
+    /// `train()` before any step runs; step calls only load it.
+    precision: AtomicU8,
 }
+
+const PREC_F32: u8 = 0;
+const PREC_BF16: u8 = 1;
 
 impl NativeBackend {
     /// Build the backend for a manifest, verifying the manifest's
@@ -81,17 +102,52 @@ impl NativeBackend {
         let model = NativeModel::from_dims(dims, ROPE_THETA, NORM_EPS);
         Ok(NativeBackend {
             model,
-            microbatch: dims.microbatch,
             seq_len: dims.seq_len,
             params: man.params.clone(),
             hidden: man.muon_hidden_indices.clone(),
             adamw_routed: man.muon_adamw_indices.clone(),
+            precision: AtomicU8::new(PREC_F32),
         })
     }
 
-    fn batch_dims(&self, tokens: &[i32]) -> (usize, usize) {
-        debug_assert_eq!(tokens.len(), self.microbatch * self.seq_len);
-        (self.microbatch, self.seq_len)
+    /// Derive (batch, seq_len) from the token buffer: any non-empty
+    /// multiple of the manifest seq_len is a valid batch, so eval tails
+    /// smaller than the configured microbatch run unpadded.
+    fn batch_dims(&self, tokens: &[i32]) -> Result<(usize, usize)> {
+        if tokens.is_empty() || tokens.len() % self.seq_len != 0 {
+            bail!(
+                "token buffer length {} must be a non-empty multiple of \
+                 seq_len {}",
+                tokens.len(),
+                self.seq_len
+            );
+        }
+        Ok((tokens.len() / self.seq_len, self.seq_len))
+    }
+
+    fn precision(&self) -> Precision {
+        if self.precision.load(Ordering::Relaxed) == PREC_BF16 {
+            Precision::Bf16
+        } else {
+            Precision::F32
+        }
+    }
+
+    /// bf16 params-in-flight: the copy of the parameters entering a
+    /// step is stored bf16 (round-to-nearest-even), accumulation stays
+    /// f32.  No-op (no copy) under f32.
+    fn params_in_flight<'a>(&self, params: &'a Tensors, prec: Precision)
+                            -> std::borrow::Cow<'a, Tensors> {
+        match prec {
+            Precision::F32 => std::borrow::Cow::Borrowed(params),
+            Precision::Bf16 => {
+                let mut rounded = params.clone();
+                for t in rounded.iter_mut() {
+                    round_bf16_slice(t);
+                }
+                std::borrow::Cow::Owned(rounded)
+            }
+        }
     }
 }
 
@@ -139,10 +195,12 @@ impl Backend for NativeBackend {
     }
 
     fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
-        let (b, t) = self.batch_dims(tokens);
-        let acts = self.model.forward(params, tokens, b, t)?;
+        let (b, t) = self.batch_dims(tokens)?;
+        let prec = self.precision();
+        let params = self.params_in_flight(params, prec);
+        let acts = self.model.forward(&params, tokens, b, t, prec)?;
         let (loss, dlogits) = self.model.loss_and_dlogits(&acts.logits, tokens, b, t);
-        let grads = self.model.backward(params, tokens, &acts, &dlogits, b, t);
+        let grads = self.model.backward(&params, tokens, &acts, &dlogits, b, t);
         Ok((loss as f32, grads))
     }
 
@@ -234,9 +292,20 @@ impl Backend for NativeBackend {
     }
 
     fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
-        let (b, t) = self.batch_dims(tokens);
-        let acts = self.model.forward(params, tokens, b, t)?;
+        let (b, t) = self.batch_dims(tokens)?;
+        let prec = self.precision();
+        let params = self.params_in_flight(params, prec);
+        let acts = self.model.forward(&params, tokens, b, t, prec)?;
         let (loss, acc) = self.model.metrics(&acts.logits, tokens, b, t);
         Ok((loss as f32, acc as f32))
+    }
+
+    fn set_precision(&self, precision: Precision) -> Result<()> {
+        let code = match precision {
+            Precision::F32 => PREC_F32,
+            Precision::Bf16 => PREC_BF16,
+        };
+        self.precision.store(code, Ordering::Relaxed);
+        Ok(())
     }
 }

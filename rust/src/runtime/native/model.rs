@@ -6,25 +6,45 @@
 //! Parameters arrive as the canonical flat list defined by
 //! `Manifest::canonical_param_specs` (embed, per-layer [norm, wq, wk,
 //! wv, qnorm, knorm, wo, norm, norm, wg, wu, wd, norm], norm_f, head).
-//! The big projections run through the blocked GEMM layer; attention's
-//! per-(batch, head) T x T work uses direct loops over contiguous
-//! head slices.  Loss is the mean next-token cross-entropy over
-//! (microbatch, seq_len - 1) positions, reduced in f64 (the finite-
-//! difference gradient checks in tests/native_backend.rs lean on that
-//! headroom).
+//! The big projections run through the blocked GEMM layer; attention is
+//! flash-tiled (`sdpa_flash_fwd`/`sdpa_flash_bwd`): blocked KV with
+//! online softmax rescaling in the forward, probability recomputation
+//! from the saved logsumexp in the backward — so attention memory is
+//! O(b*h*t) for the saved statistics instead of the O(b*h*t^2)
+//! materialized softmax, and seq_len can grow past the manifest default
+//! without the activation record exploding.  Loss is the mean
+//! next-token cross-entropy over (microbatch, seq_len - 1) positions,
+//! reduced in f64 (the finite-difference gradient checks in
+//! tests/native_backend.rs lean on that headroom).
 //!
 //! Everything is a pure function of (params, tokens) with fixed
 //! iteration order — the backbone of the native backend's bit-for-bit
-//! parallel==sequential determinism.
+//! parallel==sequential determinism.  The flash kernels keep that
+//! property (fixed ascending KV-block order, scores via the same scalar
+//! `dot_head`, value accumulation via the fixed-order `axpy`), but they
+//! are `Tier::Toleranced` against the materialized reference
+//! (`sdpa_materialized_fwd`/`_bwd`, kept for the tier tests): online
+//! rescaling and exp(s - lse) recomputation regroup the same math, so
+//! the two agree to a small relative bound rather than bit-for-bit.
+//! See `runtime/native/tier.rs`.
+//!
+//! Mixed precision: `forward` takes the session [`Precision`].  Under
+//! `Bf16`, every activation-at-rest (the saved buffers backward will
+//! read, and the residual stream between layers) is rounded to bf16
+//! storage right after it is produced — round-to-nearest-even through
+//! `util::round_bf16_slice` — while all accumulation (GEMMs, softmax,
+//! loss) stays f32/f64.  Per-row statistics (inv_rms, logsumexp) and
+//! logits stay f32: they are O(rows), not O(activations), and keeping
+//! them full-precision preserves the softmax/norm conditioning.
 
 use anyhow::{bail, Result};
 
 use super::gemm::{sgemm, sgemm_nt, sgemm_tn};
-use super::kernels::{rmsnorm_bwd, rmsnorm_fwd, rope_apply, rope_tables, sigmoid,
-                     silu};
-use crate::runtime::backend::Tensors;
+use super::kernels::{rmsnorm_bwd, rmsnorm_fwd, rope_apply, rope_tables,
+                     swiglu_bwd, swiglu_fwd};
+use crate::runtime::backend::{Precision, Tensors};
 use crate::runtime::manifest::ModelDims;
-use crate::util::{add_assign, axpy};
+use crate::util::{add_assign, axpy, round_bf16_slice};
 
 /// Flat-parameter offsets inside one layer's 13-tensor block.
 const O_NORM_ATT_IN: usize = 0;
@@ -41,6 +61,19 @@ const O_WU: usize = 10;
 const O_WD: usize = 11;
 const O_NORM_FFN_OUT: usize = 12;
 const LAYER_TENSORS: usize = 13;
+
+/// KV tile width of the flash SDPA loop: scores for at most this many
+/// keys are live at once per query row.
+pub const KV_BLOCK: usize = 64;
+
+/// Round a produced activation down to its storage precision (no-op
+/// for f32).
+#[inline]
+fn store(prec: Precision, buf: &mut [f32]) {
+    if prec == Precision::Bf16 {
+        round_bf16_slice(buf);
+    }
+}
 
 /// Model geometry (derived from `ModelDims`; rope/eps match configs.py
 /// defaults — every ladder rung uses them).
@@ -79,8 +112,10 @@ struct LayerActs {
     /// post-norm, post-rope q/k (what scores are computed from)
     qr: Vec<f32>,
     kr: Vec<f32>,
-    /// softmax rows, (b, h, t, t), masked entries zero
-    probs: Vec<f32>,
+    /// per-(b, h, q) softmax logsumexp — the flash statistic backward
+    /// recomputes probabilities from (replaces the old (b, h, t, t)
+    /// materialized probs)
+    lse: Vec<f32>,
     attn_out: Vec<f32>,
     /// attn_out @ wo
     proj: Vec<f32>,
@@ -131,9 +166,7 @@ impl NativeModel {
 
     /// RoPE tables for a `t`-position batch: a prefix view of the
     /// precomputed tables (row-major by position, so any t <= the
-    /// manifest seq_len is exactly the shorter table).  Session pins
-    /// every batch to the manifest shape today; if variable-length
-    /// forward ever lands (ROADMAP follow-up), extend the cache here.
+    /// manifest seq_len is exactly the shorter table).
     fn rope_for(&self, t: usize) -> Result<(&[f32], &[f32])> {
         if t > self.rope_len {
             bail!("seq len {t} exceeds the precomputed RoPE table ({})",
@@ -156,9 +189,10 @@ impl NativeModel {
     }
 
     /// Forward pass over one microbatch, recording every activation the
-    /// backward pass needs.  tokens: (b, t) row-major.
-    pub fn forward(&self, params: &Tensors, tokens: &[i32], b: usize, t: usize)
-                   -> Result<Acts> {
+    /// backward pass needs.  tokens: (b, t) row-major.  `prec` is the
+    /// storage precision of activations at rest (f32 is a no-op).
+    pub fn forward(&self, params: &Tensors, tokens: &[i32], b: usize, t: usize,
+                   prec: Precision) -> Result<Acts> {
         let (d, f, v) = (self.d, self.f, self.v);
         let (h, hd) = (self.h, self.hd);
         let bt = b * t;
@@ -180,6 +214,7 @@ impl NativeModel {
                 *o = s * scale;
             }
         }
+        store(prec, &mut x);
 
         let (cos, sin) = self.rope_for(t)?;
         let mut layers = Vec::with_capacity(self.n_layers);
@@ -200,132 +235,70 @@ impl NativeModel {
 
             // --- attention half -----------------------------------------
             let xa = x;
-            let (a_in, r1) = rmsnorm_fwd(&xa, g1, d, self.eps);
+            let (mut a_in, r1) = rmsnorm_fwd(&xa, g1, d, self.eps);
+            store(prec, &mut a_in);
             let mut qh = vec![0f32; bt * d];
             sgemm(bt, d, d, &a_in, wq, &mut qh);
+            store(prec, &mut qh);
             let mut kh = vec![0f32; bt * d];
             sgemm(bt, d, d, &a_in, wk, &mut kh);
+            store(prec, &mut kh);
             let mut vh = vec![0f32; bt * d];
             sgemm(bt, d, d, &a_in, wv, &mut vh);
+            store(prec, &mut vh);
             // QK-norm over head slices (rows of hd), then RoPE
             let (mut qr, rq) = rmsnorm_fwd(&qh, qnorm, hd, self.eps);
             let (mut kr, rk) = rmsnorm_fwd(&kh, knorm, hd, self.eps);
             rope_apply(&mut qr, b, t, h, hd, cos, sin, false);
             rope_apply(&mut kr, b, t, h, hd, cos, sin, false);
-            let mut probs = vec![0f32; b * h * t * t];
+            store(prec, &mut qr);
+            store(prec, &mut kr);
+            let mut lse = vec![0f32; b * h * t];
             let mut attn_out = vec![0f32; bt * d];
-            self.attention_fwd(&qr, &kr, &vh, &mut probs, &mut attn_out, b, t);
+            sdpa_flash_fwd(&qr, &kr, &vh, &mut lse, &mut attn_out, b, t, h, hd,
+                           d);
+            store(prec, &mut attn_out);
             let mut proj = vec![0f32; bt * d];
             sgemm(bt, d, d, &attn_out, wo, &mut proj);
+            store(prec, &mut proj);
             let (y1, r2) = rmsnorm_fwd(&proj, g2, d, self.eps);
             let mut xf = xa.clone();
             add_assign(&mut xf, &y1);
+            store(prec, &mut xf);
 
             // --- SwiGLU half ---------------------------------------------
-            let (f_in, r3) = rmsnorm_fwd(&xf, g3, d, self.eps);
+            let (mut f_in, r3) = rmsnorm_fwd(&xf, g3, d, self.eps);
+            store(prec, &mut f_in);
             let mut g_pre = vec![0f32; bt * f];
             sgemm(bt, f, d, &f_in, wg, &mut g_pre);
+            store(prec, &mut g_pre);
             let mut u = vec![0f32; bt * f];
             sgemm(bt, f, d, &f_in, wu, &mut u);
-            let prod: Vec<f32> = g_pre
-                .iter()
-                .zip(&u)
-                .map(|(gv, uv)| silu(*gv) * uv)
-                .collect();
+            store(prec, &mut u);
+            let mut prod = vec![0f32; bt * f];
+            swiglu_fwd(&g_pre, &u, &mut prod);
+            store(prec, &mut prod);
             let mut ffn_out = vec![0f32; bt * d];
             sgemm(bt, d, f, &prod, wd_, &mut ffn_out);
+            store(prec, &mut ffn_out);
             let (y2, r4) = rmsnorm_fwd(&ffn_out, g4, d, self.eps);
             let mut x_next = xf.clone();
             add_assign(&mut x_next, &y2);
+            store(prec, &mut x_next);
 
             layers.push(LayerActs {
-                xa, a_in, r1, qh, kh, vh, rq, rk, qr, kr, probs, attn_out,
+                xa, a_in, r1, qh, kh, vh, rq, rk, qr, kr, lse, attn_out,
                 proj, r2, xf, f_in, r3, g_pre, u, prod, ffn_out, r4,
             });
             x = x_next;
         }
 
         let norm_f = &params[self.idx_norm_f()];
-        let (xnorm, rf) = rmsnorm_fwd(&x, norm_f, d, self.eps);
+        let (mut xnorm, rf) = rmsnorm_fwd(&x, norm_f, d, self.eps);
+        store(prec, &mut xnorm);
         let mut logits = vec![0f32; bt * v];
         sgemm(bt, v, d, &xnorm, &params[self.idx_head()], &mut logits);
         Ok(Acts { layers, x_final: x, rf, xnorm, logits })
-    }
-
-    /// Scores + causal softmax + weighted value sum, per (batch, head).
-    #[allow(clippy::too_many_arguments)]
-    fn attention_fwd(&self, qr: &[f32], kr: &[f32], vh: &[f32], probs: &mut [f32],
-                     attn_out: &mut [f32], b: usize, t: usize) {
-        let (h, hd, d) = (self.h, self.hd, self.d);
-        let inv_sqrt = 1.0 / (hd as f32).sqrt();
-        let mut srow = vec![0f32; t];
-        for b_ in 0..b {
-            for h_ in 0..h {
-                for q_ in 0..t {
-                    let qoff = (b_ * t + q_) * d + h_ * hd;
-                    let qv = &qr[qoff..qoff + hd];
-                    let mut mx = f32::NEG_INFINITY;
-                    for k_ in 0..=q_ {
-                        let koff = (b_ * t + k_) * d + h_ * hd;
-                        let s = dot_head(qv, &kr[koff..koff + hd]) * inv_sqrt;
-                        srow[k_] = s;
-                        mx = mx.max(s);
-                    }
-                    let mut sum = 0f32;
-                    for sv in srow.iter_mut().take(q_ + 1) {
-                        let e = (*sv - mx).exp();
-                        *sv = e;
-                        sum += e;
-                    }
-                    let inv = 1.0 / sum;
-                    let pbase = ((b_ * h + h_) * t + q_) * t;
-                    for k_ in 0..=q_ {
-                        let p = srow[k_] * inv;
-                        probs[pbase + k_] = p;
-                        let koff = (b_ * t + k_) * d + h_ * hd;
-                        let orow = &mut attn_out[qoff..qoff + hd];
-                        axpy(orow, p, &vh[koff..koff + hd]);
-                    }
-                }
-            }
-        }
-    }
-
-    /// Backward through scores/softmax/value-sum.  dqr/dkr/dvh must be
-    /// zero-initialized (b*t*d).
-    #[allow(clippy::too_many_arguments)]
-    fn attention_bwd(&self, qr: &[f32], kr: &[f32], vh: &[f32], probs: &[f32],
-                     dattn: &[f32], dqr: &mut [f32], dkr: &mut [f32],
-                     dvh: &mut [f32], b: usize, t: usize) {
-        let (h, hd, d) = (self.h, self.hd, self.d);
-        let inv_sqrt = 1.0 / (hd as f32).sqrt();
-        let mut dp = vec![0f32; t];
-        for b_ in 0..b {
-            for h_ in 0..h {
-                for q_ in 0..t {
-                    let qoff = (b_ * t + q_) * d + h_ * hd;
-                    let da = &dattn[qoff..qoff + hd];
-                    let pbase = ((b_ * h + h_) * t + q_) * t;
-                    let prow = &probs[pbase..pbase + t];
-                    // dP = dattn . v, and the softmax row dot p . dP
-                    let mut pdp = 0f32;
-                    for k_ in 0..=q_ {
-                        let koff = (b_ * t + k_) * d + h_ * hd;
-                        let dpk = dot_head(da, &vh[koff..koff + hd]);
-                        dp[k_] = dpk;
-                        pdp += prow[k_] * dpk;
-                    }
-                    for k_ in 0..=q_ {
-                        let p = prow[k_];
-                        let ds = p * (dp[k_] - pdp) * inv_sqrt;
-                        let koff = (b_ * t + k_) * d + h_ * hd;
-                        axpy(&mut dqr[qoff..qoff + hd], ds, &kr[koff..koff + hd]);
-                        axpy(&mut dkr[koff..koff + hd], ds, &qr[qoff..qoff + hd]);
-                        axpy(&mut dvh[koff..koff + hd], p, da);
-                    }
-                }
-            }
-        }
     }
 
     /// Mean next-token cross-entropy over (b, t-1) positions plus its
@@ -429,12 +402,7 @@ impl NativeModel {
                      &mut dprod);
             let mut dg_pre = vec![0f32; bt * f];
             let mut du = vec![0f32; bt * f];
-            for i in 0..bt * f {
-                let gp = la.g_pre[i];
-                let sg = sigmoid(gp);
-                du[i] = dprod[i] * gp * sg;
-                dg_pre[i] = dprod[i] * la.u[i] * sg * (1.0 + gp * (1.0 - sg));
-            }
+            swiglu_bwd(&la.g_pre, &la.u, &dprod, &mut du, &mut dg_pre);
             sgemm_tn(d, f, bt, &la.f_in, &dg_pre,
                      &mut grads[self.li(layer, O_WG)]);
             sgemm_tn(d, f, bt, &la.f_in, &du, &mut grads[self.li(layer, O_WU)]);
@@ -463,8 +431,9 @@ impl NativeModel {
             let mut dqr = vec![0f32; bt * d];
             let mut dkr = vec![0f32; bt * d];
             let mut dvh = vec![0f32; bt * d];
-            self.attention_bwd(&la.qr, &la.kr, &la.vh, &la.probs, &dattn,
-                               &mut dqr, &mut dkr, &mut dvh, b, t);
+            sdpa_flash_bwd(&la.qr, &la.kr, &la.vh, &la.lse, &la.attn_out,
+                           &dattn, &mut dqr, &mut dkr, &mut dvh, b, t, h, hd,
+                           d);
             rope_apply(&mut dqr, b, t, h, hd, cos, sin, true);
             rope_apply(&mut dkr, b, t, h, hd, cos, sin, true);
             let mut dqh = vec![0f32; bt * d];
@@ -500,7 +469,190 @@ impl NativeModel {
     }
 }
 
-/// Short contiguous dot product (head slices; hd is small).
+/// Flash-tiled causal SDPA forward.  Per (batch, head, query): sweep
+/// the allowed keys in ascending KV_BLOCK tiles, maintaining a running
+/// max `m`, unnormalized mass `l` and value accumulator; when a tile
+/// raises the max, the running state is rescaled by exp(m - m_new)
+/// (online softmax).  Writes attn_out (b*t*d head slices) and the
+/// per-row logsumexp (b*h*t) the backward recomputes probabilities
+/// from.  Deterministic (fixed tile order, scalar `dot_head` scores,
+/// fixed-order `axpy` value accumulation) but Tier::Toleranced against
+/// `sdpa_materialized_fwd`: the rescaling regroups the same sums.
+#[allow(clippy::too_many_arguments)]
+pub fn sdpa_flash_fwd(qr: &[f32], kr: &[f32], vh: &[f32], lse: &mut [f32],
+                      attn_out: &mut [f32], b: usize, t: usize, h: usize,
+                      hd: usize, d: usize) {
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut sbuf = vec![0f32; KV_BLOCK];
+    let mut acc = vec![0f32; hd];
+    for b_ in 0..b {
+        for h_ in 0..h {
+            for q_ in 0..t {
+                let qoff = (b_ * t + q_) * d + h_ * hd;
+                let qv = &qr[qoff..qoff + hd];
+                let mut m = f32::NEG_INFINITY;
+                let mut l = 0f32;
+                acc.fill(0.0);
+                let mut k0 = 0;
+                while k0 <= q_ {
+                    let kend = (k0 + KV_BLOCK - 1).min(q_); // inclusive
+                    // scores + tile max first, so one exp shift serves
+                    // the whole tile
+                    let mut bm = f32::NEG_INFINITY;
+                    for (i, k_) in (k0..=kend).enumerate() {
+                        let koff = (b_ * t + k_) * d + h_ * hd;
+                        let s = dot_head(qv, &kr[koff..koff + hd]) * inv_sqrt;
+                        sbuf[i] = s;
+                        bm = bm.max(s);
+                    }
+                    let m_new = m.max(bm);
+                    // rescale the running state (exp(-inf) = 0 zeroes
+                    // the empty state on the first tile)
+                    let alpha = (m - m_new).exp();
+                    if alpha != 1.0 {
+                        for av in acc.iter_mut() {
+                            *av *= alpha;
+                        }
+                        l *= alpha;
+                    }
+                    for (i, k_) in (k0..=kend).enumerate() {
+                        let p = (sbuf[i] - m_new).exp();
+                        l += p;
+                        let koff = (b_ * t + k_) * d + h_ * hd;
+                        axpy(&mut acc, p, &vh[koff..koff + hd]);
+                    }
+                    m = m_new;
+                    k0 = kend + 1;
+                }
+                let inv = 1.0 / l;
+                let orow = &mut attn_out[qoff..qoff + hd];
+                for (o, av) in orow.iter_mut().zip(&acc) {
+                    *o = av * inv;
+                }
+                lse[(b_ * h + h_) * t + q_] = m + l.ln();
+            }
+        }
+    }
+}
+
+/// Flash-tiled causal SDPA backward: no saved probabilities — each
+/// row's softmax is recomputed as exp(score - lse), and the softmax
+/// jacobian contraction uses di = sum_d(out * dout) (equal to
+/// sum_k p_k dP_k up to rounding).  dqr/dkr/dvh must be
+/// zero-initialized (b*t*d); accumulation order over (q, k) matches
+/// the materialized reference.
+#[allow(clippy::too_many_arguments)]
+pub fn sdpa_flash_bwd(qr: &[f32], kr: &[f32], vh: &[f32], lse: &[f32],
+                      attn_out: &[f32], dattn: &[f32], dqr: &mut [f32],
+                      dkr: &mut [f32], dvh: &mut [f32], b: usize, t: usize,
+                      h: usize, hd: usize, d: usize) {
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    for b_ in 0..b {
+        for h_ in 0..h {
+            for q_ in 0..t {
+                let qoff = (b_ * t + q_) * d + h_ * hd;
+                let qv = &qr[qoff..qoff + hd];
+                let da = &dattn[qoff..qoff + hd];
+                let di = dot_head(&attn_out[qoff..qoff + hd], da);
+                let l = lse[(b_ * h + h_) * t + q_];
+                for k_ in 0..=q_ {
+                    let koff = (b_ * t + k_) * d + h_ * hd;
+                    let s = dot_head(qv, &kr[koff..koff + hd]) * inv_sqrt;
+                    let p = (s - l).exp();
+                    let dpk = dot_head(da, &vh[koff..koff + hd]);
+                    let ds = p * (dpk - di) * inv_sqrt;
+                    axpy(&mut dqr[qoff..qoff + hd], ds, &kr[koff..koff + hd]);
+                    axpy(&mut dkr[koff..koff + hd], ds, qv);
+                    axpy(&mut dvh[koff..koff + hd], p, da);
+                }
+            }
+        }
+    }
+}
+
+/// Materialized-softmax causal SDPA forward — the pre-flash reference
+/// implementation, kept as the toleranced-tier comparison kernel.
+/// Writes the full (b, h, t, t) probs (masked entries zero) and
+/// attn_out.
+#[allow(clippy::too_many_arguments)]
+pub fn sdpa_materialized_fwd(qr: &[f32], kr: &[f32], vh: &[f32],
+                             probs: &mut [f32], attn_out: &mut [f32], b: usize,
+                             t: usize, h: usize, hd: usize, d: usize) {
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut srow = vec![0f32; t];
+    for b_ in 0..b {
+        for h_ in 0..h {
+            for q_ in 0..t {
+                let qoff = (b_ * t + q_) * d + h_ * hd;
+                let qv = &qr[qoff..qoff + hd];
+                let mut mx = f32::NEG_INFINITY;
+                for k_ in 0..=q_ {
+                    let koff = (b_ * t + k_) * d + h_ * hd;
+                    let s = dot_head(qv, &kr[koff..koff + hd]) * inv_sqrt;
+                    srow[k_] = s;
+                    mx = mx.max(s);
+                }
+                let mut sum = 0f32;
+                for sv in srow.iter_mut().take(q_ + 1) {
+                    let e = (*sv - mx).exp();
+                    *sv = e;
+                    sum += e;
+                }
+                let inv = 1.0 / sum;
+                let pbase = ((b_ * h + h_) * t + q_) * t;
+                for k_ in 0..=q_ {
+                    let p = srow[k_] * inv;
+                    probs[pbase + k_] = p;
+                    let koff = (b_ * t + k_) * d + h_ * hd;
+                    let orow = &mut attn_out[qoff..qoff + hd];
+                    axpy(orow, p, &vh[koff..koff + hd]);
+                }
+            }
+        }
+    }
+}
+
+/// Materialized-softmax causal SDPA backward (reads the saved probs) —
+/// the toleranced-tier comparison kernel for `sdpa_flash_bwd`.
+/// dqr/dkr/dvh must be zero-initialized.
+#[allow(clippy::too_many_arguments)]
+pub fn sdpa_materialized_bwd(qr: &[f32], kr: &[f32], vh: &[f32], probs: &[f32],
+                             dattn: &[f32], dqr: &mut [f32], dkr: &mut [f32],
+                             dvh: &mut [f32], b: usize, t: usize, h: usize,
+                             hd: usize, d: usize) {
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut dp = vec![0f32; t];
+    for b_ in 0..b {
+        for h_ in 0..h {
+            for q_ in 0..t {
+                let qoff = (b_ * t + q_) * d + h_ * hd;
+                let da = &dattn[qoff..qoff + hd];
+                let pbase = ((b_ * h + h_) * t + q_) * t;
+                let prow = &probs[pbase..pbase + t];
+                // dP = dattn . v, and the softmax row dot p . dP
+                let mut pdp = 0f32;
+                for k_ in 0..=q_ {
+                    let koff = (b_ * t + k_) * d + h_ * hd;
+                    let dpk = dot_head(da, &vh[koff..koff + hd]);
+                    dp[k_] = dpk;
+                    pdp += prow[k_] * dpk;
+                }
+                for k_ in 0..=q_ {
+                    let p = prow[k_];
+                    let ds = p * (dp[k_] - pdp) * inv_sqrt;
+                    let koff = (b_ * t + k_) * d + h_ * hd;
+                    axpy(&mut dqr[qoff..qoff + hd], ds, &kr[koff..koff + hd]);
+                    axpy(&mut dkr[koff..koff + hd], ds, &qr[qoff..qoff + hd]);
+                    axpy(&mut dvh[koff..koff + hd], p, da);
+                }
+            }
+        }
+    }
+}
+
+/// Short contiguous dot product (head slices; hd is small).  Plain
+/// sequential f32 accumulation — this order is part of the attention
+/// determinism contract, so it stays scalar even under `simd`.
 #[inline]
 fn dot_head(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

@@ -16,8 +16,95 @@
 //! product).  As in the reference kernels, a matrix with more rows
 //! than columns works on its transpose so the gram matrix is the
 //! smaller square.
+//!
+//! Determinism: the GEMMs inherit the Tier::Exact contract from
+//! `gemm.rs`; the elementwise polynomial/residual sweeps below are pure
+//! per-lane maps (8-wide under `--features simd`, same IEEE result as
+//! the scalar loop); the Frobenius norm reduction stays scalar f64 so
+//! its accumulation order is fixed.
 
 use super::gemm::{sgemm, sgemm_nt, transpose_copy};
+
+/// out[i] = s1*a[i] + s2*out[i], elementwise — the Newton-Schulz
+/// polynomial/residual update shape.  Pure per-element map, so the
+/// SIMD form is bit-identical to the scalar loop.
+fn scale_add(out: &mut [f32], a: &[f32], s1: f32, s2: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::Simd;
+        type F8 = Simd<f32, 8>;
+        let n = out.len();
+        let main = n - n % 8;
+        let s1v = F8::splat(s1);
+        let s2v = F8::splat(s2);
+        let mut i = 0;
+        while i < main {
+            let av = F8::from_slice(&a[i..i + 8]);
+            let ov = F8::from_slice(&out[i..i + 8]);
+            (s1v * av + s2v * ov).copy_to_slice(&mut out[i..i + 8]);
+            i += 8;
+        }
+        for i in main..n {
+            out[i] = s1 * a[i] + s2 * out[i];
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (ov, av) in out.iter_mut().zip(a) {
+        *ov = s1 * av + s2 * *ov;
+    }
+}
+
+/// x[i] = a*x[i] + p[i], elementwise — the iteration's residual merge.
+fn residual_merge(x: &mut [f32], p: &[f32], a: f32) {
+    debug_assert_eq!(x.len(), p.len());
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::Simd;
+        type F8 = Simd<f32, 8>;
+        let n = x.len();
+        let main = n - n % 8;
+        let av = F8::splat(a);
+        let mut i = 0;
+        while i < main {
+            let xv = F8::from_slice(&x[i..i + 8]);
+            let pv = F8::from_slice(&p[i..i + 8]);
+            (av * xv + pv).copy_to_slice(&mut x[i..i + 8]);
+            i += 8;
+        }
+        for i in main..n {
+            x[i] = a * x[i] + p[i];
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for (xv, pv) in x.iter_mut().zip(p) {
+        *xv = a * *xv + pv;
+    }
+}
+
+/// x[i] *= s, elementwise — the Frobenius normalization sweep.
+fn scale_in_place(x: &mut [f32], s: f32) {
+    #[cfg(feature = "simd")]
+    {
+        use std::simd::Simd;
+        type F8 = Simd<f32, 8>;
+        let n = x.len();
+        let main = n - n % 8;
+        let sv = F8::splat(s);
+        let mut i = 0;
+        while i < main {
+            (F8::from_slice(&x[i..i + 8]) * sv).copy_to_slice(&mut x[i..i + 8]);
+            i += 8;
+        }
+        for i in main..n {
+            x[i] *= s;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
 
 /// Quintic coefficients from Jordan et al. (2024).
 pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
@@ -49,9 +136,7 @@ pub fn newton_schulz_group(mats: &mut [Vec<f32>], rows: usize, cols: usize,
                 ss += v as f64 * v as f64;
             }
             let inv = 1.0 / (ss.sqrt() as f32 + NS_EPS);
-            for v in x.iter_mut() {
-                *v *= inv;
-            }
+            scale_in_place(&mut x, inv);
             x
         })
         .collect();
@@ -64,13 +149,9 @@ pub fn newton_schulz_group(mats: &mut [Vec<f32>], rows: usize, cols: usize,
         for x in xs.iter_mut() {
             sgemm_nt(r, r, cc, x, x, &mut gram);
             sgemm(r, r, r, &gram, &gram, &mut poly);
-            for (pv, gv) in poly.iter_mut().zip(&gram) {
-                *pv = b * gv + c * *pv;
-            }
+            scale_add(&mut poly, &gram, b, c);
             sgemm(r, cc, r, &poly, x, &mut px);
-            for (xv, pv) in x.iter_mut().zip(&px) {
-                *xv = a * *xv + pv;
-            }
+            residual_merge(x, &px, a);
         }
     }
 

@@ -154,6 +154,16 @@ impl Backend for PjrtBackend {
 
     fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
         let cfg = &self.manifest.config;
+        // the AOT executable has the token shape baked in — unlike the
+        // native backend, no variable batch dimension here
+        if tokens.len() != cfg.microbatch * cfg.seq_len {
+            bail!(
+                "PJRT fwd_grad requires exactly microbatch*seq_len = {} \
+                 tokens, got {}",
+                cfg.microbatch * cfg.seq_len,
+                tokens.len()
+            );
+        }
         let mut inputs = Vec::with_capacity(params.len() + 1);
         for (p, spec) in params.iter().zip(&self.manifest.params) {
             inputs.push(self.tensor_buffer(p, &spec.shape)?);
@@ -252,6 +262,14 @@ impl Backend for PjrtBackend {
 
     fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
         let cfg = &self.manifest.config;
+        if tokens.len() != cfg.microbatch * cfg.seq_len {
+            bail!(
+                "PJRT eval_step requires exactly microbatch*seq_len = {} \
+                 tokens, got {}",
+                cfg.microbatch * cfg.seq_len,
+                tokens.len()
+            );
+        }
         let mut inputs = Vec::with_capacity(params.len() + 1);
         for (p, spec) in params.iter().zip(&self.manifest.params) {
             inputs.push(self.tensor_buffer(p, &spec.shape)?);

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{Backend, NS_STEPS};
+use super::backend::{Backend, Precision, NS_STEPS};
 use super::manifest::Manifest;
 use super::native::NativeBackend;
 use super::pjrt::PjrtBackend;
@@ -126,6 +126,16 @@ impl Session {
         self.backend.platform()
     }
 
+    /// Select the storage precision for subsequent step calls
+    /// (`--precision`).  Fails on backends that cannot narrow storage
+    /// (PJRT executables are compiled f32).  `train()` calls this once
+    /// before its first step; experiments sharing one session across
+    /// threads must agree on the precision (all current experiment
+    /// grids run the default f32).
+    pub fn set_precision(&self, precision: Precision) -> Result<()> {
+        self.backend.set_precision(precision)
+    }
+
     /// Initialize a fresh parameter set from a seed (deterministic).
     pub fn init_params(&self, seed: u32) -> Result<Tensors> {
         self.backend.init_params(seed)
@@ -160,16 +170,27 @@ impl Session {
         Ok(())
     }
 
+    /// Token-buffer shape check: any non-empty multiple of seq_len is a
+    /// valid batch (the backend derives the batch dimension), so eval
+    /// tails smaller than the configured microbatch run unpadded.
+    /// Backends with baked-in shapes (PJRT) enforce their stricter
+    /// requirement themselves.
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        let seq = self.manifest.config.seq_len;
+        if tokens.is_empty() || tokens.len() % seq != 0 {
+            bail!(
+                "token buffer length {} must be a non-empty multiple of \
+                 seq_len {seq}",
+                tokens.len()
+            );
+        }
+        Ok(())
+    }
+
     /// Forward+backward on one microbatch: returns (loss, grads).
     pub fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
         let t0 = Instant::now();
-        let cfg = &self.manifest.config;
-        if tokens.len() != cfg.microbatch * cfg.seq_len {
-            bail!(
-                "tokens must be microbatch*seq_len = {}",
-                cfg.microbatch * cfg.seq_len
-            );
-        }
+        self.check_tokens(tokens)?;
         self.check_params(params, "fwd_grad")?;
         let out = self.backend.fwd_grad(params, tokens)?;
         StatsCell::record(&self.stats.fwd_grad_calls, &self.stats.fwd_grad_nanos, t0);
@@ -254,13 +275,7 @@ impl Session {
     /// Eval loss + next-token accuracy on one microbatch.
     pub fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
         let t0 = Instant::now();
-        let cfg = &self.manifest.config;
-        if tokens.len() != cfg.microbatch * cfg.seq_len {
-            bail!(
-                "tokens must be microbatch*seq_len = {}",
-                cfg.microbatch * cfg.seq_len
-            );
-        }
+        self.check_tokens(tokens)?;
         self.check_params(params, "eval_step")?;
         let out = self.backend.eval_step(params, tokens)?;
         StatsCell::record(&self.stats.eval_calls, &self.stats.eval_nanos, t0);

@@ -155,6 +155,33 @@ pub fn crc32(data: &[u8]) -> u32 {
     !crc
 }
 
+/// Round an f32 to the nearest bf16-representable value (truncate the
+/// low 16 mantissa bits with round-to-nearest-even), returned as f32.
+/// This is the storage-precision simulation the `--precision bf16` mode
+/// uses for params-in-flight, activations-at-rest and collective
+/// payloads: values are *stored* with bf16 mantissas while every
+/// accumulation stays f32.  NaN payloads are preserved (quietly, by
+/// skipping the rounding carry) and +/-inf round to themselves.
+#[inline]
+pub fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep a quiet NaN with the sign + high payload bits intact
+        return f32::from_bits(bits | 0x0040_0000);
+    }
+    // round-to-nearest-even on the truncated 16 bits
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// In-place bf16 storage rounding over a slice (see [`round_bf16`]).
+#[inline]
+pub fn round_bf16_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_bf16(*x);
+    }
+}
+
 /// Median (copies + sorts).
 pub fn median(xs: &[f64]) -> f64 {
     let mut v: Vec<f64> = xs.to_vec();
@@ -232,5 +259,39 @@ mod tests {
     fn median_even_odd() {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn bf16_rounding_is_nearest_even_and_idempotent() {
+        // exactly representable values pass through
+        for x in [0.0f32, -0.0, 1.0, -2.0, 0.5, 256.0, f32::INFINITY,
+                  f32::NEG_INFINITY] {
+            assert_eq!(round_bf16(x).to_bits(), x.to_bits(), "{x}");
+        }
+        // 1 + 2^-8 is exactly halfway between 1.0 and the next bf16
+        // (1 + 2^-7): ties go to even (1.0, whose low mantissa bit is 0)
+        let halfway = f32::from_bits(0x3F80_8000);
+        assert_eq!(round_bf16(halfway), 1.0);
+        // just above the halfway point rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(round_bf16(above).to_bits(), 0x3F81_0000);
+        // a tie whose low kept bit is odd rounds away (to the even
+        // neighbour above)
+        let odd_tie = f32::from_bits(0x3F81_8000);
+        assert_eq!(round_bf16(odd_tie).to_bits(), 0x3F82_0000);
+        // idempotent: rounding a rounded value changes nothing
+        let mut xs: Vec<f32> = (0..100).map(|i| (i as f32).sin() * 3.7).collect();
+        round_bf16_slice(&mut xs);
+        let once = xs.clone();
+        round_bf16_slice(&mut xs);
+        assert_eq!(once, xs);
+        // error bound: relative error <= 2^-8 for normal values
+        for i in 0..100 {
+            let x = (i as f32 + 0.1) * 1.37;
+            let r = round_bf16(x);
+            assert!((r - x).abs() <= x.abs() * (1.0 / 256.0), "{x} -> {r}");
+        }
+        // NaN stays NaN
+        assert!(round_bf16(f32::NAN).is_nan());
     }
 }

@@ -259,6 +259,36 @@ fn masked_boundary_renormalizes_the_pseudogradient_over_survivors() {
     assert_eq!(comm.sent_per_rank[1], 0, "dropped rank must not be charged");
 }
 
+/// Checkpoint/resume composes with `--precision bf16`: the storage
+/// rounding is part of the replayed math (the run contract stays
+/// BitExact — see `runtime::native::tier::contract_for_run`), so a
+/// killed bf16 run must resume onto the uninterrupted trajectory byte
+/// for byte, exactly like f32.
+#[test]
+fn resume_under_bf16_is_bit_for_bit() {
+    use muloco::runtime::Precision;
+    let sess = sess();
+    if sess.set_precision(Precision::Bf16).is_err() {
+        eprintln!("backend has no bf16 storage mode; skipping");
+        return;
+    }
+    sess.set_precision(Precision::F32).expect("reset precision");
+    let spec = || base(0, true).precision(Precision::Bf16);
+    let full = train(&sess, &spec().build().unwrap()).unwrap();
+    let dir = tmp("bf16resume");
+    let dir_s = dir.to_string_lossy().to_string();
+    let halted = spec()
+        .save_every(4)
+        .ckpt_dir(dir_s.clone())
+        .halt_after(8)
+        .build()
+        .unwrap();
+    train(&sess, &halted).unwrap();
+    let resumed = train(&sess, &spec().resume(dir_s).build().unwrap()).unwrap();
+    assert_same(&full, &resumed, "bf16 + resume");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
 /// Checkpoint/resume composes with fault injection: the ledger and the
 /// trajectory both survive the restart.
 #[test]

@@ -198,3 +198,44 @@ fn train_parallel_matches_sequential_reference() {
     assert_eq!(seq.tokens, par.tokens);
     assert_eq!(seq.final_params, par.final_params, "final params diverged");
 }
+
+/// Same contract under `--precision bf16`: storage rounding is a pure
+/// elementwise function applied at fixed points (params-in-flight,
+/// activations-at-rest, collective payloads), so it cannot introduce
+/// thread-count dependence — the run contract stays BitExact
+/// (`tier::contract_for_run`), and parallel must still reproduce the
+/// sequential reference byte for byte.
+#[test]
+fn train_parallel_matches_sequential_reference_bf16() {
+    use muloco::runtime::Precision;
+    let dir = std::path::PathBuf::from("artifacts/nano");
+    let sess = muloco::runtime::Session::load(&dir).expect("session");
+    if sess.set_precision(Precision::Bf16).is_err() {
+        eprintln!("backend has no bf16 storage mode; skipping");
+        return;
+    }
+    sess.set_precision(Precision::F32).expect("reset precision");
+    let mut cfg = muloco::coordinator::RunSpec::new("nano", Method::Muloco)
+        .batch(32)
+        .workers(8)
+        .steps(10)
+        .sync_interval(5)
+        .eval_every(5)
+        .eval_batches(2)
+        .warmup(2)
+        .precision(Precision::Bf16)
+        .build()
+        .unwrap();
+
+    cfg.parallel = false;
+    let seq = train(&sess, &cfg).expect("sequential bf16 run");
+    cfg.parallel = true;
+    let par = train(&sess, &cfg).expect("parallel bf16 run");
+
+    assert_eq!(seq.eval_curve, par.eval_curve, "bf16 eval curves diverged");
+    assert_eq!(seq.train_curve, par.train_curve, "bf16 train curves diverged");
+    assert_eq!(seq.acc_curve, par.acc_curve, "bf16 acc curves diverged");
+    assert_eq!(seq.comm, par.comm, "bf16 comm accounting diverged");
+    assert_eq!(seq.tokens, par.tokens);
+    assert_eq!(seq.final_params, par.final_params, "bf16 final params diverged");
+}
