@@ -26,6 +26,7 @@ use crate::compress::{Compression, Compressor, NoCompression};
 
 use super::topology::{OpShape, Topology};
 use super::trace::CommTrace;
+use super::wire::{transport, WireCodec, WireFormat};
 
 /// Which reduce algorithm runs, and where its lossy steps sit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,16 +75,34 @@ impl OpKind {
 pub struct CollectiveOp<'a> {
     pub compressor: &'a dyn Compressor,
     pub kind: OpKind,
+    /// Dense word format payloads travel in (defaults to f32, which
+    /// keeps every value bit-identical to the pre-codec behaviour).
+    pub wire: WireFormat,
 }
 
 impl<'a> CollectiveOp<'a> {
     /// The fp32 baseline op.
     pub fn dense() -> CollectiveOp<'static> {
-        CollectiveOp { compressor: &NoCompression, kind: OpKind::Dense }
+        CollectiveOp {
+            compressor: &NoCompression,
+            kind: OpKind::Dense,
+            wire: WireFormat::F32,
+        }
     }
 
     pub fn new(compressor: &'a dyn Compressor, kind: OpKind) -> CollectiveOp<'a> {
-        CollectiveOp { compressor, kind }
+        CollectiveOp { compressor, kind, wire: WireFormat::F32 }
+    }
+
+    /// Select the dense word format for this op's packed wire.
+    pub fn with_wire(mut self, wire: WireFormat) -> CollectiveOp<'a> {
+        self.wire = wire;
+        self
+    }
+
+    /// The packed codec every hop of this op ships bytes through.
+    pub fn codec(&self) -> Box<dyn WireCodec + Send + Sync> {
+        self.compressor.codec(self.wire)
     }
 
     /// Run this op through `topo` on the worker buffers (in place).
@@ -135,19 +154,26 @@ pub(crate) fn broadcast(buffers: &mut [Vec<f32>], value: &[f32]) {
     }
 }
 
-/// Compress every contribution in place (quantization/sparsification
-/// #1); returns the wire bytes of one compressed tensor.
-pub(crate) fn compress_all(
+/// Ship every contribution through the packed wire (quantization/
+/// sparsification #1, now as a real encode→`Vec<u8>`→decode round
+/// trip); returns the measured transport bytes of one tensor.
+pub(crate) fn transport_all(
     buffers: &mut [Vec<f32>],
-    compressor: &dyn Compressor,
+    codec: &dyn WireCodec,
     rows: usize,
     cols: usize,
 ) -> usize {
     let mut wire = 0usize;
     for b in buffers.iter_mut() {
-        wire = compressor.compress(b, rows, cols);
+        wire = transport(codec, b, rows, cols);
     }
     wire
+}
+
+/// The dense codec for a wire format (what dense hops and intra-DC
+/// legs move, independent of the op's lossy compressor).
+pub(crate) fn dense_codec(wire: WireFormat) -> Box<dyn WireCodec + Send + Sync> {
+    NoCompression.codec(wire)
 }
 
 #[cfg(test)]
@@ -194,12 +220,30 @@ mod tests {
     }
 
     #[test]
-    fn compress_all_reports_wire_of_one_tensor() {
+    fn transport_all_measures_wire_of_one_tensor() {
+        // measured encode(..).len() must agree with the closed-form
+        // wire_bytes() on byte-aligned shapes
         let q = Quantizer::new(8, QuantMode::Linear, false);
+        let qc = q.codec(WireFormat::F32);
         let mut bufs = vec![vec![0.5f32; 64]; 4];
-        assert_eq!(compress_all(&mut bufs, &q, 1, 64), q.wire_bytes(64, 1));
+        assert_eq!(
+            transport_all(&mut bufs, qc.as_ref(), 1, 64),
+            q.wire_bytes(64, 1)
+        );
         let t = TopK::new(0.25);
+        let tc = t.codec(WireFormat::F32);
         let mut bufs = vec![vec![0.5f32; 64]; 4];
-        assert_eq!(compress_all(&mut bufs, &t, 1, 64), t.wire_bytes(64, 1));
+        assert_eq!(
+            transport_all(&mut bufs, tc.as_ref(), 1, 64),
+            t.wire_bytes(64, 1)
+        );
+    }
+
+    #[test]
+    fn bf16_wire_halves_dense_transport() {
+        let op = CollectiveOp::dense().with_wire(WireFormat::Bf16);
+        let codec = op.codec();
+        let mut bufs = vec![vec![0.5f32; 64]; 2];
+        assert_eq!(transport_all(&mut bufs, codec.as_ref(), 1, 64), 128);
     }
 }

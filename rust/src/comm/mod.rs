@@ -11,6 +11,9 @@
 //! * [`trace`] — [`CommTrace`] hop records and [`CommStats`]
 //!   aggregation; `netsim` derives wall-clock numbers from the same
 //!   traces the simulated collectives produce.
+//! * [`wire`] — packed [`WireCodec`] byte formats (dense f32/bf16,
+//!   bit-packed k-bit quant codes, delta-coded top-k).  Every hop's
+//!   byte count is the `encode(..).len()` of a real packed buffer.
 //!
 //! The retired `crate::collectives` module re-exports thin free-function
 //! shims over this subsystem for source compatibility.
@@ -18,12 +21,14 @@
 pub mod collective;
 pub mod topology;
 pub mod trace;
+pub mod wire;
 
 use std::sync::Arc;
 
 pub use collective::{CollectiveOp, OpKind};
 pub use topology::{AllToAll, Hierarchical, OpShape, Ring, Topology};
 pub use trace::{CommStats, CommTrace, Hop, LinkBandwidth, LinkClass, LinkLatency};
+pub use wire::{WireCodec, WireFormat, WireSpec};
 
 /// Config/CLI-level topology choice.  `Flat` preserves the
 /// pre-refactor per-op defaults (ring for dense/sparse, all-to-all for

@@ -28,9 +28,11 @@
 //!   broadcast.  Net semantics `Q(mean_g Q(mean_{k in g} delta_k))`.
 
 use super::collective::{
-    broadcast, check_uniform, compress_all, exact_mean, CollectiveOp, OpKind,
+    broadcast, check_uniform, dense_codec, exact_mean, transport_all,
+    CollectiveOp, OpKind,
 };
 use super::trace::{CommTrace, LinkClass};
+use super::wire::{dense_wire_bytes, transport};
 
 /// The hop shape an op needs (see [`OpKind::shape`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,22 +97,20 @@ fn flat_plan(k: usize, shape: OpShape, wire: usize) -> CommTrace {
     }
 }
 
-/// Shared flat sparse-gather dataflow: sparsify once per worker (unless
-/// error feedback already did), gather, exact fp32 mean.
+/// Shared flat sparse-gather dataflow: ship every contribution through
+/// the packed top-k wire (on presparsified buffers the re-encode is the
+/// value identity — the survivors are already the k largest), gather,
+/// exact fp32 mean.  Bytes are the measured `encode(..).len()`.
 fn flat_sparse_gather(
     buffers: &mut [Vec<f32>],
     op: &CollectiveOp<'_>,
     rows: usize,
     cols: usize,
-    presparsified: bool,
 ) -> CommTrace {
     let k = buffers.len();
-    let n = check_uniform(buffers);
-    let wire = if presparsified {
-        op.compressor.wire_bytes(n, rows)
-    } else {
-        compress_all(buffers, op.compressor, rows, cols)
-    };
+    check_uniform(buffers);
+    let codec = op.codec();
+    let wire = transport_all(buffers, codec.as_ref(), rows, cols);
     let m = exact_mean(buffers);
     broadcast(buffers, &m);
     flat_gather_trace(k, wire)
@@ -136,38 +136,41 @@ impl Topology for Ring {
         cols: usize,
     ) -> CommTrace {
         let k = buffers.len();
-        let n = check_uniform(buffers);
+        check_uniform(buffers);
         match op.kind {
             OpKind::Dense => {
-                let m = exact_mean(buffers);
+                let codec = dense_codec(op.wire);
+                let mut m = exact_mean(buffers);
+                let wire = transport(codec.as_ref(), &mut m, rows, cols);
                 broadcast(buffers, &m);
-                flat_rsag_trace(k, 4 * n)
+                flat_rsag_trace(k, wire)
             }
             // a lossy reduce on a ring compounds error per hop: each hop
-            // adds the next (compressed) contribution and recompresses
-            // the accumulator
+            // adds the next (packed) contribution and re-ships the
+            // accumulator through the wire
             OpKind::TwoQuant => {
+                let codec = op.codec();
                 let mut acc = buffers[0].clone();
-                let mut wire = op.compressor.compress(&mut acc, rows, cols);
+                let mut wire = transport(codec.as_ref(), &mut acc, rows, cols);
                 for b in buffers.iter().skip(1) {
                     let mut contrib = b.clone();
-                    let _ = op.compressor.compress(&mut contrib, rows, cols);
+                    let _ = transport(codec.as_ref(), &mut contrib, rows, cols);
                     for (a, c) in acc.iter_mut().zip(&contrib) {
                         *a += c;
                     }
                     // the hop that compounds error:
-                    wire = op.compressor.compress(&mut acc, rows, cols);
+                    wire = transport(codec.as_ref(), &mut acc, rows, cols);
                 }
                 let inv = 1.0 / k as f32;
                 for a in acc.iter_mut() {
                     *a *= inv;
                 }
-                let _ = op.compressor.compress(&mut acc, rows, cols);
+                let _ = transport(codec.as_ref(), &mut acc, rows, cols);
                 broadcast(buffers, &acc);
                 flat_rsag_trace(k, wire)
             }
-            OpKind::SparseGather { presparsified } => {
-                flat_sparse_gather(buffers, op, rows, cols, presparsified)
+            OpKind::SparseGather { .. } => {
+                flat_sparse_gather(buffers, op, rows, cols)
             }
         }
     }
@@ -193,25 +196,29 @@ impl Topology for AllToAll {
         cols: usize,
     ) -> CommTrace {
         let k = buffers.len();
-        let n = check_uniform(buffers);
+        check_uniform(buffers);
         match op.kind {
             OpKind::Dense => {
-                let m = exact_mean(buffers);
-                broadcast(buffers, &m);
-                flat_rsag_trace(k, 4 * n)
-            }
-            // exactly two lossy steps: compress every contribution (#1),
-            // shard owners reduce in fp32 (in-process: the exact mean of
-            // the compressed values), recompress the reduced shard (#2)
-            OpKind::TwoQuant => {
-                let wire = compress_all(buffers, op.compressor, rows, cols);
+                let codec = dense_codec(op.wire);
                 let mut m = exact_mean(buffers);
-                let _ = op.compressor.compress(&mut m, rows, cols);
+                let wire = transport(codec.as_ref(), &mut m, rows, cols);
                 broadcast(buffers, &m);
                 flat_rsag_trace(k, wire)
             }
-            OpKind::SparseGather { presparsified } => {
-                flat_sparse_gather(buffers, op, rows, cols, presparsified)
+            // exactly two lossy steps: pack every contribution onto the
+            // wire (#1), shard owners reduce in fp32 (in-process: the
+            // exact mean of the decoded values), re-ship the reduced
+            // shard (#2)
+            OpKind::TwoQuant => {
+                let codec = op.codec();
+                let wire = transport_all(buffers, codec.as_ref(), rows, cols);
+                let mut m = exact_mean(buffers);
+                let _ = transport(codec.as_ref(), &mut m, rows, cols);
+                broadcast(buffers, &m);
+                flat_rsag_trace(k, wire)
+            }
+            OpKind::SparseGather { .. } => {
+                flat_sparse_gather(buffers, op, rows, cols)
             }
         }
     }
@@ -323,37 +330,43 @@ impl Topology for Hierarchical {
     ) -> CommTrace {
         let k = buffers.len();
         let n = check_uniform(buffers);
+        // intra-DC legs move dense words at the wire's word width (the
+        // values stay exact f32 in-process; under `--precision bf16`
+        // the payloads are already bf16-rounded, so 2-byte pricing is
+        // honest there)
+        let dense = dense_wire_bytes(op.wire, n);
         match op.kind {
             OpKind::Dense => {
                 let (g, gs) = self.split(k);
                 let partials = Self::group_partials(buffers, g, gs);
-                let m = exact_mean(&partials);
+                let codec = dense_codec(op.wire);
+                let mut m = exact_mean(&partials);
+                let wire = transport(codec.as_ref(), &mut m, rows, cols);
                 broadcast(buffers, &m);
-                self.plan(k, OpShape::ReduceScatterGather, 4 * n, 4 * n)
+                self.plan(k, OpShape::ReduceScatterGather, wire, dense)
             }
             // lossless intra-DC reduce, then the two WAN quantizations
             // on the group partials: Q(mean_g Q(mean_{k in g} delta_k))
             OpKind::TwoQuant => {
                 let (g, gs) = self.split(k);
                 let mut partials = Self::group_partials(buffers, g, gs);
-                let wire = compress_all(&mut partials, op.compressor, rows, cols);
+                let codec = op.codec();
+                let wire =
+                    transport_all(&mut partials, codec.as_ref(), rows, cols);
                 let mut m = exact_mean(&partials);
-                let _ = op.compressor.compress(&mut m, rows, cols);
+                let _ = transport(codec.as_ref(), &mut m, rows, cols);
                 broadcast(buffers, &m);
-                self.plan(k, OpShape::ReduceScatterGather, wire, 4 * n)
+                self.plan(k, OpShape::ReduceScatterGather, wire, dense)
             }
             // sparsification happens per worker, so the reduced value is
             // identical to the flat gather; only the byte routing
             // (member -> leader -> WAN) differs
-            OpKind::SparseGather { presparsified } => {
-                let wire = if presparsified {
-                    op.compressor.wire_bytes(n, rows)
-                } else {
-                    compress_all(buffers, op.compressor, rows, cols)
-                };
+            OpKind::SparseGather { .. } => {
+                let codec = op.codec();
+                let wire = transport_all(buffers, codec.as_ref(), rows, cols);
                 let m = exact_mean(buffers);
                 broadcast(buffers, &m);
-                self.plan(k, OpShape::Gather, wire, 4 * n)
+                self.plan(k, OpShape::Gather, wire, dense)
             }
         }
     }

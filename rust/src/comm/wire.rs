@@ -1,0 +1,920 @@
+//! Packed wire formats for the simulated collectives.
+//!
+//! Until PR 7 the compressors only *simulated* compression: they
+//! rounded values in place on `Vec<f32>` buffers and the comm ledger
+//! charged bytes from the closed-form `Compressor::wire_bytes`
+//! formulas.  This module makes the byte side real: a [`WireCodec`]
+//! turns a tensor into the exact packed `Vec<u8>` a real transport
+//! would move, and back.  Collectives route every lossy (and dense)
+//! hop through `encode -> Vec<u8> -> decode`, so `CommTrace` hop bytes
+//! are `encoded.len()` — measured, not modeled.
+//!
+//! ## Codecs and layouts (all little-endian)
+//!
+//! | codec        | payload                          | metadata per group        |
+//! |--------------|----------------------------------|---------------------------|
+//! | `dense-f32`  | 4-byte f32 words                 | —                         |
+//! | `dense-bf16` | 2-byte bf16 words (RNE)          | —                         |
+//! | `q<b>-linear`| ceil(len·b/8) bit-packed codes   | f32 min + f32 max (8 B)   |
+//! | `q<b>-stat`  | ceil(len·b/8) bit-packed codes   | 2^b-entry f32 codebook    |
+//! | `topk<f>`    | keep·4 B delta-coded u32 indices | — (keep derived from n)   |
+//! |              | + keep·{4,2} B f32/bf16 values   |                           |
+//!
+//! A quantization *group* is the whole tensor, or each row when the
+//! quantizer is row-wise.  The statistical codebook is stored padded to
+//! exactly `2^bits` entries (the dedup'd strictly-increasing codebook,
+//! repeating its last value); decode re-dedups, so the pad is
+//! recoverable and the byte count matches the closed-form
+//! `wire_bytes()` charge.  Top-k stores no count header — the decoder
+//! derives `keep_count` from `n` — so its length is exactly the
+//! formula's `8·keep` on the f32 wire.
+//!
+//! ## Contracts
+//!
+//! * **Round-trip fidelity:** for finite payloads,
+//!   `decode(encode(x)) == compress(x)` *bit-for-bit* — the codec's
+//!   lossy step is the same arithmetic as the in-place simulated
+//!   compressor (same `(v-lo)/scale` rounding, same codebook
+//!   `nearest`, same top-k tie-break).  This is what lets the
+//!   topologies move real bytes while every value-level determinism
+//!   contract (parallel==sequential, ckpt-resume, tau>0) holds
+//!   unchanged.  Pinned by `tests/wire_props.rs`.
+//! * **Byte fidelity:** `encode(x).len() == wire_bytes(n, rows)`
+//!   whenever each group's `len·bits` is byte-aligned (always true for
+//!   the global mode and for the shipped row shapes); otherwise the
+//!   measured length exceeds the formula by the per-group padding,
+//!   `< groups` bytes.
+//! * **Degenerate groups:** an empty group encodes metadata only; a
+//!   constant group decodes to its fill value.  Payloads with mixed
+//!   `±0.0` in an otherwise constant linear group normalize to one
+//!   zero; non-finite payloads are outside the contract (the in-place
+//!   quantizer skips them too).
+//!
+//! Hot pack/unpack loops follow the PR 6 kernel discipline: scalar
+//! reference bodies (always compiled) plus `simd`-feature twins that
+//! mirror the scalar operand order term for term, registered in
+//! `runtime/native/tier.rs` as `Tier::Exact`.
+
+use crate::compress::{QuantMode, Quantizer, TopK};
+use crate::util::round_bf16;
+
+/// The word format dense payloads (and top-k values) travel in.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WireFormat {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl WireFormat {
+    /// Bytes per dense word.
+    pub fn word_bytes(self) -> usize {
+        match self {
+            WireFormat::F32 => 4,
+            WireFormat::Bf16 => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            WireFormat::F32 => "f32",
+            WireFormat::Bf16 => "bf16",
+        }
+    }
+}
+
+/// The `--wire` knob: explicit format, or `auto` = follow
+/// `--precision` (bf16 storage precision gets the 2-byte wire, f32
+/// keeps the 4-byte wire and stays bit-identical to the pre-codec
+/// behaviour).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WireSpec {
+    F32,
+    Bf16,
+    #[default]
+    Auto,
+}
+
+impl WireSpec {
+    pub fn parse(s: &str) -> anyhow::Result<WireSpec> {
+        match s.trim() {
+            "f32" => Ok(WireSpec::F32),
+            "bf16" => Ok(WireSpec::Bf16),
+            "auto" => Ok(WireSpec::Auto),
+            other => anyhow::bail!(
+                "unknown wire format {other:?} (expected f32, bf16 or auto)"
+            ),
+        }
+    }
+
+    /// Canonical knob-value spelling (`parse` round-trips it).
+    pub fn label(self) -> &'static str {
+        match self {
+            WireSpec::F32 => "f32",
+            WireSpec::Bf16 => "bf16",
+            WireSpec::Auto => "auto",
+        }
+    }
+
+    /// Resolve against the run's storage precision.
+    pub fn resolve(self, bf16_precision: bool) -> WireFormat {
+        match self {
+            WireSpec::F32 => WireFormat::F32,
+            WireSpec::Bf16 => WireFormat::Bf16,
+            WireSpec::Auto => {
+                if bf16_precision {
+                    WireFormat::Bf16
+                } else {
+                    WireFormat::F32
+                }
+            }
+        }
+    }
+}
+
+/// One packed wire format: tensor -> exact transport bytes -> tensor.
+pub trait WireCodec: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Pack `x` (viewed as `rows` x `cols` when row-wise grouping
+    /// applies) into the exact byte stream a real send would move.
+    fn encode(&self, x: &[f32], rows: usize, cols: usize) -> Vec<u8>;
+
+    /// Inverse of `encode` for an `n`-element tensor.  For lossy
+    /// codecs this lands on the codec's grid — bit-identical to the
+    /// in-place simulated compressor's output on the same input.
+    fn decode(&self, bytes: &[u8], n: usize, rows: usize, cols: usize) -> Vec<f32>;
+}
+
+/// Ship one tensor through a codec in place (the simulated transport):
+/// encode, "move" the packed buffer, decode into the same storage.
+/// Returns the measured transport size `encoded.len()`.
+pub fn transport(codec: &dyn WireCodec, x: &mut [f32], rows: usize, cols: usize) -> usize {
+    let bytes = codec.encode(x, rows, cols);
+    let back = codec.decode(&bytes, x.len(), rows, cols);
+    debug_assert_eq!(back.len(), x.len());
+    x.copy_from_slice(&back);
+    bytes.len()
+}
+
+/// Measured dense transport size for `n` words without packing.
+pub fn dense_wire_bytes(format: WireFormat, n: usize) -> usize {
+    format.word_bytes() * n
+}
+
+// ---------------------------------------------------------------------
+// pack/unpack primitives (scalar reference + simd twins)
+// ---------------------------------------------------------------------
+
+/// Append the bf16 words of `x` (RNE via `util::round_bf16`) to `out`.
+pub fn pack_bf16(x: &[f32], out: &mut Vec<u8>) {
+    #[cfg(feature = "simd")]
+    simd::pack_bf16(x, out);
+    #[cfg(not(feature = "simd"))]
+    pack_bf16_scalar(x, out);
+}
+
+pub fn pack_bf16_scalar(x: &[f32], out: &mut Vec<u8>) {
+    for &v in x {
+        let w = (round_bf16(v).to_bits() >> 16) as u16;
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Inverse of [`pack_bf16`]: 2-byte words back to f32 (exact — bf16 is
+/// a prefix of the f32 encoding).
+pub fn unpack_bf16(bytes: &[u8], out: &mut Vec<f32>) {
+    #[cfg(feature = "simd")]
+    simd::unpack_bf16(bytes, out);
+    #[cfg(not(feature = "simd"))]
+    unpack_bf16_scalar(bytes, out);
+}
+
+pub fn unpack_bf16_scalar(bytes: &[u8], out: &mut Vec<f32>) {
+    for w in bytes.chunks_exact(2) {
+        let bits = (u16::from_le_bytes([w[0], w[1]]) as u32) << 16;
+        out.push(f32::from_bits(bits));
+    }
+}
+
+/// Linear-quantize a group to integer codes — the exact arithmetic of
+/// `Quantizer::quantize_linear` (`((v-lo)/scale).round().clamp(..)`),
+/// emitting the grid *index* instead of the dequantized value.
+pub fn quant_codes(g: &[f32], lo: f32, scale: f32, levels_m1: f32, out: &mut Vec<u16>) {
+    #[cfg(feature = "simd")]
+    simd::quant_codes(g, lo, scale, levels_m1, out);
+    #[cfg(not(feature = "simd"))]
+    quant_codes_scalar(g, lo, scale, levels_m1, out);
+}
+
+pub fn quant_codes_scalar(g: &[f32], lo: f32, scale: f32, levels_m1: f32, out: &mut Vec<u16>) {
+    for &v in g {
+        let q = ((v - lo) / scale).round().clamp(0.0, levels_m1);
+        out.push(q as u16);
+    }
+}
+
+/// Dequantize linear codes back to grid values (`lo + q*scale`, the
+/// same expression `quantize_linear` writes in place).
+pub fn dequant_codes(codes: &[u16], lo: f32, scale: f32, out: &mut Vec<f32>) {
+    #[cfg(feature = "simd")]
+    simd::dequant_codes(codes, lo, scale, out);
+    #[cfg(not(feature = "simd"))]
+    dequant_codes_scalar(codes, lo, scale, out);
+}
+
+pub fn dequant_codes_scalar(codes: &[u16], lo: f32, scale: f32, out: &mut Vec<f32>) {
+    for &c in codes {
+        out.push(lo + c as f32 * scale);
+    }
+}
+
+/// Bit-pack `bits`-wide codes little-endian into bytes (bit cursor —
+/// code i starts at bit `i*bits` of the stream).
+pub fn pack_codes(codes: &[u16], bits: u32, out: &mut Vec<u8>) {
+    debug_assert!((1..=16).contains(&bits));
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for &c in codes {
+        acc |= (c as u64) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+}
+
+/// Inverse of [`pack_codes`] for `n` codes.
+pub fn unpack_codes(bytes: &[u8], bits: u32, n: usize) -> Vec<u16> {
+    debug_assert!((1..=16).contains(&bits));
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mask: u64 = (1u64 << bits) - 1;
+    let mut it = bytes.iter();
+    for _ in 0..n {
+        while nbits < bits {
+            acc |= (*it.next().expect("truncated code stream") as u64) << nbits;
+            nbits += 8;
+        }
+        out.push((acc & mask) as u16);
+        acc >>= bits;
+        nbits -= bits;
+    }
+    out
+}
+
+fn code_bytes(len: usize, bits: u32) -> usize {
+    (len * bits as usize + 7) / 8
+}
+
+// ---------------------------------------------------------------------
+// dense codecs
+// ---------------------------------------------------------------------
+
+/// Exact 4-byte f32 words — the identity wire.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseF32;
+
+impl WireCodec for DenseF32 {
+    fn name(&self) -> String {
+        "dense-f32".into()
+    }
+
+    fn encode(&self, x: &[f32], _rows: usize, _cols: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * x.len());
+        for &v in x {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize) -> Vec<f32> {
+        debug_assert_eq!(bytes.len(), 4 * n);
+        bytes
+            .chunks_exact(4)
+            .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+            .collect()
+    }
+}
+
+/// 2-byte bf16 words (RNE).  Lossless when the payload is already
+/// bf16-rounded (the `--precision bf16` path rounds deltas before the
+/// collective); otherwise the rounding *is* the wire's lossy step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseBf16;
+
+impl WireCodec for DenseBf16 {
+    fn name(&self) -> String {
+        "dense-bf16".into()
+    }
+
+    fn encode(&self, x: &[f32], _rows: usize, _cols: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 * x.len());
+        pack_bf16(x, &mut out);
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize) -> Vec<f32> {
+        debug_assert_eq!(bytes.len(), 2 * n);
+        let mut out = Vec::with_capacity(n);
+        unpack_bf16(bytes, &mut out);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// packed k-bit quantization
+// ---------------------------------------------------------------------
+
+/// Bit-packed k-bit codes for a [`Quantizer`], covering both `Linear`
+/// (8-byte min/max metadata) and `Statistical` (2^bits f32 codebook
+/// metadata) in global or row-wise grouping.
+#[derive(Clone, Debug)]
+pub struct PackedQuant {
+    pub q: Quantizer,
+}
+
+impl PackedQuant {
+    fn groups(&self, n: usize, rows: usize, cols: usize) -> Vec<(usize, usize)> {
+        // mirror Quantizer::compress: row groups only when rowwise
+        // with a real 2-D view
+        if self.q.rowwise && rows > 1 {
+            debug_assert_eq!(rows * cols, n);
+            (0..rows).map(|r| (r * cols, cols)).collect()
+        } else {
+            vec![(0, n)]
+        }
+    }
+
+    fn encode_linear_group(&self, g: &[f32], out: &mut Vec<u8>) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in g {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        out.extend_from_slice(&lo.to_le_bytes());
+        out.extend_from_slice(&hi.to_le_bytes());
+        if !lo.is_finite() || !hi.is_finite() || lo == hi {
+            // constant/degenerate group: codes carry no information,
+            // pad the stream so the group length stays fixed
+            out.extend(std::iter::repeat(0u8).take(code_bytes(g.len(), self.q.bits)));
+            return;
+        }
+        let levels = (1u32 << self.q.bits) as f32;
+        let scale = (hi - lo) / (levels - 1.0);
+        let mut codes = Vec::with_capacity(g.len());
+        quant_codes(g, lo, scale, levels - 1.0, &mut codes);
+        pack_codes(&codes, self.q.bits, out);
+    }
+
+    fn decode_linear_group(&self, bytes: &[u8], len: usize, out: &mut Vec<f32>) {
+        let lo = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        let hi = f32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        if !lo.is_finite() || !hi.is_finite() || lo == hi {
+            out.extend(std::iter::repeat(lo).take(len));
+            return;
+        }
+        let levels = (1u32 << self.q.bits) as f32;
+        let scale = (hi - lo) / (levels - 1.0);
+        let codes = unpack_codes(&bytes[8..], self.q.bits, len);
+        dequant_codes(&codes, lo, scale, out);
+    }
+
+    /// The dedup'd mid-quantile codebook of `Quantizer::
+    /// quantize_statistical`, bit-identical construction.
+    fn stat_codebook(&self, g: &[f32]) -> Vec<f32> {
+        let levels = (1usize << self.q.bits).min(g.len());
+        let mut sorted: Vec<f32> = g.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut codebook: Vec<f32> = (0..levels)
+            .map(|j| {
+                let q = (j as f64 + 0.5) / levels as f64;
+                sorted[((q * sorted.len() as f64) as usize).min(sorted.len() - 1)]
+            })
+            .collect();
+        codebook.dedup();
+        codebook
+    }
+
+    fn encode_stat_group(&self, g: &[f32], out: &mut Vec<u8>) {
+        let full = 1usize << self.q.bits;
+        if g.is_empty() {
+            out.extend(std::iter::repeat(0u8).take(4 * full));
+            return;
+        }
+        let codebook = self.stat_codebook(g);
+        // pad to exactly 2^bits entries by repeating the last value:
+        // the codebook is strictly increasing, so decode's dedup
+        // recovers it and the metadata size matches wire_bytes()
+        for j in 0..full {
+            let v = codebook[j.min(codebook.len() - 1)];
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut codes = Vec::with_capacity(g.len());
+        for &v in g {
+            codes.push(nearest_index(&codebook, v) as u16);
+        }
+        pack_codes(&codes, self.q.bits, out);
+    }
+
+    fn decode_stat_group(&self, bytes: &[u8], len: usize, out: &mut Vec<f32>) {
+        let full = 1usize << self.q.bits;
+        let mut codebook: Vec<f32> = bytes[..4 * full]
+            .chunks_exact(4)
+            .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+            .collect();
+        codebook.dedup();
+        let codes = unpack_codes(&bytes[4 * full..], self.q.bits, len);
+        let last = codebook.len() - 1;
+        out.extend(codes.iter().map(|&c| codebook[(c as usize).min(last)]));
+    }
+
+    fn meta_bytes(&self) -> usize {
+        match self.q.mode {
+            QuantMode::Linear => 8,
+            QuantMode::Statistical => 4 * (1usize << self.q.bits),
+        }
+    }
+}
+
+impl WireCodec for PackedQuant {
+    fn name(&self) -> String {
+        format!("packed-{}", crate::compress::Compressor::name(&self.q))
+    }
+
+    fn encode(&self, x: &[f32], rows: usize, cols: usize) -> Vec<u8> {
+        let groups = self.groups(x.len(), rows, cols);
+        let cap: usize = groups
+            .iter()
+            .map(|&(_, len)| self.meta_bytes() + code_bytes(len, self.q.bits))
+            .sum();
+        let mut out = Vec::with_capacity(cap);
+        for &(off, len) in &groups {
+            let g = &x[off..off + len];
+            match self.q.mode {
+                QuantMode::Linear => self.encode_linear_group(g, &mut out),
+                QuantMode::Statistical => self.encode_stat_group(g, &mut out),
+            }
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize, rows: usize, cols: usize) -> Vec<f32> {
+        let groups = self.groups(n, rows, cols);
+        let mut out = Vec::with_capacity(n);
+        let mut cur = 0usize;
+        for &(_, len) in &groups {
+            let gbytes = self.meta_bytes() + code_bytes(len, self.q.bits);
+            let g = &bytes[cur..cur + gbytes];
+            match self.q.mode {
+                QuantMode::Linear => self.decode_linear_group(g, len, &mut out),
+                QuantMode::Statistical => self.decode_stat_group(g, len, &mut out),
+            }
+            cur += gbytes;
+        }
+        debug_assert_eq!(cur, bytes.len());
+        out
+    }
+}
+
+/// Index of the nearest codebook entry — the index twin of
+/// `quantize::nearest` (binary search, ties to the lower neighbour).
+fn nearest_index(codebook: &[f32], v: f32) -> usize {
+    match codebook.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+        Ok(i) => i,
+        Err(i) => {
+            if i == 0 {
+                0
+            } else if i >= codebook.len() {
+                codebook.len() - 1
+            } else {
+                let lo = codebook[i - 1];
+                let hi = codebook[i];
+                if (v - lo).abs() <= (hi - v).abs() {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// top-k sparse codec
+// ---------------------------------------------------------------------
+
+/// Delta-coded survivor indices + packed values for [`TopK`].  No
+/// count header: `keep_count` is a pure function of `n`, so the f32
+/// wire length is exactly the formula's `8·keep`.  On the bf16 wire
+/// the value section narrows to 2-byte words (`6·keep` total).
+#[derive(Clone, Copy, Debug)]
+pub struct SparseTopK {
+    pub t: TopK,
+    pub values: WireFormat,
+}
+
+impl SparseTopK {
+    /// Survivor indices, ascending — the exact selection of
+    /// `TopK::compress` (strictly-above-threshold first, then ties in
+    /// index order).  Re-running it on an already-sparsified buffer
+    /// reselects a value-identical set.
+    fn survivors(&self, x: &[f32]) -> Vec<u32> {
+        let n = x.len();
+        let k = self.t.keep_count(n);
+        if k == n {
+            return (0..n as u32).collect();
+        }
+        let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        let idx = n - k;
+        mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        let thresh = mags[idx];
+        let kept = x.iter().filter(|v| v.abs() > thresh).count();
+        let mut ties_left = k.saturating_sub(kept);
+        let mut out = Vec::with_capacity(k);
+        for (i, v) in x.iter().enumerate() {
+            let a = v.abs();
+            if a > thresh {
+                out.push(i as u32);
+            } else if a == thresh && ties_left > 0 {
+                ties_left -= 1;
+                out.push(i as u32);
+            }
+        }
+        debug_assert_eq!(out.len(), k);
+        out
+    }
+}
+
+impl WireCodec for SparseTopK {
+    fn name(&self) -> String {
+        format!("sparse-topk{}-{}", self.t.frac, self.values.label())
+    }
+
+    fn encode(&self, x: &[f32], _rows: usize, _cols: usize) -> Vec<u8> {
+        if x.is_empty() {
+            return Vec::new();
+        }
+        let idxs = self.survivors(x);
+        let mut out =
+            Vec::with_capacity(idxs.len() * (4 + self.values.word_bytes()));
+        let mut prev = 0u32;
+        for (j, &i) in idxs.iter().enumerate() {
+            let delta = if j == 0 { i } else { i - prev };
+            out.extend_from_slice(&delta.to_le_bytes());
+            prev = i;
+        }
+        let vals: Vec<f32> = idxs.iter().map(|&i| x[i as usize]).collect();
+        match self.values {
+            WireFormat::F32 => {
+                for v in &vals {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            WireFormat::Bf16 => pack_bf16(&vals, &mut out),
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize) -> Vec<f32> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let k = self.t.keep_count(n);
+        let mut idxs = Vec::with_capacity(k);
+        let mut cur = 0u32;
+        for (j, w) in bytes[..4 * k].chunks_exact(4).enumerate() {
+            let delta = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+            cur = if j == 0 { delta } else { cur + delta };
+            idxs.push(cur);
+        }
+        let mut vals = Vec::with_capacity(k);
+        match self.values {
+            WireFormat::F32 => {
+                for w in bytes[4 * k..].chunks_exact(4) {
+                    vals.push(f32::from_le_bytes([w[0], w[1], w[2], w[3]]));
+                }
+            }
+            WireFormat::Bf16 => unpack_bf16(&bytes[4 * k..], &mut vals),
+        }
+        let mut out = vec![0.0f32; n];
+        for (&i, &v) in idxs.iter().zip(&vals) {
+            out[i as usize] = v;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// bench timing (pack/unpack GB/s rows in `muloco bench`)
+// ---------------------------------------------------------------------
+
+/// Median seconds for one bf16 (pack, unpack) of an `n`-element tensor.
+pub fn time_pack_unpack_bf16(n: usize, reps: usize) -> (f64, f64) {
+    let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut packed = Vec::new();
+    let pack = crate::util::median_secs(reps, || {
+        packed.clear();
+        pack_bf16(&x, &mut packed);
+    });
+    let mut out = Vec::new();
+    let unpack = crate::util::median_secs(reps, || {
+        out.clear();
+        unpack_bf16(&packed, &mut out);
+    });
+    (pack, unpack)
+}
+
+/// Median seconds for one k-bit (encode, decode) of an `n`-element
+/// tensor through the packed linear-quant codec.
+pub fn time_pack_unpack_kbit(bits: u32, n: usize, reps: usize) -> (f64, f64) {
+    let codec = PackedQuant { q: Quantizer::new(bits, QuantMode::Linear, false) };
+    let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).cos()).collect();
+    let mut packed = Vec::new();
+    let enc = crate::util::median_secs(reps, || {
+        packed = codec.encode(&x, 1, n);
+    });
+    let dec = crate::util::median_secs(reps, || {
+        let out = codec.decode(&packed, n, 1, n);
+        std::hint::black_box(out.len());
+    });
+    (enc, dec)
+}
+
+// ---------------------------------------------------------------------
+// simd twins (nightly `--features simd`; scalar bodies above are the
+// Tier::Exact references, see runtime/native/tier.rs)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "simd")]
+mod simd {
+    use std::simd::prelude::*;
+    use std::simd::StdFloat;
+
+    const L: usize = 8;
+    type F8 = Simd<f32, L>;
+    type U8x = Simd<u32, L>;
+
+    pub(super) fn pack_bf16(x: &[f32], out: &mut Vec<u8>) {
+        let n = x.len();
+        let main = n - n % L;
+        let mut i = 0;
+        while i < main {
+            let v = F8::from_slice(&x[i..i + L]);
+            let bits = v.to_bits();
+            // same integer expression as util::round_bf16, lane-wise
+            let rounded = (bits
+                + U8x::splat(0x7FFF)
+                + ((bits >> U8x::splat(16)) & U8x::splat(1)))
+                & U8x::splat(0xFFFF_0000);
+            let quiet = bits | U8x::splat(0x0040_0000);
+            let nan = v.simd_ne(v);
+            let sel = nan.select(quiet, rounded);
+            let hi = (sel >> U8x::splat(16)).cast::<u16>();
+            for w in hi.to_array() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            i += L;
+        }
+        super::pack_bf16_scalar(&x[main..], out);
+    }
+
+    pub(super) fn unpack_bf16(bytes: &[u8], out: &mut Vec<f32>) {
+        let n = bytes.len() / 2;
+        let main = n - n % L;
+        let mut i = 0;
+        while i < main {
+            let mut words = [0u16; L];
+            for (l, w) in words.iter_mut().enumerate() {
+                let o = 2 * (i + l);
+                *w = u16::from_le_bytes([bytes[o], bytes[o + 1]]);
+            }
+            let bits = Simd::<u16, L>::from_array(words).cast::<u32>()
+                << U8x::splat(16);
+            let v = F8::from_bits(bits);
+            let mut lanes = [0f32; L];
+            v.copy_to_slice(&mut lanes);
+            out.extend_from_slice(&lanes);
+            i += L;
+        }
+        super::unpack_bf16_scalar(&bytes[2 * main..], out);
+    }
+
+    pub(super) fn quant_codes(
+        g: &[f32],
+        lo: f32,
+        scale: f32,
+        levels_m1: f32,
+        out: &mut Vec<u16>,
+    ) {
+        let n = g.len();
+        let main = n - n % L;
+        let lov = F8::splat(lo);
+        let sv = F8::splat(scale);
+        let zero = F8::splat(0.0);
+        let top = F8::splat(levels_m1);
+        let mut i = 0;
+        while i < main {
+            let v = F8::from_slice(&g[i..i + L]);
+            // mirror the scalar ((v-lo)/scale).round().clamp(..) exactly
+            let q = ((v - lov) / sv).round().simd_clamp(zero, top);
+            let c = q.cast::<u16>();
+            out.extend_from_slice(&c.to_array());
+            i += L;
+        }
+        super::quant_codes_scalar(&g[main..], lo, scale, levels_m1, out);
+    }
+
+    pub(super) fn dequant_codes(codes: &[u16], lo: f32, scale: f32, out: &mut Vec<f32>) {
+        let n = codes.len();
+        let main = n - n % L;
+        let lov = F8::splat(lo);
+        let sv = F8::splat(scale);
+        let mut i = 0;
+        while i < main {
+            let c = Simd::<u16, L>::from_slice(&codes[i..i + L]).cast::<f32>();
+            let v = lov + c * sv;
+            let mut lanes = [0f32; L];
+            v.copy_to_slice(&mut lanes);
+            out.extend_from_slice(&lanes);
+            i += L;
+        }
+        super::dequant_codes_scalar(&codes[main..], lo, scale, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compressor;
+    use crate::util::rng::Rng;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn wire_spec_parses_and_resolves() {
+        assert_eq!(WireSpec::parse("auto").unwrap(), WireSpec::Auto);
+        assert_eq!(WireSpec::parse("bf16").unwrap(), WireSpec::Bf16);
+        assert!(WireSpec::parse("fp8").is_err());
+        assert_eq!(WireSpec::Auto.resolve(false), WireFormat::F32);
+        assert_eq!(WireSpec::Auto.resolve(true), WireFormat::Bf16);
+        assert_eq!(WireSpec::F32.resolve(true), WireFormat::F32);
+        for s in [WireSpec::F32, WireSpec::Bf16, WireSpec::Auto] {
+            assert_eq!(WireSpec::parse(s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn dense_f32_round_trips_bit_for_bit() {
+        let x = gaussian(257, 0);
+        let c = DenseF32;
+        let bytes = c.encode(&x, 1, x.len());
+        assert_eq!(bytes.len(), 4 * x.len());
+        assert_eq!(c.decode(&bytes, x.len(), 1, x.len()), x);
+    }
+
+    #[test]
+    fn dense_bf16_matches_round_bf16_and_halves_bytes() {
+        let x = gaussian(130, 1);
+        let c = DenseBf16;
+        let bytes = c.encode(&x, 1, x.len());
+        assert_eq!(bytes.len(), 2 * x.len());
+        let want: Vec<f32> = x.iter().map(|&v| round_bf16(v)).collect();
+        assert_eq!(c.decode(&bytes, x.len(), 1, x.len()), want);
+        // idempotent on already-rounded payloads
+        let again = c.decode(&c.encode(&want, 1, want.len()), want.len(), 1, want.len());
+        assert_eq!(again, want);
+    }
+
+    #[test]
+    fn packed_linear_round_trip_equals_in_place_compress() {
+        for bits in [2u32, 4, 8] {
+            for (rows, cols) in [(1usize, 256usize), (8, 32)] {
+                for rowwise in [false, true] {
+                    let q = Quantizer::new(bits, QuantMode::Linear, rowwise);
+                    let x = gaussian(rows * cols, 7 + bits as u64);
+                    let mut sim = x.clone();
+                    let formula = q.compress(&mut sim, rows, cols);
+                    let codec = PackedQuant { q };
+                    let bytes = codec.encode(&x, rows, cols);
+                    assert_eq!(bytes.len(), formula, "bits={bits} rw={rowwise}");
+                    assert_eq!(codec.decode(&bytes, x.len(), rows, cols), sim);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_statistical_round_trip_equals_in_place_compress() {
+        for bits in [2u32, 4, 8] {
+            for rowwise in [false, true] {
+                let q = Quantizer::new(bits, QuantMode::Statistical, rowwise);
+                let (rows, cols) = (8usize, 32usize);
+                let x = gaussian(rows * cols, 21 + bits as u64);
+                let mut sim = x.clone();
+                let formula = q.compress(&mut sim, rows, cols);
+                let codec = PackedQuant { q };
+                let bytes = codec.encode(&x, rows, cols);
+                assert_eq!(bytes.len(), formula, "bits={bits} rw={rowwise}");
+                assert_eq!(codec.decode(&bytes, x.len(), rows, cols), sim);
+            }
+        }
+    }
+
+    #[test]
+    fn topk_round_trip_equals_in_place_compress() {
+        for frac in [0.05f64, 0.25, 1.0] {
+            let t = TopK::new(frac);
+            let x = gaussian(400, 33);
+            let mut sim = x.clone();
+            let formula = t.compress(&mut sim, 1, 400);
+            let codec = SparseTopK { t, values: WireFormat::F32 };
+            let bytes = codec.encode(&x, 1, 400);
+            assert_eq!(bytes.len(), formula, "frac={frac}");
+            assert_eq!(codec.decode(&bytes, 400, 1, 400), sim);
+            // re-encoding the sparsified buffer is the identity
+            let again = codec.decode(&codec.encode(&sim, 1, 400), 400, 1, 400);
+            assert_eq!(again, sim);
+        }
+    }
+
+    #[test]
+    fn topk_bf16_wire_narrows_values() {
+        let t = TopK::new(0.25);
+        let x = gaussian(64, 40);
+        let codec = SparseTopK { t, values: WireFormat::Bf16 };
+        let bytes = codec.encode(&x, 1, 64);
+        assert_eq!(bytes.len(), 16 * (4 + 2)); // keep=16
+        let out = codec.decode(&bytes, 64, 1, 64);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 16);
+        for (o, v) in out.iter().zip(&x) {
+            if *o != 0.0 {
+                assert_eq!(*o, round_bf16(*v));
+            }
+        }
+    }
+
+    #[test]
+    fn two_bit_wire_is_one_eighth_of_dense() {
+        let n = 4096usize;
+        let x = gaussian(n, 50);
+        let dense = DenseF32.encode(&x, 1, n).len();
+        let q2 = PackedQuant { q: Quantizer::new(2, QuantMode::Linear, false) };
+        let packed = q2.encode(&x, 1, n).len();
+        assert!(packed <= dense / 8, "{packed} vs dense {dense}");
+    }
+
+    #[test]
+    fn transport_reports_encoded_len_and_lands_on_grid() {
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let mut x = gaussian(512, 60);
+        let mut sim = x.clone();
+        q.compress(&mut sim, 1, 512);
+        let codec = PackedQuant { q };
+        let moved = transport(&codec, &mut x, 1, 512);
+        assert_eq!(moved, 512 * 4 / 8 + 8);
+        assert_eq!(x, sim);
+    }
+
+    #[test]
+    fn degenerate_groups_round_trip() {
+        let q = Quantizer::new(2, QuantMode::Linear, false);
+        let codec = PackedQuant { q };
+        // constant group
+        let x = vec![0.75f32; 100];
+        let bytes = codec.encode(&x, 1, 100);
+        assert_eq!(codec.decode(&bytes, 100, 1, 100), x);
+        // empty tensor
+        let e: Vec<f32> = Vec::new();
+        let bytes = codec.encode(&e, 1, 0);
+        assert_eq!(bytes.len(), 8 + 0);
+        assert!(codec.decode(&bytes, 0, 1, 0).is_empty());
+        // statistical constant
+        let qs = PackedQuant { q: Quantizer::new(2, QuantMode::Statistical, false) };
+        let bytes = qs.encode(&x, 1, 100);
+        assert_eq!(qs.decode(&bytes, 100, 1, 100), x);
+    }
+
+    #[test]
+    fn code_packing_round_trips_all_widths() {
+        for bits in [1u32, 2, 3, 4, 7, 8, 12, 16] {
+            let max = ((1u32 << bits) - 1) as u16;
+            let codes: Vec<u16> =
+                (0..100u32).map(|i| (i * 37 % (max as u32 + 1)) as u16).collect();
+            let mut bytes = Vec::new();
+            pack_codes(&codes, bits, &mut bytes);
+            assert_eq!(bytes.len(), code_bytes(codes.len(), bits));
+            assert_eq!(unpack_codes(&bytes, bits, codes.len()), codes);
+        }
+    }
+}

@@ -19,6 +19,11 @@ pub use error_feedback::ErrorFeedback;
 pub use quantize::{QuantMode, Quantizer};
 pub use topk::TopK;
 
+use crate::comm::wire::{
+    DenseBf16, DenseF32, PackedQuant, SparseTopK, WireCodec, WireFormat,
+};
+use std::sync::Arc;
+
 /// A lossy map applied to one tensor before communication.
 pub trait Compressor {
     /// Replace `x` with its quantize/dequantize (or sparsify) image.
@@ -27,8 +32,15 @@ pub trait Compressor {
     fn compress(&self, x: &mut [f32], rows: usize, cols: usize) -> usize;
 
     /// Wire bytes for a tensor of `n` elements without running the
-    /// compressor (for analytic bandwidth models).
+    /// compressor (for analytic bandwidth models; the codec's measured
+    /// `encode(..).len()` matches this up to per-group bit padding).
     fn wire_bytes(&self, n: usize, rows: usize) -> usize;
+
+    /// The packed wire format this compressor's payloads travel in.
+    /// `decode(encode(x))` is bit-identical to `compress(x)`'s output
+    /// on the f32 wire (see `comm::wire`), so the collectives can move
+    /// real bytes without changing value semantics.
+    fn codec(&self, wire: WireFormat) -> Box<dyn WireCodec + Send + Sync>;
 
     fn name(&self) -> String;
 }
@@ -46,8 +58,55 @@ impl Compressor for NoCompression {
         4 * n
     }
 
+    fn codec(&self, wire: WireFormat) -> Box<dyn WireCodec + Send + Sync> {
+        match wire {
+            WireFormat::F32 => Box::new(DenseF32),
+            WireFormat::Bf16 => Box::new(DenseBf16),
+        }
+    }
+
     fn name(&self) -> String {
         "fp32".into()
+    }
+}
+
+/// Per-tensor compressor assignment for one sync round.  The uniform
+/// case wraps the run's single compressor; the adaptive-bit-allocation
+/// path (`--bits-budget`) swaps in a per-tensor [`Quantizer`] chosen
+/// from the EF-residual norms (see `coordinator::sync::allocate_bits`).
+#[derive(Clone)]
+pub struct CompressorSet {
+    base: Arc<dyn Compressor + Send + Sync>,
+    per_tensor: Vec<Option<Arc<dyn Compressor + Send + Sync>>>,
+}
+
+impl CompressorSet {
+    pub fn uniform(base: Arc<dyn Compressor + Send + Sync>) -> CompressorSet {
+        CompressorSet { base, per_tensor: Vec::new() }
+    }
+
+    /// Override tensor `ti`'s compressor for this round.
+    pub fn set(&mut self, ti: usize, c: Arc<dyn Compressor + Send + Sync>) {
+        if self.per_tensor.len() <= ti {
+            self.per_tensor.resize(ti + 1, None);
+        }
+        self.per_tensor[ti] = Some(c);
+    }
+
+    /// The compressor tensor `ti` goes through.
+    pub fn get(&self, ti: usize) -> &(dyn Compressor + Send + Sync) {
+        match self.per_tensor.get(ti) {
+            Some(Some(c)) => c.as_ref(),
+            _ => self.base.as_ref(),
+        }
+    }
+
+    /// Shared handle to tensor `ti`'s compressor.
+    pub fn get_arc(&self, ti: usize) -> Arc<dyn Compressor + Send + Sync> {
+        match self.per_tensor.get(ti) {
+            Some(Some(c)) => Arc::clone(c),
+            _ => Arc::clone(&self.base),
+        }
     }
 }
 

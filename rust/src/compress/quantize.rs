@@ -133,6 +133,15 @@ impl Compressor for Quantizer {
         n * self.bits as usize / 8 + groups * self.metadata_bytes_per_group()
     }
 
+    fn codec(
+        &self,
+        _wire: crate::comm::wire::WireFormat,
+    ) -> Box<dyn crate::comm::wire::WireCodec + Send + Sync> {
+        // codes are already k-bit and metadata stays f32: the packed
+        // quant wire is independent of the dense word format
+        Box::new(crate::comm::wire::PackedQuant { q: self.clone() })
+    }
+
     fn name(&self) -> String {
         format!(
             "q{}-{}{}",

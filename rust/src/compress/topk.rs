@@ -20,7 +20,10 @@ impl TopK {
         TopK { frac }
     }
 
-    fn keep_count(&self, n: usize) -> usize {
+    /// Survivor count for an `n`-element tensor (shared with the
+    /// `comm::wire::SparseTopK` codec, which derives it from `n`
+    /// instead of shipping a count header).
+    pub(crate) fn keep_count(&self, n: usize) -> usize {
         ((n as f64 * self.frac).round() as usize).clamp(1, n)
     }
 }
@@ -62,6 +65,15 @@ impl Compressor for TopK {
     fn wire_bytes(&self, n: usize, _rows: usize) -> usize {
         // value + index per kept entry (the paper's sparsity-pattern cost)
         8 * self.keep_count(n)
+    }
+
+    fn codec(
+        &self,
+        wire: crate::comm::wire::WireFormat,
+    ) -> Box<dyn crate::comm::wire::WireCodec + Send + Sync> {
+        // the survivor-value section narrows with the wire format;
+        // indices stay u32
+        Box::new(crate::comm::wire::SparseTopK { t: *self, values: wire })
     }
 
     fn name(&self) -> String {

@@ -1,6 +1,6 @@
 //! Training configuration: the knobs of Algorithms 1 & 2.
 
-use crate::comm::TopologySpec;
+use crate::comm::{TopologySpec, WireSpec};
 use crate::compress::Compression;
 use crate::runtime::Precision;
 
@@ -176,6 +176,15 @@ pub struct TrainConfig {
     /// accumulation everywhere); f32 is the exact default.  Needs the
     /// native backend — PJRT executables are compiled f32
     pub precision: Precision,
+    /// wire word format for dense payload sections of the collectives
+    /// (`auto` follows `precision`, keeping default runs bit-identical
+    /// to the modeled-bytes engine; `bf16` halves dense wire volume)
+    pub wire: WireSpec,
+    /// adaptive bit allocation: per-sync wire-byte budget split across
+    /// due tensors by error-feedback residual norm, choosing 2/4/8-bit
+    /// quantizers per tensor (0 = fixed-width; needs quantized
+    /// compression)
+    pub bits_budget: usize,
 }
 
 impl TrainConfig {
@@ -221,6 +230,8 @@ impl TrainConfig {
             seed: 17,
             parallel: true,
             precision: Precision::F32,
+            wire: WireSpec::Auto,
+            bits_budget: 0,
         }
     }
 
@@ -295,6 +306,14 @@ impl TrainConfig {
         }
         if self.save_every > 0 && self.ckpt_dir.is_empty() {
             anyhow::bail!("--save-every needs a non-empty --ckpt-dir");
+        }
+        if self.bits_budget > 0
+            && !matches!(self.compression, Compression::Quant { .. })
+        {
+            anyhow::bail!(
+                "--bits-budget re-allocates quantizer widths; it needs \
+                 quantized compression (--compression q<bits>[-stat][-row])"
+            );
         }
         if self.overlap_tau > 0 {
             if !self.method.is_local_update() {
@@ -418,6 +437,21 @@ mod tests {
         assert!(s.validate().is_err());
         s.ckpt_dir = "ckpts".into();
         assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_gates_bits_budget_on_quantization() {
+        let mut c = TrainConfig::new("nano", Method::Muloco);
+        c.bits_budget = 65536; // no quantizer to re-allocate
+        assert!(c.validate().is_err());
+        c.compression = Compression::Quant {
+            bits: 4,
+            mode: crate::compress::QuantMode::Linear,
+            rowwise: false,
+        };
+        assert!(c.validate().is_ok());
+        c.compression = Compression::TopK { frac: 0.1 };
+        assert!(c.validate().is_err());
     }
 
     #[test]

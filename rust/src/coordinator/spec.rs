@@ -28,10 +28,15 @@ use std::collections::BTreeSet;
 use anyhow::{anyhow, bail, Result};
 
 use super::config::{default_lr, Method, TrainConfig};
-use crate::comm::TopologySpec;
+use crate::comm::{TopologySpec, WireSpec};
 use crate::compress::Compression;
 use crate::runtime::Precision;
 use crate::util::json::Json;
+
+/// Version stamp written into spec files.  Bumped when a spec field
+/// changes meaning (not when knobs are merely added — unknown fields
+/// already fail loudly, and absent fields take defaults).
+pub const SPEC_VERSION: u64 = 1;
 
 /// One declared run-configuration field.
 pub struct Knob {
@@ -269,6 +274,23 @@ fn build_registry() -> Vec<Knob> {
             },
         },
         Knob {
+            name: "wire",
+            tag: "w",
+            doc: "wire word format for dense collective payload sections: \
+                  f32|bf16|auto (auto follows --precision)",
+            example: "bf16",
+            flag: false,
+            in_key: true,
+            get: |c| c.wire.label().to_string(),
+            set: |c, v| {
+                c.wire = WireSpec::parse(v)?;
+                Ok(())
+            },
+        },
+        parse_knob!("bits-budget", "bb", "65536", bits_budget,
+                    "per-sync wire-byte budget split across tensors by EF \
+                     residual norm (0 = fixed-width quantizers)"),
+        Knob {
             name: "sequential",
             tag: "",
             doc: "run the reference sequential path (bit-identical; excluded from cache keys)",
@@ -391,6 +413,8 @@ impl RunSpec {
     setter!(eval_batches, "eval-batches", usize, eval_batches);
     setter!(seed, "seed", u64, seed);
     setter!(precision, "precision", Precision, precision);
+    setter!(wire, "wire", WireSpec, wire);
+    setter!(bits_budget, "bits-budget", usize, bits_budget);
 
     pub fn parallel(mut self, parallel: bool) -> Self {
         self.cfg.parallel = parallel;
@@ -464,6 +488,22 @@ impl RunSpec {
             if key == "model" || key == "method" {
                 continue;
             }
+            if key == "spec_version" {
+                let ver = match val {
+                    Json::Num(x) => *x as u64,
+                    Json::Str(s) => s
+                        .parse()
+                        .map_err(|e| anyhow!("bad spec_version: {e}"))?,
+                    other => bail!("bad spec_version: {other:?}"),
+                };
+                if ver > SPEC_VERSION {
+                    bail!(
+                        "spec_version {ver} is newer than this binary's \
+                         {SPEC_VERSION}; refusing to guess at field semantics"
+                    );
+                }
+                continue;
+            }
             let knob = ks
                 .iter()
                 .find(|k| k.name == key)
@@ -485,25 +525,47 @@ impl RunSpec {
 /// builds back to an identical config (and hence cache key).
 pub fn spec_json(cfg: &TrainConfig) -> Json {
     let mut m = std::collections::BTreeMap::new();
+    m.insert("spec_version".to_string(), Json::Num(SPEC_VERSION as f64));
     for k in knobs() {
-        let s = (k.get)(cfg);
-        // emit a JSON number only when it reproduces the canonical
-        // string EXACTLY — a u64 seed above 2^53 would silently round
-        // through f64 and break the bit-for-bit replay guarantee, so
-        // such values stay strings
-        let v = match s.as_str() {
-            "true" => Json::Bool(true),
-            "false" => Json::Bool(false),
-            _ => match s.parse::<f64>() {
-                Ok(x) if x.is_finite() && Json::Num(x).to_string() == s => {
-                    Json::Num(x)
-                }
-                _ => Json::Str(s),
-            },
-        };
-        m.insert(k.name.to_string(), v);
+        m.insert(k.name.to_string(), typed_json((k.get)(cfg)));
     }
     Json::Obj(m)
+}
+
+/// Sparse spec file (`--dump-spec --sparse`): only the knobs whose
+/// canonical value differs from the (model, method) defaults, plus the
+/// identifying `model`/`method`/`spec_version` fields.  Loading one
+/// re-fires the default derivations for everything omitted, so the
+/// file stays readable as "what this run changed" while still building
+/// back to the identical config.
+pub fn spec_json_sparse(cfg: &TrainConfig) -> Json {
+    let base = TrainConfig::new(&cfg.model, cfg.method);
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("spec_version".to_string(), Json::Num(SPEC_VERSION as f64));
+    for k in knobs() {
+        let s = (k.get)(cfg);
+        if k.name == "model" || k.name == "method" || s != (k.get)(&base) {
+            m.insert(k.name.to_string(), typed_json(s));
+        }
+    }
+    Json::Obj(m)
+}
+
+/// Emit a JSON number only when it reproduces the canonical string
+/// EXACTLY — a u64 seed above 2^53 would silently round through f64
+/// and break the bit-for-bit replay guarantee, so such values stay
+/// strings.
+fn typed_json(s: String) -> Json {
+    match s.as_str() {
+        "true" => Json::Bool(true),
+        "false" => Json::Bool(false),
+        _ => match s.parse::<f64>() {
+            Ok(x) if x.is_finite() && Json::Num(x).to_string() == s => {
+                Json::Num(x)
+            }
+            _ => Json::Str(s),
+        },
+    }
 }
 
 #[cfg(test)]
@@ -688,6 +750,40 @@ mod tests {
         let back = RunSpec::from_json(&text).unwrap().build().unwrap();
         assert_eq!(back.seed, 9007199254740993);
         assert_eq!(cache_key(&back), cache_key(&cfg));
+    }
+
+    #[test]
+    fn sparse_spec_serializes_only_non_default_knobs() {
+        let cfg = RunSpec::new("nano", Method::Muloco)
+            .workers(4)
+            .compression(Compression::parse("q4-stat").unwrap())
+            .error_feedback(true)
+            .build()
+            .unwrap();
+        let text = spec_json_sparse(&cfg).to_string();
+        assert!(text.contains("\"spec_version\""), "{text}");
+        assert!(text.contains("\"model\"") && text.contains("\"method\""));
+        assert!(text.contains("\"workers\"") && text.contains("\"compression\""));
+        // untouched knobs stay out of the file
+        for absent in ["\"wd\"", "\"warmup\"", "\"topology\"", "\"wire\""] {
+            assert!(!text.contains(absent), "{absent} leaked into {text}");
+        }
+        // and it still builds back to the identical config
+        let back = RunSpec::from_json(&text).unwrap().build().unwrap();
+        assert_eq!(cache_key(&back), cache_key(&cfg));
+    }
+
+    #[test]
+    fn spec_version_is_checked_on_load() {
+        let ok = format!(
+            r#"{{"model": "nano", "method": "muloco", "spec_version": {SPEC_VERSION}}}"#
+        );
+        assert!(RunSpec::from_json(&ok).is_ok());
+        let newer = format!(
+            r#"{{"model": "nano", "method": "muloco", "spec_version": {}}}"#,
+            SPEC_VERSION + 1
+        );
+        assert!(RunSpec::from_json(&newer).is_err());
     }
 
     #[test]

@@ -43,9 +43,13 @@ use super::config::TrainConfig;
 use super::outer::NesterovOuter;
 use super::worker::Worker;
 use crate::ckpt::PendingSnap;
-use crate::comm::{CollectiveOp, CommStats, OpKind, Topology, TopologySpec};
-use crate::compress::{Compression, Compressor};
+use crate::comm::{
+    CollectiveOp, CommStats, OpKind, Topology, TopologySpec, WireFormat,
+    WireSpec,
+};
+use crate::compress::{Compression, CompressorSet, QuantMode, Quantizer};
 use crate::runtime::{Manifest, Precision, Tensors};
+use crate::util::rng::Rng;
 use crate::util::round_bf16_slice;
 
 /// Flat-tensor geometry the sync path needs: total element count and
@@ -176,21 +180,23 @@ struct PendingSync {
 /// `ranks` are the contributors' global worker ranks (`0..k_total`
 /// when every worker participated); per-rank byte attribution is
 /// remapped onto them, which is a no-op for the identity map.
+#[allow(clippy::too_many_arguments)]
 fn reduce_tensors(
     deltas: Vec<(usize, Vec<Vec<f32>>)>,
     metas: Vec<SyncTensorMeta>,
-    compressor: Arc<dyn Compressor + Send + Sync>,
+    compressors: CompressorSet,
     topology: Arc<dyn Topology>,
     kind: OpKind,
+    wire: WireFormat,
     ranks: Arc<Vec<usize>>,
     k_total: usize,
 ) -> Vec<ReducedTensor> {
-    let op = CollectiveOp::new(compressor.as_ref(), kind);
     deltas
         .into_iter()
         .map(|(ti, mut bufs)| {
             let meta = metas[ti];
             let p = bufs.len();
+            let op = CollectiveOp::new(compressors.get(ti), kind).with_wire(wire);
             let trace = topology.reduce_mean(&mut bufs, &op, meta.rows, meta.cols);
             let psi = bufs.into_iter().next().expect("at least one worker");
             let mut stats = trace.stats_for(p);
@@ -200,6 +206,91 @@ fn reduce_tensors(
         .collect()
 }
 
+/// The quantizer-width ladder adaptive allocation climbs.
+const BIT_LADDER: [u32; 3] = [2, 4, 8];
+
+/// Split a fixed per-sync wire-byte budget across tensors by
+/// error-feedback residual norm, choosing a quantizer width from the
+/// {2, 4, 8}-bit ladder per tensor.
+///
+/// Two phases, both deterministic:
+///
+/// 1. **Proportional base** — each tensor gets the widest ladder level
+///    whose *measured-format* cost (`Quantizer::wire_bytes`, which the
+///    packed codec reproduces byte-for-byte on aligned groups) fits its
+///    `budget * norm_i / sum(norms)` share.  All-zero norms (EF off, or
+///    the first boundary before any residual exists) fall through to
+///    the 2-bit floor for everyone.
+/// 2. **Round-robin upgrades** — remaining budget is spent one ladder
+///    level at a time in priority order: residual norm descending, ties
+///    broken by a seeded SplitMix64 draw per tensor slot, then slot
+///    index.  Passes repeat until no tensor can widen within budget.
+///
+/// The 2-bit floor is unconditional, so a budget smaller than the sum
+/// of 2-bit costs is exceeded rather than dropping tensors — the
+/// allocation degrades width, never coverage.
+pub fn allocate_bits(
+    norms: &[f64],
+    metas: &[SyncTensorMeta],
+    mode: QuantMode,
+    rowwise: bool,
+    budget: usize,
+    seed: u64,
+) -> Vec<u32> {
+    assert_eq!(norms.len(), metas.len());
+    let n = norms.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let cost = |i: usize, level: usize| -> usize {
+        Quantizer::new(BIT_LADDER[level], mode, rowwise)
+            .wire_bytes(metas[i].size, metas[i].rows)
+    };
+    let total: f64 = norms.iter().sum();
+    let mut level = vec![0usize; n];
+    if total > 0.0 {
+        for i in 0..n {
+            let share = budget as f64 * norms[i] / total;
+            for l in (1..BIT_LADDER.len()).rev() {
+                if cost(i, l) as f64 <= share {
+                    level[i] = l;
+                    break;
+                }
+            }
+        }
+    }
+    // upgrade priority: norm desc, seeded tie-break, slot index
+    let mut order: Vec<usize> = (0..n).collect();
+    let mix: Vec<u64> =
+        (0..n).map(|i| Rng::new(seed ^ i as u64).next_u64()).collect();
+    order.sort_by(|&a, &b| {
+        norms[b]
+            .partial_cmp(&norms[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(mix[a].cmp(&mix[b]))
+            .then(a.cmp(&b))
+    });
+    let mut spent: usize = (0..n).map(|i| cost(i, level[i])).sum();
+    loop {
+        let mut upgraded = false;
+        for &i in &order {
+            if level[i] + 1 >= BIT_LADDER.len() {
+                continue;
+            }
+            let next = spent - cost(i, level[i]) + cost(i, level[i] + 1);
+            if next <= budget {
+                level[i] += 1;
+                spent = next;
+                upgraded = true;
+            }
+        }
+        if !upgraded {
+            break;
+        }
+    }
+    level.into_iter().map(|l| BIT_LADDER[l]).collect()
+}
+
 /// Owns everything the sync boundary needs: schedule, collective-op
 /// pipeline, outer optimizer, tensor geometry, in-flight overlapped
 /// boundaries.
@@ -207,7 +298,11 @@ pub struct SyncEngine {
     pub plan: SyncPlan,
     metas: Vec<SyncTensorMeta>,
     outer: NesterovOuter,
-    compressor: Arc<dyn Compressor + Send + Sync>,
+    /// The run's uniform compressor choice; per-round `CompressorSet`s
+    /// start from it (and, under a bit budget, override quantizer
+    /// widths per tensor).
+    base_compression: Compression,
+    compressors: CompressorSet,
     kind: OpKind,
     topology: Arc<dyn Topology>,
     apply_ef: bool,
@@ -218,6 +313,16 @@ pub struct SyncEngine {
     /// error-feedback fold, so EF still tracks what was actually sent.
     /// The reduce itself accumulates f32.
     precision: Precision,
+    /// `--wire`: word format dense payload sections travel in.  `Auto`
+    /// follows `precision`, so default runs stay bit-identical to the
+    /// pre-codec engine.
+    wire_spec: WireSpec,
+    /// `--bits-budget`: per-sync wire-byte budget split across due
+    /// tensors by EF-residual norm (0 = fixed-width quantizers).
+    bits_budget: usize,
+    /// Seed for the allocation tie-break (from `--seed`), so budget
+    /// splits are reproducible and cache-keyed.
+    alloc_seed: u64,
 }
 
 impl SyncEngine {
@@ -242,6 +347,8 @@ impl SyncEngine {
             .with_topology(cfg.topology)
             .with_overlap(cfg.overlap_tau)
             .with_precision(cfg.precision)
+            .with_wire(cfg.wire)
+            .with_bits_budget(cfg.bits_budget, cfg.seed)
     }
 
     /// Manifest-free constructor (unit tests, synthetic workloads).
@@ -256,19 +363,22 @@ impl SyncEngine {
     ) -> SyncEngine {
         let kind = OpKind::for_run(&compression, error_feedback);
         let apply_ef = error_feedback && compression != Compression::None;
-        let compressor: Arc<dyn Compressor + Send + Sync> =
-            Arc::from(compression.build());
+        let compressors = CompressorSet::uniform(Arc::from(compression.build()));
         SyncEngine {
             plan,
             metas,
             outer,
-            compressor,
+            base_compression: compression,
+            compressors,
             kind,
             topology: TopologySpec::Flat.build(kind),
             apply_ef,
             overlap_tau: 0,
             pending: Vec::new(),
             precision: Precision::F32,
+            wire_spec: WireSpec::Auto,
+            bits_budget: 0,
+            alloc_seed: 0,
         }
     }
 
@@ -291,6 +401,71 @@ impl SyncEngine {
     pub fn with_precision(mut self, precision: Precision) -> SyncEngine {
         self.precision = precision;
         self
+    }
+
+    /// Select the dense wire word format (`--wire`).  `Auto` resolves
+    /// against the storage precision at reduce time.
+    pub fn with_wire(mut self, spec: WireSpec) -> SyncEngine {
+        self.wire_spec = spec;
+        self
+    }
+
+    /// Enable adaptive per-tensor bit allocation under a fixed
+    /// wire-byte budget per sync (`--bits-budget`); 0 disables.
+    pub fn with_bits_budget(mut self, budget: usize, seed: u64) -> SyncEngine {
+        self.bits_budget = budget;
+        self.alloc_seed = seed;
+        self
+    }
+
+    /// The wire word format this engine's collectives move dense
+    /// payload sections in.
+    fn wire(&self) -> WireFormat {
+        self.wire_spec.resolve(self.precision == Precision::Bf16)
+    }
+
+    /// The compressor set for one boundary's reduce.  Without a bit
+    /// budget (or for non-quantized runs) this is the run's uniform
+    /// compressor; with `--bits-budget` and a quantizer base, the due
+    /// tensors' widths are re-allocated from the active workers'
+    /// error-feedback residual norms (deterministic — summed in
+    /// worker-index order, seeded tie-break — so parallel, overlapped
+    /// and resumed runs allocate identically; EF residuals are part of
+    /// the checkpoint).
+    fn round_compressors(
+        &self,
+        due: &[usize],
+        workers: &[Worker<'_>],
+        active: Option<&[bool]>,
+    ) -> CompressorSet {
+        let mut set = self.compressors.clone();
+        let Compression::Quant { mode, rowwise, .. } = &self.base_compression
+        else {
+            return set;
+        };
+        let (mode, rowwise) = (*mode, *rowwise);
+        if self.bits_budget == 0 || due.is_empty() {
+            return set;
+        }
+        let norms: Vec<f64> = due
+            .iter()
+            .map(|&ti| {
+                workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| active.map(|m| m[*i]).unwrap_or(true))
+                    .map(|(_, w)| w.ef_residual_norm(ti))
+                    .sum()
+            })
+            .collect();
+        let metas: Vec<SyncTensorMeta> =
+            due.iter().map(|&ti| self.metas[ti]).collect();
+        let bits = allocate_bits(&norms, &metas, mode, rowwise,
+                                 self.bits_budget, self.alloc_seed);
+        for (&ti, &b) in due.iter().zip(&bits) {
+            set.set(ti, Arc::new(Quantizer::new(b, mode, rowwise)));
+        }
+        set
     }
 
     /// Outer-momentum diagnostics (per-tensor L2), for probes/tests.
@@ -431,12 +606,17 @@ impl SyncEngine {
         if ranks.is_empty() {
             return; // nobody to reduce over (unreachable via FaultPlan)
         }
-        let deltas = self.collect_deltas(&due, theta, workers, parallel, active);
+        // the round's compressor set reads EF residual norms from the
+        // *previous* boundary, so it must be fixed before the EF fold
+        // in collect_deltas mutates them
+        let comp_set = self.round_compressors(&due, workers, active);
+        let deltas = self.collect_deltas(&due, theta, workers, parallel,
+                                         active, &comp_set);
         if self.overlap_tau == 0 {
             self.blocking_reduce(&due, deltas, theta, workers, comm, parallel,
-                                 &ranks);
+                                 &ranks, &comp_set);
         } else {
-            self.launch_overlapped(step, deltas, parallel, ranks, k);
+            self.launch_overlapped(step, deltas, parallel, ranks, k, comp_set);
         }
     }
 
@@ -455,6 +635,7 @@ impl SyncEngine {
     /// ascending worker order (so every collective reduces identically
     /// to the sequential path).  Masked-out workers are skipped
     /// entirely: no delta, no error-feedback fold.
+    #[allow(clippy::too_many_arguments)]
     fn collect_deltas(
         &self,
         due: &[usize],
@@ -462,9 +643,9 @@ impl SyncEngine {
         workers: &mut [Worker<'_>],
         parallel: bool,
         active: Option<&[bool]>,
+        compressors: &CompressorSet,
     ) -> BTreeMap<usize, Vec<Vec<f32>>> {
         let apply_ef = self.apply_ef;
-        let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
         let metas: &[SyncTensorMeta] = &self.metas;
         let theta_ref: &Tensors = theta;
 
@@ -483,7 +664,7 @@ impl SyncEngine {
                     .map(|w| {
                         s.spawn(move || {
                             w.local_deltas(theta_ref, due, metas, apply_ef,
-                                           compressor)
+                                           compressors)
                         })
                     })
                     .collect();
@@ -496,7 +677,7 @@ impl SyncEngine {
             participants
                 .into_iter()
                 .map(|w| w.local_deltas(theta_ref, due, metas, apply_ef,
-                                        compressor))
+                                        compressors))
                 .collect()
         };
 
@@ -532,12 +713,13 @@ impl SyncEngine {
         comm: &mut CommStats,
         parallel: bool,
         ranks: &[usize],
+        compressors: &CompressorSet,
     ) {
         let k_total = workers.len();
         let metas: &[SyncTensorMeta] = &self.metas;
-        let compressor: &(dyn Compressor + Send + Sync) = self.compressor.as_ref();
         let topology: &dyn Topology = self.topology.as_ref();
         let kind = self.kind;
+        let wire = self.wire();
 
         // phase 2 — per-tensor collective + outer step.  Zipping theta
         // with the momentum slots hands each job a disjoint (theta, u)
@@ -561,7 +743,8 @@ impl SyncEngine {
             // collective: value semantics + per-hop byte accounting.
             // With an elastic mask only P <= K contributions arrive, so
             // the mean is already renormalized over the survivors
-            let op = CollectiveOp::new(compressor, kind);
+            let op = CollectiveOp::new(compressors.get(job.ti), kind)
+                .with_wire(wire);
             let trace =
                 topology.reduce_mean(&mut job.deltas, &op, meta.rows, meta.cols);
             let mut stats = trace.stats_for(p);
@@ -624,21 +807,23 @@ impl SyncEngine {
         parallel: bool,
         ranks: Vec<usize>,
         k_total: usize,
+        compressors: CompressorSet,
     ) {
         let deltas: Vec<(usize, Vec<Vec<f32>>)> = deltas.into_iter().collect();
         let metas = self.metas.clone();
-        let compressor = self.compressor.clone();
         let topology = self.topology.clone();
         let kind = self.kind;
+        let wire = self.wire();
         let ranks = Arc::new(ranks);
         let payload = if parallel {
             PendingPayload::InFlight(thread::spawn(move || {
-                reduce_tensors(deltas, metas, compressor, topology, kind,
-                               ranks, k_total)
+                reduce_tensors(deltas, metas, compressors, topology, kind,
+                               wire, ranks, k_total)
             }))
         } else {
             PendingPayload::Ready(reduce_tensors(
-                deltas, metas, compressor, topology, kind, ranks, k_total))
+                deltas, metas, compressors, topology, kind, wire, ranks,
+                k_total))
         };
         self.pending.push(PendingSync {
             apply_step: step + self.overlap_tau,
@@ -749,5 +934,65 @@ mod tests {
         assert!(plan.due_tensors(4).is_empty());
         assert_eq!(plan.due_tensors(5), vec![0, 1, 2, 3]);
         assert_eq!(plan.due_tensors(10), vec![0, 1, 2, 3]);
+    }
+
+    fn meta(n: usize) -> SyncTensorMeta {
+        SyncTensorMeta { size: n, rows: 1, cols: n }
+    }
+
+    fn q_bytes(bits: u32, n: usize) -> usize {
+        Quantizer::new(bits, QuantMode::Linear, false).wire_bytes(n, 1)
+    }
+
+    #[test]
+    fn allocation_floors_at_two_bits_and_respects_budget() {
+        let metas = vec![meta(1024); 4];
+        let floor: usize = (0..4).map(|_| q_bytes(2, 1024)).sum();
+        // budget below the floor: everyone still gets 2 bits
+        let bits = allocate_bits(&[1.0, 1.0, 1.0, 1.0], &metas,
+                                 QuantMode::Linear, false, floor / 2, 7);
+        assert_eq!(bits, vec![2, 2, 2, 2]);
+        // a lavish budget saturates the ladder
+        let bits = allocate_bits(&[1.0, 1.0, 1.0, 1.0], &metas,
+                                 QuantMode::Linear, false, 1 << 20, 7);
+        assert_eq!(bits, vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn allocation_prefers_high_residual_tensors() {
+        let metas = vec![meta(1024); 3];
+        // budget fits one 8-bit + two 2-bit tensors
+        let budget = q_bytes(8, 1024) + 2 * q_bytes(2, 1024);
+        let bits = allocate_bits(&[0.1, 10.0, 0.1], &metas,
+                                 QuantMode::Linear, false, budget, 7);
+        assert_eq!(bits[1], 8, "{bits:?}");
+        assert!(bits[0] < 8 && bits[2] < 8, "{bits:?}");
+        let spent: usize = bits
+            .iter()
+            .zip(&metas)
+            .map(|(&b, m)| q_bytes(b, m.size))
+            .sum();
+        assert!(spent <= budget);
+    }
+
+    #[test]
+    fn allocation_is_deterministic_and_seed_tiebroken() {
+        let metas = vec![meta(512); 5];
+        let norms = [1.0; 5]; // all tied: only the seed decides ordering
+        let budget = q_bytes(4, 512) * 2 + q_bytes(2, 512) * 3;
+        let a = allocate_bits(&norms, &metas, QuantMode::Linear, false,
+                              budget, 7);
+        let b = allocate_bits(&norms, &metas, QuantMode::Linear, false,
+                              budget, 7);
+        assert_eq!(a, b, "same seed must reproduce the split");
+        assert_eq!(a.iter().filter(|&&b| b == 4).count(), 2, "{a:?}");
+    }
+
+    #[test]
+    fn zero_norms_fall_back_to_uniform_upgrades() {
+        let metas = vec![meta(256); 4];
+        let bits = allocate_bits(&[0.0; 4], &metas, QuantMode::Linear, false,
+                                 4 * q_bytes(4, 256), 3);
+        assert_eq!(bits, vec![4, 4, 4, 4]);
     }
 }

@@ -27,7 +27,7 @@ use anyhow::Result;
 use super::config::Method;
 use super::diloco::accumulate_grads;
 use super::sync::SyncTensorMeta;
-use crate::compress::{Compressor, ErrorFeedback};
+use crate::compress::{CompressorSet, ErrorFeedback};
 use crate::data::{Corpus, Shard};
 use crate::runtime::{Session, Tensors};
 
@@ -198,15 +198,17 @@ impl<'c> Worker<'c> {
     /// Per-worker half of the sync boundary: the deltas
     /// theta_global - theta_k for the due tensors, folded through the
     /// error-feedback accumulator when compression is active
-    /// (Algorithm 2 lines 13-17).  Pure per-worker work, safe to run
-    /// for all workers concurrently.
+    /// (Algorithm 2 lines 13-17).  `compressors` resolves the (possibly
+    /// per-tensor, see `--bits-budget`) compressor each tensor goes
+    /// through.  Pure per-worker work, safe to run for all workers
+    /// concurrently.
     pub fn local_deltas(
         &mut self,
         theta: &Tensors,
         due: &[usize],
         metas: &[SyncTensorMeta],
         apply_ef: bool,
-        compressor: &dyn Compressor,
+        compressors: &CompressorSet,
     ) -> Vec<Vec<f32>> {
         due.iter()
             .map(|&ti| {
@@ -214,11 +216,17 @@ impl<'c> Worker<'c> {
                 if apply_ef {
                     let m = metas[ti];
                     self.ef.compress_with_feedback(ti, &mut d, m.rows, m.cols,
-                                                   compressor);
+                                                   compressors.get(ti));
                 }
                 d
             })
             .collect()
+    }
+
+    /// L2 norm of this worker's error-feedback residual for tensor
+    /// `ti` — the signal the adaptive bit allocator spends budget on.
+    pub fn ef_residual_norm(&self, ti: usize) -> f64 {
+        self.ef.residual_norm(ti)
     }
 }
 

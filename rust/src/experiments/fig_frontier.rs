@@ -1,0 +1,127 @@
+//! Compression frontier: final eval loss vs **measured** wire bytes.
+//!
+//! Every point reruns training with the wire codecs in the collective
+//! path, so the bytes column is the sum of actual encoded buffer
+//! lengths recorded by the comm trace (`encoded.len()` per hop), not
+//! the closed-form `wire_bytes()` estimate.  The grid spans
+//! method x K x {quantization bits, top-k density} x error feedback;
+//! under `--preset smoke` it collapses to a seconds-long CI probe of
+//! the same code path.
+
+use anyhow::Result;
+
+use super::fig_workers::base_spec;
+use super::{lookup, Artifact, Cell, Ctx, Preset, Sweep, TypedTable};
+use crate::coordinator::{Method, RunSpec};
+
+fn frontier_steps(ctx: &Ctx) -> u64 {
+    if ctx.smoke {
+        return 12;
+    }
+    match ctx.preset {
+        Preset::Fast => 60,
+        Preset::Full => 300,
+    }
+}
+
+/// Shared base: shortened budget, sync interval that still fires a few
+/// rounds inside the smoke budget.
+fn frontier_spec(ctx: &Ctx, method: Method) -> RunSpec {
+    let steps = frontier_steps(ctx);
+    let h = if ctx.smoke { 3 } else { 15 };
+    let batch = if ctx.smoke { 16 } else { ctx.base_batch() };
+    base_spec(ctx, method)
+        .steps(steps)
+        .batch(batch)
+        .sync_interval(h)
+        .eval_every(h)
+        .warmup(steps / 10)
+}
+
+pub fn frontier(ctx: &Ctx) -> Result<Artifact> {
+    let methods: &[&str] = if ctx.smoke { &["muloco"] } else { &["diloco", "muloco"] };
+    let workers: &[usize] = if ctx.smoke {
+        &[2]
+    } else {
+        match ctx.preset {
+            Preset::Fast => &[8],
+            Preset::Full => &[4, 8, 16],
+        }
+    };
+    // quantization widths x top-k densities; "none" runs separately as
+    // the uncompressed f32 baseline each ratio is taken against.
+    let comps: &[&str] = if ctx.smoke {
+        &["q4-linear", "topk0.25"]
+    } else {
+        match ctx.preset {
+            Preset::Fast => &[
+                "q2-linear", "q4-linear", "q8-linear", "topk0.05", "topk0.25",
+            ],
+            Preset::Full => &[
+                "q2-linear", "q4-linear", "q8-linear", "q4-stat",
+                "topk0.01", "topk0.05", "topk0.25",
+            ],
+        }
+    };
+    let efs: &[bool] = if ctx.smoke { &[true] } else { &[false, true] };
+
+    let sess = ctx.session(ctx.base_model())?;
+    let mut t = TypedTable::new(
+        "frontier",
+        "Compression frontier — final eval loss vs measured wire bytes",
+        &["method", "K", "compression", "EF", "loss",
+          "bytes/worker", "peak event B", "vs f32"],
+    );
+
+    let results = Sweep::new(frontier_spec(ctx, Method::Diloco))
+        .axis("method", methods)
+        .axis("workers", workers)
+        .axis("compression", comps)
+        .axis("ef", efs)
+        .run(ctx)?;
+
+    for &method in methods {
+        let m = Method::parse(method)?;
+        for &k in workers {
+            // uncompressed baseline for this (method, K) cell
+            let base_cfg = frontier_spec(ctx, m).workers(k).build()?;
+            let base = ctx.cache.run(&sess, &base_cfg)?;
+            t.row(vec![
+                Cell::s(method), Cell::int(k), Cell::s("none"), Cell::s("-"),
+                Cell::f(base.smoothed_final, 4),
+                Cell::int(base.bytes_per_worker),
+                Cell::int(base.peak_event_bytes),
+                Cell::f(1.0, 2),
+            ]);
+            let ks = k.to_string();
+            for &comp in comps {
+                for &ef in efs {
+                    let efs_str = ef.to_string();
+                    let r = lookup(&results, &[
+                        ("method", method),
+                        ("workers", ks.as_str()),
+                        ("compression", comp),
+                        ("ef", efs_str.as_str()),
+                    ]).expect("swept point");
+                    let ratio = if r.bytes_per_worker == 0 {
+                        0.0
+                    } else {
+                        base.bytes_per_worker as f64 / r.bytes_per_worker as f64
+                    };
+                    t.row(vec![
+                        Cell::s(method), Cell::int(k), Cell::s(comp),
+                        Cell::s(if ef { "yes" } else { "no" }),
+                        Cell::f(r.smoothed_final, 4),
+                        Cell::int(r.bytes_per_worker),
+                        Cell::int(r.peak_event_bytes),
+                        Cell::f(ratio, 2),
+                    ]);
+                }
+            }
+        }
+    }
+
+    let mut art = Artifact::new("frontier");
+    art.table(t);
+    Ok(art)
+}

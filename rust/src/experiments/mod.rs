@@ -20,6 +20,7 @@ mod fig_cbs;
 mod fig_compress;
 mod fig_eval;
 mod fig_faults;
+mod fig_frontier;
 mod fig_hp;
 mod fig_nsweep;
 mod fig_scaling;
@@ -48,6 +49,12 @@ pub use sweep::{lookup, Sweep, SweepPoint};
 pub struct Ctx {
     pub artifacts: PathBuf,
     pub preset: Preset,
+    /// `--preset smoke`: budgets shrink to seconds-per-experiment CI
+    /// smoke runs.  Orthogonal to `preset` (which smoke pins to `Fast`)
+    /// so the many existing `match ctx.preset` budget tables need no
+    /// third arm; generators with a dedicated smoke budget check this
+    /// flag first.
+    pub smoke: bool,
     sessions: Mutex<BTreeMap<String, Arc<Session>>>,
     pub cache: RunCache,
 }
@@ -62,14 +69,16 @@ pub enum Preset {
 
 impl Ctx {
     pub fn new(artifacts: &Path, preset: &str) -> Result<Ctx> {
-        let preset = match preset {
-            "fast" => Preset::Fast,
-            "full" => Preset::Full,
-            other => bail!("unknown preset {other:?} (fast|full)"),
+        let (preset, smoke) = match preset {
+            "fast" => (Preset::Fast, false),
+            "full" => (Preset::Full, false),
+            "smoke" => (Preset::Fast, true),
+            other => bail!("unknown preset {other:?} (smoke|fast|full)"),
         };
         Ok(Ctx {
             artifacts: artifacts.to_path_buf(),
             preset,
+            smoke,
             sessions: Mutex::new(BTreeMap::new()),
             cache: RunCache::new("results/cache")?,
         })
@@ -199,6 +208,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         e("tab3", "final eval + synthetic zero-shot suite (Tabs 3/8)", fig_eval::tab3),
         e("nsweep", "Newton-Schulz depth x ortho-interval sweep (MuonBP)", fig_nsweep::nsweep),
         e("faults", "elastic workers: loss + wallclock vs dropout rate x K", fig_faults::faults),
+        e("frontier", "loss vs measured wire bytes: method x K x {bits, topk} x EF", fig_frontier::frontier),
     ]
 }
 

@@ -27,6 +27,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use muloco::ckpt;
+use muloco::comm::wire::{time_pack_unpack_bf16, time_pack_unpack_kbit};
 use muloco::coordinator::{spec, train, Method, RunSpec};
 use muloco::experiments::{self, Format};
 use muloco::metrics::RunLogger;
@@ -55,6 +56,7 @@ fn bool_flags() -> Vec<String> {
         flags.push(format!("no-{}", k.name));
     }
     flags.push("quiet".to_string());
+    flags.push("sparse".to_string());
     flags
 }
 
@@ -124,11 +126,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         &format!("{}-{}-K{}", cfg.model, cfg.method.name(), cfg.workers),
     );
     let dump_spec = args.get("dump-spec").map(|s| s.to_string());
+    let sparse = args.flag("sparse");
     let artifacts = artifacts_dir(args);
     args.finish()?;
 
     if let Some(path) = dump_spec {
-        fs::write(&path, spec::spec_json(&cfg).to_string())?;
+        let doc = if sparse {
+            spec::spec_json_sparse(&cfg)
+        } else {
+            spec::spec_json(&cfg)
+        };
+        fs::write(&path, doc.to_string())?;
         if !quiet {
             println!("wrote spec to {path} (key: {})", spec::cache_key(&cfg));
         }
@@ -438,6 +446,45 @@ fn cmd_bench(args: &Args) -> Result<()> {
         micro_rows.push(Json::Obj(row));
     }
 
+    // --- wire codec pack/unpack throughput (the PR 7 byte path):
+    //     GB/s over the f32 side of each transform, so rates compare
+    //     across formats regardless of the packed width ----------------
+    let wire_n = 1usize << 16;
+    let wire_gb = (wire_n * 4) as f64 / 1e9;
+    let mut wire_rows = Vec::new();
+    {
+        let (pack, unpack) = time_pack_unpack_bf16(wire_n, 5);
+        println!(
+            "  wire bf16 ({wire_n} elems): pack {:.1}us ({:.2} GB/s), \
+             unpack {:.1}us ({:.2} GB/s)",
+            pack * 1e6, wire_gb / pack, unpack * 1e6, wire_gb / unpack
+        );
+        let mut row = BTreeMap::new();
+        row.insert("format".to_string(), Json::Str("bf16".to_string()));
+        row.insert("elems".to_string(), num(wire_n as f64));
+        row.insert("pack_us".to_string(), num(pack * 1e6));
+        row.insert("unpack_us".to_string(), num(unpack * 1e6));
+        row.insert("pack_gb_per_s".to_string(), num(wire_gb / pack));
+        row.insert("unpack_gb_per_s".to_string(), num(wire_gb / unpack));
+        wire_rows.push(Json::Obj(row));
+    }
+    for bits in [2u32, 4, 8] {
+        let (pack, unpack) = time_pack_unpack_kbit(bits, wire_n, 5);
+        println!(
+            "  wire q{bits} ({wire_n} elems): pack {:.1}us ({:.2} GB/s), \
+             unpack {:.1}us ({:.2} GB/s)",
+            pack * 1e6, wire_gb / pack, unpack * 1e6, wire_gb / unpack
+        );
+        let mut row = BTreeMap::new();
+        row.insert("format".to_string(), Json::Str(format!("q{bits}")));
+        row.insert("elems".to_string(), num(wire_n as f64));
+        row.insert("pack_us".to_string(), num(pack * 1e6));
+        row.insert("unpack_us".to_string(), num(unpack * 1e6));
+        row.insert("pack_gb_per_s".to_string(), num(wire_gb / pack));
+        row.insert("unpack_gb_per_s".to_string(), num(wire_gb / unpack));
+        wire_rows.push(Json::Obj(row));
+    }
+
     // --- per-kernel determinism-tier declarations, straight from the
     //     registry so the record always names the contract each number
     //     was measured under -----------------------------------------
@@ -463,6 +510,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mut top = BTreeMap::new();
     top.insert("simd".to_string(), Json::Bool(simd_on));
     top.insert("gemm_microkernel".to_string(), Json::Arr(micro_rows));
+    top.insert("wire".to_string(), Json::Arr(wire_rows));
     top.insert("kernel_tiers".to_string(), Json::Arr(tier_rows));
     top.insert("backend".to_string(), Json::Str(primary.platform.clone()));
     top.insert("model".to_string(), Json::Str(models[0].clone()));
@@ -545,7 +593,8 @@ USAGE:
   muloco train [--spec run.json] [knob flags below]
                [--label L] [--log-group G] [--quiet]
                [--dump-spec out.json]   # save the resolved spec file
-  muloco experiment <id|all> [--preset fast|full] [--jobs N]
+               [--sparse]               # dump only non-default knobs
+  muloco experiment <id|all> [--preset smoke|fast|full] [--jobs N]
                [--format text|json]
   muloco bench [--models nano,micro,tiny | --model M] [--steps N]
                [--out BENCH_native.json]

@@ -126,6 +126,30 @@ impl SystemProfile {
         }
     }
 
+    /// Profile over an explicit, already-recorded sync trace — e.g. the
+    /// hop record of one codec-encoded sync event from the simulated
+    /// data path, whose hop bytes are measured `encoded.len()` values.
+    /// This is the measured-bytes entry point: instead of re-deriving
+    /// the event volume from a closed-form `wire_bytes()` estimate and
+    /// re-planning the topology, wall-clock estimates consume exactly
+    /// the bytes the collectives moved.
+    pub fn from_sync_trace(
+        compute_secs_per_step: f64,
+        optimizer_secs_per_step: f64,
+        param_bytes: f64,
+        sync_trace: CommTrace,
+        pattern: CommPattern,
+    ) -> SystemProfile {
+        SystemProfile {
+            compute_secs_per_step,
+            optimizer_secs_per_step,
+            param_bytes,
+            sync_trace,
+            pattern,
+            latency: LinkLatency::ZERO,
+        }
+    }
+
     /// Attach a per-hop latency constant per link class (builder).
     pub fn with_latency(mut self, latency: LinkLatency) -> SystemProfile {
         self.latency = latency;
@@ -225,6 +249,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn measured_codec_trace_prices_wall_clock() {
+        // measured-bytes entry point: encode a real payload through the
+        // packed 4-bit codec, feed the resulting trace (hop bytes =
+        // encoded.len()) straight into the wall-clock model, and check
+        // it prices exactly like the closed-form ring volume over the
+        // measured size.
+        use crate::comm::WireFormat;
+        use crate::compress::{Compressor, QuantMode, Quantizer};
+        let q = Quantizer::new(4, QuantMode::Linear, false);
+        let x: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.37).sin()).collect();
+        let measured = q.codec(WireFormat::F32).encode(&x, 1, x.len()).len();
+        assert_eq!(measured, q.wire_bytes(x.len(), 1));
+        let k = 8;
+        let trace = Ring.plan(
+            k, OpShape::ReduceScatterGather, measured, 4 * x.len());
+        let p = SystemProfile::from_sync_trace(
+            1.0, 0.01, (4 * x.len()) as f64, trace,
+            CommPattern::EveryH { h: 30 });
+        let bw = 10.0 * GBIT;
+        let want =
+            SystemProfile::ring_allreduce_bytes(measured as f64, k) / bw / 30.0;
+        let got = p.comm_secs_per_step(bw);
+        assert!((got - want).abs() <= 1e-6 * want, "{got} vs {want}");
     }
 
     #[test]

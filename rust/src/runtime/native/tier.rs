@@ -70,6 +70,16 @@ pub const KERNEL_TIERS: &[KernelTier] = &[
                  reference: "model::sdpa_materialized_fwd" },
     KernelTier { name: "sdpa_bwd", tier: Tier::Toleranced { rel: 1e-4 },
                  reference: "model::sdpa_materialized_bwd" },
+    // wire codec hot loops (comm::wire): per-lane maps with no
+    // reductions, so the simd twins are bit-identical by construction
+    KernelTier { name: "wire_pack_bf16", tier: Tier::Exact,
+                 reference: "comm::wire::pack_bf16_scalar" },
+    KernelTier { name: "wire_unpack_bf16", tier: Tier::Exact,
+                 reference: "comm::wire::unpack_bf16_scalar" },
+    KernelTier { name: "wire_quant_codes", tier: Tier::Exact,
+                 reference: "comm::wire::quant_codes_scalar" },
+    KernelTier { name: "wire_dequant_codes", tier: Tier::Exact,
+                 reference: "comm::wire::dequant_codes_scalar" },
 ];
 
 /// Look up a kernel's declared tier; panics on an undeclared name so a

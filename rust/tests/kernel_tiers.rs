@@ -17,6 +17,7 @@
 
 use std::path::PathBuf;
 
+use muloco::comm::wire;
 use muloco::coordinator::{train, Method, RunSpec};
 use muloco::runtime::native::gemm::{sgemm, sgemm_rows_scalar};
 use muloco::runtime::native::kernels::{
@@ -225,6 +226,55 @@ fn flash_sdpa_backward_matches_materialized_within_declared_tier() {
 }
 
 // ---------------------------------------------------------------------
+// Tier::Exact: wire codec pack/unpack loops vs their scalar references
+// ---------------------------------------------------------------------
+
+/// The dispatched wire pack/unpack bodies (whatever `comm::wire`'s
+/// public fns resolved to under this build's features) must be
+/// bit-for-bit identical to the scalar references — the contract that
+/// keeps measured hop bytes AND decoded values identical between the
+/// scalar and `--features simd` builds.
+#[test]
+fn wire_pack_unpack_dispatch_is_bit_exact_vs_scalar_references() {
+    for name in ["wire_pack_bf16", "wire_unpack_bf16", "wire_quant_codes",
+                 "wire_dequant_codes"] {
+        assert_eq!(tier_of(name).tier, Tier::Exact, "{name}");
+    }
+    let mut rng = Rng::new(0x31BE);
+    // lengths straddle the 8-lane boundary; values include the bf16
+    // rounding tie cases (exact halves) and negative zero
+    for n in [1usize, 7, 8, 9, 64, 200] {
+        let mut x = randn(&mut rng, n);
+        x[0] = -0.0;
+        if n > 2 {
+            x[2] = 1.00390625; // exactly between two bf16 neighbours
+        }
+        let mut packed = Vec::new();
+        wire::pack_bf16(&x, &mut packed);
+        let mut packed_ref = Vec::new();
+        wire::pack_bf16_scalar(&x, &mut packed_ref);
+        assert_eq!(packed, packed_ref, "pack_bf16 n={n}");
+        let mut back = Vec::new();
+        wire::unpack_bf16(&packed, &mut back);
+        let mut back_ref = Vec::new();
+        wire::unpack_bf16_scalar(&packed_ref, &mut back_ref);
+        assert_kernel("wire_unpack_bf16", &back, &back_ref);
+
+        let (lo, scale, lvl) = (-1.5f32, 0.21f32, 15.0f32);
+        let mut codes = Vec::new();
+        wire::quant_codes(&x, lo, scale, lvl, &mut codes);
+        let mut codes_ref = Vec::new();
+        wire::quant_codes_scalar(&x, lo, scale, lvl, &mut codes_ref);
+        assert_eq!(codes, codes_ref, "quant_codes n={n}");
+        let mut deq = Vec::new();
+        wire::dequant_codes(&codes, lo, scale, &mut deq);
+        let mut deq_ref = Vec::new();
+        wire::dequant_codes_scalar(&codes_ref, lo, scale, &mut deq_ref);
+        assert_kernel("wire_dequant_codes", &deq, &deq_ref);
+    }
+}
+
+// ---------------------------------------------------------------------
 // Registry sanity
 // ---------------------------------------------------------------------
 
@@ -236,6 +286,8 @@ fn every_declared_kernel_is_covered_by_this_suite() {
     let covered = [
         "sgemm", "rmsnorm_fwd", "rmsnorm_bwd", "rope_apply", "swiglu_fwd",
         "swiglu_bwd", "fused_adamw", "newton_schulz", "sdpa_fwd", "sdpa_bwd",
+        "wire_pack_bf16", "wire_unpack_bf16", "wire_quant_codes",
+        "wire_dequant_codes",
     ];
     for kt in KERNEL_TIERS {
         assert!(covered.contains(&kt.name),

@@ -1,0 +1,221 @@
+//! Property tests for the `comm::wire` codec layer.
+//!
+//! The load-bearing contract: for every compressor configuration,
+//! `decode(encode(x))` is **bit-for-bit** identical to the in-place
+//! simulated compressor's output on the same input — so the collectives
+//! can move real packed bytes without changing value semantics (which
+//! is what keeps `tests/parallel_determinism.rs` / `tests/ckpt_resume.rs`
+//! green with codecs in the path).  Alongside it, the measured
+//! transport size (`encode(..).len()`) is pinned against the analytic
+//! `Compressor::wire_bytes` formulas the netsim layer uses.
+
+use muloco::comm::wire::{transport, WireFormat};
+use muloco::compress::{
+    Compressor, NoCompression, QuantMode, Quantizer, TopK,
+};
+use muloco::util::rng::Rng;
+use muloco::util::round_bf16;
+
+fn payload(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// NaN-safe, sign-of-zero-safe equality: the contract is bitwise.
+fn assert_bits_eq(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{tag}[{i}]: {g:?} ({:#010x}) vs {w:?} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+fn quantizers() -> Vec<Quantizer> {
+    let mut qs = Vec::new();
+    for mode in [QuantMode::Linear, QuantMode::Statistical] {
+        for bits in [2u32, 4, 8] {
+            for rowwise in [false, true] {
+                qs.push(Quantizer::new(bits, mode, rowwise));
+            }
+        }
+    }
+    qs
+}
+
+// every (mode, bits, rowwise) x shape: decode(encode(x)) must land on
+// exactly the same floats as the in-place quantize-dequantize
+#[test]
+fn quant_roundtrip_is_bit_identical_to_inplace_compressor() {
+    // byte-aligned and ragged (bit-padded) group shapes, plus a
+    // single-column rowwise view (group length 1)
+    let shapes = [(1usize, 256usize), (8, 32), (1, 7), (5, 13), (6, 1)];
+    for q in quantizers() {
+        for (seed, &(rows, cols)) in (10u64..).zip(shapes.iter()) {
+            let x = payload(rows * cols, seed);
+            let mut want = x.clone();
+            q.compress(&mut want, rows, cols);
+            let codec = q.codec(WireFormat::F32);
+            let bytes = codec.encode(&x, rows, cols);
+            let got = codec.decode(&bytes, x.len(), rows, cols);
+            assert_bits_eq(&got, &want, &format!("{} {rows}x{cols}", q.name()));
+        }
+    }
+}
+
+#[test]
+fn measured_quant_bytes_pin_to_wire_bytes_formula() {
+    for q in quantizers() {
+        // group lengths divisible by 8: the packed stream is exactly
+        // the formula (codebooks are padded to 2^bits entries by
+        // design, so Statistical pins too)
+        for (rows, cols) in [(1usize, 256usize), (8, 32), (4, 64)] {
+            let x = payload(rows * cols, 3);
+            let measured = q.codec(WireFormat::F32).encode(&x, rows, cols).len();
+            assert_eq!(
+                measured,
+                q.wire_bytes(rows * cols, rows),
+                "{} {rows}x{cols}",
+                q.name()
+            );
+        }
+        // ragged groups: per-group bit padding rounds each group's code
+        // section up to a whole byte, so the measured stream may exceed
+        // the formula by at most one byte per group (plus the formula's
+        // own floor)
+        for (rows, cols) in [(1usize, 7usize), (5, 13), (3, 9)] {
+            let x = payload(rows * cols, 4);
+            let groups = if rows > 1 { rows } else { 1 };
+            let measured = q.codec(WireFormat::F32).encode(&x, rows, cols).len();
+            let formula = q.wire_bytes(rows * cols, rows);
+            assert!(
+                measured >= formula && measured - formula <= groups + 1,
+                "{} {rows}x{cols}: measured {measured} vs formula {formula}",
+                q.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_roundtrip_and_measured_bytes() {
+    for frac in [0.01f64, 0.1, 0.25, 1.0] {
+        let t = TopK::new(frac);
+        for (n, seed) in [(1000usize, 21u64), (64, 22), (1, 23)] {
+            let x = payload(n, seed);
+            let mut want = x.clone();
+            t.compress(&mut want, 1, n);
+            // f32 value wire: bit-identical to the in-place sparsifier,
+            // measured bytes are exactly the formula's 8 per survivor
+            let codec = t.codec(WireFormat::F32);
+            let bytes = codec.encode(&x, 1, n);
+            assert_eq!(bytes.len(), t.wire_bytes(n, 1), "topk{frac} n={n}");
+            let got = codec.decode(&bytes, n, 1, n);
+            assert_bits_eq(&got, &want, &format!("topk{frac} n={n}"));
+            // bf16 value wire: survivor set unchanged, values rounded
+            // through the same RNE everything else uses, 6 B/survivor
+            let keep = t.wire_bytes(n, 1) / 8;
+            let codec16 = t.codec(WireFormat::Bf16);
+            let bytes16 = codec16.encode(&x, 1, n);
+            assert_eq!(bytes16.len(), 6 * keep, "topk{frac} n={n} bf16");
+            let got16 = codec16.decode(&bytes16, n, 1, n);
+            let want16: Vec<f32> = want.iter().map(|&v| round_bf16(v)).collect();
+            assert_bits_eq(&got16, &want16, &format!("topk{frac} n={n} bf16"));
+        }
+    }
+}
+
+#[test]
+fn dense_codecs_roundtrip_and_price_per_word() {
+    let x = payload(333, 31);
+    let f32c = NoCompression.codec(WireFormat::F32);
+    let bytes = f32c.encode(&x, 1, x.len());
+    assert_eq!(bytes.len(), 4 * x.len());
+    assert_bits_eq(&f32c.decode(&bytes, x.len(), 1, x.len()), &x, "dense f32");
+
+    let bf16c = NoCompression.codec(WireFormat::Bf16);
+    let bytes = bf16c.encode(&x, 1, x.len());
+    assert_eq!(bytes.len(), 2 * x.len());
+    let want: Vec<f32> = x.iter().map(|&v| round_bf16(v)).collect();
+    assert_bits_eq(
+        &bf16c.decode(&bytes, x.len(), 1, x.len()),
+        &want,
+        "dense bf16",
+    );
+}
+
+#[test]
+fn degenerate_payloads_roundtrip() {
+    let cases: Vec<(Vec<f32>, &str)> = vec![
+        (Vec::new(), "empty"),
+        (vec![0.0; 48], "all-zero"),
+        (vec![1.25; 48], "constant"),
+        (vec![-3.5], "single"),
+    ];
+    let mut codecs: Vec<Box<dyn Compressor>> = quantizers()
+        .into_iter()
+        .map(|q| Box::new(q) as Box<dyn Compressor>)
+        .collect();
+    codecs.push(Box::new(TopK::new(0.25)));
+    codecs.push(Box::new(NoCompression));
+    for c in &codecs {
+        for (x, tag) in &cases {
+            let (rows, cols) = (1usize, x.len());
+            let mut want = x.clone();
+            c.compress(&mut want, rows, cols);
+            let codec = c.codec(WireFormat::F32);
+            let bytes = codec.encode(x, rows, cols);
+            let got = codec.decode(&bytes, x.len(), rows, cols);
+            assert_bits_eq(&got, &want, &format!("{} {tag}", c.name()));
+        }
+        // degenerate *row groups*: one constant row inside a live tensor
+        let mut x = payload(4 * 16, 41);
+        for v in x.iter_mut().take(16) {
+            *v = 2.0;
+        }
+        let mut want = x.clone();
+        c.compress(&mut want, 4, 16);
+        let codec = c.codec(WireFormat::F32);
+        let bytes = codec.encode(&x, 4, 16);
+        let got = codec.decode(&bytes, x.len(), 4, 16);
+        assert_bits_eq(&got, &want, &format!("{} constant row", c.name()));
+    }
+}
+
+#[test]
+fn transport_moves_measured_bytes_in_place() {
+    let q = Quantizer::new(4, QuantMode::Linear, false);
+    let codec = q.codec(WireFormat::F32);
+    let mut x = payload(512, 51);
+    let mut want = x.clone();
+    q.compress(&mut want, 1, 512);
+    let moved = transport(codec.as_ref(), &mut x, 1, 512);
+    assert_eq!(moved, q.wire_bytes(512, 1));
+    assert_bits_eq(&x, &want, "transport");
+}
+
+// the acceptance bound from the issue: a 2-bit packed dense tensor must
+// cost at most 1/8 of its f32 dense transport
+#[test]
+fn two_bit_dense_is_at_most_one_eighth_of_f32() {
+    let n = 4096;
+    let x = payload(n, 61);
+    for (mode, rowwise, rows, cols) in [
+        (QuantMode::Linear, false, 1, n),
+        (QuantMode::Linear, true, 64, n / 64),
+        (QuantMode::Statistical, false, 1, n),
+    ] {
+        let q = Quantizer::new(2, mode, rowwise);
+        let packed = q.codec(WireFormat::F32).encode(&x, rows, cols).len();
+        let dense = NoCompression.codec(WireFormat::F32).encode(&x, rows, cols).len();
+        assert!(
+            8 * packed <= dense,
+            "{}: {packed} * 8 > {dense}",
+            q.name()
+        );
+    }
+}
