@@ -32,7 +32,7 @@ use super::collective::{
     CollectiveOp, OpKind,
 };
 use super::trace::{CommTrace, LinkClass};
-use super::wire::{dense_wire_bytes, transport};
+use super::wire::{dense_wire_bytes, transport, WireFormat};
 
 /// The hop shape an op needs (see [`OpKind::shape`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -260,6 +260,31 @@ impl Hierarchical {
             .collect()
     }
 
+    /// The member half of the intra-DC leg: every non-leader
+    /// contribution transits the dense wire on its way to its DC
+    /// leader, so the *values* move in the same word format the ledger
+    /// prices the leg at.  Identity under the f32 wire (and idempotent
+    /// when `--precision bf16` already rounded the payloads), so
+    /// default runs stay bit-for-bit; only `--wire bf16` over f32
+    /// payloads actually rounds here — which is the point.
+    fn transport_member_legs(
+        buffers: &mut [Vec<f32>],
+        gs: usize,
+        wire: WireFormat,
+        rows: usize,
+        cols: usize,
+    ) {
+        if gs <= 1 {
+            return;
+        }
+        let codec = dense_codec(wire);
+        for (r, b) in buffers.iter_mut().enumerate() {
+            if r % gs != 0 {
+                let _ = transport(codec.as_ref(), b, rows, cols);
+            }
+        }
+    }
+
     /// Rank attribution: group gi's leader is rank `gi * gs`, everyone
     /// else is a member — the asymmetry `CommStats::sent_per_rank`
     /// reports (leaders carry the WAN exchange and the DC broadcast).
@@ -330,41 +355,57 @@ impl Topology for Hierarchical {
     ) -> CommTrace {
         let k = buffers.len();
         let n = check_uniform(buffers);
-        // intra-DC legs move dense words at the wire's word width (the
-        // values stay exact f32 in-process; under `--precision bf16`
-        // the payloads are already bf16-rounded, so 2-byte pricing is
-        // honest there)
+        // intra-DC legs are priced at the wire's dense word width, and
+        // the member/broadcast values transit the dense codec to match
+        // (identity on the f32 wire; under `--precision bf16` the
+        // payloads are already bf16-rounded, so the transit is a no-op
+        // there too — only `--wire bf16` over f32 payloads rounds)
         let dense = dense_wire_bytes(op.wire, n);
         match op.kind {
             OpKind::Dense => {
                 let (g, gs) = self.split(k);
+                Self::transport_member_legs(buffers, gs, op.wire, rows, cols);
                 let partials = Self::group_partials(buffers, g, gs);
                 let codec = dense_codec(op.wire);
                 let mut m = exact_mean(&partials);
+                // one transit covers the WAN and broadcast legs: the
+                // dense rounding is idempotent
                 let wire = transport(codec.as_ref(), &mut m, rows, cols);
                 broadcast(buffers, &m);
                 self.plan(k, OpShape::ReduceScatterGather, wire, dense)
             }
-            // lossless intra-DC reduce, then the two WAN quantizations
-            // on the group partials: Q(mean_g Q(mean_{k in g} delta_k))
+            // intra-DC reduce on the dense wire, then the two WAN
+            // quantizations on the group partials:
+            // Q(mean_g Q(mean_{k in g} delta_k))
             OpKind::TwoQuant => {
                 let (g, gs) = self.split(k);
+                Self::transport_member_legs(buffers, gs, op.wire, rows, cols);
                 let mut partials = Self::group_partials(buffers, g, gs);
                 let codec = op.codec();
                 let wire =
                     transport_all(&mut partials, codec.as_ref(), rows, cols);
                 let mut m = exact_mean(&partials);
                 let _ = transport(codec.as_ref(), &mut m, rows, cols);
+                // the leader -> member broadcast leg is a dense hop too
+                if gs > 1 {
+                    let _ = transport(dense_codec(op.wire).as_ref(), &mut m,
+                                      rows, cols);
+                }
                 broadcast(buffers, &m);
                 self.plan(k, OpShape::ReduceScatterGather, wire, dense)
             }
             // sparsification happens per worker, so the reduced value is
-            // identical to the flat gather; only the byte routing
-            // (member -> leader -> WAN) differs
+            // identical to the flat gather up to the dense broadcast
+            // leg; the byte routing (member -> leader -> WAN) differs
             OpKind::SparseGather { .. } => {
+                let (_, gs) = self.split(k);
                 let codec = op.codec();
                 let wire = transport_all(buffers, codec.as_ref(), rows, cols);
-                let m = exact_mean(buffers);
+                let mut m = exact_mean(buffers);
+                if gs > 1 {
+                    let _ = transport(dense_codec(op.wire).as_ref(), &mut m,
+                                      rows, cols);
+                }
                 broadcast(buffers, &m);
                 self.plan(k, OpShape::Gather, wire, dense)
             }

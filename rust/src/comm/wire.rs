@@ -133,28 +133,57 @@ impl WireSpec {
 }
 
 /// One packed wire format: tensor -> exact transport bytes -> tensor.
+///
+/// The `*_into` forms are the primitives: they clear and fill a
+/// caller-owned buffer, so a warmed caller (the pooled [`transport`]
+/// below) re-encodes without heap traffic.  `encode`/`decode` are
+/// allocating conveniences over them.
 pub trait WireCodec: Send + Sync {
     fn name(&self) -> String;
 
     /// Pack `x` (viewed as `rows` x `cols` when row-wise grouping
-    /// applies) into the exact byte stream a real send would move.
-    fn encode(&self, x: &[f32], rows: usize, cols: usize) -> Vec<u8>;
+    /// applies) into the exact byte stream a real send would move,
+    /// overwriting `out` (cleared first, capacity kept).
+    fn encode_into(&self, x: &[f32], rows: usize, cols: usize, out: &mut Vec<u8>);
 
-    /// Inverse of `encode` for an `n`-element tensor.  For lossy
-    /// codecs this lands on the codec's grid — bit-identical to the
-    /// in-place simulated compressor's output on the same input.
-    fn decode(&self, bytes: &[u8], n: usize, rows: usize, cols: usize) -> Vec<f32>;
+    /// Inverse of `encode_into` for an `n`-element tensor, overwriting
+    /// `out` (cleared first, capacity kept).  For lossy codecs this
+    /// lands on the codec's grid — bit-identical to the in-place
+    /// simulated compressor's output on the same input.
+    fn decode_into(&self, bytes: &[u8], n: usize, rows: usize, cols: usize,
+                   out: &mut Vec<f32>);
+
+    /// Allocating form of [`encode_into`](WireCodec::encode_into).
+    fn encode(&self, x: &[f32], rows: usize, cols: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(x, rows, cols, &mut out);
+        out
+    }
+
+    /// Allocating form of [`decode_into`](WireCodec::decode_into).
+    fn decode(&self, bytes: &[u8], n: usize, rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n);
+        self.decode_into(bytes, n, rows, cols, &mut out);
+        out
+    }
 }
 
 /// Ship one tensor through a codec in place (the simulated transport):
 /// encode, "move" the packed buffer, decode into the same storage.
-/// Returns the measured transport size `encoded.len()`.
+/// Returns the measured transport size `encoded.len()`.  Both staging
+/// buffers come from the thread-local [`crate::util::pool`], so a
+/// warmed collective pays no heap allocation here.
 pub fn transport(codec: &dyn WireCodec, x: &mut [f32], rows: usize, cols: usize) -> usize {
-    let bytes = codec.encode(x, rows, cols);
-    let back = codec.decode(&bytes, x.len(), rows, cols);
-    debug_assert_eq!(back.len(), x.len());
-    x.copy_from_slice(&back);
-    bytes.len()
+    crate::util::pool::with_byte_buf(|bytes| {
+        codec.encode_into(x, rows, cols, bytes);
+        let moved = bytes.len();
+        crate::util::pool::with_f32_buf(|back| {
+            codec.decode_into(bytes, x.len(), rows, cols, back);
+            debug_assert_eq!(back.len(), x.len());
+            x.copy_from_slice(back);
+        });
+        moved
+    })
 }
 
 /// Measured dense transport size for `n` words without packing.
@@ -286,20 +315,24 @@ impl WireCodec for DenseF32 {
         "dense-f32".into()
     }
 
-    fn encode(&self, x: &[f32], _rows: usize, _cols: usize) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 * x.len());
+    fn encode_into(&self, x: &[f32], _rows: usize, _cols: usize, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(4 * x.len());
         for &v in x {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        out
     }
 
-    fn decode(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize,
+                   out: &mut Vec<f32>) {
         debug_assert_eq!(bytes.len(), 4 * n);
-        bytes
-            .chunks_exact(4)
-            .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]]))
-            .collect()
+        out.clear();
+        out.reserve(n);
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|w| f32::from_le_bytes([w[0], w[1], w[2], w[3]])),
+        );
     }
 }
 
@@ -314,17 +347,18 @@ impl WireCodec for DenseBf16 {
         "dense-bf16".into()
     }
 
-    fn encode(&self, x: &[f32], _rows: usize, _cols: usize) -> Vec<u8> {
-        let mut out = Vec::with_capacity(2 * x.len());
-        pack_bf16(x, &mut out);
-        out
+    fn encode_into(&self, x: &[f32], _rows: usize, _cols: usize, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(2 * x.len());
+        pack_bf16(x, out);
     }
 
-    fn decode(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize,
+                   out: &mut Vec<f32>) {
         debug_assert_eq!(bytes.len(), 2 * n);
-        let mut out = Vec::with_capacity(n);
-        unpack_bf16(bytes, &mut out);
-        out
+        out.clear();
+        out.reserve(n);
+        unpack_bf16(bytes, out);
     }
 }
 
@@ -449,38 +483,39 @@ impl WireCodec for PackedQuant {
         format!("packed-{}", crate::compress::Compressor::name(&self.q))
     }
 
-    fn encode(&self, x: &[f32], rows: usize, cols: usize) -> Vec<u8> {
+    fn encode_into(&self, x: &[f32], rows: usize, cols: usize, out: &mut Vec<u8>) {
         let groups = self.groups(x.len(), rows, cols);
         let cap: usize = groups
             .iter()
             .map(|&(_, len)| self.meta_bytes() + code_bytes(len, self.q.bits))
             .sum();
-        let mut out = Vec::with_capacity(cap);
+        out.clear();
+        out.reserve(cap);
         for &(off, len) in &groups {
             let g = &x[off..off + len];
             match self.q.mode {
-                QuantMode::Linear => self.encode_linear_group(g, &mut out),
-                QuantMode::Statistical => self.encode_stat_group(g, &mut out),
+                QuantMode::Linear => self.encode_linear_group(g, out),
+                QuantMode::Statistical => self.encode_stat_group(g, out),
             }
         }
-        out
     }
 
-    fn decode(&self, bytes: &[u8], n: usize, rows: usize, cols: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], n: usize, rows: usize, cols: usize,
+                   out: &mut Vec<f32>) {
         let groups = self.groups(n, rows, cols);
-        let mut out = Vec::with_capacity(n);
+        out.clear();
+        out.reserve(n);
         let mut cur = 0usize;
         for &(_, len) in &groups {
             let gbytes = self.meta_bytes() + code_bytes(len, self.q.bits);
             let g = &bytes[cur..cur + gbytes];
             match self.q.mode {
-                QuantMode::Linear => self.decode_linear_group(g, len, &mut out),
-                QuantMode::Statistical => self.decode_stat_group(g, len, &mut out),
+                QuantMode::Linear => self.decode_linear_group(g, len, out),
+                QuantMode::Statistical => self.decode_stat_group(g, len, out),
             }
             cur += gbytes;
         }
         debug_assert_eq!(cur, bytes.len());
-        out
     }
 }
 
@@ -558,13 +593,13 @@ impl WireCodec for SparseTopK {
         format!("sparse-topk{}-{}", self.t.frac, self.values.label())
     }
 
-    fn encode(&self, x: &[f32], _rows: usize, _cols: usize) -> Vec<u8> {
+    fn encode_into(&self, x: &[f32], _rows: usize, _cols: usize, out: &mut Vec<u8>) {
+        out.clear();
         if x.is_empty() {
-            return Vec::new();
+            return;
         }
         let idxs = self.survivors(x);
-        let mut out =
-            Vec::with_capacity(idxs.len() * (4 + self.values.word_bytes()));
+        out.reserve(idxs.len() * (4 + self.values.word_bytes()));
         let mut prev = 0u32;
         for (j, &i) in idxs.iter().enumerate() {
             let delta = if j == 0 { i } else { i - prev };
@@ -578,14 +613,15 @@ impl WireCodec for SparseTopK {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            WireFormat::Bf16 => pack_bf16(&vals, &mut out),
+            WireFormat::Bf16 => pack_bf16(&vals, out),
         }
-        out
     }
 
-    fn decode(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize) -> Vec<f32> {
+    fn decode_into(&self, bytes: &[u8], n: usize, _rows: usize, _cols: usize,
+                   out: &mut Vec<f32>) {
+        out.clear();
         if n == 0 {
-            return Vec::new();
+            return;
         }
         let k = self.t.keep_count(n);
         let mut idxs = Vec::with_capacity(k);
@@ -604,11 +640,10 @@ impl WireCodec for SparseTopK {
             }
             WireFormat::Bf16 => unpack_bf16(&bytes[4 * k..], &mut vals),
         }
-        let mut out = vec![0.0f32; n];
+        out.resize(n, 0.0);
         for (&i, &v) in idxs.iter().zip(&vals) {
             out[i as usize] = v;
         }
-        out
     }
 }
 

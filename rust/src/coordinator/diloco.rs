@@ -96,6 +96,32 @@ pub fn accumulate_grads(
     shard: &mut crate::data::Shard<'_>,
     batch_seqs: usize,
 ) -> Result<(f64, Tensors)> {
+    let mut acc = Tensors::new();
+    let mut micro_g = Tensors::new();
+    let mut tok = Vec::new();
+    let loss = accumulate_grads_into(sess, params, shard, batch_seqs,
+                                     &mut acc, &mut micro_g, &mut tok)?;
+    Ok((loss, acc))
+}
+
+/// [`accumulate_grads`] into caller-owned scratch: `acc` receives the
+/// mean grads, `micro_g` stages the per-microbatch grads, `tok` stages
+/// token batches.  All three are (re)shaped on first use and reused
+/// afterwards — a warmed caller (the worker's step scratch) runs this
+/// without a single heap allocation.  The op order is byte-identical to
+/// the allocating form: first microbatch's grads land in `acc`
+/// directly, later ones accumulate via the same `add_assign`/`axpy`
+/// sweeps, then one `scale` pass.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_grads_into(
+    sess: &Session,
+    params: &Tensors,
+    shard: &mut crate::data::Shard<'_>,
+    batch_seqs: usize,
+    acc: &mut Tensors,
+    micro_g: &mut Tensors,
+    tok: &mut Vec<i32>,
+) -> Result<f64> {
     let cfg = &sess.manifest.config;
     let micro = cfg.microbatch;
     assert!(batch_seqs > 0, "batch must be non-empty");
@@ -104,61 +130,47 @@ pub fn accumulate_grads(
         // equal microbatches: accumulate then scale by 1/n (the exact
         // legacy op order — do not merge with the weighted path below)
         let n_micro = batch_seqs / micro;
-        let mut total_loss = 0.0f64;
-        let mut acc: Option<Tensors> = None;
-        for _ in 0..n_micro {
-            let tokens = shard.next_batch(micro, cfg.seq_len);
-            let (loss, grads) = sess.fwd_grad(params, &tokens)?;
-            total_loss += loss as f64;
-            match acc.as_mut() {
-                None => acc = Some(grads),
-                Some(a) => {
-                    for (at, gt) in a.iter_mut().zip(&grads) {
-                        add_assign(at, gt);
-                    }
-                }
+        shard.next_batch_into(micro, cfg.seq_len, tok);
+        let mut total_loss = sess.fwd_grad_into(params, tok, acc)? as f64;
+        for _ in 1..n_micro {
+            shard.next_batch_into(micro, cfg.seq_len, tok);
+            total_loss += sess.fwd_grad_into(params, tok, micro_g)? as f64;
+            for (at, gt) in acc.iter_mut().zip(micro_g.iter()) {
+                add_assign(at, gt);
             }
         }
-        let mut grads = acc.expect("n_micro >= 1");
         let inv = 1.0 / n_micro as f32;
-        for g in grads.iter_mut() {
+        for g in acc.iter_mut() {
             scale(g, inv);
         }
-        return Ok((total_loss / n_micro as f64, grads));
+        return Ok(total_loss / n_micro as f64);
     }
     // uneven tail: sequence-weighted mean.  fwd_grad returns per-batch
     // means, so the batch mean is sum(b_i * mean_i) / sum(b_i).
     let n_full = batch_seqs / micro;
-    let mut sizes: Vec<usize> = vec![micro; n_full];
-    sizes.push(rem);
     let mut total_loss = 0.0f64;
-    let mut acc: Option<Tensors> = None;
-    for &b in &sizes {
-        let tokens = shard.next_batch(b, cfg.seq_len);
-        let (loss, grads) = sess.fwd_grad(params, &tokens)?;
+    for i in 0..=n_full {
+        let b = if i < n_full { micro } else { rem };
         let w = b as f32;
-        total_loss += loss as f64 * b as f64;
-        match acc.as_mut() {
-            None => {
-                let mut g = grads;
-                for t in g.iter_mut() {
-                    scale(t, w);
-                }
-                acc = Some(g);
+        shard.next_batch_into(b, cfg.seq_len, tok);
+        if i == 0 {
+            total_loss += sess.fwd_grad_into(params, tok, acc)? as f64 * b as f64;
+            for t in acc.iter_mut() {
+                scale(t, w);
             }
-            Some(a) => {
-                for (at, gt) in a.iter_mut().zip(&grads) {
-                    axpy(at, w, gt);
-                }
+        } else {
+            total_loss +=
+                sess.fwd_grad_into(params, tok, micro_g)? as f64 * b as f64;
+            for (at, gt) in acc.iter_mut().zip(micro_g.iter()) {
+                axpy(at, w, gt);
             }
         }
     }
-    let mut grads = acc.expect("at least one microbatch");
     let inv = 1.0 / batch_seqs as f32;
-    for g in grads.iter_mut() {
+    for g in acc.iter_mut() {
         scale(g, inv);
     }
-    Ok((total_loss / batch_seqs as f64, grads))
+    Ok(total_loss / batch_seqs as f64)
 }
 
 /// Evaluate `params` on `batches` pre-generated eval microbatches.

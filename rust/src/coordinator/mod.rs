@@ -10,6 +10,11 @@
 //!   `diloco` — the thin training loop tying them together, including
 //!              the durable-checkpoint / bit-for-bit resume hooks of
 //!              the `crate::ckpt` subsystem.
+//!
+//! The inner step is allocation-free in steady state
+//! (tests/alloc_steady.rs), so stray clones on these paths are a perf
+//! regression, not just style — keep the lint loud.
+#![warn(clippy::redundant_clone)]
 
 pub mod config;
 pub mod diloco;
@@ -22,7 +27,8 @@ pub mod worker;
 
 pub use config::{Method, TrainConfig};
 pub use spec::{cache_key, knobs, RunSpec};
-pub use diloco::{accumulate_grads, evaluate, train, RunResult};
+pub use diloco::{accumulate_grads, accumulate_grads_into, evaluate, train,
+                 RunResult};
 pub use fault::{FaultPlan, FaultStats, FaultStatus};
 pub use outer::NesterovOuter;
 pub use probe::{branch_capture, dp_warmstart, BranchCapture, Checkpoint};

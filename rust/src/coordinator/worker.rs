@@ -25,7 +25,7 @@ use std::thread;
 use anyhow::Result;
 
 use super::config::Method;
-use super::diloco::accumulate_grads;
+use super::diloco::accumulate_grads_into;
 use super::sync::SyncTensorMeta;
 use crate::compress::{CompressorSet, ErrorFeedback};
 use crate::data::{Corpus, Shard};
@@ -54,6 +54,28 @@ pub trait InnerOptimizer: Send + Sync {
         lr: f32,
         wd: f32,
     ) -> Result<(Tensors, Tensors)>;
+
+    /// [`step`](InnerOptimizer::step) updating `params`/`state` in
+    /// place — same math, no output clones; what the steady-state inner
+    /// loop runs.  The default delegates to the allocating form, so
+    /// third-party optimizers stay correct unchanged; the built-in
+    /// optimizers override it with the session's in-place entry points.
+    #[allow(clippy::too_many_arguments)]
+    fn step_in_place(
+        &self,
+        sess: &Session,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        let (p, s) = self.step(sess, params, state, grads, t, lr, wd)?;
+        *params = p;
+        *state = s;
+        Ok(())
+    }
 }
 
 /// AdamW inner optimizer (DiLoCo / DP-AdamW).
@@ -79,6 +101,19 @@ impl InnerOptimizer for AdamWInner {
         wd: f32,
     ) -> Result<(Tensors, Tensors)> {
         sess.apply_adamw(params, state, grads, t, lr, wd)
+    }
+
+    fn step_in_place(
+        &self,
+        sess: &Session,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        sess.apply_adamw_in_place(params, state, grads, t, lr, wd)
     }
 }
 
@@ -137,6 +172,20 @@ impl InnerOptimizer for MuonInner {
     ) -> Result<(Tensors, Tensors)> {
         sess.apply_muon_ns(params, state, grads, t, lr, wd, self.ns_at(t))
     }
+
+    fn step_in_place(
+        &self,
+        sess: &Session,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        sess.apply_muon_ns_in_place(params, state, grads, t, lr, wd,
+                                    self.ns_at(t))
+    }
 }
 
 /// Inner-optimizer dispatch from the configured method.  `ns_iters` is
@@ -163,6 +212,14 @@ pub struct Worker<'c> {
     pub opt_state: Tensors,
     pub shard: Shard<'c>,
     pub ef: ErrorFeedback,
+    // step scratch, lazily shaped on the first inner step and reused
+    // for the rest of the run: the grad accumulator, the per-microbatch
+    // grad staging set, and the token staging buffer.  Together with
+    // the backend's arena these make the warmed inner step
+    // allocation-free (tests/alloc_steady.rs pins it).
+    grads: Tensors,
+    micro_grads: Tensors,
+    tok: Vec<i32>,
 }
 
 impl<'c> Worker<'c> {
@@ -172,11 +229,22 @@ impl<'c> Worker<'c> {
         shard: Shard<'c>,
         ef: ErrorFeedback,
     ) -> Worker<'c> {
-        Worker { params, opt_state, shard, ef }
+        Worker {
+            params,
+            opt_state,
+            shard,
+            ef,
+            grads: Tensors::new(),
+            micro_grads: Tensors::new(),
+            tok: Vec::new(),
+        }
     }
 
     /// One inner step: accumulate grads over this worker's batch slice
     /// and apply the inner optimizer.  Returns the mean micro-loss.
+    /// All tensor traffic runs through the worker's step scratch and
+    /// the in-place optimizer entry points — after the first (warming)
+    /// step no heap allocation happens here.
     pub fn inner_step(
         &mut self,
         sess: &Session,
@@ -186,12 +254,11 @@ impl<'c> Worker<'c> {
         lr: f32,
         wd: f32,
     ) -> Result<f64> {
-        let (loss, grads) =
-            accumulate_grads(sess, &self.params, &mut self.shard, batch_seqs)?;
-        let (p, s) =
-            inner.step(sess, &self.params, &self.opt_state, &grads, t, lr, wd)?;
-        self.params = p;
-        self.opt_state = s;
+        let loss = accumulate_grads_into(
+            sess, &self.params, &mut self.shard, batch_seqs,
+            &mut self.grads, &mut self.micro_grads, &mut self.tok)?;
+        inner.step_in_place(sess, &mut self.params, &mut self.opt_state,
+                            &self.grads, t, lr, wd)?;
         Ok(loss)
     }
 

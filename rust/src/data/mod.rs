@@ -135,6 +135,19 @@ impl<'a> Shard<'a> {
     /// Sample `b` sequences of `t` tokens as a flat row-major batch.
     pub fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
         let mut out = Vec::with_capacity(b * t);
+        self.fill_batch(b, t, &mut out);
+        out
+    }
+
+    /// [`next_batch`](Shard::next_batch) into a reusable buffer: the
+    /// identical token stream (same RNG consumption), allocation-free
+    /// once `out`'s capacity has warmed up.
+    pub fn next_batch_into(&mut self, b: usize, t: usize, out: &mut Vec<i32>) {
+        out.clear();
+        self.fill_batch(b, t, out);
+    }
+
+    fn fill_batch(&mut self, b: usize, t: usize, out: &mut Vec<i32>) {
         for _ in 0..b {
             // each sequence starts from the stream's rolling state,
             // mimicking contiguous document sampling
@@ -143,7 +156,6 @@ impl<'a> Shard<'a> {
                 out.push(tok);
             }
         }
-        out
     }
 
     pub fn next_token(&mut self) -> i32 {
@@ -189,6 +201,20 @@ mod tests {
         let a = c.shard(3).next_batch(2, 32);
         let b = c.shard(3).next_batch(2, 32);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn next_batch_into_matches_and_recycles_capacity() {
+        let c = Corpus::new(256, 7);
+        let want = c.shard(3).next_batch(2, 32);
+        let mut s = c.shard(3);
+        let mut buf = Vec::new();
+        s.next_batch_into(2, 32, &mut buf);
+        assert_eq!(buf, want);
+        let cap = buf.capacity();
+        s.next_batch_into(2, 32, &mut buf);
+        assert_eq!(buf.len(), want.len());
+        assert_eq!(buf.capacity(), cap, "buffer must be recycled");
     }
 
     #[test]

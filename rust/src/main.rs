@@ -31,12 +31,19 @@ use muloco::comm::wire::{time_pack_unpack_bf16, time_pack_unpack_kbit};
 use muloco::coordinator::{spec, train, Method, RunSpec};
 use muloco::experiments::{self, Format};
 use muloco::metrics::RunLogger;
+use muloco::runtime::native::arena::global_peak_bytes;
 use muloco::runtime::native::gemm::{time_blocked_vs_naive, time_scalar_vs_active};
 use muloco::runtime::native::tier::{Tier, KERNEL_TIERS};
-use muloco::runtime::{Precision, Session};
+use muloco::runtime::{Precision, Session, Tensors};
+use muloco::util::alloc_stats::{self, CountingAlloc};
 use muloco::util::cli::Args;
 use muloco::util::json::Json;
 use muloco::util::median_secs;
+
+/// Counting allocator so `bench` can report measured `allocs_per_step`
+/// numbers; the library never installs one (see `util::alloc_stats`).
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -193,6 +200,12 @@ struct ModelBench {
     kernels: BTreeMap<String, Json>,
     tokens_per_sec: f64,
     wall: f64,
+    /// Heap allocations per warmed inner step (fwd_grad + in-place
+    /// AdamW), process-wide.  0.0 on the zero-allocation steady state.
+    allocs_per_step: f64,
+    /// High-water mark of the step arenas, in bytes (global across
+    /// threads; monotone over the bench run).
+    arena_peak_bytes: f64,
 }
 
 fn bench_model(artifacts: &std::path::Path, model: &str, steps: u64)
@@ -247,6 +260,39 @@ fn bench_model(artifacts: &std::path::Path, model: &str, steps: u64)
         println!("  kernels: fwd_grad[bf16] {:.1}us", fwd_bf16 * 1e6);
     }
 
+    // --- steady-state allocation pressure (the zero-alloc contract,
+    //     tests/alloc_steady.rs): after warmup, fwd_grad_into + the
+    //     in-place AdamW apply must not touch the heap.  Counted
+    //     process-wide through the CountingAlloc this binary installs,
+    //     so pool-thread traffic (larger rungs cross PAR_THRESHOLD) is
+    //     included too -----------------------------------------------
+    let mut ss_params = params.clone();
+    let mut ss_state = sess.zero_adamw_state();
+    let mut ss_grads: Tensors = Vec::new();
+    for t in 1..=2 {
+        // warmup: grows the arena, step scratch and grad accumulators
+        let _ = sess.fwd_grad_into(&ss_params, &tokens, &mut ss_grads)?;
+        sess.apply_adamw_in_place(
+            &mut ss_params, &mut ss_state, &ss_grads, t as f32, 1e-3, 0.0,
+        )?;
+    }
+    let alloc_steps = 8u64;
+    let a0 = alloc_stats::global_allocs();
+    for t in 3..3 + alloc_steps {
+        let _ = sess.fwd_grad_into(&ss_params, &tokens, &mut ss_grads)?;
+        sess.apply_adamw_in_place(
+            &mut ss_params, &mut ss_state, &ss_grads, t as f32, 1e-3, 0.0,
+        )?;
+    }
+    let allocs_per_step =
+        (alloc_stats::global_allocs() - a0) as f64 / alloc_steps as f64;
+    let arena_peak_bytes = global_peak_bytes() as f64;
+    println!(
+        "  steady state: {allocs_per_step:.2} allocs/step, arena peak \
+         {:.1} KB",
+        arena_peak_bytes / 1e3
+    );
+
     // --- end-to-end tokens/sec -----------------------------------------
     let cfg = RunSpec::new(model, Method::Muloco)
         .batch(32)
@@ -271,6 +317,8 @@ fn bench_model(artifacts: &std::path::Path, model: &str, steps: u64)
         kernels,
         tokens_per_sec,
         wall,
+        allocs_per_step,
+        arena_peak_bytes,
     })
 }
 
@@ -349,6 +397,9 @@ fn bench_ckpt(artifacts: &std::path::Path, model: &str) -> Result<Json> {
 /// — the CI perf gate.  The default is calibrated to ~2x the spread
 /// observed between shared-runner invocations of the same commit
 /// (±10-15%), so the gate trips on real regressions, not runner noise.
+/// The `allocs_per_step` field is gated separately and *exactly*
+/// (tolerance 0): allocation counts are deterministic, so any increase
+/// over the baseline fails the compare.
 /// `--from CUR.json` skips the measurement and diffs two existing
 /// records (what CI does after the artifact upload).
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -393,6 +444,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         row.insert("param_count".to_string(), num(b.param_count as f64));
         row.insert("tokens_per_sec".to_string(), num(b.tokens_per_sec));
         row.insert("train_wall_secs".to_string(), num(b.wall));
+        row.insert("allocs_per_step".to_string(), num(b.allocs_per_step));
+        row.insert("arena_peak_bytes".to_string(), num(b.arena_peak_bytes));
         row.insert("kernels".to_string(), Json::Obj(b.kernels.clone()));
         ladder_rows.push(Json::Obj(row));
         if primary.is_none() {
@@ -516,6 +569,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     top.insert("model".to_string(), Json::Str(models[0].clone()));
     top.insert("param_count".to_string(), num(primary.param_count as f64));
     top.insert("tokens_per_sec".to_string(), num(primary.tokens_per_sec));
+    top.insert("allocs_per_step".to_string(), num(primary.allocs_per_step));
+    top.insert(
+        "arena_peak_bytes".to_string(),
+        num(primary.arena_peak_bytes),
+    );
     top.insert("train_steps".to_string(), num(steps as f64));
     top.insert("train_wall_secs".to_string(), num(primary.wall));
     top.insert("kernels".to_string(), Json::Obj(primary.kernels));
@@ -563,6 +621,23 @@ fn bench_compare(current: &Json, old_path: &str, tolerance: f64) -> Result<()> {
              {new_tps:.0}",
             100.0 * tolerance
         );
+    }
+    // Allocation gate: exact, tolerance 0.  Steady-state allocs/step is
+    // a count, not a timing — there is no runner noise to absorb, so
+    // any increase over the baseline is a real regression (a clone or
+    // Vec growth crept back into the hot loop).  Skipped gracefully
+    // when the baseline record predates the field.
+    if let (Ok(new_a), Ok(old_a)) = (
+        current.get("allocs_per_step").and_then(|x| x.as_f64()),
+        old.get("allocs_per_step").and_then(|x| x.as_f64()),
+    ) {
+        println!("  allocs/step: {old_a:.2} -> {new_a:.2} (exact gate)");
+        if !new_a.is_finite() || new_a > old_a {
+            bail!(
+                "steady-state allocs/step regressed: {old_a:.2} -> {new_a:.2} \
+                 (the allocation gate is exact; see tests/alloc_steady.rs)"
+            );
+        }
     }
     Ok(())
 }

@@ -82,6 +82,59 @@ pub trait Backend: Send + Sync {
     /// Forward + backward on one microbatch: returns (loss, grads).
     fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)>;
 
+    /// [`fwd_grad`](Backend::fwd_grad) writing into caller-owned grad
+    /// tensors (resized/overwritten to match the parameter layout).
+    /// Same bits as `fwd_grad`; the default delegates to it, so
+    /// backends without a zero-allocation path stay correct unchanged.
+    /// A backend overriding this MUST also override `fwd_grad` (the
+    /// native backend implements the in-place form and wraps it) —
+    /// otherwise the two defaults would delegate to each other.
+    fn fwd_grad_into(&self, params: &Tensors, tokens: &[i32],
+                     grads: &mut Tensors) -> Result<f32> {
+        let (loss, g) = self.fwd_grad(params, tokens)?;
+        *grads = g;
+        Ok(loss)
+    }
+
+    /// [`apply_adamw`](Backend::apply_adamw) updating `params` and
+    /// `state` in place.  Same math; the default delegates to the
+    /// allocating form.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_adamw_in_place(
+        &self,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        let (p, s) = self.apply_adamw(params, state, grads, t, lr, wd)?;
+        *params = p;
+        *state = s;
+        Ok(())
+    }
+
+    /// [`apply_muon`](Backend::apply_muon) updating `params` and
+    /// `state` in place.  Same math; the default delegates to the
+    /// allocating form.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_muon_in_place(
+        &self,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<()> {
+        let (p, s) = self.apply_muon(params, state, grads, t, lr, wd, ns_iters)?;
+        *params = p;
+        *state = s;
+        Ok(())
+    }
+
     /// One AdamW step. state = [m..]+[v..]; t is 1-indexed.
     #[allow(clippy::too_many_arguments)]
     fn apply_adamw(

@@ -2,6 +2,11 @@
 //! backends — native pure-Rust kernels by default, PJRT-compiled AOT
 //! artifacts behind the `pjrt` feature (see rust/ARCHITECTURE.md
 //! §"runtime backends").
+//!
+//! The native step path is allocation-free in steady state
+//! (tests/alloc_steady.rs), so stray clones here are a perf
+//! regression, not just style — keep the lint loud.
+#![warn(clippy::redundant_clone)]
 
 pub mod backend;
 pub mod manifest;

@@ -1,0 +1,258 @@
+//! Bump arena for per-step tensor scratch.
+//!
+//! The native forward/backward pass needs ~30 activation and scratch
+//! buffers per layer per step.  Allocating them fresh each step makes
+//! the global allocator the dominant non-kernel cost under K parallel
+//! worker threads, so every top-level backend call instead carves its
+//! buffers out of one per-thread [`Arena`]:
+//!
+//! * `alloc(n)` bumps a cursor through chunked storage and hands back a
+//!   zero-filled `&mut [f32]`.  Chunks are `Box<[f32]>`, so growing the
+//!   chunk list never moves live slices.
+//! * `reset()` (requires `&mut self`, i.e. no outstanding slices)
+//!   rewinds the cursor.  If the previous step spilled into multiple
+//!   chunks, reset coalesces them into one chunk sized for the whole
+//!   step — from the second step on, a steady-state step performs zero
+//!   heap allocations (`tests/alloc_steady.rs` pins this with the
+//!   counting allocator in `util::alloc_stats`).
+//!
+//! ## Why determinism is unaffected
+//!
+//! The arena changes *where* buffers live, never what is computed:
+//! every slice is zero-filled on allocation (bit-identical starting
+//! state to the `vec![0f32; n]` it replaces), and the kernels consuming
+//! the slices keep their accumulation order.  The parallel==sequential,
+//! ckpt-resume and tau>0 contracts therefore hold unchanged on the
+//! arena path; `tests/kernel_tiers.rs` additionally pins that repeated
+//! `fwd_grad` calls through a warmed (dirty) arena are bit-identical
+//! to the first cold call (`arena_fwd_grad`, `Tier::Exact`).
+//!
+//! ## Safety model
+//!
+//! `alloc` takes `&self` (so a forward pass can hold many live slices
+//! at once) and is sound because every call returns a disjoint region:
+//! the bump cursor never hands out the same range twice between
+//! resets, and `reset` takes `&mut self`, which the borrow checker
+//! only grants once no `alloc`'d slice is alive.  The `UnsafeCell`
+//! makes `Arena` `!Sync`; each worker lane owns its own arena through
+//! a `thread_local!` scratch.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// High-water mark (bytes) across every arena in the process, published
+/// at each `reset`.  `muloco bench` reports this as `arena_peak_bytes`.
+static GLOBAL_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Largest per-step arena footprint observed so far, in bytes.
+pub fn global_peak_bytes() -> usize {
+    GLOBAL_PEAK.load(Ordering::Relaxed)
+}
+
+/// Floor for fresh chunk sizes (f32 elements): 64 Ki f32 = 256 KiB.
+/// Avoids pathological chunk churn for tiny models while staying well
+/// under one nano-model step footprint.
+const MIN_CHUNK: usize = 1 << 16;
+
+struct ArenaState {
+    /// Stable storage: boxed slices never move when the list grows.
+    chunks: Vec<Box<[f32]>>,
+    /// Cursor: current chunk index and offset within it.
+    chunk: usize,
+    off: usize,
+    /// f32 elements handed out since the last reset.
+    used: usize,
+    /// Max `used` across resets (element count).
+    peak: usize,
+}
+
+/// A bump allocator over f32 chunks.  See the module docs for the
+/// lifetime and soundness rules.
+pub struct Arena {
+    state: UnsafeCell<ArenaState>,
+}
+
+impl Default for Arena {
+    fn default() -> Arena {
+        Arena::new()
+    }
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena {
+            state: UnsafeCell::new(ArenaState {
+                chunks: Vec::new(),
+                chunk: 0,
+                off: 0,
+                used: 0,
+                peak: 0,
+            }),
+        }
+    }
+
+    /// Arena with one pre-sized chunk of `n` f32s (e.g. sized from the
+    /// manifest before the first step).
+    pub fn with_capacity(n: usize) -> Arena {
+        let a = Arena::new();
+        if n > 0 {
+            // SAFETY: no slices are outstanding on a fresh arena.
+            let st = unsafe { &mut *a.state.get() };
+            st.chunks.push(vec![0f32; n.max(MIN_CHUNK)].into_boxed_slice());
+        }
+        a
+    }
+
+    /// Hand out a zero-filled `n`-element slice.  The slice lives as
+    /// long as the shared borrow of the arena; it is never handed out
+    /// again before the next `reset`.
+    #[allow(clippy::mut_from_ref)] // bump-arena: disjoint regions per call
+    pub fn alloc(&self, n: usize) -> &mut [f32] {
+        if n == 0 {
+            return &mut [];
+        }
+        // SAFETY: the &mut ArenaState borrow is confined to this call
+        // (Arena is !Sync, so no concurrent calls exist); the returned
+        // slice is derived from the stable Box storage and covers a
+        // region no other alloc() result overlaps.
+        let st = unsafe { &mut *self.state.get() };
+        loop {
+            if st.chunk < st.chunks.len() {
+                let cap = st.chunks[st.chunk].len();
+                if cap - st.off >= n {
+                    let off = st.off;
+                    st.off += n;
+                    st.used += n;
+                    if st.used > st.peak {
+                        st.peak = st.used;
+                    }
+                    let slice = unsafe {
+                        let ptr = st.chunks[st.chunk].as_mut_ptr().add(off);
+                        std::slice::from_raw_parts_mut(ptr, n)
+                    };
+                    // bit-safety: identical starting state to the
+                    // vec![0f32; n] this replaces (reused regions hold
+                    // stale data from the previous step)
+                    slice.fill(0.0);
+                    return slice;
+                }
+                // current chunk too small for this request: move on
+                // (the skipped tail stays unused until reset)
+                st.chunk += 1;
+                st.off = 0;
+                continue;
+            }
+            // grow: at least as large as everything allocated so far,
+            // so total chunk count stays O(log peak) during warmup
+            let total: usize = st.chunks.iter().map(|c| c.len()).sum();
+            let cap = n.max(total).max(MIN_CHUNK);
+            st.chunks.push(vec![0f32; cap].into_boxed_slice());
+        }
+    }
+
+    /// `alloc(src.len())` + copy — the arena replacement for `clone()`.
+    pub fn copy_of(&self, src: &[f32]) -> &mut [f32] {
+        let out = self.alloc(src.len());
+        out.copy_from_slice(src);
+        out
+    }
+
+    /// Rewind the cursor for the next step.  Requires `&mut self`, so
+    /// the borrow checker proves no slice from the previous step is
+    /// still alive.  Coalesces multi-chunk usage into a single chunk
+    /// sized for the whole step, making subsequent steps allocation-
+    /// free once the footprint stabilizes.
+    pub fn reset(&mut self) {
+        let st = self.state.get_mut();
+        GLOBAL_PEAK.fetch_max(st.peak * std::mem::size_of::<f32>(), Ordering::Relaxed);
+        if st.chunks.len() > 1 {
+            let total: usize = st.chunks.iter().map(|c| c.len()).sum();
+            st.chunks.clear();
+            st.chunks.push(vec![0f32; total].into_boxed_slice());
+        }
+        st.chunk = 0;
+        st.off = 0;
+        st.used = 0;
+    }
+
+    /// f32 elements handed out since the last reset.
+    pub fn used(&self) -> usize {
+        // SAFETY: read-only peek; the &mut borrow ends before return.
+        unsafe { (*self.state.get()).used }
+    }
+
+    /// High-water mark of `used` across this arena's lifetime.
+    pub fn peak(&self) -> usize {
+        unsafe { (*self.state.get()).peak }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_returns_zeroed_disjoint_slices() {
+        let arena = Arena::new();
+        let a = arena.alloc(16);
+        let b = arena.alloc(16);
+        assert!(a.iter().all(|&v| v == 0.0));
+        assert!(b.iter().all(|&v| v == 0.0));
+        a.fill(1.0);
+        b.fill(2.0);
+        assert!(a.iter().all(|&v| v == 1.0), "slices must not alias");
+        assert_eq!(arena.used(), 32);
+    }
+
+    #[test]
+    fn reset_rewinds_and_zeroes_reused_regions() {
+        let mut arena = Arena::new();
+        arena.alloc(64).fill(7.0);
+        assert_eq!(arena.used(), 64);
+        arena.reset();
+        assert_eq!(arena.used(), 0);
+        // reused region must come back zero-filled (bit-safety)
+        let again = arena.alloc(64);
+        assert!(again.iter().all(|&v| v == 0.0));
+        assert_eq!(arena.peak(), 64);
+    }
+
+    #[test]
+    fn copy_of_matches_source() {
+        let arena = Arena::new();
+        let src: Vec<f32> = (0..20).map(|i| i as f32 * 0.5).collect();
+        let c = arena.copy_of(&src);
+        assert_eq!(c, &src[..]);
+    }
+
+    #[test]
+    fn reset_coalesces_chunks_so_steady_state_fits_one() {
+        let mut arena = Arena::new();
+        // force multi-chunk growth: each request bigger than the last
+        // chunk's remaining space
+        for i in 1..=4usize {
+            let _ = arena.alloc(i * MIN_CHUNK);
+        }
+        let used = arena.used();
+        arena.reset();
+        // after coalescing, the same footprint fits the single chunk
+        let all = arena.alloc(used);
+        assert_eq!(all.len(), used);
+        // SAFETY of test logic: still one chunk, cursor at `used`
+        assert_eq!(arena.used(), used);
+    }
+
+    #[test]
+    fn with_capacity_presizes() {
+        let arena = Arena::with_capacity(1000);
+        let s = arena.alloc(1000);
+        assert_eq!(s.len(), 1000);
+    }
+
+    #[test]
+    fn zero_len_alloc_is_fine() {
+        let arena = Arena::new();
+        assert!(arena.alloc(0).is_empty());
+        assert_eq!(arena.used(), 0);
+    }
+}

@@ -34,6 +34,7 @@
 //! operand once and reuse the same blocked kernel, so there is exactly
 //! one accumulation-order definition to reason about.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::thread;
 
@@ -323,28 +324,51 @@ mod simd_kernel {
     }
 }
 
+thread_local! {
+    // Packed-transpose staging for sgemm_nt / sgemm_tn: reused across
+    // calls so the transposed variants are allocation-free once warm
+    // (the zero-alloc steady-state contract, tests/alloc_steady.rs).
+    static PACK_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Borrow the thread's packing scratch at exactly `len` elements
+/// (growing its capacity only on first use at a new high-water mark).
+fn with_pack_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK_SCRATCH.with(|s| {
+        let mut buf = s.borrow_mut();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
 /// C[m,n] = A[m,k] @ B[n,k]^T (B packed transposed, then the blocked
 /// kernel).
 pub fn sgemm_nt(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     debug_assert_eq!(b.len(), n * k);
-    let bt = transpose_copy(n, k, b);
-    sgemm(m, n, k, a, &bt, c);
+    with_pack_scratch(n * k, |bt| {
+        transpose_into(n, k, b, bt);
+        sgemm(m, n, k, a, bt, c);
+    });
 }
 
 /// C[m,n] = A[k,m]^T @ B[k,n] (A packed transposed, then the blocked
 /// kernel).
 pub fn sgemm_tn(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     debug_assert_eq!(a.len(), k * m);
-    let at = transpose_copy(k, m, a);
-    sgemm(m, n, k, &at, b, c);
+    with_pack_scratch(k * m, |at| {
+        transpose_into(k, m, a, at);
+        sgemm(m, n, k, at, b, c);
+    });
 }
 
-/// Tile-blocked out-of-place transpose: a is rows x cols, the result
-/// cols x rows.
-pub fn transpose_copy(rows: usize, cols: usize, a: &[f32]) -> Vec<f32> {
+/// Tile-blocked transpose of `a` (rows x cols) into `out` (cols x
+/// rows), overwriting every element of `out`.
+pub fn transpose_into(rows: usize, cols: usize, a: &[f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
     const TB: usize = 32;
-    let mut out = vec![0f32; rows * cols];
     let mut i0 = 0;
     while i0 < rows {
         let iend = (i0 + TB).min(rows);
@@ -360,6 +384,13 @@ pub fn transpose_copy(rows: usize, cols: usize, a: &[f32]) -> Vec<f32> {
         }
         i0 = iend;
     }
+}
+
+/// Tile-blocked out-of-place transpose: a is rows x cols, the result
+/// cols x rows.
+pub fn transpose_copy(rows: usize, cols: usize, a: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * cols];
+    transpose_into(rows, cols, a, &mut out);
     out
 }
 

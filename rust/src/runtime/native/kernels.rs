@@ -61,20 +61,40 @@ pub fn fused_adamw_scalar(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32]
 /// RMSNorm forward over rows of width `n`: returns (y, inv_rms) with
 /// y = x * inv_rms * g and inv_rms = 1/sqrt(mean(x^2) + eps) per row.
 pub fn rmsnorm_fwd(x: &[f32], g: &[f32], n: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut out = vec![0f32; x.len()];
+    let mut inv = vec![0f32; x.len() / n];
+    rmsnorm_fwd_into(x, g, n, eps, &mut out, &mut inv);
+    (out, inv)
+}
+
+/// [`rmsnorm_fwd`] writing into caller-owned buffers (every element of
+/// `out` and `inv` is overwritten) — the allocation-free form the
+/// arena-backed forward pass uses.
+pub fn rmsnorm_fwd_into(x: &[f32], g: &[f32], n: usize, eps: f32,
+                        out: &mut [f32], inv: &mut [f32]) {
     #[cfg(feature = "simd")]
-    return simd::rmsnorm_fwd(x, g, n, eps);
+    simd::rmsnorm_fwd_into(x, g, n, eps, out, inv);
     #[cfg(not(feature = "simd"))]
-    rmsnorm_fwd_scalar(x, g, n, eps)
+    rmsnorm_fwd_scalar_into(x, g, n, eps, out, inv);
 }
 
 /// Scalar reference body for [`rmsnorm_fwd`].
 pub fn rmsnorm_fwd_scalar(x: &[f32], g: &[f32], n: usize, eps: f32)
                           -> (Vec<f32>, Vec<f32>) {
+    let mut out = vec![0f32; x.len()];
+    let mut inv = vec![0f32; x.len() / n];
+    rmsnorm_fwd_scalar_into(x, g, n, eps, &mut out, &mut inv);
+    (out, inv)
+}
+
+/// Scalar reference body for [`rmsnorm_fwd_into`].
+pub fn rmsnorm_fwd_scalar_into(x: &[f32], g: &[f32], n: usize, eps: f32,
+                               out: &mut [f32], inv: &mut [f32]) {
     debug_assert_eq!(g.len(), n);
     debug_assert_eq!(x.len() % n, 0);
+    debug_assert_eq!(out.len(), x.len());
     let rows = x.len() / n;
-    let mut out = vec![0f32; x.len()];
-    let mut inv = vec![0f32; rows];
+    debug_assert_eq!(inv.len(), rows);
     for r in 0..rows {
         let xr = &x[r * n..(r + 1) * n];
         let mut ss = 0f64;
@@ -88,7 +108,6 @@ pub fn rmsnorm_fwd_scalar(x: &[f32], g: &[f32], n: usize, eps: f32)
             orow[j] = xr[j] * rr * g[j];
         }
     }
-    (out, inv)
 }
 
 /// RMSNorm backward: given the forward inputs (x, g), the saved per-row
@@ -290,13 +309,13 @@ mod simd {
                                   &g[main..], t, lr, wd);
     }
 
-    pub(super) fn rmsnorm_fwd(x: &[f32], g: &[f32], n: usize, eps: f32)
-                              -> (Vec<f32>, Vec<f32>) {
+    pub(super) fn rmsnorm_fwd_into(x: &[f32], g: &[f32], n: usize, eps: f32,
+                                   out: &mut [f32], inv: &mut [f32]) {
         debug_assert_eq!(g.len(), n);
         debug_assert_eq!(x.len() % n, 0);
+        debug_assert_eq!(out.len(), x.len());
         let rows = x.len() / n;
-        let mut out = vec![0f32; x.len()];
-        let mut inv = vec![0f32; rows];
+        debug_assert_eq!(inv.len(), rows);
         let main = n - n % L;
         for r in 0..rows {
             let xr = &x[r * n..(r + 1) * n];
@@ -321,7 +340,6 @@ mod simd {
                 orow[j] = xr[j] * rr * g[j];
             }
         }
-        (out, inv)
     }
 
     pub(super) fn rmsnorm_bwd(x: &[f32], g: &[f32], inv_rms: &[f32], dy: &[f32],
@@ -544,6 +562,22 @@ mod tests {
                 rope_apply_scalar(&mut xs, b, t, h, hd, &cos, &sin, inverse);
                 assert_eq!(xa, xs, "rope hd={hd} inverse={inverse}");
             }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_fwd_into_matches_allocating_form() {
+        let mut rng = Rng::new(17);
+        for n in [7usize, 8, 33] {
+            let x: Vec<f32> = (0..4 * n).map(|_| rng.normal_f32()).collect();
+            let g: Vec<f32> = (0..n).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect();
+            let (y, inv) = rmsnorm_fwd(&x, &g, n, 1e-6);
+            // dirty buffers: _into must fully overwrite them
+            let mut y2 = vec![7.0f32; x.len()];
+            let mut inv2 = vec![7.0f32; 4];
+            rmsnorm_fwd_into(&x, &g, n, 1e-6, &mut y2, &mut inv2);
+            assert_eq!(y, y2, "n={n}");
+            assert_eq!(inv, inv2, "n={n}");
         }
     }
 

@@ -29,23 +29,73 @@
 //! derived from the buffer length, so eval tails smaller than the
 //! configured microbatch run unpadded.
 
+pub mod arena;
 pub mod gemm;
 pub mod kernels;
 pub mod model;
 pub mod muon;
 pub mod tier;
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU8, Ordering};
 
 use anyhow::{bail, Result};
 
+use self::arena::Arena;
 use self::kernels::fused_adamw;
-use self::model::NativeModel;
-use self::muon::{newton_schulz_group, MUON_BETA};
+use self::model::{LayerActs, NativeModel};
+use self::muon::{NsWorkspace, MUON_BETA};
 use super::backend::{Backend, Precision, Tensors};
 use super::manifest::{Manifest, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::round_bf16_slice;
+
+/// Per-thread step scratch: the bump arena backing all forward
+/// activations / backward d-buffers / Newton-Schulz workspaces, the
+/// recycled layer-record Vec, and the bf16 params-in-flight copy.
+/// Thread-local (each WorkerPool lane steps its own worker on its own
+/// thread), so the zero-allocation steady state needs no locks and the
+/// lanes never share mutable buffers — the determinism contract is
+/// untouched because the arena only changes *where* buffers live,
+/// never the kernel call or accumulation order.
+struct StepScratch {
+    arena: Arena,
+    layer_slots: Vec<LayerActs<'static>>,
+    bf16_params: Tensors,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<StepScratch> = RefCell::new(StepScratch {
+        arena: Arena::new(),
+        layer_slots: Vec::new(),
+        bf16_params: Vec::new(),
+    });
+}
+
+/// Stage the parameters entering a step at the requested storage
+/// precision.  f32 borrows the input untouched; bf16 copies into the
+/// caller's scratch tensors (capacity reused across steps) and rounds
+/// — same values as the old `params.clone()` + round path.
+fn params_in_flight_into<'p>(params: &'p Tensors, prec: Precision,
+                             scratch: &'p mut Tensors) -> &'p Tensors {
+    if prec == Precision::F32 {
+        return params;
+    }
+    if scratch.len() != params.len() {
+        *scratch = params.clone();
+    } else {
+        for (dst, src) in scratch.iter_mut().zip(params) {
+            if dst.len() != src.len() {
+                dst.resize(src.len(), 0.0);
+            }
+            dst.copy_from_slice(src);
+        }
+    }
+    for t in scratch.iter_mut() {
+        round_bf16_slice(t);
+    }
+    &*scratch
+}
 
 /// RoPE base / norm epsilon: configs.py defaults, shared by every
 /// ladder rung (aot.py would bake per-config overrides into the HLO;
@@ -60,6 +110,10 @@ pub struct NativeBackend {
     /// Muon routing (indices into the flat param list)
     hidden: Vec<usize>,
     adamw_routed: Vec<usize>,
+    /// Hidden matrices grouped by shape in first-seen order (indices
+    /// into `hidden`) — a pure function of the manifest, precomputed so
+    /// `apply_muon` doesn't rebuild it per step.
+    muon_groups: Vec<((usize, usize), Vec<usize>)>,
     /// Storage precision of step calls (`Precision` as u8; an atomic so
     /// `set_precision` keeps the `&self` convention).  Written once by
     /// `train()` before any step runs; step calls only load it.
@@ -100,12 +154,23 @@ impl NativeBackend {
             }
         }
         let model = NativeModel::from_dims(dims, ROPE_THETA, NORM_EPS);
+        // group same-shape hidden matrices in first-seen order (one
+        // batched NS sweep per group, as in optim.py::_group_by_shape)
+        let mut muon_groups: Vec<((usize, usize), Vec<usize>)> = Vec::new();
+        for (j, &pi) in man.muon_hidden_indices.iter().enumerate() {
+            let sh = (man.params[pi].shape[0], man.params[pi].shape[1]);
+            match muon_groups.iter_mut().find(|(s, _)| *s == sh) {
+                Some((_, v)) => v.push(j),
+                None => muon_groups.push((sh, vec![j])),
+            }
+        }
         Ok(NativeBackend {
             model,
             seq_len: dims.seq_len,
             params: man.params.clone(),
             hidden: man.muon_hidden_indices.clone(),
             adamw_routed: man.muon_adamw_indices.clone(),
+            muon_groups,
             precision: AtomicU8::new(PREC_F32),
         })
     }
@@ -133,22 +198,6 @@ impl NativeBackend {
         }
     }
 
-    /// bf16 params-in-flight: the copy of the parameters entering a
-    /// step is stored bf16 (round-to-nearest-even), accumulation stays
-    /// f32.  No-op (no copy) under f32.
-    fn params_in_flight<'a>(&self, params: &'a Tensors, prec: Precision)
-                            -> std::borrow::Cow<'a, Tensors> {
-        match prec {
-            Precision::F32 => std::borrow::Cow::Borrowed(params),
-            Precision::Bf16 => {
-                let mut rounded = params.clone();
-                for t in rounded.iter_mut() {
-                    round_bf16_slice(t);
-                }
-                std::borrow::Cow::Owned(rounded)
-            }
-        }
-    }
 }
 
 impl Backend for NativeBackend {
@@ -195,13 +244,45 @@ impl Backend for NativeBackend {
     }
 
     fn fwd_grad(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, Tensors)> {
+        let mut grads: Tensors = Vec::new();
+        let loss = self.fwd_grad_into(params, tokens, &mut grads)?;
+        Ok((loss, grads))
+    }
+
+    /// The real forward+backward body: activations and d-buffers live
+    /// on the thread's step arena (reset on entry), the layer record
+    /// and bf16 staging are recycled, and the gradient lands in the
+    /// caller's tensors — zero heap allocations once every buffer has
+    /// warmed to its steady-state size.
+    fn fwd_grad_into(&self, params: &Tensors, tokens: &[i32],
+                     grads: &mut Tensors) -> Result<f32> {
         let (b, t) = self.batch_dims(tokens)?;
         let prec = self.precision();
-        let params = self.params_in_flight(params, prec);
-        let acts = self.model.forward(&params, tokens, b, t, prec)?;
-        let (loss, dlogits) = self.model.loss_and_dlogits(&acts.logits, tokens, b, t);
-        let grads = self.model.backward(&params, tokens, &acts, &dlogits, b, t);
-        Ok((loss as f32, grads))
+        // shape the output to the parameter layout (no-op once warmed)
+        if grads.len() != params.len() {
+            grads.resize(params.len(), Vec::new());
+        }
+        for (g, p) in grads.iter_mut().zip(params) {
+            if g.len() != p.len() {
+                g.resize(p.len(), 0.0);
+            }
+        }
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let StepScratch { arena, layer_slots, bf16_params } = &mut *scratch;
+            arena.reset();
+            let params = params_in_flight_into(params, prec, bf16_params);
+            let slots = std::mem::take(layer_slots);
+            let acts = self.model.forward(params, tokens, b, t, prec, arena,
+                                          slots)?;
+            let dlogits = arena.alloc(b * t * self.model.v);
+            let loss = self.model.loss_and_dlogits_into(acts.logits, tokens, b,
+                                                        t, dlogits);
+            self.model.backward_into(params, tokens, &acts, dlogits, b, t,
+                                     arena, grads);
+            *layer_slots = acts.recycle();
+            Ok(loss as f32)
+        })
     }
 
     fn apply_adamw(
@@ -213,19 +294,33 @@ impl Backend for NativeBackend {
         lr: f32,
         wd: f32,
     ) -> Result<(Tensors, Tensors)> {
-        let np = self.params.len();
         let mut new_p = params.clone();
-        let mut new_m: Tensors = state[..np].to_vec();
-        let mut new_v: Tensors = state[np..].to_vec();
+        let mut new_state = state.clone();
+        self.apply_adamw_in_place(&mut new_p, &mut new_state, grads, t, lr, wd)?;
+        Ok((new_p, new_state))
+    }
+
+    fn apply_adamw_in_place(
+        &self,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        let np = self.params.len();
+        if state.len() != 2 * np {
+            bail!("adamw state has {} tensors, expected {}", state.len(), 2 * np);
+        }
+        let (ms, vs) = state.split_at_mut(np);
         for (i, spec) in self.params.iter().enumerate() {
             // norms/embeddings convention: decay 2-D tensors only
             let wd_eff = if spec.shape.len() == 2 { wd } else { 0.0 };
-            fused_adamw(&mut new_p[i], &mut new_m[i], &mut new_v[i], &grads[i],
+            fused_adamw(&mut params[i], &mut ms[i], &mut vs[i], &grads[i],
                         t, lr, wd_eff);
         }
-        let mut new_state = new_m;
-        new_state.extend(new_v);
-        Ok((new_p, new_state))
+        Ok(())
     }
 
     fn apply_muon(
@@ -238,66 +333,83 @@ impl Backend for NativeBackend {
         wd: f32,
         ns_iters: usize,
     ) -> Result<(Tensors, Tensors)> {
+        let mut new_p = params.clone();
+        let mut new_state = state.clone();
+        self.apply_muon_in_place(&mut new_p, &mut new_state, grads, t, lr, wd,
+                                 ns_iters)?;
+        Ok((new_p, new_state))
+    }
+
+    fn apply_muon_in_place(
+        &self,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<()> {
         let nh = self.hidden.len();
         let na = self.adamw_routed.len();
-        let mut new_p = params.clone();
+        if state.len() != nh + 2 * na {
+            bail!("muon state has {} tensors, expected {}", state.len(),
+                  nh + 2 * na);
+        }
 
-        // --- Muon branch: momentum, batched NS, sqrt(n/m) rescale ------
-        let mut new_mom: Tensors = Vec::with_capacity(nh);
+        // --- Muon branch: momentum, grouped NS, sqrt(n/m) rescale ------
         for (j, &pi) in self.hidden.iter().enumerate() {
-            let mut mom = state[j].clone();
-            for (mv, &gv) in mom.iter_mut().zip(&grads[pi]) {
+            for (mv, &gv) in state[j].iter_mut().zip(&grads[pi]) {
                 *mv = MUON_BETA * *mv + gv;
             }
-            new_mom.push(mom);
         }
-        // group same-shape matrices in first-seen order (one batched
-        // NS pass per group, as in optim.py::_group_by_shape)
-        let mut groups: Vec<((usize, usize), Vec<usize>)> = Vec::new();
-        for (j, &pi) in self.hidden.iter().enumerate() {
-            let sh = (self.params[pi].shape[0], self.params[pi].shape[1]);
-            match groups.iter_mut().find(|(s, _)| *s == sh) {
-                Some((_, v)) => v.push(j),
-                None => groups.push((sh, vec![j])),
-            }
-        }
-        for ((rows, cols), js) in &groups {
-            let mut mats: Tensors = js.iter().map(|&j| new_mom[j].clone()).collect();
-            newton_schulz_group(&mut mats, *rows, *cols, ns_iters);
-            // paper §5: for W in R^{m x n} rescale LR by sqrt(n/m)
-            let scale = (*cols as f32 / *rows as f32).sqrt();
-            for (o, &j) in mats.iter().zip(js) {
-                let pi = self.hidden[j];
-                let prow = &mut new_p[pi];
-                for (i, ov) in o.iter().enumerate() {
-                    let pv = params[pi][i];
-                    prow[i] = pv - lr * scale * ov - lr * wd * pv;
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let arena = &mut scratch.arena;
+            arena.reset();
+            let arena = &*arena;
+            for ((rows, cols), js) in &self.muon_groups {
+                let mut ws = NsWorkspace::new(arena, *rows, *cols);
+                // paper §5: for W in R^{m x n} rescale LR by sqrt(n/m)
+                let scale = (*cols as f32 / *rows as f32).sqrt();
+                for &j in js {
+                    let pi = self.hidden[j];
+                    let o = ws.orthogonalize(&state[j], ns_iters);
+                    let prow = &mut params[pi];
+                    for (i, ov) in o.iter().enumerate() {
+                        let pv = prow[i];
+                        prow[i] = pv - lr * scale * ov - lr * wd * pv;
+                    }
                 }
             }
-        }
+        });
 
         // --- AdamW branch (embed / head / norms) -----------------------
-        let mut new_m: Tensors = state[nh..nh + na].to_vec();
-        let mut new_v: Tensors = state[nh + na..].to_vec();
+        let (rest, vs) = state.split_at_mut(nh + na);
+        let (_, ms) = rest.split_at_mut(nh);
         for (jj, &pi) in self.adamw_routed.iter().enumerate() {
             let wd_eff = if self.params[pi].shape.len() == 2 { wd } else { 0.0 };
-            fused_adamw(&mut new_p[pi], &mut new_m[jj], &mut new_v[jj],
+            fused_adamw(&mut params[pi], &mut ms[jj], &mut vs[jj],
                         &grads[pi], t, lr, wd_eff);
         }
-
-        let mut new_state = new_mom;
-        new_state.extend(new_m);
-        new_state.extend(new_v);
-        Ok((new_p, new_state))
+        Ok(())
     }
 
     fn eval_step(&self, params: &Tensors, tokens: &[i32]) -> Result<(f32, f32)> {
         let (b, t) = self.batch_dims(tokens)?;
         let prec = self.precision();
-        let params = self.params_in_flight(params, prec);
-        let acts = self.model.forward(&params, tokens, b, t, prec)?;
-        let (loss, acc) = self.model.metrics(&acts.logits, tokens, b, t);
-        Ok((loss as f32, acc as f32))
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let StepScratch { arena, layer_slots, bf16_params } = &mut *scratch;
+            arena.reset();
+            let params = params_in_flight_into(params, prec, bf16_params);
+            let slots = std::mem::take(layer_slots);
+            let acts = self.model.forward(params, tokens, b, t, prec, arena,
+                                          slots)?;
+            let (loss, acc) = self.model.metrics(acts.logits, tokens, b, t);
+            *layer_slots = acts.recycle();
+            Ok((loss as f32, acc as f32))
+        })
     }
 
     fn set_precision(&self, precision: Precision) -> Result<()> {

@@ -37,10 +37,13 @@
 //! logits stay f32: they are O(rows), not O(activations), and keeping
 //! them full-precision preserves the softmax/norm conditioning.
 
+use std::cell::RefCell;
+
 use anyhow::{bail, Result};
 
+use super::arena::Arena;
 use super::gemm::{sgemm, sgemm_nt, sgemm_tn};
-use super::kernels::{rmsnorm_bwd, rmsnorm_fwd, rope_apply, rope_tables,
+use super::kernels::{rmsnorm_bwd, rmsnorm_fwd_into, rope_apply, rope_tables,
                      swiglu_bwd, swiglu_fwd};
 use crate::runtime::backend::{Precision, Tensors};
 use crate::runtime::manifest::ModelDims;
@@ -96,51 +99,71 @@ pub struct NativeModel {
 }
 
 /// Saved forward activations of one layer (everything backward needs).
-struct LayerActs {
+/// Every field borrows the step [`Arena`] that backed the forward pass
+/// — the record owns no heap memory of its own.
+pub struct LayerActs<'a> {
     /// residual input to the layer
-    xa: Vec<f32>,
+    xa: &'a [f32],
     /// rmsnorm(xa, norm_att_in)
-    a_in: Vec<f32>,
-    r1: Vec<f32>,
+    a_in: &'a [f32],
+    r1: &'a [f32],
     /// raw projections, pre QK-norm (v has no norm)
-    qh: Vec<f32>,
-    kh: Vec<f32>,
-    vh: Vec<f32>,
+    qh: &'a [f32],
+    kh: &'a [f32],
+    vh: &'a [f32],
     /// per-(row, head) inv rms of the QK-norms
-    rq: Vec<f32>,
-    rk: Vec<f32>,
+    rq: &'a [f32],
+    rk: &'a [f32],
     /// post-norm, post-rope q/k (what scores are computed from)
-    qr: Vec<f32>,
-    kr: Vec<f32>,
+    qr: &'a [f32],
+    kr: &'a [f32],
     /// per-(b, h, q) softmax logsumexp — the flash statistic backward
     /// recomputes probabilities from (replaces the old (b, h, t, t)
     /// materialized probs)
-    lse: Vec<f32>,
-    attn_out: Vec<f32>,
+    lse: &'a [f32],
+    attn_out: &'a [f32],
     /// attn_out @ wo
-    proj: Vec<f32>,
-    r2: Vec<f32>,
+    proj: &'a [f32],
+    r2: &'a [f32],
     /// residual input to the FFN half (xa + rmsnorm(proj))
-    xf: Vec<f32>,
-    f_in: Vec<f32>,
-    r3: Vec<f32>,
-    g_pre: Vec<f32>,
-    u: Vec<f32>,
+    xf: &'a [f32],
+    f_in: &'a [f32],
+    r3: &'a [f32],
+    g_pre: &'a [f32],
+    u: &'a [f32],
     /// silu(g_pre) * u
-    prod: Vec<f32>,
+    prod: &'a [f32],
     /// prod @ wd
-    ffn_out: Vec<f32>,
-    r4: Vec<f32>,
+    ffn_out: &'a [f32],
+    r4: &'a [f32],
 }
 
-/// Whole-forward activation record.
-pub struct Acts {
-    layers: Vec<LayerActs>,
+/// Whole-forward activation record.  Borrows the step arena; the only
+/// heap allocation behind it is the `layers` Vec, whose backing store
+/// is recycled across steps via [`Acts::recycle`].
+pub struct Acts<'a> {
+    layers: Vec<LayerActs<'a>>,
     /// input to the final norm
-    x_final: Vec<f32>,
-    rf: Vec<f32>,
-    xnorm: Vec<f32>,
-    pub logits: Vec<f32>,
+    x_final: &'a [f32],
+    rf: &'a [f32],
+    xnorm: &'a [f32],
+    pub logits: &'a [f32],
+}
+
+impl<'a> Acts<'a> {
+    /// Tear the record down, returning the (emptied) layer-slot Vec so
+    /// the next forward reuses its allocation instead of growing a
+    /// fresh one — the piece that makes the activation record itself
+    /// allocation-free in the steady state.
+    pub fn recycle(self) -> Vec<LayerActs<'static>> {
+        let mut layers = self.layers;
+        layers.clear();
+        // SAFETY: the Vec is empty, so no LayerActs<'a> values (and no
+        // arena borrows) survive; only the raw allocation does, and
+        // Vec<LayerActs<'a>> and Vec<LayerActs<'static>> have identical
+        // layout (they differ only in a lifetime parameter).
+        unsafe { std::mem::transmute::<Vec<LayerActs<'a>>, Vec<LayerActs<'static>>>(layers) }
+    }
 }
 
 impl NativeModel {
@@ -191,8 +214,15 @@ impl NativeModel {
     /// Forward pass over one microbatch, recording every activation the
     /// backward pass needs.  tokens: (b, t) row-major.  `prec` is the
     /// storage precision of activations at rest (f32 is a no-op).
-    pub fn forward(&self, params: &Tensors, tokens: &[i32], b: usize, t: usize,
-                   prec: Precision) -> Result<Acts> {
+    ///
+    /// All activation storage comes from `arena` (zero-filled bump
+    /// slices — bit-identical start state to the old `vec![0f32; n]`
+    /// buffers, same kernel call order, so the produced bits are
+    /// unchanged); `slots` is the layer-record Vec recycled from the
+    /// previous step's [`Acts::recycle`] (pass `Vec::new()` cold).
+    pub fn forward<'a>(&self, params: &Tensors, tokens: &[i32], b: usize,
+                       t: usize, prec: Precision, arena: &'a Arena,
+                       slots: Vec<LayerActs<'static>>) -> Result<Acts<'a>> {
         let (d, f, v) = (self.d, self.f, self.v);
         let (h, hd) = (self.h, self.hd);
         let bt = b * t;
@@ -206,7 +236,7 @@ impl NativeModel {
         // embedding lookup, scaled by sqrt(d)
         let scale = (d as f32).sqrt();
         let embed = &params[0];
-        let mut x = vec![0f32; bt * d];
+        let mut x: &'a mut [f32] = arena.alloc(bt * d);
         for (r, &tok) in tokens.iter().enumerate() {
             let src = &embed[tok as usize * d..(tok as usize + 1) * d];
             let dst = &mut x[r * d..(r + 1) * d];
@@ -214,10 +244,17 @@ impl NativeModel {
                 *o = s * scale;
             }
         }
-        store(prec, &mut x);
+        store(prec, x);
 
         let (cos, sin) = self.rope_for(t)?;
-        let mut layers = Vec::with_capacity(self.n_layers);
+        // Vec<LayerActs<'static>> -> Vec<LayerActs<'a>> is a plain
+        // covariant coercion (the Vec is empty anyway)
+        let mut layers: Vec<LayerActs<'a>> = slots;
+        layers.clear();
+        layers.reserve(self.n_layers);
+        // scratch row for the two post-norm outputs that feed straight
+        // into a residual add and are never saved — reused every layer
+        let y_tmp = arena.alloc(bt * d);
         for layer in 0..self.n_layers {
             let g1 = &params[self.li(layer, O_NORM_ATT_IN)];
             let wq = &params[self.li(layer, O_WQ)];
@@ -234,57 +271,66 @@ impl NativeModel {
             let g4 = &params[self.li(layer, O_NORM_FFN_OUT)];
 
             // --- attention half -----------------------------------------
-            let xa = x;
-            let (mut a_in, r1) = rmsnorm_fwd(&xa, g1, d, self.eps);
-            store(prec, &mut a_in);
-            let mut qh = vec![0f32; bt * d];
-            sgemm(bt, d, d, &a_in, wq, &mut qh);
-            store(prec, &mut qh);
-            let mut kh = vec![0f32; bt * d];
-            sgemm(bt, d, d, &a_in, wk, &mut kh);
-            store(prec, &mut kh);
-            let mut vh = vec![0f32; bt * d];
-            sgemm(bt, d, d, &a_in, wv, &mut vh);
-            store(prec, &mut vh);
+            let xa: &'a [f32] = x;
+            let a_in = arena.alloc(bt * d);
+            let r1 = arena.alloc(bt);
+            rmsnorm_fwd_into(xa, g1, d, self.eps, a_in, r1);
+            store(prec, a_in);
+            let qh = arena.alloc(bt * d);
+            sgemm(bt, d, d, a_in, wq, qh);
+            store(prec, qh);
+            let kh = arena.alloc(bt * d);
+            sgemm(bt, d, d, a_in, wk, kh);
+            store(prec, kh);
+            let vh = arena.alloc(bt * d);
+            sgemm(bt, d, d, a_in, wv, vh);
+            store(prec, vh);
             // QK-norm over head slices (rows of hd), then RoPE
-            let (mut qr, rq) = rmsnorm_fwd(&qh, qnorm, hd, self.eps);
-            let (mut kr, rk) = rmsnorm_fwd(&kh, knorm, hd, self.eps);
-            rope_apply(&mut qr, b, t, h, hd, cos, sin, false);
-            rope_apply(&mut kr, b, t, h, hd, cos, sin, false);
-            store(prec, &mut qr);
-            store(prec, &mut kr);
-            let mut lse = vec![0f32; b * h * t];
-            let mut attn_out = vec![0f32; bt * d];
-            sdpa_flash_fwd(&qr, &kr, &vh, &mut lse, &mut attn_out, b, t, h, hd,
-                           d);
-            store(prec, &mut attn_out);
-            let mut proj = vec![0f32; bt * d];
-            sgemm(bt, d, d, &attn_out, wo, &mut proj);
-            store(prec, &mut proj);
-            let (y1, r2) = rmsnorm_fwd(&proj, g2, d, self.eps);
-            let mut xf = xa.clone();
-            add_assign(&mut xf, &y1);
-            store(prec, &mut xf);
+            let qr = arena.alloc(bt * d);
+            let rq = arena.alloc(bt * h);
+            rmsnorm_fwd_into(qh, qnorm, hd, self.eps, qr, rq);
+            let kr = arena.alloc(bt * d);
+            let rk = arena.alloc(bt * h);
+            rmsnorm_fwd_into(kh, knorm, hd, self.eps, kr, rk);
+            rope_apply(qr, b, t, h, hd, cos, sin, false);
+            rope_apply(kr, b, t, h, hd, cos, sin, false);
+            store(prec, qr);
+            store(prec, kr);
+            let lse = arena.alloc(b * h * t);
+            let attn_out = arena.alloc(bt * d);
+            sdpa_flash_fwd(qr, kr, vh, lse, attn_out, b, t, h, hd, d);
+            store(prec, attn_out);
+            let proj = arena.alloc(bt * d);
+            sgemm(bt, d, d, attn_out, wo, proj);
+            store(prec, proj);
+            let r2 = arena.alloc(bt);
+            rmsnorm_fwd_into(proj, g2, d, self.eps, y_tmp, r2);
+            let xf = arena.copy_of(xa);
+            add_assign(xf, y_tmp);
+            store(prec, xf);
 
             // --- SwiGLU half ---------------------------------------------
-            let (mut f_in, r3) = rmsnorm_fwd(&xf, g3, d, self.eps);
-            store(prec, &mut f_in);
-            let mut g_pre = vec![0f32; bt * f];
-            sgemm(bt, f, d, &f_in, wg, &mut g_pre);
-            store(prec, &mut g_pre);
-            let mut u = vec![0f32; bt * f];
-            sgemm(bt, f, d, &f_in, wu, &mut u);
-            store(prec, &mut u);
-            let mut prod = vec![0f32; bt * f];
-            swiglu_fwd(&g_pre, &u, &mut prod);
-            store(prec, &mut prod);
-            let mut ffn_out = vec![0f32; bt * d];
-            sgemm(bt, d, f, &prod, wd_, &mut ffn_out);
-            store(prec, &mut ffn_out);
-            let (y2, r4) = rmsnorm_fwd(&ffn_out, g4, d, self.eps);
-            let mut x_next = xf.clone();
-            add_assign(&mut x_next, &y2);
-            store(prec, &mut x_next);
+            let f_in = arena.alloc(bt * d);
+            let r3 = arena.alloc(bt);
+            rmsnorm_fwd_into(xf, g3, d, self.eps, f_in, r3);
+            store(prec, f_in);
+            let g_pre = arena.alloc(bt * f);
+            sgemm(bt, f, d, f_in, wg, g_pre);
+            store(prec, g_pre);
+            let u = arena.alloc(bt * f);
+            sgemm(bt, f, d, f_in, wu, u);
+            store(prec, u);
+            let prod = arena.alloc(bt * f);
+            swiglu_fwd(g_pre, u, prod);
+            store(prec, prod);
+            let ffn_out = arena.alloc(bt * d);
+            sgemm(bt, d, f, prod, wd_, ffn_out);
+            store(prec, ffn_out);
+            let r4 = arena.alloc(bt);
+            rmsnorm_fwd_into(ffn_out, g4, d, self.eps, y_tmp, r4);
+            let x_next = arena.copy_of(xf);
+            add_assign(x_next, y_tmp);
+            store(prec, x_next);
 
             layers.push(LayerActs {
                 xa, a_in, r1, qh, kh, vh, rq, rk, qr, kr, lse, attn_out,
@@ -294,22 +340,37 @@ impl NativeModel {
         }
 
         let norm_f = &params[self.idx_norm_f()];
-        let (mut xnorm, rf) = rmsnorm_fwd(&x, norm_f, d, self.eps);
-        store(prec, &mut xnorm);
-        let mut logits = vec![0f32; bt * v];
-        sgemm(bt, v, d, &xnorm, &params[self.idx_head()], &mut logits);
-        Ok(Acts { layers, x_final: x, rf, xnorm, logits })
+        let x_final: &'a [f32] = x;
+        let xnorm = arena.alloc(bt * d);
+        let rf = arena.alloc(bt);
+        rmsnorm_fwd_into(x_final, norm_f, d, self.eps, xnorm, rf);
+        store(prec, xnorm);
+        let logits = arena.alloc(bt * v);
+        sgemm(bt, v, d, xnorm, &params[self.idx_head()], logits);
+        Ok(Acts { layers, x_final, rf, xnorm, logits })
     }
 
     /// Mean next-token cross-entropy over (b, t-1) positions plus its
     /// gradient w.r.t. the logits.  Loss reduces in f64.
     pub fn loss_and_dlogits(&self, logits: &[f32], tokens: &[i32], b: usize,
                             t: usize) -> (f64, Vec<f32>) {
+        let mut dl = vec![0f32; b * t * self.v];
+        let loss = self.loss_and_dlogits_into(logits, tokens, b, t, &mut dl);
+        (loss, dl)
+    }
+
+    /// [`loss_and_dlogits`](NativeModel::loss_and_dlogits) writing the
+    /// gradient into a caller-owned buffer (zero-filled first — the
+    /// final position of each sequence carries no loss and must stay
+    /// zero).
+    pub fn loss_and_dlogits_into(&self, logits: &[f32], tokens: &[i32],
+                                 b: usize, t: usize, dl: &mut [f32]) -> f64 {
         let v = self.v;
+        debug_assert_eq!(dl.len(), b * t * v);
+        dl.fill(0.0);
         let n_pos = b * (t - 1);
         let inv_n = 1.0 / n_pos as f32;
         let mut loss = 0f64;
-        let mut dl = vec![0f32; b * t * v];
         for b_ in 0..b {
             for t_ in 0..t - 1 {
                 let row = b_ * t + t_;
@@ -329,7 +390,7 @@ impl NativeModel {
                 drow[target] -= inv_n;
             }
         }
-        (loss / n_pos as f64, dl)
+        loss / n_pos as f64
     }
 
     /// Eval metrics: (mean CE loss, next-token top-1 accuracy), same
@@ -366,97 +427,127 @@ impl NativeModel {
         (loss / n_pos as f64, hits as f64 / n_pos as f64)
     }
 
-    /// Reverse-mode backward from dlogits to per-parameter gradients.
+    /// Reverse-mode backward from dlogits to per-parameter gradients
+    /// (allocating form — builds fresh grad tensors and a private
+    /// arena; the hot path uses
+    /// [`backward_into`](NativeModel::backward_into)).
     pub fn backward(&self, params: &Tensors, tokens: &[i32], acts: &Acts,
                     dlogits: &[f32], b: usize, t: usize) -> Tensors {
+        let mut grads: Tensors = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let arena = Arena::new();
+        self.backward_into(params, tokens, acts, dlogits, b, t, &arena,
+                           &mut grads);
+        grads
+    }
+
+    /// Reverse-mode backward writing into caller-owned grad tensors
+    /// (zero-filled first — the norm-gain and embedding grads
+    /// accumulate).  All intermediate d-buffers come from `arena`,
+    /// preallocated once before the layer loop and reused across
+    /// layers, so a warmed arena makes this allocation-free.  Kernel
+    /// call order and accumulation order are identical to the original
+    /// allocating body — same bits out.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_into(&self, params: &Tensors, tokens: &[i32], acts: &Acts,
+                         dlogits: &[f32], b: usize, t: usize, arena: &Arena,
+                         grads: &mut Tensors) {
         let (d, f, v) = (self.d, self.f, self.v);
         let (h, hd) = (self.h, self.hd);
         let bt = b * t;
-        let mut grads: Tensors = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        debug_assert_eq!(grads.len(), params.len());
+        for g in grads.iter_mut() {
+            g.fill(0.0);
+        }
         let (cos, sin) = self
             .rope_for(t)
             .expect("backward always follows a forward that validated t");
 
+        // every intermediate the loop needs, carved out once (arena
+        // slices come back zeroed, matching the old vec![0f32; n])
+        let dxnorm = arena.alloc(bt * d);
+        let mut dx = arena.alloc(bt * d);
+        let dffn_out = arena.alloc(bt * d);
+        let dprod = arena.alloc(bt * f);
+        let dg_pre = arena.alloc(bt * f);
+        let du = arena.alloc(bt * f);
+        let df_in = arena.alloc(bt * d);
+        let tmp = arena.alloc(bt * d);
+        let dxf = arena.alloc(bt * d);
+        let dproj = arena.alloc(bt * d);
+        let dattn = arena.alloc(bt * d);
+        let dqr = arena.alloc(bt * d);
+        let dkr = arena.alloc(bt * d);
+        let dvh = arena.alloc(bt * d);
+        let dqh = arena.alloc(bt * d);
+        let dkh = arena.alloc(bt * d);
+        let da_in = arena.alloc(bt * d);
+        let mut dxa = arena.alloc(bt * d);
+
         // head + final norm
         let head_idx = self.idx_head();
         let norm_f_idx = self.idx_norm_f();
-        sgemm_tn(d, v, bt, &acts.xnorm, dlogits, &mut grads[head_idx]);
-        let mut dxnorm = vec![0f32; bt * d];
-        sgemm_nt(bt, d, v, dlogits, &params[head_idx], &mut dxnorm);
-        let mut dx = vec![0f32; bt * d];
-        rmsnorm_bwd(&acts.x_final, &params[norm_f_idx], &acts.rf, &dxnorm, d,
-                    &mut dx, &mut grads[norm_f_idx]);
+        sgemm_tn(d, v, bt, acts.xnorm, dlogits, &mut grads[head_idx]);
+        sgemm_nt(bt, d, v, dlogits, &params[head_idx], dxnorm);
+        rmsnorm_bwd(acts.x_final, &params[norm_f_idx], acts.rf, dxnorm, d,
+                    dx, &mut grads[norm_f_idx]);
 
         for layer in (0..self.n_layers).rev() {
             let la = &acts.layers[layer];
 
             // --- SwiGLU half (x_out = xf + rmsnorm(ffn_out, g4)) ---------
-            let mut dffn_out = vec![0f32; bt * d];
-            rmsnorm_bwd(&la.ffn_out, &params[self.li(layer, O_NORM_FFN_OUT)],
-                        &la.r4, &dx, d, &mut dffn_out,
+            rmsnorm_bwd(la.ffn_out, &params[self.li(layer, O_NORM_FFN_OUT)],
+                        la.r4, dx, d, dffn_out,
                         &mut grads[self.li(layer, O_NORM_FFN_OUT)]);
-            sgemm_tn(f, d, bt, &la.prod, &dffn_out,
+            sgemm_tn(f, d, bt, la.prod, dffn_out,
                      &mut grads[self.li(layer, O_WD)]);
-            let mut dprod = vec![0f32; bt * f];
-            sgemm_nt(bt, f, d, &dffn_out, &params[self.li(layer, O_WD)],
-                     &mut dprod);
-            let mut dg_pre = vec![0f32; bt * f];
-            let mut du = vec![0f32; bt * f];
-            swiglu_bwd(&la.g_pre, &la.u, &dprod, &mut du, &mut dg_pre);
-            sgemm_tn(d, f, bt, &la.f_in, &dg_pre,
+            sgemm_nt(bt, f, d, dffn_out, &params[self.li(layer, O_WD)],
+                     dprod);
+            swiglu_bwd(la.g_pre, la.u, dprod, du, dg_pre);
+            sgemm_tn(d, f, bt, la.f_in, dg_pre,
                      &mut grads[self.li(layer, O_WG)]);
-            sgemm_tn(d, f, bt, &la.f_in, &du, &mut grads[self.li(layer, O_WU)]);
-            let mut df_in = vec![0f32; bt * d];
-            sgemm_nt(bt, d, f, &dg_pre, &params[self.li(layer, O_WG)],
-                     &mut df_in);
-            let mut tmp = vec![0f32; bt * d];
-            sgemm_nt(bt, d, f, &du, &params[self.li(layer, O_WU)], &mut tmp);
-            add_assign(&mut df_in, &tmp);
-            let mut dxf = vec![0f32; bt * d];
-            rmsnorm_bwd(&la.xf, &params[self.li(layer, O_NORM_FFN_IN)], &la.r3,
-                        &df_in, d, &mut dxf,
+            sgemm_tn(d, f, bt, la.f_in, du, &mut grads[self.li(layer, O_WU)]);
+            sgemm_nt(bt, d, f, dg_pre, &params[self.li(layer, O_WG)],
+                     df_in);
+            sgemm_nt(bt, d, f, du, &params[self.li(layer, O_WU)], tmp);
+            add_assign(df_in, tmp);
+            rmsnorm_bwd(la.xf, &params[self.li(layer, O_NORM_FFN_IN)], la.r3,
+                        df_in, d, dxf,
                         &mut grads[self.li(layer, O_NORM_FFN_IN)]);
-            add_assign(&mut dxf, &dx); // residual skip
+            add_assign(dxf, dx); // residual skip
 
             // --- attention half (xf = xa + rmsnorm(proj, g2)) ------------
-            let mut dproj = vec![0f32; bt * d];
-            rmsnorm_bwd(&la.proj, &params[self.li(layer, O_NORM_ATT_OUT)],
-                        &la.r2, &dxf, d, &mut dproj,
+            rmsnorm_bwd(la.proj, &params[self.li(layer, O_NORM_ATT_OUT)],
+                        la.r2, dxf, d, dproj,
                         &mut grads[self.li(layer, O_NORM_ATT_OUT)]);
-            sgemm_tn(d, d, bt, &la.attn_out, &dproj,
+            sgemm_tn(d, d, bt, la.attn_out, dproj,
                      &mut grads[self.li(layer, O_WO)]);
-            let mut dattn = vec![0f32; bt * d];
-            sgemm_nt(bt, d, d, &dproj, &params[self.li(layer, O_WO)],
-                     &mut dattn);
-            let mut dqr = vec![0f32; bt * d];
-            let mut dkr = vec![0f32; bt * d];
-            let mut dvh = vec![0f32; bt * d];
-            sdpa_flash_bwd(&la.qr, &la.kr, &la.vh, &la.lse, &la.attn_out,
-                           &dattn, &mut dqr, &mut dkr, &mut dvh, b, t, h, hd,
-                           d);
-            rope_apply(&mut dqr, b, t, h, hd, cos, sin, true);
-            rope_apply(&mut dkr, b, t, h, hd, cos, sin, true);
-            let mut dqh = vec![0f32; bt * d];
-            rmsnorm_bwd(&la.qh, &params[self.li(layer, O_QNORM)], &la.rq, &dqr,
-                        hd, &mut dqh, &mut grads[self.li(layer, O_QNORM)]);
-            let mut dkh = vec![0f32; bt * d];
-            rmsnorm_bwd(&la.kh, &params[self.li(layer, O_KNORM)], &la.rk, &dkr,
-                        hd, &mut dkh, &mut grads[self.li(layer, O_KNORM)]);
-            sgemm_tn(d, d, bt, &la.a_in, &dqh, &mut grads[self.li(layer, O_WQ)]);
-            sgemm_tn(d, d, bt, &la.a_in, &dkh, &mut grads[self.li(layer, O_WK)]);
-            sgemm_tn(d, d, bt, &la.a_in, &dvh, &mut grads[self.li(layer, O_WV)]);
-            let mut da_in = vec![0f32; bt * d];
-            sgemm_nt(bt, d, d, &dqh, &params[self.li(layer, O_WQ)], &mut da_in);
-            sgemm_nt(bt, d, d, &dkh, &params[self.li(layer, O_WK)], &mut tmp);
-            add_assign(&mut da_in, &tmp);
-            sgemm_nt(bt, d, d, &dvh, &params[self.li(layer, O_WV)], &mut tmp);
-            add_assign(&mut da_in, &tmp);
-            let mut dxa = vec![0f32; bt * d];
-            rmsnorm_bwd(&la.xa, &params[self.li(layer, O_NORM_ATT_IN)], &la.r1,
-                        &da_in, d, &mut dxa,
+            sgemm_nt(bt, d, d, dproj, &params[self.li(layer, O_WO)],
+                     dattn);
+            // sdpa_flash_bwd accumulates — these three must start zero
+            dqr.fill(0.0);
+            dkr.fill(0.0);
+            dvh.fill(0.0);
+            sdpa_flash_bwd(la.qr, la.kr, la.vh, la.lse, la.attn_out,
+                           dattn, dqr, dkr, dvh, b, t, h, hd, d);
+            rope_apply(dqr, b, t, h, hd, cos, sin, true);
+            rope_apply(dkr, b, t, h, hd, cos, sin, true);
+            rmsnorm_bwd(la.qh, &params[self.li(layer, O_QNORM)], la.rq, dqr,
+                        hd, dqh, &mut grads[self.li(layer, O_QNORM)]);
+            rmsnorm_bwd(la.kh, &params[self.li(layer, O_KNORM)], la.rk, dkr,
+                        hd, dkh, &mut grads[self.li(layer, O_KNORM)]);
+            sgemm_tn(d, d, bt, la.a_in, dqh, &mut grads[self.li(layer, O_WQ)]);
+            sgemm_tn(d, d, bt, la.a_in, dkh, &mut grads[self.li(layer, O_WK)]);
+            sgemm_tn(d, d, bt, la.a_in, dvh, &mut grads[self.li(layer, O_WV)]);
+            sgemm_nt(bt, d, d, dqh, &params[self.li(layer, O_WQ)], da_in);
+            sgemm_nt(bt, d, d, dkh, &params[self.li(layer, O_WK)], tmp);
+            add_assign(da_in, tmp);
+            sgemm_nt(bt, d, d, dvh, &params[self.li(layer, O_WV)], tmp);
+            add_assign(da_in, tmp);
+            rmsnorm_bwd(la.xa, &params[self.li(layer, O_NORM_ATT_IN)], la.r1,
+                        da_in, d, dxa,
                         &mut grads[self.li(layer, O_NORM_ATT_IN)]);
-            add_assign(&mut dxa, &dxf); // residual skip
-            dx = dxa;
+            add_assign(dxa, dxf); // residual skip
+            std::mem::swap(&mut dx, &mut dxa);
         }
 
         // embedding scatter-add (rows in ascending (b, t) order)
@@ -465,7 +556,6 @@ impl NativeModel {
             let grow = &mut grads[0][tok as usize * d..(tok as usize + 1) * d];
             axpy(grow, scale, &dx[r * d..(r + 1) * d]);
         }
-        grads
     }
 }
 
@@ -482,9 +572,29 @@ impl NativeModel {
 pub fn sdpa_flash_fwd(qr: &[f32], kr: &[f32], vh: &[f32], lse: &mut [f32],
                       attn_out: &mut [f32], b: usize, t: usize, h: usize,
                       hd: usize, d: usize) {
+    // the running value accumulator is head_dim-sized and reused for
+    // every (b, h, q) row; keep it in a thread-local so steady-state
+    // calls are allocation-free (scores fit a KV_BLOCK stack array)
+    SDPA_ACC.with(|cell| {
+        let mut acc_store = cell.borrow_mut();
+        if acc_store.len() < hd {
+            acc_store.resize(hd, 0.0);
+        }
+        let acc = &mut acc_store[..hd];
+        sdpa_flash_fwd_with_acc(qr, kr, vh, lse, attn_out, b, t, h, hd, d, acc);
+    });
+}
+
+thread_local! {
+    static SDPA_ACC: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sdpa_flash_fwd_with_acc(qr: &[f32], kr: &[f32], vh: &[f32], lse: &mut [f32],
+                           attn_out: &mut [f32], b: usize, t: usize, h: usize,
+                           hd: usize, d: usize, acc: &mut [f32]) {
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
-    let mut sbuf = vec![0f32; KV_BLOCK];
-    let mut acc = vec![0f32; hd];
+    let mut sbuf = [0f32; KV_BLOCK];
     for b_ in 0..b {
         for h_ in 0..h {
             for q_ in 0..t {
@@ -519,14 +629,14 @@ pub fn sdpa_flash_fwd(qr: &[f32], kr: &[f32], vh: &[f32], lse: &mut [f32],
                         let p = (sbuf[i] - m_new).exp();
                         l += p;
                         let koff = (b_ * t + k_) * d + h_ * hd;
-                        axpy(&mut acc, p, &vh[koff..koff + hd]);
+                        axpy(acc, p, &vh[koff..koff + hd]);
                     }
                     m = m_new;
                     k0 = kend + 1;
                 }
                 let inv = 1.0 / l;
                 let orow = &mut attn_out[qoff..qoff + hd];
-                for (o, av) in orow.iter_mut().zip(&acc) {
+                for (o, av) in orow.iter_mut().zip(acc.iter()) {
                     *o = av * inv;
                 }
                 lse[(b_ * h + h_) * t + q_] = m + l.ln();

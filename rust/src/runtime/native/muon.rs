@@ -23,7 +23,8 @@
 //! the scalar loop); the Frobenius norm reduction stays scalar f64 so
 //! its accumulation order is fixed.
 
-use super::gemm::{sgemm, sgemm_nt, transpose_copy};
+use super::arena::Arena;
+use super::gemm::{sgemm, sgemm_nt, transpose_into};
 
 /// out[i] = s1*a[i] + s2*out[i], elementwise — the Newton-Schulz
 /// polynomial/residual update shape.  Pure per-element map, so the
@@ -112,61 +113,106 @@ pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
 pub const MUON_BETA: f32 = 0.9;
 const NS_EPS: f32 = 1e-7;
 
-/// Orthogonalize a group of same-shape matrices in place via `iters`
-/// Newton-Schulz steps.  `iters = 0` leaves each matrix Frobenius-
-/// normalized — the momentum-SGD degeneration `--ns-iters 0` exposes.
-pub fn newton_schulz_group(mats: &mut [Vec<f32>], rows: usize, cols: usize,
-                           iters: usize) {
-    let (a, b, c) = NS_COEFFS;
-    let transposed = rows > cols;
-    let (r, cc) = if transposed { (cols, rows) } else { (rows, cols) };
+/// Arena-backed Newton-Schulz workspace for one matrix shape: the
+/// gram / polynomial / residual buffers plus the oriented working copy
+/// and (for tall matrices) the write-back transpose, all carved from a
+/// step arena once and reused for every matrix of the shape.  The
+/// allocation-free replacement for the per-group `vec![...]`
+/// workspaces (and the per-matrix `transpose_copy`/`clone`) the old
+/// batched path allocated.
+pub struct NsWorkspace<'a> {
+    rows: usize,
+    cols: usize,
+    /// oriented dims: r <= cc, so the gram matrix is the small square
+    r: usize,
+    cc: usize,
+    transposed: bool,
+    gram: &'a mut [f32],
+    poly: &'a mut [f32],
+    px: &'a mut [f32],
+    x: &'a mut [f32],
+    back: &'a mut [f32],
+}
 
-    // orient + normalize the whole batch first
-    let mut xs: Vec<Vec<f32>> = mats
-        .iter()
-        .map(|m| {
-            debug_assert_eq!(m.len(), rows * cols);
-            let mut x = if transposed {
-                transpose_copy(rows, cols, m)
-            } else {
-                m.clone()
-            };
-            let mut ss = 0f64;
-            for &v in &x {
-                ss += v as f64 * v as f64;
-            }
-            let inv = 1.0 / (ss.sqrt() as f32 + NS_EPS);
-            scale_in_place(&mut x, inv);
-            x
-        })
-        .collect();
-
-    // one pass over the stacked batch per iteration; workspaces shared
-    let mut gram = vec![0f32; r * r];
-    let mut poly = vec![0f32; r * r];
-    let mut px = vec![0f32; r * cc];
-    for _ in 0..iters {
-        for x in xs.iter_mut() {
-            sgemm_nt(r, r, cc, x, x, &mut gram);
-            sgemm(r, r, r, &gram, &gram, &mut poly);
-            scale_add(&mut poly, &gram, b, c);
-            sgemm(r, cc, r, &poly, x, &mut px);
-            residual_merge(x, &px, a);
+impl<'a> NsWorkspace<'a> {
+    pub fn new(arena: &'a Arena, rows: usize, cols: usize) -> NsWorkspace<'a> {
+        let transposed = rows > cols;
+        let (r, cc) = if transposed { (cols, rows) } else { (rows, cols) };
+        NsWorkspace {
+            rows,
+            cols,
+            r,
+            cc,
+            transposed,
+            gram: arena.alloc(r * r),
+            poly: arena.alloc(r * r),
+            px: arena.alloc(r * cc),
+            x: arena.alloc(r * cc),
+            back: arena.alloc(rows * cols),
         }
     }
 
-    for (m, x) in mats.iter_mut().zip(xs) {
-        if transposed {
-            *m = transpose_copy(r, cc, &x);
+    /// Orthogonalize one rows x cols matrix via `iters` Newton-Schulz
+    /// steps (`iters = 0` only Frobenius-normalizes).  Returns the
+    /// result in workspace storage, valid until the next call.  The op
+    /// sequence applied to the matrix — orient, f64 Frobenius
+    /// normalize, per-iteration gram/poly/residual GEMMs — is exactly
+    /// the one the batched group sweep ran, and no data flows between
+    /// matrices, so per-matrix processing produces the same bits as
+    /// the old whole-batch interleaving.
+    pub fn orthogonalize(&mut self, m: &[f32], iters: usize) -> &[f32] {
+        debug_assert_eq!(m.len(), self.rows * self.cols);
+        let (a, b, c) = NS_COEFFS;
+        let (r, cc) = (self.r, self.cc);
+        if self.transposed {
+            transpose_into(self.rows, self.cols, m, self.x);
         } else {
-            *m = x;
+            self.x.copy_from_slice(m);
         }
+        let mut ss = 0f64;
+        for &v in self.x.iter() {
+            ss += v as f64 * v as f64;
+        }
+        let inv = 1.0 / (ss.sqrt() as f32 + NS_EPS);
+        scale_in_place(self.x, inv);
+        for _ in 0..iters {
+            sgemm_nt(r, r, cc, self.x, self.x, self.gram);
+            sgemm(r, r, r, self.gram, self.gram, self.poly);
+            scale_add(self.poly, self.gram, b, c);
+            sgemm(r, cc, r, self.poly, self.x, self.px);
+            residual_merge(self.x, self.px, a);
+        }
+        if self.transposed {
+            transpose_into(r, cc, self.x, self.back);
+            &*self.back
+        } else {
+            &*self.x
+        }
+    }
+}
+
+/// Orthogonalize a group of same-shape matrices in place via `iters`
+/// Newton-Schulz steps.  `iters = 0` leaves each matrix Frobenius-
+/// normalized — the momentum-SGD degeneration `--ns-iters 0` exposes.
+/// Allocating convenience wrapper over [`NsWorkspace`] (the in-place
+/// optimizer path holds a workspace on its step arena instead).
+pub fn newton_schulz_group(mats: &mut [Vec<f32>], rows: usize, cols: usize,
+                           iters: usize) {
+    if mats.is_empty() {
+        return;
+    }
+    let arena = Arena::new();
+    let mut ws = NsWorkspace::new(&arena, rows, cols);
+    for m in mats.iter_mut() {
+        let o = ws.orthogonalize(m, iters);
+        m.copy_from_slice(o);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::native::gemm::transpose_copy;
     use crate::util::rng::Rng;
 
     /// O = NS5(G) should push every singular value toward 1: O @ O^T

@@ -80,6 +80,12 @@ pub const KERNEL_TIERS: &[KernelTier] = &[
                  reference: "comm::wire::quant_codes_scalar" },
     KernelTier { name: "wire_dequant_codes", tier: Tier::Exact,
                  reference: "comm::wire::dequant_codes_scalar" },
+    // the arena-backed step path: warmed (buffer-reusing) fwd_grad vs a
+    // cold one.  Arena slices are zero-filled on alloc and every kernel
+    // keeps its accumulation order, so where the buffers live can never
+    // change the bits
+    KernelTier { name: "arena_fwd_grad", tier: Tier::Exact,
+                 reference: "cold fwd_grad (fresh arena/buffers, same bits)" },
 ];
 
 /// Look up a kernel's declared tier; panics on an undeclared name so a

@@ -197,6 +197,19 @@ impl Session {
         Ok(out)
     }
 
+    /// [`fwd_grad`](Session::fwd_grad) into caller-owned grad tensors
+    /// (reshaped to the parameter layout as needed) — the
+    /// allocation-free form the steady-state inner loop runs.
+    pub fn fwd_grad_into(&self, params: &Tensors, tokens: &[i32],
+                         grads: &mut Tensors) -> Result<f32> {
+        let t0 = Instant::now();
+        self.check_tokens(tokens)?;
+        self.check_params(params, "fwd_grad")?;
+        let loss = self.backend.fwd_grad_into(params, tokens, grads)?;
+        StatsCell::record(&self.stats.fwd_grad_calls, &self.stats.fwd_grad_nanos, t0);
+        Ok(loss)
+    }
+
     /// One AdamW step. state = [m..]+[v..]; t is 1-indexed.
     pub fn apply_adamw(
         &self,
@@ -217,6 +230,30 @@ impl Session {
         let out = self.backend.apply_adamw(params, state, grads, t, lr, wd)?;
         StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
         Ok(out)
+    }
+
+    /// [`apply_adamw`](Session::apply_adamw) updating params/state in
+    /// place (same math, no output clones).
+    pub fn apply_adamw_in_place(
+        &self,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let np = self.manifest.params.len();
+        if state.len() != 2 * np {
+            bail!("adamw state must have 2*{np} tensors");
+        }
+        self.check_params(params, "apply_adamw params")?;
+        self.check_params(grads, "apply_adamw grads")?;
+        self.backend
+            .apply_adamw_in_place(params, state, grads, t, lr, wd)?;
+        StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
+        Ok(())
     }
 
     /// One Muon step with the paper's Newton-Schulz iteration count.
@@ -259,6 +296,31 @@ impl Session {
             .apply_muon(params, state, grads, t, lr, wd, ns_iters)?;
         StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
         Ok(out)
+    }
+
+    /// [`apply_muon_ns`](Session::apply_muon_ns) updating params/state
+    /// in place (same math, no output clones).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_muon_ns_in_place(
+        &self,
+        params: &mut Tensors,
+        state: &mut Tensors,
+        grads: &Tensors,
+        t: f32,
+        lr: f32,
+        wd: f32,
+        ns_iters: usize,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        if state.len() != self.manifest.muon_state.len() {
+            bail!("muon state must have {} tensors", self.manifest.muon_state.len());
+        }
+        self.check_params(params, "apply_muon params")?;
+        self.check_params(grads, "apply_muon grads")?;
+        self.backend
+            .apply_muon_in_place(params, state, grads, t, lr, wd, ns_iters)?;
+        StatsCell::record(&self.stats.apply_calls, &self.stats.apply_nanos, t0);
+        Ok(())
     }
 
     /// Backend-internal state for a checkpoint (empty for the stateless

@@ -1,7 +1,9 @@
 //! Shared substrates: PRNG, JSON, table rendering, small math helpers.
 
+pub mod alloc_stats;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod table;
 
@@ -99,6 +101,15 @@ pub fn scale(y: &mut [f32], alpha: f32) {
 pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Element-wise a - b into a reusable buffer — the same arithmetic as
+/// [`sub`], allocation-free once `out`'s capacity has warmed up.
+#[inline]
+pub fn sub_into(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), b.len());
+    out.clear();
+    out.extend(a.iter().zip(b).map(|(x, y)| x - y));
 }
 
 /// Mean of a slice.
@@ -244,6 +255,16 @@ mod tests {
         for (i, v) in d.iter().enumerate() {
             assert_eq!(*v, a[i] - b[i], "sub at {i}");
         }
+
+        // the reusable-buffer twin matches bit-for-bit and recycles
+        // its capacity across calls
+        let mut buf = Vec::new();
+        sub_into(&a, &b, &mut buf);
+        assert_eq!(buf, d);
+        let cap = buf.capacity();
+        sub_into(&a, &b, &mut buf);
+        assert_eq!(buf, d);
+        assert_eq!(buf.capacity(), cap);
     }
 
     #[test]

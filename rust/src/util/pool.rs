@@ -1,0 +1,136 @@
+//! Recycled scratch buffers for the wire-codec transport path.
+//!
+//! Every simulated collective hop used to allocate a fresh `Vec<u8>`
+//! (encode) and `Vec<f32>` (decode).  [`BufPool`] keeps a small stack
+//! of retired buffers per thread; `with_byte_buf` / `with_f32_buf`
+//! check one out (cleared, capacity retained), run the closure, and
+//! return it — so a steady-state transport reuses the same two
+//! backing stores instead of round-tripping the allocator per tensor
+//! per hop.  Calls nest safely: a checked-out buffer is *removed* from
+//! the pool, so an inner `with_*` gets a distinct buffer.
+//!
+//! Ownership rule: the pool owns idle buffers; a closure owns its
+//! buffer only for its own duration and must not stash the reference.
+//! The pool is thread-local (no locks, no cross-thread traffic), and
+//! capped so a one-off giant tensor can't pin unbounded memory.
+
+use std::cell::RefCell;
+
+/// Max retired buffers kept per type per thread.  Collectives run at
+/// most a few codec round-trips deep, so this never evicts in the
+/// steady state.
+const MAX_POOLED: usize = 8;
+
+/// A stack of recycled byte/float buffers.
+#[derive(Default)]
+pub struct BufPool {
+    bytes: Vec<Vec<u8>>,
+    floats: Vec<Vec<f32>>,
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// Check out a cleared byte buffer (capacity retained from its
+    /// previous life, if any).
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        self.bytes
+            .pop()
+            .map(|mut b| {
+                b.clear();
+                b
+            })
+            .unwrap_or_default()
+    }
+
+    /// Retire a byte buffer back into the pool.
+    pub fn put_bytes(&mut self, b: Vec<u8>) {
+        if self.bytes.len() < MAX_POOLED {
+            self.bytes.push(b);
+        }
+    }
+
+    pub fn take_floats(&mut self) -> Vec<f32> {
+        self.floats
+            .pop()
+            .map(|mut b| {
+                b.clear();
+                b
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn put_floats(&mut self, b: Vec<f32>) {
+        if self.floats.len() < MAX_POOLED {
+            self.floats.push(b);
+        }
+    }
+}
+
+thread_local! {
+    static POOL: RefCell<BufPool> = RefCell::new(BufPool::new());
+}
+
+/// Run `f` with a pooled byte buffer (cleared; capacity reused).
+pub fn with_byte_buf<R>(f: impl FnOnce(&mut Vec<u8>) -> R) -> R {
+    let mut buf = POOL.with(|p| p.borrow_mut().take_bytes());
+    let r = f(&mut buf);
+    POOL.with(|p| p.borrow_mut().put_bytes(buf));
+    r
+}
+
+/// Run `f` with a pooled f32 buffer (cleared; capacity reused).
+pub fn with_f32_buf<R>(f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    let mut buf = POOL.with(|p| p.borrow_mut().take_floats());
+    let r = f(&mut buf);
+    POOL.with(|p| p.borrow_mut().put_floats(buf));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_come_back_cleared_with_capacity() {
+        let mut pool = BufPool::new();
+        let mut b = pool.take_bytes();
+        b.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = b.capacity();
+        pool.put_bytes(b);
+        let b2 = pool.take_bytes();
+        assert!(b2.is_empty());
+        assert_eq!(b2.capacity(), cap, "capacity must be recycled");
+    }
+
+    #[test]
+    fn nested_checkouts_get_distinct_buffers() {
+        with_byte_buf(|outer| {
+            outer.push(1);
+            with_byte_buf(|inner| {
+                assert!(inner.is_empty());
+                inner.push(2);
+            });
+            assert_eq!(outer.as_slice(), &[1]);
+        });
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut pool = BufPool::new();
+        for _ in 0..(MAX_POOLED + 5) {
+            pool.put_bytes(Vec::with_capacity(16));
+        }
+        assert!(pool.bytes.len() <= MAX_POOLED);
+    }
+
+    #[test]
+    fn float_pool_round_trips() {
+        with_f32_buf(|f| {
+            f.extend_from_slice(&[1.0, 2.0]);
+        });
+        with_f32_buf(|f| assert!(f.is_empty()));
+    }
+}

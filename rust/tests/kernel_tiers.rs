@@ -287,7 +287,7 @@ fn every_declared_kernel_is_covered_by_this_suite() {
         "sgemm", "rmsnorm_fwd", "rmsnorm_bwd", "rope_apply", "swiglu_fwd",
         "swiglu_bwd", "fused_adamw", "newton_schulz", "sdpa_fwd", "sdpa_bwd",
         "wire_pack_bf16", "wire_unpack_bf16", "wire_quant_codes",
-        "wire_dequant_codes",
+        "wire_dequant_codes", "arena_fwd_grad",
     ];
     for kt in KERNEL_TIERS {
         assert!(covered.contains(&kt.name),
@@ -299,6 +299,47 @@ fn every_declared_kernel_is_covered_by_this_suite() {
     // claim is enforced by muon.rs's closed-form unit tests plus the
     // GEMM assertion above
     assert_eq!(tier_of("newton_schulz").tier, Tier::Exact);
+}
+
+// ---------------------------------------------------------------------
+// Tier::Exact: the arena-backed step path, warmed vs cold
+// ---------------------------------------------------------------------
+
+/// The native backend's step scratch (bump arena + recycled layer
+/// slots) is freshly grown on the first call of a thread and reused for
+/// every call after.  Where the activation/gradient buffers live must
+/// never change the bits: arena slices are zero-filled on alloc and no
+/// kernel's accumulation order depends on buffer provenance.  Each
+/// `#[test]` runs on its own thread, so the first call here is
+/// genuinely cold.
+#[test]
+fn warmed_arena_step_path_is_bit_exact_vs_cold() {
+    assert_eq!(tier_of("arena_fwd_grad").tier, Tier::Exact);
+    let sess = native_session("nano");
+    let cfg = sess.manifest.config.clone();
+    let params = sess.init_params(9).unwrap();
+    let tokens: Vec<i32> = (0..cfg.microbatch * cfg.seq_len)
+        .map(|i| (i * 17 % cfg.vocab) as i32)
+        .collect();
+    let (cold_loss, cold_grads) = sess.fwd_grad(&params, &tokens).unwrap();
+    let (cold_eval, cold_acc) = sess.eval_step(&params, &tokens).unwrap();
+    for rep in 0..3 {
+        let (loss, grads) = sess.fwd_grad(&params, &tokens).unwrap();
+        assert_eq!(loss.to_bits(), cold_loss.to_bits(), "loss at rep {rep}");
+        assert_eq!(grads.len(), cold_grads.len());
+        for (g, c) in grads.iter().zip(&cold_grads) {
+            assert_kernel("arena_fwd_grad", g, c);
+        }
+        // the in-place entry point shares the same scratch and bits
+        let mut grads_into = Vec::new();
+        let loss_into =
+            sess.fwd_grad_into(&params, &tokens, &mut grads_into).unwrap();
+        assert_eq!(loss_into.to_bits(), cold_loss.to_bits(), "rep {rep}");
+        assert_eq!(grads_into, cold_grads);
+        let (el, ea) = sess.eval_step(&params, &tokens).unwrap();
+        assert_eq!(el.to_bits(), cold_eval.to_bits(), "eval at rep {rep}");
+        assert_eq!(ea.to_bits(), cold_acc.to_bits(), "acc at rep {rep}");
+    }
 }
 
 // ---------------------------------------------------------------------
