@@ -277,6 +277,55 @@ pub fn latest(dir: &Path) -> Result<PathBuf> {
     })
 }
 
+/// Retain only the newest `keep_last` complete checkpoints under `dir`
+/// (0 = keep everything); evict the rest, oldest first.  Returns how
+/// many were removed.
+///
+/// Eviction is atomic with respect to a concurrent `latest()`/resume:
+/// each victim is renamed to a `.tmp-evict-*` sibling first — instantly
+/// leaving the `step-*` namespace that `latest()` scans — and only then
+/// deleted, so a reader never selects a directory that is mid-removal.
+/// The newest checkpoint is always among the keepers (`keep_last >= 1`),
+/// so the `latest()` target itself is never evicted; a crash between
+/// rename and delete leaves a `.tmp-*` directory the next `write_atomic`
+/// clears.  Incomplete directories (no manifest) are not counted and
+/// not touched — `write_atomic`'s temp sweep owns those.
+pub fn retain(dir: &Path, keep_last: usize) -> Result<usize> {
+    if keep_last == 0 {
+        return Ok(0);
+    }
+    let mut steps: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in fs::read_dir(dir)
+        .with_context(|| format!("reading checkpoint dir {}", dir.display()))?
+        .flatten()
+    {
+        let name = entry.file_name();
+        let Some(step) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("step-"))
+            .and_then(|n| n.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        if !entry.path().join(MANIFEST_FILE).exists() {
+            continue;
+        }
+        steps.push((step, entry.path()));
+    }
+    steps.sort_by(|a, b| b.0.cmp(&a.0)); // newest first
+    let mut removed = 0;
+    for (step, path) in steps.iter().skip(keep_last) {
+        let tomb = dir.join(format!(".tmp-evict-{step:08}-{}",
+                                    std::process::id()));
+        fs::rename(path, &tomb)
+            .with_context(|| format!("evicting checkpoint {}", path.display()))?;
+        fs::remove_dir_all(&tomb)
+            .with_context(|| format!("removing {}", tomb.display()))?;
+        removed += 1;
+    }
+    Ok(removed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,5 +414,31 @@ mod tests {
         assert!(latest(&dir).unwrap().ends_with("step-00000013"));
         fs::remove_dir_all(&dir).unwrap();
         assert!(latest(&dir).is_err());
+    }
+
+    #[test]
+    fn retain_keeps_newest_and_never_the_latest_target() {
+        let dir = tmp_dir("retain");
+        let (pages, bin) = PageWriter::new().finish();
+        let man = manifest_with(pages);
+        for step in [3u64, 7, 12, 30] {
+            write_atomic(&dir, step, &man, &bin).unwrap();
+        }
+        // incomplete dir (no manifest) is neither counted nor touched
+        fs::create_dir_all(dir.join("step-00000050")).unwrap();
+
+        assert_eq!(retain(&dir, 0).unwrap(), 0); // retention disabled
+        assert_eq!(retain(&dir, 2).unwrap(), 2); // drops steps 3 and 7
+        assert!(!dir.join("step-00000003").exists());
+        assert!(!dir.join("step-00000007").exists());
+        assert!(dir.join("step-00000012").exists());
+        assert!(dir.join("step-00000030").exists());
+        assert!(dir.join("step-00000050").exists());
+        assert!(latest(&dir).unwrap().ends_with("step-00000030"));
+
+        assert_eq!(retain(&dir, 2).unwrap(), 0); // idempotent
+        assert_eq!(retain(&dir, 1).unwrap(), 1);
+        assert!(latest(&dir).unwrap().ends_with("step-00000030"));
+        fs::remove_dir_all(&dir).unwrap();
     }
 }

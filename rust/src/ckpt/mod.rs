@@ -30,6 +30,7 @@
 pub mod format;
 pub mod state;
 
-pub use format::{latest, step_dir_name, PageReader, PageWriter, VERSION};
+pub use format::{latest, retain, step_dir_name, PageReader, PageWriter,
+                 VERSION};
 pub use state::{load_dir, load_latest, save, CkptMeta, PendingSnap, TrainState,
                 WorkerSnap};

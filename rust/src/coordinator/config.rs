@@ -151,6 +151,9 @@ pub struct TrainConfig {
     pub fault_seed: u64,
     /// checkpoint every this many steps into `ckpt_dir` (0 = never)
     pub save_every: u64,
+    /// after each save, retain only the newest N checkpoints in
+    /// `ckpt_dir` (0 = keep all); the resume target is never evicted
+    pub keep_last: u64,
     /// directory checkpoints are written to / resumed from
     pub ckpt_dir: String,
     /// resume from the newest checkpoint under this directory before
@@ -222,6 +225,7 @@ impl TrainConfig {
             straggler: 0.0,
             fault_seed: 0,
             save_every: 0,
+            keep_last: 0,
             ckpt_dir: "ckpts".to_string(),
             resume: String::new(),
             halt_after: 0,

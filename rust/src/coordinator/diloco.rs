@@ -467,6 +467,10 @@ pub fn train(sess: &Session, cfg: &TrainConfig) -> Result<RunResult> {
                 save_checkpoint(sess, cfg, step, tokens, &theta,
                                 &pool.workers, &mut engine, &comm, &fstats,
                                 &train_curve, &eval_curve, &acc_curve)?;
+                if cfg.keep_last > 0 {
+                    ckpt::retain(Path::new(&cfg.ckpt_dir),
+                                 cfg.keep_last as usize)?;
+                }
             }
             // deterministic crash point for kill-and-resume tests: the
             // state on disk is whatever the last --save-every wrote

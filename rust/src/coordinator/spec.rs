@@ -210,6 +210,22 @@ fn build_registry() -> Vec<Knob> {
             },
         },
         Knob {
+            name: "keep-last",
+            tag: "",
+            doc: "after each save, retain only the newest N checkpoints \
+                  in --ckpt-dir (0 = keep all; excluded from cache keys)",
+            example: "2",
+            flag: false,
+            in_key: false,
+            get: |c| c.keep_last.to_string(),
+            set: |c, v| {
+                c.keep_last = v
+                    .parse()
+                    .map_err(|e| anyhow!("bad value for --keep-last: {e}"))?;
+                Ok(())
+            },
+        },
+        Knob {
             name: "ckpt-dir",
             tag: "",
             doc: "checkpoint directory (excluded from cache keys)",
@@ -406,6 +422,7 @@ impl RunSpec {
     setter!(straggler, "straggler", f64, straggler);
     setter!(fault_seed, "fault-seed", u64, fault_seed);
     setter!(save_every, "save-every", u64, save_every);
+    setter!(keep_last, "keep-last", u64, keep_last);
     setter!(ckpt_dir, "ckpt-dir", String, ckpt_dir);
     setter!(resume, "resume", String, resume);
     setter!(halt_after, "halt-after", u64, halt_after);
@@ -692,12 +709,14 @@ mod tests {
 
     #[test]
     fn ckpt_knobs_stay_out_of_the_cache_key() {
-        // save-every/ckpt-dir/resume/halt-after cannot affect the math
+        // save-every/keep-last/ckpt-dir/resume/halt-after cannot affect
+        // the math
         // a run produces, so two configs differing only there must share
         // a cache entry; the fault knobs DO move the math and the key
         let base = RunSpec::new("nano", Method::Muloco).build().unwrap();
         let ckpt = RunSpec::new("nano", Method::Muloco)
             .save_every(10)
+            .keep_last(2)
             .ckpt_dir("elsewhere".to_string())
             .resume("elsewhere".to_string())
             .halt_after(5)

@@ -7,17 +7,22 @@
 //! other version as a miss, so a schema change (new summary fields)
 //! invalidates stale entries once instead of surfacing partly-default
 //! summaries.
+//!
+//! Since PR 9 the persistence layer is the content-addressed
+//! [`ResultStore`] (`serve::store`): entries live under
+//! `results/store/<2 hex>/<62 hex>.json`, named by the SHA-256 of the
+//! key.  That retires the old flat FNV-1a layout, whose 64-bit names
+//! let `put` after a collision silently overwrite the *other* key's
+//! entry.  [`RunCache`] is now a thin compatibility shim: the same
+//! get/put/run surface the experiment generators always used, over the
+//! store the server shares.  Pre-PR 9 `results/cache` entries are
+//! absorbed on open (see [`RunCache::open_migrating`]).
 
 use std::collections::BTreeMap;
-use std::fs;
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
-/// Uniquifies concurrent temp-file names within this process (see
-/// `RunCache::put`).
-static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+pub use crate::serve::store::ResultStore;
 
 /// Cache entry schema version.  2 = per-rank comm vectors + fault
 /// counters added (PR 5); version-1 entries regenerate on first use.
@@ -53,7 +58,7 @@ pub struct RunSummary {
 }
 
 impl RunSummary {
-    fn from_result(r: &RunResult) -> RunSummary {
+    pub fn from_result(r: &RunResult) -> RunSummary {
         RunSummary {
             smoothed_final: r.smoothed_final,
             raw_final: r.raw_final,
@@ -71,7 +76,7 @@ impl RunSummary {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("smoothed_final".into(), Json::Num(self.smoothed_final));
         m.insert("raw_final".into(), Json::Num(self.raw_final));
@@ -90,7 +95,7 @@ impl RunSummary {
         Json::Obj(m)
     }
 
-    fn from_json(v: &Json) -> Result<RunSummary> {
+    pub fn from_json(v: &Json) -> Result<RunSummary> {
         Ok(RunSummary {
             smoothed_final: v.get("smoothed_final")?.as_f64()?,
             raw_final: v.get("raw_final")?.as_f64()?,
@@ -112,9 +117,7 @@ impl RunSummary {
 /// Canonical cache key for a config: derived from the knob registry
 /// (`coordinator::spec`), so there is no hand-maintained field list to
 /// forget — a knob added to the schema lands in the key automatically
-/// (property-tested in `tests/spec_contract.rs`).  The registry-derived
-/// format retired the old suffix scheme, invalidating pre-PR cache
-/// entries once; runs regenerate on first use.
+/// (property-tested in `tests/spec_contract.rs`).
 pub fn config_key(cfg: &TrainConfig) -> String {
     crate::coordinator::spec::cache_key(cfg)
 }
@@ -124,7 +127,7 @@ pub fn config_key(cfg: &TrainConfig) -> String {
 /// (native-cpu) is suffixed — the two produce different numbers
 /// (different init RNGs, different accumulation order), so their runs
 /// must never share a cache entry.
-fn backend_suffix(platform: &str) -> String {
+pub fn backend_suffix(platform: &str) -> String {
     if platform == "cpu" {
         String::new()
     } else {
@@ -132,63 +135,47 @@ fn backend_suffix(platform: &str) -> String {
     }
 }
 
+/// The full store key for a (config, backend) pair — what the store
+/// content-addresses and the scheduler dedupes on.
+pub fn store_key(cfg: &TrainConfig, platform: &str) -> String {
+    config_key(cfg) + &backend_suffix(platform)
+}
+
+/// Compatibility shim over the content-addressed [`ResultStore`].
 pub struct RunCache {
-    dir: PathBuf,
+    store: ResultStore,
 }
 
 impl RunCache {
     pub fn new(dir: &str) -> Result<RunCache> {
-        fs::create_dir_all(dir)?;
-        Ok(RunCache { dir: PathBuf::from(dir) })
+        Ok(RunCache { store: ResultStore::open(dir)? })
     }
 
-    fn path_for(&self, key: &str) -> PathBuf {
-        // FNV-1a over the key keeps filenames short and stable
-        let mut h: u64 = 0xcbf29ce484222325;
-        for b in key.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        self.dir.join(format!("{h:016x}.json"))
+    /// Open the store at `dir`, absorbing any pre-PR 9 flat cache
+    /// entries found at `legacy` (atomic re-home: old entries either
+    /// migrate whole or regenerate — never a partial read).
+    pub fn open_migrating(dir: &str, legacy: &str) -> Result<RunCache> {
+        Ok(RunCache {
+            store: ResultStore::open_with_legacy(dir,
+                                                 std::path::Path::new(legacy))?,
+        })
+    }
+
+    pub fn store(&self) -> &ResultStore {
+        &self.store
     }
 
     pub fn get(&self, cfg: &TrainConfig, platform: &str) -> Option<RunSummary> {
-        let key = config_key(cfg) + &backend_suffix(platform);
-        let path = self.path_for(&key);
-        let text = fs::read_to_string(path).ok()?;
-        let v = Json::parse(&text).ok()?;
-        // schema gate: entries written under another format version are
-        // misses (they lack fields this build expects), regenerated on
-        // first use
-        let format = v.get("format").ok().and_then(|x| x.as_f64().ok())? as u64;
-        if format != CACHE_FORMAT {
-            return None;
-        }
-        if v.get("key").ok()?.as_str().ok()? != key {
-            return None; // hash collision — treat as miss
-        }
-        RunSummary::from_json(v.get("run").ok()?).ok()
+        let run = self
+            .store
+            .get_run(&store_key(cfg, platform), CACHE_FORMAT)?;
+        RunSummary::from_json(&run).ok()
     }
 
     pub fn put(&self, cfg: &TrainConfig, platform: &str, run: &RunSummary)
                -> Result<()> {
-        let key = config_key(cfg) + &backend_suffix(platform);
-        let mut m = BTreeMap::new();
-        m.insert("format".into(), Json::Num(CACHE_FORMAT as f64));
-        m.insert("key".into(), Json::Str(key.clone()));
-        m.insert("run".into(), run.to_json());
-        // write-to-temp + rename: `experiment all --jobs N` can race two
-        // writers onto one entry (both trained after a shared miss);
-        // the rename keeps every reader seeing a complete file —
-        // last-write-wins, never a torn JSON that would poison get()
-        let path = self.path_for(&key);
-        let tmp = path.with_extension(format!(
-            "tmp.{}.{}",
-            std::process::id(),
-            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        fs::write(&tmp, Json::Obj(m).to_string())?;
-        fs::rename(&tmp, &path)?;
+        self.store
+            .put(&store_key(cfg, platform), CACHE_FORMAT, run.to_json())?;
         Ok(())
     }
 
@@ -207,8 +194,7 @@ impl RunCache {
         if let Some(hit) = self.get(cfg, &platform) {
             return Ok(hit);
         }
-        eprintln!("[cache] training {}{}", config_key(cfg),
-                  backend_suffix(&platform));
+        eprintln!("[cache] training {}", store_key(cfg, &platform));
         let result = train(sess, cfg)?;
         let summary = RunSummary::from_result(&result);
         self.put(cfg, &platform, &summary)?;

@@ -6,15 +6,16 @@
 //! `--format json` for the JSON document on stdout).  See DESIGN.md §5
 //! for the full paper-artifact -> generator index.
 //!
-//! Training runs are cached on disk (`results/cache/`) keyed by the
-//! knob-registry cache key (`coordinator::spec::cache_key`), so
+//! Training runs are cached on disk (`results/store/`, the
+//! content-addressed result store shared with `muloco serve`) keyed by
+//! the knob-registry cache key (`coordinator::spec::cache_key`), so
 //! `experiment all` is incremental and experiments share underlying
 //! runs (e.g. fig1a and fig11 reuse the same K-sweep).  Sweep-shaped
 //! generators go through the [`Sweep`] combinator, which resolves knob
 //! axes against the same registry.
 
 mod artifact;
-mod cache;
+pub mod cache;
 mod fig_analysis;
 mod fig_cbs;
 mod fig_compress;
@@ -80,7 +81,10 @@ impl Ctx {
             preset,
             smoke,
             sessions: Mutex::new(BTreeMap::new()),
-            cache: RunCache::new("results/cache")?,
+            // content-addressed store (PR 9); pre-existing flat
+            // `results/cache` entries are absorbed on first open
+            cache: RunCache::open_migrating("results/store",
+                                            "results/cache")?,
         })
     }
 

@@ -30,4 +30,5 @@ pub mod metrics;
 pub mod netsim;
 pub mod runtime;
 pub mod scaling;
+pub mod serve;
 pub mod util;

@@ -10,6 +10,9 @@
 //!   bench       time the runtime kernels + a short train; emit
 //!               BENCH_native.json (the perf trajectory record) and
 //!               optionally gate against a prior record (`--compare`)
+//!   serve       always-on run-spec service over the content-addressed
+//!               result store (POST /runs, GET /metrics, ...)
+//!   cache       inspect (`stats`) or trim (`evict`) the result store
 //!   info        print a config's manifest summary
 //!   list        list available experiments
 //!
@@ -76,6 +79,8 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "experiment" => cmd_experiment(&args),
         "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "cache" => cmd_cache(&args),
         "info" => cmd_info(&args),
         "list" => {
             for (id, desc) in experiments::registry_names() {
@@ -642,6 +647,86 @@ fn bench_compare(current: &Json, old_path: &str, tolerance: f64) -> Result<()> {
     Ok(())
 }
 
+/// `muloco serve`: the always-on run-spec service (serve/ subsystem).
+/// Runs until killed; `POST /runs` submits the same spec JSON that
+/// `train --spec` replays.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = muloco::serve::ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7070"),
+        jobs: args.get_parse("jobs", 2usize)?,
+        http_threads: args.get_parse("http-threads", 4usize)?,
+        keep_last: args.get_parse("keep-last", 0usize)?,
+        max_store_bytes: args.get_parse("max-store-bytes", 0u64)?,
+        store_dir: PathBuf::from(args.get_or("store", "results/store")),
+        legacy_cache_dir: Some(PathBuf::from("results/cache")),
+        artifacts: artifacts_dir(args),
+        keep_alive: true,
+    };
+    args.finish()?;
+    let jobs = cfg.jobs;
+    let handle = muloco::serve::start(cfg)?;
+    println!("muloco serve listening on http://{} ({jobs} training jobs)",
+             handle.addr);
+    println!("  POST /runs            submit a run-spec JSON (?wait=1 blocks)");
+    println!("  GET  /runs/:id        status + progress lines");
+    println!("  GET  /runs/:id/result store entry bytes for a finished run");
+    println!("  GET  /experiments     experiment registry");
+    println!("  GET  /metrics         store/queue/latency counters");
+    // serve until the process is killed; all work happens on the
+    // server's own threads
+    loop {
+        std::thread::park();
+    }
+}
+
+/// `muloco cache <stats|evict>`: inspect or trim the result store
+/// without the server running.
+fn cmd_cache(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("stats");
+    let store_dir = args.get_or("store", "results/store");
+    match sub {
+        "stats" => {
+            args.finish()?;
+            let store = muloco::serve::store::ResultStore::open(&store_dir)?;
+            let entries = store.scan()?;
+            let total: u64 = entries.iter().map(|e| e.bytes).sum();
+            println!("store {store_dir}: {} entries, {total} bytes",
+                     entries.len());
+            // per-format-version breakdown (format 0 = unreadable)
+            let mut by_format: BTreeMap<u64, (usize, u64)> = BTreeMap::new();
+            for e in &entries {
+                let slot = by_format.entry(e.format).or_default();
+                slot.0 += 1;
+                slot.1 += e.bytes;
+            }
+            for (format, (count, bytes)) in &by_format {
+                let note = if *format == 0 { " (unreadable)" } else { "" };
+                println!("  format {format}: {count} entries, {bytes} \
+                          bytes{note}");
+            }
+            let collisions = entries.iter().filter(|e| e.slot > 0).count();
+            if collisions > 0 {
+                println!("  {collisions} collision sibling(s)");
+            }
+            Ok(())
+        }
+        "evict" => {
+            let keep_last: usize = args.get_parse("keep-last", 0)?;
+            let max_bytes: u64 = args.get_parse("max-store-bytes", 0)?;
+            args.finish()?;
+            if keep_last == 0 && max_bytes == 0 {
+                bail!("cache evict needs --keep-last N and/or \
+                       --max-store-bytes B");
+            }
+            let store = muloco::serve::store::ResultStore::open(&store_dir)?;
+            let removed = store.evict(keep_last, max_bytes)?;
+            println!("evicted {removed} entries from {store_dir}");
+            Ok(())
+        }
+        other => bail!("unknown cache subcommand {other:?} (stats|evict)"),
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let model = args.get_or("model", "nano");
     let artifacts = artifacts_dir(args);
@@ -675,6 +760,11 @@ USAGE:
                [--out BENCH_native.json]
                [--compare OLD.json] [--tolerance 0.35]
                [--from CUR.json]        # diff two records, no re-measure
+  muloco serve [--addr 127.0.0.1:7070] [--jobs N] [--keep-last N]
+               [--max-store-bytes B] [--store results/store]
+               [--http-threads N]
+  muloco cache [stats|evict] [--store results/store]
+               [--keep-last N] [--max-store-bytes B]
   muloco info --model M
   muloco list
 

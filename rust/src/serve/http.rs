@@ -1,0 +1,476 @@
+//! Minimal vendored HTTP/1.1 server on `std::net` — no hyper offline,
+//! and `muloco serve` needs only a sliver of the protocol: parse a
+//! request line + headers, bound every size, hand a `Request` to a
+//! routing closure, write the response with `Content-Length`.
+//!
+//! Safety envelope (the parts that matter for an always-on process):
+//! - head capped at [`MAX_HEAD_BYTES`] (431), body at
+//!   [`MAX_BODY_BYTES`] (413), chunked encoding rejected (501);
+//! - accept → worker handoff over a bounded channel, so a connection
+//!   flood backs up into the kernel listen queue instead of spawning
+//!   unbounded threads;
+//! - keep-alive optional and capped per connection; read timeouts so a
+//!   stalled client cannot pin a worker forever;
+//! - `ServerHandle::stop` flips a flag and self-connects to unblock the
+//!   accept loop, then joins every thread — tests shut down cleanly.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Request line + headers must fit here (431 otherwise).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Bodies larger than this are refused (413) — run specs are tiny.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+/// Requests served per kept-alive connection before we close it.
+const MAX_REQUESTS_PER_CONN: usize = 64;
+/// Per-read timeout; a silent client costs a worker at most this long.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path with the query string stripped
+    pub path: String,
+    /// percent-decoded query parameters
+    pub query: BTreeMap<String, String>,
+    /// header names lowercased
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn query_flag(&self, name: &str) -> bool {
+        matches!(self.query.get(name).map(String::as_str),
+                 Some("1") | Some("true") | Some(""))
+    }
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    /// extra headers beyond Content-Type/Content-Length/Connection
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: impl Into<Vec<u8>>) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body: body.into(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>)
+                       -> Response {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            501 => "Not Implemented",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// Routing closure: the whole application behind the listener.
+pub type Handler = dyn Fn(&Request) -> Response + Send + Sync;
+
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown, unblock the accept loop, join every thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // self-connect so the blocking accept() observes the flag
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve `handler` on `listener` with `threads` workers.  Returns once
+/// the threads are spawned; the caller owns the lifetime through the
+/// handle.
+pub fn serve(listener: TcpListener, threads: usize, keep_alive: bool,
+             handler: Arc<Handler>) -> Result<ServerHandle> {
+    let addr = listener.local_addr().context("listener has no local addr")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let threads = threads.max(1);
+    // bounded handoff: when all workers are busy and the buffer is
+    // full, accept() itself blocks and the kernel backlog absorbs the
+    // burst — no unbounded queue growth inside the process
+    let (tx, rx) = mpsc::sync_channel::<TcpStream>(threads * 2);
+    let rx = Arc::new(Mutex::new(rx));
+
+    let mut handles = Vec::with_capacity(threads + 1);
+    for _ in 0..threads {
+        let rx = Arc::clone(&rx);
+        let handler = Arc::clone(&handler);
+        handles.push(thread::spawn(move || loop {
+            let conn = match rx.lock() {
+                Ok(guard) => guard.recv(),
+                Err(_) => return,
+            };
+            match conn {
+                Ok(stream) => handle_conn(stream, handler.as_ref(), keep_alive),
+                Err(_) => return, // accept loop gone — shutdown
+            }
+        }));
+    }
+
+    {
+        let stop = Arc::clone(&stop);
+        handles.push(thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    return; // tx drops here; workers drain and exit
+                }
+                let Ok(stream) = conn else { continue };
+                if tx.send(stream).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+
+    Ok(ServerHandle { addr, stop, threads: handles })
+}
+
+enum Parsed {
+    Request(Request),
+    /// clean EOF before the first byte of a request
+    Closed,
+    /// protocol violation — respond with this and close
+    Error(Response),
+}
+
+fn handle_conn(stream: TcpStream, handler: &Handler, keep_alive: bool) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut stream = stream;
+    for served in 0..MAX_REQUESTS_PER_CONN {
+        let req = match parse_request(&mut reader) {
+            Parsed::Request(r) => r,
+            Parsed::Closed => return,
+            Parsed::Error(resp) => {
+                let _ = write_response(&mut stream, &resp, false);
+                return;
+            }
+        };
+        // HTTP/1.1 defaults to keep-alive unless the client opts out
+        let client_keep = req
+            .headers
+            .get("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        let keep = keep_alive && client_keep
+            && served + 1 < MAX_REQUESTS_PER_CONN;
+        let resp = handler(&req);
+        if write_response(&mut stream, &resp, keep).is_err() || !keep {
+            return;
+        }
+    }
+}
+
+fn parse_request(reader: &mut BufReader<TcpStream>) -> Parsed {
+    let mut head_bytes = 0usize;
+    let mut line = String::new();
+    // request line (skip stray CRLF between pipelined requests)
+    let request_line = loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Parsed::Closed,
+            Ok(n) => head_bytes += n,
+            Err(_) => return Parsed::Closed, // timeout / reset
+        }
+        if head_bytes > MAX_HEAD_BYTES {
+            return Parsed::Error(Response::text(431, "header too large\n"));
+        }
+        let t = line.trim_end_matches(['\r', '\n']);
+        if !t.is_empty() {
+            break t.to_string();
+        }
+    };
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Parsed::Error(Response::text(400, "malformed request line\n"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Parsed::Error(Response::text(400, "unsupported version\n"));
+    }
+    let (path, query) = split_target(target);
+
+    let mut headers = BTreeMap::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Parsed::Closed,
+            Ok(n) => head_bytes += n,
+            Err(_) => return Parsed::Closed,
+        }
+        if head_bytes > MAX_HEAD_BYTES {
+            return Parsed::Error(Response::text(431, "header too large\n"));
+        }
+        let t = line.trim_end_matches(['\r', '\n']);
+        if t.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = t.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(),
+                           value.trim().to_string());
+        }
+    }
+
+    if headers
+        .get("transfer-encoding")
+        .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"))
+    {
+        return Parsed::Error(Response::text(501, "chunked not supported\n"));
+    }
+    let body = match headers.get("content-length") {
+        None => Vec::new(),
+        Some(v) => {
+            let Ok(n) = v.parse::<usize>() else {
+                return Parsed::Error(Response::text(400,
+                                                    "bad content-length\n"));
+            };
+            if n > MAX_BODY_BYTES {
+                return Parsed::Error(Response::text(413, "body too large\n"));
+            }
+            let mut buf = vec![0u8; n];
+            if reader.read_exact(&mut buf).is_err() {
+                return Parsed::Closed;
+            }
+            buf
+        }
+    };
+
+    Parsed::Request(Request {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body,
+    })
+}
+
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    let (path, qs) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in qs.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(percent_decode(k), percent_decode(v));
+    }
+    (percent_decode(path), query)
+}
+
+/// Minimal `%XX` + `+` decoding; invalid escapes pass through verbatim.
+fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' => {
+                let hex = b.get(i + 1..i + 3).and_then(|h| {
+                    std::str::from_utf8(h)
+                        .ok()
+                        .and_then(|h| u8::from_str_radix(h, 16).ok())
+                });
+                match hex {
+                    Some(c) => {
+                        out.push(c);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response, keep: bool)
+                  -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+         Connection: {}\r\n",
+        resp.status,
+        Response::reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep { "keep-alive" } else { "close" },
+    );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server(keep_alive: bool) -> ServerHandle {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handler: Arc<Handler> = Arc::new(|req: &Request| {
+            let q = req
+                .query
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join("&");
+            Response::text(
+                200,
+                format!("{} {} [{}] {}", req.method, req.path, q,
+                        String::from_utf8_lossy(&req.body)),
+            )
+        });
+        serve(listener, 2, keep_alive, handler).unwrap()
+    }
+
+    fn raw(addr: SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_method_path_query_and_body() {
+        let h = echo_server(false);
+        let resp = raw(
+            h.addr,
+            "POST /runs?wait=1&tag=a%20b HTTP/1.1\r\nHost: x\r\n\
+             Content-Length: 5\r\n\r\nhello",
+        );
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("POST /runs [tag=a b&wait=1] hello"), "{resp}");
+        assert!(resp.contains("Connection: close"), "{resp}");
+        h.stop();
+    }
+
+    #[test]
+    fn keep_alive_serves_two_requests_on_one_connection() {
+        let h = echo_server(true);
+        let mut s = TcpStream::connect(h.addr).unwrap();
+        for path in ["/a", "/b"] {
+            s.write_all(
+                format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes(),
+            )
+            .unwrap();
+            let mut reader = BufReader::new(s.try_clone().unwrap());
+            // read head
+            let mut len = 0usize;
+            loop {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                if let Some(v) = line.to_ascii_lowercase()
+                    .strip_prefix("content-length:")
+                {
+                    len = v.trim().parse().unwrap();
+                }
+                if line == "\r\n" {
+                    break;
+                }
+            }
+            let mut body = vec![0u8; len];
+            reader.read_exact(&mut body).unwrap();
+            assert!(String::from_utf8_lossy(&body).contains(path));
+            s = reader.into_inner();
+        }
+        h.stop();
+    }
+
+    #[test]
+    fn size_limits_and_malformed_lines_are_refused() {
+        let h = echo_server(false);
+        let huge_header = format!(
+            "GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n",
+            "a".repeat(MAX_HEAD_BYTES)
+        );
+        assert!(raw(h.addr, &huge_header).starts_with("HTTP/1.1 431"));
+        let huge_body = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(raw(h.addr, &huge_body).starts_with("HTTP/1.1 413"));
+        assert!(raw(h.addr, "NONSENSE\r\n\r\n").starts_with("HTTP/1.1 400"));
+        assert!(raw(
+            h.addr,
+            "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+        )
+        .starts_with("HTTP/1.1 501"));
+        h.stop();
+    }
+
+    #[test]
+    fn stop_joins_cleanly_and_frees_the_port() {
+        let h = echo_server(true);
+        let addr = h.addr;
+        h.stop();
+        // port is released — a new bind to the same address succeeds
+        let _rebound = TcpListener::bind(addr).unwrap();
+    }
+}

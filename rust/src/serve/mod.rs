@@ -1,0 +1,326 @@
+//! `muloco serve` — an always-on run-spec service over the
+//! content-addressed result store (ROADMAP direction #3).
+//!
+//! Endpoints:
+//! - `POST /runs` — submit a run-spec JSON (the `--spec` schema).
+//!   `?wait=1` blocks until the run settles and returns the store entry
+//!   bytes; otherwise returns `202` with the run id for polling.  The
+//!   response body for a completed run is the *raw store entry file*,
+//!   so every submitter of one spec observes byte-identical results;
+//!   per-submitter routing (`store` / `trained` / `joined` / `queued`)
+//!   rides in the `X-Muloco-Source` header.
+//! - `GET /runs/:id` — status + progress lines (id = SHA-256 of the
+//!   canonical key, i.e. the entry's content address).
+//! - `GET /runs/:id/result` — the store entry bytes for a finished run.
+//! - `GET /experiments` — the experiment registry (id + description).
+//! - `GET /metrics` — Prometheus-style text: store counters, queue
+//!   depth, run counters, per-endpoint request/latency counters, and
+//!   the PR 8 allocation counters.
+//! - `GET /` — human-readable endpoint index.
+
+pub mod http;
+pub mod scheduler;
+pub mod store;
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::experiments::registry_names;
+use crate::util::json::Json;
+use http::{Request, Response};
+use scheduler::{ExecStatus, Scheduler, Source};
+use store::ResultStore;
+
+pub struct ServeConfig {
+    /// bind address; port 0 picks an ephemeral port (tests)
+    pub addr: String,
+    /// training worker threads
+    pub jobs: usize,
+    /// HTTP worker threads (cheap; requests mostly block on training)
+    pub http_threads: usize,
+    /// store retention: keep newest N entries (0 = unlimited)
+    pub keep_last: usize,
+    /// store retention: total byte budget (0 = unlimited)
+    pub max_store_bytes: u64,
+    pub store_dir: PathBuf,
+    /// legacy flat `results/cache` to absorb on startup, if present
+    pub legacy_cache_dir: Option<PathBuf>,
+    pub artifacts: PathBuf,
+    pub keep_alive: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7070".into(),
+            jobs: 2,
+            http_threads: 4,
+            keep_last: 0,
+            max_store_bytes: 0,
+            store_dir: "results/store".into(),
+            legacy_cache_dir: Some("results/cache".into()),
+            artifacts: "artifacts".into(),
+            keep_alive: true,
+        }
+    }
+}
+
+/// Per-endpoint request/latency accounting for `/metrics`.
+#[derive(Default)]
+struct Metrics {
+    endpoints: Mutex<BTreeMap<&'static str, EndpointStat>>,
+}
+
+#[derive(Default, Clone, Copy)]
+struct EndpointStat {
+    count: u64,
+    total_us: u64,
+    max_us: u64,
+}
+
+impl Metrics {
+    fn record(&self, label: &'static str, us: u64) {
+        let mut m = self.endpoints.lock().unwrap();
+        let s = m.entry(label).or_default();
+        s.count += 1;
+        s.total_us += us;
+        s.max_us = s.max_us.max(us);
+    }
+
+    fn render_into(&self, out: &mut String) {
+        let m = self.endpoints.lock().unwrap();
+        for (label, s) in m.iter() {
+            out.push_str(&format!(
+                "muloco_http_requests_total{{endpoint=\"{label}\"}} {}\n",
+                s.count
+            ));
+            out.push_str(&format!(
+                "muloco_http_latency_us_total{{endpoint=\"{label}\"}} {}\n",
+                s.total_us
+            ));
+            out.push_str(&format!(
+                "muloco_http_latency_us_max{{endpoint=\"{label}\"}} {}\n",
+                s.max_us
+            ));
+        }
+    }
+}
+
+struct App {
+    store: Arc<ResultStore>,
+    sched: Arc<Scheduler>,
+    metrics: Metrics,
+}
+
+pub struct ServeHandle {
+    pub addr: std::net::SocketAddr,
+    http: http::ServerHandle,
+    sched: Arc<Scheduler>,
+}
+
+impl ServeHandle {
+    /// Stop the HTTP front first (no new submissions), then the
+    /// scheduler workers.
+    pub fn stop(self) {
+        self.http.stop();
+        self.sched.stop();
+    }
+}
+
+pub fn start(cfg: ServeConfig) -> Result<ServeHandle> {
+    let store = Arc::new(match &cfg.legacy_cache_dir {
+        Some(legacy) => ResultStore::open_with_legacy(&cfg.store_dir, legacy)?,
+        None => ResultStore::open(&cfg.store_dir)?,
+    });
+    // startup retention pass so a restarted server honors the budget
+    // before the first publish
+    store.evict(cfg.keep_last, cfg.max_store_bytes)?;
+    let sched = Scheduler::start(
+        Arc::clone(&store),
+        cfg.artifacts.clone(),
+        cfg.jobs,
+        cfg.keep_last,
+        cfg.max_store_bytes,
+    );
+    let app = Arc::new(App {
+        store,
+        sched: Arc::clone(&sched),
+        metrics: Metrics::default(),
+    });
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let handler: Arc<http::Handler> = {
+        let app = Arc::clone(&app);
+        Arc::new(move |req: &Request| {
+            let t0 = Instant::now();
+            let (label, resp) = route(&app, req);
+            app.metrics.record(label, t0.elapsed().as_micros() as u64);
+            resp
+        })
+    };
+    let http = http::serve(listener, cfg.http_threads, cfg.keep_alive,
+                           handler)?;
+    Ok(ServeHandle { addr, http, sched })
+}
+
+fn route(app: &App, req: &Request) -> (&'static str, Response) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/runs") => ("POST /runs", post_runs(app, req)),
+        ("GET", "/experiments") => ("GET /experiments", get_experiments()),
+        ("GET", "/metrics") => ("GET /metrics", get_metrics(app)),
+        ("GET", "/") => ("GET /", index()),
+        ("GET", path) if path.starts_with("/runs/") => {
+            let rest = &path["/runs/".len()..];
+            match rest.strip_suffix("/result") {
+                Some(id) => ("GET /runs/:id/result", get_result(app, id)),
+                None => ("GET /runs/:id", get_run(app, rest)),
+            }
+        }
+        ("POST", _) | ("GET", _) => {
+            ("404", Response::text(404, "no such endpoint\n"))
+        }
+        _ => ("405", Response::text(405, "method not allowed\n")),
+    }
+}
+
+fn post_runs(app: &App, req: &Request) -> Response {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return Response::text(400, "body is not utf-8\n");
+    };
+    let outcome = match app.sched.submit(text) {
+        Ok(o) => o,
+        Err(e) => return Response::text(400, format!("bad run spec: {e:#}\n")),
+    };
+    let exec = outcome.exec;
+    if let Some(bytes) = outcome.store_bytes {
+        return Response::json(200, bytes)
+            .with_header("X-Muloco-Id", &exec.id)
+            .with_header("X-Muloco-Source", Source::Store.label());
+    }
+    if req.query_flag("wait") {
+        return match exec.wait_done() {
+            Ok(()) => match app.store.get_bytes_by_digest(&exec.id) {
+                Some(bytes) => Response::json(200, bytes)
+                    .with_header("X-Muloco-Id", &exec.id)
+                    .with_header("X-Muloco-Source", outcome.source.label()),
+                None => Response::text(500, "run settled but entry missing\n"),
+            },
+            Err(e) => Response::text(500, format!("run failed: {e}\n"))
+                .with_header("X-Muloco-Id", &exec.id),
+        };
+    }
+    let (status, _, _) = exec.snapshot();
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), Json::Str(exec.id.clone()));
+    m.insert("key".into(), Json::Str(exec.key.clone()));
+    m.insert("status".into(), Json::Str(status.label().into()));
+    m.insert("queue_depth".into(),
+             Json::Num(app.sched.queue_depth() as f64));
+    Response::json(202, Json::Obj(m).to_string())
+        .with_header("X-Muloco-Id", &exec.id)
+        .with_header("X-Muloco-Source", match outcome.source {
+            Source::Queued => "queued",
+            other => other.label(),
+        })
+}
+
+fn get_run(app: &App, id: &str) -> Response {
+    if let Some(exec) = app.sched.lookup(id) {
+        let (status, progress, error) = exec.snapshot();
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Str(exec.id.clone()));
+        m.insert("key".into(), Json::Str(exec.key.clone()));
+        m.insert("status".into(), Json::Str(status.label().into()));
+        m.insert("progress".into(),
+                 Json::Arr(progress.into_iter().map(Json::Str).collect()));
+        if let Some(e) = error {
+            m.insert("error".into(), Json::Str(e));
+        }
+        if status == ExecStatus::Done {
+            m.insert("result".into(), Json::Str(format!("/runs/{id}/result")));
+        }
+        return Response::json(200, Json::Obj(m).to_string());
+    }
+    // not tracked (server restarted, or history rolled over) — the id
+    // is a content address, so probe the store directly
+    if app.store.get_bytes_by_digest(id).is_some() {
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Str(id.to_string()));
+        m.insert("status".into(), Json::Str("done".into()));
+        m.insert("result".into(), Json::Str(format!("/runs/{id}/result")));
+        return Response::json(200, Json::Obj(m).to_string());
+    }
+    Response::text(404, "unknown run id\n")
+}
+
+fn get_result(app: &App, id: &str) -> Response {
+    match app.store.get_bytes_by_digest(id) {
+        Some(bytes) => Response::json(200, bytes),
+        None => Response::text(404, "no stored result for this id\n"),
+    }
+}
+
+fn get_experiments() -> Response {
+    let arr = registry_names()
+        .into_iter()
+        .map(|(id, desc)| {
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Str(id.into()));
+            m.insert("desc".into(), Json::Str(desc.into()));
+            Json::Obj(m)
+        })
+        .collect();
+    Response::json(200, Json::Arr(arr).to_string())
+}
+
+fn get_metrics(app: &App) -> Response {
+    let c = app.store.counters();
+    let (completed, failed, joined) = app.sched.run_counters();
+    let (entries, bytes) = match app.store.scan() {
+        Ok(es) => (es.len() as u64, es.iter().map(|e| e.bytes).sum::<u64>()),
+        Err(_) => (0, 0),
+    };
+    let mut out = String::new();
+    out.push_str(&format!("muloco_store_hits {}\n", c.hits));
+    out.push_str(&format!("muloco_store_misses {}\n", c.misses));
+    out.push_str(&format!("muloco_store_puts {}\n", c.puts));
+    out.push_str(&format!("muloco_store_evictions {}\n", c.evictions));
+    out.push_str(&format!("muloco_store_migrated {}\n", c.migrated));
+    out.push_str(&format!("muloco_store_entries {entries}\n"));
+    out.push_str(&format!("muloco_store_bytes {bytes}\n"));
+    out.push_str(&format!("muloco_queue_depth {}\n", app.sched.queue_depth()));
+    out.push_str(&format!("muloco_runs_inflight {}\n",
+                          app.sched.inflight_count()));
+    out.push_str(&format!("muloco_runs_completed {completed}\n"));
+    out.push_str(&format!("muloco_runs_failed {failed}\n"));
+    out.push_str(&format!("muloco_runs_joined {joined}\n"));
+    // PR 8 allocation counters: nonzero when the binary installs the
+    // counting allocator (muloco does; test harnesses don't)
+    out.push_str(&format!("muloco_allocs_total {}\n",
+                          crate::util::alloc_stats::global_allocs()));
+    out.push_str(&format!(
+        "muloco_arena_peak_bytes {}\n",
+        crate::runtime::native::arena::global_peak_bytes()
+    ));
+    app.metrics.render_into(&mut out);
+    Response::text(200, out)
+}
+
+fn index() -> Response {
+    Response::text(
+        200,
+        "muloco serve\n\
+         \n\
+         POST /runs            submit a run-spec JSON (?wait=1 blocks)\n\
+         GET  /runs/:id        status + progress lines\n\
+         GET  /runs/:id/result store entry bytes for a finished run\n\
+         GET  /experiments     experiment registry\n\
+         GET  /metrics         store/queue/latency counters\n",
+    )
+}

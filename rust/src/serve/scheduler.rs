@@ -1,0 +1,381 @@
+//! Run-spec scheduler: canonicalize → dedupe → bounded worker pool.
+//!
+//! Every submitted spec goes through the same funnel the CLI uses —
+//! `RunSpec::from_json` → `build()` → the knob-registry cache key — so
+//! two specs that differ only in spelling (knob order, explicit
+//! defaults) collapse to one canonical key.  The scheduler then
+//! guarantees *at most one execution per key*:
+//!
+//! 1. an identical spec already in flight joins the leader's execution
+//!    (followers share the same [`Execution`] and read its progress);
+//! 2. a key already in the store is served from the store (the only
+//!    counted hit/miss probe — workers never re-probe, so the `hits`
+//!    metric means "a submitted spec was already complete");
+//! 3. otherwise the spec enters a FIFO queue drained by `--jobs`
+//!    worker threads — deterministic submission-order scheduling, no
+//!    priorities to reorder identical workloads.
+//!
+//! Truncated runs (`halt_after != 0`) are rejected at submit: their
+//! results must never enter the store under a key that deliberately
+//! excludes execution-only knobs (mirrors the `RunCache` bypass).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{train, RunSpec, TrainConfig};
+use crate::experiments::cache::{store_key, RunSummary, CACHE_FORMAT};
+use crate::runtime::Session;
+use crate::serve::store::{digest_of, ResultStore};
+
+/// Completed executions kept for `GET /runs/:id` after they leave the
+/// in-flight map.
+const RECENT_CAP: usize = 256;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl ExecStatus {
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecStatus::Queued => "queued",
+            ExecStatus::Running => "running",
+            ExecStatus::Done => "done",
+            ExecStatus::Failed => "failed",
+        }
+    }
+}
+
+/// How a submission was satisfied (reported in `X-Muloco-Source`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// already complete — served from the result store
+    Store,
+    /// new key — this submission is the leader of a fresh execution
+    Queued,
+    /// identical spec in flight — subscribed to the leader's execution
+    Joined,
+}
+
+impl Source {
+    pub fn label(self) -> &'static str {
+        match self {
+            Source::Store => "store",
+            Source::Queued => "trained",
+            Source::Joined => "joined",
+        }
+    }
+}
+
+struct ExecState {
+    status: ExecStatus,
+    progress: Vec<String>,
+    error: Option<String>,
+}
+
+/// One deduplicated unit of work.  `id` is the SHA-256 digest of the
+/// canonical key — the same content address the store files the result
+/// under, so an id alone resolves to its entry bytes.
+pub struct Execution {
+    pub id: String,
+    pub key: String,
+    pub cfg: TrainConfig,
+    state: Mutex<ExecState>,
+    done_cv: Condvar,
+}
+
+impl Execution {
+    fn new(id: String, key: String, cfg: TrainConfig, status: ExecStatus)
+           -> Arc<Execution> {
+        Arc::new(Execution {
+            id,
+            key,
+            cfg,
+            state: Mutex::new(ExecState {
+                status,
+                progress: Vec::new(),
+                error: None,
+            }),
+            done_cv: Condvar::new(),
+        })
+    }
+
+    /// (status, progress lines so far, error if failed) — the
+    /// `GET /runs/:id` payload.
+    pub fn snapshot(&self) -> (ExecStatus, Vec<String>, Option<String>) {
+        let s = self.state.lock().unwrap();
+        (s.status, s.progress.clone(), s.error.clone())
+    }
+
+    /// Block until the execution settles; `Err` carries the failure.
+    pub fn wait_done(&self) -> std::result::Result<(), String> {
+        let mut s = self.state.lock().unwrap();
+        while matches!(s.status, ExecStatus::Queued | ExecStatus::Running) {
+            s = self.done_cv.wait(s).unwrap();
+        }
+        match s.status {
+            ExecStatus::Failed => {
+                Err(s.error.clone().unwrap_or_else(|| "failed".into()))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn log(&self, line: String) {
+        self.state.lock().unwrap().progress.push(line);
+    }
+
+    fn set_running(&self) {
+        self.state.lock().unwrap().status = ExecStatus::Running;
+    }
+
+    fn settle(&self, outcome: std::result::Result<(), String>) {
+        let mut s = self.state.lock().unwrap();
+        match outcome {
+            Ok(()) => s.status = ExecStatus::Done,
+            Err(e) => {
+                s.progress.push(format!("failed: {e}"));
+                s.error = Some(e);
+                s.status = ExecStatus::Failed;
+            }
+        }
+        self.done_cv.notify_all();
+    }
+}
+
+pub struct SubmitOutcome {
+    pub exec: Arc<Execution>,
+    pub source: Source,
+    /// entry bytes when the submission was satisfied from the store —
+    /// already fetched by the one counted probe, so the endpoint never
+    /// double-counts a hit
+    pub store_bytes: Option<Vec<u8>>,
+}
+
+struct Inner {
+    queue: VecDeque<Arc<Execution>>,
+    inflight: BTreeMap<String, Arc<Execution>>,
+    recent: VecDeque<Arc<Execution>>,
+}
+
+pub struct Scheduler {
+    store: Arc<ResultStore>,
+    artifacts: PathBuf,
+    keep_last: usize,
+    byte_budget: u64,
+    inner: Mutex<Inner>,
+    work_cv: Condvar,
+    sessions: Mutex<BTreeMap<String, Arc<Session>>>,
+    shutdown: AtomicBool,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    joined: AtomicU64,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Spawn `jobs` training workers draining the FIFO queue.
+    pub fn start(store: Arc<ResultStore>, artifacts: PathBuf, jobs: usize,
+                 keep_last: usize, byte_budget: u64) -> Arc<Scheduler> {
+        let sched = Arc::new(Scheduler {
+            store,
+            artifacts,
+            keep_last,
+            byte_budget,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                inflight: BTreeMap::new(),
+                recent: VecDeque::new(),
+            }),
+            work_cv: Condvar::new(),
+            sessions: Mutex::new(BTreeMap::new()),
+            shutdown: AtomicBool::new(false),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            joined: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut workers = sched.workers.lock().unwrap();
+        for _ in 0..jobs.max(1) {
+            let s = Arc::clone(&sched);
+            workers.push(thread::spawn(move || s.worker_loop()));
+        }
+        drop(workers);
+        sched
+    }
+
+    /// Stop accepting work and join the workers.  Queued-but-unstarted
+    /// executions are abandoned (their submitters, if still waiting,
+    /// block until the process exits — callers stop the HTTP layer
+    /// first, so nobody is).
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.work_cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Canonicalize a spec and route it: store hit, join, or enqueue.
+    pub fn submit(&self, spec_text: &str) -> Result<SubmitOutcome> {
+        let cfg = RunSpec::from_json(spec_text)?
+            .build()
+            .context("building submitted run spec")?;
+        if cfg.halt_after != 0 {
+            bail!("halt-after runs are truncated and never enter the store; \
+                   submit with halt-after 0");
+        }
+        // the key needs the backend platform, which needs the session —
+        // compiled once per model and reused for the training run
+        let sess = self.session(&cfg.model)?;
+        let key = store_key(&cfg, &sess.platform());
+        let id = digest_of(&key);
+
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(exec) = inner.inflight.get(&id) {
+            self.joined.fetch_add(1, Ordering::Relaxed);
+            return Ok(SubmitOutcome {
+                exec: Arc::clone(exec),
+                source: Source::Joined,
+                store_bytes: None,
+            });
+        }
+        // the one counted store probe for this submission
+        if let Some(bytes) = self.store.get_bytes(&key, CACHE_FORMAT) {
+            let exec = Execution::new(id, key, cfg, ExecStatus::Done);
+            exec.log("served from store".into());
+            push_recent(&mut inner, Arc::clone(&exec));
+            return Ok(SubmitOutcome {
+                exec,
+                source: Source::Store,
+                store_bytes: Some(bytes),
+            });
+        }
+        let exec = Execution::new(id.clone(), key, cfg, ExecStatus::Queued);
+        exec.log(format!("queued at position {}", inner.queue.len()));
+        inner.inflight.insert(id, Arc::clone(&exec));
+        inner.queue.push_back(Arc::clone(&exec));
+        drop(inner);
+        self.work_cv.notify_one();
+        Ok(SubmitOutcome { exec, source: Source::Queued, store_bytes: None })
+    }
+
+    /// Resolve a run id against in-flight work, then recent history.
+    pub fn lookup(&self, id: &str) -> Option<Arc<Execution>> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .inflight
+            .get(id)
+            .cloned()
+            .or_else(|| {
+                inner.recent.iter().rev().find(|e| e.id == id).cloned()
+            })
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn inflight_count(&self) -> usize {
+        self.inner.lock().unwrap().inflight.len()
+    }
+
+    /// (completed, failed, joined) lifetime counters for `/metrics`.
+    pub fn run_counters(&self) -> (u64, u64, u64) {
+        (
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.joined.load(Ordering::Relaxed),
+        )
+    }
+
+    fn session(&self, model: &str) -> Result<Arc<Session>> {
+        if let Some(s) = self.sessions.lock().unwrap().get(model) {
+            return Ok(s.clone());
+        }
+        // load outside the lock (compilation is slow); racing loaders
+        // waste bounded work, first insert wins — same policy as Ctx
+        eprintln!("[serve] loading + compiling artifacts for {model} ...");
+        let s = Arc::new(Session::load(&self.artifacts.join(model))?);
+        Ok(self
+            .sessions
+            .lock()
+            .unwrap()
+            .entry(model.to_string())
+            .or_insert(s)
+            .clone())
+    }
+
+    fn worker_loop(self: Arc<Self>) {
+        loop {
+            let exec = {
+                let mut inner = self.inner.lock().unwrap();
+                loop {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if let Some(e) = inner.queue.pop_front() {
+                        break e;
+                    }
+                    inner = self.work_cv.wait(inner).unwrap();
+                }
+            };
+            self.run_one(&exec);
+            let mut inner = self.inner.lock().unwrap();
+            inner.inflight.remove(&exec.id);
+            push_recent(&mut inner, exec);
+        }
+    }
+
+    fn run_one(&self, exec: &Arc<Execution>) {
+        exec.set_running();
+        let outcome = (|| -> Result<()> {
+            let sess = self.session(&exec.cfg.model)?;
+            exec.log(format!("training started on {} ({})",
+                             sess.platform(), exec.key));
+            eprintln!("[serve] training {}", exec.key);
+            let t0 = Instant::now();
+            let result = train(&sess, &exec.cfg)?;
+            let summary = RunSummary::from_result(&result);
+            // publish BEFORE settling: joined submitters wake on settle
+            // and read the entry by digest, so it must already be there
+            let path = self.store.put(&exec.key, CACHE_FORMAT,
+                                      summary.to_json())?;
+            if self.keep_last > 0 || self.byte_budget > 0 {
+                self.store.evict(self.keep_last, self.byte_budget)?;
+            }
+            exec.log(format!("trained in {:.1}s, published {}",
+                             t0.elapsed().as_secs_f64(), path.display()));
+            Ok(())
+        })();
+        match outcome {
+            Ok(()) => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                exec.settle(Ok(()));
+            }
+            Err(e) => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[serve] run {} failed: {e:#}", exec.id);
+                exec.settle(Err(format!("{e:#}")));
+            }
+        }
+    }
+}
+
+fn push_recent(inner: &mut Inner, exec: Arc<Execution>) {
+    inner.recent.push_back(exec);
+    while inner.recent.len() > RECENT_CAP {
+        inner.recent.pop_front();
+    }
+}

@@ -1,0 +1,626 @@
+//! Content-addressed result store — the persistence layer under both
+//! the `RunCache` compatibility shim and `muloco serve`.
+//!
+//! Layout: `root/<d[..2]>/<d[2..]>.json` where `d` is the SHA-256 hex
+//! digest of the canonical run key (`util::hash`).  The full 256-bit
+//! name makes distinct keys structurally unable to alias a filename —
+//! the hazard the old flat FNV-1a cache had, where `put` after a 64-bit
+//! collision silently overwrote the *other* key's entry.  Belt and
+//! braces on top of the digest:
+//!
+//! - every entry echoes its key; reads verify the echo and treat a
+//!   mismatch as occupying a *sibling slot* (`.1.json`, `.2.json`, …),
+//!   so even a broken hash degrades to "extra file probe", never to
+//!   "wrong result served";
+//! - writes go to a dot-prefixed temp sibling and `rename` into place
+//!   (the `ckpt::format` discipline), so readers only ever see complete
+//!   entries;
+//! - eviction renames the victim to a dot-prefixed tombstone *before*
+//!   unlinking, so a reader that races an evictor observes a clean miss
+//!   or a complete entry, never a vanishing half-read.
+//!
+//! Entry schema is unchanged from the flat cache —
+//! `{"format": N, "key": "...", "run": {...}}` — which is what lets
+//! legacy `results/cache` entries migrate by re-homing the bytes.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::SystemTime;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::hash::sha256_hex;
+use crate::util::json::Json;
+
+/// Uniquifies concurrent temp/tombstone names within this process.
+static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Sibling slots probed per digest before `put` gives up.  With SHA-256
+/// names, slots past 0 exist only if the hash itself is broken (or in
+/// the forced-collision tests below), so the bound is a safety valve,
+/// not a capacity plan.
+const MAX_PROBE: usize = 32;
+
+/// Content address of a run key: 64 lowercase hex chars.  Public so the
+/// scheduler can use the digest as the run id (`GET /runs/:id` then
+/// resolves an id to its store entry without reversing the key).
+pub fn digest_of(key: &str) -> String {
+    sha256_hex(key.as_bytes())
+}
+
+/// Monotonic counter snapshot for `GET /metrics` / `cache stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub puts: u64,
+    pub evictions: u64,
+    pub migrated: u64,
+}
+
+/// One scanned entry (input to `cache stats` and eviction).
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub path: PathBuf,
+    /// full 64-hex digest reconstructed from shard dir + file stem
+    pub digest: String,
+    /// sibling probe slot (0 for the canonical name)
+    pub slot: usize,
+    /// key echo from the entry body; empty if the file is unreadable
+    pub key: String,
+    /// format stamp from the entry body; 0 if the file is unreadable
+    pub format: u64,
+    pub bytes: u64,
+    pub modified: SystemTime,
+}
+
+/// What a probe slot holds relative to a key we are looking for.
+enum Slot {
+    /// no file — `put` may claim it; `get` stops probing here because
+    /// eviction compacts siblings downward (no holes)
+    Missing,
+    /// occupied by a different key (true collision) or unreadable bytes
+    /// — probing continues past it
+    Other,
+    /// our key, parsed entry + raw on-disk bytes
+    Match { bytes: Vec<u8>, entry: Json },
+}
+
+pub struct ResultStore {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    puts: AtomicU64,
+    evictions: AtomicU64,
+    migrated: AtomicU64,
+}
+
+impl ResultStore {
+    pub fn open(root: impl Into<PathBuf>) -> Result<ResultStore> {
+        let root = root.into();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating store root {}", root.display()))?;
+        Ok(ResultStore {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            migrated: AtomicU64::new(0),
+        })
+    }
+
+    /// Open the store and absorb a legacy flat `RunCache` directory
+    /// (pre-PR 9 `results/cache`): each readable entry is re-homed at
+    /// its content address and the original file removed.  Entries with
+    /// stale format stamps migrate as-is and read as misses (the schema
+    /// gate), regenerating on first use; unreadable files are left in
+    /// place untouched.
+    pub fn open_with_legacy(root: impl Into<PathBuf>, legacy: &Path)
+                            -> Result<ResultStore> {
+        let store = ResultStore::open(root)?;
+        store.migrate_legacy(legacy)?;
+        Ok(store)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            puts: self.puts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            migrated: self.migrated.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The run payload of `key`'s entry, if present under `format`.
+    /// Counts a hit or a miss.
+    pub fn get_run(&self, key: &str, format: u64) -> Option<Json> {
+        self.lookup_at(&digest_of(key), key, format)
+            .and_then(|(_, entry)| entry.get("run").ok().cloned())
+    }
+
+    /// The raw on-disk bytes of `key`'s entry, if present under
+    /// `format`.  Counts a hit or a miss.  Serving raw bytes (not a
+    /// re-serialization) is what makes dedupe responses byte-identical
+    /// across submitters.
+    pub fn get_bytes(&self, key: &str, format: u64) -> Option<Vec<u8>> {
+        self.lookup_at(&digest_of(key), key, format).map(|(bytes, _)| bytes)
+    }
+
+    /// Raw bytes of the entry at a known content address (canonical
+    /// slot 0).  Does NOT touch the hit/miss counters: this is an
+    /// artifact fetch by id, not a cache consultation — keeping it
+    /// uncounted is what makes `hits` mean "a submitted spec was
+    /// already in the store", the number CI asserts on.
+    pub fn get_bytes_by_digest(&self, digest: &str) -> Option<Vec<u8>> {
+        if digest.len() != 64
+            || !digest.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+        {
+            return None; // also forecloses path traversal via the id
+        }
+        fs::read(self.slot_path(digest, 0)).ok()
+    }
+
+    /// Publish `run` under `key` with the given format stamp.
+    pub fn put(&self, key: &str, format: u64, run: Json) -> Result<PathBuf> {
+        let mut m = BTreeMap::new();
+        m.insert("format".into(), Json::Num(format as f64));
+        m.insert("key".into(), Json::Str(key.to_string()));
+        m.insert("run".into(), run);
+        let path = self.put_entry_at(&digest_of(key), key, &Json::Obj(m))?;
+        self.puts.fetch_add(1, Ordering::Relaxed);
+        Ok(path)
+    }
+
+    /// Retention pass: keep the newest `keep_last` entries (0 = no
+    /// count limit) within `byte_budget` total bytes (0 = no byte
+    /// limit); evict the rest, oldest first.  Returns how many entries
+    /// were removed.
+    pub fn evict(&self, keep_last: usize, byte_budget: u64) -> Result<usize> {
+        if keep_last == 0 && byte_budget == 0 {
+            return Ok(0);
+        }
+        let mut entries = self.scan()?;
+        // newest first; path breaks mtime ties deterministically
+        entries.sort_by(|a, b| {
+            b.modified.cmp(&a.modified).then_with(|| a.path.cmp(&b.path))
+        });
+        let mut kept = 0usize;
+        let mut kept_bytes = 0u64;
+        let mut removed = 0usize;
+        for e in &entries {
+            let fits = (keep_last == 0 || kept < keep_last)
+                && (byte_budget == 0 || kept_bytes + e.bytes <= byte_budget);
+            if fits {
+                kept += 1;
+                kept_bytes += e.bytes;
+            } else {
+                self.evict_slot(&e.digest, e.slot)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Every entry in the store, sorted by path.  Tolerates unreadable
+    /// files (reported with empty key / format 0) so `cache stats` can
+    /// surface damage instead of erroring on it.
+    pub fn scan(&self) -> Result<Vec<EntryInfo>> {
+        let mut out = Vec::new();
+        if !self.root.is_dir() {
+            return Ok(out);
+        }
+        for shard in fs::read_dir(&self.root)?.flatten() {
+            let shard_path = shard.path();
+            let Some(shard_name) = shard_path.file_name()
+                .and_then(|n| n.to_str()).map(String::from)
+            else {
+                continue;
+            };
+            if !shard_path.is_dir() || shard_name.len() != 2 {
+                continue;
+            }
+            for f in fs::read_dir(&shard_path)?.flatten() {
+                let path = f.path();
+                let Some(name) =
+                    path.file_name().and_then(|n| n.to_str()).map(String::from)
+                else {
+                    continue;
+                };
+                // temp files and tombstones are dot-prefixed; anything
+                // not *.json is not an entry
+                if name.starts_with('.') || !name.ends_with(".json") {
+                    continue;
+                }
+                let stem = &name[..name.len() - ".json".len()];
+                // "<hex62>" (slot 0) or "<hex62>.<slot>"
+                let (rest, slot) = match stem.split_once('.') {
+                    Some((r, s)) => match s.parse::<usize>() {
+                        Ok(n) => (r, n),
+                        Err(_) => continue,
+                    },
+                    None => (stem, 0),
+                };
+                let meta = match f.metadata() {
+                    Ok(m) => m,
+                    Err(_) => continue, // raced an evictor
+                };
+                let (key, format) = match fs::read_to_string(&path)
+                    .ok()
+                    .and_then(|t| Json::parse(&t).ok())
+                    .and_then(|v| {
+                        let key =
+                            v.get("key").ok()?.as_str().ok()?.to_string();
+                        let format =
+                            v.get("format").ok()?.as_f64().ok()? as u64;
+                        Some((key, format))
+                    }) {
+                    Some(kf) => kf,
+                    None => (String::new(), 0),
+                };
+                out.push(EntryInfo {
+                    path,
+                    digest: format!("{shard_name}{rest}"),
+                    slot,
+                    key,
+                    format,
+                    bytes: meta.len(),
+                    modified: meta
+                        .modified()
+                        .unwrap_or(SystemTime::UNIX_EPOCH),
+                });
+            }
+        }
+        out.sort_by(|a, b| a.path.cmp(&b.path));
+        Ok(out)
+    }
+
+    /// Absorb a legacy flat cache directory (see [`open_with_legacy`]).
+    ///
+    /// [`open_with_legacy`]: ResultStore::open_with_legacy
+    pub fn migrate_legacy(&self, legacy: &Path) -> Result<usize> {
+        if !legacy.is_dir() {
+            return Ok(0);
+        }
+        let mut moved = 0usize;
+        for f in fs::read_dir(legacy)?.flatten() {
+            let path = f.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if !name.ends_with(".json") {
+                continue; // stray temp files from crashed writers
+            }
+            let Ok(text) = fs::read_to_string(&path) else {
+                continue;
+            };
+            let Ok(entry) = Json::parse(&text) else {
+                eprintln!("[store] skipping unparsable legacy entry {}",
+                          path.display());
+                continue;
+            };
+            let Some(key) = entry
+                .get("key")
+                .ok()
+                .and_then(|k| k.as_str().ok())
+                .map(String::from)
+            else {
+                eprintln!("[store] skipping keyless legacy entry {}",
+                          path.display());
+                continue;
+            };
+            // re-home first, unlink second: a crash between the two
+            // leaves a duplicate (idempotently re-absorbed next open),
+            // never a lost entry
+            self.put_entry_at(&digest_of(&key), &key, &entry)?;
+            fs::remove_file(&path).with_context(|| {
+                format!("removing migrated legacy entry {}", path.display())
+            })?;
+            moved += 1;
+        }
+        if moved > 0 {
+            eprintln!("[store] migrated {moved} legacy cache entries from {} \
+                       into {}",
+                      legacy.display(), self.root.display());
+            self.migrated.fetch_add(moved as u64, Ordering::Relaxed);
+        }
+        Ok(moved)
+    }
+
+    // ---- internals (digest-explicit so tests can force collisions) ----
+
+    fn slot_path(&self, digest: &str, slot: usize) -> PathBuf {
+        let shard = self.root.join(&digest[..2]);
+        if slot == 0 {
+            shard.join(format!("{}.json", &digest[2..]))
+        } else {
+            shard.join(format!("{}.{slot}.json", &digest[2..]))
+        }
+    }
+
+    fn read_slot(&self, path: &Path, key: &str) -> Slot {
+        let Ok(bytes) = fs::read(path) else {
+            return Slot::Missing;
+        };
+        let parsed = std::str::from_utf8(&bytes)
+            .ok()
+            .and_then(|t| Json::parse(t).ok());
+        match parsed {
+            Some(entry)
+                if entry.get("key").ok().and_then(|k| k.as_str().ok())
+                    == Some(key) =>
+            {
+                Slot::Match { bytes, entry }
+            }
+            _ => Slot::Other,
+        }
+    }
+
+    /// Find `key` under an explicit digest and gate on the format
+    /// stamp; counts exactly one hit or miss.
+    fn lookup_at(&self, digest: &str, key: &str, format: u64)
+                 -> Option<(Vec<u8>, Json)> {
+        let mut found = None;
+        for slot in 0..MAX_PROBE {
+            match self.read_slot(&self.slot_path(digest, slot), key) {
+                Slot::Missing => break,
+                Slot::Other => continue,
+                Slot::Match { bytes, entry } => {
+                    // schema gate: entries written under another format
+                    // version are misses, regenerated on first use
+                    let fmt = entry
+                        .get("format")
+                        .ok()
+                        .and_then(|v| v.as_f64().ok())
+                        .map(|f| f as u64);
+                    if fmt == Some(format) {
+                        found = Some((bytes, entry));
+                    }
+                    break;
+                }
+            }
+        }
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Write `entry` for `key` at an explicit digest: reuse the key's
+    /// existing slot if present, else claim the first free one.  Does
+    /// not bump the `puts` counter (migration reuses this path).
+    fn put_entry_at(&self, digest: &str, key: &str, entry: &Json)
+                    -> Result<PathBuf> {
+        for slot in 0..MAX_PROBE {
+            let path = self.slot_path(digest, slot);
+            match self.read_slot(&path, key) {
+                // occupied by a colliding key — never overwrite it
+                Slot::Other => continue,
+                Slot::Missing | Slot::Match { .. } => {
+                    self.write_atomic(&path, &entry.to_string())?;
+                    return Ok(path);
+                }
+            }
+        }
+        bail!("store shard {digest} has {MAX_PROBE} colliding entries");
+    }
+
+    fn write_atomic(&self, path: &Path, text: &str) -> Result<()> {
+        let dir = path.parent().context("store path has no parent")?;
+        fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, text)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Remove one slot: rename to a dot-prefixed tombstone, unlink,
+    /// then compact higher siblings downward so `get`'s probe (which
+    /// stops at the first missing slot) is never cut off by a hole.
+    fn evict_slot(&self, digest: &str, slot: usize) -> Result<()> {
+        let path = self.slot_path(digest, slot);
+        let dir = path.parent().context("store path has no parent")?;
+        let tomb = dir.join(format!(
+            ".evict-{}-{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::rename(&path, &tomb)
+            .with_context(|| format!("evicting {}", path.display()))?;
+        fs::remove_file(&tomb)
+            .with_context(|| format!("unlinking tombstone {}", tomb.display()))?;
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        let mut hole = slot;
+        loop {
+            let next = self.slot_path(digest, hole + 1);
+            if !next.exists() {
+                break;
+            }
+            fs::rename(&next, self.slot_path(digest, hole))?;
+            hole += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> ResultStore {
+        let dir = std::env::temp_dir().join(format!(
+            "muloco-store-{tag}-{}-{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        ResultStore::open(dir).unwrap()
+    }
+
+    fn run_obj(x: f64) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("x".into(), Json::Num(x));
+        Json::Obj(m)
+    }
+
+    fn entry_obj(key: &str, format: u64, x: f64) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("format".into(), Json::Num(format as f64));
+        m.insert("key".into(), Json::Str(key.into()));
+        m.insert("run".into(), run_obj(x));
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn roundtrip_key_echo_and_counters() {
+        let s = tmp_store("roundtrip");
+        let path = s.put("model=a|lr=1", 2, run_obj(1.5)).unwrap();
+        // sharded layout: results/store/<2 hex>/<62 hex>.json
+        let shard = path.parent().unwrap().file_name().unwrap()
+            .to_str().unwrap().to_string();
+        let name = path.file_name().unwrap().to_str().unwrap().to_string();
+        assert_eq!(shard.len(), 2);
+        assert_eq!(name.len(), 62 + ".json".len());
+        assert_eq!(format!("{shard}{}", &name[..62]),
+                   digest_of("model=a|lr=1"));
+
+        let hit = s.get_run("model=a|lr=1", 2).unwrap();
+        assert_eq!(hit.get("x").unwrap().as_f64().unwrap(), 1.5);
+        assert!(s.get_run("model=a|lr=2", 2).is_none());
+        let c = s.counters();
+        assert_eq!((c.hits, c.misses, c.puts), (1, 1, 1));
+
+        // raw bytes match what get_bytes_by_digest serves for the id
+        let by_key = s.get_bytes("model=a|lr=1", 2).unwrap();
+        let by_id = s.get_bytes_by_digest(&digest_of("model=a|lr=1")).unwrap();
+        assert_eq!(by_key, by_id);
+    }
+
+    #[test]
+    fn format_gate_treats_other_versions_as_misses() {
+        let s = tmp_store("format");
+        s.put("k", 1, run_obj(0.0)).unwrap();
+        assert!(s.get_run("k", 2).is_none());
+        assert_eq!(s.counters().misses, 1);
+        // a fresh put under the current format overwrites in place
+        s.put("k", 2, run_obj(7.0)).unwrap();
+        assert!(s.get_run("k", 2).is_some());
+        assert_eq!(s.scan().unwrap().len(), 1);
+    }
+
+    /// The FNV-1a regression (ISSUE 9 satellite): two keys forced onto
+    /// one digest must coexist — the second put lands in a sibling
+    /// slot, and each key reads back its own entry.
+    #[test]
+    fn colliding_keys_coexist() {
+        let s = tmp_store("collide");
+        let d = "ab".repeat(32); // forced shared digest, 64 hex chars
+        s.put_entry_at(&d, "key-A", &entry_obj("key-A", 2, 1.0)).unwrap();
+        s.put_entry_at(&d, "key-B", &entry_obj("key-B", 2, 2.0)).unwrap();
+        assert!(s.slot_path(&d, 0).exists());
+        assert!(s.slot_path(&d, 1).exists());
+
+        let (_, a) = s.lookup_at(&d, "key-A", 2).unwrap();
+        let (_, b) = s.lookup_at(&d, "key-B", 2).unwrap();
+        assert_eq!(a.get("run").unwrap().get("x").unwrap().as_f64().unwrap(),
+                   1.0);
+        assert_eq!(b.get("run").unwrap().get("x").unwrap().as_f64().unwrap(),
+                   2.0);
+
+        // overwriting key-A must not clobber key-B's slot
+        s.put_entry_at(&d, "key-A", &entry_obj("key-A", 2, 3.0)).unwrap();
+        let (_, b) = s.lookup_at(&d, "key-B", 2).unwrap();
+        assert_eq!(b.get("run").unwrap().get("x").unwrap().as_f64().unwrap(),
+                   2.0);
+    }
+
+    /// Evicting a colliding slot compacts siblings downward so probing
+    /// (which stops at the first missing slot) still finds survivors.
+    #[test]
+    fn eviction_compacts_collision_siblings() {
+        let s = tmp_store("compact");
+        let d = "cd".repeat(32);
+        s.put_entry_at(&d, "key-A", &entry_obj("key-A", 2, 1.0)).unwrap();
+        s.put_entry_at(&d, "key-B", &entry_obj("key-B", 2, 2.0)).unwrap();
+        s.evict_slot(&d, 0).unwrap();
+        assert!(s.slot_path(&d, 0).exists());
+        assert!(!s.slot_path(&d, 1).exists());
+        assert!(s.lookup_at(&d, "key-A", 2).is_none());
+        assert!(s.lookup_at(&d, "key-B", 2).is_some());
+        assert_eq!(s.counters().evictions, 1);
+    }
+
+    #[test]
+    fn retention_keeps_newest_within_count_and_bytes() {
+        let s = tmp_store("retain");
+        for (i, key) in ["old", "mid", "new"].iter().enumerate() {
+            s.put(key, 2, run_obj(i as f64)).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        assert_eq!(s.evict(0, 0).unwrap(), 0); // retention disabled
+
+        assert_eq!(s.evict(2, 0).unwrap(), 1); // count limit
+        assert!(s.get_run("old", 2).is_none());
+        assert!(s.get_run("mid", 2).is_some());
+        assert!(s.get_run("new", 2).is_some());
+
+        let one = s.scan().unwrap().iter().map(|e| e.bytes).max().unwrap();
+        assert_eq!(s.evict(0, one).unwrap(), 1); // byte budget keeps newest
+        assert!(s.get_run("mid", 2).is_none());
+        assert!(s.get_run("new", 2).is_some());
+        assert_eq!(s.counters().evictions, 2);
+    }
+
+    #[test]
+    fn legacy_flat_cache_migrates_and_regenerates() {
+        let legacy = std::env::temp_dir().join(format!(
+            "muloco-legacy-{}-{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&legacy);
+        fs::create_dir_all(&legacy).unwrap();
+        // a current-format entry, a stale-format entry, and junk
+        fs::write(legacy.join("aaaa.json"),
+                  entry_obj("good-key", 2, 4.0).to_string()).unwrap();
+        fs::write(legacy.join("bbbb.json"),
+                  entry_obj("stale-key", 1, 5.0).to_string()).unwrap();
+        fs::write(legacy.join("cccc.json"), "not json {").unwrap();
+
+        let s = tmp_store("migrate");
+        let moved = s.migrate_legacy(&legacy).unwrap();
+        assert_eq!(moved, 2);
+        assert_eq!(s.counters().migrated, 2);
+        assert!(s.get_run("good-key", 2).is_some());
+        // stale format migrated but reads as a miss → regenerates
+        assert!(s.get_run("stale-key", 2).is_none());
+        assert!(!legacy.join("aaaa.json").exists());
+        assert!(legacy.join("cccc.json").exists()); // junk left alone
+
+        // idempotent: nothing left to absorb
+        assert_eq!(s.migrate_legacy(&legacy).unwrap(), 0);
+        let _ = fs::remove_dir_all(&legacy);
+    }
+
+    #[test]
+    fn digest_fetch_rejects_non_addresses() {
+        let s = tmp_store("digest");
+        assert!(s.get_bytes_by_digest("../../etc/passwd").is_none());
+        assert!(s.get_bytes_by_digest(&"AB".repeat(32)).is_none());
+        assert!(s.get_bytes_by_digest(&"ab".repeat(31)).is_none());
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod alloc_stats;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,194 @@
+//! In-flight dedupe contract of `muloco serve` (ISSUE 9): a spec
+//! submitted twice concurrently trains exactly once — the two
+//! submitters observe byte-identical result bodies — while a distinct
+//! spec trains independently; a re-submission after completion is a
+//! store hit; truncated (`halt-after`) specs are rejected at the door.
+//!
+//! Talks to the real server over TCP with a hand-rolled HTTP/1.1
+//! client, so the vendored `serve::http` layer is exercised end to end.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::thread;
+
+use muloco::serve::{self, ServeConfig};
+
+/// Small enough to train in seconds, fully pinned so the canonical key
+/// is stable across submissions.
+const SMOKE: &str = r#"{"model":"nano","method":"muloco","workers":2,
+    "batch":8,"steps":4,"sync-interval":2,"eval-every":2,"eval-batches":1,
+    "warmup":1,"seed":3}"#;
+
+/// Same shape, different seed — a key knob, so a distinct execution.
+const OTHER: &str = r#"{"model":"nano","method":"muloco","workers":2,
+    "batch":8,"steps":4,"sync-interval":2,"eval-every":2,"eval-batches":1,
+    "warmup":1,"seed":4}"#;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("muloco-serve-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn start_server(tag: &str) -> serve::ServeHandle {
+    serve::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        jobs: 1, // serialize training so joins actually happen
+        store_dir: tmp_dir(tag),
+        // never absorb the repo's real results/cache into a test store
+        legacy_cache_dir: None,
+        ..ServeConfig::default()
+    })
+    .expect("serve start")
+}
+
+/// One-shot HTTP/1.1 exchange: (status, lowercased headers, body bytes).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str)
+        -> (u16, BTreeMap<String, String>, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("request write");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("response read");
+    let pos = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response has a head/body split");
+    let head = String::from_utf8_lossy(&buf[..pos]).into_owned();
+    let body = buf[pos + 4..].to_vec();
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let mut headers = BTreeMap::new();
+    for l in lines {
+        if let Some((k, v)) = l.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(),
+                           v.trim().to_string());
+        }
+    }
+    (status, headers, body)
+}
+
+fn metric(text: &str, name: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("metric {name} missing in:\n{text}"))
+        .trim()
+        .parse()
+        .expect("metric value")
+}
+
+#[test]
+fn concurrent_identical_specs_train_once() {
+    let h = start_server("dedupe");
+    let addr = h.addr;
+
+    // two identical specs + one distinct, all in flight at once
+    let posts: Vec<_> = [SMOKE, SMOKE, OTHER]
+        .into_iter()
+        .map(|spec| {
+            thread::spawn(move || http(addr, "POST", "/runs?wait=1", spec))
+        })
+        .collect();
+    let results: Vec<_> =
+        posts.into_iter().map(|t| t.join().expect("post thread")).collect();
+    for (status, _, body) in &results {
+        assert_eq!(*status, 200, "{}", String::from_utf8_lossy(body));
+    }
+
+    // both smoke submitters observe byte-identical store entry bytes
+    assert_eq!(results[0].2, results[1].2,
+               "identical specs must serve identical bytes");
+    assert_ne!(results[0].2, results[2].2,
+               "a distinct spec must train independently");
+    let sources: Vec<&str> = results
+        .iter()
+        .map(|(_, h, _)| h.get("x-muloco-source").map(String::as_str)
+            .expect("source header"))
+        .collect();
+    assert!(sources.iter().any(|s| *s == "trained"), "{sources:?}");
+    assert!(sources.iter()
+                .all(|s| matches!(*s, "trained" | "joined" | "store")),
+            "{sources:?}");
+    let smoke_id = results[0].1.get("x-muloco-id").expect("id header").clone();
+    assert_eq!(results[0].1.get("x-muloco-id"), results[1].1.get("x-muloco-id"),
+               "identical specs share one run id");
+    assert_ne!(Some(&smoke_id), results[2].1.get("x-muloco-id"));
+
+    // exactly one training execution per distinct key: 2 store writes
+    let (status, _, body) = http(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let metrics = String::from_utf8_lossy(&body).into_owned();
+    assert_eq!(metric(&metrics, "muloco_store_puts"), 2, "{metrics}");
+    assert_eq!(metric(&metrics, "muloco_runs_failed"), 0, "{metrics}");
+    assert_eq!(metric(&metrics, "muloco_queue_depth"), 0, "{metrics}");
+
+    // a later identical submission is a pure store hit — same bytes,
+    // no third training
+    let (status, headers, body) = http(addr, "POST", "/runs?wait=1", SMOKE);
+    assert_eq!(status, 200);
+    assert_eq!(headers.get("x-muloco-source").map(String::as_str),
+               Some("store"));
+    assert_eq!(body, results[0].2);
+    let (_, _, body) = http(addr, "GET", "/metrics", "");
+    let metrics = String::from_utf8_lossy(&body).into_owned();
+    assert_eq!(metric(&metrics, "muloco_store_puts"), 2,
+               "a store hit must not retrain: {metrics}");
+    assert!(metric(&metrics, "muloco_store_hits") >= 1, "{metrics}");
+
+    // the id is a content address: status + result fetch by id
+    let (status, _, body) =
+        http(addr, "GET", &format!("/runs/{smoke_id}"), "");
+    assert_eq!(status, 200);
+    assert!(String::from_utf8_lossy(&body).contains("\"done\""));
+    let (status, _, body) =
+        http(addr, "GET", &format!("/runs/{smoke_id}/result"), "");
+    assert_eq!(status, 200);
+    assert_eq!(body, results[0].2);
+
+    // registry listing round-trips
+    let (status, _, body) = http(addr, "GET", "/experiments", "");
+    assert_eq!(status, 200);
+    assert!(String::from_utf8_lossy(&body).contains("fig1a"));
+
+    h.stop();
+}
+
+#[test]
+fn bad_specs_are_rejected_at_submit() {
+    let h = start_server("reject");
+    let addr = h.addr;
+
+    // halt-after runs are truncated and must never enter the store
+    let halted = r#"{"model":"nano","method":"muloco","workers":2,
+        "batch":8,"steps":4,"sync-interval":2,"halt-after":2}"#;
+    let (status, _, body) = http(addr, "POST", "/runs?wait=1", halted);
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    assert!(String::from_utf8_lossy(&body).contains("halt-after"));
+
+    // malformed JSON and unknown fields fail canonicalization
+    let (status, _, _) = http(addr, "POST", "/runs", "not json {");
+    assert_eq!(status, 400);
+    let (status, _, body) = http(addr, "POST", "/runs",
+                                 r#"{"model":"nano","method":"muloco",
+                                     "no-such-knob":1}"#);
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("no-such-knob"));
+
+    // nothing entered the store
+    let (_, _, body) = http(addr, "GET", "/metrics", "");
+    let metrics = String::from_utf8_lossy(&body).into_owned();
+    assert_eq!(metric(&metrics, "muloco_store_puts"), 0, "{metrics}");
+
+    h.stop();
+}
