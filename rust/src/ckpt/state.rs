@@ -131,6 +131,8 @@ pub fn save(
     spec: Json,
     state: &TrainState,
 ) -> Result<PathBuf> {
+    let _sp = crate::obs::span_with_arg(crate::obs::Category::Ckpt,
+                                        "ckpt_save", state.step);
     let mut w = PageWriter::new();
     for (t, x) in state.theta.iter().enumerate() {
         w.put_f32(format!("theta/{t}"), x);
@@ -210,6 +212,7 @@ pub fn save(
 /// Load one checkpoint directory (`.../step-<N>`), verifying the
 /// format version and every page's bounds + CRC.
 pub fn load_dir(step_dir: &Path) -> Result<(CkptMeta, TrainState)> {
+    let _sp = crate::obs::span(crate::obs::Category::Ckpt, "ckpt_load");
     let man_path = step_dir.join(MANIFEST_FILE);
     let text = fs_read(&man_path)?;
     let v = Json::parse(&text)

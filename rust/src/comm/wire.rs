@@ -175,9 +175,16 @@ pub trait WireCodec: Send + Sync {
 /// warmed collective pays no heap allocation here.
 pub fn transport(codec: &dyn WireCodec, x: &mut [f32], rows: usize, cols: usize) -> usize {
     crate::util::pool::with_byte_buf(|bytes| {
-        codec.encode_into(x, rows, cols, bytes);
-        let moved = bytes.len();
+        let moved = {
+            let mut sp = crate::obs::span(crate::obs::Category::Collective,
+                                          "encode");
+            codec.encode_into(x, rows, cols, bytes);
+            sp.set_arg(bytes.len() as u64); // measured packed wire bytes
+            bytes.len()
+        };
         crate::util::pool::with_f32_buf(|back| {
+            let _sp = crate::obs::span_with_arg(
+                crate::obs::Category::Collective, "decode", moved as u64);
             codec.decode_into(bytes, x.len(), rows, cols, back);
             debug_assert_eq!(back.len(), x.len());
             x.copy_from_slice(back);

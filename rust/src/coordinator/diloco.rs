@@ -176,6 +176,7 @@ pub fn accumulate_grads_into(
 /// Evaluate `params` on `batches` pre-generated eval microbatches.
 pub fn evaluate(sess: &Session, params: &Tensors, batches: &[Vec<i32>])
                 -> Result<(f64, f64)> {
+    let _sp = crate::obs::span(crate::obs::Category::Step, "eval");
     let mut loss = 0.0;
     let mut acc = 0.0;
     for b in batches {

@@ -48,6 +48,7 @@ use crate::comm::{
     WireSpec,
 };
 use crate::compress::{Compression, CompressorSet, QuantMode, Quantizer};
+use crate::obs;
 use crate::runtime::{Manifest, Precision, Tensors};
 use crate::util::rng::Rng;
 use crate::util::round_bf16_slice;
@@ -191,6 +192,7 @@ fn reduce_tensors(
     ranks: Arc<Vec<usize>>,
     k_total: usize,
 ) -> Vec<ReducedTensor> {
+    let _sp = obs::span(obs::Category::Overlap, "overlap_reduce");
     deltas
         .into_iter()
         .map(|(ti, mut bufs)| {
@@ -606,6 +608,9 @@ impl SyncEngine {
         if ranks.is_empty() {
             return; // nobody to reduce over (unreachable via FaultPlan)
         }
+        // spans only the boundary steps that actually sync (the early
+        // returns above keep non-boundary steps span-free)
+        let _sp = obs::span_with_arg(obs::Category::Sync, "sync_round", step);
         // the round's compressor set reads EF residual norms from the
         // *previous* boundary, so it must be fixed before the EF fold
         // in collect_deltas mutates them
@@ -645,6 +650,7 @@ impl SyncEngine {
         active: Option<&[bool]>,
         compressors: &CompressorSet,
     ) -> BTreeMap<usize, Vec<Vec<f32>>> {
+        let _sp = obs::span(obs::Category::Sync, "collect_deltas");
         let apply_ef = self.apply_ef;
         let metas: &[SyncTensorMeta] = &self.metas;
         let theta_ref: &Tensors = theta;
@@ -724,6 +730,7 @@ impl SyncEngine {
         // phase 2 — per-tensor collective + outer step.  Zipping theta
         // with the momentum slots hands each job a disjoint (theta, u)
         // pair, so jobs are free to run on any thread.
+        let mut reduce_sp = obs::span(obs::Category::Sync, "reduce_outer");
         let (eta, mu) = (self.outer.lr, self.outer.momentum);
         let mut jobs: Vec<SyncJob<'_>> = Vec::with_capacity(due.len());
         for (ti, (th, u)) in theta.iter_mut().zip(self.outer.slots_mut()).enumerate() {
@@ -785,10 +792,13 @@ impl SyncEngine {
         for job in &jobs {
             event.add(&job.stats);
         }
+        reduce_sp.set_arg(event.peak_event_bytes as u64);
+        drop(reduce_sp);
         comm.absorb_event(&event);
         drop(jobs);
 
         // phase 3 — broadcast: workers resume from the new global params
+        let _sp = obs::span(obs::Category::Sync, "broadcast");
         for w in workers.iter_mut() {
             for &ti in due {
                 w.params[ti].copy_from_slice(&theta[ti]);
@@ -817,6 +827,9 @@ impl SyncEngine {
         let ranks = Arc::new(ranks);
         let payload = if parallel {
             PendingPayload::InFlight(thread::spawn(move || {
+                if obs::trace::enabled() {
+                    obs::trace::label_thread("overlap-reduce");
+                }
                 reduce_tensors(deltas, metas, compressors, topology, kind,
                                wire, ranks, k_total)
             }))
@@ -860,9 +873,14 @@ impl SyncEngine {
             let reduced = match p.payload {
                 PendingPayload::Ready(r) => r,
                 PendingPayload::InFlight(h) => {
+                    // a join that blocks here is overlap that did NOT
+                    // hide under compute — the stall the timeline is
+                    // built to expose
+                    let _sp = obs::span(obs::Category::Overlap, "overlap_stall");
                     h.join().expect("overlapped reduce thread panicked")
                 }
             };
+            let _sp = obs::span(obs::Category::Overlap, "overlap_apply");
             let mut event = CommStats::default();
             let mut touched = Vec::with_capacity(reduced.len());
             for rt in reduced {

@@ -29,6 +29,7 @@ use super::diloco::accumulate_grads_into;
 use super::sync::SyncTensorMeta;
 use crate::compress::{CompressorSet, ErrorFeedback};
 use crate::data::{Corpus, Shard};
+use crate::obs;
 use crate::runtime::{Session, Tensors};
 
 /// The per-step parameter/state update applied inside every worker
@@ -254,6 +255,7 @@ impl<'c> Worker<'c> {
         lr: f32,
         wd: f32,
     ) -> Result<f64> {
+        let _sp = obs::span_with_arg(obs::Category::Step, "inner_step", t as u64);
         let loss = accumulate_grads_into(
             sess, &self.params, &mut self.shard, batch_seqs,
             &mut self.grads, &mut self.micro_grads, &mut self.tok)?;
@@ -386,10 +388,16 @@ impl<'c> WorkerPool<'c> {
         }
         thread::scope(|s| {
             let mut lanes = Vec::with_capacity(k);
-            for _ in 0..k {
+            for lane_idx in 0..k {
                 let (jtx, jrx) = mpsc::channel::<StepJob<'c>>();
                 let (rtx, rrx) = mpsc::channel::<(Worker<'c>, Result<f64>)>();
                 s.spawn(move || {
+                    // names this lane's row in the trace timeline; the
+                    // label is recorded once at spawn (pre-warmup), so
+                    // the steady-state step path stays allocation-free
+                    if obs::trace::enabled() {
+                        obs::trace::label_thread(&format!("lane-{lane_idx}"));
+                    }
                     while let Ok(mut job) = jrx.recv() {
                         let loss = job.worker.inner_step(
                             job.sess, job.inner, job.batch_seqs,

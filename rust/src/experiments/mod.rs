@@ -27,6 +27,7 @@ mod fig_nsweep;
 mod fig_scaling;
 mod fig_wallclock;
 mod fig_workers;
+mod runlog;
 mod sweep;
 
 use std::collections::BTreeMap;
@@ -42,6 +43,7 @@ use crate::runtime::Session;
 
 pub use artifact::{Artifact, Cell, Format, TypedTable};
 pub use cache::{RunCache, RunSummary};
+pub use runlog::RunLogger;
 pub use sweep::{lookup, Sweep, SweepPoint};
 
 /// Execution context shared by all experiments.  Sessions are handed

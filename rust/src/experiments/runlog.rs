@@ -1,4 +1,7 @@
 //! Run logging: persist training curves + run summaries under results/.
+//! (Formerly the top-level `metrics` module; lives here because it is a
+//! results sink, not a metrics namespace — live counters/gauges belong
+//! to `obs::MetricsRegistry`.)
 
 use std::fs;
 use std::path::{Path, PathBuf};

@@ -26,8 +26,8 @@ pub mod coordinator;
 pub mod data;
 pub mod evalloss;
 pub mod experiments;
-pub mod metrics;
 pub mod netsim;
+pub mod obs;
 pub mod runtime;
 pub mod scaling;
 pub mod serve;

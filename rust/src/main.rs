@@ -33,7 +33,8 @@ use muloco::ckpt;
 use muloco::comm::wire::{time_pack_unpack_bf16, time_pack_unpack_kbit};
 use muloco::coordinator::{spec, train, Method, RunSpec};
 use muloco::experiments::{self, Format};
-use muloco::metrics::RunLogger;
+use muloco::experiments::RunLogger;
+use muloco::obs;
 use muloco::runtime::native::arena::global_peak_bytes;
 use muloco::runtime::native::gemm::{time_blocked_vs_naive, time_scalar_vs_active};
 use muloco::runtime::native::tier::{Tier, KERNEL_TIERS};
@@ -71,7 +72,16 @@ fn bool_flags() -> Vec<String> {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let bools = bool_flags();
+    let mut bools = bool_flags();
+    // `--trace` is launcher-only (never a spec knob, so cache keys and
+    // stored results are unaffected by it).  Its shape depends on the
+    // command: bench/serve take a bare switch, train takes a path
+    // (`--trace out.json`), so it joins the bool list only where it is
+    // flag-shaped.
+    match argv.first().map(|s| s.as_str()) {
+        Some("bench") | Some("serve") => bools.push("trace".to_string()),
+        _ => {}
+    }
     let bool_refs: Vec<&str> = bools.iter().map(|s| s.as_str()).collect();
     let args = Args::parse(argv, &bool_refs)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -139,8 +149,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let dump_spec = args.get("dump-spec").map(|s| s.to_string());
     let sparse = args.flag("sparse");
+    let trace_path = args.get("trace").map(|s| s.to_string());
     let artifacts = artifacts_dir(args);
     args.finish()?;
+    if trace_path.is_some() {
+        obs::trace::enable();
+    }
 
     if let Some(path) = dump_spec {
         let doc = if sparse {
@@ -177,6 +191,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.tokens, result.comm.bytes_per_worker, result.wall_secs
     );
     RunLogger::new(&group)?.log(&label, &result)?;
+    if let Some(path) = trace_path {
+        let dumps = obs::trace::dump();
+        fs::write(&path, obs::chrome::chrome_trace(&dumps).to_string())?;
+        let bd = obs::chrome::breakdown(&dumps);
+        println!(
+            "trace: {} spans -> {path}  compute {:.1}% comm {:.1}% \
+             stall {:.1}%",
+            bd.get("spans")?.as_f64()?,
+            bd.get("compute_pct")?.as_f64()?,
+            bd.get("comm_pct")?.as_f64()?,
+            bd.get("stall_pct")?.as_f64()?
+        );
+    }
     Ok(())
 }
 
@@ -415,8 +442,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let compare = args.get("compare").map(|s| s.to_string());
     let from = args.get("from").map(|s| s.to_string());
     let tolerance: f64 = args.get_parse("tolerance", 0.35)?;
+    let trace_on = args.flag("trace");
     let artifacts = artifacts_dir(args);
     args.finish()?;
+    if trace_on {
+        obs::trace::enable();
+    }
 
     if let Some(from_path) = from {
         let current = Json::parse(&fs::read_to_string(&from_path)?)?;
@@ -585,6 +616,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
     top.insert("gemm".to_string(), Json::Arr(gemm_rows));
     top.insert("ladder".to_string(), Json::Arr(ladder_rows));
     top.insert("ckpt".to_string(), ckpt_section);
+    if trace_on {
+        // the span timeline goes to its own file (Perfetto-loadable);
+        // the derived compute/comm/stall attribution rides in the bench
+        // record so perf trajectories carry the *why* with the numbers
+        let dumps = obs::trace::dump();
+        fs::write("BENCH_trace.json",
+                  obs::chrome::chrome_trace(&dumps).to_string())?;
+        let bd = obs::chrome::breakdown(&dumps);
+        println!(
+            "  trace: {} spans -> BENCH_trace.json  compute {:.1}% \
+             comm {:.1}% stall {:.1}%",
+            bd.get("spans")?.as_f64()?,
+            bd.get("compute_pct")?.as_f64()?,
+            bd.get("comm_pct")?.as_f64()?,
+            bd.get("stall_pct")?.as_f64()?
+        );
+        top.insert("trace_breakdown".to_string(), bd);
+    }
     let doc = Json::Obj(top);
     fs::write(&out, doc.to_string())?;
     println!("  wrote {out}");
@@ -662,7 +711,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         artifacts: artifacts_dir(args),
         keep_alive: true,
     };
+    let trace_on = args.flag("trace");
     args.finish()?;
+    if trace_on {
+        obs::trace::enable();
+    }
     let jobs = cfg.jobs;
     let handle = muloco::serve::start(cfg)?;
     println!("muloco serve listening on http://{} ({jobs} training jobs)",
@@ -670,8 +723,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  POST /runs            submit a run-spec JSON (?wait=1 blocks)");
     println!("  GET  /runs/:id        status + progress lines");
     println!("  GET  /runs/:id/result store entry bytes for a finished run");
+    println!("  GET  /runs/:id/events live progress over SSE");
     println!("  GET  /experiments     experiment registry");
-    println!("  GET  /metrics         store/queue/latency counters");
+    println!("  GET  /metrics         store/queue/run/latency metrics");
+    if trace_on {
+        println!("  GET  /trace           span timeline (tracing enabled)");
+    }
     // serve until the process is killed; all work happens on the
     // server's own threads
     loop {
@@ -754,15 +811,18 @@ USAGE:
                [--label L] [--log-group G] [--quiet]
                [--dump-spec out.json]   # save the resolved spec file
                [--sparse]               # dump only non-default knobs
+               [--trace out.json]       # span timeline (Chrome trace JSON)
   muloco experiment <id|all> [--preset smoke|fast|full] [--jobs N]
                [--format text|json]
   muloco bench [--models nano,micro,tiny | --model M] [--steps N]
                [--out BENCH_native.json]
                [--compare OLD.json] [--tolerance 0.35]
                [--from CUR.json]        # diff two records, no re-measure
+               [--trace]                # BENCH_trace.json + breakdown
   muloco serve [--addr 127.0.0.1:7070] [--jobs N] [--keep-last N]
                [--max-store-bytes B] [--store results/store]
                [--http-threads N]
+               [--trace]                # record spans, serve GET /trace
   muloco cache [stats|evict] [--store results/store]
                [--keep-last N] [--max-store-bytes B]
   muloco info --model M

@@ -1,0 +1,211 @@
+//! Chrome trace-event export (Perfetto-loadable) + derived breakdown.
+//!
+//! Trace schema: one process (`pid` 1), one track per recorded thread
+//! (`tid` is the small per-thread id assigned at ring registration,
+//! named via `thread_name` metadata events — worker lanes show up as
+//! `lane-0`, `lane-1`, … rows). Every span becomes a B/E duration pair;
+//! events are emitted in per-thread *sequence* order, which is exact
+//! program order, so pairs are always balanced and properly nested even
+//! when timestamps collide at clock resolution. Timestamps are
+//! microseconds (fractional) from a process-wide monotonic epoch.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::trace::ThreadDump;
+
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1000.0)
+}
+
+fn event(
+    ph: &str,
+    name: &str,
+    cat: &str,
+    tid: u32,
+    ts: Json,
+    arg: Option<u64>,
+) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ph".to_string(), Json::Str(ph.to_string()));
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("cat".to_string(), Json::Str(cat.to_string()));
+    m.insert("pid".to_string(), Json::Num(1.0));
+    m.insert("tid".to_string(), Json::Num(tid as f64));
+    m.insert("ts".to_string(), ts);
+    if let Some(a) = arg {
+        let mut args = BTreeMap::new();
+        args.insert("arg".to_string(), Json::Num(a as f64));
+        m.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(m)
+}
+
+/// Render ring dumps as a Chrome trace-event JSON document
+/// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`).
+pub fn chrome_trace(dumps: &[ThreadDump]) -> Json {
+    let mut events = Vec::new();
+    for d in dumps {
+        // Track label for this thread's row.
+        let mut meta = BTreeMap::new();
+        meta.insert("ph".to_string(), Json::Str("M".to_string()));
+        meta.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        meta.insert("pid".to_string(), Json::Num(1.0));
+        meta.insert("tid".to_string(), Json::Num(d.tid as f64));
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(d.label.clone()));
+        meta.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(meta));
+
+        // Interleave begin/end events in sequence (= program) order.
+        let mut seq: Vec<(u64, Json)> = Vec::with_capacity(d.records.len() * 2);
+        for r in &d.records {
+            let cat = r.cat.label();
+            seq.push((
+                r.begin_seq,
+                event("B", r.name, cat, d.tid, us(r.begin_ns),
+                      if r.arg != 0 { Some(r.arg) } else { None }),
+            ));
+            seq.push((r.end_seq, event("E", r.name, cat, d.tid, us(r.end_ns), None)));
+        }
+        seq.sort_by_key(|(s, _)| *s);
+        events.extend(seq.into_iter().map(|(_, e)| e));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(events));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(root)
+}
+
+/// Derived per-step breakdown: where wall-clock went, attributed from
+/// span names rather than categories so nested spans are not counted
+/// twice. `compute` is inner-step time, `comm` is blocking collective
+/// time (sync rounds plus matured-overlap apply), `stall` is time spent
+/// blocked on a tau-overlap join that had not finished in the shadow of
+/// compute. Percentages are over the compute+comm+stall sum.
+pub fn breakdown(dumps: &[ThreadDump]) -> Json {
+    let mut by_name: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+    let mut spans = 0u64;
+    let mut dropped = 0u64;
+    for d in dumps {
+        dropped += d.dropped;
+        for r in &d.records {
+            spans += 1;
+            let e = by_name.entry(r.name).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += r.end_ns.saturating_sub(r.begin_ns);
+        }
+    }
+    let total = |names: &[&str]| -> u64 {
+        names.iter().map(|n| by_name.get(n).map_or(0, |e| e.1)).sum()
+    };
+    let compute_ns = total(&["inner_step"]);
+    let comm_ns = total(&["sync_round", "overlap_apply"]);
+    let stall_ns = total(&["overlap_stall"]);
+    let denom = (compute_ns + comm_ns + stall_ns).max(1) as f64;
+    let pct = |ns: u64| Json::Num((ns as f64 / denom * 100.0 * 100.0).round() / 100.0);
+
+    let mut names = BTreeMap::new();
+    for (name, (count, total_ns)) in &by_name {
+        let mut e = BTreeMap::new();
+        e.insert("count".to_string(), Json::Num(*count as f64));
+        e.insert("total_ns".to_string(), Json::Num(*total_ns as f64));
+        names.insert(name.to_string(), Json::Obj(e));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("compute_ns".to_string(), Json::Num(compute_ns as f64));
+    root.insert("comm_ns".to_string(), Json::Num(comm_ns as f64));
+    root.insert("stall_ns".to_string(), Json::Num(stall_ns as f64));
+    root.insert("compute_pct".to_string(), pct(compute_ns));
+    root.insert("comm_pct".to_string(), pct(comm_ns));
+    root.insert("stall_pct".to_string(), pct(stall_ns));
+    root.insert("spans".to_string(), Json::Num(spans as f64));
+    root.insert("dropped".to_string(), Json::Num(dropped as f64));
+    root.insert("by_name".to_string(), Json::Obj(names));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Category, SpanRecord, ThreadDump};
+
+    fn rec(name: &'static str, cat: Category, b: u64, e: u64, seq: u64) -> SpanRecord {
+        SpanRecord {
+            begin_ns: b,
+            end_ns: e,
+            begin_seq: seq,
+            end_seq: seq + 1,
+            cat,
+            name,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn trace_events_are_balanced_and_ordered() {
+        // A parent span enclosing a child with identical timestamps:
+        // sequence order must still nest them correctly.
+        let parent = SpanRecord {
+            begin_ns: 100,
+            end_ns: 100,
+            begin_seq: 0,
+            end_seq: 3,
+            cat: Category::Step,
+            name: "outer",
+            arg: 0,
+        };
+        let child = SpanRecord {
+            begin_ns: 100,
+            end_ns: 100,
+            begin_seq: 1,
+            end_seq: 2,
+            cat: Category::Kernel,
+            name: "inner",
+            arg: 9,
+        };
+        let dump = ThreadDump {
+            tid: 1,
+            label: "lane-0".to_string(),
+            dropped: 0,
+            records: vec![parent, child],
+        };
+        let j = chrome_trace(&[dump]);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata + 2 B/E pairs
+        assert_eq!(evs.len(), 5);
+        let phs: Vec<&str> =
+            evs.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phs, vec!["M", "B", "B", "E", "E"]);
+        let names: Vec<&str> =
+            evs[1..].iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, vec!["outer", "inner", "inner", "outer"]);
+        // Round-trips through the parser (well-formed JSON).
+        let text = j.to_string();
+        Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn breakdown_attributes_compute_comm_stall() {
+        let dump = ThreadDump {
+            tid: 1,
+            label: "main".to_string(),
+            dropped: 2,
+            records: vec![
+                rec("inner_step", Category::Step, 0, 600, 0),
+                rec("sync_round", Category::Sync, 600, 900, 2),
+                rec("overlap_stall", Category::Overlap, 900, 1000, 4),
+            ],
+        };
+        let j = breakdown(&[dump]);
+        assert_eq!(j.get("compute_ns").unwrap().as_f64().unwrap(), 600.0);
+        assert_eq!(j.get("comm_ns").unwrap().as_f64().unwrap(), 300.0);
+        assert_eq!(j.get("stall_ns").unwrap().as_f64().unwrap(), 100.0);
+        assert_eq!(j.get("compute_pct").unwrap().as_f64().unwrap(), 60.0);
+        assert_eq!(j.get("dropped").unwrap().as_f64().unwrap(), 2.0);
+        let spans = j.get("spans").unwrap().as_f64().unwrap();
+        assert_eq!(spans, 3.0);
+    }
+}

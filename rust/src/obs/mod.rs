@@ -1,0 +1,27 @@
+//! Observability: span tracing + the unified metrics registry.
+//!
+//! Three pieces, all dependency-free and usable from every layer:
+//!
+//! * [`trace`] — per-thread pre-allocated ring buffers of fixed-size
+//!   span records. A disabled tracer costs one relaxed atomic load per
+//!   span site; an enabled tracer is allocation-free on the hot path
+//!   (records are written into rings sized at registration), so the
+//!   `allocs_per_step == 0` steady-state gate holds with tracing on.
+//! * [`chrome`] — exports ring dumps as Chrome trace-event JSON
+//!   (Perfetto-loadable) and derives a compute/comm/stall breakdown.
+//! * [`registry`] — one [`registry::MetricsRegistry`] of counters,
+//!   gauges and bucketed histograms behind `GET /metrics`; replaces the
+//!   ad-hoc `format!` counter lines that used to be scattered across
+//!   `serve`, `util/alloc_stats` and the old `metrics/` module.
+//!
+//! Tracing never touches the math: spans record wall-clock timestamps
+//! and static name/category ids only, so loss curves, cache keys and
+//! the parallel==sequential / ckpt-resume bit-exactness contracts are
+//! identical with tracing on or off (pinned by `tests/obs_props.rs`).
+
+pub mod chrome;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Histogram, MetricsRegistry};
+pub use trace::{span, span_with_arg, Category, Span, SpanRecord, ThreadDump};

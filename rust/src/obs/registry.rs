@@ -1,0 +1,249 @@
+//! One metrics namespace: counters, gauges and bucketed histograms
+//! with Prometheus text-format rendering.
+//!
+//! The registry is *instance-based* (owned by `serve::App`, not a
+//! process global) so tests that assert exact counter values never see
+//! cross-instance bleed. Counters and gauges are `Arc<AtomicU64>` —
+//! callers either hold the handle and bump it on the hot path, or set
+//! absolute values at render time from live sources (store counters,
+//! scheduler queue depth, allocator totals).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Latency histogram bounds in seconds: 1ms .. 10s, roughly
+/// quarter-decade spaced. Shared by every serve endpoint.
+pub const LATENCY_BOUNDS_S: [f64; 8] =
+    [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0, 60.0];
+
+/// A bucketed histogram. Observations are `f64` (seconds for latency
+/// histograms); the running sum is kept in integer microseconds so
+/// concurrent observes need no float CAS loop.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; one extra slot for +Inf.
+    counts: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros
+            .fetch_add((v * 1e6).round().max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Key: metric name plus rendered label pairs, e.g.
+/// `("muloco_http_requests_total", "endpoint=\"GET /\"")`.
+type Key = (String, String);
+
+/// The single metrics registry backing `GET /metrics`.
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<Key, Metric>>,
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut s = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""));
+    }
+    s
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Register-or-get a monotonically increasing counter.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<AtomicU64> {
+        let key = (name.to_string(), render_labels(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Counter(Arc::new(AtomicU64::new(0))))
+        {
+            Metric::Counter(c) | Metric::Gauge(c) => c.clone(),
+            Metric::Histogram(_) => panic!("{name} is registered as a histogram"),
+        }
+    }
+
+    /// Register-or-get a gauge (a value that can go down).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<AtomicU64> {
+        let key = (name.to_string(), render_labels(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Gauge(Arc::new(AtomicU64::new(0))))
+        {
+            Metric::Counter(c) | Metric::Gauge(c) => c.clone(),
+            Metric::Histogram(_) => panic!("{name} is registered as a histogram"),
+        }
+    }
+
+    /// Set an absolute value (render-time mirroring of live sources:
+    /// store counters, queue depth, allocator totals).
+    pub fn set_counter(&self, name: &str, labels: &[(&str, &str)], v: u64) {
+        self.counter(name, labels).store(v, Ordering::Relaxed);
+    }
+
+    pub fn set_gauge(&self, name: &str, labels: &[(&str, &str)], v: u64) {
+        self.gauge(name, labels).store(v, Ordering::Relaxed);
+    }
+
+    /// Register-or-get a histogram with the given bucket bounds.
+    pub fn histogram(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        let key = (name.to_string(), render_labels(labels));
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("{name} is registered as a scalar"),
+        }
+    }
+
+    /// Prometheus text exposition. Scalars render as
+    /// `name{labels} value`; histograms render cumulative `_bucket`
+    /// lines plus `_sum` (seconds) and `_count`.
+    pub fn render(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for ((name, labels), metric) in m.iter() {
+            match metric {
+                Metric::Counter(v) | Metric::Gauge(v) => {
+                    let v = v.load(Ordering::Relaxed);
+                    if labels.is_empty() {
+                        let _ = writeln!(out, "{name} {v}");
+                    } else {
+                        let _ = writeln!(out, "{name}{{{labels}}} {v}");
+                    }
+                }
+                Metric::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, b) in h.bounds.iter().enumerate() {
+                        cum += h.counts[i].load(Ordering::Relaxed);
+                        let le = format!("le=\"{b}\"");
+                        let sep = if labels.is_empty() { String::new() } else { format!("{labels},") };
+                        let _ = writeln!(out, "{name}_bucket{{{sep}{le}}} {cum}");
+                    }
+                    cum += h.counts[h.bounds.len()].load(Ordering::Relaxed);
+                    let sep = if labels.is_empty() { String::new() } else { format!("{labels},") };
+                    let _ = writeln!(out, "{name}_bucket{{{sep}le=\"+Inf\"}} {cum}");
+                    let sum_s = h.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
+                    if labels.is_empty() {
+                        let _ = writeln!(out, "{name}_sum {sum_s:.6}");
+                        let _ = writeln!(out, "{name}_count {cum}");
+                    } else {
+                        let _ = writeln!(out, "{name}_sum{{{labels}}} {sum_s:.6}");
+                        let _ = writeln!(out, "{name}_count{{{labels}}} {cum}");
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_lines_match_exposition_format() {
+        let reg = MetricsRegistry::new();
+        reg.counter("muloco_store_hits", &[]).store(1, Ordering::Relaxed);
+        reg.set_counter("muloco_runs_failed", &[], 0);
+        reg.set_gauge("muloco_queue_depth", &[], 3);
+        let text = reg.render();
+        assert!(text.lines().any(|l| l == "muloco_store_hits 1"));
+        assert!(text.lines().any(|l| l == "muloco_runs_failed 0"));
+        assert!(text.lines().any(|l| l == "muloco_queue_depth 3"));
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram(
+            "muloco_http_request_seconds",
+            &[("endpoint", "GET /")],
+            &[0.001, 0.1, 1.0],
+        );
+        h.observe(0.0005); // le=0.001
+        h.observe(0.05); // le=0.1
+        h.observe(0.05); // le=0.1
+        h.observe(30.0); // +Inf
+        let text = reg.render();
+        let get = |needle: &str| -> String {
+            text.lines()
+                .find(|l| l.starts_with(needle))
+                .unwrap_or_else(|| panic!("missing {needle} in:\n{text}"))
+                .to_string()
+        };
+        assert_eq!(
+            get("muloco_http_request_seconds_bucket{endpoint=\"GET /\",le=\"0.001\"}"),
+            "muloco_http_request_seconds_bucket{endpoint=\"GET /\",le=\"0.001\"} 1"
+        );
+        assert_eq!(
+            get("muloco_http_request_seconds_bucket{endpoint=\"GET /\",le=\"0.1\"}"),
+            "muloco_http_request_seconds_bucket{endpoint=\"GET /\",le=\"0.1\"} 3"
+        );
+        assert_eq!(
+            get("muloco_http_request_seconds_bucket{endpoint=\"GET /\",le=\"+Inf\"}"),
+            "muloco_http_request_seconds_bucket{endpoint=\"GET /\",le=\"+Inf\"} 4"
+        );
+        assert!(text.contains("muloco_http_request_seconds_count{endpoint=\"GET /\"} 4"));
+        assert!(text.contains("muloco_http_request_seconds_sum{endpoint=\"GET /\"}"));
+        // Same registry re-lookup returns the same histogram instance.
+        let h2 = reg.histogram(
+            "muloco_http_request_seconds",
+            &[("endpoint", "GET /")],
+            &[0.001, 0.1, 1.0],
+        );
+        assert_eq!(h2.count(), 4);
+    }
+}

@@ -84,6 +84,9 @@ pub fn sgemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) 
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    // arg: multiply-add count, the usual flops/2 proxy
+    let _sp = crate::obs::span_with_arg(crate::obs::Category::Kernel, "sgemm",
+                                        (m * n * k) as u64);
     let (_guard, active) = ActiveGuard::enter();
     let lanes = lanes_for(m, n, k, active);
     if lanes <= 1 {

@@ -47,6 +47,7 @@ use self::model::{LayerActs, NativeModel};
 use self::muon::{NsWorkspace, MUON_BETA};
 use super::backend::{Backend, Precision, Tensors};
 use super::manifest::{Manifest, TensorSpec};
+use crate::obs::{span, Category};
 use crate::util::rng::Rng;
 use crate::util::round_bf16_slice;
 
@@ -256,6 +257,7 @@ impl Backend for NativeBackend {
     /// warmed to its steady-state size.
     fn fwd_grad_into(&self, params: &Tensors, tokens: &[i32],
                      grads: &mut Tensors) -> Result<f32> {
+        let _sp = span(Category::Kernel, "fwd_grad");
         let (b, t) = self.batch_dims(tokens)?;
         let prec = self.precision();
         // shape the output to the parameter layout (no-op once warmed)
@@ -309,6 +311,7 @@ impl Backend for NativeBackend {
         lr: f32,
         wd: f32,
     ) -> Result<()> {
+        let _sp = span(Category::Kernel, "fused_adamw");
         let np = self.params.len();
         if state.len() != 2 * np {
             bail!("adamw state has {} tensors, expected {}", state.len(), 2 * np);
@@ -364,6 +367,7 @@ impl Backend for NativeBackend {
             }
         }
         SCRATCH.with(|cell| {
+            let _sp = span(Category::Kernel, "newton_schulz");
             let mut scratch = cell.borrow_mut();
             let arena = &mut scratch.arena;
             arena.reset();

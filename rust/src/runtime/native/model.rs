@@ -572,6 +572,7 @@ impl NativeModel {
 pub fn sdpa_flash_fwd(qr: &[f32], kr: &[f32], vh: &[f32], lse: &mut [f32],
                       attn_out: &mut [f32], b: usize, t: usize, h: usize,
                       hd: usize, d: usize) {
+    let _sp = crate::obs::span(crate::obs::Category::Kernel, "sdpa_flash_fwd");
     // the running value accumulator is head_dim-sized and reused for
     // every (b, h, q) row; keep it in a thread-local so steady-state
     // calls are allocation-free (scores fit a KV_BLOCK stack array)
@@ -656,6 +657,7 @@ pub fn sdpa_flash_bwd(qr: &[f32], kr: &[f32], vh: &[f32], lse: &[f32],
                       attn_out: &[f32], dattn: &[f32], dqr: &mut [f32],
                       dkr: &mut [f32], dvh: &mut [f32], b: usize, t: usize,
                       h: usize, hd: usize, d: usize) {
+    let _sp = crate::obs::span(crate::obs::Category::Kernel, "sdpa_flash_bwd");
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     for b_ in 0..b {
         for h_ in 0..h {

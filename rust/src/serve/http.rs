@@ -52,13 +52,32 @@ impl Request {
     }
 }
 
-#[derive(Debug)]
+/// Streaming body writer (SSE): called with the raw connection after
+/// the head is written; the connection closes when it returns.
+type StreamFn = Box<dyn FnOnce(&mut dyn Write) -> std::io::Result<()> + Send>;
+
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     /// extra headers beyond Content-Type/Content-Length/Connection
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// when set, `body` is ignored: the head goes out without
+    /// Content-Length (`Connection: close`) and the writer produces the
+    /// body incrementally — the Server-Sent Events transport
+    stream: Option<StreamFn>,
+}
+
+impl std::fmt::Debug for Response {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("headers", &self.headers)
+            .field("body_len", &self.body.len())
+            .field("stream", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl Response {
@@ -68,6 +87,7 @@ impl Response {
             content_type: "application/json",
             headers: Vec::new(),
             body: body.into(),
+            stream: None,
         }
     }
 
@@ -77,7 +97,30 @@ impl Response {
             content_type: "text/plain; charset=utf-8",
             headers: Vec::new(),
             body: body.into().into_bytes(),
+            stream: None,
         }
+    }
+
+    /// A streaming response: the writer runs on the connection's worker
+    /// thread after the head is sent and the connection closes when it
+    /// returns (or errors — a disconnected client surfaces as a write
+    /// error, freeing the worker).
+    pub fn stream(
+        status: u16,
+        content_type: &'static str,
+        f: impl FnOnce(&mut dyn Write) -> std::io::Result<()> + Send + 'static,
+    ) -> Response {
+        Response {
+            status,
+            content_type,
+            headers: Vec::new(),
+            body: Vec::new(),
+            stream: Some(Box::new(f)),
+        }
+    }
+
+    pub fn is_stream(&self) -> bool {
+        self.stream.is_some()
     }
 
     pub fn with_header(mut self, name: &str, value: impl Into<String>)
@@ -181,6 +224,9 @@ enum Parsed {
 
 fn handle_conn(stream: TcpStream, handler: &Handler, keep_alive: bool) {
     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    // bounded writes too: a client that stops reading an SSE stream
+    // costs a worker at most one timeout, not forever
+    let _ = stream.set_write_timeout(Some(READ_TIMEOUT));
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -191,7 +237,7 @@ fn handle_conn(stream: TcpStream, handler: &Handler, keep_alive: bool) {
             Parsed::Request(r) => r,
             Parsed::Closed => return,
             Parsed::Error(resp) => {
-                let _ = write_response(&mut stream, &resp, false);
+                let _ = write_response(&mut stream, resp, false);
                 return;
             }
         };
@@ -201,10 +247,11 @@ fn handle_conn(stream: TcpStream, handler: &Handler, keep_alive: bool) {
             .get("connection")
             .map(|v| !v.eq_ignore_ascii_case("close"))
             .unwrap_or(true);
-        let keep = keep_alive && client_keep
-            && served + 1 < MAX_REQUESTS_PER_CONN;
         let resp = handler(&req);
-        if write_response(&mut stream, &resp, keep).is_err() || !keep {
+        let keep = keep_alive && client_keep
+            && served + 1 < MAX_REQUESTS_PER_CONN
+            && !resp.is_stream();
+        if write_response(&mut stream, resp, keep).is_err() || !keep {
             return;
         }
     }
@@ -344,17 +391,25 @@ fn percent_decode(s: &str) -> String {
     String::from_utf8_lossy(&out).into_owned()
 }
 
-fn write_response(stream: &mut TcpStream, resp: &Response, keep: bool)
+fn write_response(stream: &mut TcpStream, resp: Response, keep: bool)
                   -> std::io::Result<()> {
+    let streaming = resp.is_stream();
     let mut head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
-         Connection: {}\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n",
         resp.status,
         Response::reason(resp.status),
         resp.content_type,
-        resp.body.len(),
-        if keep { "keep-alive" } else { "close" },
     );
+    if streaming {
+        // no Content-Length: the body ends when the connection closes
+        head.push_str("Cache-Control: no-cache\r\nConnection: close\r\n");
+    } else {
+        head.push_str(&format!(
+            "Content-Length: {}\r\nConnection: {}\r\n",
+            resp.body.len(),
+            if keep { "keep-alive" } else { "close" },
+        ));
+    }
     for (name, value) in &resp.headers {
         head.push_str(name);
         head.push_str(": ");
@@ -363,6 +418,11 @@ fn write_response(stream: &mut TcpStream, resp: &Response, keep: bool)
     }
     head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
+    if let Some(f) = resp.stream {
+        stream.flush()?;
+        f(stream)?;
+        return stream.flush();
+    }
     stream.write_all(&resp.body)?;
     stream.flush()
 }
@@ -462,6 +522,25 @@ mod tests {
             "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
         )
         .starts_with("HTTP/1.1 501"));
+        h.stop();
+    }
+
+    #[test]
+    fn streaming_response_has_no_content_length_and_closes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handler: Arc<Handler> = Arc::new(|_req: &Request| {
+            Response::stream(200, "text/event-stream", |w| {
+                write!(w, "data: one\n\n")?;
+                write!(w, "event: done\ndata: done\n\n")
+            })
+        });
+        let h = serve(listener, 1, true, handler).unwrap();
+        let out = raw(h.addr, "GET /runs/x/events HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 200 OK\r\n"), "{out}");
+        assert!(!out.to_ascii_lowercase().contains("content-length"), "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+        assert!(out.contains("data: one\n\n"), "{out}");
+        assert!(out.contains("event: done"), "{out}");
         h.stop();
     }
 

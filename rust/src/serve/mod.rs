@@ -12,10 +12,18 @@
 //! - `GET /runs/:id` — status + progress lines (id = SHA-256 of the
 //!   canonical key, i.e. the entry's content address).
 //! - `GET /runs/:id/result` — the store entry bytes for a finished run.
+//! - `GET /runs/:id/events` — Server-Sent Events: progress lines as
+//!   `data:` frames while the run executes, then an `event: done`
+//!   frame; an id only present in the store gets a short synthesized
+//!   stream with the same done handshake.
 //! - `GET /experiments` — the experiment registry (id + description).
-//! - `GET /metrics` — Prometheus-style text: store counters, queue
-//!   depth, run counters, per-endpoint request/latency counters, and
-//!   the PR 8 allocation counters.
+//! - `GET /metrics` — Prometheus text via the one
+//!   [`crate::obs::MetricsRegistry`]: store counters, queue depth, run
+//!   counters, the PR 8 allocation counters, and per-endpoint request
+//!   counts + bucketed latency histograms.
+//! - `GET /trace` — the current span rings as Chrome trace-event JSON
+//!   (serve parks forever, so the timeline is pulled, not written at
+//!   exit; spans only exist under `muloco serve --trace`).
 //! - `GET /` — human-readable endpoint index.
 
 pub mod http;
@@ -23,17 +31,20 @@ pub mod scheduler;
 pub mod store;
 
 use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::net::TcpListener;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::experiments::registry_names;
+use crate::obs::{self, MetricsRegistry};
 use crate::util::json::Json;
 use http::{Request, Response};
-use scheduler::{ExecStatus, Scheduler, Source};
+use scheduler::{ExecStatus, Execution, Scheduler, Source};
 use store::ResultStore;
 
 pub struct ServeConfig {
@@ -70,51 +81,28 @@ impl Default for ServeConfig {
     }
 }
 
-/// Per-endpoint request/latency accounting for `/metrics`.
-#[derive(Default)]
-struct Metrics {
-    endpoints: Mutex<BTreeMap<&'static str, EndpointStat>>,
-}
-
-#[derive(Default, Clone, Copy)]
-struct EndpointStat {
-    count: u64,
-    total_us: u64,
-    max_us: u64,
-}
-
-impl Metrics {
-    fn record(&self, label: &'static str, us: u64) {
-        let mut m = self.endpoints.lock().unwrap();
-        let s = m.entry(label).or_default();
-        s.count += 1;
-        s.total_us += us;
-        s.max_us = s.max_us.max(us);
-    }
-
-    fn render_into(&self, out: &mut String) {
-        let m = self.endpoints.lock().unwrap();
-        for (label, s) in m.iter() {
-            out.push_str(&format!(
-                "muloco_http_requests_total{{endpoint=\"{label}\"}} {}\n",
-                s.count
-            ));
-            out.push_str(&format!(
-                "muloco_http_latency_us_total{{endpoint=\"{label}\"}} {}\n",
-                s.total_us
-            ));
-            out.push_str(&format!(
-                "muloco_http_latency_us_max{{endpoint=\"{label}\"}} {}\n",
-                s.max_us
-            ));
-        }
-    }
-}
-
 struct App {
     store: Arc<ResultStore>,
     sched: Arc<Scheduler>,
-    metrics: Metrics,
+    /// the one metrics namespace (instance-based so parallel test
+    /// servers never share counters)
+    metrics: MetricsRegistry,
+}
+
+impl App {
+    /// Per-endpoint accounting: a request counter plus a bucketed
+    /// latency histogram (`_bucket`/`_sum`/`_count`) — replaces the old
+    /// ad-hoc average/max lines.
+    fn record(&self, label: &'static str, secs: f64) {
+        let ep = [("endpoint", label)];
+        self.metrics
+            .counter("muloco_http_requests_total", &ep)
+            .fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .histogram("muloco_http_request_seconds", &ep,
+                       &obs::registry::LATENCY_BOUNDS_S)
+            .observe(secs);
+    }
 }
 
 pub struct ServeHandle {
@@ -150,7 +138,7 @@ pub fn start(cfg: ServeConfig) -> Result<ServeHandle> {
     let app = Arc::new(App {
         store,
         sched: Arc::clone(&sched),
-        metrics: Metrics::default(),
+        metrics: MetricsRegistry::new(),
     });
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding {}", cfg.addr))?;
@@ -159,8 +147,13 @@ pub fn start(cfg: ServeConfig) -> Result<ServeHandle> {
         let app = Arc::clone(&app);
         Arc::new(move |req: &Request| {
             let t0 = Instant::now();
+            // the request-lifecycle span covers routing + handler; the
+            // final name is only known after routing, so it is set late
+            let mut sp = obs::span(obs::Category::Serve, "http_request");
             let (label, resp) = route(&app, req);
-            app.metrics.record(label, t0.elapsed().as_micros() as u64);
+            sp.set_name(label);
+            drop(sp);
+            app.record(label, t0.elapsed().as_secs_f64());
             resp
         })
     };
@@ -174,12 +167,16 @@ fn route(app: &App, req: &Request) -> (&'static str, Response) {
         ("POST", "/runs") => ("POST /runs", post_runs(app, req)),
         ("GET", "/experiments") => ("GET /experiments", get_experiments()),
         ("GET", "/metrics") => ("GET /metrics", get_metrics(app)),
+        ("GET", "/trace") => ("GET /trace", get_trace()),
         ("GET", "/") => ("GET /", index()),
         ("GET", path) if path.starts_with("/runs/") => {
             let rest = &path["/runs/".len()..];
-            match rest.strip_suffix("/result") {
-                Some(id) => ("GET /runs/:id/result", get_result(app, id)),
-                None => ("GET /runs/:id", get_run(app, rest)),
+            if let Some(id) = rest.strip_suffix("/result") {
+                ("GET /runs/:id/result", get_result(app, id))
+            } else if let Some(id) = rest.strip_suffix("/events") {
+                ("GET /runs/:id/events", get_events(app, id))
+            } else {
+                ("GET /runs/:id", get_run(app, rest))
             }
         }
         ("POST", _) | ("GET", _) => {
@@ -266,6 +263,62 @@ fn get_result(app: &App, id: &str) -> Response {
     }
 }
 
+/// SSE heartbeat / progress-poll interval.  Progress wakeups are
+/// condvar-driven, so this only bounds how often an idle stream emits
+/// a keepalive comment (which is also how a vanished client is
+/// detected and its worker freed).
+const SSE_POLL: Duration = Duration::from_secs(1);
+
+fn get_events(app: &App, id: &str) -> Response {
+    if let Some(exec) = app.sched.lookup(id) {
+        return sse_stream(exec);
+    }
+    // not tracked but stored: synthesize the same done handshake so
+    // clients need only one protocol
+    if app.store.get_bytes_by_digest(id).is_some() {
+        return Response::stream(200, "text/event-stream", move |w| {
+            write!(w, "data: served from store\n\n")?;
+            write!(w, "event: done\ndata: done\n\n")
+        });
+    }
+    Response::text(404, "unknown run id\n")
+}
+
+/// Stream an execution's progress lines as SSE `data:` frames, then a
+/// final `event: done` frame carrying the settled status.  The stream
+/// runs on the connection's HTTP worker; `wait_progress` returns the
+/// status and new lines under one lock, so the done frame can never
+/// race ahead of the last progress line.
+fn sse_stream(exec: Arc<Execution>) -> Response {
+    Response::stream(200, "text/event-stream", move |w| {
+        let mut sent = 0usize;
+        loop {
+            let (status, lines) = exec.wait_progress(sent, SSE_POLL);
+            for line in &lines {
+                write!(w, "data: {line}\n\n")?;
+            }
+            sent += lines.len();
+            if matches!(status, ExecStatus::Done | ExecStatus::Failed) {
+                return write!(w, "event: done\ndata: {}\n\n", status.label());
+            }
+            if lines.is_empty() {
+                // keepalive comment: no-op for clients, write error for
+                // disconnected ones
+                write!(w, ": keepalive\n\n")?;
+            }
+            w.flush()?;
+        }
+    })
+}
+
+/// The current span rings as Chrome trace-event JSON.  Empty unless
+/// the server was started with `--trace` (serve never exits, so the
+/// timeline is pulled over HTTP instead of written at shutdown).
+fn get_trace() -> Response {
+    let dumps = obs::trace::dump();
+    Response::json(200, obs::chrome::chrome_trace(&dumps).to_string())
+}
+
 fn get_experiments() -> Response {
     let arr = registry_names()
         .into_iter()
@@ -280,36 +333,38 @@ fn get_experiments() -> Response {
 }
 
 fn get_metrics(app: &App) -> Response {
+    // live sources are mirrored into the registry at render time —
+    // the store/scheduler/allocator counters stay authoritative where
+    // they live; `/metrics` is a view, not a second copy to keep in
+    // sync on the hot path.  Line formats are unchanged from the
+    // pre-registry endpoint (CI greps them exactly).
+    let m = &app.metrics;
     let c = app.store.counters();
     let (completed, failed, joined) = app.sched.run_counters();
     let (entries, bytes) = match app.store.scan() {
         Ok(es) => (es.len() as u64, es.iter().map(|e| e.bytes).sum::<u64>()),
         Err(_) => (0, 0),
     };
-    let mut out = String::new();
-    out.push_str(&format!("muloco_store_hits {}\n", c.hits));
-    out.push_str(&format!("muloco_store_misses {}\n", c.misses));
-    out.push_str(&format!("muloco_store_puts {}\n", c.puts));
-    out.push_str(&format!("muloco_store_evictions {}\n", c.evictions));
-    out.push_str(&format!("muloco_store_migrated {}\n", c.migrated));
-    out.push_str(&format!("muloco_store_entries {entries}\n"));
-    out.push_str(&format!("muloco_store_bytes {bytes}\n"));
-    out.push_str(&format!("muloco_queue_depth {}\n", app.sched.queue_depth()));
-    out.push_str(&format!("muloco_runs_inflight {}\n",
-                          app.sched.inflight_count()));
-    out.push_str(&format!("muloco_runs_completed {completed}\n"));
-    out.push_str(&format!("muloco_runs_failed {failed}\n"));
-    out.push_str(&format!("muloco_runs_joined {joined}\n"));
+    m.set_counter("muloco_store_hits", &[], c.hits);
+    m.set_counter("muloco_store_misses", &[], c.misses);
+    m.set_counter("muloco_store_puts", &[], c.puts);
+    m.set_counter("muloco_store_evictions", &[], c.evictions);
+    m.set_counter("muloco_store_migrated", &[], c.migrated);
+    m.set_gauge("muloco_store_entries", &[], entries);
+    m.set_gauge("muloco_store_bytes", &[], bytes);
+    m.set_gauge("muloco_queue_depth", &[], app.sched.queue_depth() as u64);
+    m.set_gauge("muloco_runs_inflight", &[],
+                app.sched.inflight_count() as u64);
+    m.set_counter("muloco_runs_completed", &[], completed);
+    m.set_counter("muloco_runs_failed", &[], failed);
+    m.set_counter("muloco_runs_joined", &[], joined);
     // PR 8 allocation counters: nonzero when the binary installs the
     // counting allocator (muloco does; test harnesses don't)
-    out.push_str(&format!("muloco_allocs_total {}\n",
-                          crate::util::alloc_stats::global_allocs()));
-    out.push_str(&format!(
-        "muloco_arena_peak_bytes {}\n",
-        crate::runtime::native::arena::global_peak_bytes()
-    ));
-    app.metrics.render_into(&mut out);
-    Response::text(200, out)
+    m.set_counter("muloco_allocs_total", &[],
+                  crate::util::alloc_stats::global_allocs());
+    m.set_gauge("muloco_arena_peak_bytes", &[],
+                crate::runtime::native::arena::global_peak_bytes() as u64);
+    Response::text(200, m.render())
 }
 
 fn index() -> Response {
@@ -320,7 +375,9 @@ fn index() -> Response {
          POST /runs            submit a run-spec JSON (?wait=1 blocks)\n\
          GET  /runs/:id        status + progress lines\n\
          GET  /runs/:id/result store entry bytes for a finished run\n\
+         GET  /runs/:id/events live progress over SSE (then event: done)\n\
          GET  /experiments     experiment registry\n\
-         GET  /metrics         store/queue/latency counters\n",
+         GET  /metrics         store/queue/run/latency metrics\n\
+         GET  /trace           span timeline as Chrome trace JSON\n",
     )
 }

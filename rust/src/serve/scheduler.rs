@@ -92,6 +92,9 @@ pub struct Execution {
     pub cfg: TrainConfig,
     state: Mutex<ExecState>,
     done_cv: Condvar,
+    /// notified on every progress line and on settle — the SSE
+    /// streamer's wakeup
+    progress_cv: Condvar,
 }
 
 impl Execution {
@@ -107,6 +110,7 @@ impl Execution {
                 error: None,
             }),
             done_cv: Condvar::new(),
+            progress_cv: Condvar::new(),
         })
     }
 
@@ -132,7 +136,28 @@ impl Execution {
     }
 
     fn log(&self, line: String) {
-        self.state.lock().unwrap().progress.push(line);
+        let mut s = self.state.lock().unwrap();
+        s.progress.push(line);
+        self.progress_cv.notify_all();
+    }
+
+    /// Block until a progress line past `from` exists, the execution
+    /// settles, or `timeout` elapses; returns the status and the new
+    /// lines, read atomically under one lock — when the status is
+    /// settled the returned lines are the complete tail.  The SSE
+    /// endpoint polls this in a loop.
+    pub fn wait_progress(&self, from: usize, timeout: std::time::Duration)
+                         -> (ExecStatus, Vec<String>) {
+        let mut s = self.state.lock().unwrap();
+        if s.progress.len() <= from
+            && matches!(s.status, ExecStatus::Queued | ExecStatus::Running)
+        {
+            let (guard, _) = self.progress_cv.wait_timeout(s, timeout).unwrap();
+            s = guard;
+        }
+        let new = s.progress.get(from..).map(<[String]>::to_vec)
+            .unwrap_or_default();
+        (s.status, new)
     }
 
     fn set_running(&self) {
@@ -150,6 +175,7 @@ impl Execution {
             }
         }
         self.done_cv.notify_all();
+        self.progress_cv.notify_all();
     }
 }
 
@@ -318,6 +344,9 @@ impl Scheduler {
     }
 
     fn worker_loop(self: Arc<Self>) {
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::label_thread("serve-worker");
+        }
         loop {
             let exec = {
                 let mut inner = self.inner.lock().unwrap();
@@ -339,6 +368,7 @@ impl Scheduler {
     }
 
     fn run_one(&self, exec: &Arc<Execution>) {
+        let _sp = crate::obs::span(crate::obs::Category::Serve, "run_train");
         exec.set_running();
         let outcome = (|| -> Result<()> {
             let sess = self.session(&exec.cfg.model)?;

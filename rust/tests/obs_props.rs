@@ -1,0 +1,277 @@
+//! Observability contracts (ISSUE 10).
+//!
+//! The obs layer must be *inert*: spans only read clocks and thread-
+//! local counters, so turning tracing on cannot change a single bit of
+//! training output, cannot change a cache key, and cannot allocate in
+//! the steady state (the PR 8 zero-alloc contract holds with rings
+//! recording).  This file pins all three, plus the export invariants
+//! (balanced B/E pairs, per-thread monotonic timestamps, every
+//! instrumented category present) and ring wraparound (whole spans are
+//! evicted, never torn begin/end pairs).  A separate test drives the
+//! serve SSE endpoint end to end over raw TCP.
+//!
+//! Tracing state is process-global, so everything that depends on the
+//! enabled flag lives in ONE `#[test]`; the SSE test is agnostic to it.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use muloco::coordinator::{cache_key, inner_with, train, Method, RunSpec,
+                          TrainConfig, WorkerPool};
+use muloco::data::Corpus;
+use muloco::obs;
+use muloco::runtime::{Session, NS_STEPS};
+use muloco::serve::{self, ServeConfig};
+use muloco::util::alloc_stats::{self, CountingAlloc};
+use muloco::util::json::Json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn nano_session() -> Session {
+    Session::load(&PathBuf::from("artifacts/nano")).expect("session")
+}
+
+/// A run that exercises every instrumented category: parallel lanes
+/// (K=2), two sync boundaries (steps=10, H=5), tau-overlapped apply
+/// (tau=2 -> overlap reduce / stall / apply), eval passes, and the
+/// collective codec on each boundary.
+fn traced_cfg() -> TrainConfig {
+    let mut cfg = RunSpec::new("nano", Method::Muloco)
+        .batch(16)
+        .workers(2)
+        .steps(10)
+        .sync_interval(5)
+        .tau(2)
+        .eval_every(5)
+        .eval_batches(1)
+        .warmup(2)
+        .seed(5)
+        .build()
+        .expect("cfg");
+    cfg.parallel = true;
+    cfg
+}
+
+/// Warmed sequential inner steps, counted on this thread only (the
+/// alloc_steady.rs window, re-run here with tracing ENABLED).
+fn sequential_window_allocs(sess: &Session) -> u64 {
+    let cfg = sess.manifest.config.clone();
+    let corpus = Corpus::new(cfg.vocab, 11);
+    let inner = inner_with(Method::Muloco, NS_STEPS, 1);
+    let theta = sess.init_params(7).expect("init");
+    let mut pool = WorkerPool::new(sess, &corpus, inner.as_ref(), 1, 0.9, &theta);
+    let batch_seqs = 2 * cfg.microbatch;
+    // warmup grows arenas, scratch — and registers this thread's span
+    // ring (the one alloc the obs layer ever does per thread)
+    for t in 1..=2u64 {
+        pool.step(sess, batch_seqs, t as f32, 1e-3, 0.0, false, None)
+            .expect("warmup step");
+    }
+    let a0 = alloc_stats::thread_allocs();
+    for t in 3..=10u64 {
+        pool.step(sess, batch_seqs, t as f32, 1e-3, 0.0, false, None)
+            .expect("measured step");
+    }
+    alloc_stats::thread_allocs() - a0
+}
+
+#[test]
+fn tracing_is_inert_bit_exact_and_allocation_free() {
+    let sess = nano_session();
+    let cfg = traced_cfg();
+
+    // --- 1. baseline with tracing off --------------------------------
+    let key_off = cache_key(&cfg);
+    let off = train(&sess, &cfg).expect("baseline run");
+
+    // --- 2. identical run with tracing on: bit-exact outputs ---------
+    obs::trace::enable_with_capacity(4096);
+    let on = train(&sess, &cfg).expect("traced run");
+    assert_eq!(off.eval_curve, on.eval_curve, "tracing changed eval curve");
+    assert_eq!(off.train_curve, on.train_curve, "tracing changed train curve");
+    assert_eq!(off.comm, on.comm, "tracing changed comm accounting");
+    assert_eq!(off.final_params, on.final_params,
+               "tracing changed final params");
+    assert_eq!(key_off, cache_key(&cfg),
+               "tracing is launcher-only and must never reach the key");
+
+    // --- 3. zero-alloc steady state holds with rings recording -------
+    let n = sequential_window_allocs(&sess);
+    assert_eq!(
+        n, 0,
+        "{n} heap allocations in 8 warmed sequential inner steps with \
+         tracing enabled (contract: zero — span records are written into \
+         pre-reserved rings)"
+    );
+
+    // --- 4. export invariants ----------------------------------------
+    let dumps = obs::trace::dump();
+    let doc = obs::chrome::chrome_trace(&dumps);
+    let parsed = Json::parse(&doc.to_string()).expect("well-formed JSON");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "traced run produced no events");
+    let mut depth: BTreeMap<i64, i64> = BTreeMap::new();
+    let mut last_ts: BTreeMap<i64, f64> = BTreeMap::new();
+    let mut cats: BTreeSet<String> = BTreeSet::new();
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as i64;
+        match ph {
+            "M" => {} // thread_name metadata
+            "B" | "E" => {
+                // per-thread events are emitted in sequence (= program)
+                // order, so timestamps can never run backwards
+                let ts = e.get("ts").unwrap().as_f64().unwrap();
+                let last = last_ts.entry(tid).or_insert(0.0);
+                assert!(ts >= *last, "tid {tid}: ts {ts} after {last}");
+                *last = ts;
+                let d = depth.entry(tid).or_insert(0);
+                *d += if ph == "B" { 1 } else { -1 };
+                assert!(*d >= 0, "tid {tid}: E without matching B");
+                cats.insert(e.get("cat").unwrap().as_str().unwrap().into());
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    for (tid, d) in &depth {
+        assert_eq!(*d, 0, "tid {tid}: {d} unclosed B events");
+    }
+    for want in ["step", "kernel", "sync", "collective", "overlap"] {
+        assert!(cats.contains(want),
+                "no {want} spans in the traced run: {cats:?}");
+    }
+    // the breakdown derived from the same dumps attributes real time
+    let bd = obs::chrome::breakdown(&dumps);
+    assert!(bd.get("compute_ns").unwrap().as_f64().unwrap() > 0.0,
+            "no inner-step time attributed");
+
+    // --- 5. wraparound keeps whole spans -----------------------------
+    obs::trace::set_ring_capacity(64);
+    std::thread::spawn(|| {
+        obs::trace::label_thread("wrap-test");
+        for i in 0..100u64 {
+            let _s = obs::trace::span_with_arg(
+                obs::trace::Category::Step, "wrap", i);
+        }
+    })
+    .join()
+    .expect("wrap thread");
+    obs::trace::set_ring_capacity(obs::trace::DEFAULT_RING_CAPACITY);
+    let dumps = obs::trace::dump();
+    let d = dumps
+        .iter()
+        .find(|d| d.label == "wrap-test")
+        .expect("wrap thread's ring outlives the thread");
+    assert_eq!(d.records.len(), 64, "ring holds exactly its capacity");
+    assert_eq!(d.dropped, 36, "eviction is counted");
+    let args: Vec<u64> = d.records.iter().map(|r| r.arg).collect();
+    assert_eq!(args, (36..100).collect::<Vec<u64>>(),
+               "oldest-first snapshot of the newest spans");
+    for r in &d.records {
+        assert_eq!(r.name, "wrap");
+        assert!(r.end_seq > r.begin_seq,
+                "a record is always a complete begin/end pair");
+        assert!(r.end_ns >= r.begin_ns);
+    }
+}
+
+// ---------------------------------------------------------------------
+// SSE: GET /runs/:id/events over raw TCP
+// ---------------------------------------------------------------------
+
+const SMOKE: &str = r#"{"model":"nano","method":"muloco","workers":2,
+    "batch":8,"steps":4,"sync-interval":2,"eval-every":2,"eval-batches":1,
+    "warmup":1,"seed":6}"#;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("muloco-obs-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// One-shot HTTP/1.1 exchange: (status, lowercased headers, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str)
+        -> (u16, BTreeMap<String, String>, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).expect("request write");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("response read");
+    let pos = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("head/body split");
+    let head = String::from_utf8_lossy(&buf[..pos]).into_owned();
+    let body = buf[pos + 4..].to_vec();
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .expect("status line");
+    let mut headers = BTreeMap::new();
+    for l in lines {
+        if let Some((k, v)) = l.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    (status, headers, body)
+}
+
+#[test]
+fn sse_streams_progress_then_done() {
+    let h = serve::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        jobs: 1,
+        store_dir: tmp_dir("sse"),
+        legacy_cache_dir: None,
+        ..ServeConfig::default()
+    })
+    .expect("serve start");
+    let addr = h.addr;
+
+    // async submit, then attach to the stream while the run executes —
+    // the condvar path; if the run settles first, the same exchange
+    // still yields every line plus the done frame (wait_progress
+    // returns status and tail atomically)
+    let (status, headers, body) = http(addr, "POST", "/runs", SMOKE);
+    assert!(status == 202 || status == 200,
+            "{status}: {}", String::from_utf8_lossy(&body));
+    let id = headers.get("x-muloco-id").expect("id header").clone();
+
+    let (status, headers, body) =
+        http(addr, "GET", &format!("/runs/{id}/events"), "");
+    assert_eq!(status, 200);
+    assert_eq!(headers.get("content-type").map(String::as_str),
+               Some("text/event-stream"));
+    assert!(headers.get("content-length").is_none(),
+            "a stream must not advertise a length");
+    assert_eq!(headers.get("connection").map(String::as_str), Some("close"));
+    let text = String::from_utf8_lossy(&body).into_owned();
+    assert!(text.contains("data: "), "no progress frames:\n{text}");
+    assert!(text.contains("event: done\ndata: done\n\n"),
+            "missing done handshake:\n{text}");
+
+    // a second attach after completion replays the full tail + done
+    let (status, _, body) =
+        http(addr, "GET", &format!("/runs/{id}/events"), "");
+    assert_eq!(status, 200);
+    let text = String::from_utf8_lossy(&body).into_owned();
+    assert!(text.contains("trained in") || text.contains("served from store"),
+            "replay lost the history:\n{text}");
+    assert!(text.contains("event: done"), "{text}");
+
+    // unknown ids still 404
+    let (status, _, _) = http(addr, "GET", "/runs/deadbeef/events", "");
+    assert_eq!(status, 404);
+
+    h.stop();
+}
